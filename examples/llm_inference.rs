@@ -1,0 +1,98 @@
+//! End-to-end LLM inference study: reproduce the paper's headline
+//! comparison (Figs. 9/10) from the public API, for one model, with full
+//! per-kernel visibility.
+//!
+//! ```bash
+//! cargo run --release --example llm_inference -- gpt3-175b
+//! ```
+
+use racam::baselines::{H100Model, ProteusModel};
+use racam::config::{self, racam_paper, Scenario};
+use racam::metrics::fmt_ns;
+use racam::workloads::{
+    decode_kernels, e2e_latency, prefill_kernels, stage_latency, RacamSystem,
+};
+
+fn main() -> racam::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "gpt3-175b".into());
+    let spec = match model.as_str() {
+        "gpt3-6.7b" => config::gpt3_6_7b(),
+        "gpt3-175b" => config::gpt3_175b(),
+        "llama3-8b" => config::llama3_8b(),
+        "llama3-70b" => config::llama3_70b(),
+        other => anyhow::bail!("unknown model '{other}'"),
+    };
+    println!(
+        "{}: {} layers, hidden {}, {} heads, {:.1} GB int8 weights\n",
+        spec.name,
+        spec.layers,
+        spec.hidden,
+        spec.heads,
+        spec.weight_bytes() as f64 / (1u64 << 30) as f64
+    );
+
+    // Per-kernel decode breakdown on RACAM (ctx = 1024).
+    let mut racam_sys = RacamSystem::new(&racam_paper());
+    println!("decode kernels (ctx 1024) on RACAM:");
+    println!("{:<10} {:>22} {:>12} {:>10} {:>8}", "kernel", "shape", "latency", "mapping", "util");
+    for k in decode_kernels(&spec, 1024) {
+        let r = racam_sys.search(&k.shape);
+        println!(
+            "{:<10} {:>22} {:>12} {:>10} {:>7.1}%",
+            k.label,
+            k.shape.label(),
+            fmt_ns(r.best.total_ns() * k.count as f64),
+            r.best.mapping.block.label(),
+            r.best.pe_util * 100.0
+        );
+    }
+
+    // Stage + scenario comparison across systems.
+    let mut h100 = H100Model::for_model(&spec);
+    let mut proteus = ProteusModel::for_model(&spec);
+    println!("\n{:<22} {:>14} {:>14} {:>14} {:>9}", "workload", "H100", "Proteus", "RACAM", "speedup");
+    let prefill = prefill_kernels(&spec, 1024);
+    let decode = decode_kernels(&spec, 1024);
+    let rows: Vec<(&str, f64, f64, f64)> = vec![
+        (
+            "prefill (1024 tok)",
+            stage_latency(&mut h100, &prefill).total_ns(),
+            stage_latency(&mut proteus, &prefill).total_ns(),
+            stage_latency(&mut racam_sys, &prefill).total_ns(),
+        ),
+        (
+            "decode token",
+            stage_latency(&mut h100, &decode).total_ns(),
+            stage_latency(&mut proteus, &decode).total_ns(),
+            stage_latency(&mut racam_sys, &decode).total_ns(),
+        ),
+        (
+            "e2e CodeGeneration",
+            e2e_latency(&mut h100, &spec, &Scenario::CODE_GENERATION).total_ns(),
+            e2e_latency(&mut proteus, &spec, &Scenario::CODE_GENERATION).total_ns(),
+            e2e_latency(&mut racam_sys, &spec, &Scenario::CODE_GENERATION).total_ns(),
+        ),
+        (
+            "e2e ContextUnderst.",
+            e2e_latency(&mut h100, &spec, &Scenario::CONTEXT_UNDERSTANDING).total_ns(),
+            e2e_latency(&mut proteus, &spec, &Scenario::CONTEXT_UNDERSTANDING).total_ns(),
+            e2e_latency(&mut racam_sys, &spec, &Scenario::CONTEXT_UNDERSTANDING).total_ns(),
+        ),
+    ];
+    for (label, h, p, r) in rows {
+        println!(
+            "{:<22} {:>14} {:>14} {:>14} {:>8.1}x",
+            label,
+            fmt_ns(h),
+            fmt_ns(p),
+            fmt_ns(r),
+            h / r
+        );
+    }
+    println!(
+        "\nmapping cache: {} unique shapes searched, {} hits",
+        racam_sys.engine().misses,
+        racam_sys.engine().hits
+    );
+    Ok(())
+}

@@ -1,0 +1,99 @@
+"""AOT pipeline: lower the L2/L1 computations once to HLO *text* under
+`artifacts/` (run by `make artifacts`; a no-op afterwards thanks to the
+Makefile stamp).
+
+HLO text — not `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that the runtime's xla_extension 0.5.1
+rejects, while `HloModuleProto::from_text_file` reassigns ids cleanly (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.quant_gemm import quant_gemm
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is essential: the default printer elides big
+    # literals as `constant({...})`, which the text parser silently reads
+    # back as ZEROS — baked weights would vanish.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...})" not in text, "elided constant survived printing"
+    return text
+
+
+# The fixed GEMM oracle shapes the Rust integration tests check the
+# functional bit-serial executor against.
+GEMM_ORACLES = [(16, 64, 8), (64, 256, 32)]
+
+
+def artifacts(out_dir):
+    """Yield (filename, hlo_text, meta) for every artifact."""
+    for m, k, n in GEMM_ORACLES:
+        spec_x = jax.ShapeDtypeStruct((m, k), jnp.int32)
+        spec_w = jax.ShapeDtypeStruct((k, n), jnp.int32)
+        lowered = jax.jit(quant_gemm).lower(spec_x, spec_w)
+        yield (
+            f"gemm_{m}x{k}x{n}.hlo.txt",
+            to_hlo_text(lowered),
+            {"kind": "gemm", "m": m, "k": k, "n": n, "dtype": "i32"},
+        )
+
+    x = jax.ShapeDtypeStruct((model.SEQ, model.HIDDEN), jnp.float32)
+    wqkv = jax.ShapeDtypeStruct((model.HIDDEN, 3 * model.HIDDEN), jnp.int32)
+    wo = jax.ShapeDtypeStruct((model.HIDDEN, model.HIDDEN), jnp.int32)
+    w1 = jax.ShapeDtypeStruct((model.HIDDEN, model.FFN), jnp.int32)
+    w2 = jax.ShapeDtypeStruct((model.FFN, model.HIDDEN), jnp.int32)
+    lowered = jax.jit(model.transformer_block).lower(x, wqkv, wo, w1, w2)
+    yield (
+        "transformer_block.hlo.txt",
+        to_hlo_text(lowered),
+        {
+            "kind": "transformer_block",
+            "seq": model.SEQ,
+            "hidden": model.HIDDEN,
+            "ffn": model.FFN,
+            "heads": model.HEADS,
+        },
+    )
+
+    xs = jax.ShapeDtypeStruct((model.HIDDEN,), jnp.float32)
+    lowered = jax.jit(model.decode_step).lower(xs)
+    yield (
+        "decode_step.hlo.txt",
+        to_hlo_text(lowered),
+        {"kind": "decode_step", "hidden": model.HIDDEN, "vocab": model.VOCAB},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, text, meta in artifacts(args.out_dir):
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

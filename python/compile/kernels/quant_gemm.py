@@ -1,0 +1,95 @@
+"""L1 — Pallas quantized-GEMM kernel: RACAM's compute hot-spot on TPU terms.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): RACAM keeps the
+multiplicand resident in a per-bank locality buffer and streams the
+multiplier past it so every operand bit crosses the expensive interface
+once.  The TPU analogue keeps the weight block resident in VMEM across the
+K-loop (the BlockSpec index map below re-uses the block), streams
+activation blocks through, and accumulates in the revisited output block —
+BlockSpec plays the role of RACAM's hierarchical mapping, VMEM residency
+the role of the locality buffer, and the MXU-style int8→int32 dot the role
+of the per-column bit-serial PE array.
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; numerics are what we validate here (real-TPU perf is
+estimated analytically in DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile: bm×bk + bk×bn + bm×bn int32 words ≈ 3 KB at (16,32,16)
+# — far under a real core's ~16 MB VMEM; sized small so interpret-mode
+# tests stay fast while exercising multi-step grids.
+BLOCK_M = 16
+BLOCK_K = 32
+BLOCK_N = 16
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One grid step: accumulate x_block @ w_block into the output block.
+
+    The output block is revisited across the K grid dimension (RACAM's
+    popcount accumulator); the weight block for a given (n, k) is reused
+    across the M grid dimension (RACAM's locality-buffer reuse).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.int32
+    )
+
+
+def _pad_to(a, rows, cols):
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def quant_gemm(x, w, bm=BLOCK_M, bk=BLOCK_K, bn=BLOCK_N):
+    """int8-range integer GEMM with int32 accumulation.
+
+    `x`: [M, K] int32 (values in int8 range), `w`: [K, N] int32.
+    Returns [M, N] int32.  Shapes are zero-padded up to block multiples.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+
+    mp = -(-m // bm) * bm
+    kp = -(-k // bk) * bk
+    np_ = -(-n // bn) * bn
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, kp, np_)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # Weight block depends only on (j, kk): reused across i — the
+            # locality-buffer analogue.
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def quantize(x, scale):
+    """f32 → int8-range int32 with symmetric scale."""
+    return jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int32)
+
+
+def dequantize(q, scale):
+    """int32 accumulator → f32."""
+    return q.astype(jnp.float32) * scale

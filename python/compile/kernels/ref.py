@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the Pallas kernel — the correctness ground truth
+(pytest checks `quant_gemm` against this exactly, integer-for-integer)."""
+
+import jax.numpy as jnp
+
+
+def quant_gemm_ref(x, w):
+    """Reference int GEMM with int32 accumulation."""
+    return jnp.dot(
+        x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def quantize_ref(x, scale):
+    return jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int32)
+
+
+def dequantize_ref(q, scale):
+    return q.astype(jnp.float32) * scale

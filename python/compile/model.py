@@ -1,0 +1,101 @@
+"""L2 — the JAX model: a quantized transformer block and the tiny recurrent
+decode step, both routing every matmul through the L1 Pallas kernel.
+
+These are the computations AOT-lowered to `artifacts/*.hlo.txt` and
+executed from Rust via PJRT (the serving path never runs Python).  They use
+int8 weight quantization like the paper's Table 3 workloads; activations
+are quantized per-tensor before each GEMM and dequantized after.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.quant_gemm import dequantize, quant_gemm, quantize
+
+ACT_SCALE = 0.05
+W_SCALE = 0.02
+
+# Tiny-model dimensions (serving example / oracle artifacts).
+HIDDEN = 64
+FFN = 128
+HEADS = 4
+VOCAB = 256
+SEQ = 16
+
+
+def qmatmul(x_f32, w_q):
+    """f32 activations × int8 weights through the Pallas int kernel."""
+    x_q = quantize(x_f32, ACT_SCALE)
+    acc = quant_gemm(x_q, w_q)
+    return dequantize(acc, ACT_SCALE * W_SCALE)
+
+
+def transformer_block(x, wqkv, wo, w1, w2):
+    """One pre-norm transformer block.
+
+    `x`: [S, H] f32; weights are int8-range int32:
+    `wqkv`: [H, 3H], `wo`: [H, H], `w1`: [H, F], `w2`: [F, H].
+    Returns [S, H] f32.
+    """
+    s, h = x.shape
+    dh = h // HEADS
+
+    def norm(v):
+        mu = jnp.mean(v, axis=-1, keepdims=True)
+        var = jnp.var(v, axis=-1, keepdims=True)
+        return (v - mu) / jnp.sqrt(var + 1e-5)
+
+    # Attention.
+    qkv = qmatmul(norm(x), wqkv)  # [S, 3H]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(s, HEADS, dh).transpose(1, 0, 2)
+    k = k.reshape(s, HEADS, dh).transpose(1, 0, 2)
+    v = v.reshape(s, HEADS, dh).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None], scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,hkd->hqd", attn, v).transpose(1, 0, 2).reshape(s, h)
+    x = x + dequantize(quant_gemm(quantize(ctx, ACT_SCALE), wo), ACT_SCALE * W_SCALE)
+
+    # FFN.
+    y = qmatmul(norm(x), w1)
+    y = jax.nn.gelu(y)
+    x = x + dequantize(quant_gemm(quantize(y, ACT_SCALE), w2), ACT_SCALE * W_SCALE)
+    return x
+
+
+def synthetic_weights(seed=0):
+    """Deterministic int8-range weights for the tiny model."""
+    rng = np.random.default_rng(seed)
+
+    def w(shape):
+        return jnp.asarray(
+            rng.integers(-64, 64, size=shape, dtype=np.int32), dtype=jnp.int32
+        )
+
+    return {
+        "wqkv": w((HIDDEN, 3 * HIDDEN)),
+        "wo": w((HIDDEN, HIDDEN)),
+        "w1": w((HIDDEN, FFN)),
+        "w2": w((FFN, HIDDEN)),
+        "w_vocab": w((HIDDEN, VOCAB)),
+    }
+
+
+def decode_step(x):
+    """One recurrent decode step with weights baked as constants.
+
+    `x`: [H] f32 hidden state → `[H + V]` f32: the next hidden state
+    concatenated with the vocab logits (a single flat output keeps the
+    Rust side's 1-tuple unwrapping simple).
+    """
+    w = synthetic_weights()
+    h = transformer_block(x[None, :], w["wqkv"], w["wo"], w["w1"], w["w2"])[0]
+    # Bounded, non-saturating recurrence: compress the block's dynamic
+    # range before the tanh so small state perturbations (the token
+    # feedback applied by the Rust coordinator) steer the trajectory.
+    h = jnp.tanh(h * 0.05)
+    logits = qmatmul(h[None, :], w["w_vocab"])[0]
+    return jnp.concatenate([h, logits])

@@ -1,0 +1,69 @@
+"""AOT pipeline checks: every artifact lowers to parseable HLO text with
+the expected entry signature, and no artifact carries a Mosaic custom-call
+(which the CPU PJRT client could not execute)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    return {name: (text, meta) for name, text, meta in aot.artifacts("/tmp")}
+
+
+def test_expected_artifact_set(lowered):
+    names = set(lowered)
+    assert "transformer_block.hlo.txt" in names
+    assert "decode_step.hlo.txt" in names
+    for m, k, n in aot.GEMM_ORACLES:
+        assert f"gemm_{m}x{k}x{n}.hlo.txt" in names
+
+
+def test_hlo_text_looks_like_hlo(lowered):
+    for name, (text, _) in lowered.items():
+        assert "HloModule" in text, name
+        assert "ENTRY" in text, name
+        assert len(text) > 500, name
+
+
+def test_no_elided_constants(lowered):
+    # The default HLO printer drops big literals as `{...}`, which the text
+    # parser reads back as zeros — baked weights would silently vanish.
+    for name, (text, _) in lowered.items():
+        assert "constant({...})" not in text, name
+
+
+def test_no_mosaic_custom_calls(lowered):
+    # interpret=True must have lowered Pallas to plain HLO ops.
+    for name, (text, _) in lowered.items():
+        assert "tpu_custom_call" not in text, name
+        assert "mosaic" not in text.lower(), name
+
+
+def test_gemm_signature_is_int32(lowered):
+    for m, k, n in aot.GEMM_ORACLES:
+        text, meta = lowered[f"gemm_{m}x{k}x{n}.hlo.txt"]
+        assert f"s32[{m},{k}]" in text
+        assert f"s32[{k},{n}]" in text
+        assert meta["dtype"] == "i32"
+
+
+def test_decode_step_flat_output(lowered):
+    text, meta = lowered["decode_step.hlo.txt"]
+    flat = meta["hidden"] + meta["vocab"]
+    assert f"f32[{flat}]" in text
+
+
+def test_manifest_written_by_main(tmp_path, monkeypatch):
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--out-dir", str(tmp_path)]
+    )
+    aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert len(manifest) == len(aot.GEMM_ORACLES) + 2
+    for name in manifest:
+        assert os.path.exists(tmp_path / name)

@@ -1,0 +1,103 @@
+"""L1 kernel correctness: the Pallas quantized GEMM against the pure-jnp
+oracle, exactly (integer arithmetic), with hypothesis sweeping shapes,
+values and block sizes."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quant_gemm import (
+    BLOCK_K,
+    BLOCK_M,
+    BLOCK_N,
+    dequantize,
+    quant_gemm,
+    quantize,
+)
+from compile.kernels.ref import dequantize_ref, quant_gemm_ref, quantize_ref
+
+dims = st.integers(min_value=1, max_value=70)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand_int8(rng, shape):
+    return jnp.asarray(rng.integers(-128, 128, size=shape, dtype=np.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=seeds)
+def test_matches_reference_exactly(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_int8(rng, (m, k))
+    w = rand_int8(rng, (k, n))
+    got = quant_gemm(x, w)
+    want = quant_gemm_ref(x, w)
+    assert got.shape == (m, n)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds, bm=st.sampled_from([4, 8, 16]), bk=st.sampled_from([8, 32]), bn=st.sampled_from([4, 16]))
+def test_block_shape_invariance(seed, bm, bk, bn):
+    """The result must not depend on the tiling (pure schedule change)."""
+    rng = np.random.default_rng(seed)
+    x = rand_int8(rng, (19, 45))
+    w = rand_int8(rng, (45, 23))
+    a = quant_gemm(x, w, bm=bm, bk=bk, bn=bn)
+    b = quant_gemm_ref(x, w)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_extreme_values():
+    x = jnp.full((8, 64), -128, dtype=jnp.int32)
+    w = jnp.full((64, 8), 127, dtype=jnp.int32)
+    got = quant_gemm(x, w)
+    assert int(got[0, 0]) == -128 * 127 * 64
+
+
+def test_zero_matrix():
+    x = jnp.zeros((5, 7), dtype=jnp.int32)
+    w = jnp.ones((7, 3), dtype=jnp.int32)
+    assert not np.asarray(quant_gemm(x, w)).any()
+
+
+def test_identity_weight():
+    rng = np.random.default_rng(3)
+    x = rand_int8(rng, (6, 6))
+    eye = jnp.eye(6, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(quant_gemm(x, eye)), np.asarray(x))
+
+
+def test_k_larger_than_block_accumulates():
+    # K spans many grid steps; accumulation across revisits must be exact.
+    k = BLOCK_K * 7 + 5
+    rng = np.random.default_rng(11)
+    x = rand_int8(rng, (BLOCK_M + 3, k))
+    w = rand_int8(rng, (k, BLOCK_N + 1))
+    np.testing.assert_array_equal(
+        np.asarray(quant_gemm(x, w)), np.asarray(quant_gemm_ref(x, w))
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, scale=st.floats(min_value=1e-3, max_value=1.0))
+def test_quantize_roundtrip_bounds(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, scale * 40, size=(4, 4)).astype(np.float32))
+    q = quantize(x, scale)
+    q_ref = quantize_ref(x, scale)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    assert int(q.min()) >= -128 and int(q.max()) <= 127
+    # Dequantized error bounded by half a quantization step (where not clipped).
+    deq = dequantize(q, scale)
+    unclipped = np.abs(np.asarray(x) / scale) <= 127
+    err = np.abs(np.asarray(deq) - np.asarray(x))[unclipped]
+    assert (err <= 0.5 * scale + 1e-6).all()
+    np.testing.assert_array_equal(np.asarray(deq), np.asarray(dequantize_ref(q, scale)))
+
+
+def test_rejects_mismatched_inner_dims():
+    with pytest.raises(AssertionError):
+        quant_gemm(jnp.zeros((2, 3), jnp.int32), jnp.zeros((4, 2), jnp.int32))

@@ -1,0 +1,37 @@
+//! Bench for paper Fig. 1: regenerates the multiplication-latency table and
+//! times the functional locality-buffer multiply (the simulator's inner
+//! loop) at each precision.
+
+use racam::config::racam_tiny;
+use racam::pim::{bitplane, BlockExecutor};
+use racam::report::bench;
+
+fn main() {
+    println!("=== Fig.1 — integer multiplication latency ===");
+    for t in racam::experiments::run("fig1").expect("fig1") {
+        println!("{}", t.render());
+    }
+
+    println!("=== functional SIMD multiply pass (128 lanes) ===");
+    let width = 128u32;
+    for bits in [2usize, 4, 8] {
+        let vals: Vec<u64> = (0..128).map(|i| (i * 37) % (1 << bits)).collect();
+        let op1 = bitplane::to_planes(&vals, bits, width);
+        let op2 = bitplane::to_planes(&vals, bits, width);
+        let mut lb = racam::pim::LocalityBuffer::new(17, width);
+        let mut pes = racam::pim::PeArray::new(width);
+        bench(&format!("lb_multiply_int{bits}"), 2000, || {
+            lb.multiply(&mut pes, &op1, &op2)
+        });
+    }
+
+    println!("=== functional int8 GEMM through the block executor ===");
+    let hw = racam_tiny();
+    let (m, k, n) = (4usize, 128usize, 4usize);
+    let x: Vec<i64> = (0..m * k).map(|i| (i as i64 % 255) - 127).collect();
+    let w: Vec<i64> = (0..k * n).map(|i| ((i * 3) as i64 % 255) - 127).collect();
+    let mut ex = BlockExecutor::new(&hw);
+    bench("block_executor_4x128x4_int8", 200, || {
+        ex.gemm(&x, &w, m, k, n, racam::config::Precision::Int8)
+    });
+}

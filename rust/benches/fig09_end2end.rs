@@ -1,0 +1,29 @@
+//! Bench for paper Figs. 9–11: regenerates the end-to-end throughput,
+//! prefill/decode and performance-per-mm² tables, and times the full
+//! evaluation pipeline (LLM parse → mapping search → latency roll-up).
+
+use racam::config::{gpt3_6_7b, racam_paper, Scenario};
+use racam::report::bench;
+use racam::workloads::{e2e_latency, RacamSystem};
+
+fn main() {
+    for id in ["fig9", "fig10", "fig11"] {
+        println!("=== {id} ===");
+        for t in racam::experiments::run(id).expect(id) {
+            println!("{}", t.render());
+        }
+    }
+
+    println!("=== evaluation pipeline timing ===");
+    // Cold: every kernel shape searched from scratch.
+    bench("e2e_gpt3_6.7B_codegen_cold", 10, || {
+        let mut sys = RacamSystem::new(&racam_paper());
+        e2e_latency(&mut sys, &gpt3_6_7b(), &Scenario::CODE_GENERATION)
+    });
+    // Warm: mapping cache reused across calls (the paper's amortized mode).
+    let mut sys = RacamSystem::new(&racam_paper());
+    e2e_latency(&mut sys, &gpt3_6_7b(), &Scenario::CODE_GENERATION);
+    bench("e2e_gpt3_6.7B_codegen_warm_cache", 50, || {
+        e2e_latency(&mut sys, &gpt3_6_7b(), &Scenario::CODE_GENERATION)
+    });
+}

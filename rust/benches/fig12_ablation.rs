@@ -1,0 +1,26 @@
+//! Bench for paper Figs. 12–14 and 17: regenerates the ablation,
+//! PE-count-sensitivity, precision-sensitivity and latency-breakdown
+//! tables, and times the ablated-hardware re-search (each feature set
+//! re-runs the full mapping space).
+
+use racam::config::{racam_paper, Features, MatmulShape, Precision};
+use racam::mapping::{HwModel, MappingEngine};
+use racam::report::bench;
+
+fn main() {
+    for id in ["fig12", "fig13", "fig14", "fig17"] {
+        println!("=== {id} ===");
+        for t in racam::experiments::run(id).expect(id) {
+            println!("{}", t.render());
+        }
+    }
+
+    println!("=== ablated-search timing (1458-candidate GEMM space each) ===");
+    let shape = MatmulShape::new(1024, 12288, 12288, Precision::Int8);
+    for f in [Features::ALL, Features::NO_PR, Features::NO_PR_BU, Features::NO_PR_BU_LB] {
+        let mut hw = racam_paper();
+        hw.features = f;
+        let engine = MappingEngine::new(HwModel::new(&hw));
+        bench(&format!("search_{}", f.label()), 20, || engine.search(&shape));
+    }
+}

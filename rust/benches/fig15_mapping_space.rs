@@ -1,0 +1,36 @@
+//! Bench for paper Figs. 15–16: regenerates the mapping-sensitivity
+//! scatter and the GEMM/GEMV size-sensitivity tables, and times the
+//! exhaustive mapping search itself against the paper's §7 claims
+//! (~1 s GEMV, 2–3 s GEMM on a 16-core CPU; each candidate evaluation in
+//! microseconds).
+
+use racam::config::{racam_paper, MatmulShape, Precision};
+use racam::mapping::{HwModel, MappingEngine};
+use racam::report::bench;
+
+fn main() {
+    for id in ["fig15", "fig16"] {
+        println!("=== {id} ===");
+        let tables = racam::experiments::run(id).expect(id);
+        // fig15's scatter is 1458 rows; print only the summary table.
+        println!("{}", tables[0].render());
+    }
+
+    let engine = MappingEngine::new(HwModel::new(&racam_paper()));
+    let gemm = MatmulShape::new(1024, 12288, 12288, Precision::Int8);
+    let gemv = MatmulShape::new(1, 12288, 12288, Precision::Int8);
+
+    println!("=== mapping search timing (paper §7) ===");
+    let r = bench("search_gemm_1458_candidates", 50, || engine.search(&gemm));
+    println!(
+        "    → {:.2} µs per candidate evaluation (paper: 'within microseconds')",
+        r.p50_ns / 1e3 / 1458.0
+    );
+    bench("search_gemv_192_candidates", 200, || engine.search(&gemv));
+    bench("evaluate_all_gemm (scatter dump)", 20, || engine.evaluate_all(&gemm));
+
+    // Cached (amortized) mode.
+    let mut cached = MappingEngine::new(HwModel::new(&racam_paper()));
+    cached.search_cached(&gemm);
+    bench("search_gemm_cached", 1000, || cached.search_cached(&gemm));
+}

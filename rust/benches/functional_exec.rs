@@ -1,0 +1,44 @@
+//! Hot-path benchmark of the functional bit-serial simulator — the target
+//! of the §Perf optimization pass (word-packed bit-plane operations).
+
+use racam::config::{racam_tiny, Precision};
+use racam::pim::{bitplane, BlockExecutor, LocalityBuffer, PeArray, PopcountUnit};
+use racam::report::bench;
+
+fn main() {
+    let width = 128u32;
+
+    println!("=== bit-plane primitives ===");
+    let vals: Vec<u64> = (0..128).map(|i| (i * 37 + 11) % 256).collect();
+    bench("to_planes_int8_128", 20_000, || bitplane::to_planes(&vals, 8, width));
+    let planes = bitplane::to_planes(&vals, 8, width);
+    bench("from_planes_int8_128", 20_000, || bitplane::from_planes(&planes, 128));
+
+    println!("\n=== locality-buffer multiply (Fig. 6 schedule) ===");
+    let op = bitplane::to_planes(&vals, 8, width);
+    let mut lb = LocalityBuffer::new(17, width);
+    let mut pes = PeArray::new(width);
+    bench("lb_multiply_int8_128lanes", 5_000, || lb.multiply(&mut pes, &op, &op));
+
+    println!("\n=== popcount reduction ===");
+    let prod = bitplane::to_planes(&vals, 16, width);
+    bench("popcount_reduce_16planes", 50_000, || {
+        let mut unit = PopcountUnit::new(width);
+        for (i, p) in prod.iter().enumerate() {
+            unit.consume_slice(p, width, i as u32);
+        }
+        unit.sum()
+    });
+
+    println!("\n=== end-to-end block executor GEMMs ===");
+    let hw = racam_tiny();
+    for (m, k, n) in [(2usize, 64usize, 2usize), (4, 256, 4), (8, 512, 8)] {
+        let x: Vec<i64> = (0..m * k).map(|i| (i as i64 % 255) - 127).collect();
+        let w: Vec<i64> = (0..k * n).map(|i| ((i * 7) as i64 % 255) - 127).collect();
+        let mut ex = BlockExecutor::new(&hw);
+        let iters = (400 / (m * n)).max(10);
+        bench(&format!("gemm_{m}x{k}x{n}_int8"), iters, || {
+            ex.gemm(&x, &w, m, k, n, Precision::Int8)
+        });
+    }
+}

@@ -1,0 +1,186 @@
+//! Area estimation (paper §5.2).
+//!
+//! * DRAM chip area scales linearly with capacity at the bit density of a
+//!   Micron 16 Gb DDR5 die (TechInsights).
+//! * The locality buffer is SRAM, priced at the TSMC 45 nm 6T cell
+//!   (0.296 µm²/bit) and scaled to 14 nm — one node behind DDR5 peripheral
+//!   logic, as fabricated peripheries use older nodes for thermal stability.
+//! * Peripheral logic (PEs, popcount units, broadcast demuxes, FSMs) uses
+//!   FreePDK45 synthesis-class areas scaled to 14 nm and inflated by the
+//!   post-synthesis model: `A_post = A_synth · (1 + β) / U` with placement
+//!   utilization `U` and buffer-growth factor `β` (§5.2.2).
+
+use crate::config::HwConfig;
+
+/// Area model constants (all documented against the paper's sources).
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    /// Micron 16 Gb DDR5 die area, mm² (TechInsights teardown).
+    pub dram_die_mm2: f64,
+    /// Bits per 16 Gb die.
+    pub dram_die_bits: f64,
+    /// 45 nm 6T SRAM cell, µm²/bit (TSMC VLSI'04).
+    pub sram_cell_um2_45: f64,
+    /// Synthesis-class areas at 45 nm, µm².
+    pub pe_um2_45: f64,
+    /// Popcount reduction unit (1024-input tree + int32 accumulator), µm².
+    pub popcount_um2_45: f64,
+    /// Broadcast demux network per bank, µm².
+    pub broadcast_um2_45: f64,
+    /// Control FSM per device, µm².
+    pub fsm_um2_45: f64,
+    /// Linear feature-scale factor from 45 nm to the 14 nm peripheral node.
+    pub node_scale: f64,
+    /// Placement utilization U (§5.2.2).
+    pub placement_util: f64,
+    /// Buffer growth factor β (§5.2.2).
+    pub buffer_growth: f64,
+    /// H100 die area, mm² (4N process).
+    pub h100_die_mm2: f64,
+    /// HBM3 stack footprint flattened to one layer, mm² (5 stacks ≈ 110 mm²
+    /// each).
+    pub h100_hbm_mm2: f64,
+    /// Transistor-density ratio from the H100's 4N node to the common 15 nm
+    /// comparison node of Fig. 11 (density-based, not naive quadratic).
+    pub h100_to_15nm_density: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            dram_die_mm2: 66.0,
+            dram_die_bits: 16.0 * (1u64 << 30) as f64,
+            sram_cell_um2_45: 0.296,
+            pe_um2_45: 200.0,
+            popcount_um2_45: 10_500.0,
+            broadcast_um2_45: 2_000.0,
+            fsm_um2_45: 40_000.0,
+            node_scale: 45.0 / 14.0,
+            placement_util: 0.65,
+            buffer_growth: 0.20,
+            h100_die_mm2: 814.0,
+            h100_hbm_mm2: 550.0,
+            h100_to_15nm_density: 6.5,
+        }
+    }
+}
+
+/// Area report for a RACAM configuration, mm².
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaReport {
+    pub dram_mm2: f64,
+    pub locality_buffer_mm2: f64,
+    pub pe_mm2: f64,
+    pub popcount_mm2: f64,
+    pub broadcast_mm2: f64,
+    pub fsm_mm2: f64,
+}
+
+impl AreaReport {
+    /// Total added peripheral area (everything except the DRAM itself).
+    pub fn added_mm2(&self) -> f64 {
+        self.locality_buffer_mm2 + self.pe_mm2 + self.popcount_mm2 + self.broadcast_mm2 + self.fsm_mm2
+    }
+
+    /// Added area as a fraction of the DRAM chip area (paper: ≈ 4%).
+    pub fn overhead_fraction(&self) -> f64 {
+        self.added_mm2() / self.dram_mm2
+    }
+}
+
+impl AreaModel {
+    /// Node scaling for logic/SRAM: quadratic in the linear feature ratio.
+    fn node_area_factor(&self) -> f64 {
+        1.0 / (self.node_scale * self.node_scale)
+    }
+
+    /// Post-synthesis inflation: (1 + β) / U.
+    fn post_synthesis_factor(&self) -> f64 {
+        (1.0 + self.buffer_growth) / self.placement_util
+    }
+
+    /// Full area report for a hardware configuration.
+    pub fn report(&self, hw: &HwConfig) -> AreaReport {
+        let bits = hw.dram.capacity_bits() as f64;
+        let dram_mm2 = bits * self.dram_die_mm2 / self.dram_die_bits;
+
+        let banks = hw.dram.total_banks() as f64;
+        let devices = (hw.dram.total_banks() / hw.dram.banks as u64) as f64;
+        let um2_to_mm2 = 1e-6;
+        let logic = self.node_area_factor() * self.post_synthesis_factor() * um2_to_mm2;
+
+        let lb_bits = hw.periph.locality_buffer_bits() as f64 * banks;
+        // SRAM scales by cell area only (no P&R inflation for the array).
+        let locality_buffer_mm2 = lb_bits * self.sram_cell_um2_45 * self.node_area_factor() * um2_to_mm2;
+
+        AreaReport {
+            dram_mm2,
+            locality_buffer_mm2,
+            pe_mm2: banks * hw.periph.pes_per_bank as f64 * self.pe_um2_45 * logic,
+            popcount_mm2: banks * self.popcount_um2_45 * logic,
+            broadcast_mm2: banks * self.broadcast_um2_45 * logic,
+            fsm_mm2: devices * self.fsm_um2_45 * logic,
+        }
+    }
+
+    /// H100 reference area at the common 15 nm node (die scaled by
+    /// transistor density + HBM flattened), mm² — the Fig. 11 denominator.
+    pub fn h100_mm2_at_15nm(&self) -> f64 {
+        self.h100_die_mm2 * self.h100_to_15nm_density + self.h100_hbm_mm2
+    }
+
+    /// Proteus added-circuitry area: 1% of its PIM DRAM chip area
+    /// (paper §6.1, citing [14, 70]).
+    pub fn proteus_added_mm2(&self, pim_capacity_bytes: u64) -> f64 {
+        let bits = (pim_capacity_bytes * 8) as f64;
+        0.01 * bits * self.dram_die_mm2 / self.dram_die_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::racam_paper;
+
+    #[test]
+    fn paper_overhead_is_about_4_percent() {
+        let r = AreaModel::default().report(&racam_paper());
+        let f = r.overhead_fraction();
+        assert!((0.03..0.05).contains(&f), "overhead {f:.4}");
+    }
+
+    #[test]
+    fn pe_area_dominates_additions() {
+        let r = AreaModel::default().report(&racam_paper());
+        assert!(r.pe_mm2 > r.locality_buffer_mm2);
+        assert!(r.pe_mm2 > r.popcount_mm2 + r.broadcast_mm2 + r.fsm_mm2);
+    }
+
+    #[test]
+    fn added_area_is_about_a_quarter_of_h100() {
+        // Paper §6.1: "total area of peripheral units is 24% of the scaled
+        // H100 area".
+        let m = AreaModel::default();
+        let r = m.report(&racam_paper());
+        let frac = r.added_mm2() / m.h100_mm2_at_15nm();
+        assert!((0.15..0.35).contains(&frac), "added/H100 = {frac:.3}");
+    }
+
+    #[test]
+    fn dram_area_scales_with_capacity() {
+        let m = AreaModel::default();
+        let hw = racam_paper();
+        let half = crate::config::scale_capacity(&hw, 2);
+        let full = m.report(&hw).dram_mm2;
+        let halved = m.report(&half).dram_mm2;
+        assert!((full / halved - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn proteus_added_area_is_tiny() {
+        let m = AreaModel::default();
+        let a = m.proteus_added_mm2(16 * (1 << 30));
+        assert!(a < 10.0, "{a}");
+        assert!(a > 0.1);
+    }
+}

@@ -1,0 +1,131 @@
+//! H100 (PCIe) roofline model, standing in for the LLMCompass simulation of
+//! the paper's methodology (§5.4).  Per kernel the latency is the max of
+//! the compute roofline, the HBM traffic roofline and — when the model's
+//! weights exceed HBM capacity — the offload-link streaming time (Table 4:
+//! 512 GB host memory offloads the weights, as on Grace-Hopper).
+
+use crate::config::{LlmSpec, MatmulShape};
+use crate::metrics::LatencyBreakdown;
+use crate::workloads::InferenceSystem;
+
+/// H100 PCIe + 512 GB offload memory (paper Table 4).
+#[derive(Debug, Clone)]
+pub struct H100Model {
+    /// Peak int8 tensor-core throughput, ops/s (Table 4: 1978.9 TOPS).
+    pub peak_int8_ops: f64,
+    /// HBM3 bandwidth, bytes/s (Table 4: 3352 GB/s).
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes (80 GB).
+    pub hbm_bytes: u64,
+    /// Host↔GPU offload bandwidth, bytes/s (Grace-Hopper NVLink-C2C class).
+    pub offload_bw: f64,
+    /// Achievable fraction of peak compute on dense GEMMs (MFU).
+    pub gemm_efficiency: f64,
+    /// Achievable fraction of peak bandwidth on streaming GEMVs.
+    pub bw_efficiency: f64,
+    /// Weights resident in HBM?  Set per model via [`Self::for_model`].
+    pub weights_offloaded: bool,
+}
+
+impl Default for H100Model {
+    fn default() -> Self {
+        H100Model {
+            peak_int8_ops: 1978.9e12,
+            hbm_bw: 3352e9,
+            hbm_bytes: 80 * (1 << 30),
+            offload_bw: 256e9,
+            gemm_efficiency: 0.60,
+            bw_efficiency: 0.80,
+            weights_offloaded: false,
+        }
+    }
+}
+
+impl H100Model {
+    /// Configure for an LLM: weights stream from host memory when the int8
+    /// checkpoint exceeds the 80 GB HBM (GPT-3 175B does; 6.7B/8B don't).
+    pub fn for_model(spec: &LlmSpec) -> Self {
+        let mut m = H100Model::default();
+        m.weights_offloaded = spec.weight_bytes() > m.hbm_bytes;
+        m
+    }
+
+    /// Roofline latency of one kernel, ns.
+    pub fn kernel_ns(&self, shape: &MatmulShape) -> f64 {
+        let compute_ns = shape.ops() as f64 / (self.peak_int8_ops * self.gemm_efficiency) * 1e9;
+        // Weight bytes stream from HBM (resident) or over the offload link.
+        let act_bytes = (shape.input_bytes() + shape.output_bytes()) as f64;
+        let weight_bytes = shape.weight_bytes() as f64;
+        let (hbm_bytes, offload_bytes) = if shape.weight_static && self.weights_offloaded {
+            (act_bytes, weight_bytes)
+        } else {
+            (act_bytes + weight_bytes, 0.0)
+        };
+        let hbm_ns = hbm_bytes / (self.hbm_bw * self.bw_efficiency) * 1e9;
+        let offload_ns = offload_bytes / self.offload_bw * 1e9;
+        // Kernel-launch floor: even tiny GEMVs cost a few µs on a GPU.
+        const LAUNCH_NS: f64 = 4_000.0;
+        compute_ns.max(hbm_ns).max(offload_ns).max(LAUNCH_NS)
+    }
+}
+
+impl InferenceSystem for H100Model {
+    fn name(&self) -> &str {
+        "H100"
+    }
+
+    fn kernel_latency(&mut self, shape: &MatmulShape) -> LatencyBreakdown {
+        LatencyBreakdown::new(self.kernel_ns(shape), 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{gpt3_175b, gpt3_6_7b, MatmulShape, Precision};
+
+    #[test]
+    fn big_gemm_is_compute_bound() {
+        let m = H100Model::default();
+        let s = MatmulShape::new(8192, 8192, 8192, Precision::Int8);
+        let ns = m.kernel_ns(&s);
+        let compute = s.ops() as f64 / (m.peak_int8_ops * m.gemm_efficiency) * 1e9;
+        assert!((ns - compute).abs() / compute < 1e-9);
+    }
+
+    #[test]
+    fn gemv_is_bandwidth_bound() {
+        let m = H100Model::default();
+        let s = MatmulShape::new(1, 12288, 12288, Precision::Int8);
+        let ns = m.kernel_ns(&s);
+        let bw_ns = s.weight_bytes() as f64 / (m.hbm_bw * m.bw_efficiency) * 1e9;
+        assert!((ns - bw_ns).abs() / bw_ns < 0.05, "{ns} vs {bw_ns}");
+    }
+
+    #[test]
+    fn offloaded_weights_dominate_gemv() {
+        let resident = H100Model::for_model(&gpt3_6_7b());
+        let offloaded = H100Model::for_model(&gpt3_175b());
+        assert!(!resident.weights_offloaded);
+        assert!(offloaded.weights_offloaded);
+        let s = MatmulShape::new(1, 12288, 12288, Precision::Int8);
+        assert!(offloaded.kernel_ns(&s) > 5.0 * resident.kernel_ns(&s));
+    }
+
+    #[test]
+    fn launch_floor_applies_to_tiny_kernels() {
+        let m = H100Model::default();
+        assert_eq!(m.kernel_ns(&MatmulShape::new(1, 64, 64, Precision::Int8)), 4_000.0);
+    }
+
+    #[test]
+    fn dynamic_weights_never_offload() {
+        let mut m = H100Model::default();
+        m.weights_offloaded = true;
+        let s = MatmulShape::dynamic(128, 128, 4096, Precision::Int8);
+        // Attention operands are activations: they live in HBM.
+        let ns = m.kernel_ns(&s);
+        let offload_ns = s.weight_bytes() as f64 / m.offload_bw * 1e9;
+        assert!(ns < offload_ns.max(4_000.0) + 1e6); // not offload-priced
+    }
+}

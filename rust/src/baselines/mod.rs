@@ -1,0 +1,10 @@
+//! Baseline system models (paper Table 4): the NVIDIA H100 GPU (priced with
+//! an LLMCompass-style roofline) and Proteus, the state-of-the-art
+//! processing-using-DRAM system (bit-serial, no bit reuse, no broadcast,
+//! no in-DRAM reduction).
+
+mod h100;
+mod proteus;
+
+pub use h100::H100Model;
+pub use proteus::ProteusModel;

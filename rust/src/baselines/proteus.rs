@@ -1,0 +1,179 @@
+//! Proteus baseline (paper Table 4 / Table 5): the state-of-the-art
+//! processing-using-DRAM system.  Bit-serial like RACAM, but:
+//!
+//! * **no bit-level reuse** — every multiplier bit re-reads the multiplicand
+//!   from the cell array, so an n-bit multiply costs O(n²) row cycles;
+//! * **no broadcast units** — the host explicitly writes dynamic operands
+//!   into every participating bank (`#Banks × Bytes` channel traffic, §1);
+//! * **no reduction units** — partial sums are read out and reduced by the
+//!   host CPU.
+//!
+//! Calibration anchor: Table 4 credits the Proteus system (DDR5-5200,
+//! 1 channel / 1 rank / 16 banks) with 0.15 int8 TOPS.
+
+use crate::config::{MatmulShape, Precision};
+use crate::metrics::LatencyBreakdown;
+use crate::workloads::InferenceSystem;
+
+#[derive(Debug, Clone)]
+pub struct ProteusModel {
+    pub banks: u64,
+    /// SIMD columns per bank (an 8 KB DDR5 row buffer = 65536 bitlines).
+    pub cols_per_bank: u64,
+    /// Full row cycle (ACT→PRE→ready), ns.
+    pub t_rc_ns: f64,
+    /// Channel bandwidth, bytes/s (one DDR5-5200 x64 channel).
+    pub channel_bw: f64,
+    /// Host-side add, ns per element (amortized SIMD cost).
+    pub host_add_ns: f64,
+    /// Achieved fraction of peak throughput.  Proteus's published GEMM
+    /// results are far below its theoretical peak (per-operand transposes,
+    /// row-buffer fragmentation, AAP command sequencing, per-kernel
+    /// reconfiguration), which is why the paper finds it "poor … compared
+    /// to GPUs" even though Table 4 credits it 0.15 peak TOPS.
+    pub achieved_efficiency: f64,
+    /// PIM-enabled DRAM capacity, bytes (1 rank of 8 × 16 Gb devices);
+    /// larger models stream weights from the offload memory over the one
+    /// channel.
+    pub pim_capacity: u64,
+    /// Weights exceed the PIM capacity and stream from offload memory.
+    pub weights_offloaded: bool,
+}
+
+impl Default for ProteusModel {
+    fn default() -> Self {
+        ProteusModel {
+            banks: 16,
+            cols_per_bank: 65536,
+            t_rc_ns: 48.0,
+            channel_bw: 41.6e9,
+            host_add_ns: 1.0 / 16.0,
+            achieved_efficiency: 0.08,
+            pim_capacity: 16 * (1 << 30),
+            weights_offloaded: false,
+        }
+    }
+}
+
+impl ProteusModel {
+    /// Configure for an LLM: weights stream over the single channel when
+    /// the checkpoint exceeds the PIM-enabled capacity.
+    pub fn for_model(spec: &crate::config::LlmSpec) -> Self {
+        let mut m = ProteusModel::default();
+        m.weights_offloaded = spec.weight_bytes() > m.pim_capacity;
+        m
+    }
+}
+
+impl ProteusModel {
+    /// Row operations of one n-bit multiply without bit reuse (Table 5:
+    /// O(n²)): each of the n partial products re-streams the n multiplicand
+    /// planes and read-modify-writes the result window (3 row ops per
+    /// plane per step in the majority-based PUD scheme).
+    pub fn mul_row_ops(n: u64) -> u64 {
+        3 * n * n + 2 * n
+    }
+
+    /// Bit-serial SIMD multiply pass latency over one bank's columns, ns.
+    pub fn mul_pass_ns(&self, prec: Precision) -> f64 {
+        Self::mul_row_ops(prec.bits() as u64) as f64 * self.t_rc_ns
+    }
+
+    /// Peak int-n MAC throughput (system-wide), MAC/s — the Table 4 TOPS
+    /// anchor divided by 2 ops/MAC.
+    pub fn peak_macs(&self, prec: Precision) -> f64 {
+        let per_pass_macs = (self.banks * self.cols_per_bank) as f64;
+        // A reduction over K costs ~log2(cols) extra add passes worth of
+        // row ops, folded into an effective 1.30 overhead factor.
+        per_pass_macs / (self.mul_pass_ns(prec) * 1.30) * 1e9
+    }
+
+    pub fn peak_tops(&self, prec: Precision) -> f64 {
+        2.0 * self.peak_macs(prec) / 1e12
+    }
+
+    /// Achieved compute latency for one kernel, ns.
+    pub fn compute_ns(&self, shape: &MatmulShape) -> f64 {
+        shape.macs() as f64 / (self.peak_macs(shape.prec) * self.achieved_efficiency) * 1e9
+    }
+
+    /// Kernel latency, ns.
+    pub fn kernel_ns(&self, shape: &MatmulShape) -> f64 {
+        let compute_ns = self.compute_ns(shape);
+        // Input: host replicates the dynamic operand into every bank.
+        let mut in_bytes = shape.input_bytes() as f64 * self.banks as f64;
+        if !shape.weight_static {
+            in_bytes += shape.weight_bytes() as f64 * self.banks as f64;
+        } else if self.weights_offloaded {
+            // Static weights that don't fit in the PIM DRAM stream in from
+            // offload memory (laid out once per use, no replication).
+            in_bytes += shape.weight_bytes() as f64;
+        }
+        // Output: partial sums from every bank, host-reduced.
+        let out_bytes = (shape.output_bytes() * self.banks) as f64;
+        let host_ns = (self.banks - 1) as f64 * (shape.m * shape.n) as f64 * self.host_add_ns;
+        let io_ns = (in_bytes + out_bytes) / self.channel_bw * 1e9 + host_ns;
+        compute_ns + io_ns
+    }
+}
+
+impl InferenceSystem for ProteusModel {
+    fn name(&self) -> &str {
+        "Proteus"
+    }
+
+    fn kernel_latency(&mut self, shape: &MatmulShape) -> LatencyBreakdown {
+        // Split for reporting: compute vs host I/O.
+        let compute_ns = self.compute_ns(shape);
+        let total = self.kernel_ns(shape);
+        LatencyBreakdown::new(compute_ns, total - compute_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{racam_paper, HwConfig};
+
+    #[test]
+    fn int8_tops_matches_table4() {
+        let p = ProteusModel::default();
+        let tops = p.peak_tops(Precision::Int8);
+        assert!((tops - 0.15).abs() < 0.02, "Proteus int8 TOPS {tops}");
+    }
+
+    #[test]
+    fn row_ops_are_quadratic() {
+        assert!(ProteusModel::mul_row_ops(16) > 3 * ProteusModel::mul_row_ops(8));
+    }
+
+    #[test]
+    fn racam_peak_is_orders_of_magnitude_higher() {
+        // Table 4: 986.9 vs 0.15 TOPS.
+        let racam: HwConfig = racam_paper();
+        let ratio = racam.peak_tops(Precision::Int8) / ProteusModel::default().peak_tops(Precision::Int8);
+        assert!(ratio > 1000.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn io_includes_bank_replication() {
+        let mut p = ProteusModel::default();
+        let s = MatmulShape::new(1, 4096, 4096, Precision::Int8);
+        let b = p.kernel_latency(&s);
+        assert!(b.io_ns > 0.0);
+        // Host writes #banks copies of the 4 KB input = 64 KB min.
+        let min_io_ns = (16.0 * 4096.0) / p.channel_bw * 1e9;
+        assert!(b.io_ns > min_io_ns);
+    }
+
+    #[test]
+    fn precision_scaling_is_quadratic_in_compute() {
+        let p = ProteusModel::default();
+        let s8 = MatmulShape::new(64, 4096, 64, Precision::Int8);
+        let s4 = MatmulShape { prec: Precision::Int4, ..s8 };
+        let c8 = s8.macs() as f64 / p.peak_macs(Precision::Int8);
+        let c4 = s4.macs() as f64 / p.peak_macs(Precision::Int4);
+        let ratio = c8 / c4;
+        assert!(ratio > 3.0, "O(n²) scaling gives ≳4x from int8→int4, got {ratio}");
+    }
+}

@@ -1,0 +1,28 @@
+//! `experiments` — regenerate every paper table/figure (DESIGN.md's
+//! experiment index).  `experiments all` writes results/<id>.{txt,csv}.
+
+use racam::experiments;
+
+fn main() {
+    let arg = std::env::args().nth(1).unwrap_or_else(|| "all".into());
+    let ids: Vec<&str> =
+        if arg == "all" { experiments::ALL_IDS.to_vec() } else { vec![Box::leak(arg.into_boxed_str())] };
+    let mut failed = false;
+    for id in ids {
+        println!("\n=== {id} ===");
+        match experiments::run(id) {
+            Ok(tables) => {
+                for t in tables {
+                    println!("{}", t.render());
+                }
+            }
+            Err(e) => {
+                eprintln!("{id} failed: {e:#}");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

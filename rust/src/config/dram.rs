@@ -1,0 +1,99 @@
+//! DRAM organization parameters (paper §2.1 / Table 2).
+
+
+/// Hierarchical DRAM organization: channel → rank → device → bank → subarray.
+///
+/// Counts are *per parent*: `ranks` is ranks per channel, `devices` is
+/// devices per rank, `banks` is banks per device, `subarrays` is subarrays
+/// per bank.  `rows`/`cols` describe one subarray mat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DramConfig {
+    pub channels: u32,
+    /// Ranks per channel.
+    pub ranks: u32,
+    /// Devices (chips) per rank.
+    pub devices: u32,
+    /// Banks per device.
+    pub banks: u32,
+    /// Subarrays per bank.
+    pub subarrays: u32,
+    /// Rows per subarray.
+    pub rows: u32,
+    /// Columns (bitlines) per subarray.
+    pub cols: u32,
+    /// Device external data width in bits (e.g. x16).
+    pub device_width_bits: u32,
+    /// I/O frequency in MT/s (DDR data rate, e.g. 5200 for DDR5-5200).
+    pub mts: u32,
+    /// Global bitline bus width in bits (bank ↔ locality buffer path).
+    pub global_bitline_bits: u32,
+}
+
+impl DramConfig {
+    /// Total banks in the system (compute-parallel units).
+    pub fn total_banks(&self) -> u64 {
+        self.channels as u64 * self.ranks as u64 * self.devices as u64 * self.banks as u64
+    }
+
+    /// Total subarrays in the system.
+    pub fn total_subarrays(&self) -> u64 {
+        self.total_banks() * self.subarrays as u64
+    }
+
+    /// Storage capacity in bits.
+    pub fn capacity_bits(&self) -> u64 {
+        self.total_subarrays() * self.rows as u64 * self.cols as u64
+    }
+
+    /// Per-channel peak external bandwidth in bytes/s.
+    ///
+    /// A channel bus is `devices × device_width` bits wide (one rank drives
+    /// the bus at a time) transferring at `mts` MT/s.
+    pub fn channel_bw_bytes(&self) -> f64 {
+        let bus_bits = (self.devices * self.device_width_bits) as f64;
+        bus_bits / 8.0 * self.mts as f64 * 1e6
+    }
+
+    /// Aggregate external bandwidth across all channels, bytes/s.
+    pub fn total_bw_bytes(&self) -> f64 {
+        self.channels as f64 * self.channel_bw_bytes()
+    }
+
+    /// Row size of one subarray in bytes.
+    pub fn row_bytes(&self) -> u64 {
+        self.cols as u64 / 8
+    }
+
+    /// Count for a mapping hierarchy level (see [`crate::mapping::Level`]).
+    pub fn level_count(&self, level: crate::mapping::Level) -> u32 {
+        use crate::mapping::Level::*;
+        match level {
+            Channel => self.channels,
+            Rank => self.ranks,
+            Device => self.devices,
+            Bank => self.banks,
+            Array => self.subarrays, // blocks-per-bank is derived in mapping with PE width
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::racam_paper;
+
+    #[test]
+    fn bandwidth_ddr5_5200_x16_8dev() {
+        let d = racam_paper().dram;
+        // 8 devices × 16 bits = 128-bit bus at 5200 MT/s = 83.2 GB/s/channel.
+        let bw = d.channel_bw_bytes();
+        assert!((bw - 83.2e9).abs() < 1e7, "got {bw}");
+        assert!((d.total_bw_bytes() - 8.0 * 83.2e9).abs() < 1e8);
+    }
+
+    #[test]
+    fn totals() {
+        let d = racam_paper().dram;
+        assert_eq!(d.total_banks(), 8 * 32 * 8 * 16);
+        assert_eq!(d.total_subarrays(), d.total_banks() * 128);
+    }
+}

@@ -1,0 +1,324 @@
+//! Hardware and workload configuration (paper Table 2, Table 3, Table 4).
+//!
+//! Everything the simulator, mapping framework, and area model consume is
+//! parameterized here.  Configurations are plain structs loadable from JSON
+//! (`racam --config cfg.json ...`, via the in-tree [`json`] module) or built
+//! from the presets in [`presets`].
+
+mod dram;
+pub mod json;
+mod periph;
+mod presets;
+mod timing;
+mod workload;
+
+pub use dram::DramConfig;
+pub use periph::PeriphConfig;
+pub use presets::*;
+pub use timing::TimingParams;
+pub use workload::{LlmSpec, MatmulShape, Precision, Scenario, Stage};
+
+
+/// Feature toggles for the three RACAM enhancements, used by the ablation
+/// study (paper Fig. 12 / Fig. 17).  All `true` is the complete design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Features {
+    /// Locality buffers: O(n) row accesses per n-bit multiply instead of O(n²).
+    pub locality_buffer: bool,
+    /// Popcount reduction units: in-bank cross-column reduction.
+    pub popcount_reduction: bool,
+    /// Broadcast units: in-DRAM replication of dynamic operands.
+    pub broadcast_unit: bool,
+}
+
+impl Features {
+    pub const ALL: Features = Features {
+        locality_buffer: true,
+        popcount_reduction: true,
+        broadcast_unit: true,
+    };
+    /// Paper Fig. 12 ablation points, in the order the figure presents them.
+    pub const NO_PR: Features = Features { popcount_reduction: false, ..Features::ALL };
+    pub const NO_PR_BU: Features =
+        Features { popcount_reduction: false, broadcast_unit: false, ..Features::ALL };
+    pub const NO_PR_BU_LB: Features = Features {
+        locality_buffer: false,
+        popcount_reduction: false,
+        broadcast_unit: false,
+    };
+
+    pub fn label(&self) -> String {
+        match (self.popcount_reduction, self.broadcast_unit, self.locality_buffer) {
+            (true, true, true) => "Complete".into(),
+            (false, true, true) => "-PR".into(),
+            (false, false, true) => "-PR-BU".into(),
+            (false, false, false) => "-PR-BU-LB".into(),
+            (p, b, l) => format!("PR={p},BU={b},LB={l}"),
+        }
+    }
+}
+
+impl Default for Features {
+    fn default() -> Self {
+        Features::ALL
+    }
+}
+
+/// Complete RACAM hardware configuration (paper Table 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    pub dram: DramConfig,
+    pub periph: PeriphConfig,
+    pub timing: TimingParams,
+    pub features: Features,
+}
+
+impl HwConfig {
+    /// Total number of PEs across the whole memory system.
+    pub fn total_pes(&self) -> u64 {
+        self.dram.total_banks() * self.periph.pes_per_bank as u64
+    }
+
+    /// Total storage capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.dram.capacity_bits() / 8
+    }
+
+    /// Steady-state latency of one SIMD multiply pass at `prec` with the
+    /// locality buffer: the maximum of the PE serial-add pipeline (n²+4
+    /// cycles) and the 4n-row operand/result stream (§3.3); the row stream
+    /// dominates at the calibrated clocks, giving near-linear precision
+    /// scaling (Fig. 1 / Fig. 14).
+    pub fn mul_pass_ns(&self, prec: Precision) -> f64 {
+        let n = prec.bits() as f64;
+        let pe_ns = (n * n + 4.0) * 1e9 / self.timing.pe_freq_hz;
+        let row_ns = 4.0 * n * self.timing.t_cas_ns;
+        pe_ns.max(row_ns)
+    }
+
+    /// Peak int-`n` multiply-accumulate throughput in MAC/s of the full
+    /// system with locality buffers (calibration anchor: int8 ⇒ 986.9 TOPS,
+    /// paper Table 4, counting 1 MAC = 2 ops).
+    pub fn peak_macs(&self, prec: Precision) -> f64 {
+        self.total_pes() as f64 / (self.mul_pass_ns(prec) * 1e-9)
+    }
+
+    pub fn peak_tops(&self, prec: Precision) -> f64 {
+        2.0 * self.peak_macs(prec) / 1e12
+    }
+
+    /// Validate internal consistency; returns a human-readable error list.
+    pub fn validate(&self) -> std::result::Result<(), Vec<String>> {
+        let mut errs = Vec::new();
+        if self.dram.cols % self.periph.pes_per_bank != 0 {
+            errs.push(format!(
+                "subarray columns ({}) must be a multiple of PEs per bank ({})",
+                self.dram.cols, self.periph.pes_per_bank
+            ));
+        }
+        if self.periph.locality_buffer_rows < 17 && self.features.locality_buffer {
+            errs.push(format!(
+                "locality buffer has {} rows; 17 are required for full reuse of int8 multiplies (2n+1)",
+                self.periph.locality_buffer_rows
+            ));
+        }
+        if self.periph.locality_buffer_cols != self.periph.pes_per_bank {
+            errs.push("locality buffer width must match PE count (one PE per buffer column)".into());
+        }
+        for (name, v) in [
+            ("channels", self.dram.channels),
+            ("ranks", self.dram.ranks),
+            ("devices", self.dram.devices),
+            ("banks", self.dram.banks),
+            ("subarrays", self.dram.subarrays),
+            ("rows", self.dram.rows),
+            ("cols", self.dram.cols),
+        ] {
+            if v == 0 {
+                errs.push(format!("DRAM {name} must be non-zero"));
+            }
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+
+    pub fn from_json(s: &str) -> crate::Result<Self> {
+        let v = json::parse(s).map_err(anyhow::Error::from)?;
+        Self::from_value(&v).map_err(anyhow::Error::from)
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_value().pretty()
+    }
+
+    fn to_value(&self) -> json::Value {
+        use json::Value as V;
+        let d = &self.dram;
+        let p = &self.periph;
+        let t = &self.timing;
+        let f = &self.features;
+        V::obj(vec![
+            (
+                "dram",
+                V::obj(vec![
+                    ("channels", V::Num(d.channels as f64)),
+                    ("ranks", V::Num(d.ranks as f64)),
+                    ("devices", V::Num(d.devices as f64)),
+                    ("banks", V::Num(d.banks as f64)),
+                    ("subarrays", V::Num(d.subarrays as f64)),
+                    ("rows", V::Num(d.rows as f64)),
+                    ("cols", V::Num(d.cols as f64)),
+                    ("device_width_bits", V::Num(d.device_width_bits as f64)),
+                    ("mts", V::Num(d.mts as f64)),
+                    ("global_bitline_bits", V::Num(d.global_bitline_bits as f64)),
+                ]),
+            ),
+            (
+                "periph",
+                V::obj(vec![
+                    ("pes_per_bank", V::Num(p.pes_per_bank as f64)),
+                    ("locality_buffer_rows", V::Num(p.locality_buffer_rows as f64)),
+                    ("locality_buffer_cols", V::Num(p.locality_buffer_cols as f64)),
+                    ("popcount_width", V::Num(p.popcount_width as f64)),
+                    ("accumulator_bits", V::Num(p.accumulator_bits as f64)),
+                    ("bank_broadcast_bits", V::Num(p.bank_broadcast_bits as f64)),
+                    ("col_broadcast_fanout", V::Num(p.col_broadcast_fanout as f64)),
+                ]),
+            ),
+            (
+                "timing",
+                V::obj(vec![
+                    ("t_rcd_ns", V::Num(t.t_rcd_ns)),
+                    ("t_rp_ns", V::Num(t.t_rp_ns)),
+                    ("t_ras_ns", V::Num(t.t_ras_ns)),
+                    ("t_cas_ns", V::Num(t.t_cas_ns)),
+                    ("pe_freq_hz", V::Num(t.pe_freq_hz)),
+                    ("lb_access_cycles", V::Num(t.lb_access_cycles as f64)),
+                    ("popcount_cycles", V::Num(t.popcount_cycles as f64)),
+                    ("parallel_add_cycles", V::Num(t.parallel_add_cycles as f64)),
+                    ("host_add_ns", V::Num(t.host_add_ns)),
+                    ("channel_efficiency", V::Num(t.channel_efficiency)),
+                ]),
+            ),
+            (
+                "features",
+                V::obj(vec![
+                    ("locality_buffer", V::Bool(f.locality_buffer)),
+                    ("popcount_reduction", V::Bool(f.popcount_reduction)),
+                    ("broadcast_unit", V::Bool(f.broadcast_unit)),
+                ]),
+            ),
+        ])
+    }
+
+    fn from_value(v: &json::Value) -> Result<Self, json::JsonError> {
+        let d = v.get("dram")?;
+        let p = v.get("periph")?;
+        let t = v.get("timing")?;
+        let f = v.get("features")?;
+        Ok(HwConfig {
+            dram: DramConfig {
+                channels: d.get("channels")?.as_u32()?,
+                ranks: d.get("ranks")?.as_u32()?,
+                devices: d.get("devices")?.as_u32()?,
+                banks: d.get("banks")?.as_u32()?,
+                subarrays: d.get("subarrays")?.as_u32()?,
+                rows: d.get("rows")?.as_u32()?,
+                cols: d.get("cols")?.as_u32()?,
+                device_width_bits: d.get("device_width_bits")?.as_u32()?,
+                mts: d.get("mts")?.as_u32()?,
+                global_bitline_bits: d.get("global_bitline_bits")?.as_u32()?,
+            },
+            periph: PeriphConfig {
+                pes_per_bank: p.get("pes_per_bank")?.as_u32()?,
+                locality_buffer_rows: p.get("locality_buffer_rows")?.as_u32()?,
+                locality_buffer_cols: p.get("locality_buffer_cols")?.as_u32()?,
+                popcount_width: p.get("popcount_width")?.as_u32()?,
+                accumulator_bits: p.get("accumulator_bits")?.as_u32()?,
+                bank_broadcast_bits: p.get("bank_broadcast_bits")?.as_u32()?,
+                col_broadcast_fanout: p.get("col_broadcast_fanout")?.as_u32()?,
+            },
+            timing: TimingParams {
+                t_rcd_ns: t.get("t_rcd_ns")?.as_f64()?,
+                t_rp_ns: t.get("t_rp_ns")?.as_f64()?,
+                t_ras_ns: t.get("t_ras_ns")?.as_f64()?,
+                t_cas_ns: t.get("t_cas_ns")?.as_f64()?,
+                pe_freq_hz: t.get("pe_freq_hz")?.as_f64()?,
+                lb_access_cycles: t.get("lb_access_cycles")?.as_u32()?,
+                popcount_cycles: t.get("popcount_cycles")?.as_u32()?,
+                parallel_add_cycles: t.get("parallel_add_cycles")?.as_u32()?,
+                host_add_ns: t.get("host_add_ns")?.as_f64()?,
+                channel_efficiency: t.get("channel_efficiency")?.as_f64()?,
+            },
+            features: Features {
+                locality_buffer: f.get("locality_buffer")?.as_bool()?,
+                popcount_reduction: f.get("popcount_reduction")?.as_bool()?,
+                broadcast_unit: f.get("broadcast_unit")?.as_bool()?,
+            },
+        })
+    }
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        presets::racam_paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_is_valid() {
+        racam_paper().validate().unwrap();
+    }
+
+    #[test]
+    fn paper_capacity_is_1024_gib() {
+        let hw = racam_paper();
+        assert_eq!(hw.capacity_bytes(), 1024 * (1u64 << 30));
+    }
+
+    #[test]
+    fn paper_int8_tops_matches_table4() {
+        // Table 4 reports 986.9 int8 TOPS for the RACAM system.
+        let hw = racam_paper();
+        let tops = hw.peak_tops(Precision::Int8);
+        assert!((tops - 986.9).abs() < 1.0, "got {tops}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let hw = racam_paper();
+        let s = hw.to_json();
+        let back = HwConfig::from_json(&s).unwrap();
+        assert_eq!(hw, back);
+    }
+
+    #[test]
+    fn validation_catches_zero_dims() {
+        let mut hw = racam_paper();
+        hw.dram.banks = 0;
+        assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_short_locality_buffer() {
+        let mut hw = racam_paper();
+        hw.periph.locality_buffer_rows = 9;
+        let errs = hw.validate().unwrap_err();
+        assert!(errs.iter().any(|e| e.contains("17")));
+    }
+
+    #[test]
+    fn feature_labels() {
+        assert_eq!(Features::ALL.label(), "Complete");
+        assert_eq!(Features::NO_PR.label(), "-PR");
+        assert_eq!(Features::NO_PR_BU.label(), "-PR-BU");
+        assert_eq!(Features::NO_PR_BU_LB.label(), "-PR-BU-LB");
+    }
+}

@@ -1,0 +1,55 @@
+//! RACAM peripheral-unit configuration (paper Table 2, §3).
+
+
+/// Configuration of the units RACAM adds to a conventional DRAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeriphConfig {
+    /// Bit-serial PEs per bank, one per locality-buffer column (§3.2).
+    pub pes_per_bank: u32,
+    /// Locality buffer rows per bank; 2n+1 rows give full reuse for n-bit
+    /// multiplies, the paper selects 17 (up to int8) (§3.3).
+    pub locality_buffer_rows: u32,
+    /// Locality buffer columns per bank (must equal `pes_per_bank`).
+    pub locality_buffer_cols: u32,
+    /// Popcount reduction unit input width in bits (§3.4); the unit consumes
+    /// one bit-slice of this many columns per cycle.
+    pub popcount_width: u32,
+    /// Accumulator width of the popcount reduction unit, bits (int32 adds).
+    pub accumulator_bits: u32,
+    /// Bank-level broadcast input width in bits (§3.5).
+    pub bank_broadcast_bits: u32,
+    /// Column-level broadcast fan-out (columns written per input bit).
+    pub col_broadcast_fanout: u32,
+}
+
+impl PeriphConfig {
+    /// Maximum operand precision with full bit reuse: buffer must hold
+    /// n rows of op1 + 1 row of the streamed op2 bit + n result rows in
+    /// flight ⇒ 2n+1 rows (paper §3.3).
+    pub fn max_full_reuse_bits(&self) -> u32 {
+        (self.locality_buffer_rows.saturating_sub(1)) / 2
+    }
+
+    /// Locality buffer capacity per bank, bits.
+    pub fn locality_buffer_bits(&self) -> u64 {
+        self.locality_buffer_rows as u64 * self.locality_buffer_cols as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::racam_paper;
+
+    #[test]
+    fn paper_buffer_supports_int8() {
+        let p = racam_paper().periph;
+        assert_eq!(p.locality_buffer_rows, 17);
+        assert_eq!(p.max_full_reuse_bits(), 8);
+    }
+
+    #[test]
+    fn buffer_capacity() {
+        let p = racam_paper().periph;
+        assert_eq!(p.locality_buffer_bits(), 17 * 1024);
+    }
+}

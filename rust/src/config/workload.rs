@@ -1,0 +1,234 @@
+//! Workload specifications (paper Table 3 and §5.3 scenarios).
+
+
+/// Integer operand precision.  RACAM is bit-serial, so precision is a
+/// runtime knob (the `prec[3:0]` control field of Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Int2,
+    Int4,
+    Int8,
+    Int16,
+}
+
+impl Precision {
+    pub fn bits(&self) -> u32 {
+        match self {
+            Precision::Int2 => 2,
+            Precision::Int4 => 4,
+            Precision::Int8 => 8,
+            Precision::Int16 => 16,
+        }
+    }
+
+    pub fn from_bits(bits: u32) -> Option<Self> {
+        match bits {
+            2 => Some(Precision::Int2),
+            4 => Some(Precision::Int4),
+            8 => Some(Precision::Int8),
+            16 => Some(Precision::Int16),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::Int2 => "int2",
+            Precision::Int4 => "int4",
+            Precision::Int8 => "int8",
+            Precision::Int16 => "int16",
+        }
+    }
+}
+
+/// A matrix multiplication `O[M,N] = I[M,K] × W[K,N]`.
+///
+/// `weight_static` marks W as a static operand (model weight) that is
+/// pre-transposed and laid out in DRAM offline (§2.2), i.e. it costs no
+/// runtime I/O on the PIM systems.  GEMV is the `m == 1` special case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MatmulShape {
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+    pub prec: Precision,
+    pub weight_static: bool,
+    /// The dynamic input is already resident in PIM DRAM (it is the output
+    /// of the previous kernel); it relays out over the internal fabric
+    /// instead of crossing the host channel when broadcast units exist.
+    pub input_resident: bool,
+}
+
+impl MatmulShape {
+    pub fn new(m: u64, k: u64, n: u64, prec: Precision) -> Self {
+        MatmulShape { m, k, n, prec, weight_static: true, input_resident: false }
+    }
+
+    pub fn dynamic(m: u64, k: u64, n: u64, prec: Precision) -> Self {
+        MatmulShape { m, k, n, prec, weight_static: false, input_resident: false }
+    }
+
+    /// Mark the input as PIM-resident (inter-kernel dataflow).
+    pub fn resident(mut self) -> Self {
+        self.input_resident = true;
+        self
+    }
+
+    pub fn is_gemv(&self) -> bool {
+        self.m == 1 || self.n == 1
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        self.m * self.k * self.n
+    }
+
+    /// 2·MACs, the FLOP-equivalent op count used for TOPS numbers.
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Bytes of the dynamic input operand I.
+    pub fn input_bytes(&self) -> u64 {
+        (self.m * self.k * self.prec.bits() as u64).div_ceil(8)
+    }
+
+    /// Bytes of W (counts as dynamic I/O only when `!weight_static`).
+    pub fn weight_bytes(&self) -> u64 {
+        (self.k * self.n * self.prec.bits() as u64).div_ceil(8)
+    }
+
+    /// Bytes of the int32 output matrix.
+    pub fn output_bytes(&self) -> u64 {
+        self.m * self.n * 4
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}x{}", self.m, self.k, self.n)
+    }
+}
+
+/// Transformer hyper-parameters of one evaluated LLM (paper Table 3).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LlmSpec {
+    pub name: String,
+    pub layers: u32,
+    pub hidden: u64,
+    pub heads: u32,
+    /// KV heads (grouped-query attention); equals `heads` for MHA models.
+    pub kv_heads: u32,
+    /// FFN intermediate size (4·hidden for GPT-style, 3.5·hidden-ish for Llama).
+    pub ffn: u64,
+    /// Gated FFN (SwiGLU) has three projection matmuls instead of two.
+    pub gated_ffn: bool,
+    pub vocab: u64,
+    pub prec: Precision,
+}
+
+impl LlmSpec {
+    pub fn head_dim(&self) -> u64 {
+        self.hidden / self.heads as u64
+    }
+
+    /// Total weight parameter count of the matmul weights (attention + FFN);
+    /// embedding/vocab projection included once.
+    pub fn weight_params(&self) -> u64 {
+        let h = self.hidden;
+        let kv = self.kv_heads as u64 * self.head_dim();
+        let attn = h * h + 2 * h * kv + h * h; // Q,K,V,O
+        let ffn = if self.gated_ffn { 3 * h * self.ffn } else { 2 * h * self.ffn };
+        self.layers as u64 * (attn + ffn) + self.vocab * h
+    }
+
+    /// Weight footprint in bytes at the model's precision.
+    pub fn weight_bytes(&self) -> u64 {
+        self.weight_params() * self.prec.bits() as u64 / 8
+    }
+}
+
+/// Inference stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Prompt processing: sequence-parallel GEMMs, compute-bound.
+    Prefill,
+    /// Token generation with KV cache: GEMVs, memory-bound.
+    Decode,
+}
+
+impl Stage {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Stage::Prefill => "prefill",
+            Stage::Decode => "decode",
+        }
+    }
+}
+
+/// End-to-end inference scenario (paper §5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub prompt_tokens: u64,
+    pub output_tokens: u64,
+}
+
+impl Scenario {
+    /// "Prefill heavy": 1024 prompt + 4096 output tokens.
+    pub const CODE_GENERATION: Scenario =
+        Scenario { name: "Code Generation", prompt_tokens: 1024, output_tokens: 4096 };
+    /// "Decode heavy": 8192 prompt + 256 output tokens.
+    pub const CONTEXT_UNDERSTANDING: Scenario =
+        Scenario { name: "Context Understanding", prompt_tokens: 8192, output_tokens: 256 };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{gpt3_175b, gpt3_6_7b, llama3_70b, llama3_8b};
+
+    #[test]
+    fn precision_roundtrip() {
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8, Precision::Int16] {
+            assert_eq!(Precision::from_bits(p.bits()), Some(p));
+        }
+        assert_eq!(Precision::from_bits(3), None);
+    }
+
+    #[test]
+    fn gemv_detection() {
+        assert!(MatmulShape::new(1, 4096, 4096, Precision::Int8).is_gemv());
+        assert!(!MatmulShape::new(64, 64, 64, Precision::Int8).is_gemv());
+    }
+
+    #[test]
+    fn shape_byte_math() {
+        let s = MatmulShape::new(4, 16, 8, Precision::Int4);
+        assert_eq!(s.input_bytes(), 4 * 16 / 2);
+        assert_eq!(s.weight_bytes(), 16 * 8 / 2);
+        assert_eq!(s.output_bytes(), 4 * 8 * 4);
+        assert_eq!(s.macs(), 4 * 16 * 8);
+    }
+
+    #[test]
+    fn model_parameter_counts_are_plausible() {
+        // Param counts should land near the models' nominal sizes.
+        let cases = [
+            (gpt3_6_7b(), 6.7e9, 0.15),
+            (gpt3_175b(), 175e9, 0.15),
+            (llama3_8b(), 8e9, 0.20),
+            (llama3_70b(), 70e9, 0.15),
+        ];
+        for (spec, nominal, tol) in cases {
+            let p = spec.weight_params() as f64;
+            let rel = (p - nominal).abs() / nominal;
+            assert!(rel < tol, "{}: {p:.3e} vs nominal {nominal:.3e} (rel {rel:.2})", spec.name);
+        }
+    }
+
+    #[test]
+    fn gpt3_175b_weights_exceed_h100_hbm() {
+        // This drives the paper's offloading story: 175B int8 > 80 GB.
+        assert!(gpt3_175b().weight_bytes() > 80 * (1u64 << 30));
+        assert!(gpt3_6_7b().weight_bytes() < 80 * (1u64 << 30));
+    }
+}

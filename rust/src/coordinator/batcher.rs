@@ -1,0 +1,82 @@
+//! FCFS dynamic batcher: groups pending requests up to a batch-size cap,
+//! admitting new arrivals between decode iterations (continuous batching à
+//! la vLLM, degenerating to the paper's batch-size-1 setting when cap = 1).
+
+use super::server::Request;
+use std::collections::VecDeque;
+
+/// A scheduled batch of request ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Batch {
+    pub request_ids: Vec<u64>,
+}
+
+/// First-come-first-served batcher with a maximum batch size.
+#[derive(Debug)]
+pub struct FcfsBatcher {
+    max_batch: usize,
+    queue: VecDeque<Request>,
+}
+
+impl FcfsBatcher {
+    pub fn new(max_batch: usize) -> Self {
+        assert!(max_batch >= 1);
+        FcfsBatcher { max_batch, queue: VecDeque::new() }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admit up to `slots_free` additional requests (bounded by max batch).
+    pub fn admit(&mut self, running: usize) -> Vec<Request> {
+        let slots = self.max_batch.saturating_sub(running);
+        let take = slots.min(self.queue.len());
+        self.queue.drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::Request;
+
+    fn req(id: u64) -> Request {
+        Request { id, prompt: vec![1, 2], max_new_tokens: 4 }
+    }
+
+    #[test]
+    fn fcfs_order_preserved() {
+        let mut b = FcfsBatcher::new(2);
+        b.submit(req(1));
+        b.submit(req(2));
+        b.submit(req(3));
+        let first = b.admit(0);
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn respects_running_slots() {
+        let mut b = FcfsBatcher::new(4);
+        for i in 0..6 {
+            b.submit(req(i));
+        }
+        assert_eq!(b.admit(3).len(), 1); // only one free slot
+        assert_eq!(b.admit(0).len(), 4);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn batch_size_one_is_paper_setting() {
+        let mut b = FcfsBatcher::new(1);
+        b.submit(req(1));
+        b.submit(req(2));
+        assert_eq!(b.admit(0).len(), 1);
+        assert_eq!(b.admit(1).len(), 0);
+    }
+}

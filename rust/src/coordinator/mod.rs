@@ -1,0 +1,15 @@
+//! Serving coordinator: the Python-free request path.
+//!
+//! A [`Server`] owns (a) a token engine — either the AOT-compiled HLO
+//! decode step executing through PJRT, or a synthetic engine for tests —
+//! and (b) the RACAM timing pipeline (mapping engine over the paper's
+//! hardware config), and drives batched requests token by token, reporting
+//! real generated tokens alongside simulated RACAM/H100/Proteus latencies.
+
+mod batcher;
+mod engine;
+mod server;
+
+pub use batcher::{Batch, FcfsBatcher};
+pub use engine::{HloDecodeEngine, SyntheticEngine, TokenEngine};
+pub use server::{Request, RequestResult, Server, ServerReport};

@@ -1,0 +1,223 @@
+//! DRAM command protocol, including RACAM's extended PIM commands and their
+//! instruction encodings (paper Table 1).
+//!
+//! PIM commands are encoded into previously-unused command encodings; the
+//! opcode travels on the command bus and operand/control fields are
+//! transferred over the address bus across multiple cycles (§3.1). `encode`
+//! / `decode` implement exactly the Table 1 format and round-trip.
+
+
+/// Opcode field values of Table 1 (6 bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum PimOpcode {
+    BroadcastEnable = 0b000000,
+    BroadcastDisable = 0b000001,
+    PimEnable = 0b000010,
+    PimDisable = 0b000011,
+    PimAdd = 0b010000,
+    PimMul = 0b010001,
+    PimMulRed = 0b010010,
+    PimAddParallel = 0b010011,
+}
+
+impl PimOpcode {
+    pub fn from_bits(b: u8) -> Option<Self> {
+        use PimOpcode::*;
+        match b {
+            0b000000 => Some(BroadcastEnable),
+            0b000001 => Some(BroadcastDisable),
+            0b000010 => Some(PimEnable),
+            0b000011 => Some(PimDisable),
+            0b010000 => Some(PimAdd),
+            0b010001 => Some(PimMul),
+            0b010010 => Some(PimMulRed),
+            0b010011 => Some(PimAddParallel),
+            _ => None,
+        }
+    }
+}
+
+/// A command on the (extended) DRAM command interface.
+///
+/// Register operands `r_*` name vertically-laid-out operand base rows within
+/// the active block; `prec` is the 4-bit runtime precision control field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DramCommand {
+    /// Standard row activation.
+    Act { bank: u32, row: u32 },
+    /// Standard precharge.
+    Pre { bank: u32 },
+    /// Standard column read (one burst).
+    Rd { bank: u32, col: u32 },
+    /// Standard column write (one burst).
+    Wr { bank: u32, col: u32 },
+    /// Enable PIM mode via MRS write.
+    PimEnable,
+    /// Disable PIM mode, restore normal decoding.
+    PimDisable,
+    /// Enable broadcast-write mode; `bank_bc`/`col_bc` select which demux
+    /// levels replicate (Table 1 control field).
+    BroadcastEnable { bank_bc: bool, col_bc: bool },
+    BroadcastDisable,
+    /// Bit-serial addition: `r_dst = r_src1 + r_src2` at `prec` bits.
+    PimAdd { r_dst: u8, r_src1: u8, r_src2: u8, prec: u8 },
+    /// Bit-serial multiplication.
+    PimMul { r_dst: u8, r_src1: u8, r_src2: u8, prec: u8 },
+    /// Fused multiply + column-wise popcount reduction.
+    PimMulRed { r_dst: u8, r_src1: u8, r_src2: u8, prec: u8 },
+    /// Bit-parallel int32 add in the popcount reduction unit's accumulator.
+    PimAddParallel { r_dst: u8, r_src1: u8, r_src2: u8 },
+}
+
+impl DramCommand {
+    pub fn is_pim(&self) -> bool {
+        !matches!(
+            self,
+            DramCommand::Act { .. }
+                | DramCommand::Pre { .. }
+                | DramCommand::Rd { .. }
+                | DramCommand::Wr { .. }
+        )
+    }
+}
+
+/// Encode a PIM command into its Table 1 wire format:
+/// `[5:0]` opcode, `[13:6]` dst, `[21:14]` src1, `[29:22]` src2,
+/// `[33:30]` prec / control bits.
+///
+/// Standard commands (`Act`/`Pre`/`Rd`/`Wr`) are not PIM-encoded; `encode`
+/// returns `None` for them.
+pub fn encode(cmd: &DramCommand) -> Option<u64> {
+    use DramCommand::*;
+    let pack = |op: PimOpcode, dst: u8, s1: u8, s2: u8, ctl: u8| -> u64 {
+        (op as u64)
+            | (dst as u64) << 6
+            | (s1 as u64) << 14
+            | (s2 as u64) << 22
+            | (ctl as u64 & 0xF) << 30
+    };
+    Some(match *cmd {
+        PimEnable => pack(PimOpcode::PimEnable, 0, 0, 0, 0),
+        PimDisable => pack(PimOpcode::PimDisable, 0, 0, 0, 0),
+        BroadcastEnable { bank_bc, col_bc } => {
+            pack(PimOpcode::BroadcastEnable, 0, 0, 0, (bank_bc as u8) | (col_bc as u8) << 1)
+        }
+        BroadcastDisable => pack(PimOpcode::BroadcastDisable, 0, 0, 0, 0),
+        PimAdd { r_dst, r_src1, r_src2, prec } => {
+            pack(PimOpcode::PimAdd, r_dst, r_src1, r_src2, prec)
+        }
+        PimMul { r_dst, r_src1, r_src2, prec } => {
+            pack(PimOpcode::PimMul, r_dst, r_src1, r_src2, prec)
+        }
+        PimMulRed { r_dst, r_src1, r_src2, prec } => {
+            pack(PimOpcode::PimMulRed, r_dst, r_src1, r_src2, prec)
+        }
+        PimAddParallel { r_dst, r_src1, r_src2 } => {
+            pack(PimOpcode::PimAddParallel, r_dst, r_src1, r_src2, 0)
+        }
+        Act { .. } | Pre { .. } | Rd { .. } | Wr { .. } => return None,
+    })
+}
+
+/// Decode a Table 1 wire word back into a command.
+pub fn decode(word: u64) -> Option<DramCommand> {
+    let op = PimOpcode::from_bits((word & 0x3F) as u8)?;
+    let dst = ((word >> 6) & 0xFF) as u8;
+    let s1 = ((word >> 14) & 0xFF) as u8;
+    let s2 = ((word >> 22) & 0xFF) as u8;
+    let ctl = ((word >> 30) & 0xF) as u8;
+    use PimOpcode::*;
+    Some(match op {
+        PimEnable => DramCommand::PimEnable,
+        PimDisable => DramCommand::PimDisable,
+        BroadcastEnable => {
+            DramCommand::BroadcastEnable { bank_bc: ctl & 1 == 1, col_bc: ctl & 2 == 2 }
+        }
+        BroadcastDisable => DramCommand::BroadcastDisable,
+        PimAdd => DramCommand::PimAdd { r_dst: dst, r_src1: s1, r_src2: s2, prec: ctl },
+        PimMul => DramCommand::PimMul { r_dst: dst, r_src1: s1, r_src2: s2, prec: ctl },
+        PimMulRed => DramCommand::PimMulRed { r_dst: dst, r_src1: s1, r_src2: s2, prec: ctl },
+        PimAddParallel => DramCommand::PimAddParallel { r_dst: dst, r_src1: s1, r_src2: s2 },
+    })
+}
+
+/// Number of address-bus cycles needed to transfer a command's operand and
+/// control fields (fields are sent over the address bus across multiple
+/// cycles, §3.1). DDR5 CA bus is 14 bits per edge.
+pub fn address_bus_cycles(cmd: &DramCommand) -> u32 {
+    match encode(cmd) {
+        None => 1, // standard command: single CA slot
+        Some(word) => {
+            let payload_bits = 64 - word.leading_zeros().min(63);
+            payload_bits.div_ceil(14).max(1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_pim_commands() -> Vec<DramCommand> {
+        use DramCommand::*;
+        vec![
+            PimEnable,
+            PimDisable,
+            BroadcastEnable { bank_bc: true, col_bc: false },
+            BroadcastEnable { bank_bc: false, col_bc: true },
+            BroadcastEnable { bank_bc: true, col_bc: true },
+            BroadcastDisable,
+            PimAdd { r_dst: 3, r_src1: 7, r_src2: 11, prec: 8 },
+            PimMul { r_dst: 0, r_src1: 255, r_src2: 1, prec: 4 },
+            PimMulRed { r_dst: 9, r_src1: 2, r_src2: 200, prec: 2 },
+            PimAddParallel { r_dst: 1, r_src1: 2, r_src2: 3 },
+        ]
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for cmd in all_pim_commands() {
+            let word = encode(&cmd).expect("pim commands encode");
+            assert_eq!(decode(word), Some(cmd), "roundtrip failed for {cmd:?}");
+        }
+    }
+
+    #[test]
+    fn table1_opcodes() {
+        // Pin the exact Table 1 opcode assignments.
+        assert_eq!(PimOpcode::BroadcastEnable as u8, 0b000000);
+        assert_eq!(PimOpcode::BroadcastDisable as u8, 0b000001);
+        assert_eq!(PimOpcode::PimEnable as u8, 0b000010);
+        assert_eq!(PimOpcode::PimDisable as u8, 0b000011);
+        assert_eq!(PimOpcode::PimAdd as u8, 0b010000);
+        assert_eq!(PimOpcode::PimMul as u8, 0b010001);
+        assert_eq!(PimOpcode::PimMulRed as u8, 0b010010);
+        assert_eq!(PimOpcode::PimAddParallel as u8, 0b010011);
+    }
+
+    #[test]
+    fn standard_commands_do_not_pim_encode() {
+        assert_eq!(encode(&DramCommand::Act { bank: 0, row: 1 }), None);
+        assert_eq!(encode(&DramCommand::Pre { bank: 0 }), None);
+    }
+
+    #[test]
+    fn unknown_opcode_decodes_to_none() {
+        assert_eq!(decode(0b111111), None);
+    }
+
+    #[test]
+    fn multi_cycle_address_transfer() {
+        // A full pim_mul carries 34 payload bits -> 3 CA cycles at 14b.
+        let c = DramCommand::PimMul { r_dst: 200, r_src1: 200, r_src2: 200, prec: 8 };
+        assert_eq!(address_bus_cycles(&c), 3);
+        assert_eq!(address_bus_cycles(&DramCommand::Act { bank: 0, row: 0 }), 1);
+    }
+
+    #[test]
+    fn is_pim_classification() {
+        assert!(DramCommand::PimEnable.is_pim());
+        assert!(!DramCommand::Rd { bank: 0, col: 0 }.is_pim());
+    }
+}

@@ -1,0 +1,150 @@
+//! DRAM hierarchy geometry: physical addresses and the block ↔ subarray
+//! projection the mapping framework relies on (paper §4: "the mapping
+//! framework views the subarrays of DRAM as many vertically-divided Blocks").
+
+use crate::config::DramConfig;
+
+/// A fully-qualified physical location in the DRAM hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PhysAddr {
+    pub channel: u32,
+    pub rank: u32,
+    pub device: u32,
+    pub bank: u32,
+    pub subarray: u32,
+    pub row: u32,
+    pub col: u32,
+}
+
+/// A *block*: one vertical slice of one subarray, `pe_width` columns wide.
+/// Blocks are the finest spatial mapping unit (level `A`); the projection to
+/// (subarray, column range) is what `Geometry::project_block` computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockId {
+    pub channel: u32,
+    pub rank: u32,
+    pub device: u32,
+    pub bank: u32,
+    /// Block index within the bank: `subarray * slices_per_subarray + slice`.
+    pub block: u32,
+}
+
+/// Geometry calculator for a DRAM configuration plus the PE width that
+/// determines block slicing.
+#[derive(Debug, Clone, Copy)]
+pub struct Geometry {
+    pub dram: DramConfig,
+    /// Width of one block in columns (= PEs per bank).
+    pub pe_width: u32,
+}
+
+impl Geometry {
+    pub fn new(dram: DramConfig, pe_width: u32) -> Self {
+        assert!(pe_width > 0 && dram.cols % pe_width == 0, "cols must divide into PE-width slices");
+        Geometry { dram, pe_width }
+    }
+
+    /// Vertical slices per subarray.
+    pub fn slices_per_subarray(&self) -> u32 {
+        self.dram.cols / self.pe_width
+    }
+
+    /// Blocks per bank (level-A count for the mapping framework).
+    pub fn blocks_per_bank(&self) -> u32 {
+        self.dram.subarrays * self.slices_per_subarray()
+    }
+
+    /// Total blocks in the system.
+    pub fn total_blocks(&self) -> u64 {
+        self.dram.total_banks() * self.blocks_per_bank() as u64
+    }
+
+    /// Project a block id to its (subarray, first column) location.
+    pub fn project_block(&self, b: BlockId) -> (u32, u32) {
+        let slices = self.slices_per_subarray();
+        let subarray = b.block / slices;
+        let col0 = (b.block % slices) * self.pe_width;
+        (subarray, col0)
+    }
+
+    /// Inverse of [`Self::project_block`].
+    pub fn block_of(&self, channel: u32, rank: u32, device: u32, bank: u32, subarray: u32, col: u32) -> BlockId {
+        let slices = self.slices_per_subarray();
+        BlockId { channel, rank, device, bank, block: subarray * slices + col / self.pe_width }
+    }
+
+    /// Linear index of a block across the whole system (row-major over
+    /// channel → rank → device → bank → block).
+    pub fn linear_block(&self, b: BlockId) -> u64 {
+        let d = &self.dram;
+        ((((b.channel as u64 * d.ranks as u64 + b.rank as u64) * d.devices as u64
+            + b.device as u64)
+            * d.banks as u64
+            + b.bank as u64)
+            * self.blocks_per_bank() as u64)
+            + b.block as u64
+    }
+
+    /// Decompose a linear block index back into a `BlockId`.
+    pub fn block_from_linear(&self, mut idx: u64) -> BlockId {
+        let bpb = self.blocks_per_bank() as u64;
+        let d = &self.dram;
+        let block = (idx % bpb) as u32;
+        idx /= bpb;
+        let bank = (idx % d.banks as u64) as u32;
+        idx /= d.banks as u64;
+        let device = (idx % d.devices as u64) as u32;
+        idx /= d.devices as u64;
+        let rank = (idx % d.ranks as u64) as u32;
+        idx /= d.ranks as u64;
+        let channel = idx as u32;
+        BlockId { channel, rank, device, bank, block }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{racam_paper, racam_tiny};
+
+    fn geo() -> Geometry {
+        let hw = racam_paper();
+        Geometry::new(hw.dram, hw.periph.pes_per_bank)
+    }
+
+    #[test]
+    fn paper_block_counts() {
+        let g = geo();
+        assert_eq!(g.slices_per_subarray(), 16);
+        assert_eq!(g.blocks_per_bank(), 128 * 16);
+        assert_eq!(g.total_blocks(), 8 * 32 * 8 * 16 * 2048);
+    }
+
+    #[test]
+    fn block_projection_roundtrip() {
+        let g = geo();
+        for block in [0u32, 1, 15, 16, 17, 2047] {
+            let b = BlockId { channel: 3, rank: 11, device: 2, bank: 9, block };
+            let (sa, col0) = g.project_block(b);
+            assert!(sa < g.dram.subarrays && col0 < g.dram.cols);
+            assert_eq!(g.block_of(3, 11, 2, 9, sa, col0), b);
+        }
+    }
+
+    #[test]
+    fn linear_roundtrip() {
+        let hw = racam_tiny();
+        let g = Geometry::new(hw.dram, hw.periph.pes_per_bank);
+        for idx in 0..g.total_blocks() {
+            let b = g.block_from_linear(idx);
+            assert_eq!(g.linear_block(b), idx);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "PE-width")]
+    fn rejects_non_dividing_width() {
+        let hw = racam_tiny();
+        Geometry::new(hw.dram, 100);
+    }
+}

@@ -1,0 +1,22 @@
+//! DRAM substrate: hierarchy geometry, functional bit-cell storage with the
+//! vertical (transposed) layout bit-serial PIM requires, a DDR5 command
+//! timing engine, and the SALP-MASA subarray-overlap model (paper §2.1, §3.3).
+//!
+//! This is the substrate the paper's evaluation rests on (it validates
+//! against Ramulator); here it is a self-contained engine that produces the
+//! same aggregate quantities RACAM's analytical model consumes: ACT/PRE
+//! counts, row-stream latencies, and channel bandwidth.
+
+mod commands;
+mod geometry;
+mod reliability;
+mod salp;
+mod subarray;
+mod timing;
+
+pub use commands::{decode, encode, DramCommand, PimOpcode};
+pub use reliability::{DisturbanceSpec, ReliabilityModel, ReliabilityVerdict};
+pub use geometry::{BlockId, Geometry, PhysAddr};
+pub use salp::SalpScheduler;
+pub use subarray::{Subarray, VerticalLane};
+pub use timing::{CommandTimer, TimingStats};

@@ -1,0 +1,109 @@
+//! SALP-MASA subarray-level parallelism model (paper §3.3, citing Kim et
+//! al. [41]): rows that will be accessed successively are mapped to
+//! *different* subarrays so their activations overlap, saturating the global
+//! bitline and giving the locality buffer its highest bandwidth.
+
+use crate::config::TimingParams;
+
+/// Scheduler that decides whether a stream of row accesses can be overlapped
+/// (consecutive accesses hit different subarrays) and prices the stream.
+#[derive(Debug, Clone)]
+pub struct SalpScheduler {
+    t: TimingParams,
+    /// Number of subarrays available for round-robin row placement.
+    subarrays: u32,
+    /// When false (ablation), every access pays a full ACT–PRE cycle.
+    enabled: bool,
+}
+
+impl SalpScheduler {
+    pub fn new(t: TimingParams, subarrays: u32) -> Self {
+        SalpScheduler { t, subarrays, enabled: true }
+    }
+
+    pub fn disabled(t: TimingParams, subarrays: u32) -> Self {
+        SalpScheduler { t, subarrays, enabled: false }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Assign `n_rows` successive rows round-robin across subarrays; returns
+    /// the subarray index per row (the data-layout side of §3.3).
+    pub fn place_rows(&self, n_rows: u32) -> Vec<u32> {
+        (0..n_rows).map(|i| i % self.subarrays).collect()
+    }
+
+    /// Latency in ns of streaming `n_rows` successive row accesses into the
+    /// locality buffer, including the pipeline-fill tRCD.
+    ///
+    /// With SALP (and >1 subarray) the activations pipeline: one tRCD of
+    /// fill latency, then one global-bitline beat per row.  Without it, each
+    /// access is a serial ACT–PRE.
+    pub fn stream_ns(&self, n_rows: u64) -> f64 {
+        if n_rows == 0 {
+            return 0.0;
+        }
+        if self.enabled && self.subarrays > 1 {
+            self.t.salp_stream_ns(n_rows)
+        } else {
+            self.t.serial_rows_ns(n_rows)
+        }
+    }
+
+    /// Steady-state stream latency: when passes run back-to-back, the next
+    /// pass's activations overlap the current pass's beats, so the tRCD
+    /// fill is paid once per kernel (folded into the kernel overhead by
+    /// the software model), not once per pass.
+    pub fn steady_stream_ns(&self, n_rows: u64) -> f64 {
+        if self.enabled && self.subarrays > 1 {
+            n_rows as f64 * self.t.t_cas_ns
+        } else {
+            self.t.serial_rows_ns(n_rows)
+        }
+    }
+
+    /// Speedup of the overlapped stream vs. serial accesses.
+    pub fn overlap_speedup(&self, n_rows: u64) -> f64 {
+        self.t.serial_rows_ns(n_rows) / self.stream_ns(n_rows).max(f64::MIN_POSITIVE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ddr5_5200_timing;
+
+    #[test]
+    fn placement_round_robins() {
+        let s = SalpScheduler::new(ddr5_5200_timing(), 4);
+        assert_eq!(s.place_rows(6), vec![0, 1, 2, 3, 0, 1]);
+        // Consecutive rows never share a subarray (the property §3.3 needs).
+        let p = s.place_rows(64);
+        for w in p.windows(2) {
+            assert_ne!(w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn overlap_beats_serial_and_grows() {
+        let s = SalpScheduler::new(ddr5_5200_timing(), 128);
+        assert!(s.overlap_speedup(4) > 1.0);
+        assert!(s.overlap_speedup(64) > s.overlap_speedup(4));
+    }
+
+    #[test]
+    fn disabled_scheduler_serializes() {
+        let t = ddr5_5200_timing();
+        let s = SalpScheduler::disabled(t, 128);
+        assert!((s.stream_ns(16) - t.serial_rows_ns(16)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_subarray_cannot_overlap() {
+        let t = ddr5_5200_timing();
+        let s = SalpScheduler::new(t, 1);
+        assert!((s.stream_ns(16) - t.serial_rows_ns(16)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,216 @@
+//! Functional bit-cell storage for one subarray, with the vertically
+//! transposed layout bit-serial computation requires (paper §2.2).
+//!
+//! Rows are stored as packed `u64` words so the functional executor can
+//! operate on 64 columns at a time — this word-packing is the simulator's
+//! hot-path representation (see `pim::exec`).
+
+/// One DRAM subarray: `rows × cols` bit cells.
+///
+/// Row-major bit-plane storage: `data[row]` is the row's bits packed LSB
+/// first into `u64` words.
+#[derive(Debug, Clone)]
+pub struct Subarray {
+    rows: u32,
+    cols: u32,
+    words_per_row: usize,
+    data: Vec<Vec<u64>>,
+    /// Currently open (activated) row, if any — used for ACT/PRE accounting.
+    open_row: Option<u32>,
+}
+
+impl Subarray {
+    pub fn new(rows: u32, cols: u32) -> Self {
+        let words_per_row = (cols as usize).div_ceil(64);
+        Subarray {
+            rows,
+            cols,
+            words_per_row,
+            data: vec![vec![0u64; words_per_row]; rows as usize],
+            open_row: None,
+        }
+    }
+
+    pub fn rows(&self) -> u32 {
+        self.rows
+    }
+
+    pub fn cols(&self) -> u32 {
+        self.cols
+    }
+
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    pub fn open_row(&self) -> Option<u32> {
+        self.open_row
+    }
+
+    /// Assert the wordline (ACT). Returns `true` if this was a row switch
+    /// (i.e. a real activation, possibly preceded by a precharge).
+    pub fn activate(&mut self, row: u32) -> bool {
+        assert!(row < self.rows, "row {row} out of range");
+        if self.open_row == Some(row) {
+            false
+        } else {
+            self.open_row = Some(row);
+            true
+        }
+    }
+
+    /// Precharge (close) the open row.
+    pub fn precharge(&mut self) {
+        self.open_row = None;
+    }
+
+    /// Read the full row as packed words (sense amplifiers → row buffer).
+    pub fn read_row(&self, row: u32) -> &[u64] {
+        &self.data[row as usize]
+    }
+
+    /// Overwrite the full row.
+    pub fn write_row(&mut self, row: u32, words: &[u64]) {
+        assert_eq!(words.len(), self.words_per_row);
+        self.data[row as usize].copy_from_slice(words);
+        self.mask_tail(row);
+    }
+
+    /// Read a single bit cell.
+    pub fn get(&self, row: u32, col: u32) -> bool {
+        assert!(col < self.cols);
+        (self.data[row as usize][(col / 64) as usize] >> (col % 64)) & 1 == 1
+    }
+
+    /// Write a single bit cell.
+    pub fn set(&mut self, row: u32, col: u32, v: bool) {
+        assert!(col < self.cols);
+        let w = &mut self.data[row as usize][(col / 64) as usize];
+        let mask = 1u64 << (col % 64);
+        if v {
+            *w |= mask;
+        } else {
+            *w &= !mask;
+        }
+    }
+
+    /// Zero any bits beyond `cols` in the last word (keeps popcounts exact).
+    fn mask_tail(&mut self, row: u32) {
+        let rem = self.cols as usize % 64;
+        if rem != 0 {
+            let last = self.words_per_row - 1;
+            self.data[row as usize][last] &= (1u64 << rem) - 1;
+        }
+    }
+
+    /// Store `value`'s low `bits` bits vertically at `col`, starting at
+    /// `row0` (bit *i* of the value lands in row `row0 + i`): the transposed
+    /// layout of §2.2. Two's-complement: callers pass the raw bit pattern.
+    pub fn store_vertical(&mut self, col: u32, row0: u32, value: u64, bits: u32) {
+        assert!(row0 + bits <= self.rows, "vertical operand exceeds subarray rows");
+        for i in 0..bits {
+            self.set(row0 + i, col, (value >> i) & 1 == 1);
+        }
+    }
+
+    /// Load a vertically-stored `bits`-bit value at `col` starting `row0`.
+    pub fn load_vertical(&self, col: u32, row0: u32, bits: u32) -> u64 {
+        let mut v = 0u64;
+        for i in 0..bits {
+            if self.get(row0 + i, col) {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
+    /// A lane view for bulk vertical stores across a column range.
+    pub fn lane(&mut self, col0: u32, width: u32) -> VerticalLane<'_> {
+        assert!(col0 + width <= self.cols);
+        VerticalLane { sa: self, col0, width }
+    }
+}
+
+/// Helper for writing/reading vectors of vertically-laid-out operands over a
+/// contiguous column range (one operand element per column).
+pub struct VerticalLane<'a> {
+    sa: &'a mut Subarray,
+    col0: u32,
+    width: u32,
+}
+
+impl VerticalLane<'_> {
+    /// Store `values[j]` (low `bits` bits) at column `col0 + j`, rows
+    /// `row0..row0+bits`.
+    pub fn store(&mut self, row0: u32, values: &[u64], bits: u32) {
+        assert!(values.len() as u32 <= self.width, "lane overflow");
+        for (j, &v) in values.iter().enumerate() {
+            self.sa.store_vertical(self.col0 + j as u32, row0, v, bits);
+        }
+    }
+
+    /// Load `count` values back out.
+    pub fn load(&self, row0: u32, count: u32, bits: u32) -> Vec<u64> {
+        assert!(count <= self.width);
+        (0..count).map(|j| self.sa.load_vertical(self.col0 + j, row0, bits)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_bit_set_get() {
+        let mut sa = Subarray::new(8, 100);
+        sa.set(3, 77, true);
+        assert!(sa.get(3, 77));
+        assert!(!sa.get(3, 76));
+        sa.set(3, 77, false);
+        assert!(!sa.get(3, 77));
+    }
+
+    #[test]
+    fn vertical_roundtrip() {
+        let mut sa = Subarray::new(32, 64);
+        for (col, v) in [(0u32, 0xA5u64), (13, 0xFF), (63, 0x00), (7, 0x5A)] {
+            sa.store_vertical(col, 4, v, 8);
+            assert_eq!(sa.load_vertical(col, 4, 8), v, "col {col}");
+        }
+    }
+
+    #[test]
+    fn lane_bulk_roundtrip() {
+        let mut sa = Subarray::new(16, 128);
+        let vals: Vec<u64> = (0..100).map(|i| (i * 7) % 256).collect();
+        sa.lane(10, 110).store(0, &vals, 8);
+        let got = sa.lane(10, 110).load(0, 100, 8);
+        assert_eq!(got, vals);
+    }
+
+    #[test]
+    fn activation_tracking() {
+        let mut sa = Subarray::new(8, 64);
+        assert!(sa.activate(2)); // cold activation
+        assert!(!sa.activate(2)); // row already open
+        assert!(sa.activate(5)); // row switch
+        sa.precharge();
+        assert_eq!(sa.open_row(), None);
+        assert!(sa.activate(5));
+    }
+
+    #[test]
+    fn tail_masking_on_full_row_write() {
+        let mut sa = Subarray::new(2, 70); // 70 cols => 2 words, 6-bit tail
+        sa.write_row(0, &[u64::MAX, u64::MAX]);
+        let w = sa.read_row(0);
+        assert_eq!(w[1].count_ones(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds subarray rows")]
+    fn vertical_overflow_panics() {
+        let mut sa = Subarray::new(8, 8);
+        sa.store_vertical(0, 4, 0xFF, 8);
+    }
+}

@@ -1,0 +1,169 @@
+//! DDR5 command timing engine: accounts nanoseconds and ACT/PRE statistics
+//! for command streams, the quantities the paper validates against Ramulator.
+
+use super::commands::DramCommand;
+use crate::config::TimingParams;
+use std::collections::HashMap;
+
+/// Aggregate statistics of an accounted command stream.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimingStats {
+    pub activations: u64,
+    pub precharges: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub pim_commands: u64,
+    pub total_ns: f64,
+}
+
+/// Per-bank open-row tracker + latency accumulator.
+///
+/// The model is intentionally simple (single-channel, closed-form): an ACT to
+/// a bank with an open row implies an implicit precharge; reads/writes to the
+/// open row cost `t_cas`; PIM commands cost only their address-bus transfer
+/// here (their execution latency is modelled by `pim::isa`).
+#[derive(Debug, Clone)]
+pub struct CommandTimer {
+    t: TimingParams,
+    open_rows: HashMap<u32, u32>,
+    stats: TimingStats,
+}
+
+impl CommandTimer {
+    pub fn new(t: TimingParams) -> Self {
+        CommandTimer { t, open_rows: HashMap::new(), stats: TimingStats::default() }
+    }
+
+    pub fn stats(&self) -> &TimingStats {
+        &self.stats
+    }
+
+    pub fn elapsed_ns(&self) -> f64 {
+        self.stats.total_ns
+    }
+
+    /// Account one command; returns its latency contribution in ns.
+    pub fn issue(&mut self, cmd: &DramCommand) -> f64 {
+        let ns = match *cmd {
+            DramCommand::Act { bank, row } => {
+                let mut ns = 0.0;
+                match self.open_rows.get(&bank) {
+                    Some(&open) if open == row => 0.0, // row hit: free
+                    Some(_) => {
+                        // Row switch: implicit precharge, then activate.
+                        self.stats.precharges += 1;
+                        self.stats.activations += 1;
+                        self.open_rows.insert(bank, row);
+                        ns += self.t.t_rp_ns + self.t.t_rcd_ns;
+                        ns
+                    }
+                    None => {
+                        self.stats.activations += 1;
+                        self.open_rows.insert(bank, row);
+                        ns += self.t.t_rcd_ns;
+                        ns
+                    }
+                }
+            }
+            DramCommand::Pre { bank } => {
+                if self.open_rows.remove(&bank).is_some() {
+                    self.stats.precharges += 1;
+                    self.t.t_rp_ns
+                } else {
+                    0.0
+                }
+            }
+            DramCommand::Rd { .. } => {
+                self.stats.reads += 1;
+                self.t.t_cas_ns
+            }
+            DramCommand::Wr { .. } => {
+                self.stats.writes += 1;
+                self.t.t_cas_ns
+            }
+            ref pim => {
+                debug_assert!(pim.is_pim());
+                self.stats.pim_commands += 1;
+                // Address-bus transfer cycles at the I/O clock.
+                super::commands::address_bus_cycles(pim) as f64 * self.t.pe_cycle_ns()
+            }
+        };
+        self.stats.total_ns += ns;
+        ns
+    }
+
+    /// Account a whole stream.
+    pub fn issue_all<'a>(&mut self, cmds: impl IntoIterator<Item = &'a DramCommand>) -> f64 {
+        cmds.into_iter().map(|c| self.issue(c)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ddr5_5200_timing;
+    use DramCommand::*;
+
+    fn timer() -> CommandTimer {
+        CommandTimer::new(ddr5_5200_timing())
+    }
+
+    #[test]
+    fn row_hit_is_free() {
+        let mut t = timer();
+        let first = t.issue(&Act { bank: 0, row: 5 });
+        let hit = t.issue(&Act { bank: 0, row: 5 });
+        assert!(first > 0.0);
+        assert_eq!(hit, 0.0);
+        assert_eq!(t.stats().activations, 1);
+    }
+
+    #[test]
+    fn row_switch_pays_pre_plus_act() {
+        let mut t = timer();
+        t.issue(&Act { bank: 0, row: 1 });
+        let switch = t.issue(&Act { bank: 0, row: 2 });
+        let tp = ddr5_5200_timing();
+        assert!((switch - (tp.t_rp_ns + tp.t_rcd_ns)).abs() < 1e-9);
+        assert_eq!(t.stats().precharges, 1);
+        assert_eq!(t.stats().activations, 2);
+    }
+
+    #[test]
+    fn banks_track_independently() {
+        let mut t = timer();
+        t.issue(&Act { bank: 0, row: 1 });
+        t.issue(&Act { bank: 1, row: 9 });
+        assert_eq!(t.issue(&Act { bank: 0, row: 1 }), 0.0);
+        assert_eq!(t.issue(&Act { bank: 1, row: 9 }), 0.0);
+        assert_eq!(t.stats().activations, 2);
+    }
+
+    #[test]
+    fn precharge_idempotent() {
+        let mut t = timer();
+        t.issue(&Act { bank: 0, row: 1 });
+        assert!(t.issue(&Pre { bank: 0 }) > 0.0);
+        assert_eq!(t.issue(&Pre { bank: 0 }), 0.0);
+        assert_eq!(t.stats().precharges, 1);
+    }
+
+    #[test]
+    fn stream_accumulates() {
+        let mut t = timer();
+        let cmds =
+            vec![Act { bank: 0, row: 0 }, Rd { bank: 0, col: 0 }, Rd { bank: 0, col: 1 }, Pre { bank: 0 }];
+        let total = t.issue_all(&cmds);
+        assert!((total - t.elapsed_ns()).abs() < 1e-9);
+        assert_eq!(t.stats().reads, 2);
+    }
+
+    #[test]
+    fn pim_commands_counted() {
+        let mut t = timer();
+        t.issue(&PimEnable);
+        t.issue(&PimMul { r_dst: 0, r_src1: 1, r_src2: 2, prec: 8 });
+        assert_eq!(t.stats().pim_commands, 2);
+        assert!(t.elapsed_ns() > 0.0);
+    }
+}

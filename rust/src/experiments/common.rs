@@ -1,0 +1,92 @@
+//! Shared machinery for the evaluation experiments: the three evaluated
+//! systems (paper Table 4) and stage-latency helpers.
+
+use crate::baselines::{H100Model, ProteusModel};
+use crate::config::{racam_paper, Features, HwConfig, LlmSpec, Stage};
+use crate::metrics::LatencyBreakdown;
+use crate::workloads::{decode_kernels, prefill_kernels, stage_latency, InferenceSystem, RacamSystem};
+
+/// Prompt length used for standalone prefill numbers (paper §5.3).
+pub const PREFILL_TOKENS: u64 = 1024;
+/// Context length at which standalone decode throughput is sampled.
+pub const DECODE_CTX: u64 = 1024;
+
+/// The three evaluated systems for one LLM.
+pub struct SystemSet {
+    pub h100: H100Model,
+    pub proteus: ProteusModel,
+    pub racam: RacamSystem,
+}
+
+impl SystemSet {
+    pub fn for_model(spec: &LlmSpec) -> Self {
+        SystemSet {
+            h100: H100Model::for_model(spec),
+            proteus: ProteusModel::for_model(spec),
+            racam: RacamSystem::new(&racam_paper()),
+        }
+    }
+}
+
+/// Latency of one stage (one forward pass for prefill, one token for
+/// decode) on any system.
+pub fn system_stage_latency(
+    sys: &mut dyn InferenceSystem,
+    spec: &LlmSpec,
+    stage: Stage,
+) -> LatencyBreakdown {
+    let kernels = match stage {
+        Stage::Prefill => prefill_kernels(spec, PREFILL_TOKENS),
+        Stage::Decode => decode_kernels(spec, DECODE_CTX),
+    };
+    stage_latency(sys, &kernels)
+}
+
+/// RACAM stage latency under an arbitrary feature set / hardware config.
+pub fn racam_stage_latency(hw: &HwConfig, spec: &LlmSpec, stage: Stage) -> LatencyBreakdown {
+    let mut sys = RacamSystem::new(hw);
+    system_stage_latency(&mut sys, spec, stage)
+}
+
+/// (RACAM speedup, Proteus speedup) over H100 for a stage.
+pub fn stage_speedups(spec: &LlmSpec, stage: Stage) -> (f64, f64) {
+    let mut s = SystemSet::for_model(spec);
+    let h = system_stage_latency(&mut s.h100, spec, stage).total_ns();
+    let p = system_stage_latency(&mut s.proteus, spec, stage).total_ns();
+    let r = system_stage_latency(&mut s.racam, spec, stage).total_ns();
+    (h / r, h / p)
+}
+
+/// RACAM hardware with a feature subset (ablations).
+pub fn racam_with(features: Features) -> HwConfig {
+    let mut hw = racam_paper();
+    hw.features = features;
+    hw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{gpt3_175b, gpt3_6_7b};
+
+    #[test]
+    fn racam_beats_h100_on_decode() {
+        // The paper's headline: decode is where PIM wins big.
+        let (racam_speedup, _) = stage_speedups(&gpt3_175b(), Stage::Decode);
+        assert!(racam_speedup > 5.0, "decode speedup {racam_speedup}");
+    }
+
+    #[test]
+    fn proteus_underperforms_h100() {
+        let (_, proteus_speedup) = stage_speedups(&gpt3_6_7b(), Stage::Prefill);
+        assert!(proteus_speedup < 0.1, "Proteus prefill 'speedup' {proteus_speedup}");
+    }
+
+    #[test]
+    fn offloaded_model_gains_more() {
+        // GPT-3 175B doesn't fit in HBM → H100 suffers → larger RACAM win.
+        let (big, _) = stage_speedups(&gpt3_175b(), Stage::Decode);
+        let (small, _) = stage_speedups(&gpt3_6_7b(), Stage::Decode);
+        assert!(big > small, "175B {big} vs 6.7B {small}");
+    }
+}

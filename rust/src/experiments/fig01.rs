@@ -1,0 +1,71 @@
+//! Fig. 1 — integer multiplication latency vs. precision: SOTA PUD (no bit
+//! reuse, O(n²) row activations), the full-reuse ideal, and RACAM.
+
+use crate::baselines::ProteusModel;
+use crate::config::{ddr5_5200_timing, racam_paper, Features, Precision};
+use crate::dram::SalpScheduler;
+use crate::pim::isa::{instr_latency, mul_row_accesses, InstrClass};
+use crate::report::Table;
+
+pub fn run() -> Vec<Table> {
+    let hw = racam_paper();
+    let t = ddr5_5200_timing();
+    let salp = SalpScheduler::new(t, hw.dram.subarrays);
+    let proteus = ProteusModel::default();
+
+    let mut table = Table::new(
+        "Fig.1 — n-bit multiply latency (one SIMD pass)",
+        &["bits", "sota_pud_ns", "ideal_ns", "racam_ns", "pud_row_acts", "racam_row_acts"],
+    );
+    for bits in [2u32, 4, 8, 16] {
+        // SOTA PUD: O(n²) row cycles, no reuse (Proteus-style).
+        let pud_ns = ProteusModel::mul_row_ops(bits as u64) as f64 * proteus.t_rc_ns;
+        // Ideal: every operand bit crosses the interface once, PE-pipelined.
+        let n = bits as u64;
+        let ideal_ns = ((n * n + 4) as f64 * t.pe_cycle_ns()).max(t.salp_stream_ns(2 * n + 1));
+        // RACAM: the locality-buffer schedule (4n accesses, SALP streamed).
+        let prec = match Precision::from_bits(bits) {
+            Some(p) => p,
+            None => continue,
+        };
+        let racam_ns = if bits <= 8 {
+            instr_latency(InstrClass::Mul, prec, &t, &salp, &Features::ALL).total_ns()
+        } else {
+            // >8 bit exceeds the 17-row buffer: composed of 4 int8 passes.
+            4.0 * instr_latency(InstrClass::Mul, Precision::Int8, &t, &salp, &Features::ALL)
+                .total_ns()
+        };
+        table.row(vec![
+            bits.to_string(),
+            format!("{pud_ns:.1}"),
+            format!("{ideal_ns:.1}"),
+            format!("{racam_ns:.1}"),
+            ProteusModel::mul_row_ops(n).to_string(),
+            mul_row_accesses(n.min(8), true).to_string(),
+        ]);
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn racam_tracks_ideal_not_pud() {
+        let t = &super::run()[0];
+        let csv = t.to_csv();
+        let rows: Vec<Vec<f64>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(|c| c.parse().unwrap()).collect())
+            .collect();
+        for r in &rows {
+            let (pud, ideal, racam) = (r[1], r[2], r[3]);
+            assert!(racam < pud / 5.0, "RACAM must beat PUD by far: {racam} vs {pud}");
+            assert!(racam < ideal * 4.0, "RACAM must approach ideal: {racam} vs {ideal}");
+        }
+        // PUD grows quadratically, RACAM ~linearly: compare n=4 → n=8.
+        let g_pud = rows[2][1] / rows[1][1];
+        let g_racam = rows[2][3] / rows[1][3];
+        assert!(g_pud > 3.0 && g_racam < 3.0, "pud x{g_pud:.1}, racam x{g_racam:.1}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Figs. 9–11 — end-to-end throughput (two scenarios), standalone
+//! prefill/decode throughput, and performance per mm², all across
+//! {H100, Proteus, RACAM} × the four Table 3 models.
+
+use super::common::{system_stage_latency, SystemSet};
+use crate::area::AreaModel;
+use crate::config::{paper_models, racam_paper, Scenario, Stage};
+use crate::metrics::geomean;
+use crate::report::Table;
+use crate::workloads::e2e_latency;
+
+/// Fig. 9: normalized end-to-end request throughput per scenario.
+pub fn run_fig9() -> Vec<Table> {
+    let mut out = Vec::new();
+    let mut racam_speedups = Vec::new();
+    for sc in [Scenario::CODE_GENERATION, Scenario::CONTEXT_UNDERSTANDING] {
+        let mut t = Table::new(
+            &format!(
+                "Fig.9 — end-to-end normalized throughput, {} ({} in / {} out)",
+                sc.name, sc.prompt_tokens, sc.output_tokens
+            ),
+            &["model", "h100", "proteus", "racam"],
+        );
+        for spec in paper_models() {
+            let mut s = SystemSet::for_model(&spec);
+            let h = e2e_latency(&mut s.h100, &spec, &sc).total_ns();
+            let p = e2e_latency(&mut s.proteus, &spec, &sc).total_ns();
+            let r = e2e_latency(&mut s.racam, &spec, &sc).total_ns();
+            racam_speedups.push(h / r);
+            t.row(vec![
+                spec.name.clone(),
+                "1.00".into(),
+                format!("{:.4}", h / p),
+                format!("{:.2}", h / r),
+            ]);
+        }
+        let g = geomean(&racam_speedups.split_off(racam_speedups.len() - 4));
+        t.row(vec!["geomean(RACAM)".into(), "-".into(), "-".into(), format!("{g:.2}")]);
+        out.push(t);
+    }
+    out
+}
+
+/// Fig. 10: standalone prefill and decode throughput, normalized to H100.
+pub fn run_fig10() -> Vec<Table> {
+    let mut out = Vec::new();
+    for stage in [Stage::Prefill, Stage::Decode] {
+        let mut t = Table::new(
+            &format!("Fig.10 — normalized {} throughput", stage.label()),
+            &["model", "h100", "proteus", "racam"],
+        );
+        for spec in paper_models() {
+            let mut s = SystemSet::for_model(&spec);
+            let h = system_stage_latency(&mut s.h100, &spec, stage).total_ns();
+            let p = system_stage_latency(&mut s.proteus, &spec, stage).total_ns();
+            let r = system_stage_latency(&mut s.racam, &spec, stage).total_ns();
+            t.row(vec![
+                spec.name.clone(),
+                "1.00".into(),
+                format!("{:.5}", h / p),
+                format!("{:.2}", h / r),
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig. 11: performance per mm², normalized to H100 (areas at 15 nm; RACAM
+/// counts its added peripherals, Proteus its 1% added circuitry).
+pub fn run_fig11() -> Vec<Table> {
+    let area = AreaModel::default();
+    let h100_mm2 = area.h100_mm2_at_15nm();
+    let racam_mm2 = area.report(&racam_paper()).added_mm2();
+    let proteus_mm2 = area.proteus_added_mm2(16 * (1u64 << 30));
+
+    let mut out = Vec::new();
+    for stage in [Stage::Prefill, Stage::Decode] {
+        let mut t = Table::new(
+            &format!("Fig.11 — performance per mm² vs H100, {}", stage.label()),
+            &["model", "proteus", "racam"],
+        );
+        for spec in paper_models() {
+            let mut s = SystemSet::for_model(&spec);
+            let h = system_stage_latency(&mut s.h100, &spec, stage).total_ns();
+            let p = system_stage_latency(&mut s.proteus, &spec, stage).total_ns();
+            let r = system_stage_latency(&mut s.racam, &spec, stage).total_ns();
+            let proteus_ppa = (h / p) * (h100_mm2 / proteus_mm2);
+            let racam_ppa = (h / r) * (h100_mm2 / racam_mm2);
+            t.row(vec![
+                spec.name.clone(),
+                format!("{proteus_ppa:.2}"),
+                format!("{racam_ppa:.1}"),
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(t: &Table, idx: usize) -> Vec<f64> {
+        t.to_csv()
+            .lines()
+            .skip(1)
+            .filter_map(|l| l.split(',').nth(idx).and_then(|c| c.parse().ok()))
+            .collect()
+    }
+
+    #[test]
+    fn fig9_racam_beats_h100_and_proteus_trails() {
+        let tables = run_fig9();
+        for t in &tables {
+            let proteus = col(t, 2);
+            let racam = col(t, 3);
+            for (p, r) in proteus.iter().zip(&racam) {
+                assert!(*r > 1.0, "RACAM must beat H100 end-to-end, got {r}");
+                assert!(*p < 1.0, "Proteus must trail H100, got {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig10_decode_speedup_exceeds_prefill() {
+        let tables = run_fig10();
+        let prefill = col(&tables[0], 3);
+        let decode = col(&tables[1], 3);
+        for (p, d) in prefill.iter().zip(&decode) {
+            assert!(d > p, "decode ({d}) must beat prefill ({p}) speedup");
+        }
+        // Decode hits tens-of-x like the paper's up-to-112x.
+        assert!(decode.iter().cloned().fold(0.0, f64::max) > 20.0);
+    }
+
+    #[test]
+    fn fig11_racam_ppa_dominates() {
+        let tables = run_fig11();
+        for t in &tables {
+            let proteus = col(t, 1);
+            let racam = col(t, 2);
+            for (p, r) in proteus.iter().zip(&racam) {
+                assert!(r > p, "RACAM perf/mm² must exceed Proteus ({r} vs {p})");
+            }
+        }
+        // Decode perf/mm² in the hundreds (paper: up to 466.8x).
+        let decode_max = col(&tables[1], 2).into_iter().fold(0.0, f64::max);
+        assert!(decode_max > 50.0, "decode ppa {decode_max}");
+    }
+}

@@ -1,0 +1,61 @@
+//! Fig. 12 — architecture ablation: progressively disable the popcount
+//! reduction units (PR), broadcast units (BU) and locality buffers (LB),
+//! re-search the mapping space under each feature set, and report latency
+//! normalized to the complete design.
+
+use super::common::{racam_stage_latency, racam_with};
+use crate::config::{paper_models, Features, Stage};
+use crate::report::Table;
+
+pub const ABLATION_POINTS: [Features; 4] =
+    [Features::ALL, Features::NO_PR, Features::NO_PR_BU, Features::NO_PR_BU_LB];
+
+pub fn run() -> Vec<Table> {
+    let mut out = Vec::new();
+    for stage in [Stage::Prefill, Stage::Decode] {
+        let mut t = Table::new(
+            &format!("Fig.12 — ablation, {} latency normalized to complete RACAM", stage.label()),
+            &["model", "complete", "-PR", "-PR-BU", "-PR-BU-LB"],
+        );
+        for spec in paper_models() {
+            let mut cells = vec![spec.name.clone()];
+            let base =
+                racam_stage_latency(&racam_with(Features::ALL), &spec, stage).total_ns();
+            for f in ABLATION_POINTS {
+                let ns = racam_stage_latency(&racam_with(f), &spec, stage).total_ns();
+                cells.push(format!("{:.2}", ns / base));
+            }
+            t.row(cells);
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(t: &Table) -> Vec<Vec<f64>> {
+        t.to_csv()
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').skip(1).map(|c| c.parse().unwrap()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn ablation_is_monotone_and_lb_matters_most() {
+        for t in run() {
+            for r in rows(&t) {
+                assert!((r[0] - 1.0).abs() < 1e-9);
+                // Each removed unit hurts (weakly monotone).
+                assert!(r[1] >= 1.0 - 1e-9, "-PR {}", r[1]);
+                assert!(r[2] >= r[1] - 1e-9, "-PR-BU {} vs -PR {}", r[2], r[1]);
+                assert!(r[3] >= r[2] - 1e-9, "-LB {} vs -PR-BU {}", r[3], r[2]);
+                // LB removal is the largest jump (paper: 4.7–8x overall).
+                assert!(r[3] > 2.0, "full ablation must cost >2x, got {}", r[3]);
+            }
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Fig. 14 — precision sensitivity: int8 → int4 → int2.  Bit-serial
+//! latency is ideally linear in operand width; the fixed bit-parallel
+//! reduction keeps the scaling slightly sub-linear (paper: ≈2× at int4,
+//! 3.5–3.8× at int2).
+
+use super::common::{racam_stage_latency, racam_with};
+use crate::config::{paper_models, Features, Precision, Stage};
+use crate::report::Table;
+
+pub fn run() -> Vec<Table> {
+    let mut out = Vec::new();
+    for stage in [Stage::Prefill, Stage::Decode] {
+        let mut t = Table::new(
+            &format!("Fig.14 — speedup vs int8 when lowering precision, {}", stage.label()),
+            &["model", "int8", "int4", "int2"],
+        );
+        for mut spec in paper_models() {
+            let mut cells = vec![spec.name.clone()];
+            spec.prec = Precision::Int8;
+            let base = racam_stage_latency(&racam_with(Features::ALL), &spec, stage).total_ns();
+            for prec in [Precision::Int8, Precision::Int4, Precision::Int2] {
+                spec.prec = prec;
+                let ns = racam_stage_latency(&racam_with(Features::ALL), &spec, stage).total_ns();
+                cells.push(format!("{:.2}", base / ns));
+            }
+            t.row(cells);
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_is_near_linear_but_sub_ideal() {
+        for t in run() {
+            for line in t.to_csv().lines().skip(1) {
+                let v: Vec<f64> = line.split(',').skip(1).map(|c| c.parse().unwrap()).collect();
+                assert!((v[0] - 1.0).abs() < 1e-9);
+                // int4 ≈ 2x (paper), with modelling slack.
+                assert!((1.3..3.0).contains(&v[1]), "int4 speedup {}", v[1]);
+                // int2: 3.5–3.8x in the paper — sub-4x but clearly super-int4.
+                assert!(v[2] > v[1], "int2 {} must beat int4 {}", v[2], v[1]);
+                assert!(v[2] < 4.6, "int2 speedup must stay sub-linear-ish: {}", v[2]);
+            }
+        }
+    }
+}

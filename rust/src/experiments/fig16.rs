@@ -1,0 +1,83 @@
+//! Fig. 16 — GEMM/GEMV size sensitivity: latency scaling vs. compute
+//! growth, correlated with PE utilization (paper: GEMMs approach 98%
+//! utilization and near-ideal scaling; GEMVs are memory-bound with
+//! single-digit utilization that improves with size).
+
+use crate::config::{racam_paper, Precision};
+use crate::mapping::{HwModel, MappingEngine};
+use crate::metrics::fmt_ns;
+use crate::report::Table;
+use crate::workloads::{gemm_sweep, gemv_sweep};
+
+pub fn run() -> Vec<Table> {
+    let engine = MappingEngine::new(HwModel::new(&racam_paper()));
+    let mut out = Vec::new();
+    for (title, sweep) in [
+        ("Fig.16a — GEMM size sweep", gemm_sweep(Precision::Int8)),
+        ("Fig.16b — GEMV size sweep", gemv_sweep(Precision::Int8)),
+    ] {
+        let mut t = Table::new(
+            title,
+            &["group", "shape", "latency", "latency_ns", "pe_util", "io_frac", "macs_x"],
+        );
+        let base_macs = sweep[0].shape.macs() as f64;
+        for p in &sweep {
+            let r = engine.search(&p.shape);
+            let e = &r.best;
+            t.row(vec![
+                p.group.to_string(),
+                p.shape.label(),
+                fmt_ns(e.total_ns()),
+                format!("{:.0}", e.total_ns()),
+                format!("{:.3}", e.pe_util),
+                format!("{:.3}", e.io_ns() / e.total_ns()),
+                format!("{:.0}", p.shape.macs() as f64 / base_macs),
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MatmulShape;
+
+    fn best(shape: MatmulShape) -> crate::mapping::Evaluation {
+        MappingEngine::new(HwModel::new(&racam_paper())).search(&shape).best.clone()
+    }
+
+    #[test]
+    fn gemm_scaling_is_near_ideal() {
+        // Paper: 4096x compute (2048³→32768³) costs only ~2985x latency.
+        let small = best(MatmulShape::new(2048, 2048, 2048, Precision::Int8));
+        let large = best(MatmulShape::new(32768, 32768, 32768, Precision::Int8));
+        let growth = large.total_ns() / small.total_ns();
+        assert!(growth < 4096.0 * 1.15, "latency growth {growth:.0}x for 4096x compute");
+        assert!(growth > 100.0, "growth {growth:.0}x suspiciously small");
+        assert!(large.pe_util > small.pe_util);
+        assert!(large.pe_util > 0.5, "large-GEMM util {}", large.pe_util);
+    }
+
+    #[test]
+    fn gemv_latency_grows_sublinearly() {
+        // Paper: 256x size → only ~4x latency for GEMV.
+        let small = best(MatmulShape::new(1, 2048, 2048, Precision::Int8));
+        let large = best(MatmulShape::new(1, 32768, 32768, Precision::Int8));
+        let size_growth = (32768.0 * 32768.0) / (2048.0 * 2048.0); // 256x
+        let latency_growth = large.total_ns() / small.total_ns();
+        assert!(
+            latency_growth < size_growth / 4.0,
+            "GEMV latency growth {latency_growth:.1}x for {size_growth:.0}x size"
+        );
+    }
+
+    #[test]
+    fn gemm_is_compute_dominated() {
+        // Paper: >98% compute for the largest GEMM.
+        let large = best(MatmulShape::new(32768, 32768, 32768, Precision::Int8));
+        let io_frac = large.io_ns() / large.total_ns();
+        assert!(io_frac < 0.1, "I/O fraction {io_frac}");
+    }
+}

@@ -1,0 +1,62 @@
+//! Fig. 17 — PIM vs. I/O latency breakdown of the GEMM-1×49152×12288
+//! prefill kernel under progressive hardware ablation.
+
+use super::common::racam_with;
+use super::fig12::ABLATION_POINTS;
+use crate::config::{MatmulShape, Precision};
+use crate::mapping::{HwModel, MappingEngine};
+use crate::metrics::fmt_ns;
+use crate::report::Table;
+
+pub fn shape() -> MatmulShape {
+    MatmulShape::new(1, 49152, 12288, Precision::Int8)
+}
+
+pub fn run() -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig.17 — latency breakdown of GEMM-1x49152x12288 under ablation",
+        &["config", "pim_ns", "io_ns", "pim", "io", "pim_frac"],
+    );
+    for f in ABLATION_POINTS {
+        let engine = MappingEngine::new(HwModel::new(&racam_with(f)));
+        let e = engine.search(&shape()).best;
+        let pim = e.compute_ns;
+        let io = e.io_ns();
+        t.row(vec![
+            f.label(),
+            format!("{pim:.0}"),
+            format!("{io:.0}"),
+            fmt_ns(pim),
+            fmt_ns(io),
+            format!("{:.3}", pim / (pim + io)),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_shift_the_breakdown() {
+        let t = &run()[0];
+        let rows: Vec<(f64, f64)> = t
+            .to_csv()
+            .lines()
+            .skip(1)
+            .map(|l| {
+                let c: Vec<&str> = l.split(',').collect();
+                (c[1].parse().unwrap(), c[2].parse().unwrap())
+            })
+            .collect();
+        let (pim0, io0) = rows[0];
+        // Removing PR/BU increases I/O latency (host reduction + explicit
+        // replication)...
+        let (_, io_nopr_bu) = rows[2];
+        assert!(io_nopr_bu > io0, "-PR-BU io {io_nopr_bu} vs complete {io0}");
+        // ...and removing LB blows up PIM latency (no bit reuse).
+        let (pim_nolb, _) = rows[3];
+        assert!(pim_nolb > 2.0 * pim0, "-LB pim {pim_nolb} vs complete {pim0}");
+    }
+}

@@ -1,0 +1,68 @@
+//! Experiment registry: one entry point per table and figure of the
+//! paper's evaluation (§6).  `run("fig9")` regenerates the corresponding
+//! artifact as paper-style text tables + CSV under `results/`.
+
+mod common;
+mod extensions;
+mod fig01;
+mod fig09;
+mod fig12;
+mod fig13;
+mod fig14;
+mod fig15;
+mod fig16;
+mod fig17;
+mod tables;
+
+pub use common::{racam_stage_latency, stage_speedups, SystemSet};
+
+use crate::report::Table;
+use crate::Result;
+
+/// All experiment ids, in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "fig1", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
+    "tab1", "tab4", "tab5", "ext-energy", "ext-reliability", "ext-trace",
+];
+
+/// Run one experiment; returns its tables (already saved under `results/`).
+pub fn run(id: &str) -> Result<Vec<Table>> {
+    let tables = match id {
+        "fig1" => fig01::run(),
+        "fig9" => fig09::run_fig9(),
+        "fig10" => fig09::run_fig10(),
+        "fig11" => fig09::run_fig11(),
+        "fig12" => fig12::run(),
+        "fig13" => fig13::run(),
+        "fig14" => fig14::run(),
+        "fig15" => fig15::run(),
+        "fig16" => fig16::run(),
+        "fig17" => fig17::run(),
+        "tab1" => tables::run_tab1(),
+        "tab4" => tables::run_tab4(),
+        "tab5" => tables::run_tab5(),
+        "ext-energy" => extensions::run_energy(),
+        "ext-reliability" => extensions::run_reliability(),
+        "ext-trace" => extensions::run_trace(),
+        other => anyhow::bail!("unknown experiment '{other}' (known: {ALL_IDS:?})"),
+    };
+    let mut text = String::new();
+    let mut csv = String::new();
+    for t in &tables {
+        text.push_str(&t.render());
+        text.push('\n');
+        csv.push_str(&t.to_csv());
+        csv.push('\n');
+    }
+    crate::report::save(&format!("{id}.txt"), &text)?;
+    crate::report::save(&format!("{id}.csv"), &csv)?;
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_id_errors() {
+        assert!(super::run("fig99").is_err());
+    }
+}

@@ -1,0 +1,58 @@
+//! # RACAM — Reuse-Aware Computation and Automated Mapping for in-DRAM PIM
+//!
+//! Full-system reproduction of *"RACAM: Enhancing DRAM with Reuse-Aware
+//! Computation and Automated Mapping for ML Inference"* (Ma et al., 2025).
+//!
+//! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a DRAM-PIM simulator
+//!   (both *functional*, computing bit-serial arithmetic bit-by-bit, and
+//!   *analytical*, accounting latency the way the paper's hardware model
+//!   does), the RACAM peripheral micro-architecture (locality buffers,
+//!   bit-serial PEs, popcount reduction units, broadcast units), the extended
+//!   PIM ISA, the automated mapping framework with exhaustive search, the
+//!   LLM-to-kernel parser, GPU (H100) and Proteus baselines, the §5.2 area
+//!   model, and a serving coordinator.
+//! * **L2 (JAX, build-time)** — quantized GEMM/GEMV and a small transformer
+//!   block, AOT-lowered to HLO text in `artifacts/`, loaded at runtime by
+//!   [`runtime`] through PJRT and used as the numerical oracle.
+//! * **L1 (Pallas, build-time)** — the tiled quantized-GEMM kernel the L2
+//!   model calls; its VMEM-resident weight tile is the TPU analogue of
+//!   RACAM's locality buffer (see DESIGN.md §Hardware-Adaptation).
+//!
+//! Python never runs on the request path: `make artifacts` runs once and the
+//! Rust binary is self-contained afterwards.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`config`] | hardware + workload configuration (paper Table 2/3/4) |
+//! | [`dram`] | DRAM substrate: geometry, DDR5 timing engine, SALP-MASA, commands |
+//! | [`pim`] | RACAM peripherals: PE, locality buffer, popcount, broadcast, ISA, FSM, functional executor |
+//! | [`mapping`] | §4 mapping framework: space enumeration, software + hardware models, search engine |
+//! | [`workloads`] | LLM parser, GEMM/GEMV workloads, inference scenarios |
+//! | [`baselines`] | H100 roofline model, Proteus model |
+//! | [`area`] | §5.2 area estimation |
+//! | [`metrics`] | latency breakdowns, utilization, counters |
+//! | [`report`] | paper-style table renderers + CSV |
+//! | [`runtime`] | PJRT loader/executor for AOT artifacts |
+//! | [`coordinator`] | serving driver: request queue, batcher, token loop |
+//! | [`experiments`] | one entry point per paper table/figure |
+
+pub mod area;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod dram;
+pub mod energy;
+pub mod experiments;
+pub mod mapping;
+pub mod metrics;
+pub mod pim;
+pub mod report;
+pub mod runtime;
+pub mod workloads;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,245 @@
+//! `racam` — CLI for the RACAM reproduction.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! racam map  <M> <K> <N> [--prec 8] [--all]     search a GEMM mapping
+//! racam llm  <model> [--stage prefill|decode|e2e] [--scenario code|ctx]
+//! racam area                                     area report (§5.2)
+//! racam config [--dump cfg.json | --load cfg.json]
+//! racam experiments <id|all>                     regenerate paper artifacts
+//! ```
+
+use racam::area::AreaModel;
+use racam::config::{self, racam_paper, HwConfig, MatmulShape, Precision, Scenario};
+use racam::experiments;
+use racam::mapping::{HwModel, MappingEngine};
+use racam::metrics::fmt_ns;
+use racam::workloads::{self, RacamSystem};
+use racam::Result;
+
+fn main() {
+    if let Err(e) = run(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let mut it = args.into_iter();
+    match it.next().as_deref() {
+        Some("map") => cmd_map(it.collect()),
+        Some("llm") => cmd_llm(it.collect()),
+        Some("area") => cmd_area(),
+        Some("config") => cmd_config(it.collect()),
+        Some("experiments") => cmd_experiments(it.collect()),
+        Some("serve") => cmd_serve(it.collect()),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            print_help();
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "racam — reuse-aware in-DRAM PIM simulator + automated mapping\n\
+         \n\
+         usage:\n\
+         \x20 racam map <M> <K> <N> [--prec BITS] [--all]\n\
+         \x20 racam llm <gpt3-6.7b|gpt3-175b|llama3-8b|llama3-70b> [--stage prefill|decode|e2e] [--scenario code|ctx]\n\
+         \x20 racam area\n\
+         \x20 racam config [--dump FILE | --load FILE]\n\
+         \x20 racam experiments <fig1|fig9|...|ext-trace|all>\n\
+         \x20 racam serve [--requests N] [--tokens N] [--batch N] [--synthetic] [--mapping-cache FILE]"
+    );
+}
+
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn cmd_map(args: Vec<String>) -> Result<()> {
+    let pos: Vec<u64> =
+        args.iter().take_while(|a| !a.starts_with("--")).filter_map(|a| a.parse().ok()).collect();
+    anyhow::ensure!(pos.len() == 3, "usage: racam map <M> <K> <N> [--prec BITS] [--all]");
+    let bits: u32 = flag_value(&args, "--prec").map(|v| v.parse()).transpose()?.unwrap_or(8);
+    let prec = Precision::from_bits(bits)
+        .ok_or_else(|| anyhow::anyhow!("unsupported precision {bits} (2/4/8/16)"))?;
+    let shape = MatmulShape::new(pos[0], pos[1], pos[2], prec);
+
+    let engine = MappingEngine::new(HwModel::new(&racam_paper()));
+    let r = engine.search(&shape);
+    println!("shape       : {} ({})", shape.label(), prec.label());
+    println!("candidates  : {}", r.candidates);
+    println!("best mapping: {}", r.best.mapping);
+    println!("tile (M,K,N): {:?}", r.best.tile);
+    println!(
+        "latency     : {}  (compute {}, io {})",
+        fmt_ns(r.best.total_ns()),
+        fmt_ns(r.best.compute_ns),
+        fmt_ns(r.best.io_ns())
+    );
+    println!("pe util     : {:.1}%", r.best.pe_util * 100.0);
+    println!("spread      : {:.1}x worst/best", r.spread());
+    if args.iter().any(|a| a == "--all") {
+        for e in engine.evaluate_all(&shape) {
+            println!("{:>14.0}ns  util={:<6.3} {}", e.total_ns(), e.pe_util, e.mapping);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_llm(args: Vec<String>) -> Result<()> {
+    let model = args.first().map(String::as_str).unwrap_or("gpt3-6.7b");
+    let spec = match model {
+        "gpt3-6.7b" => config::gpt3_6_7b(),
+        "gpt3-175b" => config::gpt3_175b(),
+        "llama3-8b" => config::llama3_8b(),
+        "llama3-70b" => config::llama3_70b(),
+        other => anyhow::bail!("unknown model '{other}'"),
+    };
+    let stage = flag_value(&args, "--stage").unwrap_or_else(|| "e2e".into());
+    let scenario = match flag_value(&args, "--scenario").as_deref() {
+        Some("ctx") => Scenario::CONTEXT_UNDERSTANDING,
+        _ => Scenario::CODE_GENERATION,
+    };
+    let mut sys = RacamSystem::new(&racam_paper());
+    let b = match stage.as_str() {
+        "prefill" => workloads::stage_latency(&mut sys, &workloads::prefill_kernels(&spec, 1024)),
+        "decode" => workloads::stage_latency(&mut sys, &workloads::decode_kernels(&spec, 1024)),
+        "e2e" => workloads::e2e_latency(&mut sys, &spec, &scenario),
+        other => anyhow::bail!("unknown stage '{other}'"),
+    };
+    println!("{} {} on RACAM:", spec.name, stage);
+    println!("  pim   : {}", fmt_ns(b.pim_ns));
+    println!("  io    : {}", fmt_ns(b.io_ns));
+    println!("  total : {}", fmt_ns(b.total_ns()));
+    println!("  cache : {} searches, {} hits", sys.engine().misses, sys.engine().hits);
+    Ok(())
+}
+
+fn cmd_area() -> Result<()> {
+    let m = AreaModel::default();
+    let r = m.report(&racam_paper());
+    println!("DRAM chips       : {:>10.1} mm²", r.dram_mm2);
+    println!("locality buffers : {:>10.1} mm²", r.locality_buffer_mm2);
+    println!("bit-serial PEs   : {:>10.1} mm²", r.pe_mm2);
+    println!("popcount units   : {:>10.1} mm²", r.popcount_mm2);
+    println!("broadcast units  : {:>10.1} mm²", r.broadcast_mm2);
+    println!("device FSMs      : {:>10.1} mm²", r.fsm_mm2);
+    println!(
+        "added total      : {:>10.1} mm²  ({:.2}% of DRAM)",
+        r.added_mm2(),
+        100.0 * r.overhead_fraction()
+    );
+    println!(
+        "H100 @15nm ref   : {:>10.1} mm²  (added = {:.1}% of it)",
+        m.h100_mm2_at_15nm(),
+        100.0 * r.added_mm2() / m.h100_mm2_at_15nm()
+    );
+    Ok(())
+}
+
+fn cmd_config(args: Vec<String>) -> Result<()> {
+    if let Some(path) = flag_value(&args, "--dump") {
+        std::fs::write(&path, racam_paper().to_json())?;
+        println!("wrote {path}");
+    } else if let Some(path) = flag_value(&args, "--load") {
+        let hw = HwConfig::from_json(&std::fs::read_to_string(&path)?)?;
+        hw.validate().map_err(|e| anyhow::anyhow!("invalid config: {e:?}"))?;
+        println!(
+            "{path}: valid RACAM config, {} PEs, {:.1} int8 TOPS",
+            hw.total_pes(),
+            hw.peak_tops(Precision::Int8)
+        );
+    } else {
+        println!("{}", racam_paper().to_json());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: Vec<String>) -> Result<()> {
+    use racam::coordinator::{HloDecodeEngine, Request, Server, SyntheticEngine, TokenEngine};
+    use racam::runtime::{ArtifactSet, Runtime};
+
+    let n_req: u64 = flag_value(&args, "--requests").map(|v| v.parse()).transpose()?.unwrap_or(4);
+    let tokens: usize = flag_value(&args, "--tokens").map(|v| v.parse()).transpose()?.unwrap_or(16);
+    let batch: usize = flag_value(&args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(2);
+    let synthetic = args.iter().any(|a| a == "--synthetic");
+
+    let spec = config::gpt3_6_7b();
+    let mut racam_sys = RacamSystem::new(&racam_paper());
+    if let Some(path) = flag_value(&args, "--mapping-cache") {
+        let p = std::path::PathBuf::from(&path);
+        if p.exists() {
+            let n = racam::mapping::store::load_file(racam_sys.engine_mut(), &p)?;
+            println!("pre-warmed mapping cache with {n} entries from {path}");
+        }
+    }
+
+    fn drive<E: TokenEngine>(
+        engine: E,
+        racam_sys: RacamSystem,
+        spec: racam::config::LlmSpec,
+        n_req: u64,
+        tokens: usize,
+        batch: usize,
+        cache_path: Option<&str>,
+    ) -> Result<racam::coordinator::ServerReport> {
+        let mut server = Server::new(engine, racam_sys, spec, batch);
+        for id in 0..n_req {
+            let prompt: Vec<u32> = (0..3 + id % 5).map(|i| ((id * 31 + i * 7) % 200) as u32).collect();
+            server.submit(Request { id, prompt, max_new_tokens: tokens });
+        }
+        let report = server.run_to_completion()?;
+        if let Some(path) = cache_path {
+            racam::mapping::store::save_file(server.racam().engine(), std::path::Path::new(path))?;
+            println!("saved mapping cache to {path}");
+        }
+        Ok(report)
+    }
+
+    let cache_path = flag_value(&args, "--mapping-cache");
+    let report = if synthetic {
+        drive(SyntheticEngine::new(64, 256), racam_sys, spec.clone(), n_req, tokens, batch, cache_path.as_deref())?
+    } else {
+        let artifacts = ArtifactSet::discover();
+        artifacts.require()?;
+        let rt = Runtime::cpu()?;
+        let module = rt.load_hlo_text(&artifacts.decode_step())?;
+        drive(HloDecodeEngine::new(module, 64, 256), racam_sys, spec.clone(), n_req, tokens, batch, cache_path.as_deref())?
+    };
+
+    println!("served {} requests, {} tokens total", report.results.len(), report.total_tokens);
+    for r in &report.results {
+        println!(
+            "  req {}: ttft {} total {}  tokens {:?}…",
+            r.id,
+            fmt_ns(r.sim_ttft_ns),
+            fmt_ns(r.sim_total_ns),
+            &r.tokens[..4.min(r.tokens.len())]
+        );
+    }
+    println!(
+        "simulated {:.0} tok/s on RACAM ({}); {:.0} tok/s host wall",
+        report.sim_tokens_per_s, spec.name, report.wall_tokens_per_s
+    );
+    Ok(())
+}
+
+fn cmd_experiments(args: Vec<String>) -> Result<()> {
+    let id = args.first().map(String::as_str).unwrap_or("all");
+    let ids: Vec<&str> = if id == "all" { experiments::ALL_IDS.to_vec() } else { vec![id] };
+    for id in ids {
+        println!("=== {id} ===");
+        for t in experiments::run(id)? {
+            println!("{}", t.render());
+        }
+    }
+    Ok(())
+}

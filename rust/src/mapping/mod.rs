@@ -1,0 +1,30 @@
+//! The RACAM workload-mapping framework (paper §4).
+//!
+//! A GEMM `O[M,N] = I[M,K] × W[K,N]` is mapped onto the DRAM hierarchy in
+//! two stages:
+//!
+//! 1. **Hierarchical mapping** — each parallelism level (Channel, Rank,
+//!    Device, Bank, Array/Block) is assigned one matmul dimension, which is
+//!    tiled across that level (§4.1).  Dimensions mapped to `N` replicate
+//!    the input `I` (broadcast); dimensions mapped to `K` produce partial
+//!    outputs (reduction).
+//! 2. **Block mapping** — within a block, the dimensions are split between
+//!    the row axis and the column axis (§4.2), determining the data layout
+//!    and whether the fused `pim_mul_red` column reduction applies.
+//!
+//! The framework enumerates the full space (3⁵ hierarchical × 6 block
+//! mappings = 1458 candidates for GEMM, 2⁵ × 6 = 192 for GEMV — the paper
+//! reports "1,548", which we read as a digit transposition of 1458 since
+//! the GEMV count matches exactly), evaluates each with the analytical
+//! software + hardware models (§4.4), and returns the latency-optimal one.
+
+mod engine;
+mod model_hw;
+mod model_sw;
+mod space;
+pub mod store;
+
+pub use engine::{MappingEngine, SearchResult};
+pub use model_hw::{HwModel, PassCosts};
+pub use model_sw::{evaluate, Evaluation, LevelUsage};
+pub use space::{enumerate_mappings, BlockMapping, Dim, DimSet, HierMapping, Level, Mapping, LEVELS};

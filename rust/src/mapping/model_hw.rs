@@ -1,0 +1,172 @@
+//! Hardware model (paper §4.4): architecture description + compute model +
+//! I/O model.  Given a tile and its mapping, the compute model prices the
+//! block-level PIM instruction stream; the I/O model prices host↔DRAM
+//! interactions (input broadcast, output collection, host-side reduction).
+
+use crate::config::{Features, HwConfig, Precision};
+use crate::dram::{Geometry, SalpScheduler};
+use crate::pim::isa::{instr_latency, InstrClass};
+
+/// Pre-computed per-pass instruction costs for one (precision, features)
+/// point — the hot path of mapping search evaluates thousands of mappings,
+/// so these are computed once per search.
+#[derive(Debug, Clone, Copy)]
+pub struct PassCosts {
+    /// One `pim_mul_red` SIMD pass (multiply + fused column reduction).
+    pub mulred_ns: f64,
+    /// One `pim_mul` SIMD pass.
+    pub mul_ns: f64,
+    /// One `pim_add` SIMD pass (bit-serial accumulate).
+    pub add_ns: f64,
+    /// One `pim_add_parallel` (int32 accumulator add).
+    pub addpar_ns: f64,
+    /// Row accesses per `pim_mul` pass (Fig. 1 accounting).
+    pub mul_row_accesses: u64,
+}
+
+/// The §4.4 hardware model: architectural description (geometry),
+/// compute model (PIM instruction latencies) and I/O model (effective
+/// bandwidths).
+#[derive(Debug, Clone)]
+pub struct HwModel {
+    pub hw: HwConfig,
+    pub geo: Geometry,
+    /// Pre-computed per-precision pass costs (int2/int4/int8/int16 order) —
+    /// the mapping search evaluates thousands of candidates, so instruction
+    /// latencies are derived once per model, not once per evaluation.
+    costs: [PassCosts; 4],
+}
+
+impl HwModel {
+    pub fn new(hw: &HwConfig) -> Self {
+        let geo = Geometry::new(hw.dram, hw.periph.pes_per_bank);
+        let salp = if hw.features.locality_buffer {
+            SalpScheduler::new(hw.timing, hw.dram.subarrays)
+        } else {
+            SalpScheduler::disabled(hw.timing, hw.dram.subarrays)
+        };
+        let compute = |prec: Precision| -> PassCosts {
+            let t = &hw.timing;
+            let f = &hw.features;
+            let mulred = instr_latency(InstrClass::MulRed, prec, t, &salp, f);
+            let mul = instr_latency(InstrClass::Mul, prec, t, &salp, f);
+            let add = instr_latency(InstrClass::Add, prec, t, &salp, f);
+            let addpar = instr_latency(InstrClass::AddParallel, prec, t, &salp, f);
+            PassCosts {
+                mulred_ns: mulred.total_ns(),
+                mul_ns: mul.total_ns(),
+                add_ns: add.total_ns(),
+                addpar_ns: addpar.total_ns(),
+                mul_row_accesses: mul.row_accesses,
+            }
+        };
+        let costs = [
+            compute(Precision::Int2),
+            compute(Precision::Int4),
+            compute(Precision::Int8),
+            compute(Precision::Int16),
+        ];
+        HwModel { hw: hw.clone(), geo, costs }
+    }
+
+    /// Same hardware with a different feature set (ablation studies).
+    pub fn with_features(&self, f: Features) -> HwModel {
+        let mut hw = self.hw.clone();
+        hw.features = f;
+        HwModel::new(&hw)
+    }
+
+    pub fn features(&self) -> &Features {
+        &self.hw.features
+    }
+
+    /// Parallelism level counts in [`super::LEVELS`] order
+    /// (C, R, D, B, A) — A is blocks per bank.
+    pub fn level_counts(&self) -> [u64; 5] {
+        let d = &self.hw.dram;
+        [
+            d.channels as u64,
+            d.ranks as u64,
+            d.devices as u64,
+            d.banks as u64,
+            self.geo.blocks_per_bank() as u64,
+        ]
+    }
+
+    /// Block width in columns (= PE count per bank).
+    pub fn block_width(&self) -> u64 {
+        self.hw.periph.pes_per_bank as u64
+    }
+
+    /// Compute-parallel units: banks across the system (blocks within a
+    /// bank share its PE array and execute serially, §3.3/SALP).
+    pub fn parallel_banks(&self) -> u64 {
+        self.hw.dram.total_banks()
+    }
+
+    /// Per-pass instruction costs at `prec` (pre-computed at construction).
+    pub fn pass_costs(&self, prec: Precision) -> PassCosts {
+        self.costs[match prec {
+            Precision::Int2 => 0,
+            Precision::Int4 => 1,
+            Precision::Int8 => 2,
+            Precision::Int16 => 3,
+        }]
+    }
+
+    /// Effective per-channel host↔DRAM bandwidth, bytes/ns.
+    pub fn channel_bw_bytes_per_ns(&self) -> f64 {
+        self.hw.dram.channel_bw_bytes() * self.hw.timing.channel_efficiency / 1e9
+    }
+
+    /// Ideal MAC time at `prec` (ns per MAC per PE) — the utilization
+    /// denominator (peak: every PE retires one MAC per multiply pass).
+    pub fn ideal_mac_ns(&self, prec: Precision) -> f64 {
+        self.hw.mul_pass_ns(prec)
+    }
+
+    /// Host-side add cost, ns per element.
+    pub fn host_add_ns(&self) -> f64 {
+        self.hw.timing.host_add_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{racam_paper, Features, Precision};
+
+    #[test]
+    fn level_counts_paper() {
+        let m = HwModel::new(&racam_paper());
+        assert_eq!(m.level_counts(), [8, 32, 8, 16, 2048]);
+        assert_eq!(m.block_width(), 1024);
+        assert_eq!(m.parallel_banks(), 32768);
+    }
+
+    #[test]
+    fn pass_costs_reflect_features() {
+        let m = HwModel::new(&racam_paper());
+        let full = m.pass_costs(Precision::Int8);
+        let no_lb = m.with_features(Features::NO_PR_BU_LB).pass_costs(Precision::Int8);
+        assert!(no_lb.mul_ns > 3.0 * full.mul_ns);
+        assert!(no_lb.mul_row_accesses > full.mul_row_accesses);
+    }
+
+    #[test]
+    fn bandwidth_is_efficiency_scaled() {
+        let m = HwModel::new(&racam_paper());
+        let raw = m.hw.dram.channel_bw_bytes() / 1e9;
+        assert!(m.channel_bw_bytes_per_ns() < raw);
+        assert!(m.channel_bw_bytes_per_ns() > 0.5 * raw);
+    }
+
+    #[test]
+    fn ideal_mac_matches_tops_calibration() {
+        let m = HwModel::new(&racam_paper());
+        let macs_per_sec = m.parallel_banks() as f64 * m.block_width() as f64
+            / (m.ideal_mac_ns(Precision::Int8) * 1e-9);
+        let tops = 2.0 * macs_per_sec / 1e12;
+        assert!((tops - 986.9).abs() < 1.0, "{tops}");
+    }
+}

@@ -1,0 +1,446 @@
+//! Software model (paper §4.4): applies hierarchical + temporal tiling for
+//! a given mapping, schedules across DRAM hierarchies, and accumulates the
+//! per-tile compute and I/O latencies returned by the hardware model into
+//! the total kernel latency — the objective the mapping engine minimizes.
+
+use super::model_hw::HwModel;
+use super::space::{Dim, Level, Mapping, LEVELS};
+use crate::config::MatmulShape;
+
+/// Per-level parallel-unit usage (for the Fig. 16 utilization report).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LevelUsage {
+    /// Units actually carrying work, per level (C, R, D, B, A order).
+    pub used: [u64; 5],
+    /// Units available, per level.
+    pub avail: [u64; 5],
+}
+
+impl LevelUsage {
+    pub fn fraction(&self, level: Level) -> f64 {
+        let i = LEVELS.iter().position(|l| *l == level).unwrap();
+        self.used[i] as f64 / self.avail[i] as f64
+    }
+
+    /// Fraction of compute-parallel banks in use (excludes the A level,
+    /// whose blocks share a bank's PE array).
+    pub fn bank_fraction(&self) -> f64 {
+        (0..4).map(|i| self.used[i] as f64 / self.avail[i] as f64).product()
+    }
+}
+
+/// Result of evaluating one mapping candidate.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub mapping: Mapping,
+    /// Block/bank tile after hierarchical splitting: (Mt, Kt, Nt).
+    pub tile: (u64, u64, u64),
+    /// PIM compute latency, ns (the "PIM Latency" of Fig. 17).
+    pub compute_ns: f64,
+    /// Input layout/broadcast latency, ns.
+    pub io_in_ns: f64,
+    /// Output collection latency, ns.
+    pub io_out_ns: f64,
+    /// Host-side reduction latency, ns (part of I/O in Fig. 17).
+    pub host_reduce_ns: f64,
+    /// External (host↔DRAM channel) input traffic, bytes.
+    pub io_in_bytes: u64,
+    /// External output traffic, bytes.
+    pub io_out_bytes: u64,
+    /// Total SIMD passes issued across the system.
+    pub passes: f64,
+    /// Total DRAM row accesses for operand streaming.
+    pub row_accesses: f64,
+    /// PE utilization: ideal time at peak MAC rate / achieved compute time,
+    /// scaled by the fraction of banks in use.
+    pub pe_util: f64,
+    pub usage: LevelUsage,
+}
+
+impl Evaluation {
+    /// Total kernel latency: input layout, then compute, then collection
+    /// (+host reduction) — the additive decomposition of Fig. 17.
+    pub fn total_ns(&self) -> f64 {
+        self.compute_ns + self.io_ns()
+    }
+
+    /// Total I/O latency (the orange bars of Fig. 17).
+    pub fn io_ns(&self) -> f64 {
+        self.io_in_ns + self.io_out_ns + self.host_reduce_ns
+    }
+}
+
+/// Fixed per-kernel command overhead (pim_enable/disable, MRS writes, and
+/// the SALP pipeline fill of the first pass), ns.
+const KERNEL_OVERHEAD_NS: f64 = 50.0;
+/// Transpose-on-collection penalty for vertically-laid-out outputs.
+const VERTICAL_COLLECT_PENALTY: f64 = 1.25;
+
+/// Evaluate one mapping of `shape` on `hw`.  Returns `None` only for
+/// degenerate shapes (zero-sized dims).
+///
+/// When the rank level carries a *replicated* dimension (N for the input,
+/// or M for a dynamic weight), every additional rank costs another copy on
+/// the shared channel bus; the scheduler is free to restrict how many
+/// ranks it actually spreads over (idle ranks simply hold no tile), so the
+/// evaluation sweeps the rank replication degree and keeps the best —
+/// this is part of the temporal-tiling freedom of §4.3.
+pub fn evaluate(shape: &MatmulShape, mapping: &Mapping, hw: &HwModel) -> Option<Evaluation> {
+    let counts = hw.level_counts();
+    let rank_dim = mapping.hier.assign[1];
+    let sweep_rank = rank_dim == Dim::N || (rank_dim == Dim::M && !shape.weight_static);
+    if !sweep_rank {
+        return evaluate_with_counts(shape, mapping, hw, counts);
+    }
+    let mut best: Option<Evaluation> = None;
+    let mut r = 1u64;
+    loop {
+        let mut c = counts;
+        c[1] = r.min(counts[1]);
+        if let Some(e) = evaluate_with_counts(shape, mapping, hw, c) {
+            if best.as_ref().map_or(true, |b| e.total_ns() < b.total_ns()) {
+                best = Some(e);
+            }
+        }
+        if r >= counts[1] {
+            break;
+        }
+        r *= 2;
+    }
+    best
+}
+
+fn evaluate_with_counts(
+    shape: &MatmulShape,
+    mapping: &Mapping,
+    hw: &HwModel,
+    counts: [u64; 5],
+) -> Option<Evaluation> {
+    if shape.m == 0 || shape.k == 0 || shape.n == 0 {
+        return None;
+    }
+    let assign = mapping.hier.assign;
+    let f = hw.features();
+
+    // ❶ Hierarchical tiling (§4.1): split each dim by the product of its
+    //    levels' counts; compute per-level used units greedily outer→inner.
+    let dim_size = |d: Dim| match d {
+        Dim::M => shape.m,
+        Dim::N => shape.n,
+        Dim::K => shape.k,
+    };
+    let mut split = [1u64; 3];
+    for (l, d) in assign.iter().enumerate() {
+        split[*d as usize] = split[*d as usize].saturating_mul(counts[l]);
+    }
+    let tile = |d: Dim| dim_size(d).div_ceil(split[d as usize]);
+    let (tile_m, tile_k, tile_n) = (tile(Dim::M), tile(Dim::K), tile(Dim::N));
+
+    let mut rem = [
+        shape.m.div_ceil(tile_m), // units needed along M
+        shape.n.div_ceil(tile_n),
+        shape.k.div_ceil(tile_k),
+    ];
+    let rem_idx = |d: Dim| match d {
+        Dim::M => 0usize,
+        Dim::N => 1,
+        Dim::K => 2,
+    };
+    let mut used = [1u64; 5];
+    for (l, d) in assign.iter().enumerate() {
+        let r = &mut rem[rem_idx(*d)];
+        used[l] = counts[l].min((*r).max(1));
+        *r = (*r).div_ceil(used[l]);
+    }
+    let usage = LevelUsage { used, avail: counts };
+    let banks_used: u64 = used[..4].iter().product();
+    let blocks_per_bank_used = used[4];
+
+    // ❷ Block compute model (§4.2): the block-mapping decides the
+    //    instruction mix.
+    let w = hw.block_width();
+    let costs = hw.pass_costs(shape.prec);
+    let k_on_cols = mapping.block.k_on_cols();
+
+    let (block_passes, block_ns, _col_occupancy) = if k_on_cols {
+        // Fused multiply + popcount column reduction: one output tuple per
+        // pass, K chunked by the PE width; chunks fold together through
+        // pim_add_parallel.
+        let chunks = tile_k.div_ceil(w);
+        let out_tuples = tile_m * tile_n;
+        let passes = out_tuples as f64 * chunks as f64;
+        let occupancy = tile_k as f64 / (chunks * w) as f64;
+        if f.popcount_reduction {
+            // Successive K-chunks of one output keep accumulating in the
+            // reduction unit's register, so the drain + horizontal
+            // writeback is paid once per output, not per pass.
+            let drain = costs.mulred_ns - costs.mul_ns;
+            let ns = passes * costs.mul_ns + out_tuples as f64 * drain;
+            (passes, ns, occupancy)
+        } else {
+            // No PR unit: cross-column reduction falls back to log₂(width)
+            // SIMDRAM-style shifted bit-serial adds in the array — the
+            // Fig. 12 "-PR" cost the paper describes as exporting the
+            // reduction out of the dedicated unit.
+            let tree = (w.min(tile_k).max(2) as f64).log2().ceil();
+            let ns = passes * costs.mul_ns + out_tuples as f64 * tree * costs.add_ns;
+            (passes, ns, occupancy)
+        }
+    } else {
+        // K along rows: per-column accumulation via pim_mul + pim_add; the
+        // columns carry output tuples, remaining output dims iterate on
+        // the row axis.
+        let col_dims = mapping.block.col_dims;
+        let out_cols: u64 = col_dims
+            .iter()
+            .map(|d| match d {
+                Dim::M => tile_m,
+                Dim::N => tile_n,
+                Dim::K => 1,
+            })
+            .product();
+        let row_out: u64 = mapping
+            .block
+            .row_dims()
+            .iter()
+            .map(|d| match d {
+                Dim::M => tile_m,
+                Dim::N => tile_n,
+                Dim::K => 1,
+            })
+            .product();
+        let col_chunks = out_cols.div_ceil(w);
+        let passes = tile_k as f64 * col_chunks as f64 * row_out as f64;
+        let ns = passes * (costs.mul_ns + costs.add_ns);
+        (passes, ns, out_cols as f64 / (col_chunks * w) as f64)
+    };
+
+    // Blocks within a bank share its PE array → serialize (§3.3).
+    let compute_ns = block_ns * blocks_per_bank_used as f64 + KERNEL_OVERHEAD_NS;
+    let total_passes = block_passes * blocks_per_bank_used as f64 * banks_used as f64;
+    let row_accesses = total_passes * costs.mul_row_accesses as f64;
+
+    // ❸ I/O model (§4.4): input layout/broadcast + output collection.
+    let bw = hw.channel_bw_bytes_per_ns();
+    // Internal fabric advantage for resident-operand relayout (global
+    // bitlines + broadcast demuxes run well above the external channel).
+    const INTERNAL_BW_FACTOR: f64 = 4.0;
+    let ch_dim = assign[0];
+    let used_c = used[0];
+
+    // One dynamic operand: `partition` are the dims indexing it, `dup` the
+    // dim whose spatial copies replicate it.  Within a block the operand is
+    // written once and *reused temporally* across the other dims' slots
+    // (§4.3), so only spatial copies cost traffic.
+    let dyn_io = |bytes: u64, partition: [Dim; 2], dup: Dim| -> (f64, u64) {
+        // Share of the operand a single channel receives.
+        let per_channel =
+            if partition.contains(&ch_dim) { bytes as f64 / used_c as f64 } else { bytes as f64 };
+        // Rank-level replication serializes on the shared channel bus.
+        let rank_mult = if assign[1] == dup { used[1] } else { 1 };
+        // Device/bank/array spatial replication rides the internal demux
+        // network when broadcast units exist; otherwise the host writes
+        // every copy over the channel.
+        let low_dup: u64 = (2..5).map(|l| if assign[l] == dup { used[l] } else { 1 }).product();
+        let ext_mult = if f.broadcast_unit { 1 } else { low_dup };
+        let per_channel_bytes = per_channel * rank_mult as f64 * ext_mult as f64;
+        if shape.input_resident && f.broadcast_unit {
+            // Already in PIM DRAM: relayout entirely on the internal fabric.
+            (per_channel_bytes / (bw * INTERNAL_BW_FACTOR), 0)
+        } else if shape.input_resident {
+            // Resident but no broadcast hardware: the host reads the data
+            // out and writes every copy back (2× the channel crossings).
+            (2.0 * per_channel_bytes / bw, (2.0 * per_channel_bytes * used_c as f64) as u64)
+        } else {
+            (per_channel_bytes / bw, (per_channel_bytes * used_c as f64) as u64)
+        }
+    };
+
+    let mut io_in_ns = 0.0;
+    let mut io_in_bytes = 0u64;
+    {
+        let (ns, bytes) = dyn_io(shape.input_bytes(), [Dim::M, Dim::K], Dim::N);
+        io_in_ns += ns;
+        io_in_bytes += bytes;
+    }
+    if !shape.weight_static {
+        let (ns, bytes) = dyn_io(shape.weight_bytes(), [Dim::K, Dim::N], Dim::M);
+        io_in_ns += ns;
+        io_in_bytes += bytes;
+    }
+
+    // Output collection: partial outputs per K-mapped level above A must
+    // be fetched and reduced by the host; A-level partials fold in-bank via
+    // pim_add_parallel (needs the PR unit's accumulator).
+    let mut partials: u64 = (0..4).map(|l| if assign[l] == Dim::K { used[l] } else { 1 }).product();
+    let mut bank_addpar_ns = 0.0;
+    if assign[4] == Dim::K {
+        if f.popcount_reduction {
+            bank_addpar_ns = used[4].saturating_sub(1) as f64 * costs.addpar_ns;
+        } else {
+            partials = partials.saturating_mul(used[4]);
+        }
+    }
+
+    let (out_bytes_total, host_reduce_ns) = if partials > 1 {
+        // Host fetches every partial, reduces, and writes the result back
+        // to DRAM for the next kernel.
+        let base = shape.output_bytes() * (partials + 1);
+        let reduce = (partials - 1) as f64 * (shape.m * shape.n) as f64 * hw.host_add_ns();
+        let penalty = if k_on_cols { 1.0 } else { VERTICAL_COLLECT_PENALTY };
+        ((base as f64 * penalty) as u64, reduce)
+    } else {
+        // Fully reduced in-DRAM: the output stays resident where the next
+        // kernel consumes it (the paper's Fig. 16 I/O shares confirm
+        // outputs are not collected per kernel).
+        (0, 0.0)
+    };
+    // Channels drain their shares in parallel unless K lives on channels
+    // (then every channel returns a full-size partial).
+    let out_per_channel =
+        if ch_dim == Dim::K { out_bytes_total as f64 } else { out_bytes_total as f64 / used_c as f64 };
+    let io_out_ns = out_per_channel / bw + bank_addpar_ns;
+
+    // ❹ Utilization: achieved vs. peak MAC throughput.
+    let total_pes = hw.parallel_banks() as f64 * w as f64;
+    let ideal_ns = shape.macs() as f64 * hw.ideal_mac_ns(shape.prec) / total_pes;
+    let pe_util = (ideal_ns / compute_ns.max(f64::MIN_POSITIVE)).min(1.0);
+
+    Some(Evaluation {
+        mapping: *mapping,
+        tile: (tile_m, tile_k, tile_n),
+        compute_ns,
+        io_in_ns,
+        io_out_ns,
+        host_reduce_ns,
+        io_in_bytes,
+        io_out_bytes: out_bytes_total,
+        passes: total_passes,
+        row_accesses,
+        // `compute_ns` already pays for idle columns (passes cover the full
+        // PE width) and idle banks (ideal_ns assumes all of them), so
+        // `pe_util` needs no extra occupancy factor.
+        pe_util,
+        usage,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{racam_paper, Features, MatmulShape, Precision};
+    use crate::mapping::space::{enumerate_mappings, BlockMapping, DimSet, HierMapping};
+
+    fn hw() -> HwModel {
+        HwModel::new(&racam_paper())
+    }
+
+    fn best(shape: &MatmulShape, hw: &HwModel) -> Evaluation {
+        enumerate_mappings(shape)
+            .iter()
+            .filter_map(|m| evaluate(shape, m, hw))
+            .min_by(|a, b| a.total_ns().total_cmp(&b.total_ns()))
+            .unwrap()
+    }
+
+    #[test]
+    fn all_gemm_mappings_evaluate() {
+        let s = MatmulShape::new(1024, 12288, 12288, Precision::Int8);
+        let hw = hw();
+        let evals: Vec<_> =
+            enumerate_mappings(&s).iter().filter_map(|m| evaluate(&s, m, &hw)).collect();
+        assert_eq!(evals.len(), 1458);
+        for e in &evals {
+            assert!(e.total_ns().is_finite() && e.total_ns() > 0.0, "{}", e.mapping);
+            assert!(e.pe_util >= 0.0 && e.pe_util <= 1.0);
+        }
+    }
+
+    #[test]
+    fn mapping_spread_is_large() {
+        // Paper Fig. 15: max/min ≈ 510x for 1024×12288×12288.
+        let s = MatmulShape::new(1024, 12288, 12288, Precision::Int8);
+        let hw = hw();
+        let totals: Vec<f64> = enumerate_mappings(&s)
+            .iter()
+            .filter_map(|m| evaluate(&s, m, &hw))
+            .map(|e| e.total_ns())
+            .collect();
+        let max = totals.iter().cloned().fold(0.0, f64::max);
+        let min = totals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let spread = max / min;
+        assert!(spread > 50.0, "mapping spread only {spread:.1}x");
+    }
+
+    #[test]
+    fn best_gemm_mapping_uses_column_reduction() {
+        // Paper Fig. 15: reduction-friendly block mappings (K on columns)
+        // dominate because they exploit the popcount unit.
+        let s = MatmulShape::new(1024, 12288, 12288, Precision::Int8);
+        let e = best(&s, &hw());
+        assert!(e.mapping.block.k_on_cols(), "winner was {}", e.mapping);
+    }
+
+    #[test]
+    fn larger_gemm_has_higher_utilization() {
+        // Paper Fig. 16a: PE utilization grows with GEMM size.
+        let hw = hw();
+        let small = best(&MatmulShape::new(2048, 2048, 2048, Precision::Int8), &hw);
+        let large = best(&MatmulShape::new(8192, 8192, 8192, Precision::Int8), &hw);
+        assert!(large.pe_util > small.pe_util, "{} vs {}", large.pe_util, small.pe_util);
+    }
+
+    #[test]
+    fn gemv_utilization_is_low() {
+        // Paper Fig. 16b: ~7% for 1×2048×2048.
+        let e = best(&MatmulShape::new(1, 2048, 2048, Precision::Int8), &hw());
+        assert!(e.pe_util < 0.25, "GEMV util {}", e.pe_util);
+    }
+
+    #[test]
+    fn static_weights_cost_no_input_io() {
+        let hw = hw();
+        let mut s = MatmulShape::new(512, 4096, 4096, Precision::Int8);
+        let m = enumerate_mappings(&s)[0];
+        let with_static = evaluate(&s, &m, &hw).unwrap();
+        s.weight_static = false;
+        let with_dynamic = evaluate(&s, &m, &hw).unwrap();
+        assert!(with_dynamic.io_in_bytes > with_static.io_in_bytes);
+    }
+
+    #[test]
+    fn broadcast_ablation_increases_external_input_traffic() {
+        let s = MatmulShape::new(1, 12288, 12288, Precision::Int8);
+        let hw_full = hw();
+        let hw_nobu = hw_full.with_features(Features { broadcast_unit: false, ..Features::ALL });
+        let b_full = best(&s, &hw_full);
+        let b_nobu = best(&s, &hw_nobu);
+        assert!(
+            b_nobu.total_ns() > b_full.total_ns(),
+            "no-BU {} vs full {}",
+            b_nobu.total_ns(),
+            b_full.total_ns()
+        );
+    }
+
+    #[test]
+    fn k_on_high_levels_requires_host_reduction() {
+        let s = MatmulShape::new(64, 8192, 64, Precision::Int8);
+        let hw = hw();
+        // Force K onto ranks: partial outputs × used ranks.
+        let m = Mapping {
+            hier: HierMapping { assign: [Dim::M, Dim::K, Dim::N, Dim::M, Dim::K] },
+            block: BlockMapping::new(DimSet::of(&[Dim::K])),
+        };
+        let e = evaluate(&s, &m, &hw).unwrap();
+        assert!(e.host_reduce_ns > 0.0);
+        assert!(e.io_out_bytes > s.output_bytes());
+    }
+
+    #[test]
+    fn degenerate_shape_returns_none() {
+        let s = MatmulShape::new(0, 4, 4, Precision::Int8);
+        let m = enumerate_mappings(&MatmulShape::new(1, 4, 4, Precision::Int8))[0];
+        assert!(evaluate(&s, &m, &hw()).is_none());
+    }
+}

@@ -1,0 +1,267 @@
+//! Mapping-space types and exhaustive enumeration (paper §4.1–§4.2).
+
+use crate::config::MatmulShape;
+use std::fmt;
+
+/// A matmul dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dim {
+    M,
+    N,
+    K,
+}
+
+impl Dim {
+    pub const ALL: [Dim; 3] = [Dim::M, Dim::N, Dim::K];
+
+    pub fn letter(&self) -> char {
+        match self {
+            Dim::M => 'M',
+            Dim::N => 'N',
+            Dim::K => 'K',
+        }
+    }
+}
+
+/// A parallelism level of the DRAM hierarchy (§4: C, R, D, B, A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Level {
+    Channel,
+    Rank,
+    Device,
+    Bank,
+    /// Block/array level: vertical slices of subarrays (§4's "Blocks").
+    Array,
+}
+
+impl Level {
+    pub fn letter(&self) -> char {
+        match self {
+            Level::Channel => 'C',
+            Level::Rank => 'R',
+            Level::Device => 'D',
+            Level::Bank => 'B',
+            Level::Array => 'A',
+        }
+    }
+}
+
+/// Canonical level order used throughout (outermost → innermost).
+pub const LEVELS: [Level; 5] = [Level::Channel, Level::Rank, Level::Device, Level::Bank, Level::Array];
+
+/// A small set of dims (bitmask).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct DimSet(u8);
+
+impl DimSet {
+    pub const EMPTY: DimSet = DimSet(0);
+
+    pub fn of(dims: &[Dim]) -> DimSet {
+        let mut s = DimSet(0);
+        for d in dims {
+            s = s.with(*d);
+        }
+        s
+    }
+
+    pub fn with(self, d: Dim) -> DimSet {
+        DimSet(self.0 | 1 << d as u8)
+    }
+
+    pub fn contains(&self, d: Dim) -> bool {
+        self.0 & (1 << d as u8) != 0
+    }
+
+    pub fn complement(&self) -> DimSet {
+        DimSet(!self.0 & 0b111)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Dim> + '_ {
+        Dim::ALL.into_iter().filter(|d| self.contains(*d))
+    }
+
+    pub fn letters(&self) -> String {
+        self.iter().map(|d| d.letter()).collect()
+    }
+}
+
+/// Hierarchical mapping: one dim per level, in [`LEVELS`] order (§4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HierMapping {
+    pub assign: [Dim; 5],
+}
+
+impl HierMapping {
+    pub fn dim_of(&self, level: Level) -> Dim {
+        self.assign[LEVELS.iter().position(|l| *l == level).unwrap()]
+    }
+
+    /// Levels assigned to `d`, in canonical order.
+    pub fn levels_of(&self, d: Dim) -> impl Iterator<Item = Level> + '_ {
+        LEVELS.into_iter().zip(self.assign).filter_map(move |(l, a)| (a == d).then_some(l))
+    }
+}
+
+impl fmt::Display for HierMapping {
+    /// Paper Fig. 7 style: `{M: RB, N: CD, K: A}`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, d) in Dim::ALL.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}: ", d.letter())?;
+            let mut any = false;
+            for l in self.levels_of(*d) {
+                write!(f, "{}", l.letter())?;
+                any = true;
+            }
+            if !any {
+                write!(f, "-")?;
+            }
+        }
+        write!(f, "}}")
+    }
+}
+
+/// Block mapping: which dims lie along the block's columns; the rest lie
+/// along rows (§4.2).  `{R: MN, C: K}` means K along columns (reduced by
+/// the popcount unit) and the M/N output tuples along rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockMapping {
+    pub col_dims: DimSet,
+}
+
+impl BlockMapping {
+    pub fn new(col_dims: DimSet) -> Self {
+        assert!(!col_dims.is_empty() && !col_dims.complement().is_empty(), "both axes need a dim");
+        BlockMapping { col_dims }
+    }
+
+    pub fn row_dims(&self) -> DimSet {
+        self.col_dims.complement()
+    }
+
+    /// Column reduction (fused `pim_mul_red`) applies iff K is on columns.
+    pub fn k_on_cols(&self) -> bool {
+        self.col_dims.contains(Dim::K)
+    }
+
+    /// All 6 valid partitions of {M, N, K} into (rows, cols).
+    pub fn all() -> Vec<BlockMapping> {
+        (1u8..7)
+            .map(|bits| BlockMapping { col_dims: DimSet(bits) })
+            .collect()
+    }
+
+    /// Paper Fig. 15 style label, e.g. `RNCMK` = rows:N, cols:MK.
+    pub fn label(&self) -> String {
+        format!("R{}C{}", self.row_dims().letters(), self.col_dims.letters())
+    }
+}
+
+/// A complete mapping candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Mapping {
+    pub hier: HierMapping,
+    pub block: BlockMapping,
+}
+
+impl fmt::Display for Mapping {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} × {}", self.hier, self.block.label())
+    }
+}
+
+/// Enumerate the full mapping space for a shape.
+///
+/// GEMV shapes (`m == 1`) exclude M from the hierarchical assignment —
+/// there is nothing to tile — giving 2⁵ × 6 = 192 candidates; full GEMMs
+/// give 3⁵ × 6 = 1458.
+pub fn enumerate_mappings(shape: &MatmulShape) -> Vec<Mapping> {
+    let dims: &[Dim] = if shape.m == 1 { &[Dim::N, Dim::K] } else { &Dim::ALL };
+    let blocks = BlockMapping::all();
+    let mut out = Vec::with_capacity(dims.len().pow(5) * blocks.len());
+    let mut assign = [Dim::M; 5];
+    fn rec(dims: &[Dim], assign: &mut [Dim; 5], i: usize, blocks: &[BlockMapping], out: &mut Vec<Mapping>) {
+        if i == 5 {
+            for b in blocks {
+                out.push(Mapping { hier: HierMapping { assign: *assign }, block: *b });
+            }
+            return;
+        }
+        for d in dims {
+            assign[i] = *d;
+            rec(dims, assign, i + 1, blocks, out);
+        }
+    }
+    rec(dims, &mut assign, 0, &blocks, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+
+    #[test]
+    fn gemm_space_is_1458() {
+        let s = MatmulShape::new(1024, 12288, 12288, Precision::Int8);
+        assert_eq!(enumerate_mappings(&s).len(), 1458); // 3^5 × 6
+    }
+
+    #[test]
+    fn gemv_space_is_192() {
+        // Paper §7: "192 for GEMV".
+        let s = MatmulShape::new(1, 2048, 2048, Precision::Int8);
+        assert_eq!(enumerate_mappings(&s).len(), 192); // 2^5 × 6
+    }
+
+    #[test]
+    fn mappings_are_unique() {
+        let s = MatmulShape::new(64, 64, 64, Precision::Int8);
+        let all = enumerate_mappings(&s);
+        let set: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(set.len(), all.len());
+    }
+
+    #[test]
+    fn block_mappings_partition_properly() {
+        for b in BlockMapping::all() {
+            assert!(!b.col_dims.is_empty());
+            assert!(!b.row_dims().is_empty());
+            for d in Dim::ALL {
+                assert!(b.col_dims.contains(d) ^ b.row_dims().contains(d));
+            }
+        }
+        assert_eq!(BlockMapping::all().len(), 6);
+    }
+
+    #[test]
+    fn display_formats() {
+        let h = HierMapping { assign: [Dim::N, Dim::M, Dim::N, Dim::M, Dim::K] };
+        assert_eq!(h.to_string(), "{M: RB, N: CD, K: A}"); // paper Fig. 7
+        let b = BlockMapping::new(DimSet::of(&[Dim::M, Dim::K]));
+        assert_eq!(b.label(), "RNCMK"); // paper Fig. 15's winner
+    }
+
+    #[test]
+    fn dimset_ops() {
+        let s = DimSet::of(&[Dim::M, Dim::K]);
+        assert!(s.contains(Dim::M) && s.contains(Dim::K) && !s.contains(Dim::N));
+        assert_eq!(s.complement(), DimSet::of(&[Dim::N]));
+        assert_eq!(s.letters(), "MK");
+    }
+
+    #[test]
+    fn levels_of_respects_order() {
+        let h = HierMapping { assign: [Dim::K, Dim::M, Dim::K, Dim::M, Dim::M] };
+        let ks: Vec<Level> = h.levels_of(Dim::K).collect();
+        assert_eq!(ks, vec![Level::Channel, Level::Device]);
+        assert_eq!(h.dim_of(Level::Bank), Dim::M);
+    }
+}

@@ -1,0 +1,194 @@
+//! Mapping-table persistence (paper §7: "mappings for different token
+//! lengths can be precomputed or cached at runtime, effectively eliminating
+//! repeated search cost").  Searched results serialize to JSON; loading
+//! re-evaluates each stored mapping on the current hardware model (cheap —
+//! one evaluation instead of a full space search) so cached entries stay
+//! consistent with the config.
+
+use super::engine::{MappingEngine, SearchResult};
+use super::model_sw::evaluate;
+use super::space::{BlockMapping, Dim, DimSet, HierMapping, Mapping};
+use crate::config::json::{self, Value};
+use crate::config::{MatmulShape, Precision};
+use crate::Result;
+
+fn dim_from_letter(c: char) -> Option<Dim> {
+    match c {
+        'M' => Some(Dim::M),
+        'N' => Some(Dim::N),
+        'K' => Some(Dim::K),
+        _ => None,
+    }
+}
+
+/// Serialize one mapping as `"MNKMN|K"`: five hierarchical dim letters
+/// (C, R, D, B, A order) + the block mapping's column dims.
+pub fn mapping_to_string(m: &Mapping) -> String {
+    let hier: String = m.hier.assign.iter().map(|d| d.letter()).collect();
+    format!("{hier}|{}", m.block.col_dims.letters())
+}
+
+/// Parse the [`mapping_to_string`] format.
+pub fn mapping_from_string(s: &str) -> Result<Mapping> {
+    let (hier, cols) = s.split_once('|').ok_or_else(|| anyhow::anyhow!("missing '|' in '{s}'"))?;
+    anyhow::ensure!(hier.len() == 5, "hier part must have 5 letters, got '{hier}'");
+    let mut assign = [Dim::M; 5];
+    for (i, c) in hier.chars().enumerate() {
+        assign[i] = dim_from_letter(c).ok_or_else(|| anyhow::anyhow!("bad dim '{c}'"))?;
+    }
+    let mut col_dims = DimSet::EMPTY;
+    for c in cols.chars() {
+        col_dims = col_dims.with(dim_from_letter(c).ok_or_else(|| anyhow::anyhow!("bad dim '{c}'"))?);
+    }
+    anyhow::ensure!(!col_dims.is_empty() && !col_dims.complement().is_empty(), "invalid block mapping '{cols}'");
+    Ok(Mapping { hier: HierMapping { assign }, block: BlockMapping::new(col_dims) })
+}
+
+fn shape_to_value(s: &MatmulShape) -> Value {
+    Value::obj(vec![
+        ("m", Value::Num(s.m as f64)),
+        ("k", Value::Num(s.k as f64)),
+        ("n", Value::Num(s.n as f64)),
+        ("bits", Value::Num(s.prec.bits() as f64)),
+        ("weight_static", Value::Bool(s.weight_static)),
+        ("input_resident", Value::Bool(s.input_resident)),
+    ])
+}
+
+fn shape_from_value(v: &Value) -> Result<MatmulShape> {
+    let bits = v.get("bits")?.as_u32()?;
+    Ok(MatmulShape {
+        m: v.get("m")?.as_f64()? as u64,
+        k: v.get("k")?.as_f64()? as u64,
+        n: v.get("n")?.as_f64()? as u64,
+        prec: Precision::from_bits(bits)
+            .ok_or_else(|| anyhow::anyhow!("bad precision {bits}"))?,
+        weight_static: v.get("weight_static")?.as_bool()?,
+        input_resident: v.get("input_resident")?.as_bool()?,
+    })
+}
+
+/// Export an engine's cached search results.
+pub fn export(engine: &MappingEngine) -> Value {
+    let entries: Vec<Value> = engine
+        .cache_entries()
+        .map(|(shape, r)| {
+            Value::obj(vec![
+                ("shape", shape_to_value(shape)),
+                ("mapping", Value::Str(mapping_to_string(&r.best.mapping))),
+                ("candidates", Value::Num(r.candidates as f64)),
+                ("worst_ns", Value::Num(r.worst_ns)),
+            ])
+        })
+        .collect();
+    Value::obj(vec![("version", Value::Num(1.0)), ("entries", Value::Arr(entries))])
+}
+
+/// Import previously exported results into the engine's cache,
+/// re-evaluating each stored mapping on the engine's hardware model.
+/// Returns the number of entries imported.
+pub fn import(engine: &mut MappingEngine, v: &Value) -> Result<usize> {
+    anyhow::ensure!(v.get("version")?.as_f64()? == 1.0, "unknown mapping-store version");
+    let Value::Arr(entries) = v.get("entries")? else {
+        anyhow::bail!("entries must be an array")
+    };
+    let mut imported = 0;
+    for e in entries {
+        let shape = shape_from_value(e.get("shape")?)?;
+        let mapping = mapping_from_string(e.get("mapping")?.as_str()?)?;
+        let Some(eval) = evaluate(&shape, &mapping, engine.hw()) else {
+            continue;
+        };
+        let result = SearchResult {
+            best: eval,
+            candidates: e.get("candidates")?.as_f64()? as usize,
+            worst_ns: e.get("worst_ns")?.as_f64()?,
+        };
+        engine.cache_insert(shape, result);
+        imported += 1;
+    }
+    Ok(imported)
+}
+
+/// Save the engine's cache to a file.
+pub fn save_file(engine: &MappingEngine, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, export(engine).pretty())?;
+    Ok(())
+}
+
+/// Load a cache file into the engine.
+pub fn load_file(engine: &mut MappingEngine, path: &std::path::Path) -> Result<usize> {
+    let text = std::fs::read_to_string(path)?;
+    let v = json::parse(&text).map_err(anyhow::Error::from)?;
+    import(engine, &v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::racam_paper;
+    use crate::mapping::HwModel;
+
+    fn engine() -> MappingEngine {
+        MappingEngine::new(HwModel::new(&racam_paper()))
+    }
+
+    #[test]
+    fn mapping_string_roundtrip() {
+        let shape = MatmulShape::new(64, 64, 64, Precision::Int8);
+        for m in super::super::space::enumerate_mappings(&shape) {
+            let s = mapping_to_string(&m);
+            assert_eq!(mapping_from_string(&s).unwrap(), m, "{s}");
+        }
+    }
+
+    #[test]
+    fn export_import_restores_cached_latencies() {
+        let mut a = engine();
+        let shapes = [
+            MatmulShape::new(1, 4096, 4096, Precision::Int8),
+            MatmulShape::new(1024, 12288, 12288, Precision::Int8),
+            MatmulShape::new(64, 64, 64, Precision::Int4),
+        ];
+        for s in &shapes {
+            a.search_cached(s);
+        }
+        let exported = export(&a);
+
+        let mut b = engine();
+        let n = import(&mut b, &exported).unwrap();
+        assert_eq!(n, shapes.len());
+        for s in &shapes {
+            let misses_before = b.misses;
+            let from_cache = b.search_cached(s);
+            assert_eq!(b.misses, misses_before, "import must pre-warm the cache");
+            let fresh = a.search_cached(s);
+            assert!(
+                (from_cache.best.total_ns() - fresh.best.total_ns()).abs() < 1e-6,
+                "{}: cached {} vs fresh {}",
+                s.label(),
+                from_cache.best.total_ns(),
+                fresh.best.total_ns()
+            );
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut a = engine();
+        a.search_cached(&MatmulShape::new(1, 2048, 2048, Precision::Int8));
+        let path = std::env::temp_dir().join("racam_mapping_store_test.json");
+        save_file(&a, &path).unwrap();
+        let mut b = engine();
+        assert_eq!(load_file(&mut b, &path).unwrap(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(mapping_from_string("XYZ").is_err());
+        assert!(mapping_from_string("MMMMM|").is_err());
+        assert!(mapping_from_string("MMMM|K").is_err());
+        assert!(mapping_from_string("MMMMM|MNK").is_err()); // rows empty
+    }
+}

@@ -1,0 +1,101 @@
+//! Metrics: latency breakdowns, throughput conversions and geometric means
+//! used by every experiment (paper Figs. 9–17 all report one of these).
+
+/// PIM-vs-I/O latency decomposition of a kernel or workload (Fig. 17).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    /// Total latency of PIM compute commands, ns.
+    pub pim_ns: f64,
+    /// Total host-interaction latency (layout, collection, host reduce), ns.
+    pub io_ns: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn new(pim_ns: f64, io_ns: f64) -> Self {
+        LatencyBreakdown { pim_ns, io_ns }
+    }
+
+    pub fn total_ns(&self) -> f64 {
+        self.pim_ns + self.io_ns
+    }
+
+    pub fn pim_fraction(&self) -> f64 {
+        self.pim_ns / self.total_ns().max(f64::MIN_POSITIVE)
+    }
+
+    /// Accumulate another breakdown (kernel → layer → model).
+    pub fn add(&mut self, other: &LatencyBreakdown) {
+        self.pim_ns += other.pim_ns;
+        self.io_ns += other.io_ns;
+    }
+
+    pub fn scaled(&self, factor: f64) -> LatencyBreakdown {
+        LatencyBreakdown { pim_ns: self.pim_ns * factor, io_ns: self.io_ns * factor }
+    }
+}
+
+/// Throughput in requests (or tokens) per second from a latency in ns.
+pub fn throughput_per_s(latency_ns: f64) -> f64 {
+    1e9 / latency_ns.max(f64::MIN_POSITIVE)
+}
+
+/// Geometric mean (the paper's headline aggregations are geomeans).
+pub fn geomean(values: &[f64]) -> f64 {
+    assert!(!values.is_empty(), "geomean of empty slice");
+    let log_sum: f64 = values.iter().map(|v| v.max(f64::MIN_POSITIVE).ln()).sum();
+    (log_sum / values.len() as f64).exp()
+}
+
+/// Convert ns to a human string (ns/µs/ms/s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut b = LatencyBreakdown::new(100.0, 50.0);
+        b.add(&LatencyBreakdown::new(10.0, 5.0));
+        assert_eq!(b.total_ns(), 165.0);
+        assert!((b.pim_fraction() - 110.0 / 165.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[4.0, 1.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[3.0]) - 3.0).abs() < 1e-12);
+        assert!((geomean(&[10.0, 10.0, 10.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_inverse() {
+        assert!((throughput_per_s(1e9) - 1.0).abs() < 1e-12);
+        assert!((throughput_per_s(1e6) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(12.34), "12.3ns");
+        assert_eq!(fmt_ns(12_340.0), "12.34µs");
+        assert_eq!(fmt_ns(12_340_000.0), "12.34ms");
+        assert_eq!(fmt_ns(2.5e9), "2.500s");
+    }
+
+    #[test]
+    fn scaled_breakdown() {
+        let b = LatencyBreakdown::new(10.0, 20.0).scaled(3.0);
+        assert_eq!(b.pim_ns, 30.0);
+        assert_eq!(b.io_ns, 60.0);
+    }
+}

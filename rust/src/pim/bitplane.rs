@@ -1,0 +1,85 @@
+//! Bit-plane packing: the word-packed transposed representation shared by
+//! the locality buffer, popcount unit and functional executor (one `u64`
+//! word = 64 columns; plane *i* holds bit *i* of every column's operand).
+
+/// Pack per-lane values into `bits` bit-planes over `width` columns
+/// (lane *l*'s bit *i* → `planes[i]` bit *l*).
+///
+/// Hot path: uses the 64×64 butterfly transpose per word column (the same
+/// hardware trick the §2.2 transpose unit implements) instead of
+/// bit-by-bit packing.
+pub fn to_planes(values: &[u64], bits: usize, width: u32) -> Vec<Vec<u64>> {
+    assert!(values.len() <= width as usize, "more values than columns");
+    let words = (width as usize).div_ceil(64);
+    let mut planes = vec![vec![0u64; words]; bits];
+    let mask = if bits >= 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mut block = [0u64; 64];
+    for wi in 0..words {
+        block.fill(0);
+        let base = wi * 64;
+        for lane in 0..64 {
+            if let Some(&v) = values.get(base + lane) {
+                block[lane] = v & mask;
+            }
+        }
+        super::transpose::transpose64(&mut block);
+        for (i, plane) in planes.iter_mut().enumerate() {
+            plane[wi] = block[i];
+        }
+    }
+    planes
+}
+
+/// Unpack the first `count` lanes of a set of bit-planes back to values.
+pub fn from_planes(planes: &[Vec<u64>], count: usize) -> Vec<u64> {
+    (0..count)
+        .map(|lane| {
+            planes
+                .iter()
+                .enumerate()
+                .fold(0u64, |acc, (i, p)| acc | (((p[lane / 64] >> (lane % 64)) & 1) << i))
+        })
+        .collect()
+}
+
+/// Lane-mask with the low `valid` bits set, as packed words.
+pub fn lane_mask(valid: u32, width: u32) -> Vec<u64> {
+    let words = (width as usize).div_ceil(64);
+    let mut mask = vec![0u64; words];
+    for w in 0..words {
+        let lo = (w * 64) as u32;
+        if valid >= lo + 64 {
+            mask[w] = u64::MAX;
+        } else if valid > lo {
+            mask[w] = (1u64 << (valid - lo)) - 1;
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let vals: Vec<u64> = (0..100).map(|i| (i * 37) % 256).collect();
+        let planes = to_planes(&vals, 8, 128);
+        assert_eq!(planes.len(), 8);
+        assert_eq!(from_planes(&planes, 100), vals);
+    }
+
+    #[test]
+    fn lane_mask_shapes() {
+        assert_eq!(lane_mask(64, 64), vec![u64::MAX]);
+        assert_eq!(lane_mask(3, 64), vec![0b111]);
+        assert_eq!(lane_mask(70, 128), vec![u64::MAX, 0b111111]);
+        assert_eq!(lane_mask(0, 128), vec![0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "more values than columns")]
+    fn overflow_panics() {
+        to_planes(&[0; 65], 1, 64);
+    }
+}

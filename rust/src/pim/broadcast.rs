@@ -1,0 +1,172 @@
+//! Broadcasting units (paper §3.5, Fig. 5c).
+//!
+//! Dynamic operands (activations, intermediate tiles) must be replicated to
+//! every bank/column that participates in parallel computation.  Without
+//! hardware support the host writes every copy over the external channel —
+//! `#copies × bytes` of off-chip traffic.  RACAM adds demux-based broadcast
+//! units at the bank and column level, so the host sends one copy and the
+//! replication happens on DRAM's internal fabric.
+
+
+/// Off-chip vs. internal traffic produced by one replicated transfer.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BroadcastTraffic {
+    /// Bytes crossing the host↔DRAM channel (the expensive path).
+    pub external_bytes: u64,
+    /// Bytes moved on internal buses by the broadcast demuxes (cheap).
+    pub internal_bytes: u64,
+    /// Replication factor actually applied.
+    pub copies: u64,
+}
+
+/// Functional + traffic model of the bank/column broadcast network.
+#[derive(Debug, Clone)]
+pub struct BroadcastUnit {
+    /// Hardware present at the bank level?
+    pub bank_level: bool,
+    /// Hardware present at the column level?
+    pub col_level: bool,
+    /// Bank-level demux input width, bits.
+    pub bank_bits: u32,
+    /// Column-level fan-out.
+    pub col_fanout: u32,
+    enabled_bank: bool,
+    enabled_col: bool,
+}
+
+impl BroadcastUnit {
+    pub fn new(bank_bits: u32, col_fanout: u32) -> Self {
+        BroadcastUnit {
+            bank_level: true,
+            col_level: true,
+            bank_bits,
+            col_fanout,
+            enabled_bank: false,
+            enabled_col: false,
+        }
+    }
+
+    /// An ablated system without broadcast hardware (paper Fig. 12 "-BU").
+    pub fn absent() -> Self {
+        BroadcastUnit {
+            bank_level: false,
+            col_level: false,
+            bank_bits: 0,
+            col_fanout: 0,
+            enabled_bank: false,
+            enabled_col: false,
+        }
+    }
+
+    /// `broadcast_enable` (Table 1): select which demux levels replicate.
+    pub fn enable(&mut self, bank_bc: bool, col_bc: bool) {
+        self.enabled_bank = bank_bc && self.bank_level;
+        self.enabled_col = col_bc && self.col_level;
+    }
+
+    /// `broadcast_disable`.
+    pub fn disable(&mut self) {
+        self.enabled_bank = false;
+        self.enabled_col = false;
+    }
+
+    pub fn bank_enabled(&self) -> bool {
+        self.enabled_bank
+    }
+
+    pub fn col_enabled(&self) -> bool {
+        self.enabled_col
+    }
+
+    /// Functional bank broadcast: one input word fans out to the banks
+    /// selected by `bank_select` (bitmask), mirroring Fig. 5c's demux.
+    pub fn broadcast_to_banks(&self, word: u64, bank_select: u16, banks: &mut [Option<u64>]) {
+        assert!(banks.len() <= 16);
+        for (i, slot) in banks.iter_mut().enumerate() {
+            if self.enabled_bank && (bank_select >> i) & 1 == 1 {
+                *slot = Some(word);
+            }
+        }
+    }
+
+    /// Traffic for replicating `bytes` of a dynamic operand to `bank_copies`
+    /// banks × `col_copies` column groups.
+    ///
+    /// With the unit enabled at a level, that level's replication moves to
+    /// the internal fabric; without it, every copy crosses the channel.
+    pub fn replicate_traffic(&self, bytes: u64, bank_copies: u64, col_copies: u64) -> BroadcastTraffic {
+        let bank_ext = if self.bank_level { 1 } else { bank_copies.max(1) };
+        let col_ext = if self.col_level { 1 } else { col_copies.max(1) };
+        let total = bank_copies.max(1) * col_copies.max(1);
+        let external = bytes * bank_ext * col_ext;
+        BroadcastTraffic {
+            external_bytes: external,
+            internal_bytes: bytes * total - external.min(bytes * total),
+            copies: total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_hardware_external_traffic_is_single_copy() {
+        let bu = BroadcastUnit::new(64, 64);
+        let t = bu.replicate_traffic(1000, 16, 4);
+        assert_eq!(t.external_bytes, 1000);
+        assert_eq!(t.copies, 64);
+        assert_eq!(t.internal_bytes, 64 * 1000 - 1000);
+    }
+
+    #[test]
+    fn without_hardware_host_writes_every_copy() {
+        let bu = BroadcastUnit::absent();
+        let t = bu.replicate_traffic(1000, 16, 4);
+        assert_eq!(t.external_bytes, 64 * 1000); // #Banks × Bytes_A of §1
+        assert_eq!(t.internal_bytes, 0);
+    }
+
+    #[test]
+    fn partial_hardware() {
+        // Bank-level demux only: column copies still cross the channel.
+        let mut bu = BroadcastUnit::new(64, 0);
+        bu.col_level = false;
+        let t = bu.replicate_traffic(100, 8, 4);
+        assert_eq!(t.external_bytes, 400);
+    }
+
+    #[test]
+    fn functional_bank_demux_respects_select_mask() {
+        let mut bu = BroadcastUnit::new(64, 64);
+        bu.enable(true, false);
+        let mut banks = vec![None; 16];
+        bu.broadcast_to_banks(0xABCD, 0b1010_0000_0000_0101, &mut banks);
+        assert_eq!(banks[0], Some(0xABCD));
+        assert_eq!(banks[2], Some(0xABCD));
+        assert_eq!(banks[1], None);
+        assert_eq!(banks[15], Some(0xABCD));
+    }
+
+    #[test]
+    fn disabled_unit_does_not_write() {
+        let bu = BroadcastUnit::new(64, 64); // never enabled
+        let mut banks = vec![None; 4];
+        bu.broadcast_to_banks(1, 0xF, &mut banks);
+        assert!(banks.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn enable_disable_toggle() {
+        let mut bu = BroadcastUnit::new(64, 64);
+        bu.enable(true, true);
+        assert!(bu.bank_enabled() && bu.col_enabled());
+        bu.disable();
+        assert!(!bu.bank_enabled() && !bu.col_enabled());
+        // Absent hardware cannot be enabled.
+        let mut none = BroadcastUnit::absent();
+        none.enable(true, true);
+        assert!(!none.bank_enabled());
+    }
+}

@@ -1,0 +1,270 @@
+//! Per-device finite state machine (paper §3.1): decodes extended PIM
+//! commands arriving on the command/address bus and expands compute
+//! commands into micro-op sequences for the PEs, locality buffer, popcount
+//! units and subarrays.  One FSM per device, shared by all its banks.
+
+use crate::dram::{DramCommand, PimOpcode};
+
+/// FSM operating mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsmState {
+    /// Normal DRAM command decoding.
+    Normal,
+    /// PIM mode: incoming commands decode through this FSM.
+    Pim,
+}
+
+/// Micro-operations the FSM issues to the peripheral units.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MicroOp {
+    /// Stream one operand bit-plane from a subarray row into a buffer row.
+    LoadPlane { buf_row: u8 },
+    /// One SIMD PE cycle (serial-add step).
+    PeStep,
+    /// Drain PE carries into the result window.
+    CarryOut,
+    /// Populate one completed result bit-plane back to the array.
+    WritePlane,
+    /// Popcount one bit-slice into the accumulator.
+    PopcountSlice { significance: u8 },
+    /// Bit-parallel accumulator add.
+    ParallelAdd,
+    /// Write the horizontal reduction result row.
+    WriteHorizontal,
+    /// Configure the MRS / broadcast datapath.
+    SetModeRegister { bits: u8 },
+}
+
+/// Errors surfaced by the FSM (commands illegal in the current mode).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FsmError {
+    /// PIM compute command received while not in PIM mode.
+    NotInPimMode(PimOpcode),
+    /// Standard access while PIM mode owns the arrays.
+    StandardAccessInPimMode,
+    /// Precision field outside the supported range.
+    BadPrecision(u8),
+}
+
+impl std::fmt::Display for FsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FsmError::NotInPimMode(op) => write!(f, "{op:?} requires pim_enable first"),
+            FsmError::StandardAccessInPimMode => {
+                write!(f, "standard DRAM access while PIM mode is active")
+            }
+            FsmError::BadPrecision(p) => write!(f, "unsupported precision field {p}"),
+        }
+    }
+}
+
+impl std::error::Error for FsmError {}
+
+/// The device FSM.
+#[derive(Debug, Clone)]
+pub struct DeviceFsm {
+    state: FsmState,
+    broadcast_bank: bool,
+    broadcast_col: bool,
+    /// Maximum precision with full reuse (from the locality buffer size).
+    max_prec_bits: u8,
+}
+
+impl DeviceFsm {
+    pub fn new(max_prec_bits: u8) -> Self {
+        DeviceFsm { state: FsmState::Normal, broadcast_bank: false, broadcast_col: false, max_prec_bits }
+    }
+
+    pub fn state(&self) -> FsmState {
+        self.state
+    }
+
+    pub fn broadcast(&self) -> (bool, bool) {
+        (self.broadcast_bank, self.broadcast_col)
+    }
+
+    /// Decode one command; on success returns the micro-op expansion (empty
+    /// for pure mode changes).
+    pub fn dispatch(&mut self, cmd: &DramCommand) -> Result<Vec<MicroOp>, FsmError> {
+        use DramCommand::*;
+        match *cmd {
+            PimEnable => {
+                self.state = FsmState::Pim;
+                Ok(vec![MicroOp::SetModeRegister { bits: 1 }])
+            }
+            PimDisable => {
+                self.state = FsmState::Normal;
+                self.broadcast_bank = false;
+                self.broadcast_col = false;
+                Ok(vec![MicroOp::SetModeRegister { bits: 0 }])
+            }
+            BroadcastEnable { bank_bc, col_bc } => {
+                self.broadcast_bank = bank_bc;
+                self.broadcast_col = col_bc;
+                Ok(vec![MicroOp::SetModeRegister { bits: (bank_bc as u8) | (col_bc as u8) << 1 }])
+            }
+            BroadcastDisable => {
+                self.broadcast_bank = false;
+                self.broadcast_col = false;
+                Ok(vec![MicroOp::SetModeRegister { bits: 0 }])
+            }
+            PimAdd { prec, .. } => {
+                self.require_pim(PimOpcode::PimAdd)?;
+                let n = self.check_prec(prec)? as usize;
+                let mut ops = Vec::new();
+                // Stream both operands' planes, add serially, write back.
+                for i in 0..n {
+                    ops.push(MicroOp::LoadPlane { buf_row: i as u8 });
+                    ops.push(MicroOp::LoadPlane { buf_row: (n + i) as u8 });
+                    ops.push(MicroOp::PeStep);
+                    ops.push(MicroOp::WritePlane);
+                }
+                ops.push(MicroOp::CarryOut);
+                ops.push(MicroOp::WritePlane);
+                Ok(ops)
+            }
+            PimMul { prec, .. } => {
+                self.require_pim(PimOpcode::PimMul)?;
+                let n = self.check_prec(prec)? as usize;
+                Ok(Self::expand_mul(n))
+            }
+            PimMulRed { prec, .. } => {
+                self.require_pim(PimOpcode::PimMulRed)?;
+                let n = self.check_prec(prec)? as usize;
+                let mut ops = Self::expand_mul(n);
+                for s in 0..(2 * n) {
+                    ops.push(MicroOp::PopcountSlice { significance: s as u8 });
+                }
+                ops.push(MicroOp::ParallelAdd);
+                ops.push(MicroOp::WriteHorizontal);
+                Ok(ops)
+            }
+            PimAddParallel { .. } => {
+                self.require_pim(PimOpcode::PimAddParallel)?;
+                Ok(vec![MicroOp::ParallelAdd, MicroOp::WriteHorizontal])
+            }
+            Act { .. } | Pre { .. } | Rd { .. } | Wr { .. } => {
+                if self.state == FsmState::Pim {
+                    Err(FsmError::StandardAccessInPimMode)
+                } else {
+                    Ok(vec![])
+                }
+            }
+        }
+    }
+
+    /// Fig. 6 multiply schedule as micro-ops.
+    fn expand_mul(n: usize) -> Vec<MicroOp> {
+        let mut ops = Vec::with_capacity(n * (n + 3) + 2 * n);
+        for i in 0..n {
+            ops.push(MicroOp::LoadPlane { buf_row: i as u8 }); // op1 once
+        }
+        for _j in 0..n {
+            ops.push(MicroOp::LoadPlane { buf_row: n as u8 }); // op2 bit j
+            for _i in 0..n {
+                ops.push(MicroOp::PeStep);
+            }
+            ops.push(MicroOp::CarryOut);
+            ops.push(MicroOp::WritePlane); // completed bit j
+        }
+        for _ in 0..n {
+            ops.push(MicroOp::WritePlane); // high product bits
+        }
+        ops
+    }
+
+    fn require_pim(&self, op: PimOpcode) -> Result<(), FsmError> {
+        if self.state == FsmState::Pim {
+            Ok(())
+        } else {
+            Err(FsmError::NotInPimMode(op))
+        }
+    }
+
+    fn check_prec(&self, prec: u8) -> Result<u8, FsmError> {
+        if prec >= 1 && prec <= self.max_prec_bits {
+            Ok(prec)
+        } else {
+            Err(FsmError::BadPrecision(prec))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::DramCommand::*;
+
+    fn fsm() -> DeviceFsm {
+        DeviceFsm::new(8)
+    }
+
+    #[test]
+    fn compute_requires_pim_mode() {
+        let mut f = fsm();
+        let err = f.dispatch(&PimMul { r_dst: 0, r_src1: 1, r_src2: 2, prec: 8 }).unwrap_err();
+        assert_eq!(err, FsmError::NotInPimMode(PimOpcode::PimMul));
+        f.dispatch(&PimEnable).unwrap();
+        assert!(f.dispatch(&PimMul { r_dst: 0, r_src1: 1, r_src2: 2, prec: 8 }).is_ok());
+    }
+
+    #[test]
+    fn standard_access_blocked_in_pim_mode() {
+        let mut f = fsm();
+        f.dispatch(&PimEnable).unwrap();
+        assert_eq!(
+            f.dispatch(&Act { bank: 0, row: 0 }).unwrap_err(),
+            FsmError::StandardAccessInPimMode
+        );
+        f.dispatch(&PimDisable).unwrap();
+        assert!(f.dispatch(&Act { bank: 0, row: 0 }).is_ok());
+    }
+
+    #[test]
+    fn mul_expansion_row_traffic_is_4n() {
+        let mut f = fsm();
+        f.dispatch(&PimEnable).unwrap();
+        for n in [2u8, 4, 8] {
+            let ops = f.dispatch(&PimMul { r_dst: 0, r_src1: 1, r_src2: 2, prec: n }).unwrap();
+            let loads = ops.iter().filter(|o| matches!(o, MicroOp::LoadPlane { .. })).count();
+            let writes = ops.iter().filter(|o| matches!(o, MicroOp::WritePlane)).count();
+            assert_eq!(loads + writes, 4 * n as usize, "O(n) schedule for n={n}");
+            let pe = ops.iter().filter(|o| matches!(o, MicroOp::PeStep)).count();
+            assert_eq!(pe, (n as usize).pow(2));
+        }
+    }
+
+    #[test]
+    fn mulred_appends_reduction() {
+        let mut f = fsm();
+        f.dispatch(&PimEnable).unwrap();
+        let ops = f.dispatch(&PimMulRed { r_dst: 0, r_src1: 1, r_src2: 2, prec: 4 }).unwrap();
+        let pops = ops.iter().filter(|o| matches!(o, MicroOp::PopcountSlice { .. })).count();
+        assert_eq!(pops, 8); // 2n slices
+        assert!(ops.contains(&MicroOp::WriteHorizontal));
+    }
+
+    #[test]
+    fn precision_bounds_enforced() {
+        let mut f = fsm();
+        f.dispatch(&PimEnable).unwrap();
+        assert_eq!(
+            f.dispatch(&PimMul { r_dst: 0, r_src1: 1, r_src2: 2, prec: 9 }).unwrap_err(),
+            FsmError::BadPrecision(9)
+        );
+        assert_eq!(
+            f.dispatch(&PimAdd { r_dst: 0, r_src1: 1, r_src2: 2, prec: 0 }).unwrap_err(),
+            FsmError::BadPrecision(0)
+        );
+    }
+
+    #[test]
+    fn broadcast_state_cleared_on_pim_disable() {
+        let mut f = fsm();
+        f.dispatch(&PimEnable).unwrap();
+        f.dispatch(&BroadcastEnable { bank_bc: true, col_bc: true }).unwrap();
+        assert_eq!(f.broadcast(), (true, true));
+        f.dispatch(&PimDisable).unwrap();
+        assert_eq!(f.broadcast(), (false, false));
+    }
+}

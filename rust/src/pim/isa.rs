@@ -1,0 +1,225 @@
+//! Latency model of the extended PIM instruction set (paper Table 1 +
+//! §3.2–3.4).  This is the *compute model* half of the paper's hardware
+//! model: given an instruction class, operand precision and the feature set,
+//! it returns the block-level latency split into PE time and row-traffic
+//! time, mirroring how the paper's analytical model sums "latencies of all
+//! PIM instructions executed on the locality buffers, PEs, and reduction
+//! units".
+
+use crate::config::{Features, Precision, TimingParams};
+use crate::dram::SalpScheduler;
+
+/// The compute instruction classes of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InstrClass {
+    /// `pim_add`: bit-serial addition.
+    Add,
+    /// `pim_mul`: bit-serial multiplication.
+    Mul,
+    /// `pim_mul_red`: multiplication fused with column-wise popcount
+    /// reduction.
+    MulRed,
+    /// `pim_add_parallel`: int32 bit-parallel add in the reduction unit.
+    AddParallel,
+}
+
+/// Latency decomposition of one SIMD instruction pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct InstrLatency {
+    /// PE pipeline time, ns.
+    pub pe_ns: f64,
+    /// Row-traffic time (array ↔ locality buffer / array RMW), ns.
+    pub row_ns: f64,
+    /// Reduction-unit drain time, ns (MulRed / AddParallel only).
+    pub reduce_ns: f64,
+    /// Row accesses performed (the Fig. 1 x-axis quantity).
+    pub row_accesses: u64,
+}
+
+impl InstrLatency {
+    /// Total latency: PE work overlaps row streaming (both are pipelined
+    /// against each other, §3.3), the reduction drain is serial.
+    pub fn total_ns(&self) -> f64 {
+        self.pe_ns.max(self.row_ns) + self.reduce_ns
+    }
+}
+
+/// Row accesses of an n-bit multiply for each design point (Table 5's
+/// "Row ACTs of n-bit Mult" column).
+pub fn mul_row_accesses(n: u64, locality_buffer: bool) -> u64 {
+    if locality_buffer {
+        // op1 once (n) + op2 once (n) + 2n result writebacks — O(n).
+        4 * n
+    } else {
+        // Every multiplier bit re-reads the multiplicand from the array and
+        // read-modify-writes the result window — O(n²).
+        n * n + 3 * n
+    }
+}
+
+/// Latency of one SIMD instruction pass over one block.
+///
+/// `t` is the timing preset, `salp` prices the row stream, `f` selects the
+/// present hardware.  The pass covers the whole PE width regardless of how
+/// many columns carry valid data (the utilization model accounts waste).
+pub fn instr_latency(
+    class: InstrClass,
+    prec: Precision,
+    t: &TimingParams,
+    salp: &SalpScheduler,
+    f: &Features,
+) -> InstrLatency {
+    let n = prec.bits() as u64;
+    let cyc = t.pe_cycle_ns();
+    match class {
+        InstrClass::Add => {
+            // Serial add: one PE cycle per bit + carry, operands/result
+            // stream through the buffer (3n+1 planes).
+            let pe = (n + 2) as f64 * cyc;
+            let rows = 3 * n + 1;
+            let (row_ns, row_accesses) = row_traffic(rows, rows, t, salp, f);
+            InstrLatency { pe_ns: pe, row_ns, reduce_ns: 0.0, row_accesses }
+        }
+        InstrClass::Mul => {
+            let pe = (n * n + 4) as f64 * cyc;
+            let accesses = mul_row_accesses(n, f.locality_buffer);
+            let (row_ns, row_accesses) =
+                row_traffic(accesses, mul_row_accesses(n, true), t, salp, f);
+            InstrLatency { pe_ns: pe, row_ns, reduce_ns: 0.0, row_accesses }
+        }
+        InstrClass::MulRed => {
+            let mul = instr_latency(InstrClass::Mul, prec, t, salp, f);
+            // The popcount unit consumes product bit-slices as the multiply
+            // produces them ("efficiently pipelined", §3.4); only the tail
+            // slice, the accumulator add and the horizontal writeback are
+            // exposed — the fixed cost that makes Fig. 14 sub-linear.
+            let reduce = if f.popcount_reduction {
+                (t.popcount_cycles + t.parallel_add_cycles) as f64 * cyc + t.t_cas_ns
+            } else {
+                // Without PR the reduction happens host-side; the I/O model
+                // prices the export. No in-DRAM drain.
+                0.0
+            };
+            InstrLatency {
+                pe_ns: mul.pe_ns,
+                row_ns: mul.row_ns,
+                reduce_ns: reduce,
+                row_accesses: mul.row_accesses + f.popcount_reduction as u64,
+            }
+        }
+        InstrClass::AddParallel => {
+            let reduce = t.parallel_add_cycles as f64 * cyc;
+            // Read two horizontal int32 rows, write one.
+            let (row_ns, row_accesses) = row_traffic(3, 3, t, salp, f);
+            InstrLatency { pe_ns: 0.0, row_ns, reduce_ns: reduce, row_accesses }
+        }
+    }
+}
+
+/// Price `accesses` row accesses.  With the locality buffer the stream
+/// overlaps via SALP at steady state (back-to-back passes amortize the
+/// pipeline fill); without it (`lb_accesses` < `accesses`) the extra
+/// accesses are read-modify-write round trips to the cell array that cannot
+/// pipeline as deeply — each pays a global-bus turnaround on top of the beat.
+fn row_traffic(
+    accesses: u64,
+    lb_accesses: u64,
+    t: &TimingParams,
+    salp: &SalpScheduler,
+    f: &Features,
+) -> (f64, u64) {
+    if f.locality_buffer {
+        (salp.steady_stream_ns(lb_accesses), lb_accesses)
+    } else {
+        const RMW_TURNAROUND_NS: f64 = 4.0;
+        let ns = t.t_rcd_ns + accesses as f64 * (t.t_cas_ns + RMW_TURNAROUND_NS);
+        (ns, accesses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ddr5_5200_timing, Features};
+
+    fn setup() -> (TimingParams, SalpScheduler) {
+        let t = ddr5_5200_timing();
+        (t, SalpScheduler::new(t, 128))
+    }
+
+    #[test]
+    fn row_accesses_linear_vs_quadratic() {
+        // Table 5: O(n) with LB, O(n²) without.
+        assert_eq!(mul_row_accesses(8, true), 32);
+        assert_eq!(mul_row_accesses(16, true), 64);
+        assert_eq!(mul_row_accesses(8, false), 88);
+        assert_eq!(mul_row_accesses(16, false), 304);
+        // Doubling n doubles LB accesses but ~4x the no-LB accesses.
+        let r = mul_row_accesses(16, false) as f64 / mul_row_accesses(8, false) as f64;
+        assert!(r > 3.0, "no-LB growth must be superlinear, got {r}");
+    }
+
+    #[test]
+    fn lb_ablation_slows_multiplies_several_fold() {
+        let (t, salp) = setup();
+        let with_lb = instr_latency(InstrClass::Mul, Precision::Int8, &t, &salp, &Features::ALL);
+        let no_lb =
+            instr_latency(InstrClass::Mul, Precision::Int8, &t, &salp, &Features::NO_PR_BU_LB);
+        let ratio = no_lb.total_ns() / with_lb.total_ns();
+        // Paper Fig. 12: removing LB costs ~7.5–8x on multiply-dominated
+        // (prefill) workloads.
+        assert!((4.0..12.0).contains(&ratio), "LB ablation ratio {ratio}");
+    }
+
+    #[test]
+    fn latency_scales_roughly_linearly_with_precision() {
+        // Paper Fig. 14: int8→int4 ≈ 2x, int8→int2 ≈ 3.5–3.8x.
+        let (t, salp) = setup();
+        let f = Features::ALL;
+        let l8 = instr_latency(InstrClass::MulRed, Precision::Int8, &t, &salp, &f).total_ns();
+        let l4 = instr_latency(InstrClass::MulRed, Precision::Int4, &t, &salp, &f).total_ns();
+        let l2 = instr_latency(InstrClass::MulRed, Precision::Int2, &t, &salp, &f).total_ns();
+        assert!((1.5..3.0).contains(&(l8 / l4)), "int8/int4 = {}", l8 / l4);
+        assert!((2.5..5.0).contains(&(l8 / l2)), "int8/int2 = {}", l8 / l2);
+        assert!(l8 / l2 < 4.0 * 1.2, "sub-linear due to fixed reduction overhead");
+    }
+
+    #[test]
+    fn mulred_only_adds_drain_when_pr_present() {
+        let (t, salp) = setup();
+        let with_pr =
+            instr_latency(InstrClass::MulRed, Precision::Int8, &t, &salp, &Features::ALL);
+        let no_pr =
+            instr_latency(InstrClass::MulRed, Precision::Int8, &t, &salp, &Features::NO_PR);
+        assert!(with_pr.reduce_ns > 0.0);
+        assert_eq!(no_pr.reduce_ns, 0.0);
+    }
+
+    #[test]
+    fn add_parallel_is_cheap() {
+        let (t, salp) = setup();
+        let ap = instr_latency(InstrClass::AddParallel, Precision::Int8, &t, &salp, &Features::ALL);
+        let mul = instr_latency(InstrClass::Mul, Precision::Int8, &t, &salp, &Features::ALL);
+        assert!(ap.total_ns() < mul.total_ns() / 2.0);
+    }
+
+    #[test]
+    fn int8_mul_pass_is_row_stream_bound_at_68ns() {
+        // Calibration sanity: with LB the multiply is bound by the 4n-beat
+        // row stream (32 × 2.125 ns = 68 ns), the PE pipeline hides under
+        // it, and the whole system lands on Table 4's 986.9 TOPS.
+        let (t, salp) = setup();
+        let l = instr_latency(InstrClass::Mul, Precision::Int8, &t, &salp, &Features::ALL);
+        assert!(l.row_ns >= l.pe_ns, "pe={} row={}", l.pe_ns, l.row_ns);
+        assert!((l.total_ns() - 68.0).abs() < 1e-9, "{}", l.total_ns());
+    }
+
+    #[test]
+    fn mul_pass_scales_near_linearly_with_precision() {
+        // Fig. 1's green curve: per-pass latency ∝ 4n row beats.
+        let (t, salp) = setup();
+        let l8 = instr_latency(InstrClass::Mul, Precision::Int8, &t, &salp, &Features::ALL);
+        let l4 = instr_latency(InstrClass::Mul, Precision::Int4, &t, &salp, &Features::ALL);
+        assert!((l8.total_ns() / l4.total_ns() - 2.0).abs() < 0.05);
+    }
+}

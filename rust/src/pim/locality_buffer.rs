@@ -1,0 +1,248 @@
+//! Locality buffer and the reuse-aware bit-serial multiplication schedule
+//! (paper §3.3, Fig. 6).
+//!
+//! The buffer holds, per bank, `2n+1` rows: the `n` multiplicand bit-planes
+//! (loaded from DRAM **once**), the currently-streamed multiplier bit-plane,
+//! and the `n`-bit-deep in-flight result window.  Completed result bits are
+//! populated back to the array immediately, so every operand bit crosses the
+//! DRAM interface exactly once — `4n` row accesses per multiply instead of
+//! the O(n²) of reuse-free PUD designs (Table 5).
+
+use super::pe::PeArray;
+
+/// Exact row-traffic accounting of one SIMD multiply pass — the quantities
+/// behind Fig. 1 and the O(n) claim.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MultiplyTrace {
+    /// Multiplicand bit-plane loads from the array (one per operand bit).
+    pub op1_loads: u64,
+    /// Multiplier bit-plane loads (one per bit, streamed).
+    pub op2_loads: u64,
+    /// Result bit-plane writebacks (one per product bit).
+    pub result_writebacks: u64,
+    /// PE cycles consumed (serial-add steps + carry drains).
+    pub pe_cycles: u64,
+    /// Peak locality-buffer rows occupied (must stay ≤ configured rows).
+    pub peak_rows: u32,
+}
+
+impl MultiplyTrace {
+    pub fn total_row_accesses(&self) -> u64 {
+        self.op1_loads + self.op2_loads + self.result_writebacks
+    }
+}
+
+/// Functional locality buffer for one bank: `rows × width` bits, word-packed.
+#[derive(Debug, Clone)]
+pub struct LocalityBuffer {
+    rows: u32,
+    width: u32,
+    words: usize,
+    data: Vec<Vec<u64>>,
+}
+
+impl LocalityBuffer {
+    pub fn new(rows: u32, width: u32) -> Self {
+        let words = (width as usize).div_ceil(64);
+        LocalityBuffer { rows, width, words, data: vec![vec![0u64; words]; rows as usize] }
+    }
+
+    pub fn rows(&self) -> u32 {
+        self.rows
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    pub fn load_row(&mut self, row: u32, plane: &[u64]) {
+        assert!(row < self.rows, "locality buffer row {row} out of range");
+        assert_eq!(plane.len(), self.words);
+        self.data[row as usize].copy_from_slice(plane);
+    }
+
+    pub fn row(&self, row: u32) -> &[u64] {
+        &self.data[row as usize]
+    }
+
+    /// Reuse-aware SIMD multiply (Fig. 6): `product = op1 × op2`, unsigned,
+    /// lane-wise over `width` columns.
+    ///
+    /// `op1`/`op2` are `n` bit-planes each (LSB first, one bit per column);
+    /// returns `2n` product bit-planes plus the exact [`MultiplyTrace`].
+    /// The schedule is the paper's: op1 planes enter the buffer once, each
+    /// op2 plane streams through once, and each completed product plane is
+    /// written back the moment no further update can touch it.
+    pub fn multiply(&mut self, pes: &mut PeArray, op1: &[Vec<u64>], op2: &[Vec<u64>]) -> (Vec<Vec<u64>>, MultiplyTrace) {
+        let mut product = vec![vec![0u64; self.words]; 2 * op1.len()];
+        let trace = self.multiply_into(pes, op1, op2, &mut product);
+        (product, trace)
+    }
+
+    /// Allocation-free variant of [`Self::multiply`] for the simulator's
+    /// hot loop: `product` must hold `2n` planes, which are zeroed and
+    /// filled in place.
+    pub fn multiply_into(
+        &mut self,
+        pes: &mut PeArray,
+        op1: &[Vec<u64>],
+        op2: &[Vec<u64>],
+        product: &mut [Vec<u64>],
+    ) -> MultiplyTrace {
+        let n = op1.len();
+        assert_eq!(op2.len(), n, "operands must share precision");
+        assert!(n >= 1);
+        assert!(
+             2 * n as u32 + 1 <= self.rows,
+            "precision {n} needs {} locality-buffer rows, have {}",
+            2 * n + 1,
+            self.rows
+        );
+        assert_eq!(pes.width(), self.width);
+
+        let mut trace = MultiplyTrace { peak_rows: 2 * n as u32 + 1, ..Default::default() };
+
+        // ❶ Load the multiplicand bit-planes into buffer rows 0..n — the
+        //    only time op1 crosses the DRAM interface.
+        for (i, plane) in op1.iter().enumerate() {
+            self.load_row(i as u32, plane);
+            trace.op1_loads += 1;
+        }
+
+        assert!(product.len() >= 2 * n, "product scratch needs 2n planes");
+        for plane in product.iter_mut().take(2 * n) {
+            debug_assert_eq!(plane.len(), self.words);
+            plane.fill(0);
+        }
+        let op2_row = n as u32; // row reserved for the streamed multiplier bit
+
+        // ❷..❹ For each multiplier bit j: stream it in, serially add op1
+        //       into the result window [j, j+n), drain the carry to j+n,
+        //       and immediately populate result bit j back to DRAM.
+        let mut out = vec![0u64; self.words];
+        for j in 0..n {
+            self.load_row(op2_row, &op2[j]);
+            trace.op2_loads += 1;
+
+            pes.clear();
+            for i in 0..n {
+                // op1 bit-plane i and the streamed op2 plane are resident
+                // buffer rows; borrow them in place (hot path — no copies).
+                let (a, b) = (&self.data[i], &self.data[op2_row as usize]);
+                pes.step_plane(a, b, &product[j + i], &mut out);
+                product[j + i].copy_from_slice(&out);
+                trace.pe_cycles += 1;
+            }
+            let b = &self.data[op2_row as usize];
+            pes.carry_out_plane(b, &mut out);
+            // Bits ≥ j+n are still zero, so the carry lands cleanly.
+            for (w, o) in product[j + n].iter_mut().zip(&out) {
+                *w |= o;
+            }
+            trace.pe_cycles += 1;
+
+            // Result bit j can no longer change: populate back to DRAM.
+            trace.result_writebacks += 1;
+        }
+
+        // ❺ Remaining high product bits stream out once each.
+        trace.result_writebacks += n as u64;
+
+        debug_assert_eq!(trace.total_row_accesses(), 4 * n as u64);
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::bitplane::{from_planes, to_planes};
+
+    fn run_mult(xs: &[u64], ys: &[u64], n: usize) -> (Vec<u64>, MultiplyTrace) {
+        let width = 128u32;
+        let mut lb = LocalityBuffer::new(17, width);
+        let mut pes = PeArray::new(width);
+        let op1 = to_planes(xs, n, width);
+        let op2 = to_planes(ys, n, width);
+        let (prod, trace) = lb.multiply(&mut pes, &op1, &op2);
+        (from_planes(&prod, xs.len()), trace)
+    }
+
+    #[test]
+    fn int4_exhaustive() {
+        // All 256 int4 pairs, 128 lanes at a time.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for x in 0..16u64 {
+            for y in 0..16u64 {
+                xs.push(x);
+                ys.push(y);
+            }
+        }
+        for chunk in 0..2 {
+            let lo = chunk * 128;
+            let (got, _) = run_mult(&xs[lo..lo + 128], &ys[lo..lo + 128], 4);
+            for i in 0..128 {
+                assert_eq!(got[i], xs[lo + i] * ys[lo + i], "{}x{}", xs[lo + i], ys[lo + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_sampled() {
+        let xs: Vec<u64> = (0..128).map(|i| (i * 37 + 11) % 256).collect();
+        let ys: Vec<u64> = (0..128).map(|i| (i * 101 + 3) % 256).collect();
+        let (got, trace) = run_mult(&xs, &ys, 8);
+        for i in 0..128 {
+            assert_eq!(got[i], xs[i] * ys[i]);
+        }
+        // The O(n) property: exactly 4n row accesses for n-bit multiply.
+        assert_eq!(trace.total_row_accesses(), 32);
+        assert_eq!(trace.op1_loads, 8);
+        assert_eq!(trace.op2_loads, 8);
+        assert_eq!(trace.result_writebacks, 16);
+    }
+
+    #[test]
+    fn row_accesses_scale_linearly() {
+        let xs = vec![3u64; 64];
+        let ys = vec![5u64; 64];
+        let mut prev = 0;
+        for n in [2usize, 4, 8] {
+            let (_, trace) = run_mult(&xs, &ys, n);
+            assert_eq!(trace.total_row_accesses(), 4 * n as u64);
+            assert!(trace.total_row_accesses() > prev);
+            prev = trace.total_row_accesses();
+        }
+    }
+
+    #[test]
+    fn buffer_occupancy_is_2n_plus_1() {
+        let (_, trace) = run_mult(&[7], &[9], 8);
+        assert_eq!(trace.peak_rows, 17); // why the paper picks 17 rows
+    }
+
+    #[test]
+    #[should_panic(expected = "locality-buffer rows")]
+    fn rejects_precision_beyond_buffer() {
+        let mut lb = LocalityBuffer::new(9, 64); // supports only int4
+        let mut pes = PeArray::new(64);
+        let op = to_planes(&[1], 8, 64);
+        lb.multiply(&mut pes, &op, &op);
+    }
+
+    #[test]
+    fn zero_times_anything_is_zero() {
+        let xs = vec![0u64; 128];
+        let ys: Vec<u64> = (0..128).collect();
+        let (got, _) = run_mult(&xs, &ys, 8);
+        assert!(got.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn max_operands() {
+        let (got, _) = run_mult(&[255, 255], &[255, 1], 8);
+        assert_eq!(got[0], 255 * 255);
+        assert_eq!(got[1], 255);
+    }
+}

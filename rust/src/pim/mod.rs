@@ -1,0 +1,27 @@
+//! RACAM's added peripheral units (paper §3): bit-serial PEs, locality
+//! buffers, popcount reduction units, broadcast units, the extended PIM ISA
+//! latency model, the per-device FSM, and the *functional* block executor
+//! that actually computes GEMM tiles bit-by-bit (the correctness ground
+//! truth the analytical model and the PJRT oracle are checked against).
+
+pub mod bitplane;
+mod broadcast;
+mod exec;
+mod exec_krows;
+mod fsm;
+pub mod isa;
+mod locality_buffer;
+mod pe;
+mod popcount;
+pub mod trace;
+mod transpose;
+
+pub use broadcast::{BroadcastTraffic, BroadcastUnit};
+pub use transpose::{transpose64, TransposeUnit};
+pub use exec::{gemm_reference, BlockExecutor, ExecStats};
+pub use exec_krows::KRowsExecutor;
+pub use fsm::{DeviceFsm, FsmError, FsmState, MicroOp};
+pub use isa::{InstrClass, InstrLatency};
+pub use locality_buffer::{LocalityBuffer, MultiplyTrace};
+pub use pe::{PeArray, PeWord};
+pub use popcount::{popcount_reduce_slices, PopcountUnit};

@@ -1,0 +1,168 @@
+//! Bit-serial processing element (paper §3.2, Fig. 5a).
+//!
+//! One PE is attached to each column of the locality buffer.  Per cycle it
+//! sees three input bits — `A` (op1 bit), `B` (op2 bit, the gate), `C`
+//! (current result bit) — and an internal carry:
+//!
+//! * `B = 1`: full-add `A + C + carry` → output bit, update carry.
+//! * `B = 0`: route `C` through unchanged, hold the carry.
+//!
+//! The simulator never models PEs one at a time: [`PeWord`] packs 64 PE
+//! lanes into `u64` bitwise logic (the functional hot path), and [`PeArray`]
+//! is a whole bank's worth of lanes.
+
+/// 64 bit-serial PEs evaluated in parallel with word-wide boolean algebra.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeWord {
+    carry: u64,
+}
+
+impl PeWord {
+    pub fn new() -> Self {
+        PeWord { carry: 0 }
+    }
+
+    pub fn carry(&self) -> u64 {
+        self.carry
+    }
+
+    /// Reset carries (start of a new serial add).
+    pub fn clear(&mut self) {
+        self.carry = 0;
+    }
+
+    /// One PE cycle across 64 lanes. Returns the 64 output bits.
+    #[inline]
+    pub fn step(&mut self, a: u64, b: u64, c: u64) -> u64 {
+        let sum = a ^ c ^ self.carry;
+        let maj = (a & c) | (a & self.carry) | (c & self.carry);
+        let out = (b & sum) | (!b & c);
+        self.carry = (b & maj) | (!b & self.carry);
+        out
+    }
+
+    /// Drain the carry into an output bit where `b` is set (the final
+    /// carry-out write of a serial add window).
+    #[inline]
+    pub fn carry_out(&mut self, b: u64) -> u64 {
+        let out = b & self.carry;
+        self.carry &= !b;
+        out
+    }
+}
+
+/// A bank's PE array: `width` PEs as `ceil(width/64)` packed words.
+#[derive(Debug, Clone)]
+pub struct PeArray {
+    width: u32,
+    words: Vec<PeWord>,
+}
+
+impl PeArray {
+    pub fn new(width: u32) -> Self {
+        PeArray { width, words: vec![PeWord::new(); (width as usize).div_ceil(64)] }
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    pub fn num_words(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn clear(&mut self) {
+        for w in &mut self.words {
+            w.clear();
+        }
+    }
+
+    /// One cycle over the whole array. `a`, `b`, `c` are packed bit-planes
+    /// (one bit per column); `out` receives the output plane.
+    pub fn step_plane(&mut self, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) {
+        for (i, w) in self.words.iter_mut().enumerate() {
+            out[i] = w.step(a[i], b[i], c[i]);
+        }
+    }
+
+    /// Final carry-out plane for lanes where `b` is set.
+    pub fn carry_out_plane(&mut self, b: &[u64], out: &mut [u64]) {
+        for (i, w) in self.words.iter_mut().enumerate() {
+            out[i] = w.carry_out(b[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scalar reference: serial add of two `n`-bit values through one PE.
+    fn serial_add_via_pe(x: u64, y: u64, n: u32) -> u64 {
+        let mut pe = PeWord::new();
+        let mut out = 0u64;
+        for i in 0..n {
+            let a = (x >> i) & 1;
+            let c = (y >> i) & 1;
+            // Use lane 0 only; B=1 everywhere.
+            let bit = pe.step(a.wrapping_neg() & 1, u64::MAX, c.wrapping_neg() & 1) & 1;
+            out |= bit << i;
+        }
+        out |= (pe.carry_out(u64::MAX) & 1) << n;
+        out
+    }
+
+    #[test]
+    fn serial_add_matches_integer_add() {
+        for x in 0..16u64 {
+            for y in 0..16u64 {
+                assert_eq!(serial_add_via_pe(x, y, 4), x + y, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn b_zero_routes_c_through() {
+        let mut pe = PeWord::new();
+        // Set up a pending carry in every lane.
+        pe.step(u64::MAX, u64::MAX, u64::MAX); // 1+1 -> carry=1
+        let carry_before = pe.carry();
+        let out = pe.step(u64::MAX, 0, 0xDEADBEEF);
+        assert_eq!(out, 0xDEADBEEF, "C must pass through when B=0");
+        assert_eq!(pe.carry(), carry_before, "carry must hold when B=0");
+    }
+
+    #[test]
+    fn lanes_are_independent() {
+        let mut pe = PeWord::new();
+        // Lane 0: 1+1 (carry); lane 1: 0+0 (no carry). B=1 both.
+        let out = pe.step(0b01, u64::MAX, 0b01);
+        assert_eq!(out & 0b11, 0b00);
+        assert_eq!(pe.carry() & 0b11, 0b01);
+    }
+
+    #[test]
+    fn array_planes() {
+        let mut arr = PeArray::new(128);
+        assert_eq!(arr.num_words(), 2);
+        let a = vec![u64::MAX; 2];
+        let b = vec![u64::MAX; 2];
+        let c = vec![0u64; 2];
+        let mut out = vec![0u64; 2];
+        arr.step_plane(&a, &b, &c, &mut out);
+        assert_eq!(out, vec![u64::MAX; 2]); // 1+0 = 1, no carry
+        arr.step_plane(&a, &b, &a, &mut out);
+        assert_eq!(out, vec![0u64; 2]); // 1+1 = 0 carry 1
+        arr.carry_out_plane(&b, &mut out);
+        assert_eq!(out, vec![u64::MAX; 2]);
+    }
+
+    #[test]
+    fn clear_resets_carry() {
+        let mut pe = PeWord::new();
+        pe.step(u64::MAX, u64::MAX, u64::MAX);
+        assert_ne!(pe.carry(), 0);
+        pe.clear();
+        assert_eq!(pe.carry(), 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Popcount reduction unit (paper §3.4, Fig. 5b).
+//!
+//! The vertical layout exposes one bit of every operand per cycle, so a
+//! popcount over the bit-slice, shifted by the slice's significance and
+//! accumulated — `sum += popcount(bitslice_i) · 2^i` — reduces a whole
+//! column group with one pass over the product's bit-planes.  The same
+//! accumulator doubles as the fast int32 bit-parallel adder behind
+//! `pim_add_parallel`.
+
+/// One popcount reduction unit: popcount module + shift + accumulator.
+#[derive(Debug, Clone)]
+pub struct PopcountUnit {
+    /// Columns consumed per cycle (paper: 1024 per bank).
+    width: u32,
+    /// Accumulator register (int64 here; hardware is int32 with the
+    /// software model guaranteeing no overflow per reduction group).
+    acc: i64,
+    /// Cycles spent (for the timing model cross-check).
+    cycles: u64,
+}
+
+impl PopcountUnit {
+    pub fn new(width: u32) -> Self {
+        PopcountUnit { width, acc: 0, cycles: 0 }
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    pub fn clear(&mut self) {
+        self.acc = 0;
+    }
+
+    pub fn sum(&self) -> i64 {
+        self.acc
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Consume one bit-slice (packed words, `valid` columns) of
+    /// significance `i`: `acc += popcount(slice) << i`.
+    pub fn consume_slice(&mut self, slice: &[u64], valid: u32, significance: u32) {
+        debug_assert!(valid <= self.width);
+        let ones = popcount_masked(slice, valid);
+        self.acc += (ones as i64) << significance;
+        self.cycles += 1;
+    }
+
+    /// Signed variant: subtract instead of add (used for the
+    /// negative-product pass of signed reductions).
+    pub fn consume_slice_neg(&mut self, slice: &[u64], valid: u32, significance: u32) {
+        let ones = popcount_masked(slice, valid);
+        self.acc -= (ones as i64) << significance;
+        self.cycles += 1;
+    }
+
+    /// Masked variant (hot path): `acc ±= popcount(slice & mask) << sig`
+    /// without materializing the masked plane.
+    pub fn consume_masked(&mut self, slice: &[u64], mask: &[u64], significance: u32, negative: bool) {
+        let ones: u64 = slice.iter().zip(mask).map(|(s, m)| (s & m).count_ones() as u64).sum();
+        if negative {
+            self.acc -= (ones as i64) << significance;
+        } else {
+            self.acc += (ones as i64) << significance;
+        }
+        self.cycles += 1;
+    }
+
+    /// `pim_add_parallel`: bit-parallel add through the accumulator.
+    pub fn add_parallel(&mut self, a: i64, b: i64) -> i64 {
+        self.cycles += 1;
+        a.wrapping_add(b)
+    }
+}
+
+/// Popcount of the first `valid` bits of a packed slice.
+fn popcount_masked(slice: &[u64], valid: u32) -> u64 {
+    let full = (valid / 64) as usize;
+    let mut ones: u64 = slice[..full].iter().map(|w| w.count_ones() as u64).sum();
+    let rem = valid % 64;
+    if rem != 0 {
+        ones += (slice[full] & ((1u64 << rem) - 1)).count_ones() as u64;
+    }
+    ones
+}
+
+/// Reduce a product given as bit-planes over `valid` columns:
+/// `Σ_cols Σ_i plane_i[col] · 2^i` — the full `pim_mul_red` reduction.
+pub fn popcount_reduce_slices(planes: &[Vec<u64>], valid: u32) -> i64 {
+    let mut unit = PopcountUnit::new(valid);
+    for (i, plane) in planes.iter().enumerate() {
+        unit.consume_slice(plane, valid, i as u32);
+    }
+    unit.sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masked_popcount() {
+        assert_eq!(popcount_masked(&[u64::MAX, u64::MAX], 128), 128);
+        assert_eq!(popcount_masked(&[u64::MAX, u64::MAX], 70), 70);
+        assert_eq!(popcount_masked(&[u64::MAX, 0], 64), 64);
+        assert_eq!(popcount_masked(&[0b1011, 0], 3), 2); // bit 3 masked off
+    }
+
+    #[test]
+    fn reduction_equals_scalar_sum() {
+        // 100 values, 16-bit planes.
+        let vals: Vec<u64> = (0..100).map(|i| (i * i * 7 + 13) % 65536).collect();
+        let width = 128u32;
+        let planes = crate::pim::bitplane::to_planes(&vals, 16, width);
+        let got = popcount_reduce_slices(&planes, 100);
+        let want: i64 = vals.iter().map(|&v| v as i64).sum();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn significance_shifts() {
+        let mut u = PopcountUnit::new(64);
+        u.consume_slice(&[0b11], 64, 0); // 2·1
+        u.consume_slice(&[0b1], 64, 3); // 1·8
+        assert_eq!(u.sum(), 10);
+        assert_eq!(u.cycles(), 2);
+    }
+
+    #[test]
+    fn negative_pass() {
+        let mut u = PopcountUnit::new(64);
+        u.consume_slice(&[0b111], 64, 2); // +12
+        u.consume_slice_neg(&[0b1], 64, 4); // −16
+        assert_eq!(u.sum(), -4);
+    }
+
+    #[test]
+    fn parallel_add() {
+        let mut u = PopcountUnit::new(64);
+        assert_eq!(u.add_parallel(1 << 30, 12345), (1 << 30) + 12345);
+        assert_eq!(u.add_parallel(-5, 3), -2);
+    }
+
+    #[test]
+    fn clear_resets_accumulator_only() {
+        let mut u = PopcountUnit::new(64);
+        u.consume_slice(&[u64::MAX], 64, 0);
+        let c = u.cycles();
+        u.clear();
+        assert_eq!(u.sum(), 0);
+        assert_eq!(u.cycles(), c);
+    }
+}

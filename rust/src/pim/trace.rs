@@ -1,0 +1,160 @@
+//! Trace-driven validation: expand a PIM instruction through the device
+//! FSM into its *actual DRAM command stream* (ACT/RD/WR per micro-op, with
+//! SALP round-robin row placement), price it on the cycle-accounting
+//! [`CommandTimer`], and compare against the closed-form analytical model —
+//! the same role Ramulator validation plays in the paper's methodology
+//! (§5.1).
+
+use super::fsm::{DeviceFsm, MicroOp};
+use crate::config::{Features, Precision, TimingParams};
+use crate::dram::{CommandTimer, DramCommand, SalpScheduler, TimingStats};
+
+/// Result of tracing one PIM instruction.
+#[derive(Debug, Clone)]
+pub struct TraceResult {
+    /// DRAM command statistics from the cycle-accounting timer.
+    pub stats: TimingStats,
+    /// PE-pipeline time, ns (overlaps the row stream in hardware).
+    pub pe_ns: f64,
+    /// Serial (non-overlapped) trace latency from the command timer, ns.
+    pub serial_ns: f64,
+    /// Row accesses observed in the trace (loads + writebacks).
+    pub row_accesses: u64,
+}
+
+/// Expand `cmd` through a fresh FSM and price the command stream.
+///
+/// Rows are placed round-robin across `subarrays` (the §3.3 SALP layout);
+/// each `LoadPlane`/`WritePlane` micro-op becomes ACT+RD / ACT+WR on the
+/// next subarray in rotation.
+pub fn trace_instruction(
+    cmd: &DramCommand,
+    subarrays: u32,
+    t: &TimingParams,
+) -> Result<TraceResult, super::fsm::FsmError> {
+    let mut fsm = DeviceFsm::new(16);
+    fsm.dispatch(&DramCommand::PimEnable)?;
+    let micro_ops = fsm.dispatch(cmd)?;
+
+    let mut timer = CommandTimer::new(*t);
+    let mut pe_cycles: u64 = 0;
+    let mut row_accesses: u64 = 0;
+    let mut rotation = 0u32;
+
+    // SALP placement: access i lands on subarray i mod S, row i / S —
+    // successive accesses never share a subarray and every visit opens a
+    // fresh row (streaming operand planes, not revisiting).
+    let mut place = |timer: &mut CommandTimer, write: bool| {
+        let bank = rotation % subarrays;
+        let row = rotation / subarrays;
+        timer.issue(&DramCommand::Act { bank, row });
+        if write {
+            timer.issue(&DramCommand::Wr { bank, col: 0 });
+        } else {
+            timer.issue(&DramCommand::Rd { bank, col: 0 });
+        }
+        rotation += 1;
+    };
+
+    for op in &micro_ops {
+        match op {
+            MicroOp::LoadPlane { .. } => {
+                place(&mut timer, false);
+                row_accesses += 1;
+            }
+            MicroOp::WritePlane | MicroOp::WriteHorizontal => {
+                place(&mut timer, true);
+                row_accesses += 1;
+            }
+            MicroOp::PeStep | MicroOp::CarryOut => pe_cycles += 1,
+            MicroOp::PopcountSlice { .. } => pe_cycles += t.popcount_cycles as u64,
+            MicroOp::ParallelAdd => pe_cycles += t.parallel_add_cycles as u64,
+            MicroOp::SetModeRegister { .. } => {}
+        }
+    }
+
+    Ok(TraceResult {
+        serial_ns: timer.elapsed_ns(),
+        stats: timer.stats().clone(),
+        pe_ns: pe_cycles as f64 * t.pe_cycle_ns(),
+        row_accesses,
+    })
+}
+
+/// Validate the analytical instruction model against the trace for one
+/// instruction class: returns (analytical_row_accesses, traced_row_accesses,
+/// analytical_ns, trace_overlapped_ns).
+pub fn validate_against_analytical(
+    prec: Precision,
+    subarrays: u32,
+    t: &TimingParams,
+) -> (u64, u64, f64, f64) {
+    let cmd = DramCommand::PimMul { r_dst: 0, r_src1: 1, r_src2: 2, prec: prec.bits() as u8 };
+    let trace = trace_instruction(&cmd, subarrays, t).expect("trace");
+    let salp = SalpScheduler::new(*t, subarrays);
+    let analytical =
+        super::isa::instr_latency(super::isa::InstrClass::Mul, prec, t, &salp, &Features::ALL);
+    // Overlap the traced stream the way SALP does: rows pipeline at one
+    // beat each behind the PE pipeline.
+    let overlapped = trace.pe_ns.max(trace.row_accesses as f64 * t.t_cas_ns);
+    (analytical.row_accesses, trace.row_accesses, analytical.total_ns(), overlapped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ddr5_5200_timing;
+
+    #[test]
+    fn traced_row_accesses_match_analytical_exactly() {
+        let t = ddr5_5200_timing();
+        for prec in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            let (analytical, traced, _, _) = validate_against_analytical(prec, 128, &t);
+            assert_eq!(analytical, traced, "{prec:?}");
+            assert_eq!(traced, 4 * prec.bits() as u64);
+        }
+    }
+
+    #[test]
+    fn overlapped_trace_latency_matches_analytical_model() {
+        let t = ddr5_5200_timing();
+        for prec in [Precision::Int4, Precision::Int8] {
+            let (_, _, analytical_ns, overlapped_ns) = validate_against_analytical(prec, 128, &t);
+            let rel = (analytical_ns - overlapped_ns).abs() / analytical_ns;
+            assert!(rel < 0.05, "{prec:?}: analytical {analytical_ns} vs trace {overlapped_ns}");
+        }
+    }
+
+    #[test]
+    fn trace_counts_activations_per_subarray_rotation() {
+        let t = ddr5_5200_timing();
+        let cmd = DramCommand::PimMul { r_dst: 0, r_src1: 1, r_src2: 2, prec: 8 };
+        let trace = trace_instruction(&cmd, 4, &t).unwrap();
+        // 32 row accesses across a 4-subarray rotation: every access is a
+        // row switch on its subarray (rows advance), so ACT count equals
+        // accesses.
+        assert_eq!(trace.stats.activations, 32);
+        assert_eq!(trace.stats.reads, 16); // op1 + op2 planes
+        assert_eq!(trace.stats.writes, 16); // 2n product planes
+    }
+
+    #[test]
+    fn serial_trace_is_slower_than_overlapped() {
+        let t = ddr5_5200_timing();
+        let cmd = DramCommand::PimMul { r_dst: 0, r_src1: 1, r_src2: 2, prec: 8 };
+        let trace = trace_instruction(&cmd, 128, &t).unwrap();
+        let overlapped = trace.pe_ns.max(trace.row_accesses as f64 * t.t_cas_ns);
+        assert!(trace.serial_ns > overlapped, "{} vs {overlapped}", trace.serial_ns);
+    }
+
+    #[test]
+    fn compute_commands_require_pim_mode() {
+        let t = ddr5_5200_timing();
+        // trace_instruction itself enables PIM mode; a raw FSM must refuse.
+        let mut fsm = DeviceFsm::new(8);
+        assert!(fsm
+            .dispatch(&DramCommand::PimMul { r_dst: 0, r_src1: 1, r_src2: 2, prec: 8 })
+            .is_err());
+        let _ = t;
+    }
+}

@@ -1,0 +1,152 @@
+//! Transpose unit (paper §2.2): bit-serial computation needs operands in a
+//! *vertically transposed* layout — bit *i* of every element aligned on row
+//! *i* across subarray columns.  Static weights are pre-transposed offline;
+//! dynamic operands go through this unit at the memory controller on their
+//! way in, and horizontal results can be read back directly.
+//!
+//! The functional core is a word-level 64×64 bit-matrix transpose
+//! (Hacker's-Delight style butterfly), which is also what makes the
+//! simulator's packing fast; the timing model charges one bus beat per
+//! 64-bit word in + one per word out.
+
+/// Transpose a 64×64 bit matrix held as 64 u64 rows, LSB-first convention:
+/// bit j of `a[i]` moves to bit i of `a[j]`.  In-place, log₂64 butterfly
+/// steps of masked delta-swaps (Hacker's-Delight transpose adapted to the
+/// LSB-first column order the bit-plane layout uses).
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j: usize = 32;
+    // Mask selecting bit positions whose `j` bit is SET (the upper half of
+    // each 2j-wide group).
+    let mut m: u64 = 0xFFFF_FFFF_0000_0000;
+    while j != 0 {
+        let mut k = 0;
+        while k < 64 {
+            let t = (a[k] ^ (a[k + j] << j)) & m;
+            a[k] ^= t;
+            a[k + j] ^= t >> j;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m >> j.max(1);
+    }
+}
+
+/// The transpose unit: converts between element-major values and the
+/// vertical bit-plane layout, counting bus beats for the timing model.
+#[derive(Debug, Clone, Default)]
+pub struct TransposeUnit {
+    /// 64-bit words consumed + produced (one bus beat each).
+    pub beats: u64,
+}
+
+impl TransposeUnit {
+    pub fn new() -> Self {
+        TransposeUnit::default()
+    }
+
+    /// Vertical-ize: `values[lane]`'s low `bits` become bit-planes
+    /// (plane i holds bit i of every lane), 64 lanes per word column.
+    pub fn to_vertical(&mut self, values: &[u64], bits: usize) -> Vec<Vec<u64>> {
+        let words = values.len().div_ceil(64);
+        let mut planes = vec![vec![0u64; words]; bits];
+        for wi in 0..words {
+            let mut block = [0u64; 64];
+            for lane in 0..64 {
+                if let Some(&v) = values.get(wi * 64 + lane) {
+                    // Row `lane` holds the lane's value; after transpose,
+                    // row i holds bit i of every lane.
+                    block[lane] = v;
+                }
+            }
+            transpose64(&mut block);
+            for (i, plane) in planes.iter_mut().enumerate() {
+                plane[wi] = block[i];
+            }
+            self.beats += 64 + bits as u64;
+        }
+        planes
+    }
+
+    /// Horizontal-ize: invert [`Self::to_vertical`].
+    pub fn to_horizontal(&mut self, planes: &[Vec<u64>], count: usize) -> Vec<u64> {
+        let words = count.div_ceil(64);
+        let mut out = vec![0u64; count];
+        for wi in 0..words {
+            let mut block = [0u64; 64];
+            for (i, plane) in planes.iter().enumerate() {
+                block[i] = plane[wi];
+            }
+            transpose64(&mut block);
+            for lane in 0..64 {
+                let idx = wi * 64 + lane;
+                if idx < count {
+                    out[idx] = block[lane];
+                }
+            }
+            self.beats += planes.len() as u64 + 64;
+        }
+        out
+    }
+
+    /// Transpose latency in ns at `bus_beat_ns` per 64-bit word.
+    pub fn elapsed_ns(&self, bus_beat_ns: f64) -> f64 {
+        self.beats as f64 * bus_beat_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::bitplane;
+
+    #[test]
+    fn transpose64_involution_and_correctness() {
+        let mut a = [0u64; 64];
+        for (i, v) in a.iter_mut().enumerate() {
+            *v = (i as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ 0xABCD;
+        }
+        let orig = a;
+        transpose64(&mut a);
+        // Element (i, j) moved to (j, i).
+        for i in 0..64 {
+            for j in 0..64 {
+                let src = (orig[i] >> j) & 1;
+                let dst = (a[j] >> i) & 1;
+                assert_eq!(src, dst, "({i},{j})");
+            }
+        }
+        transpose64(&mut a);
+        assert_eq!(a, orig, "transpose must be an involution");
+    }
+
+    #[test]
+    fn vertical_roundtrip_matches_bitplane_packing() {
+        let vals: Vec<u64> = (0..150).map(|i| (i * 37 + 5) % 256).collect();
+        let mut tu = TransposeUnit::new();
+        let planes = tu.to_vertical(&vals, 8);
+        // Same layout as the (slower) reference packer.
+        let reference = bitplane::to_planes(&vals, 8, 192);
+        assert_eq!(planes, reference);
+        let back = tu.to_horizontal(&planes, 150);
+        assert_eq!(back, vals);
+        assert!(tu.beats > 0);
+    }
+
+    #[test]
+    fn beat_accounting() {
+        let vals = vec![7u64; 64];
+        let mut tu = TransposeUnit::new();
+        tu.to_vertical(&vals, 8);
+        assert_eq!(tu.beats, 64 + 8);
+        assert!((tu.elapsed_ns(2.0) - 144.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_last_word() {
+        let vals: Vec<u64> = (0..7).collect();
+        let mut tu = TransposeUnit::new();
+        let planes = tu.to_vertical(&vals, 3);
+        let back = tu.to_horizontal(&planes, 7);
+        assert_eq!(back, vals);
+    }
+}

@@ -1,0 +1,83 @@
+//! In-tree micro-benchmark harness (criterion replacement for the offline
+//! build): warmup + timed iterations, reporting min/mean/p50/max.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  min {:>12}  p50 {:>12}  max {:>12}",
+            self.name,
+            self.iters,
+            crate::metrics::fmt_ns(self.mean_ns),
+            crate::metrics::fmt_ns(self.min_ns),
+            crate::metrics::fmt_ns(self.p50_ns),
+            crate::metrics::fmt_ns(self.max_ns),
+        )
+    }
+}
+
+/// Run `f` for `iters` timed iterations (after 10% warmup) and print a
+/// summary line.  Returns the stats so benches can assert regressions.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    let warmup = (iters / 10).max(1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.iter().sum::<f64>() / iters as f64,
+        min_ns: samples[0],
+        p50_ns: samples[iters / 2],
+        max_ns: samples[iters - 1],
+    };
+    println!("{}", res.line());
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let r = bench("noop", 50, || 1 + 1);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.max_ns);
+        assert!(r.mean_ns >= r.min_ns && r.mean_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn measures_real_work() {
+        let fast = bench("fast", 30, || std::hint::black_box(0u64));
+        // black_box the bound so release builds can't fold the loop away.
+        let n = std::hint::black_box(200_000u64);
+        let slow = bench("slow", 30, || {
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            acc
+        });
+        assert!(slow.p50_ns > fast.p50_ns);
+    }
+}

@@ -1,0 +1,22 @@
+//! Report rendering: aligned text tables (the paper-style rows every
+//! experiment prints), CSV emission under `results/`, and the in-tree
+//! micro-benchmark harness used by `cargo bench` (criterion is unavailable
+//! in this offline environment — see DESIGN.md "Substitutions").
+
+mod bench;
+mod table;
+
+pub use bench::{bench, BenchResult};
+pub use table::Table;
+
+use std::fs;
+use std::path::Path;
+
+/// Write a report file under `results/` (created on demand).
+pub fn save(name: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = Path::new("results");
+    fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    fs::write(&path, contents)?;
+    Ok(path)
+}

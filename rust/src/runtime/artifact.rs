@@ -1,0 +1,73 @@
+//! Artifact discovery: names and locations of the AOT outputs the compile
+//! path (`python/compile/aot.py`) produces.
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `$RACAM_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("RACAM_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// The artifact set `aot.py` emits.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+}
+
+impl ArtifactSet {
+    pub fn discover() -> Self {
+        ArtifactSet { dir: artifacts_dir() }
+    }
+
+    /// int32 GEMM oracle at a fixed (m, k, n).
+    pub fn gemm(&self, m: usize, k: usize, n: usize) -> PathBuf {
+        self.dir.join(format!("gemm_{m}x{k}x{n}.hlo.txt"))
+    }
+
+    /// The quantized transformer block (Pallas kernel inside).
+    pub fn transformer_block(&self) -> PathBuf {
+        self.dir.join("transformer_block.hlo.txt")
+    }
+
+    /// The tiny greedy-decode step used by the serving example.
+    pub fn decode_step(&self) -> PathBuf {
+        self.dir.join("decode_step.hlo.txt")
+    }
+
+    /// True when `make artifacts` has produced the set.
+    pub fn present(&self) -> bool {
+        self.dir.join(".stamp").exists() || self.transformer_block().exists()
+    }
+
+    pub fn require(&self) -> crate::Result<()> {
+        if self.present() {
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "artifacts not found in {} — run `make artifacts` first",
+                self.dir.display()
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        let a = ArtifactSet { dir: PathBuf::from("/x") };
+        assert_eq!(a.gemm(8, 16, 4), PathBuf::from("/x/gemm_8x16x4.hlo.txt"));
+        assert_eq!(a.transformer_block(), PathBuf::from("/x/transformer_block.hlo.txt"));
+    }
+
+    #[test]
+    fn env_override() {
+        // artifacts_dir reads the env var at call time.
+        std::env::set_var("RACAM_ARTIFACTS", "/tmp/zzz");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/zzz"));
+        std::env::remove_var("RACAM_ARTIFACTS");
+        assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+    }
+}

@@ -1,0 +1,60 @@
+//! Standalone GEMM/GEMV sweeps for the sensitivity studies (paper Fig. 16:
+//! three groups each; M and N fixed within a group, K swept).
+
+use crate::config::{MatmulShape, Precision};
+
+/// One sweep point with its group label.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    pub group: &'static str,
+    pub shape: MatmulShape,
+}
+
+/// Fig. 16a GEMM sweep: square-ish GEMMs from 2048³ up to 32768³,
+/// grouped by (M, N) with K swept ×4 within each group.
+pub fn gemm_sweep(prec: Precision) -> Vec<SweepPoint> {
+    let mut v = Vec::new();
+    for (group, mn) in [("G2048", 2048u64), ("G8192", 8192), ("G32768", 32768)] {
+        for k in [mn, mn * 2, mn * 4] {
+            v.push(SweepPoint { group, shape: MatmulShape::new(mn, k, mn, prec) });
+        }
+    }
+    v
+}
+
+/// Fig. 16b GEMV sweep: M = 1, N fixed per group, K swept.
+pub fn gemv_sweep(prec: Precision) -> Vec<SweepPoint> {
+    let mut v = Vec::new();
+    for (group, n) in [("V2048", 2048u64), ("V8192", 8192), ("V32768", 32768)] {
+        for k in [n, n * 2, n * 4] {
+            v.push(SweepPoint { group, shape: MatmulShape::new(1, k, n, prec) });
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_sizes() {
+        assert_eq!(gemm_sweep(Precision::Int8).len(), 9);
+        assert_eq!(gemv_sweep(Precision::Int8).len(), 9);
+    }
+
+    #[test]
+    fn gemm_compute_span_covers_the_papers_4096x() {
+        // Paper: 2048³ → 32768³ is a 4096× compute growth; the sweep must
+        // contain both endpoints.
+        let sweep = gemm_sweep(Precision::Int8);
+        let small = sweep.iter().find(|p| p.shape.label() == "2048x2048x2048").unwrap();
+        let big = sweep.iter().find(|p| p.shape.label() == "32768x32768x32768").unwrap();
+        assert_eq!(big.shape.macs() / small.shape.macs(), 4096);
+    }
+
+    #[test]
+    fn gemvs_are_gemvs() {
+        assert!(gemv_sweep(Precision::Int8).iter().all(|p| p.shape.is_gemv()));
+    }
+}

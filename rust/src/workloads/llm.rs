@@ -1,0 +1,229 @@
+//! LLM parser: decomposes a transformer's prefill and decode stages into
+//! the GEMM/GEMV kernel sequences the mapping engine consumes (paper §4.4's
+//! "LLM parser", built per-layer from the Table 3 hyper-parameters).
+
+use super::InferenceSystem;
+use crate::config::{LlmSpec, MatmulShape, Precision, Scenario};
+use crate::metrics::LatencyBreakdown;
+
+/// One kernel shape plus how many times it executes per forward pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelInstance {
+    pub shape: MatmulShape,
+    pub count: u64,
+    /// Human label for reports ("qkv", "scores", ...).
+    pub label: &'static str,
+}
+
+impl KernelInstance {
+    fn new(label: &'static str, shape: MatmulShape, count: u64) -> Self {
+        KernelInstance { shape, count, label }
+    }
+}
+
+/// Kernels of one full prefill forward pass over `seq` prompt tokens.
+///
+/// Weight matmuls are `weight_static` (pre-laid in DRAM / resident in HBM);
+/// attention matmuls multiply two dynamic activations.
+pub fn prefill_kernels(spec: &LlmSpec, seq: u64) -> Vec<KernelInstance> {
+    let h = spec.hidden;
+    let dh = spec.head_dim();
+    let kv = spec.kv_heads as u64 * dh;
+    let l = spec.layers as u64;
+    let p = spec.prec;
+    // Attention heads are data-parallel: the parser folds them into the N
+    // dimension (heads × per-head width), so one PIM kernel per layer maps
+    // them across the hierarchy instead of issuing `heads` serial GEMMs
+    // (MAC count and per-output reduction length are preserved exactly).
+    let heads = spec.heads as u64;
+    let mut v = vec![
+        KernelInstance::new("qkv", MatmulShape::new(seq, h, h + 2 * kv, p).resident(), l),
+        KernelInstance::new("scores", MatmulShape::dynamic(seq, dh, heads * seq, p).resident(), l),
+        KernelInstance::new("attn_v", MatmulShape::dynamic(seq, seq, heads * dh, p).resident(), l),
+        KernelInstance::new("out_proj", MatmulShape::new(seq, h, h, p).resident(), l),
+        KernelInstance::new("ffn_up", MatmulShape::new(seq, h, spec.ffn, p).resident(), l),
+        KernelInstance::new("ffn_down", MatmulShape::new(seq, spec.ffn, h, p).resident(), l),
+    ];
+    if spec.gated_ffn {
+        v.push(KernelInstance::new("ffn_gate", MatmulShape::new(seq, h, spec.ffn, p).resident(), l));
+    }
+    // LM head: only the last position feeds generation.
+    v.push(KernelInstance::new("lm_head", MatmulShape::new(1, h, spec.vocab, p).resident(), 1));
+    v
+}
+
+/// Kernels of one decode step at KV-cache context length `ctx`.
+///
+/// The KV cache lives in (PIM) DRAM where it was produced, so the
+/// attention matmuls against it are `weight_static`; only the per-token
+/// activations move.
+pub fn decode_kernels(spec: &LlmSpec, ctx: u64) -> Vec<KernelInstance> {
+    let h = spec.hidden;
+    let dh = spec.head_dim();
+    let kv = spec.kv_heads as u64 * dh;
+    let l = spec.layers as u64;
+    let p = spec.prec;
+    let heads = spec.heads as u64;
+    let mut v = vec![
+        KernelInstance::new("qkv", MatmulShape::new(1, h, h + 2 * kv, p).resident(), l),
+        KernelInstance::new("scores", MatmulShape::new(1, dh, heads * ctx, p).resident(), l),
+        KernelInstance::new("attn_v", MatmulShape::new(1, ctx, heads * dh, p).resident(), l),
+        KernelInstance::new("out_proj", MatmulShape::new(1, h, h, p).resident(), l),
+        KernelInstance::new("ffn_up", MatmulShape::new(1, h, spec.ffn, p).resident(), l),
+        KernelInstance::new("ffn_down", MatmulShape::new(1, spec.ffn, h, p).resident(), l),
+    ];
+    if spec.gated_ffn {
+        v.push(KernelInstance::new("ffn_gate", MatmulShape::new(1, h, spec.ffn, p).resident(), l));
+    }
+    v.push(KernelInstance::new("lm_head", MatmulShape::new(1, h, spec.vocab, p).resident(), 1));
+    v
+}
+
+/// Total latency of a kernel list on a system.
+pub fn stage_latency(sys: &mut dyn InferenceSystem, kernels: &[KernelInstance]) -> LatencyBreakdown {
+    let mut total = LatencyBreakdown::default();
+    for k in kernels {
+        total.add(&sys.kernel_latency(&k.shape).scaled(k.count as f64));
+    }
+    total
+}
+
+/// Number of context-length sample points used to integrate decode latency
+/// over a generation (mappings are cached per shape, so per-token evaluation
+/// would be exact but slow; the latency is near-linear in context length).
+const DECODE_SAMPLES: u64 = 8;
+
+/// Total decode latency for generating `output_tokens` after a
+/// `prompt_tokens` prompt: samples the per-token latency at several context
+/// lengths and integrates trapezoidally.
+pub fn decode_total(
+    sys: &mut dyn InferenceSystem,
+    spec: &LlmSpec,
+    prompt_tokens: u64,
+    output_tokens: u64,
+) -> LatencyBreakdown {
+    if output_tokens == 0 {
+        return LatencyBreakdown::default();
+    }
+    let samples = DECODE_SAMPLES.min(output_tokens);
+    let mut total = LatencyBreakdown::default();
+    let seg = output_tokens as f64 / samples as f64;
+    for s in 0..samples {
+        // Mid-point context length of this segment.
+        let ctx = prompt_tokens + ((s as f64 + 0.5) * seg) as u64;
+        let per_token = stage_latency(sys, &decode_kernels(spec, ctx.max(1)));
+        total.add(&per_token.scaled(seg));
+    }
+    total
+}
+
+/// End-to-end scenario latency: one prefill pass + the full generation.
+pub fn e2e_latency(sys: &mut dyn InferenceSystem, spec: &LlmSpec, sc: &Scenario) -> LatencyBreakdown {
+    let mut total = stage_latency(sys, &prefill_kernels(spec, sc.prompt_tokens));
+    total.add(&decode_total(sys, spec, sc.prompt_tokens, sc.output_tokens));
+    total
+}
+
+/// Convenience: int8 per-token decode MAC count (sanity checks / roofline).
+pub fn decode_macs(spec: &LlmSpec, ctx: u64) -> u64 {
+    decode_kernels(spec, ctx).iter().map(|k| k.count * k.shape.macs()).sum()
+}
+
+#[allow(dead_code)]
+fn _assert_precision_is_int8(p: Precision) {
+    debug_assert_eq!(p.bits(), 8);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{gpt3_175b, gpt3_6_7b, llama3_8b, Scenario};
+
+    /// A trivial system: latency proportional to MACs (+ constant).
+    struct MacSystem;
+    impl InferenceSystem for MacSystem {
+        fn name(&self) -> &str {
+            "mac"
+        }
+        fn kernel_latency(&mut self, shape: &MatmulShape) -> LatencyBreakdown {
+            LatencyBreakdown::new(shape.macs() as f64 * 1e-3, 10.0)
+        }
+    }
+
+    #[test]
+    fn prefill_macs_match_closed_form() {
+        // GPT-3 (MHA, non-gated): per layer ≈ S·h·3h + 2·S²·h + S·h·h + 2·S·h·4h.
+        let spec = gpt3_6_7b();
+        let s = 1024u64;
+        let macs: u64 =
+            prefill_kernels(&spec, s).iter().map(|k| k.count * k.shape.macs()).sum();
+        let h = spec.hidden;
+        let per_layer = s * h * 3 * h + 2 * s * s * h + s * h * h + 2 * s * h * 4 * h;
+        let expect = spec.layers as u64 * per_layer + spec.vocab * h;
+        assert_eq!(macs, expect);
+    }
+
+    #[test]
+    fn decode_kernels_are_gemv() {
+        for k in decode_kernels(&gpt3_175b(), 4096) {
+            assert!(k.shape.is_gemv(), "{} is not a GEMV", k.label);
+        }
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_projection() {
+        let llama = llama3_8b();
+        let qkv = decode_kernels(&llama, 128).iter().find(|k| k.label == "qkv").unwrap().shape;
+        // 4096 + 2·(8 heads × 128) = 6144 < 3·4096.
+        assert_eq!(qkv.n, 4096 + 2 * 1024);
+    }
+
+    #[test]
+    fn gated_ffn_adds_a_matmul() {
+        let llama = llama3_8b();
+        let gpt = gpt3_6_7b();
+        let l = prefill_kernels(&llama, 64).iter().filter(|k| k.label.starts_with("ffn")).count();
+        let g = prefill_kernels(&gpt, 64).iter().filter(|k| k.label.starts_with("ffn")).count();
+        assert_eq!(l, 3);
+        assert_eq!(g, 2);
+    }
+
+    #[test]
+    fn decode_total_grows_with_context() {
+        let spec = gpt3_6_7b();
+        let short = decode_total(&mut MacSystem, &spec, 128, 64);
+        let long = decode_total(&mut MacSystem, &spec, 8192, 64);
+        assert!(long.total_ns() > short.total_ns());
+    }
+
+    #[test]
+    fn decode_total_scales_with_token_count() {
+        let spec = gpt3_6_7b();
+        let few = decode_total(&mut MacSystem, &spec, 1024, 10);
+        let many = decode_total(&mut MacSystem, &spec, 1024, 1000);
+        // More than 50x (context also grows), at least linear-ish.
+        assert!(many.total_ns() > 50.0 * few.total_ns());
+        assert_eq!(decode_total(&mut MacSystem, &spec, 1024, 0).total_ns(), 0.0);
+    }
+
+    #[test]
+    fn e2e_is_prefill_plus_decode() {
+        let spec = gpt3_6_7b();
+        let sc = Scenario::CODE_GENERATION;
+        let e2e = e2e_latency(&mut MacSystem, &spec, &sc);
+        let prefill = stage_latency(&mut MacSystem, &prefill_kernels(&spec, sc.prompt_tokens));
+        let decode = decode_total(&mut MacSystem, &spec, sc.prompt_tokens, sc.output_tokens);
+        let sum = prefill.total_ns() + decode.total_ns();
+        assert!((e2e.total_ns() - sum).abs() / sum < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_attention_operands_in_prefill_only() {
+        let spec = gpt3_6_7b();
+        let pre = prefill_kernels(&spec, 512);
+        assert!(pre.iter().any(|k| !k.shape.weight_static));
+        // In decode the KV cache is already DRAM-resident.
+        let dec = decode_kernels(&spec, 512);
+        assert!(dec.iter().all(|k| k.shape.weight_static));
+    }
+}

@@ -1,0 +1,26 @@
+//! Workloads: the LLM-to-kernel parser (paper §5.3, built in the spirit of
+//! the LLMCompass-based parser of §5.1), standalone GEMM/GEMV sweeps, and
+//! the end-to-end inference scenarios.
+
+mod gemm;
+mod llm;
+mod racam;
+
+pub use gemm::{gemm_sweep, gemv_sweep, SweepPoint};
+pub use llm::{
+    decode_kernels, decode_macs, decode_total, e2e_latency, prefill_kernels, stage_latency,
+    KernelInstance,
+};
+pub use racam::RacamSystem;
+
+use crate::metrics::LatencyBreakdown;
+use crate::config::MatmulShape;
+
+/// Anything that can price a matmul kernel: the RACAM simulator or one of
+/// the baseline system models (H100, Proteus).
+pub trait InferenceSystem {
+    /// System name for reports.
+    fn name(&self) -> &str;
+    /// Latency of one kernel execution.
+    fn kernel_latency(&mut self, shape: &MatmulShape) -> LatencyBreakdown;
+}

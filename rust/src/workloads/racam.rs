@@ -1,0 +1,64 @@
+//! The RACAM system as an [`InferenceSystem`]: every kernel goes through
+//! the mapping engine (cached exhaustive search) and is priced by the
+//! analytical models.
+
+use super::InferenceSystem;
+use crate::config::{HwConfig, MatmulShape};
+use crate::mapping::{HwModel, MappingEngine, SearchResult};
+use crate::metrics::LatencyBreakdown;
+
+pub struct RacamSystem {
+    name: String,
+    engine: MappingEngine,
+}
+
+impl RacamSystem {
+    pub fn new(hw: &HwConfig) -> Self {
+        RacamSystem { name: format!("RACAM[{}]", hw.features.label()), engine: MappingEngine::new(HwModel::new(hw)) }
+    }
+
+    pub fn engine(&self) -> &MappingEngine {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut MappingEngine {
+        &mut self.engine
+    }
+
+    /// Full search result (mapping + breakdown) for a kernel.
+    pub fn search(&mut self, shape: &MatmulShape) -> SearchResult {
+        self.engine.search_cached(shape)
+    }
+}
+
+impl InferenceSystem for RacamSystem {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kernel_latency(&mut self, shape: &MatmulShape) -> LatencyBreakdown {
+        let r = self.engine.search_cached(shape);
+        LatencyBreakdown::new(r.best.compute_ns, r.best.io_ns())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{racam_paper, MatmulShape, Precision};
+
+    #[test]
+    fn kernel_latency_matches_search_best() {
+        let mut sys = RacamSystem::new(&racam_paper());
+        let s = MatmulShape::new(1, 4096, 4096, Precision::Int8);
+        let b = sys.kernel_latency(&s);
+        let r = sys.search(&s);
+        assert!((b.total_ns() - r.best.total_ns()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn name_carries_feature_label() {
+        let sys = RacamSystem::new(&racam_paper());
+        assert_eq!(sys.name(), "RACAM[Complete]");
+    }
+}
