@@ -32,11 +32,11 @@ fn main() -> racam::Result<()> {
     );
 
     // Per-kernel decode breakdown on RACAM (ctx = 1024).
-    let mut racam_sys = RacamSystem::new(&racam_paper());
+    let racam_sys = RacamSystem::new(&racam_paper());
     println!("decode kernels (ctx 1024) on RACAM:");
     println!("{:<10} {:>22} {:>12} {:>10} {:>8}", "kernel", "shape", "latency", "mapping", "util");
     for k in decode_kernels(&spec, 1024) {
-        let r = racam_sys.search(&k.shape);
+        let r = racam_sys.search(&k.shape).expect("decode kernels always map");
         println!(
             "{:<10} {:>22} {:>12} {:>10} {:>7.1}%",
             k.label,
@@ -47,36 +47,36 @@ fn main() -> racam::Result<()> {
         );
     }
 
-    // Stage + scenario comparison across systems.
-    let mut h100 = H100Model::for_model(&spec);
-    let mut proteus = ProteusModel::for_model(&spec);
+    // Stage + scenario comparison across systems (uniform `CostModel`).
+    let h100 = H100Model::for_model(&spec);
+    let proteus = ProteusModel::for_model(&spec);
     println!("\n{:<22} {:>14} {:>14} {:>14} {:>9}", "workload", "H100", "Proteus", "RACAM", "speedup");
     let prefill = prefill_kernels(&spec, 1024);
     let decode = decode_kernels(&spec, 1024);
     let rows: Vec<(&str, f64, f64, f64)> = vec![
         (
             "prefill (1024 tok)",
-            stage_latency(&mut h100, &prefill).total_ns(),
-            stage_latency(&mut proteus, &prefill).total_ns(),
-            stage_latency(&mut racam_sys, &prefill).total_ns(),
+            stage_latency(&h100, &prefill)?.total_ns(),
+            stage_latency(&proteus, &prefill)?.total_ns(),
+            stage_latency(&racam_sys, &prefill)?.total_ns(),
         ),
         (
             "decode token",
-            stage_latency(&mut h100, &decode).total_ns(),
-            stage_latency(&mut proteus, &decode).total_ns(),
-            stage_latency(&mut racam_sys, &decode).total_ns(),
+            stage_latency(&h100, &decode)?.total_ns(),
+            stage_latency(&proteus, &decode)?.total_ns(),
+            stage_latency(&racam_sys, &decode)?.total_ns(),
         ),
         (
             "e2e CodeGeneration",
-            e2e_latency(&mut h100, &spec, &Scenario::CODE_GENERATION).total_ns(),
-            e2e_latency(&mut proteus, &spec, &Scenario::CODE_GENERATION).total_ns(),
-            e2e_latency(&mut racam_sys, &spec, &Scenario::CODE_GENERATION).total_ns(),
+            e2e_latency(&h100, &spec, &Scenario::CODE_GENERATION)?.total_ns(),
+            e2e_latency(&proteus, &spec, &Scenario::CODE_GENERATION)?.total_ns(),
+            e2e_latency(&racam_sys, &spec, &Scenario::CODE_GENERATION)?.total_ns(),
         ),
         (
             "e2e ContextUnderst.",
-            e2e_latency(&mut h100, &spec, &Scenario::CONTEXT_UNDERSTANDING).total_ns(),
-            e2e_latency(&mut proteus, &spec, &Scenario::CONTEXT_UNDERSTANDING).total_ns(),
-            e2e_latency(&mut racam_sys, &spec, &Scenario::CONTEXT_UNDERSTANDING).total_ns(),
+            e2e_latency(&h100, &spec, &Scenario::CONTEXT_UNDERSTANDING)?.total_ns(),
+            e2e_latency(&proteus, &spec, &Scenario::CONTEXT_UNDERSTANDING)?.total_ns(),
+            e2e_latency(&racam_sys, &spec, &Scenario::CONTEXT_UNDERSTANDING)?.total_ns(),
         ),
     ];
     for (label, h, p, r) in rows {
@@ -91,8 +91,8 @@ fn main() -> racam::Result<()> {
     }
     println!(
         "\nmapping cache: {} unique shapes searched, {} hits",
-        racam_sys.engine().misses,
-        racam_sys.engine().hits
+        racam_sys.service().misses(),
+        racam_sys.service().hits()
     );
     Ok(())
 }

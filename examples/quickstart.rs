@@ -42,10 +42,11 @@ fn main() -> racam::Result<()> {
         m, k, n, stats.passes, stats.row_accesses
     );
 
-    // ❸ Automated mapping: exhaustive search over 1458 candidates.
+    // ❸ Automated mapping: parallel exhaustive search over 1458 candidates
+    //    (bit-identical winner to the serial reference).
     let engine = MappingEngine::new(HwModel::new(&hw));
     let shape = MatmulShape::new(1024, 12288, 12288, Precision::Int8);
-    let r = engine.search(&shape);
+    let r = engine.search(&shape).expect("non-degenerate GEMM evaluates");
     println!(
         "\n❸ best mapping for {}: {}\n   latency {} (compute {}, io {}), PE util {:.1}%, spread {:.0}x",
         shape.label(),
@@ -57,15 +58,16 @@ fn main() -> racam::Result<()> {
         r.spread(),
     );
 
-    // ❹ LLM decode step on the three systems.
+    // ❹ LLM decode step on the three systems — all priced through the
+    //    same `CostModel` interface.
     let spec = gpt3_175b();
     let kernels = decode_kernels(&spec, 1024);
-    let mut racam_sys = RacamSystem::new(&hw);
-    let mut h100 = H100Model::for_model(&spec);
-    let mut proteus = ProteusModel::for_model(&spec);
-    let r_ns = stage_latency(&mut racam_sys, &kernels).total_ns();
-    let h_ns = stage_latency(&mut h100, &kernels).total_ns();
-    let p_ns = stage_latency(&mut proteus, &kernels).total_ns();
+    let racam_sys = RacamSystem::new(&hw);
+    let h100 = H100Model::for_model(&spec);
+    let proteus = ProteusModel::for_model(&spec);
+    let r_ns = stage_latency(&racam_sys, &kernels)?.total_ns();
+    let h_ns = stage_latency(&h100, &kernels)?.total_ns();
+    let p_ns = stage_latency(&proteus, &kernels)?.total_ns();
     println!("\n❹ {} decode token (ctx 1024):", spec.name);
     println!("   H100    {}", fmt_ns(h_ns));
     println!("   Proteus {}  ({:.3}x H100)", fmt_ns(p_ns), h_ns / p_ns);

@@ -37,7 +37,7 @@ fn main() {
     println!("\n=== ablation: rank-replication sweep ===");
     let gemv = MatmulShape::new(1, 12288, 12288, Precision::Int8);
     let full = MappingEngine::new(HwModel::new(&racam_paper()));
-    let best = full.search(&gemv).best;
+    let best = full.search(&gemv).expect("GEMV space evaluates").best;
     println!(
         "  best GEMV mapping uses {} of 32 ranks (sweep chose the replication degree)",
         best.usage.used[1]

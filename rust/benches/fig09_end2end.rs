@@ -17,13 +17,13 @@ fn main() {
     println!("=== evaluation pipeline timing ===");
     // Cold: every kernel shape searched from scratch.
     bench("e2e_gpt3_6.7B_codegen_cold", 10, || {
-        let mut sys = RacamSystem::new(&racam_paper());
-        e2e_latency(&mut sys, &gpt3_6_7b(), &Scenario::CODE_GENERATION)
+        let sys = RacamSystem::new(&racam_paper());
+        e2e_latency(&sys, &gpt3_6_7b(), &Scenario::CODE_GENERATION).expect("paper kernels map")
     });
     // Warm: mapping cache reused across calls (the paper's amortized mode).
-    let mut sys = RacamSystem::new(&racam_paper());
-    e2e_latency(&mut sys, &gpt3_6_7b(), &Scenario::CODE_GENERATION);
+    let sys = RacamSystem::new(&racam_paper());
+    e2e_latency(&sys, &gpt3_6_7b(), &Scenario::CODE_GENERATION).expect("paper kernels map");
     bench("e2e_gpt3_6.7B_codegen_warm_cache", 50, || {
-        e2e_latency(&mut sys, &gpt3_6_7b(), &Scenario::CODE_GENERATION)
+        e2e_latency(&sys, &gpt3_6_7b(), &Scenario::CODE_GENERATION).expect("paper kernels map")
     });
 }

@@ -21,16 +21,18 @@ fn main() {
     let gemv = MatmulShape::new(1, 12288, 12288, Precision::Int8);
 
     println!("=== mapping search timing (paper §7) ===");
-    let r = bench("search_gemm_1458_candidates", 50, || engine.search(&gemm));
+    let r = bench("search_gemm_1458_candidates_parallel", 50, || engine.search(&gemm));
     println!(
         "    → {:.2} µs per candidate evaluation (paper: 'within microseconds')",
         r.p50_ns / 1e3 / 1458.0
     );
+    // Serial reference: same winner bit-for-bit, single-threaded.
+    bench("search_gemm_1458_candidates_serial", 50, || engine.search_serial(&gemm));
     bench("search_gemv_192_candidates", 200, || engine.search(&gemv));
     bench("evaluate_all_gemm (scatter dump)", 20, || engine.evaluate_all(&gemm));
 
-    // Cached (amortized) mode.
-    let mut cached = MappingEngine::new(HwModel::new(&racam_paper()));
+    // Cached (amortized) mode through the shared service.
+    let cached = MappingEngine::new(HwModel::new(&racam_paper()));
     cached.search_cached(&gemm);
     bench("search_gemm_cached", 1000, || cached.search_cached(&gemm));
 }

@@ -6,7 +6,7 @@
 
 use crate::config::{LlmSpec, MatmulShape};
 use crate::metrics::LatencyBreakdown;
-use crate::workloads::InferenceSystem;
+use crate::workloads::CostModel;
 
 /// H100 PCIe + 512 GB offload memory (paper Table 4).
 #[derive(Debug, Clone)]
@@ -69,13 +69,13 @@ impl H100Model {
     }
 }
 
-impl InferenceSystem for H100Model {
+impl CostModel for H100Model {
     fn name(&self) -> &str {
         "H100"
     }
 
-    fn kernel_latency(&mut self, shape: &MatmulShape) -> LatencyBreakdown {
-        LatencyBreakdown::new(self.kernel_ns(shape), 0.0)
+    fn kernel_cost(&self, shape: &MatmulShape) -> Option<LatencyBreakdown> {
+        Some(LatencyBreakdown::new(self.kernel_ns(shape), 0.0))
     }
 }
 

@@ -2,6 +2,10 @@
 //! an LLMCompass-style roofline) and Proteus, the state-of-the-art
 //! processing-using-DRAM system (bit-serial, no bit reuse, no broadcast,
 //! no in-DRAM reduction).
+//!
+//! Both implement [`crate::workloads::CostModel`] uniformly with
+//! [`crate::workloads::RacamSystem`], so experiments and the serving
+//! coordinator price any system through the same interface.
 
 mod h100;
 mod proteus;

@@ -13,7 +13,7 @@
 
 use crate::config::{MatmulShape, Precision};
 use crate::metrics::LatencyBreakdown;
-use crate::workloads::InferenceSystem;
+use crate::workloads::CostModel;
 
 #[derive(Debug, Clone)]
 pub struct ProteusModel {
@@ -117,16 +117,16 @@ impl ProteusModel {
     }
 }
 
-impl InferenceSystem for ProteusModel {
+impl CostModel for ProteusModel {
     fn name(&self) -> &str {
         "Proteus"
     }
 
-    fn kernel_latency(&mut self, shape: &MatmulShape) -> LatencyBreakdown {
+    fn kernel_cost(&self, shape: &MatmulShape) -> Option<LatencyBreakdown> {
         // Split for reporting: compute vs host I/O.
         let compute_ns = self.compute_ns(shape);
         let total = self.kernel_ns(shape);
-        LatencyBreakdown::new(compute_ns, total - compute_ns)
+        Some(LatencyBreakdown::new(compute_ns, total - compute_ns))
     }
 }
 
@@ -157,9 +157,9 @@ mod tests {
 
     #[test]
     fn io_includes_bank_replication() {
-        let mut p = ProteusModel::default();
+        let p = ProteusModel::default();
         let s = MatmulShape::new(1, 4096, 4096, Precision::Int8);
-        let b = p.kernel_latency(&s);
+        let b = p.kernel_cost(&s).unwrap();
         assert!(b.io_ns > 0.0);
         // Host writes #banks copies of the 4 KB input = 64 KB min.
         let min_io_ns = (16.0 * 4096.0) / p.channel_bw * 1e9;

@@ -1,7 +1,9 @@
 //! FCFS dynamic batcher: groups pending requests up to a batch-size cap,
 //! admitting new arrivals between decode iterations (continuous batching à
 //! la vLLM, degenerating to the paper's batch-size-1 setting when cap = 1).
+//! It is the default [`Scheduler`] of [`super::Server`].
 
+use super::scheduler::Scheduler;
 use super::server::Request;
 use std::collections::VecDeque;
 
@@ -35,6 +37,20 @@ impl FcfsBatcher {
     /// Admit up to `slots_free` additional requests (bounded by max batch).
     pub fn admit(&mut self, running: usize) -> Vec<Request> {
         let slots = self.max_batch.saturating_sub(running);
+        self.next_batch(slots)
+    }
+}
+
+impl Scheduler for FcfsBatcher {
+    fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn next_batch(&mut self, slots: usize) -> Vec<Request> {
         let take = slots.min(self.queue.len());
         self.queue.drain(..take).collect()
     }

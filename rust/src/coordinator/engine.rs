@@ -1,11 +1,12 @@
 //! Token engines: produce the next token given the running hidden state.
 //!
-//! [`HloDecodeEngine`] runs the AOT artifact `decode_step.hlo.txt` — a tiny
-//! recurrent transformer-style step with baked synthetic weights, lowered
-//! from JAX (with the Pallas quantized-GEMM kernel on its hot path) — via
-//! PJRT.  [`SyntheticEngine`] is a deterministic stand-in for tests that
-//! must run without artifacts.
+//! `HloDecodeEngine` (behind the `pjrt` feature) runs the AOT artifact
+//! `decode_step.hlo.txt` — a tiny recurrent transformer-style step with
+//! baked synthetic weights, lowered from JAX (with the Pallas quantized-GEMM
+//! kernel on its hot path) — via PJRT.  [`SyntheticEngine`] is a
+//! deterministic stand-in for tests that must run without artifacts.
 
+#[cfg(feature = "pjrt")]
 use crate::runtime::LoadedModule;
 use crate::Result;
 
@@ -39,18 +40,21 @@ pub trait TokenEngine {
 }
 
 /// PJRT-backed engine: output layout is `[next_hidden(h) ; logits(v)]`.
+#[cfg(feature = "pjrt")]
 pub struct HloDecodeEngine {
     module: LoadedModule,
     hidden: usize,
     vocab: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl HloDecodeEngine {
     pub fn new(module: LoadedModule, hidden: usize, vocab: usize) -> Self {
         HloDecodeEngine { module, hidden, vocab }
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl TokenEngine for HloDecodeEngine {
     fn hidden(&self) -> usize {
         self.hidden

@@ -1,15 +1,28 @@
 //! Serving coordinator: the Python-free request path.
 //!
-//! A [`Server`] owns (a) a token engine — either the AOT-compiled HLO
-//! decode step executing through PJRT, or a synthetic engine for tests —
-//! and (b) the RACAM timing pipeline (mapping engine over the paper's
+//! A [`Server`] is one worker shard: it owns (a) a token engine — either
+//! the AOT-compiled HLO decode step executing through PJRT (behind the
+//! `pjrt` feature), or a synthetic engine for tests — and (b) a handle on
+//! the RACAM timing pipeline (the shared
+//! [`MappingService`](crate::mapping::MappingService) over the paper's
 //! hardware config), and drives batched requests token by token, reporting
-//! real generated tokens alongside simulated RACAM/H100/Proteus latencies.
+//! real generated tokens alongside simulated RACAM latencies.
+//!
+//! [`Coordinator`] runs N such shards concurrently against one shared
+//! mapping service — the multi-worker serving configuration — with a
+//! pluggable admission [`Scheduler`] (FCFS today) and a merged
+//! [`ServerReport`] carrying per-shard utilization ([`ShardStats`]).
 
 mod batcher;
 mod engine;
+mod multi;
+mod scheduler;
 mod server;
 
 pub use batcher::{Batch, FcfsBatcher};
-pub use engine::{HloDecodeEngine, SyntheticEngine, TokenEngine};
-pub use server::{Request, RequestResult, Server, ServerReport};
+#[cfg(feature = "pjrt")]
+pub use engine::HloDecodeEngine;
+pub use engine::{SyntheticEngine, TokenEngine};
+pub use multi::Coordinator;
+pub use scheduler::Scheduler;
+pub use server::{Request, RequestResult, Server, ServerReport, ShardStats};

@@ -1,0 +1,225 @@
+//! Multi-worker serving coordinator: N worker shards, each running the
+//! continuous-batched decode loop of [`Server`], all pricing against one
+//! shared [`MappingService`].
+//!
+//! The coordinator is the ROADMAP "sharding" step: requests are dispatched
+//! deterministically to the least-loaded shard, shards run concurrently on
+//! OS threads, and the per-shard reports merge into a single
+//! [`ServerReport`] with per-shard utilization.  Because the mapping cache
+//! is shared, a kernel shape that appears on every shard is searched once
+//! system-wide — the first shard to ask runs the (parallel) search, the
+//! rest wait on the per-shape once-cell and reuse it.
+
+use super::engine::TokenEngine;
+use super::server::{Request, Server, ServerReport};
+use crate::config::{HwConfig, LlmSpec};
+use crate::mapping::MappingService;
+use crate::workloads::RacamSystem;
+use crate::Result;
+use std::time::Instant;
+
+/// N-shard serving coordinator (see module docs).
+pub struct Coordinator<E: TokenEngine> {
+    shards: Vec<Server<E>>,
+    service: MappingService,
+}
+
+impl<E: TokenEngine + Send> Coordinator<E> {
+    /// Build a coordinator with a fresh mapping service over `hw`.
+    /// `engine_factory` is called once per shard (shard index passed in) —
+    /// token engines hold mutable generation state, so each worker needs
+    /// its own.
+    pub fn new(
+        hw: &HwConfig,
+        spec: LlmSpec,
+        n_shards: usize,
+        max_batch: usize,
+        engine_factory: impl FnMut(usize) -> E,
+    ) -> Self {
+        let service = MappingService::for_config(hw);
+        Self::with_service(service, spec, n_shards, max_batch, engine_factory)
+    }
+
+    /// Build a coordinator over an existing (possibly pre-warmed, possibly
+    /// externally shared) mapping service.
+    pub fn with_service(
+        service: MappingService,
+        spec: LlmSpec,
+        n_shards: usize,
+        max_batch: usize,
+        mut engine_factory: impl FnMut(usize) -> E,
+    ) -> Self {
+        assert!(n_shards >= 1, "a coordinator needs at least one shard");
+        let shards = (0..n_shards)
+            .map(|i| {
+                let mut server = Server::new(
+                    engine_factory(i),
+                    RacamSystem::with_service(service.clone()),
+                    spec.clone(),
+                    max_batch,
+                );
+                server.set_shard(i);
+                server
+            })
+            .collect();
+        Coordinator { shards, service }
+    }
+
+    /// The shared mapping service (cache counters, warm-start/persist).
+    pub fn service(&self) -> &MappingService {
+        &self.service
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Requests waiting for admission across all shards.
+    pub fn pending(&self) -> usize {
+        self.shards.iter().map(|s| s.pending()).sum()
+    }
+
+    /// Dispatch a request to the least-loaded shard (lowest index wins
+    /// ties), which is deterministic for a given submission order.
+    pub fn submit(&mut self, req: Request) {
+        let shard = (0..self.shards.len())
+            .min_by_key(|&i| self.shards[i].pending())
+            .expect("at least one shard");
+        self.shards[shard].submit(req);
+    }
+
+    /// Run every shard's serving loop to completion on its own thread and
+    /// merge the reports.  Token sequences are engine-deterministic per
+    /// request, so the merged output is independent of thread interleaving.
+    pub fn run_to_completion(&mut self) -> Result<ServerReport> {
+        let wall_start = Instant::now();
+        let mut reports: Vec<Result<ServerReport>> = Vec::with_capacity(self.shards.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter_mut()
+                .map(|shard| scope.spawn(move || shard.run_to_completion()))
+                .collect();
+            for h in handles {
+                reports.push(h.join().expect("worker shard panicked"));
+            }
+        });
+        let mut merged = Vec::with_capacity(reports.len());
+        for r in reports {
+            merged.push(r?);
+        }
+        Ok(ServerReport::merge(merged, wall_start.elapsed().as_nanos() as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{racam_paper, LlmSpec, Precision};
+    use crate::coordinator::engine::SyntheticEngine;
+
+    fn tiny_spec() -> LlmSpec {
+        LlmSpec {
+            name: "tiny".into(),
+            layers: 2,
+            hidden: 256,
+            heads: 4,
+            kv_heads: 4,
+            ffn: 512,
+            gated_ffn: false,
+            vocab: 512,
+            prec: Precision::Int8,
+        }
+    }
+
+    fn coordinator(n_shards: usize, max_batch: usize) -> Coordinator<SyntheticEngine> {
+        Coordinator::new(&racam_paper(), tiny_spec(), n_shards, max_batch, |_| {
+            SyntheticEngine::new(64, 128)
+        })
+    }
+
+    fn submit_all(c: &mut Coordinator<SyntheticEngine>, n: u64, tokens: usize) {
+        for id in 0..n {
+            c.submit(Request { id, prompt: vec![id as u32 % 7, 3, 9], max_new_tokens: tokens });
+        }
+    }
+
+    #[test]
+    fn completes_all_requests_across_shards() {
+        let mut c = coordinator(3, 2);
+        submit_all(&mut c, 7, 5);
+        let report = c.run_to_completion().unwrap();
+        assert_eq!(report.results.len(), 7);
+        assert_eq!(report.total_tokens, 35);
+        assert_eq!(report.shards.len(), 3);
+        // Least-loaded dispatch spreads the work: every shard served some.
+        assert!(report.shards.iter().all(|s| s.requests > 0));
+        assert_eq!(report.shards.iter().map(|s| s.tokens).sum::<usize>(), 35);
+        // Results are id-sorted after the merge.
+        for (i, r) in report.results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn shard_count_does_not_change_generation() {
+        let run = |shards: usize| {
+            let mut c = coordinator(shards, 2);
+            submit_all(&mut c, 6, 8);
+            c.run_to_completion()
+                .unwrap()
+                .results
+                .into_iter()
+                .map(|r| (r.id, r.tokens))
+                .collect::<Vec<_>>()
+        };
+        let one = run(1);
+        assert_eq!(one, run(2));
+        assert_eq!(one, run(4));
+    }
+
+    #[test]
+    fn shards_share_one_mapping_cache() {
+        // Acceptance: a shape repeated across shards misses exactly once.
+        let service = MappingService::for_config(&racam_paper());
+        let mut c = Coordinator::with_service(service.clone(), tiny_spec(), 3, 2, |_| {
+            SyntheticEngine::new(64, 128)
+        });
+        // Identical prompt lengths everywhere → identical prefill + decode
+        // shapes on every shard.
+        for id in 0..6 {
+            c.submit(Request { id, prompt: vec![1, 2, 3], max_new_tokens: 4 });
+        }
+        let report = c.run_to_completion().unwrap();
+        assert_eq!(report.results.len(), 6);
+        // Every cached shape was searched exactly once system-wide.
+        assert_eq!(c.service().misses(), c.service().cache_len() as u64);
+        // And the other shards did hit the shared cache.
+        assert!(c.service().hits() > 0);
+    }
+
+    #[test]
+    fn single_shard_coordinator_matches_plain_server() {
+        use crate::coordinator::Server;
+        use crate::workloads::RacamSystem;
+
+        let mut c = coordinator(1, 2);
+        submit_all(&mut c, 3, 6);
+        let merged = c.run_to_completion().unwrap();
+
+        let mut s = Server::new(
+            SyntheticEngine::new(64, 128),
+            RacamSystem::new(&racam_paper()),
+            tiny_spec(),
+            2,
+        );
+        for id in 0..3 {
+            s.submit(Request { id, prompt: vec![id as u32 % 7, 3, 9], max_new_tokens: 6 });
+        }
+        let plain = s.run_to_completion().unwrap();
+        let tok = |rep: &ServerReport| {
+            rep.results.iter().map(|r| (r.id, r.tokens.clone())).collect::<Vec<_>>()
+        };
+        assert_eq!(tok(&merged), tok(&plain));
+    }
+}

@@ -1,0 +1,30 @@
+//! Admission scheduling policy for the serving loop.
+//!
+//! A [`Scheduler`] owns the pending-request queue of one worker shard and
+//! decides which requests fill freed batch slots between decode
+//! iterations.  [`super::FcfsBatcher`] is the first-come-first-served
+//! implementation (the paper's setting); the trait exists so priority,
+//! deadline-aware or length-bucketed policies plug in without touching the
+//! server loop.
+
+use super::server::Request;
+
+pub trait Scheduler: Send {
+    /// Enqueue a request.
+    fn submit(&mut self, req: Request);
+
+    /// Requests waiting for admission.
+    fn pending(&self) -> usize;
+
+    /// Hand out up to `slots` requests, in policy order.  The server calls
+    /// this once per decode iteration with the free batch slots.
+    ///
+    /// **Contract:** when `slots > 0` and `pending() > 0`, at least one
+    /// request must be returned.  `Server::run_to_completion` drains the
+    /// queue in a loop with no clock, so a policy that withholds queued
+    /// work (e.g. waiting on a deadline) would otherwise spin forever —
+    /// the server detects a withholding scheduler and errors out.
+    /// Time-based admission belongs in the async intake planned on the
+    /// ROADMAP, not in this synchronous drain.
+    fn next_batch(&mut self, slots: usize) -> Vec<Request>;
+}

@@ -1,9 +1,18 @@
 //! The serving loop: continuous-batched greedy decoding through a token
-//! engine, with per-token RACAM latency accounting from the mapping engine
-//! (the simulated-hardware clock) next to the host wall clock.
+//! engine, with per-token RACAM latency accounting from the shared mapping
+//! service (the simulated-hardware clock) next to the host wall clock.
+//!
+//! A [`Server`] is one worker shard: it owns a token engine, a
+//! [`RacamSystem`] handle (typically sharing its [`MappingService`] with
+//! every other shard — see [`super::Coordinator`]), a pluggable admission
+//! [`Scheduler`] (FCFS by default), and a persistent per-context-bucket
+//! decode-cost cache so repeated runs never re-price a bucket.
+//!
+//! [`MappingService`]: crate::mapping::MappingService
 
 use super::batcher::FcfsBatcher;
 use super::engine::TokenEngine;
+use super::scheduler::Scheduler;
 use crate::config::LlmSpec;
 use crate::metrics::LatencyBreakdown;
 use crate::workloads::{decode_kernels, prefill_kernels, stage_latency, RacamSystem};
@@ -32,21 +41,76 @@ pub struct RequestResult {
     pub wall_ns: f64,
 }
 
-/// Aggregate serving report.
+/// Per-shard utilization accounting (one entry per worker).
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Requests this shard completed.
+    pub requests: usize,
+    /// Tokens this shard generated.
+    pub tokens: usize,
+    /// Summed simulated RACAM time of this shard's requests, ns.
+    pub sim_ns: f64,
+    /// Host wall-clock of this shard's serving loop, ns.
+    pub wall_ns: f64,
+    /// Decode iterations executed.
+    pub decode_iterations: usize,
+    /// Mean fraction of batch slots occupied across decode iterations
+    /// (1.0 = the shard decoded at full batch the whole run).
+    pub occupancy: f64,
+}
+
+/// Aggregate serving report (single shard or merged across shards).
 #[derive(Debug, Clone)]
 pub struct ServerReport {
     pub results: Vec<RequestResult>,
     pub sim_tokens_per_s: f64,
     pub wall_tokens_per_s: f64,
     pub total_tokens: usize,
+    /// Per-shard utilization; one entry for a plain [`Server`] run, one per
+    /// worker for a [`super::Coordinator`] run.
+    pub shards: Vec<ShardStats>,
 }
 
-/// The coordinator server.
-pub struct Server<E: TokenEngine> {
+impl ServerReport {
+    /// Merge per-shard reports into one, re-sorting results by request id.
+    /// Shards run concurrently (each modeling its own RACAM device until
+    /// per-shard channel partitioning lands), so both clocks use the
+    /// makespan — the slowest shard — rather than a sum: `wall_ns` is the
+    /// coordinator-level wall clock, and simulated throughput divides by
+    /// the largest per-shard simulated time.
+    pub fn merge(reports: Vec<ServerReport>, wall_ns: f64) -> ServerReport {
+        let mut results: Vec<RequestResult> = Vec::new();
+        let mut shards: Vec<ShardStats> = Vec::new();
+        for r in reports {
+            results.extend(r.results);
+            shards.extend(r.shards);
+        }
+        results.sort_by_key(|r| r.id);
+        shards.sort_by_key(|s| s.shard);
+        let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+        let sim_makespan_ns = shards.iter().map(|s| s.sim_ns).fold(0.0f64, f64::max);
+        ServerReport {
+            sim_tokens_per_s: total_tokens as f64 / (sim_makespan_ns / 1e9).max(f64::MIN_POSITIVE),
+            wall_tokens_per_s: total_tokens as f64 / (wall_ns / 1e9).max(f64::MIN_POSITIVE),
+            total_tokens,
+            results,
+            shards,
+        }
+    }
+}
+
+/// One serving worker (see module docs).
+pub struct Server<E: TokenEngine, S: Scheduler = FcfsBatcher> {
     engine: E,
     racam: RacamSystem,
     spec: LlmSpec,
-    batcher: FcfsBatcher,
+    scheduler: S,
+    max_batch: usize,
+    shard_id: usize,
+    /// Simulated per-token decode cost per context bucket, kept across
+    /// runs so repeated runs (and long-lived shards) reuse priced buckets.
+    decode_cache: HashMap<u64, LatencyBreakdown>,
 }
 
 struct Running {
@@ -58,16 +122,44 @@ struct Running {
     wall_ns: f64,
 }
 
-impl<E: TokenEngine> Server<E> {
+impl<E: TokenEngine> Server<E, FcfsBatcher> {
     /// `spec` names the LLM whose kernel shapes the RACAM clock prices
     /// (the toy engine generates real tokens; the simulator accounts what
     /// the full-size model would cost on RACAM hardware).
     pub fn new(engine: E, racam: RacamSystem, spec: LlmSpec, max_batch: usize) -> Self {
-        Server { engine, racam, spec, batcher: FcfsBatcher::new(max_batch) }
+        let scheduler = FcfsBatcher::new(max_batch);
+        Server::with_scheduler(engine, racam, spec, max_batch, scheduler)
+    }
+}
+
+impl<E: TokenEngine, S: Scheduler> Server<E, S> {
+    /// A server with an explicit admission policy.
+    pub fn with_scheduler(
+        engine: E,
+        racam: RacamSystem,
+        spec: LlmSpec,
+        max_batch: usize,
+        scheduler: S,
+    ) -> Self {
+        assert!(max_batch >= 1);
+        Server {
+            engine,
+            racam,
+            spec,
+            scheduler,
+            max_batch,
+            shard_id: 0,
+            decode_cache: HashMap::new(),
+        }
     }
 
     pub fn submit(&mut self, req: Request) {
-        self.batcher.submit(req);
+        self.scheduler.submit(req);
+    }
+
+    /// Requests waiting for admission.
+    pub fn pending(&self) -> usize {
+        self.scheduler.pending()
     }
 
     /// Access the simulated-hardware pipeline (e.g. to persist its mapping
@@ -76,21 +168,46 @@ impl<E: TokenEngine> Server<E> {
         &self.racam
     }
 
+    /// Priced decode context buckets held in server state.
+    pub fn decode_cache_len(&self) -> usize {
+        self.decode_cache.len()
+    }
+
+    /// Label this worker for per-shard reporting (set by the coordinator).
+    pub(crate) fn set_shard(&mut self, id: usize) {
+        self.shard_id = id;
+    }
+
     /// Drain all submitted requests to completion.
     pub fn run_to_completion(&mut self) -> Result<ServerReport> {
         let mut running: Vec<Running> = Vec::new();
         let mut done: Vec<RequestResult> = Vec::new();
         let wall_start = Instant::now();
-        let mut decode_cache: HashMap<u64, LatencyBreakdown> = HashMap::new();
+        let mut decode_iterations = 0usize;
+        let mut occupancy_sum = 0.0f64;
 
         loop {
             // Admit new work (continuous batching).
-            for req in self.batcher.admit(running.len()) {
+            let slots = self.max_batch.saturating_sub(running.len());
+            let mut admitted = 0usize;
+            for req in self.scheduler.next_batch(slots) {
+                admitted += 1;
                 let t0 = Instant::now();
                 let hidden = self.engine.embed_prompt(&req.prompt);
                 // Simulated prefill cost for this prompt length.
-                let prefill =
-                    stage_latency(&mut self.racam, &prefill_kernels(&self.spec, req.prompt.len() as u64));
+                let kernels = prefill_kernels(&self.spec, req.prompt.len() as u64);
+                let prefill = stage_latency(&self.racam, &kernels)?;
+                if req.max_new_tokens == 0 {
+                    // Nothing to decode: retire immediately (prefill-only).
+                    done.push(RequestResult {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        sim_ttft_ns: prefill.total_ns(),
+                        sim_total_ns: prefill.total_ns(),
+                        wall_ns: t0.elapsed().as_nanos() as f64,
+                    });
+                    continue;
+                }
                 running.push(Running {
                     hidden,
                     tokens: Vec::new(),
@@ -101,10 +218,28 @@ impl<E: TokenEngine> Server<E> {
                 });
             }
             if running.is_empty() {
-                break;
+                if self.scheduler.pending() == 0 {
+                    break;
+                }
+                if admitted == 0 {
+                    // The scheduler returned nothing while work is queued
+                    // and every batch slot is free: that violates the
+                    // `Scheduler::next_batch` contract and would spin this
+                    // clockless loop forever.
+                    anyhow::bail!(
+                        "scheduler withheld {} queued request(s) with {} free slots",
+                        self.scheduler.pending(),
+                        self.max_batch
+                    );
+                }
+                // Everything admitted this round retired at prefill
+                // (zero-token requests); keep draining the queue.
+                continue;
             }
 
             // One decode iteration across the batch.
+            decode_iterations += 1;
+            occupancy_sum += running.len() as f64 / self.max_batch as f64;
             for r in &mut running {
                 let t0 = Instant::now();
                 let (mut next, token) = self.engine.step(&r.hidden)?;
@@ -115,14 +250,14 @@ impl<E: TokenEngine> Server<E> {
 
                 let ctx = r.req.prompt.len() as u64 + r.tokens.len() as u64;
                 // Simulated per-token decode cost (cached per context
-                // bucket of 256 to bound search work).
+                // bucket of 256 to bound search work; the bucket cache is
+                // server state, so repeated runs reuse it).
                 let bucket = ctx.div_ceil(256) * 256;
-                let spec = &self.spec;
-                let racam = &mut self.racam;
-                let per_token = decode_cache
-                    .entry(bucket)
-                    .or_insert_with(|| stage_latency(racam, &decode_kernels(spec, bucket)));
-                r.sim_ns += per_token.total_ns();
+                if !self.decode_cache.contains_key(&bucket) {
+                    let cost = stage_latency(&self.racam, &decode_kernels(&self.spec, bucket))?;
+                    self.decode_cache.insert(bucket, cost);
+                }
+                r.sim_ns += self.decode_cache[&bucket].total_ns();
             }
 
             // Retire finished requests.
@@ -147,11 +282,25 @@ impl<E: TokenEngine> Server<E> {
         let total_tokens: usize = done.iter().map(|r| r.tokens.len()).sum();
         let sim_ns: f64 = done.iter().map(|r| r.sim_total_ns).sum();
         let wall_ns = wall_start.elapsed().as_nanos() as f64;
+        let stats = ShardStats {
+            shard: self.shard_id,
+            requests: done.len(),
+            tokens: total_tokens,
+            sim_ns,
+            wall_ns,
+            decode_iterations,
+            occupancy: if decode_iterations == 0 {
+                0.0
+            } else {
+                occupancy_sum / decode_iterations as f64
+            },
+        };
         Ok(ServerReport {
             sim_tokens_per_s: total_tokens as f64 / (sim_ns / 1e9).max(f64::MIN_POSITIVE),
             wall_tokens_per_s: total_tokens as f64 / (wall_ns / 1e9).max(f64::MIN_POSITIVE),
             total_tokens,
             results: done,
+            shards: vec![stats],
         })
     }
 }
@@ -199,6 +348,9 @@ mod tests {
             assert!(r.sim_ttft_ns > 0.0);
             assert!(r.sim_total_ns > r.sim_ttft_ns);
         }
+        assert_eq!(report.shards.len(), 1);
+        assert_eq!(report.shards[0].tokens, 30);
+        assert!(report.shards[0].occupancy > 0.0 && report.shards[0].occupancy <= 1.0);
     }
 
     #[test]
@@ -226,5 +378,40 @@ mod tests {
         let rep = s.run_to_completion().unwrap();
         assert_eq!(rep.total_tokens, 0);
         assert!(rep.results.is_empty());
+        assert_eq!(rep.shards[0].decode_iterations, 0);
+    }
+
+    #[test]
+    fn zero_token_requests_retire_at_prefill() {
+        let mut s = server(2);
+        s.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 0 });
+        s.submit(Request { id: 1, prompt: vec![3], max_new_tokens: 0 });
+        s.submit(Request { id: 2, prompt: vec![4], max_new_tokens: 0 });
+        s.submit(Request { id: 3, prompt: vec![5, 6], max_new_tokens: 2 });
+        let rep = s.run_to_completion().unwrap();
+        assert_eq!(rep.results.len(), 4);
+        assert_eq!(rep.total_tokens, 2);
+        for r in &rep.results[..3] {
+            assert!(r.tokens.is_empty(), "req {} must not decode", r.id);
+            assert!(r.sim_ttft_ns > 0.0);
+            assert_eq!(r.sim_total_ns, r.sim_ttft_ns);
+        }
+        assert_eq!(rep.results[3].tokens.len(), 2);
+    }
+
+    #[test]
+    fn decode_cache_persists_across_runs() {
+        let mut s = server(2);
+        s.submit(Request { id: 0, prompt: vec![5, 6], max_new_tokens: 4 });
+        s.run_to_completion().unwrap();
+        let priced = s.decode_cache_len();
+        assert!(priced >= 1, "first run must prime the bucket cache");
+        let misses = s.racam().service().misses();
+
+        // Same context buckets again: no new buckets, no new searches.
+        s.submit(Request { id: 1, prompt: vec![9, 2], max_new_tokens: 4 });
+        s.run_to_completion().unwrap();
+        assert_eq!(s.decode_cache_len(), priced);
+        assert_eq!(s.racam().service().misses(), misses);
     }
 }

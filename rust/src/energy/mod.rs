@@ -121,7 +121,7 @@ mod tests {
     use crate::mapping::{HwModel, MappingEngine};
 
     fn eval(shape: &MatmulShape) -> Evaluation {
-        MappingEngine::new(HwModel::new(&racam_paper())).search(shape).best
+        MappingEngine::new(HwModel::new(&racam_paper())).search(shape).expect("evaluates").best
     }
 
     #[test]

@@ -1,10 +1,16 @@
 //! Shared machinery for the evaluation experiments: the three evaluated
 //! systems (paper Table 4) and stage-latency helpers.
+//!
+//! The helpers here `expect` a priceable kernel set: paper workloads (all
+//! hyper-parameters non-zero) always evaluate, so a `None` from the cost
+//! model would indicate a bug, not a user error.
 
 use crate::baselines::{H100Model, ProteusModel};
-use crate::config::{racam_paper, Features, HwConfig, LlmSpec, Stage};
+use crate::config::{racam_paper, Features, HwConfig, LlmSpec, Scenario, Stage};
 use crate::metrics::LatencyBreakdown;
-use crate::workloads::{decode_kernels, prefill_kernels, stage_latency, InferenceSystem, RacamSystem};
+use crate::workloads::{
+    decode_kernels, e2e_latency, prefill_kernels, stage_latency, CostModel, RacamSystem,
+};
 
 /// Prompt length used for standalone prefill numbers (paper §5.3).
 pub const PREFILL_TOKENS: u64 = 1024;
@@ -31,7 +37,7 @@ impl SystemSet {
 /// Latency of one stage (one forward pass for prefill, one token for
 /// decode) on any system.
 pub fn system_stage_latency(
-    sys: &mut dyn InferenceSystem,
+    sys: &dyn CostModel,
     spec: &LlmSpec,
     stage: Stage,
 ) -> LatencyBreakdown {
@@ -39,21 +45,26 @@ pub fn system_stage_latency(
         Stage::Prefill => prefill_kernels(spec, PREFILL_TOKENS),
         Stage::Decode => decode_kernels(spec, DECODE_CTX),
     };
-    stage_latency(sys, &kernels)
+    stage_latency(sys, &kernels).expect("paper workload kernels always map")
+}
+
+/// End-to-end scenario latency on any system.
+pub fn system_e2e_latency(sys: &dyn CostModel, spec: &LlmSpec, sc: &Scenario) -> LatencyBreakdown {
+    e2e_latency(sys, spec, sc).expect("paper workload kernels always map")
 }
 
 /// RACAM stage latency under an arbitrary feature set / hardware config.
 pub fn racam_stage_latency(hw: &HwConfig, spec: &LlmSpec, stage: Stage) -> LatencyBreakdown {
-    let mut sys = RacamSystem::new(hw);
-    system_stage_latency(&mut sys, spec, stage)
+    let sys = RacamSystem::new(hw);
+    system_stage_latency(&sys, spec, stage)
 }
 
 /// (RACAM speedup, Proteus speedup) over H100 for a stage.
 pub fn stage_speedups(spec: &LlmSpec, stage: Stage) -> (f64, f64) {
-    let mut s = SystemSet::for_model(spec);
-    let h = system_stage_latency(&mut s.h100, spec, stage).total_ns();
-    let p = system_stage_latency(&mut s.proteus, spec, stage).total_ns();
-    let r = system_stage_latency(&mut s.racam, spec, stage).total_ns();
+    let s = SystemSet::for_model(spec);
+    let h = system_stage_latency(&s.h100, spec, stage).total_ns();
+    let p = system_stage_latency(&s.proteus, spec, stage).total_ns();
+    let r = system_stage_latency(&s.racam, spec, stage).total_ns();
     (h / r, h / p)
 }
 

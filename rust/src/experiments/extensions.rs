@@ -19,7 +19,7 @@ use crate::workloads::{decode_kernels, RacamSystem};
 
 pub fn run_energy() -> Vec<Table> {
     let model = EnergyModel::default();
-    let mut sys = RacamSystem::new(&racam_paper());
+    let sys = RacamSystem::new(&racam_paper());
     let spec = gpt3_6_7b();
 
     let mut t = Table::new(
@@ -27,7 +27,7 @@ pub fn run_energy() -> Vec<Table> {
         &["kernel", "shape", "total_nJ", "pJ/MAC", "compute%", "channel%"],
     );
     for k in decode_kernels(&spec, 1024) {
-        let r = sys.search(&k.shape);
+        let r = sys.search(&k.shape).expect("decode kernels always map");
         let e = model.kernel_energy(&r.best, k.shape.prec, 1024, k.shape.macs());
         t.row(vec![
             k.label.into(),

@@ -2,12 +2,11 @@
 //! prefill/decode throughput, and performance per mm², all across
 //! {H100, Proteus, RACAM} × the four Table 3 models.
 
-use super::common::{system_stage_latency, SystemSet};
+use super::common::{system_e2e_latency, system_stage_latency, SystemSet};
 use crate::area::AreaModel;
 use crate::config::{paper_models, racam_paper, Scenario, Stage};
 use crate::metrics::geomean;
 use crate::report::Table;
-use crate::workloads::e2e_latency;
 
 /// Fig. 9: normalized end-to-end request throughput per scenario.
 pub fn run_fig9() -> Vec<Table> {
@@ -22,10 +21,10 @@ pub fn run_fig9() -> Vec<Table> {
             &["model", "h100", "proteus", "racam"],
         );
         for spec in paper_models() {
-            let mut s = SystemSet::for_model(&spec);
-            let h = e2e_latency(&mut s.h100, &spec, &sc).total_ns();
-            let p = e2e_latency(&mut s.proteus, &spec, &sc).total_ns();
-            let r = e2e_latency(&mut s.racam, &spec, &sc).total_ns();
+            let s = SystemSet::for_model(&spec);
+            let h = system_e2e_latency(&s.h100, &spec, &sc).total_ns();
+            let p = system_e2e_latency(&s.proteus, &spec, &sc).total_ns();
+            let r = system_e2e_latency(&s.racam, &spec, &sc).total_ns();
             racam_speedups.push(h / r);
             t.row(vec![
                 spec.name.clone(),
@@ -50,10 +49,10 @@ pub fn run_fig10() -> Vec<Table> {
             &["model", "h100", "proteus", "racam"],
         );
         for spec in paper_models() {
-            let mut s = SystemSet::for_model(&spec);
-            let h = system_stage_latency(&mut s.h100, &spec, stage).total_ns();
-            let p = system_stage_latency(&mut s.proteus, &spec, stage).total_ns();
-            let r = system_stage_latency(&mut s.racam, &spec, stage).total_ns();
+            let s = SystemSet::for_model(&spec);
+            let h = system_stage_latency(&s.h100, &spec, stage).total_ns();
+            let p = system_stage_latency(&s.proteus, &spec, stage).total_ns();
+            let r = system_stage_latency(&s.racam, &spec, stage).total_ns();
             t.row(vec![
                 spec.name.clone(),
                 "1.00".into(),
@@ -81,10 +80,10 @@ pub fn run_fig11() -> Vec<Table> {
             &["model", "proteus", "racam"],
         );
         for spec in paper_models() {
-            let mut s = SystemSet::for_model(&spec);
-            let h = system_stage_latency(&mut s.h100, &spec, stage).total_ns();
-            let p = system_stage_latency(&mut s.proteus, &spec, stage).total_ns();
-            let r = system_stage_latency(&mut s.racam, &spec, stage).total_ns();
+            let s = SystemSet::for_model(&spec);
+            let h = system_stage_latency(&s.h100, &spec, stage).total_ns();
+            let p = system_stage_latency(&s.proteus, &spec, stage).total_ns();
+            let r = system_stage_latency(&s.racam, &spec, stage).total_ns();
             let proteus_ppa = (h / p) * (h100_mm2 / proteus_mm2);
             let racam_ppa = (h / r) * (h100_mm2 / racam_mm2);
             t.row(vec![

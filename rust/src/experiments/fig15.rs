@@ -62,7 +62,7 @@ mod tests {
     fn spread_is_hundreds_x() {
         // Paper: 510.85x max-to-min ratio.
         let engine = MappingEngine::new(HwModel::new(&racam_paper()));
-        let r = engine.search(&shape());
+        let r = engine.search(&shape()).expect("GEMM space evaluates");
         // The paper reports 510.85x.  Our model prices pathological
         // mappings (e.g. K spread across every level with single-block
         // serialization) even more harshly — the qualitative claim (large
@@ -84,7 +84,7 @@ mod tests {
     fn a_k_on_cols_mapping_wins() {
         // Paper: "RNCMK achieves notably higher performance … popcount".
         let engine = MappingEngine::new(HwModel::new(&racam_paper()));
-        let r = engine.search(&shape());
+        let r = engine.search(&shape()).expect("GEMM space evaluates");
         assert!(r.best.mapping.block.k_on_cols(), "winner {}", r.best.mapping);
     }
 }

@@ -22,7 +22,7 @@ pub fn run() -> Vec<Table> {
         );
         let base_macs = sweep[0].shape.macs() as f64;
         for p in &sweep {
-            let r = engine.search(&p.shape);
+            let r = engine.search(&p.shape).expect("sweep shapes evaluate");
             let e = &r.best;
             t.row(vec![
                 p.group.to_string(),
@@ -45,7 +45,7 @@ mod tests {
     use crate::config::MatmulShape;
 
     fn best(shape: MatmulShape) -> crate::mapping::Evaluation {
-        MappingEngine::new(HwModel::new(&racam_paper())).search(&shape).best.clone()
+        MappingEngine::new(HwModel::new(&racam_paper())).search(&shape).expect("evaluates").best
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub fn run() -> Vec<Table> {
     );
     for f in ABLATION_POINTS {
         let engine = MappingEngine::new(HwModel::new(&racam_with(f)));
-        let e = engine.search(&shape()).best;
+        let e = engine.search(&shape()).expect("ablation shapes evaluate").best;
         let pim = e.compute_ns;
         let io = e.io_ns();
         t.row(vec![

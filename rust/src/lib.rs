@@ -30,14 +30,14 @@
 //! | [`config`] | hardware + workload configuration (paper Table 2/3/4) |
 //! | [`dram`] | DRAM substrate: geometry, DDR5 timing engine, SALP-MASA, commands |
 //! | [`pim`] | RACAM peripherals: PE, locality buffer, popcount, broadcast, ISA, FSM, functional executor |
-//! | [`mapping`] | §4 mapping framework: space enumeration, software + hardware models, search engine |
-//! | [`workloads`] | LLM parser, GEMM/GEMV workloads, inference scenarios |
-//! | [`baselines`] | H100 roofline model, Proteus model |
+//! | [`mapping`] | §4 mapping framework: space enumeration, software + hardware models, and the shared `MappingService` (parallel exhaustive search, concurrent once-per-shape cache, warm-start persistence via `mapping::store`) |
+//! | [`workloads`] | LLM parser, GEMM/GEMV workloads, inference scenarios, and the `CostModel` trait every priced system implements |
+//! | [`baselines`] | H100 roofline and Proteus models (uniform `CostModel` impls) |
 //! | [`area`] | §5.2 area estimation |
 //! | [`metrics`] | latency breakdowns, utilization, counters |
 //! | [`report`] | paper-style table renderers + CSV |
-//! | [`runtime`] | PJRT loader/executor for AOT artifacts |
-//! | [`coordinator`] | serving driver: request queue, batcher, token loop |
+//! | [`runtime`] | artifact discovery; PJRT loader/executor behind the `pjrt` feature |
+//! | [`coordinator`] | serving: per-shard `Server` (scheduler + continuous batching), multi-worker `Coordinator` over the shared mapping service |
 //! | [`experiments`] | one entry point per paper table/figure |
 
 pub mod area;

@@ -55,7 +55,7 @@ fn print_help() {
          \x20 racam area\n\
          \x20 racam config [--dump FILE | --load FILE]\n\
          \x20 racam experiments <fig1|fig9|...|ext-trace|all>\n\
-         \x20 racam serve [--requests N] [--tokens N] [--batch N] [--synthetic] [--mapping-cache FILE]"
+         \x20 racam serve [--requests N] [--tokens N] [--batch N] [--shards N] [--synthetic] [--mapping-cache FILE]"
     );
 }
 
@@ -73,7 +73,9 @@ fn cmd_map(args: Vec<String>) -> Result<()> {
     let shape = MatmulShape::new(pos[0], pos[1], pos[2], prec);
 
     let engine = MappingEngine::new(HwModel::new(&racam_paper()));
-    let r = engine.search(&shape);
+    let r = engine
+        .search(&shape)
+        .ok_or_else(|| anyhow::anyhow!("no candidate mapping evaluates for {}", shape.label()))?;
     println!("shape       : {} ({})", shape.label(), prec.label());
     println!("candidates  : {}", r.candidates);
     println!("best mapping: {}", r.best.mapping);
@@ -108,18 +110,18 @@ fn cmd_llm(args: Vec<String>) -> Result<()> {
         Some("ctx") => Scenario::CONTEXT_UNDERSTANDING,
         _ => Scenario::CODE_GENERATION,
     };
-    let mut sys = RacamSystem::new(&racam_paper());
+    let sys = RacamSystem::new(&racam_paper());
     let b = match stage.as_str() {
-        "prefill" => workloads::stage_latency(&mut sys, &workloads::prefill_kernels(&spec, 1024)),
-        "decode" => workloads::stage_latency(&mut sys, &workloads::decode_kernels(&spec, 1024)),
-        "e2e" => workloads::e2e_latency(&mut sys, &spec, &scenario),
+        "prefill" => workloads::stage_latency(&sys, &workloads::prefill_kernels(&spec, 1024))?,
+        "decode" => workloads::stage_latency(&sys, &workloads::decode_kernels(&spec, 1024))?,
+        "e2e" => workloads::e2e_latency(&sys, &spec, &scenario)?,
         other => anyhow::bail!("unknown stage '{other}'"),
     };
     println!("{} {} on RACAM:", spec.name, stage);
     println!("  pim   : {}", fmt_ns(b.pim_ns));
     println!("  io    : {}", fmt_ns(b.io_ns));
     println!("  total : {}", fmt_ns(b.total_ns()));
-    println!("  cache : {} searches, {} hits", sys.engine().misses, sys.engine().hits);
+    println!("  cache : {} searches, {} hits", sys.service().misses(), sys.service().hits());
     Ok(())
 }
 
@@ -164,58 +166,83 @@ fn cmd_config(args: Vec<String>) -> Result<()> {
 }
 
 fn cmd_serve(args: Vec<String>) -> Result<()> {
-    use racam::coordinator::{HloDecodeEngine, Request, Server, SyntheticEngine, TokenEngine};
-    use racam::runtime::{ArtifactSet, Runtime};
+    use racam::coordinator::{Coordinator, Request, SyntheticEngine, TokenEngine};
+    use racam::mapping::MappingService;
 
     let n_req: u64 = flag_value(&args, "--requests").map(|v| v.parse()).transpose()?.unwrap_or(4);
     let tokens: usize = flag_value(&args, "--tokens").map(|v| v.parse()).transpose()?.unwrap_or(16);
     let batch: usize = flag_value(&args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(2);
+    let shards: usize = flag_value(&args, "--shards").map(|v| v.parse()).transpose()?.unwrap_or(1);
     let synthetic = args.iter().any(|a| a == "--synthetic");
+    anyhow::ensure!(shards >= 1, "--shards must be at least 1");
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
 
     let spec = config::gpt3_6_7b();
-    let mut racam_sys = RacamSystem::new(&racam_paper());
-    if let Some(path) = flag_value(&args, "--mapping-cache") {
-        let p = std::path::PathBuf::from(&path);
+    // One shared mapping service prices every worker shard; a cache file
+    // warm-starts it (§7 amortization across processes, not just layers).
+    let service = MappingService::for_config(&racam_paper());
+    let cache_path = flag_value(&args, "--mapping-cache");
+    if let Some(path) = &cache_path {
+        let p = std::path::PathBuf::from(path);
         if p.exists() {
-            let n = racam::mapping::store::load_file(racam_sys.engine_mut(), &p)?;
+            let n = service.warm_start(&p)?;
             println!("pre-warmed mapping cache with {n} entries from {path}");
         }
     }
 
-    fn drive<E: TokenEngine>(
-        engine: E,
-        racam_sys: RacamSystem,
-        spec: racam::config::LlmSpec,
+    fn drive<E: TokenEngine + Send>(
+        mut coord: Coordinator<E>,
         n_req: u64,
         tokens: usize,
-        batch: usize,
-        cache_path: Option<&str>,
     ) -> Result<racam::coordinator::ServerReport> {
-        let mut server = Server::new(engine, racam_sys, spec, batch);
         for id in 0..n_req {
             let prompt: Vec<u32> = (0..3 + id % 5).map(|i| ((id * 31 + i * 7) % 200) as u32).collect();
-            server.submit(Request { id, prompt, max_new_tokens: tokens });
+            coord.submit(Request { id, prompt, max_new_tokens: tokens });
         }
-        let report = server.run_to_completion()?;
-        if let Some(path) = cache_path {
-            racam::mapping::store::save_file(server.racam().engine(), std::path::Path::new(path))?;
-            println!("saved mapping cache to {path}");
-        }
-        Ok(report)
+        coord.run_to_completion()
     }
 
-    let cache_path = flag_value(&args, "--mapping-cache");
     let report = if synthetic {
-        drive(SyntheticEngine::new(64, 256), racam_sys, spec.clone(), n_req, tokens, batch, cache_path.as_deref())?
+        let coord = Coordinator::with_service(service.clone(), spec.clone(), shards, batch, |_| {
+            SyntheticEngine::new(64, 256)
+        });
+        drive(coord, n_req, tokens)?
     } else {
-        let artifacts = ArtifactSet::discover();
-        artifacts.require()?;
-        let rt = Runtime::cpu()?;
-        let module = rt.load_hlo_text(&artifacts.decode_step())?;
-        drive(HloDecodeEngine::new(module, 64, 256), racam_sys, spec.clone(), n_req, tokens, batch, cache_path.as_deref())?
+        #[cfg(feature = "pjrt")]
+        {
+            use racam::coordinator::HloDecodeEngine;
+            use racam::runtime::{ArtifactSet, Runtime};
+            let artifacts = ArtifactSet::discover();
+            artifacts.require()?;
+            let rt = Runtime::cpu()?;
+            let mut modules = Vec::with_capacity(shards);
+            for _ in 0..shards {
+                modules.push(rt.load_hlo_text(&artifacts.decode_step())?);
+            }
+            let mut modules = modules.into_iter();
+            let coord = Coordinator::with_service(service.clone(), spec.clone(), shards, batch, |_| {
+                HloDecodeEngine::new(modules.next().expect("one module per shard"), 64, 256)
+            });
+            drive(coord, n_req, tokens)?
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            anyhow::bail!(
+                "this build has no PJRT runtime (compile with --features pjrt); use --synthetic"
+            )
+        }
     };
 
-    println!("served {} requests, {} tokens total", report.results.len(), report.total_tokens);
+    if let Some(path) = &cache_path {
+        service.persist(std::path::Path::new(path))?;
+        println!("saved mapping cache ({} shapes) to {path}", service.cache_len());
+    }
+
+    println!(
+        "served {} requests, {} tokens total across {shards} shard(s)",
+        report.results.len(),
+        report.total_tokens
+    );
     for r in &report.results {
         println!(
             "  req {}: ttft {} total {}  tokens {:?}…",
@@ -225,6 +252,21 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             &r.tokens[..4.min(r.tokens.len())]
         );
     }
+    for s in &report.shards {
+        println!(
+            "  shard {}: {} reqs, {} tokens, {} decode iters, occupancy {:.0}%",
+            s.shard,
+            s.requests,
+            s.tokens,
+            s.decode_iterations,
+            s.occupancy * 100.0
+        );
+    }
+    println!(
+        "mapping cache: {} unique shapes searched, {} cache-served",
+        service.misses(),
+        service.hits()
+    );
     println!(
         "simulated {:.0} tok/s on RACAM ({}); {:.0} tok/s host wall",
         report.sim_tokens_per_s, spec.name, report.wall_tokens_per_s

@@ -1,154 +1,11 @@
-//! Mapping engine (paper §4.4 / Fig. 8): enumerates the mapping space,
-//! instantiates and evaluates each candidate with the software + hardware
-//! models, and keeps the lowest-latency one.  Optimal mappings are cached
-//! per kernel shape — LLM layers reuse a handful of shapes, which is what
-//! makes the paper's end-to-end search take seconds (§7).
+//! Mapping engine (paper §4.4 / Fig. 8) — historical entry point.
+//!
+//! The original `MappingEngine` was a single-threaded searcher with a
+//! private per-instance cache; it grew into the shared, thread-safe
+//! [`MappingService`](super::MappingService) (parallel exhaustive search +
+//! concurrent once-per-shape cache shared across clones).  The old name is
+//! kept as an alias so long-standing call sites — benches, examples, the
+//! CLI — keep reading naturally: `MappingEngine::new(HwModel::new(&hw))`
+//! constructs a service that is simply not (yet) shared with anyone.
 
-use super::model_hw::HwModel;
-use super::model_sw::{evaluate, Evaluation};
-use super::space::enumerate_mappings;
-use crate::config::MatmulShape;
-use std::collections::HashMap;
-
-/// Outcome of a mapping-space search.
-#[derive(Debug, Clone)]
-pub struct SearchResult {
-    /// The latency-optimal mapping's evaluation.
-    pub best: Evaluation,
-    /// Candidates examined.
-    pub candidates: usize,
-    /// Worst candidate latency (for the Fig. 15 spread).
-    pub worst_ns: f64,
-}
-
-impl SearchResult {
-    /// Max-to-min latency ratio across the space (Fig. 15 reports 510.85×).
-    pub fn spread(&self) -> f64 {
-        self.worst_ns / self.best.total_ns()
-    }
-}
-
-/// The mapping engine: exhaustive search + per-shape cache.
-pub struct MappingEngine {
-    hw: HwModel,
-    cache: HashMap<MatmulShape, SearchResult>,
-    /// Cache hit/miss counters (searches can be pre-paid or amortized, §7).
-    pub hits: u64,
-    pub misses: u64,
-}
-
-impl MappingEngine {
-    pub fn new(hw: HwModel) -> Self {
-        MappingEngine { hw, cache: HashMap::new(), hits: 0, misses: 0 }
-    }
-
-    pub fn hw(&self) -> &HwModel {
-        &self.hw
-    }
-
-    /// Exhaustively search the mapping space for `shape` (no cache).
-    pub fn search(&self, shape: &MatmulShape) -> SearchResult {
-        let mut best: Option<Evaluation> = None;
-        let mut worst_ns = 0.0f64;
-        let mut candidates = 0;
-        for mapping in enumerate_mappings(shape) {
-            if let Some(eval) = evaluate(shape, &mapping, &self.hw) {
-                candidates += 1;
-                let t = eval.total_ns();
-                worst_ns = worst_ns.max(t);
-                let better = best.as_ref().map_or(true, |b| t < b.total_ns());
-                if better {
-                    best = Some(eval);
-                }
-            }
-        }
-        SearchResult {
-            best: best.expect("non-degenerate shapes always evaluate"),
-            candidates,
-            worst_ns,
-        }
-    }
-
-    /// Search with memoization (LLM workloads reuse shapes across layers).
-    pub fn search_cached(&mut self, shape: &MatmulShape) -> SearchResult {
-        if let Some(hit) = self.cache.get(shape) {
-            self.hits += 1;
-            return hit.clone();
-        }
-        self.misses += 1;
-        let r = self.search(shape);
-        self.cache.insert(*shape, r.clone());
-        r
-    }
-
-    /// Evaluate every candidate (the Fig. 15 scatter data).
-    pub fn evaluate_all(&self, shape: &MatmulShape) -> Vec<Evaluation> {
-        enumerate_mappings(shape).iter().filter_map(|m| evaluate(shape, m, &self.hw)).collect()
-    }
-
-    /// Iterate the cached search results (for persistence, see
-    /// [`super::store`]).
-    pub fn cache_entries(&self) -> impl Iterator<Item = (&MatmulShape, &SearchResult)> {
-        self.cache.iter()
-    }
-
-    /// Insert a pre-computed result (mapping-table import).
-    pub fn cache_insert(&mut self, shape: MatmulShape, result: SearchResult) {
-        self.cache.insert(shape, result);
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::{racam_paper, Precision};
-
-    fn engine() -> MappingEngine {
-        MappingEngine::new(HwModel::new(&racam_paper()))
-    }
-
-    #[test]
-    fn search_finds_a_best_mapping() {
-        let e = engine();
-        let r = e.search(&MatmulShape::new(1024, 4096, 4096, Precision::Int8));
-        assert_eq!(r.candidates, 1458);
-        assert!(r.best.total_ns() > 0.0);
-        assert!(r.spread() > 1.0);
-    }
-
-    #[test]
-    fn best_is_really_minimal() {
-        let e = engine();
-        let shape = MatmulShape::new(256, 1024, 512, Precision::Int8);
-        let r = e.search(&shape);
-        for eval in e.evaluate_all(&shape) {
-            assert!(r.best.total_ns() <= eval.total_ns() + 1e-9);
-        }
-    }
-
-    #[test]
-    fn cache_hits_on_repeated_shapes() {
-        let mut e = engine();
-        let shape = MatmulShape::new(1, 4096, 4096, Precision::Int8);
-        let a = e.search_cached(&shape);
-        let b = e.search_cached(&shape);
-        assert_eq!(e.hits, 1);
-        assert_eq!(e.misses, 1);
-        assert_eq!(a.best.total_ns(), b.best.total_ns());
-    }
-
-    #[test]
-    fn different_precisions_cache_separately() {
-        let mut e = engine();
-        e.search_cached(&MatmulShape::new(1, 1024, 1024, Precision::Int8));
-        e.search_cached(&MatmulShape::new(1, 1024, 1024, Precision::Int4));
-        assert_eq!(e.misses, 2);
-    }
-
-    #[test]
-    fn gemv_search_covers_192_candidates() {
-        let e = engine();
-        let r = e.search(&MatmulShape::new(1, 2048, 2048, Precision::Int8));
-        assert_eq!(r.candidates, 192);
-    }
-}
+pub type MappingEngine = super::service::MappingService;

@@ -17,14 +17,22 @@
 //! reports "1,548", which we read as a digit transposition of 1458 since
 //! the GEMV count matches exactly), evaluates each with the analytical
 //! software + hardware models (§4.4), and returns the latency-optimal one.
+//!
+//! Search and caching live in [`MappingService`]: a shared, thread-safe
+//! pricing service with a parallelized exhaustive search (bit-identical to
+//! the serial reference) and a concurrent once-per-shape cache, so every
+//! serving shard, baseline comparison and experiment amortizes the same
+//! table.  [`store`] persists that table across runs (§7 warm start).
 
 mod engine;
 mod model_hw;
 mod model_sw;
+mod service;
 mod space;
 pub mod store;
 
-pub use engine::{MappingEngine, SearchResult};
+pub use engine::MappingEngine;
 pub use model_hw::{HwModel, PassCosts};
 pub use model_sw::{evaluate, Evaluation, LevelUsage};
+pub use service::{MappingService, SearchResult};
 pub use space::{enumerate_mappings, BlockMapping, Dim, DimSet, HierMapping, Level, Mapping, LEVELS};

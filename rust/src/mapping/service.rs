@@ -1,0 +1,428 @@
+//! The §4.4 mapping search as a **shared, thread-safe service**.
+//!
+//! [`MappingService`] is the crate's single kernel-pricing authority.  It
+//! owns the hardware model and a concurrent per-shape result cache shared
+//! by every clone — serving shards, baseline comparisons, and experiments
+//! all price against the same table, so each kernel shape is searched
+//! exactly once system-wide (the paper's §7 amortization, made global).
+//!
+//! Two search paths are exposed:
+//!
+//! * [`MappingService::search_serial`] — the single-threaded reference
+//!   walk over the enumerated space (first strictly-lower-latency
+//!   candidate wins, i.e. the earliest candidate among latency ties);
+//! * [`MappingService::search`] — a parallelized evaluation that chunks
+//!   the candidate list across worker threads and reduces the per-chunk
+//!   winners **in chunk order with a strict `<`**, which reproduces the
+//!   serial tie-breaking bit-for-bit: the winner is always the
+//!   lowest-enumeration-index candidate of minimal latency.
+//!
+//! Concurrent [`MappingService::search_cached`] calls for the same shape
+//! coalesce on a per-shape once-cell: the first caller runs the search,
+//! later callers (including ones racing on other threads) block on the
+//! cell and reuse the result, so the miss counter for a repeated shape is
+//! exactly 1 no matter how many shards ask.
+
+use super::model_hw::HwModel;
+use super::model_sw::{evaluate, Evaluation};
+use super::space::enumerate_mappings;
+use crate::config::{HwConfig, MatmulShape};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Outcome of a mapping-space search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// The latency-optimal mapping's evaluation.
+    pub best: Evaluation,
+    /// Candidates examined.
+    pub candidates: usize,
+    /// Worst candidate latency (for the Fig. 15 spread).
+    pub worst_ns: f64,
+}
+
+impl SearchResult {
+    /// Max-to-min latency ratio across the space (Fig. 15 reports 510.85×).
+    pub fn spread(&self) -> f64 {
+        self.worst_ns / self.best.total_ns()
+    }
+}
+
+/// Minimum candidates per worker before the parallel search pays for the
+/// thread spawns; below this the serial path is used.
+const MIN_CANDIDATES_PER_WORKER: usize = 48;
+
+/// Searches currently running across all services in the process.  Worker
+/// counts divide by this so N shards cold-searching distinct shapes share
+/// the machine instead of spawning N × cores threads.
+static ACTIVE_SEARCHES: AtomicU64 = AtomicU64::new(0);
+
+/// RAII decrement for [`ACTIVE_SEARCHES`].
+struct SearchSlot;
+
+impl SearchSlot {
+    fn acquire() -> (Self, u64) {
+        let active = ACTIVE_SEARCHES.fetch_add(1, Ordering::Relaxed) + 1;
+        (SearchSlot, active)
+    }
+}
+
+impl Drop for SearchSlot {
+    fn drop(&mut self) {
+        ACTIVE_SEARCHES.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Per-chunk partial search state.
+struct Partial {
+    best: Option<Evaluation>,
+    worst_ns: f64,
+    candidates: usize,
+}
+
+struct Shared {
+    hw: HwModel,
+    /// Shape → once-cell holding the (possibly negative) search outcome.
+    /// The map lock is held only to look up / create the cell; the search
+    /// itself runs inside the cell's one-time initializer, so different
+    /// shapes search concurrently while duplicate shapes coalesce.
+    cache: Mutex<HashMap<MatmulShape, Arc<OnceLock<Option<SearchResult>>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Shared concurrent mapping service.  `Clone` is cheap and shares the
+/// cache and counters (it is an `Arc` handle).
+#[derive(Clone)]
+pub struct MappingService {
+    shared: Arc<Shared>,
+}
+
+impl MappingService {
+    pub fn new(hw: HwModel) -> Self {
+        MappingService {
+            shared: Arc::new(Shared {
+                hw,
+                cache: Mutex::new(HashMap::new()),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Service over a hardware configuration (builds the [`HwModel`]).
+    pub fn for_config(hw: &HwConfig) -> Self {
+        MappingService::new(HwModel::new(hw))
+    }
+
+    pub fn hw(&self) -> &HwModel {
+        &self.shared.hw
+    }
+
+    /// Unique-shape search count (one per shape ever priced).
+    pub fn misses(&self) -> u64 {
+        self.shared.misses.load(Ordering::Relaxed)
+    }
+
+    /// Cache-served request count (includes callers that waited on an
+    /// in-flight search for the same shape).
+    pub fn hits(&self) -> u64 {
+        self.shared.hits.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached shapes (searched or imported).
+    pub fn cache_len(&self) -> usize {
+        self.shared.cache.lock().expect("mapping cache poisoned").len()
+    }
+
+    /// Serial reference search: first strictly-lower-latency candidate
+    /// wins.  Returns `None` when no candidate evaluates (degenerate
+    /// shapes with a zero-sized dimension).
+    pub fn search_serial(&self, shape: &MatmulShape) -> Option<SearchResult> {
+        let mappings = enumerate_mappings(shape);
+        let p = Self::scan_chunk(shape, &mappings, &self.shared.hw);
+        p.best.map(|best| SearchResult { best, candidates: p.candidates, worst_ns: p.worst_ns })
+    }
+
+    /// Parallel exhaustive search.  The winner, `candidates`, and
+    /// `worst_ns` are bit-for-bit identical to [`Self::search_serial`]:
+    /// candidate chunks preserve enumeration order and the chunk-ordered
+    /// reduction keeps the earliest candidate among exact latency ties
+    /// (the result does not depend on the worker count).
+    pub fn search(&self, shape: &MatmulShape) -> Option<SearchResult> {
+        let mappings = enumerate_mappings(shape);
+        let (_slot, active) = SearchSlot::acquire();
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        // Concurrent searches (e.g. shards cold-starting on distinct
+        // shapes) split the cores between them rather than oversubscribing.
+        let fair_cores = (cores as u64 / active.max(1)).max(1) as usize;
+        let workers = fair_cores.min(mappings.len() / MIN_CANDIDATES_PER_WORKER);
+        if workers <= 1 {
+            let p = Self::scan_chunk(shape, &mappings, &self.shared.hw);
+            return p
+                .best
+                .map(|best| SearchResult { best, candidates: p.candidates, worst_ns: p.worst_ns });
+        }
+
+        let chunk_len = mappings.len().div_ceil(workers);
+        let hw = &self.shared.hw;
+        let mut partials: Vec<Partial> = Vec::with_capacity(workers);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = mappings
+                .chunks(chunk_len)
+                .map(|chunk| s.spawn(move || Self::scan_chunk(shape, chunk, hw)))
+                .collect();
+            for h in handles {
+                partials.push(h.join().expect("mapping-search worker panicked"));
+            }
+        });
+
+        // Chunk-ordered reduction with strict `<`: ties keep the earlier
+        // chunk's winner, matching the serial scan exactly.
+        let mut best: Option<Evaluation> = None;
+        let mut worst_ns = 0.0f64;
+        let mut candidates = 0usize;
+        for p in partials {
+            candidates += p.candidates;
+            worst_ns = worst_ns.max(p.worst_ns);
+            if let Some(e) = p.best {
+                let better = match best.as_ref() {
+                    None => true,
+                    Some(b) => e.total_ns() < b.total_ns(),
+                };
+                if better {
+                    best = Some(e);
+                }
+            }
+        }
+        best.map(|best| SearchResult { best, candidates, worst_ns })
+    }
+
+    /// Evaluate one ordered slice of candidates (shared by the serial path
+    /// and every parallel worker, so both sides run the same comparisons).
+    fn scan_chunk(
+        shape: &MatmulShape,
+        chunk: &[super::space::Mapping],
+        hw: &HwModel,
+    ) -> Partial {
+        let mut best: Option<Evaluation> = None;
+        let mut worst_ns = 0.0f64;
+        let mut candidates = 0usize;
+        for mapping in chunk {
+            if let Some(eval) = evaluate(shape, mapping, hw) {
+                candidates += 1;
+                let t = eval.total_ns();
+                worst_ns = worst_ns.max(t);
+                let better = match best.as_ref() {
+                    None => true,
+                    Some(b) => t < b.total_ns(),
+                };
+                if better {
+                    best = Some(eval);
+                }
+            }
+        }
+        Partial { best, worst_ns, candidates }
+    }
+
+    /// Search with shared memoization.  Concurrent calls for the same
+    /// shape run one search; everyone else waits on the once-cell and
+    /// shares the result.
+    pub fn search_cached(&self, shape: &MatmulShape) -> Option<SearchResult> {
+        let (cell, fresh) = {
+            let mut cache = self.shared.cache.lock().expect("mapping cache poisoned");
+            match cache.entry(*shape) {
+                Entry::Occupied(e) => (Arc::clone(e.get()), false),
+                Entry::Vacant(v) => (Arc::clone(v.insert(Arc::new(OnceLock::new()))), true),
+            }
+        };
+        if fresh {
+            self.shared.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.shared.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        cell.get_or_init(|| self.search(shape)).clone()
+    }
+
+    /// Evaluate every candidate (the Fig. 15 scatter data).
+    pub fn evaluate_all(&self, shape: &MatmulShape) -> Vec<Evaluation> {
+        enumerate_mappings(shape)
+            .iter()
+            .filter_map(|m| evaluate(shape, m, &self.shared.hw))
+            .collect()
+    }
+
+    /// Snapshot of the completed cache entries (for persistence, see
+    /// [`super::store`]).  Entries whose search is still in flight are
+    /// skipped; negative entries (unsearchable shapes) are skipped too.
+    pub fn cache_entries(&self) -> Vec<(MatmulShape, SearchResult)> {
+        self.shared
+            .cache
+            .lock()
+            .expect("mapping cache poisoned")
+            .iter()
+            .filter_map(|(shape, cell)| {
+                cell.get().and_then(|o| o.clone()).map(|r| (*shape, r))
+            })
+            .collect()
+    }
+
+    /// Insert a pre-computed result (mapping-table import / warm start).
+    pub fn cache_insert(&self, shape: MatmulShape, result: SearchResult) {
+        let cell = OnceLock::new();
+        let _ = cell.set(Some(result));
+        self.shared
+            .cache
+            .lock()
+            .expect("mapping cache poisoned")
+            .insert(shape, Arc::new(cell));
+    }
+
+    /// Warm-start the cache from a mapping-table file written by
+    /// [`Self::persist`] (stored mappings are re-evaluated on this
+    /// service's hardware model).  Returns the number of entries loaded.
+    pub fn warm_start(&self, path: &Path) -> crate::Result<usize> {
+        super::store::load_file(self, path)
+    }
+
+    /// Persist the cache to a mapping-table file (§7: "mappings … can be
+    /// precomputed or cached at runtime").
+    pub fn persist(&self, path: &Path) -> crate::Result<()> {
+        super::store::save_file(self, path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{racam_paper, Precision};
+
+    fn service() -> MappingService {
+        MappingService::for_config(&racam_paper())
+    }
+
+    fn gemm() -> MatmulShape {
+        MatmulShape::new(1024, 4096, 4096, Precision::Int8)
+    }
+
+    fn gemv() -> MatmulShape {
+        MatmulShape::new(1, 2048, 2048, Precision::Int8)
+    }
+
+    #[test]
+    fn search_finds_a_best_mapping() {
+        let s = service();
+        let r = s.search(&gemm()).expect("GEMM always evaluates");
+        assert_eq!(r.candidates, 1458);
+        assert!(r.best.total_ns() > 0.0);
+        assert!(r.spread() > 1.0);
+    }
+
+    #[test]
+    fn gemv_search_covers_192_candidates() {
+        let s = service();
+        let r = s.search(&gemv()).expect("GEMV always evaluates");
+        assert_eq!(r.candidates, 192);
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_gemm_space() {
+        // Acceptance: identical best mapping and total_ns on the
+        // 1458-candidate GEMM space — bit-for-bit.
+        let s = service();
+        let par = s.search(&gemm()).unwrap();
+        let ser = s.search_serial(&gemm()).unwrap();
+        assert_eq!(par.best.mapping, ser.best.mapping);
+        assert_eq!(par.best.total_ns().to_bits(), ser.best.total_ns().to_bits());
+        assert_eq!(par.candidates, ser.candidates);
+        assert_eq!(par.worst_ns.to_bits(), ser.worst_ns.to_bits());
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_gemv_space() {
+        // Acceptance: identical winner on the 192-candidate GEMV space.
+        let s = service();
+        let par = s.search(&gemv()).unwrap();
+        let ser = s.search_serial(&gemv()).unwrap();
+        assert_eq!(par.best.mapping, ser.best.mapping);
+        assert_eq!(par.best.total_ns().to_bits(), ser.best.total_ns().to_bits());
+        assert_eq!(par.candidates, 192);
+        assert_eq!(ser.candidates, 192);
+    }
+
+    #[test]
+    fn best_is_really_minimal() {
+        let s = service();
+        let shape = MatmulShape::new(256, 1024, 512, Precision::Int8);
+        let r = s.search(&shape).unwrap();
+        for eval in s.evaluate_all(&shape) {
+            assert!(r.best.total_ns() <= eval.total_ns() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn cache_hits_on_repeated_shapes() {
+        let s = service();
+        let shape = MatmulShape::new(1, 4096, 4096, Precision::Int8);
+        let a = s.search_cached(&shape).unwrap();
+        let b = s.search_cached(&shape).unwrap();
+        assert_eq!(s.hits(), 1);
+        assert_eq!(s.misses(), 1);
+        assert_eq!(a.best.total_ns(), b.best.total_ns());
+    }
+
+    #[test]
+    fn different_precisions_cache_separately() {
+        let s = service();
+        s.search_cached(&MatmulShape::new(1, 1024, 1024, Precision::Int8));
+        s.search_cached(&MatmulShape::new(1, 1024, 1024, Precision::Int4));
+        assert_eq!(s.misses(), 2);
+    }
+
+    #[test]
+    fn concurrent_callers_share_one_search() {
+        // Acceptance: cache misses for a repeated shape across threads == 1.
+        let s = service();
+        let shape = gemv();
+        let mut totals = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let svc = s.clone();
+                    scope.spawn(move || svc.search_cached(&shape).unwrap().best.total_ns())
+                })
+                .collect();
+            for h in handles {
+                totals.push(h.join().unwrap());
+            }
+        });
+        assert_eq!(s.misses(), 1, "repeated shape must be searched once");
+        assert_eq!(s.hits(), 3);
+        assert!(totals.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn degenerate_shape_returns_none_and_caches_negatively() {
+        let s = service();
+        let shape = MatmulShape::new(0, 64, 64, Precision::Int8);
+        assert!(s.search(&shape).is_none());
+        assert!(s.search_cached(&shape).is_none());
+        assert!(s.search_cached(&shape).is_none());
+        assert_eq!(s.misses(), 1);
+        assert_eq!(s.hits(), 1);
+    }
+
+    #[test]
+    fn clones_share_the_cache() {
+        let s = service();
+        let t = s.clone();
+        s.search_cached(&gemv());
+        t.search_cached(&gemv());
+        assert_eq!(s.misses(), 1);
+        assert_eq!(t.hits(), 1);
+        assert_eq!(s.cache_len(), 1);
+    }
+}

@@ -4,9 +4,15 @@
 //! re-evaluates each stored mapping on the current hardware model (cheap —
 //! one evaluation instead of a full space search) so cached entries stay
 //! consistent with the config.
+//!
+//! These are the warm-start hooks of [`MappingService`]: export/import act
+//! on the shared cache, so one saved table pre-warms every shard and
+//! baseline comparison that shares the service
+//! ([`MappingService::warm_start`] / [`MappingService::persist`] are thin
+//! wrappers over [`load_file`] / [`save_file`]).
 
-use super::engine::{MappingEngine, SearchResult};
 use super::model_sw::evaluate;
+use super::service::{MappingService, SearchResult};
 use super::space::{BlockMapping, Dim, DimSet, HierMapping, Mapping};
 use crate::config::json::{self, Value};
 use crate::config::{MatmulShape, Precision};
@@ -68,10 +74,11 @@ fn shape_from_value(v: &Value) -> Result<MatmulShape> {
     })
 }
 
-/// Export an engine's cached search results.
-pub fn export(engine: &MappingEngine) -> Value {
-    let entries: Vec<Value> = engine
+/// Export a service's cached search results.
+pub fn export(service: &MappingService) -> Value {
+    let entries: Vec<Value> = service
         .cache_entries()
+        .iter()
         .map(|(shape, r)| {
             Value::obj(vec![
                 ("shape", shape_to_value(shape)),
@@ -84,10 +91,10 @@ pub fn export(engine: &MappingEngine) -> Value {
     Value::obj(vec![("version", Value::Num(1.0)), ("entries", Value::Arr(entries))])
 }
 
-/// Import previously exported results into the engine's cache,
-/// re-evaluating each stored mapping on the engine's hardware model.
+/// Import previously exported results into the service's shared cache,
+/// re-evaluating each stored mapping on the service's hardware model.
 /// Returns the number of entries imported.
-pub fn import(engine: &mut MappingEngine, v: &Value) -> Result<usize> {
+pub fn import(service: &MappingService, v: &Value) -> Result<usize> {
     anyhow::ensure!(v.get("version")?.as_f64()? == 1.0, "unknown mapping-store version");
     let Value::Arr(entries) = v.get("entries")? else {
         anyhow::bail!("entries must be an array")
@@ -96,7 +103,7 @@ pub fn import(engine: &mut MappingEngine, v: &Value) -> Result<usize> {
     for e in entries {
         let shape = shape_from_value(e.get("shape")?)?;
         let mapping = mapping_from_string(e.get("mapping")?.as_str()?)?;
-        let Some(eval) = evaluate(&shape, &mapping, engine.hw()) else {
+        let Some(eval) = evaluate(&shape, &mapping, service.hw()) else {
             continue;
         };
         let result = SearchResult {
@@ -104,33 +111,32 @@ pub fn import(engine: &mut MappingEngine, v: &Value) -> Result<usize> {
             candidates: e.get("candidates")?.as_f64()? as usize,
             worst_ns: e.get("worst_ns")?.as_f64()?,
         };
-        engine.cache_insert(shape, result);
+        service.cache_insert(shape, result);
         imported += 1;
     }
     Ok(imported)
 }
 
-/// Save the engine's cache to a file.
-pub fn save_file(engine: &MappingEngine, path: &std::path::Path) -> Result<()> {
-    std::fs::write(path, export(engine).pretty())?;
+/// Save the service's cache to a file.
+pub fn save_file(service: &MappingService, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, export(service).pretty())?;
     Ok(())
 }
 
-/// Load a cache file into the engine.
-pub fn load_file(engine: &mut MappingEngine, path: &std::path::Path) -> Result<usize> {
+/// Load a cache file into the service.
+pub fn load_file(service: &MappingService, path: &std::path::Path) -> Result<usize> {
     let text = std::fs::read_to_string(path)?;
     let v = json::parse(&text).map_err(anyhow::Error::from)?;
-    import(engine, &v)
+    import(service, &v)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::racam_paper;
-    use crate::mapping::HwModel;
 
-    fn engine() -> MappingEngine {
-        MappingEngine::new(HwModel::new(&racam_paper()))
+    fn service() -> MappingService {
+        MappingService::for_config(&racam_paper())
     }
 
     #[test]
@@ -144,7 +150,7 @@ mod tests {
 
     #[test]
     fn export_import_restores_cached_latencies() {
-        let mut a = engine();
+        let a = service();
         let shapes = [
             MatmulShape::new(1, 4096, 4096, Precision::Int8),
             MatmulShape::new(1024, 12288, 12288, Precision::Int8),
@@ -155,14 +161,14 @@ mod tests {
         }
         let exported = export(&a);
 
-        let mut b = engine();
-        let n = import(&mut b, &exported).unwrap();
+        let b = service();
+        let n = import(&b, &exported).unwrap();
         assert_eq!(n, shapes.len());
         for s in &shapes {
-            let misses_before = b.misses;
-            let from_cache = b.search_cached(s);
-            assert_eq!(b.misses, misses_before, "import must pre-warm the cache");
-            let fresh = a.search_cached(s);
+            let misses_before = b.misses();
+            let from_cache = b.search_cached(s).unwrap();
+            assert_eq!(b.misses(), misses_before, "import must pre-warm the cache");
+            let fresh = a.search_cached(s).unwrap();
             assert!(
                 (from_cache.best.total_ns() - fresh.best.total_ns()).abs() < 1e-6,
                 "{}: cached {} vs fresh {}",
@@ -175,12 +181,12 @@ mod tests {
 
     #[test]
     fn file_roundtrip() {
-        let mut a = engine();
+        let a = service();
         a.search_cached(&MatmulShape::new(1, 2048, 2048, Precision::Int8));
         let path = std::env::temp_dir().join("racam_mapping_store_test.json");
-        save_file(&a, &path).unwrap();
-        let mut b = engine();
-        assert_eq!(load_file(&mut b, &path).unwrap(), 1);
+        a.persist(&path).unwrap();
+        let b = service();
+        assert_eq!(b.warm_start(&path).unwrap(), 1);
         std::fs::remove_file(&path).ok();
     }
 

@@ -6,101 +6,112 @@
 //! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects, while the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT client itself ([`Runtime`] / [`LoadedModule`]) requires the
+//! `xla` bindings and is gated behind the `pjrt` cargo feature; artifact
+//! discovery ([`ArtifactSet`]) is always available so build tooling and the
+//! CLI can report what is (not) present.
 
 mod artifact;
 
 pub use artifact::{artifacts_dir, ArtifactSet};
 
-use crate::Result;
-use anyhow::Context;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod pjrt_client {
+    use crate::Result;
+    use anyhow::Context;
+    use std::path::Path;
 
-/// A PJRT client + the modules loaded on it.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-/// One compiled executable.
-pub struct LoadedModule {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Runtime {
-    /// CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    /// A PJRT client + the modules loaded on it.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// One compiled executable.
+    pub struct LoadedModule {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Load + compile an HLO text file.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModule> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).context("PJRT compile")?;
-        let name =
-            path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
-        Ok(LoadedModule { name, exe })
-    }
-}
-
-impl LoadedModule {
-    /// Execute with int32 inputs, returning the flattened int32 output.
-    ///
-    /// The AOT pipeline lowers with `return_tuple=True`, so every artifact
-    /// yields a 1-tuple.
-    pub fn run_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<i32>> {
-        let lits = self.literals_i32(inputs)?;
-        let out = self.execute(&lits)?;
-        Ok(out.to_vec::<i32>()?)
-    }
-
-    /// Execute with f32 inputs, returning the flattened f32 output.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            lits.push(xla::Literal::vec1(data).reshape(dims)?);
+    impl Runtime {
+        /// CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            Ok(Runtime { client: xla::PjRtClient::cpu()? })
         }
-        let out = self.execute(&lits)?;
-        Ok(out.to_vec::<f32>()?)
-    }
 
-    /// Execute with pre-built literals (mixed input dtypes), returning the
-    /// unwrapped 1-tuple output literal.
-    pub fn run_literals(&self, lits: &[xla::Literal]) -> Result<xla::Literal> {
-        self.execute(lits)
-    }
-
-    fn literals_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<xla::Literal>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            lits.push(xla::Literal::vec1(data).reshape(dims)?);
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        Ok(lits)
+
+        /// Load + compile an HLO text file.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModule> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).context("PJRT compile")?;
+            let name =
+                path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+            Ok(LoadedModule { name, exe })
+        }
     }
 
-    fn execute(&self, lits: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self.exe.execute::<xla::Literal>(lits)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?)
+    impl LoadedModule {
+        /// Execute with int32 inputs, returning the flattened int32 output.
+        ///
+        /// The AOT pipeline lowers with `return_tuple=True`, so every artifact
+        /// yields a 1-tuple.
+        pub fn run_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<i32>> {
+            let lits = self.literals_i32(inputs)?;
+            let out = self.execute(&lits)?;
+            Ok(out.to_vec::<i32>()?)
+        }
+
+        /// Execute with f32 inputs, returning the flattened f32 output.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                lits.push(xla::Literal::vec1(data).reshape(dims)?);
+            }
+            let out = self.execute(&lits)?;
+            Ok(out.to_vec::<f32>()?)
+        }
+
+        /// Execute with pre-built literals (mixed input dtypes), returning the
+        /// unwrapped 1-tuple output literal.
+        pub fn run_literals(&self, lits: &[xla::Literal]) -> Result<xla::Literal> {
+            self.execute(lits)
+        }
+
+        fn literals_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<xla::Literal>> {
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                lits.push(xla::Literal::vec1(data).reshape(dims)?);
+            }
+            Ok(lits)
+        }
+
+        fn execute(&self, lits: &[xla::Literal]) -> Result<xla::Literal> {
+            let result = self.exe.execute::<xla::Literal>(lits)?[0][0].to_literal_sync()?;
+            Ok(result.to_tuple1()?)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        // Runtime execution is covered by the integration tests in
+        // rust/tests/ (they require `make artifacts` to have run); here we
+        // only check client construction, which needs no artifacts.
+        use super::*;
+
+        #[test]
+        fn cpu_client_comes_up() {
+            let rt = Runtime::cpu().expect("PJRT CPU client");
+            assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        }
     }
 }
 
-#[cfg(test)]
-mod tests {
-    // Runtime execution is covered by the integration tests in
-    // rust/tests/ (they require `make artifacts` to have run); here we only
-    // check client construction, which needs no artifacts.
-    use super::*;
-
-    #[test]
-    fn cpu_client_comes_up() {
-        let rt = Runtime::cpu().expect("PJRT CPU client");
-        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_client::{LoadedModule, Runtime};

@@ -2,7 +2,7 @@
 //! the GEMM/GEMV kernel sequences the mapping engine consumes (paper §4.4's
 //! "LLM parser", built per-layer from the Table 3 hyper-parameters).
 
-use super::InferenceSystem;
+use super::CostModel;
 use crate::config::{LlmSpec, MatmulShape, Precision, Scenario};
 use crate::metrics::LatencyBreakdown;
 
@@ -79,13 +79,22 @@ pub fn decode_kernels(spec: &LlmSpec, ctx: u64) -> Vec<KernelInstance> {
     v
 }
 
-/// Total latency of a kernel list on a system.
-pub fn stage_latency(sys: &mut dyn InferenceSystem, kernels: &[KernelInstance]) -> LatencyBreakdown {
+/// Total latency of a kernel list on a system.  Errors when a kernel shape
+/// is degenerate and the system cannot price it (which an [`LlmSpec`] with
+/// non-zero hyper-parameters never produces).
+pub fn stage_latency(
+    sys: &dyn CostModel,
+    kernels: &[KernelInstance],
+) -> crate::Result<LatencyBreakdown> {
     let mut total = LatencyBreakdown::default();
     for k in kernels {
-        total.add(&sys.kernel_latency(&k.shape).scaled(k.count as f64));
+        let cost = sys.kernel_cost(&k.shape).ok_or_else(|| {
+            let (name, shape) = (sys.name(), k.shape.label());
+            anyhow::anyhow!("{name}: no valid mapping for kernel '{}' ({shape})", k.label)
+        })?;
+        total.add(&cost.scaled(k.count as f64));
     }
-    total
+    Ok(total)
 }
 
 /// Number of context-length sample points used to integrate decode latency
@@ -97,13 +106,13 @@ const DECODE_SAMPLES: u64 = 8;
 /// `prompt_tokens` prompt: samples the per-token latency at several context
 /// lengths and integrates trapezoidally.
 pub fn decode_total(
-    sys: &mut dyn InferenceSystem,
+    sys: &dyn CostModel,
     spec: &LlmSpec,
     prompt_tokens: u64,
     output_tokens: u64,
-) -> LatencyBreakdown {
+) -> crate::Result<LatencyBreakdown> {
     if output_tokens == 0 {
-        return LatencyBreakdown::default();
+        return Ok(LatencyBreakdown::default());
     }
     let samples = DECODE_SAMPLES.min(output_tokens);
     let mut total = LatencyBreakdown::default();
@@ -111,17 +120,21 @@ pub fn decode_total(
     for s in 0..samples {
         // Mid-point context length of this segment.
         let ctx = prompt_tokens + ((s as f64 + 0.5) * seg) as u64;
-        let per_token = stage_latency(sys, &decode_kernels(spec, ctx.max(1)));
+        let per_token = stage_latency(sys, &decode_kernels(spec, ctx.max(1)))?;
         total.add(&per_token.scaled(seg));
     }
-    total
+    Ok(total)
 }
 
 /// End-to-end scenario latency: one prefill pass + the full generation.
-pub fn e2e_latency(sys: &mut dyn InferenceSystem, spec: &LlmSpec, sc: &Scenario) -> LatencyBreakdown {
-    let mut total = stage_latency(sys, &prefill_kernels(spec, sc.prompt_tokens));
-    total.add(&decode_total(sys, spec, sc.prompt_tokens, sc.output_tokens));
-    total
+pub fn e2e_latency(
+    sys: &dyn CostModel,
+    spec: &LlmSpec,
+    sc: &Scenario,
+) -> crate::Result<LatencyBreakdown> {
+    let mut total = stage_latency(sys, &prefill_kernels(spec, sc.prompt_tokens))?;
+    total.add(&decode_total(sys, spec, sc.prompt_tokens, sc.output_tokens)?);
+    Ok(total)
 }
 
 /// Convenience: int8 per-token decode MAC count (sanity checks / roofline).
@@ -141,12 +154,12 @@ mod tests {
 
     /// A trivial system: latency proportional to MACs (+ constant).
     struct MacSystem;
-    impl InferenceSystem for MacSystem {
+    impl CostModel for MacSystem {
         fn name(&self) -> &str {
             "mac"
         }
-        fn kernel_latency(&mut self, shape: &MatmulShape) -> LatencyBreakdown {
-            LatencyBreakdown::new(shape.macs() as f64 * 1e-3, 10.0)
+        fn kernel_cost(&self, shape: &MatmulShape) -> Option<LatencyBreakdown> {
+            Some(LatencyBreakdown::new(shape.macs() as f64 * 1e-3, 10.0))
         }
     }
 
@@ -191,30 +204,47 @@ mod tests {
     #[test]
     fn decode_total_grows_with_context() {
         let spec = gpt3_6_7b();
-        let short = decode_total(&mut MacSystem, &spec, 128, 64);
-        let long = decode_total(&mut MacSystem, &spec, 8192, 64);
+        let short = decode_total(&MacSystem, &spec, 128, 64).unwrap();
+        let long = decode_total(&MacSystem, &spec, 8192, 64).unwrap();
         assert!(long.total_ns() > short.total_ns());
     }
 
     #[test]
     fn decode_total_scales_with_token_count() {
         let spec = gpt3_6_7b();
-        let few = decode_total(&mut MacSystem, &spec, 1024, 10);
-        let many = decode_total(&mut MacSystem, &spec, 1024, 1000);
+        let few = decode_total(&MacSystem, &spec, 1024, 10).unwrap();
+        let many = decode_total(&MacSystem, &spec, 1024, 1000).unwrap();
         // More than 50x (context also grows), at least linear-ish.
         assert!(many.total_ns() > 50.0 * few.total_ns());
-        assert_eq!(decode_total(&mut MacSystem, &spec, 1024, 0).total_ns(), 0.0);
+        assert_eq!(decode_total(&MacSystem, &spec, 1024, 0).unwrap().total_ns(), 0.0);
     }
 
     #[test]
     fn e2e_is_prefill_plus_decode() {
         let spec = gpt3_6_7b();
         let sc = Scenario::CODE_GENERATION;
-        let e2e = e2e_latency(&mut MacSystem, &spec, &sc);
-        let prefill = stage_latency(&mut MacSystem, &prefill_kernels(&spec, sc.prompt_tokens));
-        let decode = decode_total(&mut MacSystem, &spec, sc.prompt_tokens, sc.output_tokens);
+        let e2e = e2e_latency(&MacSystem, &spec, &sc).unwrap();
+        let prefill = stage_latency(&MacSystem, &prefill_kernels(&spec, sc.prompt_tokens)).unwrap();
+        let decode = decode_total(&MacSystem, &spec, sc.prompt_tokens, sc.output_tokens).unwrap();
         let sum = prefill.total_ns() + decode.total_ns();
         assert!((e2e.total_ns() - sum).abs() / sum < 1e-12);
+    }
+
+    #[test]
+    fn unpriceable_kernel_propagates_an_error() {
+        struct NoneSystem;
+        impl CostModel for NoneSystem {
+            fn name(&self) -> &str {
+                "none"
+            }
+            fn kernel_cost(&self, _shape: &MatmulShape) -> Option<LatencyBreakdown> {
+                None
+            }
+        }
+        let spec = gpt3_6_7b();
+        let err = stage_latency(&NoneSystem, &decode_kernels(&spec, 16)).unwrap_err();
+        assert!(err.to_string().contains("no valid mapping"), "{err}");
+        assert!(e2e_latency(&NoneSystem, &spec, &Scenario::CODE_GENERATION).is_err());
     }
 
     #[test]

@@ -13,14 +13,21 @@ pub use llm::{
 };
 pub use racam::RacamSystem;
 
-use crate::metrics::LatencyBreakdown;
 use crate::config::MatmulShape;
+use crate::metrics::LatencyBreakdown;
 
-/// Anything that can price a matmul kernel: the RACAM simulator or one of
-/// the baseline system models (H100, Proteus).
-pub trait InferenceSystem {
+/// Anything that can price a matmul kernel: the RACAM simulator (backed by
+/// the shared [`crate::mapping::MappingService`]) or one of the baseline
+/// system models (H100 roofline, Proteus).
+///
+/// Pricing is `&self` — implementations are internally synchronized (the
+/// RACAM path caches through the thread-safe mapping service; the
+/// baselines are pure functions), so one model instance can serve every
+/// worker shard concurrently.  `kernel_cost` returns `None` only for
+/// degenerate shapes (a zero-sized dimension) that no mapping can serve.
+pub trait CostModel: Send + Sync {
     /// System name for reports.
     fn name(&self) -> &str;
-    /// Latency of one kernel execution.
-    fn kernel_latency(&mut self, shape: &MatmulShape) -> LatencyBreakdown;
+    /// Latency of one kernel execution, or `None` for unpriceable shapes.
+    fn kernel_cost(&self, shape: &MatmulShape) -> Option<LatencyBreakdown>;
 }

@@ -1,44 +1,54 @@
-//! The RACAM system as an [`InferenceSystem`]: every kernel goes through
-//! the mapping engine (cached exhaustive search) and is priced by the
-//! analytical models.
+//! The RACAM system as a [`CostModel`]: every kernel goes through the
+//! shared [`MappingService`] (cached parallel exhaustive search) and is
+//! priced by the analytical models.  Constructing with
+//! [`RacamSystem::with_service`] shares one mapping cache across any number
+//! of systems — serving shards, experiments, baseline sweeps — so a
+//! repeated shape is searched exactly once system-wide.
 
-use super::InferenceSystem;
+use super::CostModel;
 use crate::config::{HwConfig, MatmulShape};
-use crate::mapping::{HwModel, MappingEngine, SearchResult};
+use crate::mapping::{MappingService, SearchResult};
 use crate::metrics::LatencyBreakdown;
 
 pub struct RacamSystem {
     name: String,
-    engine: MappingEngine,
+    service: MappingService,
 }
 
 impl RacamSystem {
+    /// A system with its own (unshared) mapping service.
     pub fn new(hw: &HwConfig) -> Self {
-        RacamSystem { name: format!("RACAM[{}]", hw.features.label()), engine: MappingEngine::new(HwModel::new(hw)) }
+        Self::with_service(MappingService::for_config(hw))
     }
 
-    pub fn engine(&self) -> &MappingEngine {
-        &self.engine
+    /// A system pricing against an existing shared mapping service.
+    pub fn with_service(service: MappingService) -> Self {
+        RacamSystem {
+            name: format!("RACAM[{}]", service.hw().features().label()),
+            service,
+        }
     }
 
-    pub fn engine_mut(&mut self) -> &mut MappingEngine {
-        &mut self.engine
+    /// The backing mapping service (shared cache, hit/miss counters,
+    /// persistence hooks).
+    pub fn service(&self) -> &MappingService {
+        &self.service
     }
 
-    /// Full search result (mapping + breakdown) for a kernel.
-    pub fn search(&mut self, shape: &MatmulShape) -> SearchResult {
-        self.engine.search_cached(shape)
+    /// Full search result (mapping + breakdown) for a kernel; `None` for
+    /// degenerate shapes no mapping can serve.
+    pub fn search(&self, shape: &MatmulShape) -> Option<SearchResult> {
+        self.service.search_cached(shape)
     }
 }
 
-impl InferenceSystem for RacamSystem {
+impl CostModel for RacamSystem {
     fn name(&self) -> &str {
         &self.name
     }
 
-    fn kernel_latency(&mut self, shape: &MatmulShape) -> LatencyBreakdown {
-        let r = self.engine.search_cached(shape);
-        LatencyBreakdown::new(r.best.compute_ns, r.best.io_ns())
+    fn kernel_cost(&self, shape: &MatmulShape) -> Option<LatencyBreakdown> {
+        self.search(shape).map(|r| LatencyBreakdown::new(r.best.compute_ns, r.best.io_ns()))
     }
 }
 
@@ -48,11 +58,11 @@ mod tests {
     use crate::config::{racam_paper, MatmulShape, Precision};
 
     #[test]
-    fn kernel_latency_matches_search_best() {
-        let mut sys = RacamSystem::new(&racam_paper());
+    fn kernel_cost_matches_search_best() {
+        let sys = RacamSystem::new(&racam_paper());
         let s = MatmulShape::new(1, 4096, 4096, Precision::Int8);
-        let b = sys.kernel_latency(&s);
-        let r = sys.search(&s);
+        let b = sys.kernel_cost(&s).unwrap();
+        let r = sys.search(&s).unwrap();
         assert!((b.total_ns() - r.best.total_ns()).abs() < 1e-9);
     }
 
@@ -60,5 +70,23 @@ mod tests {
     fn name_carries_feature_label() {
         let sys = RacamSystem::new(&racam_paper());
         assert_eq!(sys.name(), "RACAM[Complete]");
+    }
+
+    #[test]
+    fn degenerate_shape_is_unpriceable() {
+        let sys = RacamSystem::new(&racam_paper());
+        assert!(sys.kernel_cost(&MatmulShape::new(0, 64, 64, Precision::Int8)).is_none());
+    }
+
+    #[test]
+    fn shared_service_dedupes_searches_across_systems() {
+        let service = MappingService::for_config(&racam_paper());
+        let a = RacamSystem::with_service(service.clone());
+        let b = RacamSystem::with_service(service.clone());
+        let s = MatmulShape::new(1, 2048, 2048, Precision::Int8);
+        a.kernel_cost(&s).unwrap();
+        b.kernel_cost(&s).unwrap();
+        assert_eq!(service.misses(), 1, "one search serves both systems");
+        assert_eq!(service.hits(), 1);
     }
 }

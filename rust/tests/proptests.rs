@@ -7,9 +7,9 @@
 //! scalar reference, ISA encode/decode, and config JSON round-trips.
 
 use racam::config::{racam_paper, racam_tiny, HwConfig, MatmulShape, Precision};
-use racam::coordinator::{FcfsBatcher, Request, Server, SyntheticEngine};
+use racam::coordinator::{Coordinator, FcfsBatcher, Request, Server, SyntheticEngine};
 use racam::dram::{decode, encode, DramCommand};
-use racam::mapping::{evaluate, enumerate_mappings, HwModel, MappingEngine};
+use racam::mapping::{evaluate, enumerate_mappings, HwModel, MappingEngine, MappingService};
 use racam::pim::{gemm_reference, BlockExecutor};
 use racam::workloads::RacamSystem;
 
@@ -112,10 +112,31 @@ fn prop_search_best_is_global_minimum() {
             rng.range(1, 8192),
             Precision::Int8,
         );
-        let r = engine.search(&shape);
+        let r = engine.search(&shape).expect("non-degenerate shapes evaluate");
         for e in engine.evaluate_all(&shape) {
             assert!(r.best.total_ns() <= e.total_ns() + 1e-6);
         }
+    });
+}
+
+#[test]
+fn prop_parallel_search_matches_serial_reference() {
+    // The parallel search must return the exact serial winner — same
+    // mapping, bit-identical latency, same candidate/worst accounting.
+    let service = MappingService::for_config(&racam_paper());
+    check("parallel==serial", 6, |rng| {
+        let shape = MatmulShape::new(
+            rng.range(1, 64),
+            rng.range(1, 4096),
+            rng.range(1, 4096),
+            Precision::Int8,
+        );
+        let par = service.search(&shape).expect("evaluates");
+        let ser = service.search_serial(&shape).expect("evaluates");
+        assert_eq!(par.best.mapping, ser.best.mapping);
+        assert_eq!(par.best.total_ns().to_bits(), ser.best.total_ns().to_bits());
+        assert_eq!(par.candidates, ser.candidates);
+        assert_eq!(par.worst_ns.to_bits(), ser.worst_ns.to_bits());
     });
 }
 
@@ -128,11 +149,11 @@ fn prop_more_compute_never_faster_kernels() {
         let m = rng.range(1, 256);
         let k = rng.range(64, 8192);
         let n = rng.range(64, 8192);
-        let base = engine.search(&MatmulShape::new(m, k, n, Precision::Int8)).best.total_ns();
-        let grow_k =
-            engine.search(&MatmulShape::new(m, k * 2, n, Precision::Int8)).best.total_ns();
-        let grow_n =
-            engine.search(&MatmulShape::new(m, k, n * 2, Precision::Int8)).best.total_ns();
+        let best_ns =
+            |shape: MatmulShape| engine.search(&shape).expect("evaluates").best.total_ns();
+        let base = best_ns(MatmulShape::new(m, k, n, Precision::Int8));
+        let grow_k = best_ns(MatmulShape::new(m, k * 2, n, Precision::Int8));
+        let grow_n = best_ns(MatmulShape::new(m, k, n * 2, Precision::Int8));
         // Allow 2% slack for ceil effects in tiling.
         assert!(grow_k >= base * 0.98, "K: {base} -> {grow_k}");
         assert!(grow_n >= base * 0.98, "N: {base} -> {grow_n}");
@@ -211,6 +232,37 @@ fn prop_generation_independent_of_batching() {
             server.run_to_completion().unwrap().results.into_iter().map(|r| r.tokens).collect()
         };
         assert_eq!(gen(1), gen(3));
+    });
+}
+
+#[test]
+fn prop_sharding_conserves_requests_and_generation() {
+    // Splitting the same request set across worker shards must not change
+    // any request's tokens, and every request must complete exactly once.
+    check("shard independence", 3, |rng| {
+        let reqs: Vec<Request> = (0..rng.range(2, 6))
+            .map(|id| Request {
+                id,
+                prompt: vec![id as u32 + 1, rng.range(0, 63) as u32],
+                max_new_tokens: rng.range(1, 6) as usize,
+            })
+            .collect();
+        let run = |shards: usize| -> Vec<(u64, Vec<u32>)> {
+            let mut coord = Coordinator::new(
+                &racam_paper(),
+                racam::config::gpt3_6_7b(),
+                shards,
+                2,
+                |_| SyntheticEngine::new(32, 64),
+            );
+            for r in &reqs {
+                coord.submit(r.clone());
+            }
+            let report = coord.run_to_completion().unwrap();
+            assert_eq!(report.results.len(), reqs.len());
+            report.results.into_iter().map(|r| (r.id, r.tokens)).collect()
+        };
+        assert_eq!(run(1), run(3));
     });
 }
 

@@ -1,0 +1,179 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate, vendored so the
+//! workspace builds fully offline.  It implements exactly the subset the
+//! `racam` crate uses:
+//!
+//! * [`Error`] — an opaque error value convertible from any
+//!   `std::error::Error + Send + Sync + 'static` (so `?` works on `io::Error`,
+//!   parse errors, the in-tree `JsonError`, …);
+//! * [`Result<T>`] with the `Error` default;
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros (format-string style);
+//! * the [`Context`] extension trait (`.context(..)` / `.with_context(..)`)
+//!   on both `Result` and `Option`.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error` itself — that is what keeps the blanket `From`
+//! conversion coherent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Opaque error: a message plus an optional wrapped source error.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Prepend context, `anyhow`-style (`context: original message`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The root cause, when this error wraps one.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            // `{:#}` walks the cause chain below the wrapped error's own
+            // message (which `msg` already contains).
+            let mut cause = self.source.as_ref().and_then(|e| e.source());
+            while let Some(c) = cause {
+                write!(f, ": {c}")?;
+                cause = c.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.source.as_ref().and_then(|e| e.source());
+        while let Some(c) = cause {
+            write!(f, "\ncaused by: {c}")?;
+            cause = c.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse()?; // std error converts via the blanket From
+        ensure!(n < 100, "{n} is too large");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").is_err());
+        assert_eq!(parse("400").unwrap_err().to_string(), "400 is too large");
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f() -> Result<()> {
+            bail!("bad value '{}'", 7)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "bad value '7'");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        let e = r.context("reading cache").unwrap_err();
+        assert_eq!(e.to_string(), "reading cache: boom");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
