@@ -59,7 +59,7 @@ fn main() -> racam::Result<()> {
     ];
     let new_tokens = 32;
     for (id, prompt) in prompts.iter().enumerate() {
-        server.submit(Request { id: id as u64, prompt: prompt.clone(), max_new_tokens: new_tokens });
+        server.submit(Request::new(id as u64, prompt.clone(), new_tokens));
     }
 
     let t0 = std::time::Instant::now();

@@ -10,12 +10,14 @@ pub mod json;
 mod periph;
 mod presets;
 mod timing;
+mod traffic;
 mod workload;
 
 pub use dram::DramConfig;
 pub use periph::PeriphConfig;
 pub use presets::*;
 pub use timing::TimingParams;
+pub use traffic::{ArrivalProcess, LengthDist, TrafficSpec};
 pub use workload::{LlmSpec, MatmulShape, Precision, Scenario, Stage};
 
 

@@ -105,6 +105,34 @@ pub fn scale_capacity(hw: &HwConfig, factor: u32) -> HwConfig {
     hw
 }
 
+/// Partition the DRAM channels of `hw` across `shards` worker shards so
+/// each shard's simulated clock reflects only its own share of the memory
+/// bandwidth (the multi-worker coordinator's honest-capacity split).
+///
+/// Channels divide as evenly as possible, remainder going to the
+/// lowest-indexed shards, so the aggregate capacity/bandwidth across all
+/// shards equals the original config exactly.  Returns `None` when there
+/// are more shards than channels (no non-empty partition exists); callers
+/// fall back to sharing the full config.
+pub fn partition_channels(hw: &HwConfig, shards: usize) -> Option<Vec<HwConfig>> {
+    assert!(shards >= 1, "cannot partition across zero shards");
+    let channels = hw.dram.channels as usize;
+    if shards > channels {
+        return None;
+    }
+    let base = channels / shards;
+    let rem = channels % shards;
+    Some(
+        (0..shards)
+            .map(|i| {
+                let mut part = hw.clone();
+                part.dram.channels = (base + usize::from(i < rem)) as u32;
+                part
+            })
+            .collect(),
+    )
+}
+
 // ---------------------------------------------------------------------------
 // LLM presets (paper Table 3)
 // ---------------------------------------------------------------------------
@@ -199,5 +227,38 @@ mod tests {
     #[test]
     fn four_paper_models() {
         assert_eq!(paper_models().len(), 4);
+    }
+
+    #[test]
+    fn channel_partition_conserves_aggregate_capacity() {
+        // Satellite acceptance: N-shard aggregate capacity == 1-shard capacity.
+        let hw = racam_paper();
+        for shards in [1usize, 2, 3, 5, 8] {
+            let parts = partition_channels(&hw, shards).unwrap();
+            assert_eq!(parts.len(), shards);
+            let agg_capacity: u64 = parts.iter().map(|p| p.capacity_bytes()).sum();
+            assert_eq!(agg_capacity, hw.capacity_bytes(), "{shards} shards");
+            let agg_bw: f64 = parts.iter().map(|p| p.dram.total_bw_bytes()).sum();
+            assert!((agg_bw - hw.dram.total_bw_bytes()).abs() < 1.0, "{shards} shards");
+            let agg_pes: u64 = parts.iter().map(|p| p.total_pes()).sum();
+            assert_eq!(agg_pes, hw.total_pes());
+            for p in &parts {
+                p.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn channel_partition_gives_remainder_to_low_shards() {
+        let parts = partition_channels(&racam_paper(), 3).unwrap();
+        let counts: Vec<u32> = parts.iter().map(|p| p.dram.channels).collect();
+        assert_eq!(counts, vec![3, 3, 2]);
+    }
+
+    #[test]
+    fn channel_partition_refuses_oversubscription() {
+        // More shards than channels: no honest partition exists.
+        assert!(partition_channels(&racam_tiny(), 2).is_none());
+        assert!(partition_channels(&racam_paper(), 9).is_none());
     }
 }

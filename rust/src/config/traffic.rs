@@ -1,0 +1,309 @@
+//! Open-loop traffic specification: arrival process, length distributions,
+//! and SLO deadline for a serving run (consumed by [`crate::traffic`]).
+//!
+//! A [`TrafficSpec`] is declarative — the actual request stream is
+//! materialized by [`crate::traffic::generate`], deterministically from the
+//! seed.  Specs are JSON-loadable like [`super::HwConfig`] so a serving
+//! scenario can be described in a file next to the hardware config.
+
+use super::json::{self, JsonError, Value};
+use super::Scenario;
+
+/// Request arrival process on the simulated clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson process: i.i.d. exponential inter-arrival gaps.
+    Poisson { rate_per_s: f64 },
+    /// Bursts of `burst` back-to-back requests arriving at Poisson epochs;
+    /// the epoch rate is `rate_per_s / burst` so the *mean* request rate
+    /// stays `rate_per_s` while the instantaneous load spikes.
+    Bursty { rate_per_s: f64, burst: u32 },
+}
+
+impl ArrivalProcess {
+    /// Mean request rate in requests per second.
+    pub fn rate_per_s(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_per_s } => *rate_per_s,
+            ArrivalProcess::Bursty { rate_per_s, .. } => *rate_per_s,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalProcess::Poisson { rate_per_s } => format!("poisson({rate_per_s}/s)"),
+            ArrivalProcess::Bursty { rate_per_s, burst } => {
+                format!("bursty({rate_per_s}/s x{burst})")
+            }
+        }
+    }
+}
+
+/// Token-length distribution for prompts or outputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LengthDist {
+    /// Every request has exactly this many tokens.
+    Fixed(u64),
+    /// Uniform over `[lo, hi]` inclusive.
+    Uniform { lo: u64, hi: u64 },
+    /// Discretized lognormal-ish: `round(median · exp(sigma · N(0,1)))`,
+    /// clamped to `[1, cap]` — the heavy right tail of real prompt-length
+    /// traces without a trace file.
+    LogNormal { median: u64, sigma: f64, cap: u64 },
+}
+
+impl LengthDist {
+    pub fn label(&self) -> String {
+        match self {
+            LengthDist::Fixed(n) => format!("fixed({n})"),
+            LengthDist::Uniform { lo, hi } => format!("uniform({lo}..{hi})"),
+            LengthDist::LogNormal { median, sigma, cap } => {
+                format!("lognormal(med={median},s={sigma},cap={cap})")
+            }
+        }
+    }
+}
+
+/// A complete open-loop workload description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficSpec {
+    /// Generator seed; the request stream is a pure function of the spec.
+    pub seed: u64,
+    /// Number of requests in the stream.
+    pub requests: u64,
+    pub arrival: ArrivalProcess,
+    pub prompt: LengthDist,
+    pub output: LengthDist,
+    /// Optional end-to-end SLO budget (ns past arrival), driving goodput.
+    /// This is the *mean*: the generator spreads per-request budgets
+    /// uniformly over [0.5×, 1.5×] of it, so deadline order differs from
+    /// arrival order and deadline-aware schedulers (EDF) have something
+    /// real to reorder — a constant budget would make EDF degenerate to
+    /// FCFS exactly.
+    pub deadline_ns: Option<u64>,
+}
+
+impl TrafficSpec {
+    /// A spec matching one of the paper's §5.3 inference scenarios: fixed
+    /// prompt/output lengths from the preset, Poisson arrivals at `rate`.
+    pub fn for_scenario(sc: &Scenario, rate_per_s: f64, requests: u64, seed: u64) -> TrafficSpec {
+        TrafficSpec {
+            seed,
+            requests,
+            arrival: ArrivalProcess::Poisson { rate_per_s },
+            prompt: LengthDist::Fixed(sc.prompt_tokens),
+            output: LengthDist::Fixed(sc.output_tokens),
+            deadline_ns: None,
+        }
+    }
+
+    pub fn from_json(s: &str) -> crate::Result<Self> {
+        let v = json::parse(s).map_err(anyhow::Error::from)?;
+        let spec = Self::from_value(&v).map_err(anyhow::Error::from)?;
+        spec.validate().map_err(|e| anyhow::anyhow!("invalid traffic spec: {e}"))?;
+        Ok(spec)
+    }
+
+    /// Range checks: loading a spec that would panic the generator (zero
+    /// rate) or silently degenerate (inverted uniform bounds) is an error.
+    pub fn validate(&self) -> Result<(), String> {
+        let check_rate = |r: f64| -> Result<(), String> {
+            if r.is_finite() && r > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("arrival rate must be positive and finite, got {r}"))
+            }
+        };
+        match self.arrival {
+            ArrivalProcess::Poisson { rate_per_s } => check_rate(rate_per_s)?,
+            ArrivalProcess::Bursty { rate_per_s, burst } => {
+                check_rate(rate_per_s)?;
+                if burst == 0 {
+                    return Err("burst size must be at least 1".into());
+                }
+            }
+        }
+        for (name, dist) in [("prompt", &self.prompt), ("output", &self.output)] {
+            match dist {
+                LengthDist::Fixed(_) => {}
+                LengthDist::Uniform { lo, hi } => {
+                    if lo > hi {
+                        return Err(format!("{name}: uniform lo {lo} > hi {hi}"));
+                    }
+                }
+                LengthDist::LogNormal { median, sigma, cap } => {
+                    if *median == 0 || *cap == 0 {
+                        return Err(format!("{name}: lognormal median/cap must be >= 1"));
+                    }
+                    if !sigma.is_finite() || *sigma < 0.0 {
+                        return Err(format!("{name}: lognormal sigma must be finite and >= 0"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_value().pretty()
+    }
+
+    fn arrival_to_value(a: &ArrivalProcess) -> Value {
+        match a {
+            ArrivalProcess::Poisson { rate_per_s } => Value::obj(vec![
+                ("kind", Value::Str("poisson".into())),
+                ("rate_per_s", Value::Num(*rate_per_s)),
+            ]),
+            ArrivalProcess::Bursty { rate_per_s, burst } => Value::obj(vec![
+                ("kind", Value::Str("bursty".into())),
+                ("rate_per_s", Value::Num(*rate_per_s)),
+                ("burst", Value::Num(*burst as f64)),
+            ]),
+        }
+    }
+
+    fn arrival_from_value(v: &Value) -> Result<ArrivalProcess, JsonError> {
+        match v.get("kind")?.as_str()? {
+            "poisson" => {
+                Ok(ArrivalProcess::Poisson { rate_per_s: v.get("rate_per_s")?.as_f64()? })
+            }
+            "bursty" => Ok(ArrivalProcess::Bursty {
+                rate_per_s: v.get("rate_per_s")?.as_f64()?,
+                burst: v.get("burst")?.as_u32()?,
+            }),
+            other => Err(JsonError(format!("unknown arrival kind '{other}'"))),
+        }
+    }
+
+    fn dist_to_value(d: &LengthDist) -> Value {
+        match d {
+            LengthDist::Fixed(n) => Value::obj(vec![
+                ("kind", Value::Str("fixed".into())),
+                ("tokens", Value::Num(*n as f64)),
+            ]),
+            LengthDist::Uniform { lo, hi } => Value::obj(vec![
+                ("kind", Value::Str("uniform".into())),
+                ("lo", Value::Num(*lo as f64)),
+                ("hi", Value::Num(*hi as f64)),
+            ]),
+            LengthDist::LogNormal { median, sigma, cap } => Value::obj(vec![
+                ("kind", Value::Str("lognormal".into())),
+                ("median", Value::Num(*median as f64)),
+                ("sigma", Value::Num(*sigma)),
+                ("cap", Value::Num(*cap as f64)),
+            ]),
+        }
+    }
+
+    fn dist_from_value(v: &Value) -> Result<LengthDist, JsonError> {
+        match v.get("kind")?.as_str()? {
+            "fixed" => Ok(LengthDist::Fixed(v.get("tokens")?.as_u32()? as u64)),
+            "uniform" => Ok(LengthDist::Uniform {
+                lo: v.get("lo")?.as_u32()? as u64,
+                hi: v.get("hi")?.as_u32()? as u64,
+            }),
+            "lognormal" => Ok(LengthDist::LogNormal {
+                median: v.get("median")?.as_u32()? as u64,
+                sigma: v.get("sigma")?.as_f64()?,
+                cap: v.get("cap")?.as_u32()? as u64,
+            }),
+            other => Err(JsonError(format!("unknown length distribution '{other}'"))),
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        let mut pairs = vec![
+            ("seed", Value::Num(self.seed as f64)),
+            ("requests", Value::Num(self.requests as f64)),
+            ("arrival", Self::arrival_to_value(&self.arrival)),
+            ("prompt", Self::dist_to_value(&self.prompt)),
+            ("output", Self::dist_to_value(&self.output)),
+        ];
+        if let Some(d) = self.deadline_ns {
+            pairs.push(("deadline_ms", Value::Num(d as f64 / 1e6)));
+        }
+        Value::obj(pairs)
+    }
+
+    fn from_value(v: &Value) -> Result<Self, JsonError> {
+        let deadline_ns = match v.get("deadline_ms") {
+            Ok(d) => Some((d.as_f64()? * 1e6).round() as u64),
+            Err(_) => None,
+        };
+        Ok(TrafficSpec {
+            seed: v.get("seed")?.as_f64()? as u64,
+            requests: v.get("requests")?.as_f64()? as u64,
+            arrival: Self::arrival_from_value(v.get("arrival")?)?,
+            prompt: Self::dist_from_value(v.get("prompt")?)?,
+            output: Self::dist_from_value(v.get("output")?)?,
+            deadline_ns,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = TrafficSpec {
+            seed: 99,
+            requests: 128,
+            arrival: ArrivalProcess::Bursty { rate_per_s: 250.0, burst: 8 },
+            prompt: LengthDist::LogNormal { median: 512, sigma: 0.7, cap: 8192 },
+            output: LengthDist::Uniform { lo: 16, hi: 256 },
+            deadline_ns: Some(250_000_000),
+        };
+        let back = TrafficSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn json_roundtrip_without_deadline() {
+        let spec = TrafficSpec::for_scenario(&Scenario::CODE_GENERATION, 100.0, 32, 7);
+        assert_eq!(spec.prompt, LengthDist::Fixed(1024));
+        assert_eq!(spec.output, LengthDist::Fixed(4096));
+        let back = TrafficSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+        assert_eq!(back.deadline_ns, None);
+    }
+
+    #[test]
+    fn unknown_kinds_error() {
+        let bad = r#"{"seed": 1, "requests": 2,
+            "arrival": {"kind": "sine", "rate_per_s": 5},
+            "prompt": {"kind": "fixed", "tokens": 4},
+            "output": {"kind": "fixed", "tokens": 4}}"#;
+        assert!(TrafficSpec::from_json(bad).is_err());
+    }
+
+    #[test]
+    fn invalid_specs_fail_to_load() {
+        let base = TrafficSpec::for_scenario(&Scenario::CODE_GENERATION, 100.0, 8, 1);
+
+        let mut zero_rate = base.clone();
+        zero_rate.arrival = ArrivalProcess::Poisson { rate_per_s: 0.0 };
+        assert!(zero_rate.validate().is_err());
+        assert!(TrafficSpec::from_json(&zero_rate.to_json()).is_err());
+
+        let mut inverted = base.clone();
+        inverted.prompt = LengthDist::Uniform { lo: 100, hi: 10 };
+        assert!(inverted.validate().unwrap_err().contains("lo 100 > hi 10"));
+
+        let mut zero_burst = base.clone();
+        zero_burst.arrival = ArrivalProcess::Bursty { rate_per_s: 10.0, burst: 0 };
+        assert!(zero_burst.validate().is_err());
+
+        let mut bad_sigma = base;
+        bad_sigma.output = LengthDist::LogNormal { median: 8, sigma: f64::NAN, cap: 64 };
+        assert!(bad_sigma.validate().is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(ArrivalProcess::Poisson { rate_per_s: 10.0 }.label(), "poisson(10/s)");
+        assert_eq!(LengthDist::Fixed(8).label(), "fixed(8)");
+        assert!(ArrivalProcess::Bursty { rate_per_s: 8.0, burst: 4 }.rate_per_s() == 8.0);
+    }
+}

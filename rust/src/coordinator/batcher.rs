@@ -7,6 +7,20 @@ use super::scheduler::Scheduler;
 use super::server::Request;
 use std::collections::VecDeque;
 
+/// Token-count granularity shared by every consumer that buckets by
+/// sequence length: the server's per-context decode-cost cache, its
+/// prompt-bucketed prefill cache, and the length-bucketed scheduler.  One
+/// public constant so policies and caches agree on boundaries instead of
+/// duplicating a magic number.
+pub const BUCKET_TOKENS: u64 = 256;
+
+/// The bucket boundary a token count falls under: the smallest multiple of
+/// [`BUCKET_TOKENS`] at or above `tokens` (minimum one bucket, so empty
+/// prompts still price a non-degenerate kernel set).
+pub fn ctx_bucket(tokens: u64) -> u64 {
+    tokens.max(1).div_ceil(BUCKET_TOKENS) * BUCKET_TOKENS
+}
+
 /// A scheduled batch of request ids.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Batch {
@@ -62,7 +76,16 @@ mod tests {
     use crate::coordinator::server::Request;
 
     fn req(id: u64) -> Request {
-        Request { id, prompt: vec![1, 2], max_new_tokens: 4 }
+        Request::new(id, vec![1, 2], 4)
+    }
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(ctx_bucket(0), BUCKET_TOKENS);
+        assert_eq!(ctx_bucket(1), BUCKET_TOKENS);
+        assert_eq!(ctx_bucket(BUCKET_TOKENS), BUCKET_TOKENS);
+        assert_eq!(ctx_bucket(BUCKET_TOKENS + 1), 2 * BUCKET_TOKENS);
+        assert_eq!(ctx_bucket(1000), 4 * BUCKET_TOKENS);
     }
 
     #[test]

@@ -6,12 +6,16 @@
 //! the RACAM timing pipeline (the shared
 //! [`MappingService`](crate::mapping::MappingService) over the paper's
 //! hardware config), and drives batched requests token by token, reporting
-//! real generated tokens alongside simulated RACAM latencies.
+//! real generated tokens alongside simulated RACAM latencies on a
+//! per-shard simulated clock.
 //!
-//! [`Coordinator`] runs N such shards concurrently against one shared
-//! mapping service — the multi-worker serving configuration — with a
-//! pluggable admission [`Scheduler`] (FCFS today) and a merged
+//! [`Coordinator`] runs N such shards concurrently — the multi-worker
+//! serving configuration — with per-shard DRAM channel partitioning, a
+//! pluggable admission [`Scheduler`] ([`FcfsBatcher`], [`LengthBucketed`],
+//! [`EdfScheduler`]), live mid-run request [`Intake`], and a merged
 //! [`ServerReport`] carrying per-shard utilization ([`ShardStats`]).
+//! Open-loop request streams and SLO-graded summaries over these reports
+//! live in [`crate::traffic`].
 
 mod batcher;
 mod engine;
@@ -19,10 +23,10 @@ mod multi;
 mod scheduler;
 mod server;
 
-pub use batcher::{Batch, FcfsBatcher};
+pub use batcher::{ctx_bucket, Batch, FcfsBatcher, BUCKET_TOKENS};
 #[cfg(feature = "pjrt")]
 pub use engine::HloDecodeEngine;
 pub use engine::{SyntheticEngine, TokenEngine};
-pub use multi::Coordinator;
-pub use scheduler::Scheduler;
+pub use multi::{Coordinator, Intake};
+pub use scheduler::{EdfScheduler, LengthBucketed, Scheduler};
 pub use server::{Request, RequestResult, Server, ServerReport, ShardStats};

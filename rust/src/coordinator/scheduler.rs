@@ -1,16 +1,31 @@
-//! Admission scheduling policy for the serving loop.
+//! Admission scheduling policies for the serving loop.
 //!
 //! A [`Scheduler`] owns the pending-request queue of one worker shard and
 //! decides which requests fill freed batch slots between decode
-//! iterations.  [`super::FcfsBatcher`] is the first-come-first-served
-//! implementation (the paper's setting); the trait exists so priority,
-//! deadline-aware or length-bucketed policies plug in without touching the
-//! server loop.
+//! iterations.  Three policies ship today:
+//!
+//! * [`super::FcfsBatcher`] — first-come-first-served (the paper's
+//!   setting).
+//! * [`LengthBucketed`] — groups pending requests by prompt-length bucket
+//!   (the [`super::batcher::ctx_bucket`] boundaries shared with the
+//!   server's cost caches) and admits from one bucket at a time, so batch
+//!   members have similar lengths and the lockstep decode iteration is not
+//!   gated by one long-context straggler.
+//! * [`EdfScheduler`] — earliest-deadline-first over
+//!   [`Request::deadline_ns`]; requests without a deadline run last.
+//!
+//! Time-based *visibility* (a request arriving later on the simulated
+//! clock) is handled by the server's future-arrival queue, not here: a
+//! scheduler only ever holds requests that have already arrived, so every
+//! policy can honour the no-withholding contract below.
 
+use super::batcher::ctx_bucket;
 use super::server::Request;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 pub trait Scheduler: Send {
-    /// Enqueue a request.
+    /// Enqueue a request (already arrived on the simulated clock).
     fn submit(&mut self, req: Request);
 
     /// Requests waiting for admission.
@@ -21,10 +36,193 @@ pub trait Scheduler: Send {
     ///
     /// **Contract:** when `slots > 0` and `pending() > 0`, at least one
     /// request must be returned.  `Server::run_to_completion` drains the
-    /// queue in a loop with no clock, so a policy that withholds queued
-    /// work (e.g. waiting on a deadline) would otherwise spin forever —
-    /// the server detects a withholding scheduler and errors out.
-    /// Time-based admission belongs in the async intake planned on the
-    /// ROADMAP, not in this synchronous drain.
+    /// queue whenever the batch is empty, so a policy that withholds
+    /// queued work would stall the clock — the server detects a
+    /// withholding scheduler and errors out.
     fn next_batch(&mut self, slots: usize) -> Vec<Request>;
+}
+
+/// Length-bucketed admission: pending requests are grouped by the
+/// [`ctx_bucket`] of their prompt length, and each `next_batch` call
+/// drains from the single bucket whose head request is oldest — batches
+/// stay length-homogeneous while no bucket starves (the oldest head wins,
+/// so every bucket eventually reaches the front).
+#[derive(Debug, Default)]
+pub struct LengthBucketed {
+    buckets: BTreeMap<u64, VecDeque<(u64, Request)>>,
+    pending: usize,
+    seq: u64,
+}
+
+impl LengthBucketed {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket boundaries currently holding pending requests (for tests
+    /// and introspection).
+    pub fn occupied_buckets(&self) -> Vec<u64> {
+        self.buckets.iter().filter(|(_, q)| !q.is_empty()).map(|(b, _)| *b).collect()
+    }
+}
+
+impl Scheduler for LengthBucketed {
+    fn submit(&mut self, req: Request) {
+        let bucket = ctx_bucket(req.prompt.len() as u64);
+        self.buckets.entry(bucket).or_default().push_back((self.seq, req));
+        self.seq += 1;
+        self.pending += 1;
+    }
+
+    fn pending(&self) -> usize {
+        self.pending
+    }
+
+    fn next_batch(&mut self, slots: usize) -> Vec<Request> {
+        if slots == 0 || self.pending == 0 {
+            return Vec::new();
+        }
+        // The bucket whose head request has waited longest.
+        let bucket = self
+            .buckets
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .min_by_key(|(_, q)| q.front().expect("non-empty").0)
+            .map(|(b, _)| *b)
+            .expect("pending > 0 implies a non-empty bucket");
+        let queue = self.buckets.get_mut(&bucket).expect("bucket exists");
+        let take = slots.min(queue.len());
+        let out: Vec<Request> = queue.drain(..take).map(|(_, r)| r).collect();
+        if queue.is_empty() {
+            self.buckets.remove(&bucket);
+        }
+        self.pending -= out.len();
+        out
+    }
+}
+
+/// Earliest-deadline-first entry; ordered by (deadline, submission seq) so
+/// ties and deadline-free requests resolve deterministically.
+#[derive(Debug, PartialEq, Eq)]
+struct EdfEntry {
+    deadline_ns: u64,
+    seq: u64,
+    req: Request,
+}
+
+impl Ord for EdfEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.deadline_ns, self.seq).cmp(&(other.deadline_ns, other.seq))
+    }
+}
+
+impl PartialOrd for EdfEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deadline-aware admission: the pending request with the earliest
+/// [`Request::deadline_ns`] is admitted first; requests without a deadline
+/// sort after every deadlined one (treated as deadline = `u64::MAX`), and
+/// FCFS order breaks ties.
+#[derive(Debug, Default)]
+pub struct EdfScheduler {
+    heap: BinaryHeap<Reverse<EdfEntry>>,
+    seq: u64,
+}
+
+impl EdfScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for EdfScheduler {
+    fn submit(&mut self, req: Request) {
+        let deadline_ns = req.deadline_ns.unwrap_or(u64::MAX);
+        self.heap.push(Reverse(EdfEntry { deadline_ns, seq: self.seq, req }));
+        self.seq += 1;
+    }
+
+    fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn next_batch(&mut self, slots: usize) -> Vec<Request> {
+        let take = slots.min(self.heap.len());
+        (0..take).map(|_| self.heap.pop().expect("len checked").0.req).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BUCKET_TOKENS;
+
+    fn req(id: u64, prompt_len: usize) -> Request {
+        Request::new(id, vec![1; prompt_len], 4)
+    }
+
+    #[test]
+    fn length_bucketed_groups_similar_lengths() {
+        let mut s = LengthBucketed::new();
+        s.submit(req(0, 4)); // bucket 256
+        s.submit(req(1, 400)); // bucket 512
+        s.submit(req(2, 8)); // bucket 256
+        s.submit(req(3, 500)); // bucket 512
+        assert_eq!(s.occupied_buckets(), vec![BUCKET_TOKENS, 2 * BUCKET_TOKENS]);
+
+        // Oldest head is request 0 (bucket 256): the whole first batch
+        // comes from that bucket even though 1 arrived before 2.
+        let first = s.next_batch(2);
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        let second = s.next_batch(2);
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn length_bucketed_never_starves_a_bucket() {
+        let mut s = LengthBucketed::new();
+        s.submit(req(0, 300)); // long bucket, oldest
+        for id in 1..5 {
+            s.submit(req(id, 4)); // stream of short requests
+        }
+        // The long request's bucket has the oldest head, so it goes first
+        // despite the short queue being deeper.
+        let batch = s.next_batch(2);
+        assert_eq!(batch[0].id, 0);
+    }
+
+    #[test]
+    fn length_bucketed_honours_contract() {
+        let mut s = LengthBucketed::new();
+        s.submit(req(9, 10));
+        assert!(s.next_batch(0).is_empty());
+        assert_eq!(s.next_batch(4).len(), 1, "pending work + free slots must admit");
+        assert!(s.next_batch(4).is_empty());
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_then_fcfs() {
+        let mut s = EdfScheduler::new();
+        s.submit(req(0, 2)); // no deadline → last
+        s.submit(Request::new(1, vec![1], 4).with_deadline(500));
+        s.submit(Request::new(2, vec![1], 4).with_deadline(100));
+        s.submit(Request::new(3, vec![1], 4).with_deadline(500));
+        let order: Vec<u64> = s.next_batch(4).iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![2, 1, 3, 0]);
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn edf_respects_slots() {
+        let mut s = EdfScheduler::new();
+        for id in 0..5 {
+            s.submit(Request::new(id, vec![1], 1).with_deadline(1000 - id));
+        }
+        assert_eq!(s.next_batch(2).len(), 2);
+        assert_eq!(s.pending(), 3);
+    }
 }

@@ -5,19 +5,42 @@
 //! A [`Server`] is one worker shard: it owns a token engine, a
 //! [`RacamSystem`] handle (typically sharing its [`MappingService`] with
 //! every other shard — see [`super::Coordinator`]), a pluggable admission
-//! [`Scheduler`] (FCFS by default), and a persistent per-context-bucket
-//! decode-cost cache so repeated runs never re-price a bucket.
+//! [`Scheduler`] (FCFS by default), and persistent per-bucket prefill and
+//! decode cost caches so repeated runs never re-price a bucket.
+//!
+//! ## The simulated clock and open-loop traffic
+//!
+//! Each run drives a per-shard simulated clock forward: admitting a
+//! request charges its (bucketed) prefill cost, and each decode iteration
+//! charges the slowest batch member's per-token cost (the batch steps in
+//! lockstep).  Requests carry an [`Request::arrival_ns`] on that clock —
+//! a request is invisible to the [`Scheduler`] until the clock reaches its
+//! arrival, which is how the open-loop streams of [`crate::traffic`]
+//! replay: queueing delay emerges from load instead of being assumed.
+//! When the shard is idle and work is pending in the future, the clock
+//! jumps to the next arrival and the gap is accounted as idle time
+//! ([`ShardStats::sim_idle_ns`]).
+//!
+//! ## Async admission
+//!
+//! [`Server::open_intake`] (and [`super::Coordinator::intake`]) return an
+//! mpsc sender; requests sent on it are admitted *mid-run*: the serving
+//! loop drains the channel between decode iterations, and blocks on it
+//! when it would otherwise go idle.  `run_to_completion` returns once all
+//! queued work is done **and** every intake sender has been dropped.
 //!
 //! [`MappingService`]: crate::mapping::MappingService
 
-use super::batcher::FcfsBatcher;
+use super::batcher::{ctx_bucket, FcfsBatcher};
 use super::engine::TokenEngine;
 use super::scheduler::Scheduler;
 use crate::config::LlmSpec;
 use crate::metrics::LatencyBreakdown;
 use crate::workloads::{decode_kernels, prefill_kernels, stage_latency, RacamSystem};
 use crate::Result;
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::mpsc;
 use std::time::Instant;
 
 /// An inference request.
@@ -26,6 +49,33 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
+    /// Arrival time on the shard's simulated clock, ns.  Zero (the
+    /// default) means "present before the run starts"; a positive value
+    /// hides the request from the scheduler until the clock reaches it.
+    pub arrival_ns: u64,
+    /// Optional end-to-end completion deadline on the simulated clock, ns
+    /// (absolute, not relative to arrival).  Consumed by deadline-aware
+    /// schedulers and the SLO goodput accounting in [`crate::traffic::slo`].
+    pub deadline_ns: Option<u64>,
+}
+
+impl Request {
+    /// A request available at clock start with no deadline.
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Request { id, prompt, max_new_tokens, arrival_ns: 0, deadline_ns: None }
+    }
+
+    /// Set the simulated arrival time (open-loop traffic).
+    pub fn at(mut self, arrival_ns: u64) -> Self {
+        self.arrival_ns = arrival_ns;
+        self
+    }
+
+    /// Set an absolute completion deadline on the simulated clock.
+    pub fn with_deadline(mut self, deadline_ns: u64) -> Self {
+        self.deadline_ns = Some(deadline_ns);
+        self
+    }
 }
 
 /// Completed request with its generation and accounting.
@@ -33,12 +83,48 @@ pub struct Request {
 pub struct RequestResult {
     pub id: u64,
     pub tokens: Vec<u32>,
-    /// Simulated RACAM time to first token (prefill), ns.
+    /// Simulated RACAM time to first token (prefill cost alone, excluding
+    /// queueing), ns.
     pub sim_ttft_ns: f64,
-    /// Simulated RACAM end-to-end latency, ns.
+    /// Simulated RACAM service time attributed to this request (prefill +
+    /// its own per-token decode costs), ns.
     pub sim_total_ns: f64,
     /// Host wall-clock spent executing this request's share, ns.
     pub wall_ns: f64,
+    /// Arrival time on the shard's simulated clock, ns.
+    pub arrival_ns: f64,
+    /// Absolute simulated-clock time the first token was ready (includes
+    /// queueing delay; `- arrival_ns` is the serving-level TTFT).
+    pub sim_first_token_at_ns: f64,
+    /// Absolute simulated-clock completion time.
+    pub sim_finish_at_ns: f64,
+    /// Echo of the request's deadline, for goodput accounting.
+    pub deadline_ns: Option<f64>,
+}
+
+impl RequestResult {
+    /// Serving-level time-to-first-token: queueing delay + prefill.
+    pub fn ttft_ns(&self) -> f64 {
+        self.sim_first_token_at_ns - self.arrival_ns
+    }
+
+    /// Serving-level end-to-end latency (arrival to completion).
+    pub fn e2e_ns(&self) -> f64 {
+        self.sim_finish_at_ns - self.arrival_ns
+    }
+
+    /// Mean time per output token after the first.
+    pub fn tpot_ns(&self) -> f64 {
+        if self.tokens.len() < 2 {
+            return 0.0;
+        }
+        (self.sim_finish_at_ns - self.sim_first_token_at_ns) / (self.tokens.len() - 1) as f64
+    }
+
+    /// Whether this request met its deadline (no deadline counts as met).
+    pub fn met_deadline(&self) -> bool {
+        self.deadline_ns.map_or(true, |d| self.sim_finish_at_ns <= d)
+    }
 }
 
 /// Per-shard utilization accounting (one entry per worker).
@@ -49,15 +135,29 @@ pub struct ShardStats {
     pub requests: usize,
     /// Tokens this shard generated.
     pub tokens: usize,
-    /// Summed simulated RACAM time of this shard's requests, ns.
+    /// Summed simulated RACAM service time of this shard's requests, ns.
     pub sim_ns: f64,
     /// Host wall-clock of this shard's serving loop, ns.
     pub wall_ns: f64,
+    /// Final value of this shard's simulated clock (its makespan), ns.
+    pub sim_clock_ns: f64,
+    /// Simulated time this shard sat idle waiting for arrivals, ns.
+    pub sim_idle_ns: f64,
     /// Decode iterations executed.
     pub decode_iterations: usize,
     /// Mean fraction of batch slots occupied across decode iterations
     /// (1.0 = the shard decoded at full batch the whole run).
     pub occupancy: f64,
+}
+
+impl ShardStats {
+    /// Fraction of the shard's simulated makespan spent serving (vs idle).
+    pub fn utilization(&self) -> f64 {
+        if self.sim_clock_ns <= 0.0 {
+            return 0.0;
+        }
+        (self.sim_clock_ns - self.sim_idle_ns) / self.sim_clock_ns
+    }
 }
 
 /// Aggregate serving report (single shard or merged across shards).
@@ -74,11 +174,10 @@ pub struct ServerReport {
 
 impl ServerReport {
     /// Merge per-shard reports into one, re-sorting results by request id.
-    /// Shards run concurrently (each modeling its own RACAM device until
-    /// per-shard channel partitioning lands), so both clocks use the
-    /// makespan — the slowest shard — rather than a sum: `wall_ns` is the
+    /// Shards run concurrently, so both clocks use the makespan — the
+    /// slowest shard — rather than a sum: `wall_ns` is the
     /// coordinator-level wall clock, and simulated throughput divides by
-    /// the largest per-shard simulated time.
+    /// the largest per-shard simulated clock.
     pub fn merge(reports: Vec<ServerReport>, wall_ns: f64) -> ServerReport {
         let mut results: Vec<RequestResult> = Vec::new();
         let mut shards: Vec<ShardStats> = Vec::new();
@@ -89,7 +188,10 @@ impl ServerReport {
         results.sort_by_key(|r| r.id);
         shards.sort_by_key(|s| s.shard);
         let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
-        let sim_makespan_ns = shards.iter().map(|s| s.sim_ns).fold(0.0f64, f64::max);
+        let sim_makespan_ns = shards
+            .iter()
+            .map(|s| if s.sim_clock_ns > 0.0 { s.sim_clock_ns } else { s.sim_ns })
+            .fold(0.0f64, f64::max);
         ServerReport {
             sim_tokens_per_s: total_tokens as f64 / (sim_makespan_ns / 1e9).max(f64::MIN_POSITIVE),
             wall_tokens_per_s: total_tokens as f64 / (wall_ns / 1e9).max(f64::MIN_POSITIVE),
@@ -97,6 +199,26 @@ impl ServerReport {
             results,
             shards,
         }
+    }
+}
+
+/// Future-arrival queue entry: min-heap by (arrival, id) for determinism.
+#[derive(Debug, PartialEq, Eq)]
+struct FutureReq {
+    arrival_ns: u64,
+    id: u64,
+    req: Request,
+}
+
+impl Ord for FutureReq {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.arrival_ns, self.id).cmp(&(other.arrival_ns, other.id))
+    }
+}
+
+impl PartialOrd for FutureReq {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
     }
 }
 
@@ -108,9 +230,17 @@ pub struct Server<E: TokenEngine, S: Scheduler = FcfsBatcher> {
     scheduler: S,
     max_batch: usize,
     shard_id: usize,
+    /// Requests whose simulated arrival time has not been reached yet.
+    future: BinaryHeap<Reverse<FutureReq>>,
+    /// Live intake: requests sent here are admitted mid-run.
+    intake: Option<mpsc::Receiver<Request>>,
     /// Simulated per-token decode cost per context bucket, kept across
     /// runs so repeated runs (and long-lived shards) reuse priced buckets.
     decode_cache: HashMap<u64, LatencyBreakdown>,
+    /// Simulated prefill cost per prompt-length bucket (same granularity
+    /// as the decode cache), so live traffic with many distinct prompt
+    /// lengths prices a bounded number of prefill shapes.
+    prefill_cache: HashMap<u64, LatencyBreakdown>,
 }
 
 struct Running {
@@ -120,6 +250,8 @@ struct Running {
     sim_ns: f64,
     sim_ttft_ns: f64,
     wall_ns: f64,
+    arrival_ns: f64,
+    first_token_at_ns: f64,
 }
 
 impl<E: TokenEngine> Server<E, FcfsBatcher> {
@@ -149,17 +281,36 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             scheduler,
             max_batch,
             shard_id: 0,
+            future: BinaryHeap::new(),
+            intake: None,
             decode_cache: HashMap::new(),
+            prefill_cache: HashMap::new(),
         }
     }
 
+    /// Queue a request.  Requests with a positive [`Request::arrival_ns`]
+    /// stay invisible to the scheduler until the simulated clock reaches
+    /// their arrival.
     pub fn submit(&mut self, req: Request) {
-        self.scheduler.submit(req);
+        if req.arrival_ns > 0 {
+            self.future.push(Reverse(FutureReq { arrival_ns: req.arrival_ns, id: req.id, req }));
+        } else {
+            self.scheduler.submit(req);
+        }
     }
 
-    /// Requests waiting for admission.
+    /// Open (or replace) the live intake channel and return its sender.
+    /// While any sender is alive, `run_to_completion` keeps serving —
+    /// blocking when idle — and only returns after the last sender drops.
+    pub fn open_intake(&mut self) -> mpsc::Sender<Request> {
+        let (tx, rx) = mpsc::channel();
+        self.intake = Some(rx);
+        tx
+    }
+
+    /// Requests waiting for admission (queued now or arriving later).
     pub fn pending(&self) -> usize {
-        self.scheduler.pending()
+        self.scheduler.pending() + self.future.len()
     }
 
     /// Access the simulated-hardware pipeline (e.g. to persist its mapping
@@ -178,25 +329,102 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         self.shard_id = id;
     }
 
-    /// Drain all submitted requests to completion.
+    /// Simulated prefill cost for a prompt length.  The kernel *shape* is
+    /// priced once per [`ctx_bucket`] so live traffic with arbitrary
+    /// prompt lengths triggers a bounded number of mapping searches; the
+    /// bucket cost is then scaled linearly to the actual token count so
+    /// short prompts are not charged a whole bucket's prefill (attention's
+    /// quadratic share makes this a mild overestimate below the boundary,
+    /// never the ~bucket/len inflation of charging the ceiling).
+    fn prefill_cost(&mut self, prompt_len: u64) -> Result<LatencyBreakdown> {
+        let len = prompt_len.max(1);
+        let bucket = ctx_bucket(len);
+        let per_bucket = if let Some(c) = self.prefill_cache.get(&bucket) {
+            *c
+        } else {
+            let cost = stage_latency(&self.racam, &prefill_kernels(&self.spec, bucket))?;
+            self.prefill_cache.insert(bucket, cost);
+            cost
+        };
+        Ok(per_bucket.scaled(len as f64 / bucket as f64))
+    }
+
+    /// Simulated per-token decode cost at a context length, priced once
+    /// per bucket.
+    fn decode_cost(&mut self, ctx: u64) -> Result<LatencyBreakdown> {
+        let bucket = ctx_bucket(ctx);
+        if let Some(c) = self.decode_cache.get(&bucket) {
+            return Ok(*c);
+        }
+        let cost = stage_latency(&self.racam, &decode_kernels(&self.spec, bucket))?;
+        self.decode_cache.insert(bucket, cost);
+        Ok(cost)
+    }
+
+    /// Drain everything currently available on the intake channel without
+    /// blocking.  Live submissions arriving "in the past" of the simulated
+    /// clock are clamped to now — they arrive when received.
+    fn drain_intake(&mut self, sim_now_ns: f64) {
+        // Take the receiver out so `submit` can borrow self mutably.
+        let Some(rx) = self.intake.take() else { return };
+        let mut open = true;
+        loop {
+            match rx.try_recv() {
+                Ok(req) => self.submit(Self::clamp_arrival(req, sim_now_ns)),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        if open {
+            self.intake = Some(rx);
+        }
+    }
+
+    fn clamp_arrival(mut req: Request, sim_now_ns: f64) -> Request {
+        let now = sim_now_ns.ceil() as u64;
+        if req.arrival_ns < now {
+            req.arrival_ns = now;
+        }
+        req
+    }
+
+    /// Move future requests whose arrival time has come into the scheduler.
+    fn release_due(&mut self, sim_now_ns: f64) {
+        while self.future.peek().is_some_and(|r| r.0.arrival_ns as f64 <= sim_now_ns) {
+            let Reverse(f) = self.future.pop().expect("peeked entry");
+            self.scheduler.submit(f.req);
+        }
+    }
+
+    /// Drain all submitted requests to completion; with an open intake,
+    /// keep serving live submissions until every sender is dropped.
     pub fn run_to_completion(&mut self) -> Result<ServerReport> {
         let mut running: Vec<Running> = Vec::new();
         let mut done: Vec<RequestResult> = Vec::new();
         let wall_start = Instant::now();
         let mut decode_iterations = 0usize;
         let mut occupancy_sum = 0.0f64;
+        let mut sim_now_ns = 0.0f64;
+        let mut sim_idle_ns = 0.0f64;
 
         loop {
-            // Admit new work (continuous batching).
+            self.drain_intake(sim_now_ns);
+            self.release_due(sim_now_ns);
+
+            // Admit new work (continuous batching).  Prefill serializes on
+            // the shard: admitting a request advances the simulated clock
+            // by its (bucketed) prefill cost.
             let slots = self.max_batch.saturating_sub(running.len());
             let mut admitted = 0usize;
             for req in self.scheduler.next_batch(slots) {
                 admitted += 1;
                 let t0 = Instant::now();
                 let hidden = self.engine.embed_prompt(&req.prompt);
-                // Simulated prefill cost for this prompt length.
-                let kernels = prefill_kernels(&self.spec, req.prompt.len() as u64);
-                let prefill = stage_latency(&self.racam, &kernels)?;
+                let prefill = self.prefill_cost(req.prompt.len() as u64)?;
+                sim_now_ns += prefill.total_ns();
                 if req.max_new_tokens == 0 {
                     // Nothing to decode: retire immediately (prefill-only).
                     done.push(RequestResult {
@@ -205,6 +433,10 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                         sim_ttft_ns: prefill.total_ns(),
                         sim_total_ns: prefill.total_ns(),
                         wall_ns: t0.elapsed().as_nanos() as f64,
+                        arrival_ns: req.arrival_ns as f64,
+                        sim_first_token_at_ns: sim_now_ns,
+                        sim_finish_at_ns: sim_now_ns,
+                        deadline_ns: req.deadline_ns.map(|d| d as f64),
                     });
                     continue;
                 }
@@ -214,50 +446,78 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                     sim_ns: prefill.total_ns(),
                     sim_ttft_ns: prefill.total_ns(),
                     wall_ns: t0.elapsed().as_nanos() as f64,
+                    arrival_ns: req.arrival_ns as f64,
+                    first_token_at_ns: sim_now_ns,
                     req,
                 });
             }
             if running.is_empty() {
-                if self.scheduler.pending() == 0 {
-                    break;
+                if self.scheduler.pending() > 0 {
+                    if admitted == 0 {
+                        // The scheduler returned nothing while work is
+                        // queued and every batch slot is free: that
+                        // violates the `Scheduler::next_batch` contract
+                        // and would spin this loop forever.
+                        anyhow::bail!(
+                            "scheduler withheld {} queued request(s) with {} free slots",
+                            self.scheduler.pending(),
+                            self.max_batch
+                        );
+                    }
+                    // Everything admitted this round retired at prefill
+                    // (zero-token requests); keep draining the queue.
+                    continue;
                 }
-                if admitted == 0 {
-                    // The scheduler returned nothing while work is queued
-                    // and every batch slot is free: that violates the
-                    // `Scheduler::next_batch` contract and would spin this
-                    // clockless loop forever.
-                    anyhow::bail!(
-                        "scheduler withheld {} queued request(s) with {} free slots",
-                        self.scheduler.pending(),
-                        self.max_batch
-                    );
+                if let Some(r) = self.future.peek() {
+                    // Idle until the next arrival: jump the clock.
+                    let next = r.0.arrival_ns as f64;
+                    if next > sim_now_ns {
+                        sim_idle_ns += next - sim_now_ns;
+                        sim_now_ns = next;
+                    }
+                    continue;
                 }
-                // Everything admitted this round retired at prefill
-                // (zero-token requests); keep draining the queue.
-                continue;
+                if let Some(rx) = self.intake.take() {
+                    // No simulated work left but the intake is open: block
+                    // on the channel (host wall time, not simulated time).
+                    // A disconnect leaves the intake closed (`None`).
+                    if let Ok(req) = rx.recv() {
+                        self.intake = Some(rx);
+                        self.submit(Self::clamp_arrival(req, sim_now_ns));
+                    }
+                    continue;
+                }
+                break;
             }
 
-            // One decode iteration across the batch.
+            // One decode iteration across the batch.  The batch steps in
+            // lockstep, so the shard clock advances by the slowest
+            // member's per-token cost; each member's own service-time
+            // accounting still charges its own bucket.
             decode_iterations += 1;
             occupancy_sum += running.len() as f64 / self.max_batch as f64;
-            for r in &mut running {
+            let mut iteration_ns = 0.0f64;
+            for i in 0..running.len() {
                 let t0 = Instant::now();
-                let (mut next, token) = self.engine.step(&r.hidden)?;
+                let (mut next, token) = self.engine.step(&running[i].hidden)?;
                 self.engine.feed_token(&mut next, token);
+                let r = &mut running[i];
                 r.hidden = next;
                 r.tokens.push(token);
                 r.wall_ns += t0.elapsed().as_nanos() as f64;
 
                 let ctx = r.req.prompt.len() as u64 + r.tokens.len() as u64;
-                // Simulated per-token decode cost (cached per context
-                // bucket of 256 to bound search work; the bucket cache is
-                // server state, so repeated runs reuse it).
-                let bucket = ctx.div_ceil(256) * 256;
-                if !self.decode_cache.contains_key(&bucket) {
-                    let cost = stage_latency(&self.racam, &decode_kernels(&self.spec, bucket))?;
-                    self.decode_cache.insert(bucket, cost);
+                let cost = self.decode_cost(ctx)?.total_ns();
+                running[i].sim_ns += cost;
+                iteration_ns = iteration_ns.max(cost);
+            }
+            sim_now_ns += iteration_ns;
+            for r in &mut running {
+                if r.tokens.len() == 1 {
+                    // First decoded token lands at the end of this
+                    // iteration on the shard clock.
+                    r.first_token_at_ns = sim_now_ns;
                 }
-                r.sim_ns += self.decode_cache[&bucket].total_ns();
             }
 
             // Retire finished requests.
@@ -271,6 +531,10 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                         sim_ttft_ns: r.sim_ttft_ns,
                         sim_total_ns: r.sim_ns,
                         wall_ns: r.wall_ns,
+                        arrival_ns: r.arrival_ns,
+                        sim_first_token_at_ns: r.first_token_at_ns,
+                        sim_finish_at_ns: sim_now_ns,
+                        deadline_ns: r.req.deadline_ns.map(|d| d as f64),
                     });
                 } else {
                     i += 1;
@@ -288,6 +552,8 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             tokens: total_tokens,
             sim_ns,
             wall_ns,
+            sim_clock_ns: sim_now_ns,
+            sim_idle_ns,
             decode_iterations,
             occupancy: if decode_iterations == 0 {
                 0.0
@@ -296,7 +562,7 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             },
         };
         Ok(ServerReport {
-            sim_tokens_per_s: total_tokens as f64 / (sim_ns / 1e9).max(f64::MIN_POSITIVE),
+            sim_tokens_per_s: total_tokens as f64 / (sim_now_ns / 1e9).max(f64::MIN_POSITIVE),
             wall_tokens_per_s: total_tokens as f64 / (wall_ns / 1e9).max(f64::MIN_POSITIVE),
             total_tokens,
             results: done,
@@ -338,7 +604,7 @@ mod tests {
     fn serves_all_requests() {
         let mut s = server(2);
         for id in 0..5 {
-            s.submit(Request { id, prompt: vec![id as u32, 7], max_new_tokens: 6 });
+            s.submit(Request::new(id, vec![id as u32, 7], 6));
         }
         let report = s.run_to_completion().unwrap();
         assert_eq!(report.results.len(), 5);
@@ -347,17 +613,21 @@ mod tests {
             assert_eq!(r.tokens.len(), 6);
             assert!(r.sim_ttft_ns > 0.0);
             assert!(r.sim_total_ns > r.sim_ttft_ns);
+            assert!(r.sim_finish_at_ns > r.sim_first_token_at_ns);
+            assert!(r.e2e_ns() > r.ttft_ns());
         }
         assert_eq!(report.shards.len(), 1);
         assert_eq!(report.shards[0].tokens, 30);
         assert!(report.shards[0].occupancy > 0.0 && report.shards[0].occupancy <= 1.0);
+        assert!(report.shards[0].sim_clock_ns > 0.0);
+        assert_eq!(report.shards[0].sim_idle_ns, 0.0);
     }
 
     #[test]
     fn generation_is_deterministic() {
         let run = |batch| {
             let mut s = server(batch);
-            s.submit(Request { id: 0, prompt: vec![3, 1, 4], max_new_tokens: 8 });
+            s.submit(Request::new(0, vec![3, 1, 4], 8));
             s.run_to_completion().unwrap().results[0].tokens.clone()
         };
         assert_eq!(run(1), run(4));
@@ -366,8 +636,8 @@ mod tests {
     #[test]
     fn longer_prompts_cost_more_simulated_prefill() {
         let mut s = server(1);
-        s.submit(Request { id: 0, prompt: vec![1; 4], max_new_tokens: 1 });
-        s.submit(Request { id: 1, prompt: vec![1; 512], max_new_tokens: 1 });
+        s.submit(Request::new(0, vec![1; 4], 1));
+        s.submit(Request::new(1, vec![1; 512], 1));
         let rep = s.run_to_completion().unwrap();
         assert!(rep.results[1].sim_ttft_ns > rep.results[0].sim_ttft_ns);
     }
@@ -384,10 +654,10 @@ mod tests {
     #[test]
     fn zero_token_requests_retire_at_prefill() {
         let mut s = server(2);
-        s.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 0 });
-        s.submit(Request { id: 1, prompt: vec![3], max_new_tokens: 0 });
-        s.submit(Request { id: 2, prompt: vec![4], max_new_tokens: 0 });
-        s.submit(Request { id: 3, prompt: vec![5, 6], max_new_tokens: 2 });
+        s.submit(Request::new(0, vec![1, 2], 0));
+        s.submit(Request::new(1, vec![3], 0));
+        s.submit(Request::new(2, vec![4], 0));
+        s.submit(Request::new(3, vec![5, 6], 2));
         let rep = s.run_to_completion().unwrap();
         assert_eq!(rep.results.len(), 4);
         assert_eq!(rep.total_tokens, 2);
@@ -395,6 +665,7 @@ mod tests {
             assert!(r.tokens.is_empty(), "req {} must not decode", r.id);
             assert!(r.sim_ttft_ns > 0.0);
             assert_eq!(r.sim_total_ns, r.sim_ttft_ns);
+            assert_eq!(r.sim_finish_at_ns, r.sim_first_token_at_ns);
         }
         assert_eq!(rep.results[3].tokens.len(), 2);
     }
@@ -402,16 +673,73 @@ mod tests {
     #[test]
     fn decode_cache_persists_across_runs() {
         let mut s = server(2);
-        s.submit(Request { id: 0, prompt: vec![5, 6], max_new_tokens: 4 });
+        s.submit(Request::new(0, vec![5, 6], 4));
         s.run_to_completion().unwrap();
         let priced = s.decode_cache_len();
         assert!(priced >= 1, "first run must prime the bucket cache");
         let misses = s.racam().service().misses();
 
         // Same context buckets again: no new buckets, no new searches.
-        s.submit(Request { id: 1, prompt: vec![9, 2], max_new_tokens: 4 });
+        s.submit(Request::new(1, vec![9, 2], 4));
         s.run_to_completion().unwrap();
         assert_eq!(s.decode_cache_len(), priced);
         assert_eq!(s.racam().service().misses(), misses);
+    }
+
+    #[test]
+    fn timed_arrivals_wait_for_the_clock() {
+        // A request arriving far in the simulated future is served after
+        // the clock jumps, and the gap shows up as idle time.
+        let mut s = server(2);
+        s.submit(Request::new(0, vec![1, 2], 2));
+        let late_arrival = 10_000_000_000_000u64; // way past any service time
+        s.submit(Request::new(1, vec![3, 4], 2).at(late_arrival));
+        let rep = s.run_to_completion().unwrap();
+        assert_eq!(rep.results.len(), 2);
+        let late = &rep.results[1];
+        assert_eq!(late.arrival_ns, late_arrival as f64);
+        assert!(late.sim_finish_at_ns > late_arrival as f64);
+        // TTFT excludes the time before arrival.
+        assert!(late.ttft_ns() < late_arrival as f64 / 2.0);
+        assert!(rep.shards[0].sim_idle_ns > 0.0, "clock jump must be idle-accounted");
+        assert!(rep.shards[0].utilization() < 1.0);
+    }
+
+    #[test]
+    fn queueing_delay_shows_in_ttft_not_in_intrinsic_prefill() {
+        // Two requests, batch 1: the second waits for the first, so its
+        // serving TTFT exceeds its intrinsic prefill cost.
+        let mut s = server(1);
+        s.submit(Request::new(0, vec![1, 2], 4));
+        s.submit(Request::new(1, vec![3, 4], 4));
+        let rep = s.run_to_completion().unwrap();
+        let second = &rep.results[1];
+        assert!(second.ttft_ns() > second.sim_ttft_ns * 1.5, "queue wait missing from TTFT");
+    }
+
+    #[test]
+    fn intake_accepts_requests_mid_run() {
+        let mut s = server(2);
+        s.submit(Request::new(0, vec![1, 2], 3));
+        let tx = s.open_intake();
+        let worker = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            tx.send(Request::new(7, vec![9, 9], 3)).unwrap();
+            // Dropping tx closes the intake and lets the run finish.
+        });
+        let rep = s.run_to_completion().unwrap();
+        worker.join().unwrap();
+        assert_eq!(rep.results.len(), 2);
+        assert!(rep.results.iter().any(|r| r.id == 7 && r.tokens.len() == 3));
+    }
+
+    #[test]
+    fn deadline_accounting() {
+        let mut s = server(1);
+        s.submit(Request::new(0, vec![1], 2).with_deadline(u64::MAX));
+        s.submit(Request::new(1, vec![2], 2).with_deadline(1));
+        let rep = s.run_to_completion().unwrap();
+        assert!(rep.results[0].met_deadline());
+        assert!(!rep.results[1].met_deadline());
     }
 }

@@ -13,20 +13,26 @@ mod fig15;
 mod fig16;
 mod fig17;
 mod tables;
+mod traffic;
 
 pub use common::{racam_stage_latency, stage_speedups, SystemSet};
 
+use crate::config::json::Value;
+use crate::config::{racam_paper, Precision};
 use crate::report::Table;
 use crate::Result;
+use std::time::Instant;
 
-/// All experiment ids, in paper order.
+/// All experiment ids, in paper order (extensions last).
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
-    "tab1", "tab4", "tab5", "ext-energy", "ext-reliability", "ext-trace",
+    "tab1", "tab4", "tab5", "ext-energy", "ext-reliability", "ext-trace", "traffic",
 ];
 
-/// Run one experiment; returns its tables (already saved under `results/`).
+/// Run one experiment; returns its tables (already saved under `results/`,
+/// alongside a machine-readable `BENCH_<id>.json` for cross-PR tracking).
 pub fn run(id: &str) -> Result<Vec<Table>> {
+    let wall_start = Instant::now();
     let tables = match id {
         "fig1" => fig01::run(),
         "fig9" => fig09::run_fig9(),
@@ -44,8 +50,10 @@ pub fn run(id: &str) -> Result<Vec<Table>> {
         "ext-energy" => extensions::run_energy(),
         "ext-reliability" => extensions::run_reliability(),
         "ext-trace" => extensions::run_trace(),
+        "traffic" => traffic::run()?,
         other => anyhow::bail!("unknown experiment '{other}' (known: {ALL_IDS:?})"),
     };
+    let wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
     let mut text = String::new();
     let mut csv = String::new();
     for t in &tables {
@@ -56,7 +64,33 @@ pub fn run(id: &str) -> Result<Vec<Table>> {
     }
     crate::report::save(&format!("{id}.txt"), &text)?;
     crate::report::save(&format!("{id}.csv"), &csv)?;
+    crate::report::save(&format!("BENCH_{id}.json"), &bench_json(id, &tables, wall_ms))?;
     Ok(tables)
+}
+
+/// Machine-readable bench artifact: experiment name, the *baseline*
+/// hardware preset of this build (experiments that sweep hardware — e.g.
+/// fig13 — vary from this preset; their tables carry the swept values),
+/// its result tables (the latencies), and the host wall time of the run —
+/// one JSON per experiment so the perf trajectory is diffable across PRs.
+fn bench_json(id: &str, tables: &[Table], wall_ms: f64) -> String {
+    let hw = racam_paper();
+    Value::obj(vec![
+        ("name", Value::Str(id.to_string())),
+        (
+            "config",
+            Value::obj(vec![
+                ("preset", Value::Str("racam_paper".into())),
+                ("channels", Value::Num(hw.dram.channels as f64)),
+                ("ranks", Value::Num(hw.dram.ranks as f64)),
+                ("total_pes", Value::Num(hw.total_pes() as f64)),
+                ("int8_tops", Value::Num(hw.peak_tops(Precision::Int8))),
+            ]),
+        ),
+        ("wall_ms", Value::Num(wall_ms)),
+        ("tables", Value::Arr(tables.iter().map(|t| t.to_json()).collect())),
+    ])
+    .pretty()
 }
 
 #[cfg(test)]
@@ -64,5 +98,18 @@ mod tests {
     #[test]
     fn unknown_id_errors() {
         assert!(super::run("fig99").is_err());
+    }
+
+    #[test]
+    fn bench_json_parses_and_names_the_experiment() {
+        use crate::config::json;
+        use crate::report::Table;
+        let mut t = Table::new("demo", &["a"]);
+        t.row(vec!["1".into()]);
+        let s = super::bench_json("fig9", &[t], 12.5);
+        let v = json::parse(&s).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "fig9");
+        assert_eq!(v.get("config").unwrap().get("channels").unwrap().as_u32().unwrap(), 8);
+        assert!(v.get("wall_ms").unwrap().as_f64().unwrap() > 0.0);
     }
 }

@@ -37,7 +37,8 @@
 //! | [`metrics`] | latency breakdowns, utilization, counters |
 //! | [`report`] | paper-style table renderers + CSV |
 //! | [`runtime`] | artifact discovery; PJRT loader/executor behind the `pjrt` feature |
-//! | [`coordinator`] | serving: per-shard `Server` (scheduler + continuous batching), multi-worker `Coordinator` over the shared mapping service |
+//! | [`coordinator`] | serving: per-shard `Server` (simulated clock, async intake, pluggable schedulers), multi-worker `Coordinator` with per-shard DRAM channel partitioning over shared mapping services |
+//! | [`traffic`] | open-loop workload generator (seeded PRNG, Poisson/bursty arrivals, trace replay) + SLO metrics (TTFT/TPOT/e2e tails, goodput, utilization) |
 //! | [`experiments`] | one entry point per paper table/figure |
 
 pub mod area;
@@ -52,6 +53,7 @@ pub mod metrics;
 pub mod pim;
 pub mod report;
 pub mod runtime;
+pub mod traffic;
 pub mod workloads;
 
 /// Crate-wide result type.

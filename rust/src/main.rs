@@ -54,8 +54,15 @@ fn print_help() {
          \x20 racam llm <gpt3-6.7b|gpt3-175b|llama3-8b|llama3-70b> [--stage prefill|decode|e2e] [--scenario code|ctx]\n\
          \x20 racam area\n\
          \x20 racam config [--dump FILE | --load FILE]\n\
-         \x20 racam experiments <fig1|fig9|...|ext-trace|all>\n\
-         \x20 racam serve [--requests N] [--tokens N] [--batch N] [--shards N] [--synthetic] [--mapping-cache FILE]"
+         \x20 racam experiments <fig1|fig9|...|ext-trace|traffic|all>\n\
+         \x20 racam serve [--requests N] [--tokens N] [--batch N] [--shards N] [--synthetic]\n\
+         \x20             [--mapping-cache FILE] [--sched fcfs|bucket|edf] [--rate R]\n\
+         \x20             [--deadline-ms MS] [--traffic SPEC.json | --trace TRACE.json]\n\
+         \n\
+         serve traffic modes: --rate R replays a Poisson stream at R req/s on the\n\
+         simulated clock (add --deadline-ms for an e2e SLO); --traffic loads a\n\
+         TrafficSpec JSON; --trace replays a recorded trace. All three print SLO\n\
+         tables (TTFT/TPOT tails, goodput)."
     );
 }
 
@@ -166,52 +173,114 @@ fn cmd_config(args: Vec<String>) -> Result<()> {
 }
 
 fn cmd_serve(args: Vec<String>) -> Result<()> {
-    use racam::coordinator::{Coordinator, Request, SyntheticEngine, TokenEngine};
-    use racam::mapping::MappingService;
+    use racam::config::{ArrivalProcess, LengthDist, TrafficSpec};
+    use racam::coordinator::{
+        Coordinator, EdfScheduler, FcfsBatcher, LengthBucketed, Request, Scheduler,
+        SyntheticEngine, TokenEngine,
+    };
+    use racam::traffic::{generate, replay_trace, SloSummary};
 
     let n_req: u64 = flag_value(&args, "--requests").map(|v| v.parse()).transpose()?.unwrap_or(4);
     let tokens: usize = flag_value(&args, "--tokens").map(|v| v.parse()).transpose()?.unwrap_or(16);
     let batch: usize = flag_value(&args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(2);
     let shards: usize = flag_value(&args, "--shards").map(|v| v.parse()).transpose()?.unwrap_or(1);
     let synthetic = args.iter().any(|a| a == "--synthetic");
+    let sched = flag_value(&args, "--sched").unwrap_or_else(|| "fcfs".into());
+    let rate: Option<f64> = flag_value(&args, "--rate").map(|v| v.parse()).transpose()?;
     anyhow::ensure!(shards >= 1, "--shards must be at least 1");
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
 
     let spec = config::gpt3_6_7b();
-    // One shared mapping service prices every worker shard; a cache file
-    // warm-starts it (§7 amortization across processes, not just layers).
-    let service = MappingService::for_config(&racam_paper());
+    // Each worker shard prices against its honest share of the paper
+    // device's DRAM channels (equal shares alias one service; with more
+    // shards than channels everyone shares the full config).  A cache
+    // file warm-starts shard 0's service (§7 amortization across
+    // processes) — entries are specific to that per-shard channel count,
+    // so reuse the same --shards value across runs of one cache file.
+    let services = Coordinator::<SyntheticEngine, FcfsBatcher>::partitioned_services(
+        &racam_paper(),
+        shards,
+    );
     let cache_path = flag_value(&args, "--mapping-cache");
     if let Some(path) = &cache_path {
         let p = std::path::PathBuf::from(path);
         if p.exists() {
-            let n = service.warm_start(&p)?;
+            let n = services[0].warm_start(&p)?;
             println!("pre-warmed mapping cache with {n} entries from {path}");
         }
     }
 
-    fn drive<E: TokenEngine + Send>(
-        mut coord: Coordinator<E>,
-        n_req: u64,
-        tokens: usize,
+    // The request stream: an open-loop traffic source when asked for,
+    // otherwise the legacy fixed batch of synthetic prompts.
+    let requests: Vec<Request> = if let Some(path) = flag_value(&args, "--trace") {
+        replay_trace(&std::fs::read_to_string(&path)?)?
+    } else if let Some(path) = flag_value(&args, "--traffic") {
+        generate(&TrafficSpec::from_json(&std::fs::read_to_string(&path)?)?)
+    } else if let Some(rate_per_s) = rate {
+        anyhow::ensure!(rate_per_s > 0.0, "--rate must be positive");
+        let deadline_ms: Option<f64> =
+            flag_value(&args, "--deadline-ms").map(|v| v.parse()).transpose()?;
+        generate(&TrafficSpec {
+            seed: 7,
+            requests: n_req,
+            arrival: ArrivalProcess::Poisson { rate_per_s },
+            prompt: LengthDist::Uniform { lo: 8, hi: 96 },
+            output: LengthDist::Fixed(tokens as u64),
+            deadline_ns: deadline_ms.map(|ms| (ms * 1e6) as u64),
+        })
+    } else {
+        (0..n_req)
+            .map(|id| {
+                let prompt: Vec<u32> =
+                    (0..3 + id % 5).map(|i| ((id * 31 + i * 7) % 200) as u32).collect();
+                Request::new(id, prompt, tokens)
+            })
+            .collect()
+    };
+    let open_loop = requests.iter().any(|r| r.arrival_ns > 0);
+
+    fn drive<E: TokenEngine + Send, S: Scheduler>(
+        mut coord: Coordinator<E, S>,
+        requests: Vec<Request>,
     ) -> Result<racam::coordinator::ServerReport> {
-        for id in 0..n_req {
-            let prompt: Vec<u32> = (0..3 + id % 5).map(|i| ((id * 31 + i * 7) % 200) as u32).collect();
-            coord.submit(Request { id, prompt, max_new_tokens: tokens });
+        for req in requests {
+            coord.submit(req);
         }
         coord.run_to_completion()
     }
 
     let report = if synthetic {
-        let coord = Coordinator::with_service(service.clone(), spec.clone(), shards, batch, |_| {
-            SyntheticEngine::new(64, 256)
-        });
-        drive(coord, n_req, tokens)?
+        let engine = |_: usize| SyntheticEngine::new(64, 256);
+        match sched.as_str() {
+            "fcfs" => drive(
+                Coordinator::with_shard_services(services.clone(), spec.clone(), batch, engine, |_| {
+                    FcfsBatcher::new(batch)
+                }),
+                requests,
+            )?,
+            "bucket" => drive(
+                Coordinator::with_shard_services(services.clone(), spec.clone(), batch, engine, |_| {
+                    LengthBucketed::new()
+                }),
+                requests,
+            )?,
+            "edf" => drive(
+                Coordinator::with_shard_services(services.clone(), spec.clone(), batch, engine, |_| {
+                    EdfScheduler::new()
+                }),
+                requests,
+            )?,
+            other => anyhow::bail!("unknown scheduler '{other}' (fcfs|bucket|edf)"),
+        }
     } else {
         #[cfg(feature = "pjrt")]
         {
             use racam::coordinator::HloDecodeEngine;
             use racam::runtime::{ArtifactSet, Runtime};
+            anyhow::ensure!(
+                sched == "fcfs",
+                "--sched applies to --synthetic serving; the PJRT path is FCFS"
+            );
             let artifacts = ArtifactSet::discover();
             artifacts.require()?;
             let rt = Runtime::cpu()?;
@@ -220,10 +289,10 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                 modules.push(rt.load_hlo_text(&artifacts.decode_step())?);
             }
             let mut modules = modules.into_iter();
-            let coord = Coordinator::with_service(service.clone(), spec.clone(), shards, batch, |_| {
+            let coord = Coordinator::with_shard_services(services.clone(), spec.clone(), batch, |_| {
                 HloDecodeEngine::new(modules.next().expect("one module per shard"), 64, 256)
-            });
-            drive(coord, n_req, tokens)?
+            }, |_| FcfsBatcher::new(batch));
+            drive(coord, requests)?
         }
         #[cfg(not(feature = "pjrt"))]
         {
@@ -234,12 +303,12 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     };
 
     if let Some(path) = &cache_path {
-        service.persist(std::path::Path::new(path))?;
-        println!("saved mapping cache ({} shapes) to {path}", service.cache_len());
+        services[0].persist(std::path::Path::new(path))?;
+        println!("saved mapping cache ({} shapes) to {path}", services[0].cache_len());
     }
 
     println!(
-        "served {} requests, {} tokens total across {shards} shard(s)",
+        "served {} requests, {} tokens total across {shards} shard(s) [{sched}]",
         report.results.len(),
         report.total_tokens
     );
@@ -247,25 +316,32 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         println!(
             "  req {}: ttft {} total {}  tokens {:?}…",
             r.id,
-            fmt_ns(r.sim_ttft_ns),
-            fmt_ns(r.sim_total_ns),
+            fmt_ns(r.ttft_ns()),
+            fmt_ns(r.e2e_ns()),
             &r.tokens[..4.min(r.tokens.len())]
         );
     }
     for s in &report.shards {
         println!(
-            "  shard {}: {} reqs, {} tokens, {} decode iters, occupancy {:.0}%",
+            "  shard {}: {} reqs, {} tokens, {} decode iters, occupancy {:.0}%, busy {:.0}%",
             s.shard,
             s.requests,
             s.tokens,
             s.decode_iterations,
-            s.occupancy * 100.0
+            s.occupancy * 100.0,
+            s.utilization() * 100.0
         );
     }
+    if open_loop {
+        let slo = SloSummary::from_report(&report);
+        let mut t = racam::report::Table::new("SLO summary", &SloSummary::table_headers());
+        t.row(slo.table_row(&sched));
+        println!("{}", t.render());
+    }
     println!(
-        "mapping cache: {} unique shapes searched, {} cache-served",
-        service.misses(),
-        service.hits()
+        "mapping cache (shard 0): {} unique shapes searched, {} cache-served",
+        services[0].misses(),
+        services[0].hits()
     );
     println!(
         "simulated {:.0} tok/s on RACAM ({}); {:.0} tok/s host wall",

@@ -39,6 +39,25 @@ pub fn throughput_per_s(latency_ns: f64) -> f64 {
     1e9 / latency_ns.max(f64::MIN_POSITIVE)
 }
 
+/// Nearest-rank percentile over an unsorted sample, `p` in `[0, 100]`
+/// (tail-latency reporting: p50/p95/p99 of TTFT/TPOT/e2e populations).
+/// Returns 0 for an empty sample.  Taking several percentiles of one
+/// population?  Sort once and use [`percentile_sorted`].
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    percentile_sorted(&sorted, p)
+}
+
+/// Nearest-rank percentile of an already ascending-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// Geometric mean (the paper's headline aggregations are geomeans).
 pub fn geomean(values: &[f64]) -> f64 {
     assert!(!values.is_empty(), "geomean of empty slice");
@@ -69,6 +88,18 @@ mod tests {
         b.add(&LatencyBreakdown::new(10.0, 5.0));
         assert_eq!(b.total_ns(), 165.0);
         assert!((b.pim_fraction() - 110.0 / 165.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert_eq!(percentile(&[42.0], 99.0), 42.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        // Unsorted input is handled.
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), 2.0);
     }
 
     #[test]

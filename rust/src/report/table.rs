@@ -1,4 +1,6 @@
-//! Aligned text tables + CSV.
+//! Aligned text tables + CSV + JSON.
+
+use crate::config::json::Value;
 
 /// A simple column-aligned table builder.
 #[derive(Debug, Clone, Default)]
@@ -60,6 +62,31 @@ impl Table {
         out
     }
 
+    /// Structured form for machine-readable bench artifacts
+    /// (`BENCH_<name>.json`): title, headers, and rows as JSON strings —
+    /// cells keep their rendered formatting so the JSON matches the text
+    /// table exactly.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("title", Value::Str(self.title.clone())),
+            (
+                "headers",
+                Value::Arr(self.headers.iter().map(|h| Value::Str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Value::Arr(r.iter().map(|c| Value::Str(c.clone())).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
     /// Render as CSV (quotes cells containing commas/quotes).
     pub fn to_csv(&self) -> String {
         let esc = |c: &str| -> String {
@@ -97,6 +124,18 @@ mod tests {
         let off0 = lines[1].find("102.4").unwrap();
         let off1 = lines[2].find("9.1").unwrap();
         assert_eq!(off0, off1);
+    }
+
+    #[test]
+    fn json_form_round_trips_through_the_parser() {
+        use crate::config::json;
+        let mut t = Table::new("bench", &["model", "latency"]);
+        t.row(vec!["GPT-3".into(), "1.2ms".into()]);
+        let v = t.to_json();
+        let parsed = json::parse(&v.pretty()).unwrap();
+        assert_eq!(parsed.get("title").unwrap().as_str().unwrap(), "bench");
+        let json::Value::Arr(rows) = parsed.get("rows").unwrap() else { panic!() };
+        assert_eq!(rows.len(), 1);
     }
 
     #[test]

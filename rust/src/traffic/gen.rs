@@ -1,0 +1,226 @@
+//! Open-loop workload generator: materializes a [`TrafficSpec`] into a
+//! deterministic stream of timed [`Request`]s, and replays recorded traces
+//! from JSON.
+//!
+//! Open-loop means arrivals do not depend on service progress: the stream
+//! is fixed up front (like real users showing up), so queueing delay under
+//! overload is *observed*, not masked by a closed feedback loop.  The
+//! stream is a pure function of the spec — same seed, same spec, same
+//! stream, regardless of shard count, platform, or how the requests are
+//! later dispatched.
+
+use super::rng::SplitMix64;
+use crate::config::json::{self, Value};
+use crate::config::{ArrivalProcess, LengthDist, TrafficSpec};
+use crate::coordinator::Request;
+use crate::Result;
+
+/// Vocabulary the generator draws prompt token ids from (the synthetic
+/// engines treat token ids modulo their own vocab, so any bound works;
+/// this one keeps prompts printable in examples).
+const PROMPT_VOCAB: u64 = 200;
+
+/// Sample one length from a distribution (≥ 1 for prompts; outputs may
+/// legitimately be 0 through `Fixed(0)`).
+fn sample_len(dist: &LengthDist, rng: &mut SplitMix64) -> u64 {
+    match dist {
+        LengthDist::Fixed(n) => *n,
+        LengthDist::Uniform { lo, hi } => rng.range(*lo, (*hi).max(*lo)),
+        LengthDist::LogNormal { median, sigma, cap } => {
+            let v = (*median as f64) * (sigma * rng.normal()).exp();
+            (v.round() as u64).clamp(1, (*cap).max(1))
+        }
+    }
+}
+
+/// Materialize the request stream described by `spec`: ids are 0..n in
+/// arrival order, arrival times are on the simulated clock (ns), and each
+/// request carries `spec.deadline_ns` past its arrival if set.
+pub fn generate(spec: &TrafficSpec) -> Vec<Request> {
+    debug_assert!(spec.validate().is_ok(), "invalid traffic spec: {:?}", spec.validate());
+    let mut rng = SplitMix64::new(spec.seed);
+    let mut out = Vec::with_capacity(spec.requests as usize);
+    let mut clock_ns = 0u64;
+    for id in 0..spec.requests {
+        match spec.arrival {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                clock_ns += (rng.exp(rate_per_s) * 1e9) as u64;
+            }
+            ArrivalProcess::Bursty { rate_per_s, burst } => {
+                // A whole burst shares one arrival epoch; epochs form a
+                // Poisson process at rate/burst so the mean rate holds.
+                if id % burst.max(1) as u64 == 0 {
+                    let epoch_rate = rate_per_s / burst.max(1) as f64;
+                    clock_ns += (rng.exp(epoch_rate) * 1e9) as u64;
+                }
+            }
+        }
+        let prompt_len = sample_len(&spec.prompt, &mut rng).max(1);
+        let output_len = sample_len(&spec.output, &mut rng);
+        let prompt: Vec<u32> =
+            (0..prompt_len).map(|_| rng.range(0, PROMPT_VOCAB - 1) as u32).collect();
+        let mut req = Request::new(id, prompt, output_len as usize).at(clock_ns);
+        if let Some(budget) = spec.deadline_ns {
+            // Budgets spread over [0.5×, 1.5×] the configured mean (see
+            // `TrafficSpec::deadline_ns`): tight-SLO and relaxed-SLO
+            // requests interleave, so EDF ≠ FCFS.
+            let jittered = ((budget as f64) * (0.5 + rng.next_f64())) as u64;
+            req = req.with_deadline(clock_ns.saturating_add(jittered.max(1)));
+        }
+        out.push(req);
+    }
+    out
+}
+
+/// Replay a recorded trace: a JSON array of entries like
+/// `{"arrival_ms": 1.5, "prompt_tokens": 512, "output_tokens": 64,
+/// "deadline_ms": 250}` (deadline optional, relative to arrival).  Prompt
+/// *content* is synthesized deterministically from the entry index —
+/// traces record shapes and timing, not token ids.
+pub fn replay_trace(src: &str) -> Result<Vec<Request>> {
+    let doc = json::parse(src).map_err(anyhow::Error::from)?;
+    let Value::Arr(entries) = &doc else {
+        anyhow::bail!("trace must be a JSON array of request entries");
+    };
+    let mut out = Vec::with_capacity(entries.len());
+    for (id, e) in entries.iter().enumerate() {
+        let arrival_ms = e.get("arrival_ms").map_err(anyhow::Error::from)?;
+        let arrival_ns = (arrival_ms.as_f64().map_err(anyhow::Error::from)? * 1e6).round() as u64;
+        let prompt_len =
+            (e.get("prompt_tokens").and_then(|v| v.as_u32()).map_err(anyhow::Error::from)? as u64)
+                .max(1);
+        let output_len =
+            e.get("output_tokens").and_then(|v| v.as_u32()).map_err(anyhow::Error::from)? as usize;
+        let mut rng = SplitMix64::new(0x7 * (id as u64 + 1));
+        let prompt: Vec<u32> =
+            (0..prompt_len).map(|_| rng.range(0, PROMPT_VOCAB - 1) as u32).collect();
+        let mut req = Request::new(id as u64, prompt, output_len).at(arrival_ns);
+        if let Ok(d) = e.get("deadline_ms") {
+            let budget = (d.as_f64().map_err(anyhow::Error::from)? * 1e6).round() as u64;
+            req = req.with_deadline(arrival_ns.saturating_add(budget));
+        }
+        out.push(req);
+    }
+    // Serving assumes arrival order; traces may be recorded unsorted.
+    out.sort_by_key(|r| (r.arrival_ns, r.id));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+
+    fn spec(seed: u64) -> TrafficSpec {
+        TrafficSpec {
+            seed,
+            requests: 40,
+            arrival: ArrivalProcess::Poisson { rate_per_s: 100.0 },
+            prompt: LengthDist::Uniform { lo: 4, hi: 64 },
+            output: LengthDist::LogNormal { median: 16, sigma: 0.5, cap: 128 },
+            deadline_ns: Some(50_000_000),
+        }
+    }
+
+    #[test]
+    fn stream_is_deterministic_per_seed() {
+        assert_eq!(generate(&spec(1)), generate(&spec(1)));
+        assert_ne!(generate(&spec(1)), generate(&spec(2)));
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_ids_sequential() {
+        let reqs = generate(&spec(3));
+        assert_eq!(reqs.len(), 40);
+        for (i, w) in reqs.windows(2).enumerate() {
+            assert!(w[0].arrival_ns <= w[1].arrival_ns, "at {i}");
+        }
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(!r.prompt.is_empty());
+            // Budgets spread over [0.5x, 1.5x] the configured 50 ms mean.
+            let budget = r.deadline_ns.unwrap() - r.arrival_ns;
+            assert!((25_000_000..=75_000_000).contains(&budget), "budget {budget}");
+        }
+        // The spread actually varies (EDF order != arrival order).
+        let budgets: std::collections::BTreeSet<u64> =
+            reqs.iter().map(|r| r.deadline_ns.unwrap() - r.arrival_ns).collect();
+        assert!(budgets.len() > 1, "deadline budgets must not be constant");
+    }
+
+    #[test]
+    fn poisson_mean_rate_is_respected() {
+        let mut s = spec(5);
+        s.requests = 4000;
+        s.deadline_ns = None;
+        let reqs = generate(&s);
+        let span_s = reqs.last().unwrap().arrival_ns as f64 / 1e9;
+        let rate = reqs.len() as f64 / span_s;
+        assert!((rate - 100.0).abs() < 8.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn bursty_arrivals_share_epochs() {
+        let s = TrafficSpec {
+            seed: 9,
+            requests: 64,
+            arrival: ArrivalProcess::Bursty { rate_per_s: 100.0, burst: 8 },
+            prompt: LengthDist::Fixed(8),
+            output: LengthDist::Fixed(4),
+            deadline_ns: None,
+        };
+        let reqs = generate(&s);
+        // Requests within a burst share one arrival timestamp.
+        let distinct: std::collections::BTreeSet<u64> =
+            reqs.iter().map(|r| r.arrival_ns).collect();
+        assert_eq!(distinct.len(), 64 / 8);
+    }
+
+    #[test]
+    fn scenario_spec_generates_paper_lengths() {
+        let s = TrafficSpec::for_scenario(&Scenario::CONTEXT_UNDERSTANDING, 10.0, 5, 1);
+        let reqs = generate(&s);
+        for r in &reqs {
+            assert_eq!(r.prompt.len(), 8192);
+            assert_eq!(r.max_new_tokens, 256);
+        }
+    }
+
+    #[test]
+    fn lognormal_lengths_are_clamped_and_spread() {
+        let s = TrafficSpec {
+            seed: 77,
+            requests: 300,
+            arrival: ArrivalProcess::Poisson { rate_per_s: 1000.0 },
+            prompt: LengthDist::LogNormal { median: 64, sigma: 1.0, cap: 256 },
+            output: LengthDist::Fixed(1),
+            deadline_ns: None,
+        };
+        let lens: Vec<usize> = generate(&s).iter().map(|r| r.prompt.len()).collect();
+        assert!(lens.iter().all(|&l| (1..=256).contains(&l)));
+        let distinct: std::collections::BTreeSet<usize> = lens.iter().copied().collect();
+        assert!(distinct.len() > 20, "lognormal should spread: {} lengths", distinct.len());
+    }
+
+    #[test]
+    fn trace_replay_parses_sorts_and_deadlines() {
+        let src = r#"[
+            {"arrival_ms": 3.0, "prompt_tokens": 16, "output_tokens": 4},
+            {"arrival_ms": 1.0, "prompt_tokens": 8, "output_tokens": 2, "deadline_ms": 10.0}
+        ]"#;
+        let reqs = replay_trace(src).unwrap();
+        assert_eq!(reqs.len(), 2);
+        // Sorted by arrival: the 1 ms entry first.
+        assert_eq!(reqs[0].arrival_ns, 1_000_000);
+        assert_eq!(reqs[0].prompt.len(), 8);
+        assert_eq!(reqs[0].deadline_ns, Some(11_000_000));
+        assert_eq!(reqs[1].arrival_ns, 3_000_000);
+        assert_eq!(reqs[1].deadline_ns, None);
+    }
+
+    #[test]
+    fn trace_replay_rejects_non_arrays() {
+        assert!(replay_trace("{\"arrival_ms\": 1}").is_err());
+        assert!(replay_trace("[{\"prompt_tokens\": 4}]").is_err());
+    }
+}

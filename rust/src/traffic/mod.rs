@@ -1,0 +1,45 @@
+//! Open-loop request generation and SLO-graded serving metrics.
+//!
+//! RACAM's evaluation (paper §5.3/§6) prices *static* inference: one
+//! request, fixed prompt/output lengths, no queueing.  This module is the
+//! serving-side complement — it turns the paper's workload descriptions
+//! into live request streams and grades the coordinator the way serving
+//! systems are graded: tail latency and goodput under load.
+//!
+//! ## Mapping to the paper
+//!
+//! | concept here | paper anchor |
+//! |---|---|
+//! | [`TrafficSpec`] prompt/output length distributions | §5.3 scenarios; [`Scenario::CODE_GENERATION`] (1024 in / 4096 out) and [`Scenario::CONTEXT_UNDERSTANDING`] (8192 in / 256 out) are the `Fixed` presets via [`TrafficSpec::for_scenario`] |
+//! | kernel pricing behind every admitted request | §4.4's LLM parser + automated mapping (the shared `MappingService`) |
+//! | per-shard simulated clock, prefill/decode bucket costs | §6's prefill/decode latency model, applied per request instead of per scenario |
+//! | arrival processes (Poisson/bursty), trace replay | serving-PIM follow-ups (Sangam, MVDRAM) evaluate under request streams with latency SLOs; the paper itself has no arrival model — this is the extension point |
+//!
+//! ## Pieces
+//!
+//! * [`rng`] — seed-driven SplitMix64; the stream is a pure function of
+//!   the [`TrafficSpec`], independent of shard count or platform.
+//! * [`generate`] / [`replay_trace`] — materialize a spec (or a recorded
+//!   JSON trace) into timed [`Request`]s for
+//!   [`Coordinator::submit`](crate::coordinator::Coordinator::submit) or a
+//!   live [`Intake`](crate::coordinator::Intake).
+//! * [`slo`] — TTFT/TPOT/e2e percentiles, deadline goodput, per-shard
+//!   utilization from a finished
+//!   [`ServerReport`](crate::coordinator::ServerReport).
+//!
+//! The `exp traffic` experiment ties it together: FCFS vs length-bucketed
+//! vs EDF admission at several arrival rates on the paper's model presets.
+//!
+//! [`TrafficSpec`]: crate::config::TrafficSpec
+//! [`TrafficSpec::for_scenario`]: crate::config::TrafficSpec::for_scenario
+//! [`Scenario::CODE_GENERATION`]: crate::config::Scenario::CODE_GENERATION
+//! [`Scenario::CONTEXT_UNDERSTANDING`]: crate::config::Scenario::CONTEXT_UNDERSTANDING
+//! [`Request`]: crate::coordinator::Request
+
+mod gen;
+pub mod rng;
+pub mod slo;
+
+pub use gen::{generate, replay_trace};
+pub use rng::SplitMix64;
+pub use slo::{Percentiles, SloSummary};

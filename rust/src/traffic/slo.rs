@@ -1,0 +1,260 @@
+//! SLO-graded serving metrics: tail latency percentiles, deadline goodput,
+//! and per-shard utilization, computed from a [`ServerReport`].
+//!
+//! Serving-oriented PIM follow-ups (Sangam, MVDRAM) grade systems on
+//! TTFT/TPOT tails under live load, not mean kernel latency; this module
+//! is that grading layer for the coordinator.  All times are on the
+//! simulated RACAM clock:
+//!
+//! * **TTFT** — arrival to first token, *including queueing delay* (the
+//!   intrinsic prefill cost is `RequestResult::sim_ttft_ns`; the
+//!   difference is time spent waiting for admission).
+//! * **TPOT** — mean inter-token gap after the first token.
+//! * **e2e** — arrival to completion.
+//! * **goodput** — token throughput counting only requests that met their
+//!   deadline (requests without a deadline always count).
+//! * **utilization** — per shard, the busy fraction of its simulated
+//!   makespan (idle = the clock jumping over arrival gaps).
+
+use crate::coordinator::{ServerReport, ShardStats};
+use crate::metrics::{fmt_ns, percentile_sorted};
+use crate::report::Table;
+
+/// Tail summary of one latency population.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Percentiles {
+    pub fn from(values: &[f64]) -> Percentiles {
+        if values.is_empty() {
+            return Percentiles::default();
+        }
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        Percentiles {
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            max: *sorted.last().expect("non-empty"),
+        }
+    }
+}
+
+/// SLO-graded summary of one serving run.
+#[derive(Debug, Clone)]
+pub struct SloSummary {
+    pub requests: usize,
+    pub total_tokens: usize,
+    /// Arrival → first token (queueing + prefill), ns.
+    pub ttft: Percentiles,
+    /// Mean inter-token time per request (requests with ≥ 2 tokens), ns.
+    pub tpot: Percentiles,
+    /// Arrival → completion, ns.
+    pub e2e: Percentiles,
+    /// Fraction of requests that met their deadline (1.0 when none carry
+    /// deadlines).
+    pub slo_attainment: f64,
+    /// Tokens/s over the simulated makespan, all requests.
+    pub throughput_tokens_per_s: f64,
+    /// Tokens/s counting only deadline-meeting requests.
+    pub goodput_tokens_per_s: f64,
+    /// Simulated makespan of the run (slowest shard's clock), ns.
+    pub makespan_ns: f64,
+    /// Per-shard (id, busy-fraction, mean batch occupancy).
+    pub shard_utilization: Vec<(usize, f64, f64)>,
+}
+
+impl SloSummary {
+    /// Grade a serving report.  Requests without deadlines count as
+    /// meeting their SLO.
+    pub fn from_report(report: &ServerReport) -> SloSummary {
+        let ttft: Vec<f64> = report.results.iter().map(|r| r.ttft_ns()).collect();
+        let e2e: Vec<f64> = report.results.iter().map(|r| r.e2e_ns()).collect();
+        let tpot: Vec<f64> = report
+            .results
+            .iter()
+            .filter(|r| r.tokens.len() >= 2)
+            .map(|r| r.tpot_ns())
+            .collect();
+        let met = report.results.iter().filter(|r| r.met_deadline()).count();
+        let good_tokens: usize = report
+            .results
+            .iter()
+            .filter(|r| r.met_deadline())
+            .map(|r| r.tokens.len())
+            .sum();
+        let makespan_ns = report
+            .shards
+            .iter()
+            .map(|s: &ShardStats| if s.sim_clock_ns > 0.0 { s.sim_clock_ns } else { s.sim_ns })
+            .fold(0.0f64, f64::max);
+        let span_s = (makespan_ns / 1e9).max(f64::MIN_POSITIVE);
+        SloSummary {
+            requests: report.results.len(),
+            total_tokens: report.total_tokens,
+            ttft: Percentiles::from(&ttft),
+            tpot: Percentiles::from(&tpot),
+            e2e: Percentiles::from(&e2e),
+            slo_attainment: if report.results.is_empty() {
+                1.0
+            } else {
+                met as f64 / report.results.len() as f64
+            },
+            throughput_tokens_per_s: report.total_tokens as f64 / span_s,
+            goodput_tokens_per_s: good_tokens as f64 / span_s,
+            makespan_ns,
+            shard_utilization: report
+                .shards
+                .iter()
+                .map(|s| (s.shard, s.utilization(), s.occupancy))
+                .collect(),
+        }
+    }
+
+    /// One row of the scheduler × rate comparison tables (matches
+    /// [`SloSummary::table_headers`]).
+    pub fn table_row(&self, label: &str) -> Vec<String> {
+        vec![
+            label.to_string(),
+            self.requests.to_string(),
+            fmt_ns(self.ttft.p50),
+            fmt_ns(self.ttft.p99),
+            fmt_ns(self.tpot.p50),
+            fmt_ns(self.tpot.p99),
+            fmt_ns(self.e2e.p99),
+            format!("{:.0}", self.goodput_tokens_per_s),
+            format!("{:.0}%", 100.0 * self.slo_attainment),
+            format!(
+                "{:.0}%",
+                100.0
+                    * if self.shard_utilization.is_empty() {
+                        0.0
+                    } else {
+                        self.shard_utilization.iter().map(|(_, u, _)| u).sum::<f64>()
+                            / self.shard_utilization.len() as f64
+                    }
+            ),
+        ]
+    }
+
+    pub fn table_headers() -> Vec<&'static str> {
+        vec![
+            "run", "reqs", "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99", "e2e_p99",
+            "goodput_tok/s", "slo_met", "util",
+        ]
+    }
+
+    /// Per-shard utilization table for this run.
+    pub fn shard_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["shard", "busy", "occupancy"]);
+        for (shard, util, occ) in &self.shard_utilization {
+            t.row(vec![
+                shard.to_string(),
+                format!("{:.0}%", 100.0 * util),
+                format!("{:.0}%", 100.0 * occ),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{RequestResult, ServerReport, ShardStats};
+
+    fn result(id: u64, arrival: f64, first: f64, finish: f64, n_tokens: usize) -> RequestResult {
+        RequestResult {
+            id,
+            tokens: vec![1; n_tokens],
+            sim_ttft_ns: first - arrival,
+            sim_total_ns: finish - arrival,
+            wall_ns: 1.0,
+            arrival_ns: arrival,
+            sim_first_token_at_ns: first,
+            sim_finish_at_ns: finish,
+            deadline_ns: None,
+        }
+    }
+
+    fn report(results: Vec<RequestResult>, clock_ns: f64, idle_ns: f64) -> ServerReport {
+        let total_tokens = results.iter().map(|r| r.tokens.len()).sum();
+        ServerReport {
+            sim_tokens_per_s: 0.0,
+            wall_tokens_per_s: 0.0,
+            total_tokens,
+            results,
+            shards: vec![ShardStats {
+                shard: 0,
+                requests: 1,
+                tokens: total_tokens,
+                sim_ns: clock_ns,
+                wall_ns: 1.0,
+                sim_clock_ns: clock_ns,
+                sim_idle_ns: idle_ns,
+                decode_iterations: 4,
+                occupancy: 0.5,
+            }],
+        }
+    }
+
+    #[test]
+    fn summary_computes_ttft_tpot_e2e() {
+        // One request: arrives at 100, first token at 300, done at 700
+        // with 5 tokens → ttft 200, e2e 600, tpot (700-300)/4 = 100.
+        let rep = report(vec![result(0, 100.0, 300.0, 700.0, 5)], 700.0, 0.0);
+        let s = SloSummary::from_report(&rep);
+        assert_eq!(s.ttft.p50, 200.0);
+        assert_eq!(s.e2e.p50, 600.0);
+        assert_eq!(s.tpot.p50, 100.0);
+        assert_eq!(s.slo_attainment, 1.0);
+        assert!((s.throughput_tokens_per_s - 5.0 / (700.0 / 1e9)).abs() < 1.0);
+        assert_eq!(s.throughput_tokens_per_s, s.goodput_tokens_per_s);
+    }
+
+    #[test]
+    fn goodput_excludes_missed_deadlines() {
+        let mut late = result(0, 0.0, 10.0, 1000.0, 4);
+        late.deadline_ns = Some(500.0);
+        let on_time = result(1, 0.0, 10.0, 400.0, 4);
+        let rep = report(vec![late, on_time], 1000.0, 0.0);
+        let s = SloSummary::from_report(&rep);
+        assert_eq!(s.slo_attainment, 0.5);
+        assert!((s.goodput_tokens_per_s - s.throughput_tokens_per_s / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_token_requests_skip_tpot() {
+        let rep = report(vec![result(0, 0.0, 10.0, 10.0, 1)], 10.0, 0.0);
+        let s = SloSummary::from_report(&rep);
+        assert_eq!(s.tpot.p50, 0.0);
+        assert_eq!(s.tpot.max, 0.0);
+    }
+
+    #[test]
+    fn empty_report_is_benign() {
+        let s = SloSummary::from_report(&report(vec![], 0.0, 0.0));
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.slo_attainment, 1.0);
+        assert_eq!(s.ttft.p99, 0.0);
+    }
+
+    #[test]
+    fn tables_render() {
+        let rep = report(vec![result(0, 0.0, 10.0, 50.0, 3)], 100.0, 25.0);
+        let s = SloSummary::from_report(&rep);
+        let row = s.table_row("fcfs@100");
+        assert_eq!(row.len(), SloSummary::table_headers().len());
+        assert_eq!(row[0], "fcfs@100");
+        let t = s.shard_table("util");
+        assert_eq!(t.num_rows(), 1);
+        assert!(t.render().contains("75%"), "{}", t.render());
+    }
+}

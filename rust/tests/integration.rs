@@ -2,7 +2,8 @@
 //! artifacts (L1/L2) loaded through the PJRT runtime (behind the `pjrt`
 //! feature), cross-checked against the functional bit-serial simulator and
 //! the analytical models (L3), plus the multi-shard serving coordinator
-//! over the shared mapping service.
+//! over the shared mapping service and the open-loop traffic pipeline
+//! (generator → schedulers → SLO grading, with async mid-run admission).
 //!
 //! The PJRT tests require `make artifacts` to have run; they skip (with a
 //! note) when the artifacts are missing so `cargo test` stays usable on a
@@ -127,7 +128,7 @@ fn serving_loop_generates_tokens_via_pjrt() {
     let spec = racam::config::gpt3_6_7b();
     let mut server = Server::new(engine, RacamSystem::new(&racam_paper()), spec, 2);
     for id in 0..3 {
-        server.submit(Request { id, prompt: vec![id as u32 + 1, 42, 7], max_new_tokens: 12 });
+        server.submit(Request::new(id, vec![id as u32 + 1, 42, 7], 12));
     }
     let report = server.run_to_completion().unwrap();
     assert_eq!(report.results.len(), 3);
@@ -197,7 +198,7 @@ fn multi_shard_coordinator_shares_one_mapping_cache() {
         SyntheticEngine::new(64, 128)
     });
     for id in 0..6 {
-        coord.submit(Request { id, prompt: vec![1, 2, 3], max_new_tokens: 4 });
+        coord.submit(Request::new(id, vec![1, 2, 3], 4));
     }
     let report = coord.run_to_completion().unwrap();
     assert_eq!(report.results.len(), 6);
@@ -211,4 +212,71 @@ fn multi_shard_coordinator_shares_one_mapping_cache() {
     // misses == unique shapes means no shard ever re-searched a shape.
     assert_eq!(service.misses(), service.cache_len() as u64);
     assert!(service.hits() > 0, "later shards must be served from the shared cache");
+}
+
+/// End-to-end open-loop serving: a generated Poisson stream plays through
+/// the coordinator under all three admission policies, every request
+/// completes, and the SLO layer grades each run — while a live intake
+/// admits extra requests mid-run.
+#[test]
+fn open_loop_traffic_serves_under_every_scheduler() {
+    use racam::config::{ArrivalProcess, LengthDist, TrafficSpec};
+    use racam::coordinator::{EdfScheduler, FcfsBatcher, LengthBucketed, Scheduler};
+    use racam::traffic::{generate, SloSummary};
+
+    let spec = racam::config::gpt3_6_7b();
+    let traffic = TrafficSpec {
+        seed: 11,
+        requests: 8,
+        arrival: ArrivalProcess::Bursty { rate_per_s: 400.0, burst: 4 },
+        prompt: LengthDist::Uniform { lo: 2, hi: 12 },
+        output: LengthDist::Uniform { lo: 1, hi: 4 },
+        deadline_ns: Some(1_000_000_000),
+    };
+    let stream = generate(&traffic);
+    let service = MappingService::for_config(&racam_paper());
+
+    fn serve<S: Scheduler>(
+        service: &MappingService,
+        spec: &racam::config::LlmSpec,
+        stream: &[racam::coordinator::Request],
+        factory: impl FnMut(usize) -> S,
+    ) -> SloSummary {
+        let mut coord = Coordinator::with_schedulers(
+            service.clone(),
+            spec.clone(),
+            2,
+            2,
+            |_| SyntheticEngine::new(64, 128),
+            factory,
+        );
+        for r in stream {
+            coord.submit(r.clone());
+        }
+        // Async admission: one request shows up only after the run starts.
+        let mut intake = coord.intake();
+        let late = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            assert!(intake.submit(Request::new(500, vec![1, 2], 2)));
+        });
+        let report = coord.run_to_completion().unwrap();
+        late.join().unwrap();
+        assert_eq!(report.results.len(), stream.len() + 1);
+        assert!(report.results.iter().any(|r| r.id == 500 && r.tokens.len() == 2));
+        SloSummary::from_report(&report)
+    }
+
+    let fcfs = serve(&service, &spec, &stream, |_| FcfsBatcher::new(2));
+    let bucketed = serve(&service, &spec, &stream, |_| LengthBucketed::new());
+    let edf = serve(&service, &spec, &stream, |_| EdfScheduler::new());
+    for (name, s) in [("fcfs", &fcfs), ("bucketed", &bucketed), ("edf", &edf)] {
+        assert_eq!(s.requests, 9, "{name}");
+        assert!(s.ttft.p50 > 0.0, "{name}");
+        assert!(s.e2e.p99 >= s.e2e.p50, "{name}");
+        assert!(s.throughput_tokens_per_s > 0.0, "{name}");
+        assert!(s.goodput_tokens_per_s <= s.throughput_tokens_per_s + 1e-9, "{name}");
+    }
+    // Identical shapes across all three runs: the shared cache means the
+    // second and third schedulers searched nothing new.
+    assert_eq!(service.misses(), service.cache_len() as u64);
 }

@@ -4,7 +4,8 @@
 //!
 //! Coverage: coordinator invariants (batching, ordering, state), mapping
 //! framework invariants, the functional bit-serial executor against the
-//! scalar reference, ISA encode/decode, and config JSON round-trips.
+//! scalar reference, the traffic generator (seed determinism, shard-count
+//! invariance), ISA encode/decode, and config JSON round-trips.
 
 use racam::config::{racam_paper, racam_tiny, HwConfig, MatmulShape, Precision};
 use racam::coordinator::{Coordinator, FcfsBatcher, Request, Server, SyntheticEngine};
@@ -171,7 +172,7 @@ fn prop_batcher_never_exceeds_capacity_and_preserves_fcfs() {
         let mut b = FcfsBatcher::new(max_batch);
         let total = rng.range(1, 30);
         for id in 0..total {
-            b.submit(Request { id, prompt: vec![1], max_new_tokens: 1 });
+            b.submit(Request::new(id, vec![1], 1));
         }
         let mut seen = Vec::new();
         let mut running = rng.range(0, max_batch as u64) as usize;
@@ -199,7 +200,7 @@ fn prop_server_conserves_requests_and_tokens() {
             let toks = rng.range(1, 8) as usize;
             expected_tokens += toks;
             let prompt: Vec<u32> = (0..rng.range(1, 6)).map(|_| rng.range(0, 63) as u32).collect();
-            server.submit(Request { id, prompt, max_new_tokens: toks });
+            server.submit(Request::new(id, prompt, toks));
         }
         let report = server.run_to_completion().unwrap();
         assert_eq!(report.results.len(), n_req as usize);
@@ -227,7 +228,7 @@ fn prop_generation_independent_of_batching() {
                 batch,
             );
             for (id, p) in prompts.iter().enumerate() {
-                server.submit(Request { id: id as u64, prompt: p.clone(), max_new_tokens: 5 });
+                server.submit(Request::new(id as u64, p.clone(), 5));
             }
             server.run_to_completion().unwrap().results.into_iter().map(|r| r.tokens).collect()
         };
@@ -241,10 +242,12 @@ fn prop_sharding_conserves_requests_and_generation() {
     // any request's tokens, and every request must complete exactly once.
     check("shard independence", 3, |rng| {
         let reqs: Vec<Request> = (0..rng.range(2, 6))
-            .map(|id| Request {
-                id,
-                prompt: vec![id as u32 + 1, rng.range(0, 63) as u32],
-                max_new_tokens: rng.range(1, 6) as usize,
+            .map(|id| {
+                Request::new(
+                    id,
+                    vec![id as u32 + 1, rng.range(0, 63) as u32],
+                    rng.range(1, 6) as usize,
+                )
             })
             .collect();
         let run = |shards: usize| -> Vec<(u64, Vec<u32>)> {
@@ -260,6 +263,93 @@ fn prop_sharding_conserves_requests_and_generation() {
             }
             let report = coord.run_to_completion().unwrap();
             assert_eq!(report.results.len(), reqs.len());
+            report.results.into_iter().map(|r| (r.id, r.tokens)).collect()
+        };
+        assert_eq!(run(1), run(3));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Traffic generator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_traffic_generator_is_deterministic_per_seed() {
+    use racam::config::{ArrivalProcess, LengthDist, TrafficSpec};
+    use racam::traffic::generate;
+
+    check("traffic determinism", 16, |rng| {
+        let spec = TrafficSpec {
+            seed: rng.next(),
+            requests: rng.range(1, 40),
+            arrival: if rng.range(0, 1) == 0 {
+                ArrivalProcess::Poisson { rate_per_s: rng.range(10, 2000) as f64 }
+            } else {
+                ArrivalProcess::Bursty {
+                    rate_per_s: rng.range(10, 2000) as f64,
+                    burst: rng.range(1, 8) as u32,
+                }
+            },
+            prompt: LengthDist::Uniform { lo: 1, hi: rng.range(2, 256) },
+            output: LengthDist::LogNormal {
+                median: rng.range(1, 64),
+                sigma: 0.5,
+                cap: 256,
+            },
+            deadline_ns: Some(rng.range(1, 1_000_000_000)),
+        };
+        // Same seed ⇒ bit-identical stream across repeated materialization.
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a, b, "same spec must regenerate the same stream");
+        // Different seed ⇒ a different stream (arrivals and contents).
+        let mut other = spec.clone();
+        other.seed = spec.seed.wrapping_add(1);
+        assert_ne!(generate(&other), a, "seed must matter");
+        // Arrival order and deadlines are coherent.
+        for w in a.windows(2) {
+            assert!(w[0].arrival_ns <= w[1].arrival_ns);
+        }
+        for r in &a {
+            assert!(!r.prompt.is_empty());
+            // Per-request budgets spread over [0.5x, 1.5x] the spec mean.
+            let budget = r.deadline_ns.expect("spec sets a deadline") - r.arrival_ns;
+            let mean = spec.deadline_ns.unwrap();
+            assert!(budget >= (mean / 2).max(1) && budget <= mean / 2 * 3 + 1, "budget {budget}");
+        }
+    });
+}
+
+#[test]
+fn prop_traffic_stream_is_shard_count_invariant() {
+    // The generated stream is fixed before dispatch, so serving it on 1 or
+    // 3 shards must complete the same request set with the same tokens.
+    use racam::config::{ArrivalProcess, LengthDist, TrafficSpec};
+    use racam::traffic::generate;
+
+    check("traffic shard invariance", 2, |rng| {
+        let spec = TrafficSpec {
+            seed: rng.next(),
+            requests: rng.range(2, 6),
+            arrival: ArrivalProcess::Poisson { rate_per_s: 500.0 },
+            prompt: LengthDist::Uniform { lo: 1, hi: 8 },
+            output: LengthDist::Uniform { lo: 1, hi: 4 },
+            deadline_ns: None,
+        };
+        let stream = generate(&spec);
+        let run = |shards: usize| -> Vec<(u64, Vec<u32>)> {
+            let mut coord = Coordinator::new(
+                &racam_paper(),
+                racam::config::gpt3_6_7b(),
+                shards,
+                2,
+                |_| SyntheticEngine::new(32, 64),
+            );
+            for r in &stream {
+                coord.submit(r.clone());
+            }
+            let report = coord.run_to_completion().unwrap();
+            assert_eq!(report.results.len(), stream.len());
             report.results.into_iter().map(|r| (r.id, r.tokens)).collect()
         };
         assert_eq!(run(1), run(3));
