@@ -1,6 +1,7 @@
-//! Open-loop serving under live traffic: generate a Poisson request
-//! stream, serve it through the multi-shard coordinator under two
-//! admission policies, and grade both with SLO tail metrics — then show
+//! Open-loop serving under live traffic: generate a bursty request
+//! stream, serve it through the multi-shard coordinator under FCFS and
+//! EDF admission — and under the chunked-prefill + deadline-preemption
+//! serving policy — grading every run with SLO tail metrics, then show
 //! async admission by submitting extra requests *while the run executes*.
 //!
 //! No PJRT artifacts needed (synthetic token engine):
@@ -9,7 +10,7 @@
 //! cargo run --release --example traffic_serving
 //! ```
 
-use racam::config::{gpt3_6_7b, racam_paper, ArrivalProcess, LengthDist, TrafficSpec};
+use racam::config::{gpt3_6_7b, racam_paper, ArrivalProcess, LengthDist, ServingPolicy, TrafficSpec};
 use racam::coordinator::{
     Coordinator, EdfScheduler, FcfsBatcher, Request, Scheduler, SyntheticEngine,
 };
@@ -21,6 +22,7 @@ fn serve<S: Scheduler>(
     services: &[MappingService],
     stream: &[Request],
     label: &str,
+    policy: ServingPolicy,
     scheduler_factory: impl FnMut(usize) -> S,
 ) -> racam::Result<SloSummary> {
     let mut coord = Coordinator::with_shard_services(
@@ -29,16 +31,18 @@ fn serve<S: Scheduler>(
         4, // max batch per shard
         |_| SyntheticEngine::new(64, 256),
         scheduler_factory,
-    );
+    )
+    .with_policy(policy);
     for req in stream {
         coord.submit(req.clone());
     }
     let report = coord.run_to_completion()?;
     println!(
-        "{label}: served {} requests, {} tokens, {:.0} simulated tok/s",
+        "{label}: served {} requests, {} tokens, {:.0} simulated tok/s ({} shed)",
         report.results.len(),
         report.total_tokens,
-        report.sim_tokens_per_s
+        report.sim_tokens_per_s,
+        report.shards.iter().map(|s| s.shed).sum::<usize>()
     );
     Ok(SloSummary::from_report(&report))
 }
@@ -66,12 +70,19 @@ fn main() -> racam::Result<()> {
     // same caches.
     let services =
         Coordinator::<SyntheticEngine, FcfsBatcher>::partitioned_services(&racam_paper(), 2);
-    let fcfs = serve(&services, &stream, "fcfs", |_| FcfsBatcher::new(4))?;
-    let edf = serve(&services, &stream, "edf ", |_| EdfScheduler::new())?;
+    let whole = ServingPolicy::whole_prefill();
+    let fcfs = serve(&services, &stream, "fcfs", whole, |_| FcfsBatcher::new(4))?;
+    let edf = serve(&services, &stream, "edf ", whole, |_| EdfScheduler::new())?;
+    // The interactive policy: 256-token prefill chunks so short requests
+    // stop queueing behind long prompts, plus deadline preemption so EDF
+    // sheds past-deadline work under overload instead of dragging tails.
+    let interactive =
+        serve(&services, &stream, "edf+i", ServingPolicy::interactive(), |_| EdfScheduler::new())?;
 
     let mut t = Table::new("SLO comparison (same stream, same caches)", &SloSummary::table_headers());
-    t.row(fcfs.table_row("fcfs"));
-    t.row(edf.table_row("edf"));
+    t.row(fcfs.table_row("fcfs/whole"));
+    t.row(edf.table_row("edf/whole"));
+    t.row(interactive.table_row("edf/chunk256+preempt"));
     println!("\n{}", t.render());
 
     // ---- Async admission: requests can arrive while the run executes.

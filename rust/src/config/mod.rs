@@ -9,6 +9,7 @@ mod dram;
 pub mod json;
 mod periph;
 mod presets;
+mod serving;
 mod timing;
 mod traffic;
 mod workload;
@@ -16,6 +17,7 @@ mod workload;
 pub use dram::DramConfig;
 pub use periph::PeriphConfig;
 pub use presets::*;
+pub use serving::{ServingPolicy, DEFAULT_PREFILL_CHUNK};
 pub use timing::TimingParams;
 pub use traffic::{ArrivalProcess, LengthDist, TrafficSpec};
 pub use workload::{LlmSpec, MatmulShape, Precision, Scenario, Stage};

@@ -1,0 +1,175 @@
+//! Serving-loop policy: how the per-shard iteration engine interleaves
+//! prefill and decode work, and whether running requests may be preempted.
+//!
+//! A [`ServingPolicy`] is declarative configuration for
+//! `coordinator::Server`'s event-driven serving loop.  The default
+//! (`prefill_chunk_tokens = None`, `preempt = false`) reproduces the
+//! paper-faithful whole-prefill schedule bit-for-bit: every admitted
+//! request's full prompt is prefetched in one step before the next decode
+//! iteration.  Setting a chunk size bounds how long one prompt may occupy
+//! the shard between decode iterations, and enabling preemption lets
+//! deadline-aware schedulers shed or re-queue running requests (see
+//! `coordinator::Scheduler::should_preempt`).
+//!
+//! Policies are JSON-loadable like [`super::HwConfig`] and
+//! [`super::TrafficSpec`], so a serving configuration can live in a file
+//! next to the hardware config:
+//!
+//! ```json
+//! {"prefill_chunk_tokens": 256, "preempt": true}
+//! ```
+
+use super::json::{self, JsonError, Value};
+
+/// Default chunk granularity of the [`ServingPolicy::interactive`] preset.
+/// Matches the 256-token context-bucket boundary the serving cost caches
+/// use (`coordinator::BUCKET_TOKENS`), so a chunk never spans more than one
+/// new pricing bucket.
+pub const DEFAULT_PREFILL_CHUNK: u64 = 256;
+
+/// How the serving loop schedules prefill work and preemption.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServingPolicy {
+    /// Maximum prompt tokens one prefill step may consume before the loop
+    /// returns to decode iterations.  `None` (the default) charges each
+    /// admitted request's whole prompt in a single step — the legacy
+    /// schedule, where one long prompt stalls every running decode.
+    pub prefill_chunk_tokens: Option<u64>,
+    /// When true, the serving loop consults the scheduler's
+    /// `should_preempt` hook once per iteration for every running request,
+    /// and sheds or re-queues the ones the policy gives up on.
+    pub preempt: bool,
+}
+
+impl ServingPolicy {
+    /// The paper-faithful schedule: whole-prompt prefill, no preemption.
+    /// Identical to `ServingPolicy::default()`.
+    pub const fn whole_prefill() -> Self {
+        ServingPolicy { prefill_chunk_tokens: None, preempt: false }
+    }
+
+    /// Bound prefill steps to `tokens` prompt tokens (preemption off).
+    pub const fn chunked(tokens: u64) -> Self {
+        ServingPolicy { prefill_chunk_tokens: Some(tokens), preempt: false }
+    }
+
+    /// Enable the preemption hook on top of this policy.
+    pub const fn with_preemption(mut self) -> Self {
+        self.preempt = true;
+        self
+    }
+
+    /// Latency-oriented preset: bucket-sized prefill chunks so short
+    /// requests' first tokens are never stalled behind a whole long
+    /// prompt, plus deadline preemption for schedulers that implement it.
+    pub const fn interactive() -> Self {
+        ServingPolicy::chunked(DEFAULT_PREFILL_CHUNK).with_preemption()
+    }
+
+    /// Whether this policy is the bit-for-bit legacy schedule.
+    pub fn is_whole_prefill(&self) -> bool {
+        self.prefill_chunk_tokens.is_none() && !self.preempt
+    }
+
+    /// Short human label for table rows and CLI output, e.g. `whole`,
+    /// `chunk256`, `chunk256+preempt`.
+    pub fn label(&self) -> String {
+        let mut s = match self.prefill_chunk_tokens {
+            None => "whole".to_string(),
+            Some(c) => format!("chunk{c}"),
+        };
+        if self.preempt {
+            s.push_str("+preempt");
+        }
+        s
+    }
+
+    /// A zero-token chunk would make prefill steps spin without advancing.
+    pub fn validate(&self) -> Result<(), String> {
+        match self.prefill_chunk_tokens {
+            Some(0) => Err("prefill_chunk_tokens must be at least 1 (or omitted)".into()),
+            _ => Ok(()),
+        }
+    }
+
+    pub fn from_json(s: &str) -> crate::Result<Self> {
+        let v = json::parse(s).map_err(anyhow::Error::from)?;
+        let policy = Self::from_value(&v).map_err(anyhow::Error::from)?;
+        policy.validate().map_err(|e| anyhow::anyhow!("invalid serving policy: {e}"))?;
+        Ok(policy)
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_value().pretty()
+    }
+
+    fn to_value(&self) -> Value {
+        let mut pairs = Vec::new();
+        if let Some(c) = self.prefill_chunk_tokens {
+            pairs.push(("prefill_chunk_tokens", Value::Num(c as f64)));
+        }
+        pairs.push(("preempt", Value::Bool(self.preempt)));
+        Value::obj(pairs)
+    }
+
+    fn from_value(v: &Value) -> Result<Self, JsonError> {
+        let prefill_chunk_tokens = match v.get("prefill_chunk_tokens") {
+            Ok(c) => Some(c.as_u32()? as u64),
+            Err(_) => None,
+        };
+        let preempt = match v.get("preempt") {
+            Ok(b) => b.as_bool()?,
+            Err(_) => false,
+        };
+        Ok(ServingPolicy { prefill_chunk_tokens, preempt })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_legacy_whole_prefill() {
+        let p = ServingPolicy::default();
+        assert_eq!(p, ServingPolicy::whole_prefill());
+        assert!(p.is_whole_prefill());
+        assert_eq!(p.label(), "whole");
+    }
+
+    #[test]
+    fn presets_and_labels() {
+        assert_eq!(ServingPolicy::chunked(128).label(), "chunk128");
+        let i = ServingPolicy::interactive();
+        assert_eq!(i.prefill_chunk_tokens, Some(DEFAULT_PREFILL_CHUNK));
+        assert!(i.preempt);
+        assert_eq!(i.label(), "chunk256+preempt");
+        assert!(!i.is_whole_prefill());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for p in [
+            ServingPolicy::whole_prefill(),
+            ServingPolicy::chunked(512),
+            ServingPolicy::interactive(),
+            ServingPolicy::whole_prefill().with_preemption(),
+        ] {
+            let back = ServingPolicy::from_json(&p.to_json()).unwrap();
+            assert_eq!(p, back, "{}", p.label());
+        }
+    }
+
+    #[test]
+    fn missing_fields_default_to_legacy() {
+        let p = ServingPolicy::from_json("{}").unwrap();
+        assert!(p.is_whole_prefill());
+    }
+
+    #[test]
+    fn zero_chunk_rejected() {
+        assert!(ServingPolicy::chunked(0).validate().is_err());
+        assert!(ServingPolicy::from_json(r#"{"prefill_chunk_tokens": 0}"#).is_err());
+        ServingPolicy::chunked(1).validate().unwrap();
+    }
+}

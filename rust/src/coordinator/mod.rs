@@ -14,8 +14,14 @@
 //! pluggable admission [`Scheduler`] ([`FcfsBatcher`], [`LengthBucketed`],
 //! [`EdfScheduler`]), live mid-run request [`Intake`], and a merged
 //! [`ServerReport`] carrying per-shard utilization ([`ShardStats`]).
-//! Open-loop request streams and SLO-graded summaries over these reports
-//! live in [`crate::traffic`].
+//!
+//! Each shard's serving loop is an event-driven iteration engine governed
+//! by a [`ServingPolicy`](crate::config::ServingPolicy): prefill advances
+//! in bounded chunks that interleave with decode iterations (unset =
+//! whole-prompt, the paper-faithful schedule), and schedulers may preempt
+//! running requests through [`Scheduler::should_preempt`] ([`Preemption`];
+//! EDF sheds past-deadline work).  Open-loop request streams and
+//! SLO-graded summaries over these reports live in [`crate::traffic`].
 
 mod batcher;
 mod engine;
@@ -28,5 +34,5 @@ pub use batcher::{ctx_bucket, Batch, FcfsBatcher, BUCKET_TOKENS};
 pub use engine::HloDecodeEngine;
 pub use engine::{SyntheticEngine, TokenEngine};
 pub use multi::{Coordinator, Intake};
-pub use scheduler::{EdfScheduler, LengthBucketed, Scheduler};
+pub use scheduler::{EdfScheduler, LengthBucketed, Preemption, Scheduler};
 pub use server::{Request, RequestResult, Server, ServerReport, ShardStats};

@@ -35,7 +35,7 @@ use super::engine::TokenEngine;
 use super::scheduler::Scheduler;
 use super::server::{Request, Server, ServerReport};
 use super::FcfsBatcher;
-use crate::config::{partition_channels, HwConfig, LlmSpec};
+use crate::config::{partition_channels, HwConfig, LlmSpec, ServingPolicy};
 use crate::mapping::MappingService;
 use crate::workloads::RacamSystem;
 use crate::Result;
@@ -193,6 +193,26 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
             })
             .collect();
         Coordinator { shards, services }
+    }
+
+    /// Apply one [`ServingPolicy`] (chunked prefill, preemption) to every
+    /// shard.  The default policy reproduces the whole-prefill schedule
+    /// bit-for-bit; see `config::ServingPolicy`.
+    pub fn set_policy(&mut self, policy: ServingPolicy) {
+        for shard in &mut self.shards {
+            shard.set_policy(policy);
+        }
+    }
+
+    /// Builder-style [`Coordinator::set_policy`].
+    pub fn with_policy(mut self, policy: ServingPolicy) -> Self {
+        self.set_policy(policy);
+        self
+    }
+
+    /// The serving policy of the shards (uniform across the coordinator).
+    pub fn policy(&self) -> ServingPolicy {
+        self.shards[0].policy()
     }
 
     /// The shard-0 mapping service (cache counters, warm-start/persist).
@@ -442,6 +462,62 @@ mod tests {
         // Replacing the intake drops the old receiver.
         let _tx2 = c.intake();
         assert!(!intake.submit(Request::new(0, vec![1], 1)));
+    }
+
+    #[test]
+    fn policy_threads_through_every_shard() {
+        use crate::config::ServingPolicy;
+
+        // Chunked prefill through the coordinator: same tokens as the
+        // default whole-prefill schedule, and the merged report carries
+        // per-shard chunk counts.
+        let run = |policy: ServingPolicy| {
+            let mut c = coordinator(2, 2).with_policy(policy);
+            for id in 0..4 {
+                c.submit(Request::new(id, vec![id as u32; 600], 3));
+            }
+            c.run_to_completion().unwrap()
+        };
+        let whole = run(ServingPolicy::whole_prefill());
+        let chunked = run(ServingPolicy::chunked(256));
+        let tok = |rep: &ServerReport| {
+            rep.results.iter().map(|r| (r.id, r.tokens.clone())).collect::<Vec<_>>()
+        };
+        assert_eq!(tok(&whole), tok(&chunked));
+        let chunks = |rep: &ServerReport| rep.shards.iter().map(|s| s.prefill_chunks).sum::<usize>();
+        // 600-token prompts: 1 step each whole, 3 chunks each at 256.
+        assert_eq!(chunks(&whole), 4);
+        assert_eq!(chunks(&chunked), 12);
+    }
+
+    #[test]
+    fn coordinator_merges_shed_counts_across_shards() {
+        use crate::config::ServingPolicy;
+        use crate::coordinator::scheduler::EdfScheduler;
+
+        let service = MappingService::for_config(&racam_paper());
+        let mut c: Coordinator<SyntheticEngine, EdfScheduler> = Coordinator::with_schedulers(
+            service,
+            tiny_spec(),
+            2,
+            1,
+            |_| SyntheticEngine::new(64, 128),
+            |_| EdfScheduler::new(),
+        )
+        .with_policy(ServingPolicy::whole_prefill().with_preemption());
+        assert!(c.policy().preempt);
+        // Two of the four requests carry deadlines that expire almost
+        // immediately; wherever least-loaded dispatch lands them, they are
+        // shed and the merged report must account for all of them.
+        for shard in 0..2u64 {
+            c.submit(Request::new(shard * 2, vec![1; 32], 48).with_deadline(u64::MAX));
+            c.submit(Request::new(shard * 2 + 1, vec![2; 32], 48).with_deadline(1));
+        }
+        let report = c.run_to_completion().unwrap();
+        assert_eq!(report.results.len(), 4);
+        let shed_total: usize = report.shards.iter().map(|s| s.shed).sum();
+        assert_eq!(shed_total, 2);
+        assert_eq!(report.results.iter().filter(|r| r.shed).count(), 2);
     }
 
     #[test]

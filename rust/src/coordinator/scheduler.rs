@@ -24,6 +24,31 @@ use super::server::Request;
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
+/// A scheduler's verdict on one running request, consulted by the serving
+/// loop once per iteration when the active
+/// [`ServingPolicy`](crate::config::ServingPolicy) enables preemption.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preemption {
+    /// Leave the request in the batch (the default for every policy).
+    Keep,
+    /// Abort the request and return it to the pending queue for
+    /// re-admission.  Generation state is discarded — re-admission
+    /// re-prefills the prompt, modelling recompute-style preemption where
+    /// the KV cache is dropped to free the slot.
+    ///
+    /// **Contract:** a policy must eventually stop re-queueing a request
+    /// (e.g. by keying on simulated time or attempt count).  The serving
+    /// loop tolerates a short streak of rounds in which everything
+    /// admitted is immediately re-queued, then errors out — like a
+    /// `next_batch` implementation that withholds work.
+    Requeue,
+    /// Abort the request and retire it immediately as *shed*: it keeps the
+    /// tokens generated so far, counts as missing its deadline, and frees
+    /// its batch slot.  Overload sheds past-deadline work instead of
+    /// dragging every other request's tail.
+    Shed,
+}
+
 pub trait Scheduler: Send {
     /// Enqueue a request (already arrived on the simulated clock).
     fn submit(&mut self, req: Request);
@@ -40,6 +65,15 @@ pub trait Scheduler: Send {
     /// queued work would stall the clock — the server detects a
     /// withholding scheduler and errors out.
     fn next_batch(&mut self, slots: usize) -> Vec<Request>;
+
+    /// Preemption hook: called once per serving-loop iteration for every
+    /// running request — but only when the active serving policy sets
+    /// `preempt = true` — with the tokens generated so far and the current
+    /// simulated clock.  The default keeps everything (admission-only
+    /// policies never preempt).
+    fn should_preempt(&mut self, _req: &Request, _generated: usize, _sim_now_ns: f64) -> Preemption {
+        Preemption::Keep
+    }
 }
 
 /// Length-bucketed admission: pending requests are grouped by the
@@ -126,6 +160,13 @@ impl PartialOrd for EdfEntry {
 /// [`Request::deadline_ns`] is admitted first; requests without a deadline
 /// sort after every deadlined one (treated as deadline = `u64::MAX`), and
 /// FCFS order breaks ties.
+///
+/// Under a preemption-enabled [`ServingPolicy`](crate::config::ServingPolicy),
+/// EDF also *sheds* running requests whose deadline has already passed on
+/// the simulated clock ([`Preemption::Shed`]): a past-deadline request can
+/// no longer meet its SLO, so every further decode iteration it occupies
+/// only drags the tail of requests that still can.  Requests without a
+/// deadline are never preempted.
 #[derive(Debug, Default)]
 pub struct EdfScheduler {
     heap: BinaryHeap<Reverse<EdfEntry>>,
@@ -152,6 +193,17 @@ impl Scheduler for EdfScheduler {
     fn next_batch(&mut self, slots: usize) -> Vec<Request> {
         let take = slots.min(self.heap.len());
         (0..take).map(|_| self.heap.pop().expect("len checked").0.req).collect()
+    }
+
+    fn should_preempt(&mut self, req: &Request, generated: usize, sim_now_ns: f64) -> Preemption {
+        match req.deadline_ns {
+            // Finished requests retire on their own; shed only work that
+            // is both past its deadline and still incomplete.
+            Some(d) if (d as f64) < sim_now_ns && generated < req.max_new_tokens => {
+                Preemption::Shed
+            }
+            _ => Preemption::Keep,
+        }
     }
 }
 
@@ -224,5 +276,30 @@ mod tests {
         }
         assert_eq!(s.next_batch(2).len(), 2);
         assert_eq!(s.pending(), 3);
+    }
+
+    #[test]
+    fn edf_sheds_only_past_deadline_incomplete_requests() {
+        let mut s = EdfScheduler::new();
+        let live = Request::new(0, vec![1], 4).with_deadline(1_000);
+        let dead = Request::new(1, vec![1], 4).with_deadline(100);
+        let free = Request::new(2, vec![1], 4); // no deadline: never shed
+        assert_eq!(s.should_preempt(&live, 1, 500.0), Preemption::Keep);
+        assert_eq!(s.should_preempt(&dead, 1, 500.0), Preemption::Shed);
+        assert_eq!(s.should_preempt(&free, 1, 500.0), Preemption::Keep);
+        // A request that already generated its full budget retires on its
+        // own this iteration — no point shedding it.
+        assert_eq!(s.should_preempt(&dead, 4, 500.0), Preemption::Keep);
+        // At the deadline instant (not past it), the request still counts.
+        assert_eq!(s.should_preempt(&dead, 1, 100.0), Preemption::Keep);
+    }
+
+    #[test]
+    fn default_schedulers_never_preempt() {
+        let dead = Request::new(0, vec![1], 4).with_deadline(1);
+        let mut fcfs = crate::coordinator::FcfsBatcher::new(2);
+        assert_eq!(fcfs.should_preempt(&dead, 0, 1e9), Preemption::Keep);
+        let mut lb = LengthBucketed::new();
+        assert_eq!(lb.should_preempt(&dead, 0, 1e9), Preemption::Keep);
     }
 }

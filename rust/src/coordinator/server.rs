@@ -5,36 +5,56 @@
 //! A [`Server`] is one worker shard: it owns a token engine, a
 //! [`RacamSystem`] handle (typically sharing its [`MappingService`] with
 //! every other shard — see [`super::Coordinator`]), a pluggable admission
-//! [`Scheduler`] (FCFS by default), and persistent per-bucket prefill and
-//! decode cost caches so repeated runs never re-price a bucket.
+//! [`Scheduler`] (FCFS by default), a [`ServingPolicy`] governing the
+//! iteration engine, and persistent per-bucket prefill and decode cost
+//! caches so repeated runs never re-price a bucket.
+//!
+//! ## The event-driven iteration engine
+//!
+//! `run_to_completion` drives a sequence of simulated *steps*.  Each step
+//! is one of:
+//!
+//! * **prefill step** — charge a bounded chunk of one staged prompt
+//!   ([`ServingPolicy::prefill_chunk_tokens`]; unset = the whole prompt,
+//!   the paper-faithful legacy schedule, reproduced bit-for-bit);
+//! * **decode iteration** — one lockstep decode step across every batch
+//!   member whose prompt is fully prefilled, charging the slowest member's
+//!   per-token cost;
+//! * **preemption scan** — when the policy enables it, the scheduler's
+//!   [`Scheduler::should_preempt`] hook may shed or re-queue running
+//!   requests (EDF sheds past-deadline work);
+//! * **idle jump / intake block** — the clock jumps to the next future
+//!   arrival (accounted as [`ShardStats::sim_idle_ns`]) or the loop blocks
+//!   on the live intake channel.
+//!
+//! With chunking enabled, a long prompt no longer stalls every running
+//! decode: prefill advances one chunk per iteration and decode iterations
+//! interleave between chunks.  The time decoders spend waiting on prefill
+//! steps is surfaced as [`ShardStats::chunk_stall_ns`].
 //!
 //! ## The simulated clock and open-loop traffic
 //!
-//! Each run drives a per-shard simulated clock forward: admitting a
-//! request charges its (bucketed) prefill cost, and each decode iteration
-//! charges the slowest batch member's per-token cost (the batch steps in
-//! lockstep).  Requests carry an [`Request::arrival_ns`] on that clock —
-//! a request is invisible to the [`Scheduler`] until the clock reaches its
+//! Requests carry an [`Request::arrival_ns`] on the shard clock — a
+//! request is invisible to the [`Scheduler`] until the clock reaches its
 //! arrival, which is how the open-loop streams of [`crate::traffic`]
 //! replay: queueing delay emerges from load instead of being assumed.
 //! When the shard is idle and work is pending in the future, the clock
-//! jumps to the next arrival and the gap is accounted as idle time
-//! ([`ShardStats::sim_idle_ns`]).
+//! jumps to the next arrival and the gap is accounted as idle time.
 //!
 //! ## Async admission
 //!
 //! [`Server::open_intake`] (and [`super::Coordinator::intake`]) return an
 //! mpsc sender; requests sent on it are admitted *mid-run*: the serving
-//! loop drains the channel between decode iterations, and blocks on it
-//! when it would otherwise go idle.  `run_to_completion` returns once all
-//! queued work is done **and** every intake sender has been dropped.
+//! loop drains the channel between iterations, and blocks on it when it
+//! would otherwise go idle.  `run_to_completion` returns once all queued
+//! work is done **and** every intake sender has been dropped.
 //!
 //! [`MappingService`]: crate::mapping::MappingService
 
 use super::batcher::{ctx_bucket, FcfsBatcher};
 use super::engine::TokenEngine;
-use super::scheduler::Scheduler;
-use crate::config::LlmSpec;
+use super::scheduler::{Preemption, Scheduler};
+use crate::config::{LlmSpec, ServingPolicy};
 use crate::metrics::LatencyBreakdown;
 use crate::workloads::{decode_kernels, prefill_kernels, stage_latency, RacamSystem};
 use crate::Result;
@@ -83,6 +103,10 @@ impl Request {
 pub struct RequestResult {
     pub id: u64,
     pub tokens: Vec<u32>,
+    /// Prompt length of the request, tokens (lets SLO analyses split
+    /// populations by prompt length — e.g. short-request TTFT under a
+    /// long-prompt mixed workload — without a lookup back to the stream).
+    pub prompt_tokens: usize,
     /// Simulated RACAM time to first token (prefill cost alone, excluding
     /// queueing), ns.
     pub sim_ttft_ns: f64,
@@ -94,12 +118,19 @@ pub struct RequestResult {
     /// Arrival time on the shard's simulated clock, ns.
     pub arrival_ns: f64,
     /// Absolute simulated-clock time the first token was ready (includes
-    /// queueing delay; `- arrival_ns` is the serving-level TTFT).
+    /// queueing delay; `- arrival_ns` is the serving-level TTFT).  For a
+    /// request shed before its first token, this is not meaningful —
+    /// latency populations should exclude shed requests.
     pub sim_first_token_at_ns: f64,
-    /// Absolute simulated-clock completion time.
+    /// Absolute simulated-clock completion (or shed) time.
     pub sim_finish_at_ns: f64,
     /// Echo of the request's deadline, for goodput accounting.
     pub deadline_ns: Option<f64>,
+    /// True when the request was preemptively shed ([`Preemption::Shed`])
+    /// instead of running to completion: `tokens` holds whatever was
+    /// generated before the shed, and the request counts as missing its
+    /// deadline.
+    pub shed: bool,
 }
 
 impl RequestResult {
@@ -121,9 +152,10 @@ impl RequestResult {
         (self.sim_finish_at_ns - self.sim_first_token_at_ns) / (self.tokens.len() - 1) as f64
     }
 
-    /// Whether this request met its deadline (no deadline counts as met).
+    /// Whether this request met its deadline (no deadline counts as met;
+    /// a shed request never does — it was given up on).
     pub fn met_deadline(&self) -> bool {
-        self.deadline_ns.map_or(true, |d| self.sim_finish_at_ns <= d)
+        !self.shed && self.deadline_ns.map_or(true, |d| self.sim_finish_at_ns <= d)
     }
 }
 
@@ -131,7 +163,7 @@ impl RequestResult {
 #[derive(Debug, Clone)]
 pub struct ShardStats {
     pub shard: usize,
-    /// Requests this shard completed.
+    /// Requests this shard retired (completed or shed).
     pub requests: usize,
     /// Tokens this shard generated.
     pub tokens: usize,
@@ -148,6 +180,18 @@ pub struct ShardStats {
     /// Mean fraction of batch slots occupied across decode iterations
     /// (1.0 = the shard decoded at full batch the whole run).
     pub occupancy: f64,
+    /// Prefill steps executed (one per admitted prompt under whole-prompt
+    /// prefill; one per chunk under a chunked [`ServingPolicy`]).
+    pub prefill_chunks: usize,
+    /// Simulated time prefill steps charged while at least one fully
+    /// prefilled request sat waiting to decode — the decode stall a
+    /// chunked policy bounds and a whole-prompt policy lets grow with the
+    /// longest prompt.
+    pub chunk_stall_ns: f64,
+    /// Running requests re-queued by the scheduler's preemption hook.
+    pub preemptions: usize,
+    /// Running requests shed by the scheduler's preemption hook.
+    pub shed: usize,
 }
 
 impl ShardStats {
@@ -230,6 +274,8 @@ pub struct Server<E: TokenEngine, S: Scheduler = FcfsBatcher> {
     scheduler: S,
     max_batch: usize,
     shard_id: usize,
+    /// How the iteration engine schedules prefill and preemption.
+    policy: ServingPolicy,
     /// Requests whose simulated arrival time has not been reached yet.
     future: BinaryHeap<Reverse<FutureReq>>,
     /// Live intake: requests sent here are admitted mid-run.
@@ -243,8 +289,33 @@ pub struct Server<E: TokenEngine, S: Scheduler = FcfsBatcher> {
     prefill_cache: HashMap<u64, LatencyBreakdown>,
 }
 
+/// Where one batch member is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// `done` prompt tokens have been consumed by prefill steps so far.
+    Prefill { done: u64 },
+    /// Prompt fully prefilled; the member decodes in lockstep.
+    Decode,
+}
+
+/// Consecutive prefill steps a staged prompt may be bypassed by
+/// shorter-remaining prompts before it gets priority (chunked mode's
+/// anti-starvation bound): a long prompt's prefill stretches by at most
+/// this factor under a sustained stream of short arrivals, instead of
+/// being starved indefinitely.
+const MAX_PREFILL_BYPASSES: u32 = 4;
+
 struct Running {
     req: Request,
+    phase: Phase,
+    /// Admission order across the whole run: the prefill-step tiebreaker,
+    /// and the strict prefill order under whole-prompt mode — independent
+    /// of slot shuffling in the `running` vector.
+    seq: u64,
+    /// Consecutive prefill steps this staged prompt was passed over for a
+    /// shorter one (chunked mode); at [`MAX_PREFILL_BYPASSES`] it takes
+    /// priority.  Reset each time the prompt receives a chunk.
+    bypassed: u32,
     hidden: Vec<f32>,
     tokens: Vec<u32>,
     sim_ns: f64,
@@ -252,6 +323,24 @@ struct Running {
     wall_ns: f64,
     arrival_ns: f64,
     first_token_at_ns: f64,
+}
+
+impl Running {
+    fn retire(self, sim_finish_at_ns: f64, shed: bool) -> RequestResult {
+        RequestResult {
+            id: self.req.id,
+            prompt_tokens: self.req.prompt.len(),
+            tokens: self.tokens,
+            sim_ttft_ns: self.sim_ttft_ns,
+            sim_total_ns: self.sim_ns,
+            wall_ns: self.wall_ns,
+            arrival_ns: self.arrival_ns,
+            sim_first_token_at_ns: self.first_token_at_ns,
+            sim_finish_at_ns,
+            deadline_ns: self.req.deadline_ns.map(|d| d as f64),
+            shed,
+        }
+    }
 }
 
 impl<E: TokenEngine> Server<E, FcfsBatcher> {
@@ -281,11 +370,30 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             scheduler,
             max_batch,
             shard_id: 0,
+            policy: ServingPolicy::default(),
             future: BinaryHeap::new(),
             intake: None,
             decode_cache: HashMap::new(),
             prefill_cache: HashMap::new(),
         }
+    }
+
+    /// Set the serving policy (chunked prefill, preemption).  The default
+    /// reproduces the whole-prefill schedule bit-for-bit.
+    pub fn set_policy(&mut self, policy: ServingPolicy) {
+        debug_assert!(policy.validate().is_ok(), "invalid serving policy: {policy:?}");
+        self.policy = policy;
+    }
+
+    /// Builder-style [`Server::set_policy`].
+    pub fn with_policy(mut self, policy: ServingPolicy) -> Self {
+        self.set_policy(policy);
+        self
+    }
+
+    /// The active serving policy.
+    pub fn policy(&self) -> ServingPolicy {
+        self.policy
     }
 
     /// Queue a request.  Requests with a positive [`Request::arrival_ns`]
@@ -349,6 +457,35 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         Ok(per_bucket.scaled(len as f64 / bucket as f64))
     }
 
+    /// Simulated cost of prefilling prompt tokens `[from, to)`, as the
+    /// difference of the bucket-scaled whole-prefill costs at the two
+    /// boundaries.  A single `[0, len)` span is *exactly* the legacy
+    /// whole-prefill charge (bit-for-bit), and a prompt's chunk spans
+    /// telescope to the same total up to float rounding.
+    fn prefill_span_cost(&mut self, from: u64, to: u64) -> Result<LatencyBreakdown> {
+        let hi = self.prefill_cost(to)?;
+        if from == 0 {
+            return Ok(hi);
+        }
+        let lo = self.prefill_cost(from)?;
+        // The per-token bucket cost is non-decreasing in context (attention
+        // grows superlinearly), so the difference is non-negative.  If a
+        // hardware/model preset ever violates that, chunk costs would stop
+        // telescoping to the whole-prefill cost — fail loudly in debug
+        // builds instead of silently undercharging, and clamp in release.
+        debug_assert!(
+            hi.total_ns() >= lo.total_ns(),
+            "prefill pricing non-monotone: cost({to}) = {} < cost({from}) = {} — \
+             chunked prefill would undercharge",
+            hi.total_ns(),
+            lo.total_ns()
+        );
+        Ok(LatencyBreakdown::new(
+            (hi.pim_ns - lo.pim_ns).max(0.0),
+            (hi.io_ns - lo.io_ns).max(0.0),
+        ))
+    }
+
     /// Simulated per-token decode cost at a context length, priced once
     /// per bucket.
     fn decode_cost(&mut self, ctx: u64) -> Result<LatencyBreakdown> {
@@ -383,10 +520,15 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         }
     }
 
+    /// Clamp an in-past arrival to the current simulated time, comparing
+    /// against the exact `f64` clock.  The integer arrival is truncated
+    /// (never rounded up past `sim_now_ns`), so a clamped request releases
+    /// immediately instead of being pushed up to 1 ns into the future —
+    /// the old `ceil()`-based clamp could park it in the future-arrival
+    /// heap and skew queueing-delay accounting.
     fn clamp_arrival(mut req: Request, sim_now_ns: f64) -> Request {
-        let now = sim_now_ns.ceil() as u64;
-        if req.arrival_ns < now {
-            req.arrival_ns = now;
+        if (req.arrival_ns as f64) < sim_now_ns {
+            req.arrival_ns = sim_now_ns as u64;
         }
         req
     }
@@ -399,8 +541,52 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         }
     }
 
+    /// Index of the batch member the next prefill step should advance.
+    /// Whole-prompt mode goes strictly in admission order (the legacy
+    /// schedule, reproduced bit-for-bit).  Chunked mode picks the member
+    /// with the fewest *remaining* prompt tokens (ties by admission
+    /// order): shortest-remaining-first is what makes chunking pay off for
+    /// TTFT — a short prompt admitted behind a half-prefilled long one
+    /// completes its single chunk and starts decoding instead of queueing
+    /// behind every remaining chunk of the long prompt.  A member bypassed
+    /// [`MAX_PREFILL_BYPASSES`] steps in a row takes priority (oldest
+    /// first), so a sustained stream of short arrivals can stretch a long
+    /// prompt's prefill but never starve it.
+    fn next_prefill(running: &[Running], chunked: bool) -> Option<usize> {
+        if chunked {
+            if let Some(idx) = running
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| {
+                    matches!(r.phase, Phase::Prefill { .. }) && r.bypassed >= MAX_PREFILL_BYPASSES
+                })
+                .min_by_key(|(_, r)| r.seq)
+                .map(|(i, _)| i)
+            {
+                return Some(idx);
+            }
+        }
+        running
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| match r.phase {
+                Phase::Prefill { done } => {
+                    let remaining = (r.req.prompt.len() as u64).max(1).saturating_sub(done);
+                    Some((i, if chunked { remaining } else { 0 }, r.seq))
+                }
+                Phase::Decode => None,
+            })
+            .min_by_key(|&(_, remaining, seq)| (remaining, seq))
+            .map(|(i, _, _)| i)
+    }
+
     /// Drain all submitted requests to completion; with an open intake,
     /// keep serving live submissions until every sender is dropped.
+    ///
+    /// This is the event-driven iteration engine (see module docs): each
+    /// trip around the loop admits newly arrived work, runs the preemption
+    /// scan (when enabled), advances prefill by whole prompts or bounded
+    /// chunks, and executes at most one lockstep decode iteration.
     pub fn run_to_completion(&mut self) -> Result<ServerReport> {
         let mut running: Vec<Running> = Vec::new();
         let mut done: Vec<RequestResult> = Vec::new();
@@ -409,63 +595,180 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         let mut occupancy_sum = 0.0f64;
         let mut sim_now_ns = 0.0f64;
         let mut sim_idle_ns = 0.0f64;
+        let mut prefill_chunks = 0usize;
+        let mut chunk_stall_ns = 0.0f64;
+        let mut preemptions = 0usize;
+        let mut shed_count = 0usize;
+        let mut admit_seq = 0u64;
+        // Consecutive no-progress rounds in which the preemption policy
+        // re-queued everything it was handed (see the livelock bail below).
+        let mut stalled_requeue_rounds = 0usize;
+        // Floor at 1: a zero-token chunk would never advance prefill
+        // (`ServingPolicy::validate` rejects it, but don't trust callers
+        // with an infinite loop).
+        let chunk_tokens = self.policy.prefill_chunk_tokens.map(|c| c.max(1));
 
         loop {
             self.drain_intake(sim_now_ns);
             self.release_due(sim_now_ns);
 
-            // Admit new work (continuous batching).  Prefill serializes on
-            // the shard: admitting a request advances the simulated clock
-            // by its (bucketed) prefill cost.
+            // Admit new work into free batch slots (continuous batching).
+            // Admission only *stages* the request; its prefill cost is
+            // charged by the prefill steps below.
             let slots = self.max_batch.saturating_sub(running.len());
             let mut admitted = 0usize;
             for req in self.scheduler.next_batch(slots) {
                 admitted += 1;
                 let t0 = Instant::now();
                 let hidden = self.engine.embed_prompt(&req.prompt);
-                let prefill = self.prefill_cost(req.prompt.len() as u64)?;
-                sim_now_ns += prefill.total_ns();
-                if req.max_new_tokens == 0 {
-                    // Nothing to decode: retire immediately (prefill-only).
-                    done.push(RequestResult {
-                        id: req.id,
-                        tokens: Vec::new(),
-                        sim_ttft_ns: prefill.total_ns(),
-                        sim_total_ns: prefill.total_ns(),
-                        wall_ns: t0.elapsed().as_nanos() as f64,
-                        arrival_ns: req.arrival_ns as f64,
-                        sim_first_token_at_ns: sim_now_ns,
-                        sim_finish_at_ns: sim_now_ns,
-                        deadline_ns: req.deadline_ns.map(|d| d as f64),
-                    });
-                    continue;
-                }
                 running.push(Running {
+                    phase: Phase::Prefill { done: 0 },
+                    seq: admit_seq,
+                    bypassed: 0,
                     hidden,
                     tokens: Vec::new(),
-                    sim_ns: prefill.total_ns(),
-                    sim_ttft_ns: prefill.total_ns(),
+                    sim_ns: 0.0,
+                    sim_ttft_ns: 0.0,
                     wall_ns: t0.elapsed().as_nanos() as f64,
                     arrival_ns: req.arrival_ns as f64,
                     first_token_at_ns: sim_now_ns,
                     req,
                 });
+                admit_seq += 1;
             }
+
+            // Preemption scan: consult the scheduler about every running
+            // request (newly admitted ones included, so dead-on-arrival
+            // work sheds before paying any prefill).
+            let mut requeued = 0usize;
+            let mut shed_round = 0usize;
+            if self.policy.preempt {
+                let mut i = 0;
+                while i < running.len() {
+                    let r = &running[i];
+                    match self.scheduler.should_preempt(&r.req, r.tokens.len(), sim_now_ns) {
+                        Preemption::Keep => i += 1,
+                        Preemption::Requeue => {
+                            preemptions += 1;
+                            requeued += 1;
+                            // Generation state is dropped: re-admission
+                            // re-prefills (recompute-style preemption).
+                            let r = running.remove(i);
+                            self.scheduler.submit(r.req);
+                        }
+                        Preemption::Shed => {
+                            shed_count += 1;
+                            shed_round += 1;
+                            let r = running.remove(i);
+                            done.push(r.retire(sim_now_ns, true));
+                        }
+                    }
+                }
+            }
+
+            // Prefill steps.  Whole-prompt mode drains every staged prompt
+            // back-to-back in admission order — the legacy schedule.
+            // Chunked mode advances one bounded chunk of the staged prompt
+            // with the least remaining work, then falls through to a
+            // decode iteration, so running decodes (and short prompts)
+            // interleave with a long prompt instead of stalling behind it.
+            let mut prefill_progressed = false;
+            while let Some(idx) = Self::next_prefill(&running, chunk_tokens.is_some()) {
+                prefill_progressed = true;
+                let decoders_waiting =
+                    running.iter().any(|r| matches!(r.phase, Phase::Decode));
+                let prefilled = match running[idx].phase {
+                    Phase::Prefill { done } => done,
+                    Phase::Decode => unreachable!("next_prefill returned a decoding member"),
+                };
+                // Empty prompts still price one token (prefill_cost floors
+                // at 1), so `total` floors too and every prompt finishes.
+                let total = (running[idx].req.prompt.len() as u64).max(1);
+                let end = match chunk_tokens {
+                    None => total,
+                    Some(c) => (prefilled + c).min(total),
+                };
+                let t0 = Instant::now();
+                let span = self.prefill_span_cost(prefilled, end)?;
+                let step_ns = span.total_ns();
+                sim_now_ns += step_ns;
+                prefill_chunks += 1;
+                if decoders_waiting {
+                    chunk_stall_ns += step_ns;
+                }
+                if chunk_tokens.is_some() {
+                    // Anti-starvation accounting: every other staged
+                    // prompt was passed over for this chunk.
+                    for (i, r) in running.iter_mut().enumerate() {
+                        if i != idx && matches!(r.phase, Phase::Prefill { .. }) {
+                            r.bypassed = r.bypassed.saturating_add(1);
+                        }
+                    }
+                    running[idx].bypassed = 0;
+                }
+                let finished = end >= total;
+                let r = &mut running[idx];
+                r.sim_ns += step_ns;
+                r.sim_ttft_ns += step_ns;
+                r.wall_ns += t0.elapsed().as_nanos() as f64;
+                if finished {
+                    // Prompt fully prefilled: the first token lands at the
+                    // end of the next decode iteration; until then, the
+                    // prefill end stamps first-token time (exact for
+                    // prefill-only requests).
+                    r.first_token_at_ns = sim_now_ns;
+                    r.phase = Phase::Decode;
+                } else {
+                    r.phase = Phase::Prefill { done: end };
+                }
+                if finished && running[idx].req.max_new_tokens == 0 {
+                    // Nothing to decode: retire immediately.
+                    let r = running.remove(idx);
+                    done.push(r.retire(sim_now_ns, false));
+                }
+                if chunk_tokens.is_some() {
+                    break;
+                }
+            }
+
             if running.is_empty() {
                 if self.scheduler.pending() > 0 {
-                    if admitted == 0 {
+                    if admitted == 0 && requeued == 0 && shed_round == 0 {
                         // The scheduler returned nothing while work is
                         // queued and every batch slot is free: that
                         // violates the `Scheduler::next_batch` contract
-                        // and would spin this loop forever.
+                        // and would spin this loop forever.  (A round that
+                        // re-queued or shed running work made progress —
+                        // the freed slots refill next round.)
                         anyhow::bail!(
                             "scheduler withheld {} queued request(s) with {} free slots",
                             self.scheduler.pending(),
                             self.max_batch
                         );
                     }
+                    if admitted > 0 && requeued == admitted && shed_round == 0 && !prefill_progressed
+                    {
+                        // Everything admitted this round was immediately
+                        // re-queued before any simulated progress: the
+                        // round ends in exactly the state it started in.
+                        // A stateful policy may legitimately defer a
+                        // request's first few admissions, so tolerate a
+                        // bounded streak of such rounds; a policy that
+                        // keeps it up violates the `should_preempt`
+                        // contract and would spin this loop forever.
+                        stalled_requeue_rounds += 1;
+                        if stalled_requeue_rounds >= 8 {
+                            anyhow::bail!(
+                                "scheduler re-queued all {requeued} admitted request(s) \
+                                 without advancing the clock for \
+                                 {stalled_requeue_rounds} consecutive rounds"
+                            );
+                        }
+                        continue;
+                    }
                     // Everything admitted this round retired at prefill
-                    // (zero-token requests); keep draining the queue.
+                    // (zero-token requests) or was shed; keep draining.
+                    stalled_requeue_rounds = 0;
                     continue;
                 }
                 if let Some(r) = self.future.peek() {
@@ -490,14 +793,30 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                 break;
             }
 
-            // One decode iteration across the batch.  The batch steps in
-            // lockstep, so the shard clock advances by the slowest
-            // member's per-token cost; each member's own service-time
-            // accounting still charges its own bucket.
+            // Real work happened this round: any requeue stall is over.
+            stalled_requeue_rounds = 0;
+
+            // A chunked policy can leave the whole batch mid-prefill; no
+            // decode iteration runs until at least one prompt completes.
+            let decoding = running.iter().filter(|r| matches!(r.phase, Phase::Decode)).count();
+            if decoding == 0 {
+                continue;
+            }
+
+            // One decode iteration across the fully prefilled batch
+            // members.  They step in lockstep, so the shard clock advances
+            // by the slowest member's per-token cost; each member's own
+            // service-time accounting still charges its own bucket.
+            // Occupancy counts only decoding members: under a chunked
+            // policy, mid-prefill members hold slots but are not decoding
+            // (with whole-prompt prefill the two counts are identical).
             decode_iterations += 1;
-            occupancy_sum += running.len() as f64 / self.max_batch as f64;
+            occupancy_sum += decoding as f64 / self.max_batch as f64;
             let mut iteration_ns = 0.0f64;
             for i in 0..running.len() {
+                if !matches!(running[i].phase, Phase::Decode) {
+                    continue;
+                }
                 let t0 = Instant::now();
                 let (mut next, token) = self.engine.step(&running[i].hidden)?;
                 self.engine.feed_token(&mut next, token);
@@ -513,7 +832,7 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             }
             sim_now_ns += iteration_ns;
             for r in &mut running {
-                if r.tokens.len() == 1 {
+                if matches!(r.phase, Phase::Decode) && r.tokens.len() == 1 {
                     // First decoded token lands at the end of this
                     // iteration on the shard clock.
                     r.first_token_at_ns = sim_now_ns;
@@ -523,19 +842,11 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             // Retire finished requests.
             let mut i = 0;
             while i < running.len() {
-                if running[i].tokens.len() >= running[i].req.max_new_tokens {
+                if matches!(running[i].phase, Phase::Decode)
+                    && running[i].tokens.len() >= running[i].req.max_new_tokens
+                {
                     let r = running.swap_remove(i);
-                    done.push(RequestResult {
-                        id: r.req.id,
-                        tokens: r.tokens,
-                        sim_ttft_ns: r.sim_ttft_ns,
-                        sim_total_ns: r.sim_ns,
-                        wall_ns: r.wall_ns,
-                        arrival_ns: r.arrival_ns,
-                        sim_first_token_at_ns: r.first_token_at_ns,
-                        sim_finish_at_ns: sim_now_ns,
-                        deadline_ns: r.req.deadline_ns.map(|d| d as f64),
-                    });
+                    done.push(r.retire(sim_now_ns, false));
                 } else {
                     i += 1;
                 }
@@ -560,6 +871,10 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             } else {
                 occupancy_sum / decode_iterations as f64
             },
+            prefill_chunks,
+            chunk_stall_ns,
+            preemptions,
+            shed: shed_count,
         };
         Ok(ServerReport {
             sim_tokens_per_s: total_tokens as f64 / (sim_now_ns / 1e9).max(f64::MIN_POSITIVE),
@@ -611,6 +926,8 @@ mod tests {
         assert_eq!(report.total_tokens, 30);
         for r in &report.results {
             assert_eq!(r.tokens.len(), 6);
+            assert_eq!(r.prompt_tokens, 2);
+            assert!(!r.shed);
             assert!(r.sim_ttft_ns > 0.0);
             assert!(r.sim_total_ns > r.sim_ttft_ns);
             assert!(r.sim_finish_at_ns > r.sim_first_token_at_ns);
@@ -621,6 +938,11 @@ mod tests {
         assert!(report.shards[0].occupancy > 0.0 && report.shards[0].occupancy <= 1.0);
         assert!(report.shards[0].sim_clock_ns > 0.0);
         assert_eq!(report.shards[0].sim_idle_ns, 0.0);
+        // Whole-prompt prefill: one prefill step per request, no
+        // preemption activity under the default policy.
+        assert_eq!(report.shards[0].prefill_chunks, 5);
+        assert_eq!(report.shards[0].preemptions, 0);
+        assert_eq!(report.shards[0].shed, 0);
     }
 
     #[test]
@@ -649,6 +971,7 @@ mod tests {
         assert_eq!(rep.total_tokens, 0);
         assert!(rep.results.is_empty());
         assert_eq!(rep.shards[0].decode_iterations, 0);
+        assert_eq!(rep.shards[0].prefill_chunks, 0);
     }
 
     #[test]
@@ -741,5 +1064,241 @@ mod tests {
         let rep = s.run_to_completion().unwrap();
         assert!(rep.results[0].met_deadline());
         assert!(!rep.results[1].met_deadline());
+    }
+
+    #[test]
+    fn clamp_compares_against_the_exact_clock() {
+        // In-past arrivals truncate to the f64 clock instead of rounding
+        // up past it (the old ceil()-clamp parked them up to 1 ns in the
+        // future).
+        let clamp = |arrival: u64, now: f64| {
+            Server::<SyntheticEngine>::clamp_arrival(Request::new(0, vec![1], 1).at(arrival), now)
+                .arrival_ns
+        };
+        assert_eq!(clamp(2, 3.5), 3, "in-past arrival clamps to <= now, not ceil(now)");
+        assert_eq!(clamp(3, 3.5), 3, "already in-past by a fraction: clamp down");
+        assert_eq!(clamp(4, 3.5), 4, "future arrivals are untouched");
+        assert_eq!(clamp(3, 3.0), 3, "arrival exactly at an integer clock is kept");
+        assert!((clamp(0, 7.9) as f64) <= 7.9, "clamped arrival is never after the clock");
+    }
+
+    /// A deliberately misbehaving scheduler that accepts submissions but
+    /// never hands work back — violating the `next_batch` contract.
+    struct WithholdingScheduler {
+        queue: Vec<Request>,
+    }
+
+    impl Scheduler for WithholdingScheduler {
+        fn submit(&mut self, req: Request) {
+            self.queue.push(req);
+        }
+        fn pending(&self) -> usize {
+            self.queue.len()
+        }
+        fn next_batch(&mut self, _slots: usize) -> Vec<Request> {
+            Vec::new() // withhold everything, forever
+        }
+    }
+
+    #[test]
+    fn withholding_scheduler_is_detected_not_spun_on() {
+        // Regression test for the scheduler-contract bail path: a policy
+        // that withholds queued work must error out, not hang the loop.
+        let mut s = Server::with_scheduler(
+            SyntheticEngine::new(64, 128),
+            RacamSystem::new(&racam_paper()),
+            tiny_spec(),
+            2,
+            WithholdingScheduler { queue: Vec::new() },
+        );
+        s.submit(Request::new(0, vec![1, 2], 4));
+        s.submit(Request::new(1, vec![3], 4));
+        let err = s.run_to_completion().unwrap_err().to_string();
+        assert!(err.contains("withheld 2 queued request(s)"), "unexpected error: {err}");
+    }
+
+    /// A scheduler that admits normally but re-queues every running
+    /// request unconditionally — the preemption analogue of withholding.
+    struct RequeueForeverScheduler {
+        inner: FcfsBatcher,
+    }
+
+    impl Scheduler for RequeueForeverScheduler {
+        fn submit(&mut self, req: Request) {
+            self.inner.submit(req);
+        }
+        fn pending(&self) -> usize {
+            Scheduler::pending(&self.inner)
+        }
+        fn next_batch(&mut self, slots: usize) -> Vec<Request> {
+            self.inner.next_batch(slots)
+        }
+        fn should_preempt(&mut self, _req: &Request, _gen: usize, _now: f64) -> Preemption {
+            Preemption::Requeue
+        }
+    }
+
+    #[test]
+    fn requeue_forever_scheduler_is_detected() {
+        let mut s = Server::with_scheduler(
+            SyntheticEngine::new(64, 128),
+            RacamSystem::new(&racam_paper()),
+            tiny_spec(),
+            2,
+            RequeueForeverScheduler { inner: FcfsBatcher::new(2) },
+        );
+        s.set_policy(ServingPolicy::whole_prefill().with_preemption());
+        s.submit(Request::new(0, vec![1, 2], 4));
+        let err = s.run_to_completion().unwrap_err().to_string();
+        assert!(err.contains("re-queued"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn chunked_prefill_preserves_totals_and_tokens() {
+        // Chunking changes the *schedule*, not what is computed: same
+        // tokens, same intrinsic prefill cost (chunk costs telescope),
+        // more prefill steps.
+        let run = |policy: ServingPolicy| {
+            let mut s = server(2).with_policy(policy);
+            s.submit(Request::new(0, vec![1; 700], 4));
+            s.submit(Request::new(1, vec![2; 30], 4));
+            s.run_to_completion().unwrap()
+        };
+        let whole = run(ServingPolicy::whole_prefill());
+        let chunked = run(ServingPolicy::chunked(256));
+        assert_eq!(whole.results.len(), chunked.results.len());
+        for (w, c) in whole.results.iter().zip(&chunked.results) {
+            assert_eq!(w.id, c.id);
+            assert_eq!(w.tokens, c.tokens, "req {}: chunking must not change generation", w.id);
+            let rel = (w.sim_ttft_ns - c.sim_ttft_ns).abs() / w.sim_ttft_ns;
+            assert!(rel < 1e-9, "req {}: intrinsic prefill cost must telescope ({rel})", w.id);
+        }
+        // 700 tokens in 256-token chunks = 3 steps, plus 1 for the short
+        // prompt; whole mode takes exactly one step per prompt.
+        assert_eq!(whole.shards[0].prefill_chunks, 2);
+        assert_eq!(chunked.shards[0].prefill_chunks, 4);
+    }
+
+    #[test]
+    fn chunked_prefill_bounds_decode_stall() {
+        // A short request decoding while a long prompt prefills: under
+        // whole-prompt prefill its tokens stall behind the entire prompt;
+        // under chunked prefill, decode iterations interleave between
+        // chunks, so the short request finishes earlier on the clock.
+        let run = |policy: ServingPolicy| {
+            let mut s = server(2).with_policy(policy);
+            // Short request first: it is decoding by the time the long
+            // prompt is admitted.
+            s.submit(Request::new(0, vec![1; 4], 8));
+            s.submit(Request::new(1, vec![2; 2000], 2).at(1));
+            s.run_to_completion().unwrap()
+        };
+        let whole = run(ServingPolicy::whole_prefill());
+        let chunked = run(ServingPolicy::chunked(256));
+        let short_whole = &whole.results[0];
+        let short_chunked = &chunked.results[0];
+        assert!(
+            short_chunked.sim_finish_at_ns < short_whole.sim_finish_at_ns,
+            "chunked: short request must finish earlier ({} vs {})",
+            short_chunked.sim_finish_at_ns,
+            short_whole.sim_finish_at_ns
+        );
+        // The stall a decoder suffered per prefill step is bounded by one
+        // chunk, so total chunk-stall time shrinks... but is still > 0.
+        assert!(chunked.shards[0].chunk_stall_ns > 0.0);
+        assert!(whole.shards[0].chunk_stall_ns > chunked.shards[0].chunk_stall_ns);
+    }
+
+    #[test]
+    fn chunked_prefill_improves_short_request_ttft() {
+        // A long and a short prompt admitted together (FCFS order puts
+        // the long one first): under whole-prompt prefill the short's
+        // first token waits behind the entire long prefill; under chunked
+        // prefill, shortest-remaining-first completes the short's single
+        // chunk immediately and it decodes while the long prompt chunks.
+        let run = |policy: ServingPolicy| {
+            let mut s = server(2).with_policy(policy);
+            s.submit(Request::new(0, vec![1; 2048], 2));
+            s.submit(Request::new(1, vec![2; 32], 2));
+            s.run_to_completion().unwrap()
+        };
+        let whole = run(ServingPolicy::whole_prefill());
+        let chunked = run(ServingPolicy::chunked(256));
+        let ttft = |rep: &ServerReport| rep.results.iter().find(|r| r.id == 1).unwrap().ttft_ns();
+        let (short_w, short_c) = (ttft(&whole), ttft(&chunked));
+        assert!(
+            short_c < short_w * 0.5,
+            "chunked short TTFT {short_c} must undercut whole-prefill {short_w}"
+        );
+        // The long prompt still completes with identical tokens.
+        assert_eq!(whole.results[0].tokens, chunked.results[0].tokens);
+    }
+
+    #[test]
+    fn chunked_prefill_never_starves_a_long_prompt() {
+        // Chunked mode prefers the shortest remaining prefill, but a
+        // sustained stream of short arrivals must not starve a long
+        // prompt: after MAX_PREFILL_BYPASSES consecutive bypasses it gets
+        // a chunk, so it finishes well before the short stream drains.
+        let mut s = server(2).with_policy(ServingPolicy::chunked(64));
+        s.submit(Request::new(0, vec![1; 512], 1)); // 8 chunks of 64
+        for id in 1..=60 {
+            s.submit(Request::new(id, vec![2; 32], 1));
+        }
+        let rep = s.run_to_completion().unwrap();
+        assert_eq!(rep.results.len(), 61);
+        let long = &rep.results[0];
+        let last_short_finish =
+            rep.results[1..].iter().map(|r| r.sim_finish_at_ns).fold(0.0f64, f64::max);
+        assert!(
+            long.sim_finish_at_ns < last_short_finish,
+            "long prompt starved: finished at {} vs last short at {}",
+            long.sim_finish_at_ns,
+            last_short_finish
+        );
+    }
+
+    #[test]
+    fn edf_preemption_sheds_past_deadline_work() {
+        use crate::coordinator::scheduler::EdfScheduler;
+        let mk = |policy: ServingPolicy| {
+            let mut s = Server::with_scheduler(
+                SyntheticEngine::new(64, 128),
+                RacamSystem::new(&racam_paper()),
+                tiny_spec(),
+                1,
+                EdfScheduler::new(),
+            );
+            s.set_policy(policy);
+            // Request 0 occupies the single slot for a long time; request
+            // 1's deadline expires while it waits in the queue.
+            s.submit(Request::new(0, vec![1; 64], 64).with_deadline(u64::MAX));
+            s.submit(Request::new(1, vec![2; 64], 64).with_deadline(1));
+            s.run_to_completion().unwrap()
+        };
+        // Without preemption both run to completion (one just misses).
+        let kept = mk(ServingPolicy::whole_prefill());
+        assert_eq!(kept.shards[0].shed, 0);
+        assert_eq!(kept.results.iter().filter(|r| !r.met_deadline()).count(), 1);
+        assert_eq!(kept.total_tokens, 128);
+
+        // With preemption the dead request is shed after at most one
+        // decode iteration and the survivor still completes.
+        let shed = mk(ServingPolicy::whole_prefill().with_preemption());
+        assert_eq!(shed.shards[0].shed, 1);
+        let r1 = shed.results.iter().find(|r| r.id == 1).unwrap();
+        assert!(r1.shed);
+        assert!(!r1.met_deadline());
+        assert!(r1.tokens.len() < 64, "shed request must not run to completion");
+        let r0 = shed.results.iter().find(|r| r.id == 0).unwrap();
+        assert!(!r0.shed);
+        assert_eq!(r0.tokens.len(), 64);
+        assert!(shed.total_tokens < kept.total_tokens);
+    }
+
+    #[test]
+    fn policy_accessors_roundtrip() {
+        let s = server(1).with_policy(ServingPolicy::interactive());
+        assert_eq!(s.policy(), ServingPolicy::interactive());
     }
 }

@@ -12,6 +12,7 @@ mod fig14;
 mod fig15;
 mod fig16;
 mod fig17;
+mod prefill;
 mod tables;
 mod traffic;
 
@@ -26,7 +27,7 @@ use std::time::Instant;
 /// All experiment ids, in paper order (extensions last).
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
-    "tab1", "tab4", "tab5", "ext-energy", "ext-reliability", "ext-trace", "traffic",
+    "tab1", "tab4", "tab5", "ext-energy", "ext-reliability", "ext-trace", "traffic", "prefill",
 ];
 
 /// Run one experiment; returns its tables (already saved under `results/`,
@@ -51,6 +52,7 @@ pub fn run(id: &str) -> Result<Vec<Table>> {
         "ext-reliability" => extensions::run_reliability(),
         "ext-trace" => extensions::run_trace(),
         "traffic" => traffic::run()?,
+        "prefill" => prefill::run()?,
         other => anyhow::bail!("unknown experiment '{other}' (known: {ALL_IDS:?})"),
     };
     let wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
@@ -71,26 +73,36 @@ pub fn run(id: &str) -> Result<Vec<Table>> {
 /// Machine-readable bench artifact: experiment name, the *baseline*
 /// hardware preset of this build (experiments that sweep hardware — e.g.
 /// fig13 — vary from this preset; their tables carry the swept values),
-/// its result tables (the latencies), and the host wall time of the run —
-/// one JSON per experiment so the perf trajectory is diffable across PRs.
+/// experiment-specific config (serving experiments add scheduler names and
+/// arrival rates so the perf trajectory is diffable without parsing table
+/// titles), its result tables (the latencies), and the host wall time of
+/// the run — one JSON per experiment so the trajectory diffs across PRs.
 fn bench_json(id: &str, tables: &[Table], wall_ms: f64) -> String {
     let hw = racam_paper();
+    let mut config = vec![
+        ("preset", Value::Str("racam_paper".into())),
+        ("channels", Value::Num(hw.dram.channels as f64)),
+        ("ranks", Value::Num(hw.dram.ranks as f64)),
+        ("total_pes", Value::Num(hw.total_pes() as f64)),
+        ("int8_tops", Value::Num(hw.peak_tops(Precision::Int8))),
+    ];
+    config.extend(extra_bench_config(id));
     Value::obj(vec![
         ("name", Value::Str(id.to_string())),
-        (
-            "config",
-            Value::obj(vec![
-                ("preset", Value::Str("racam_paper".into())),
-                ("channels", Value::Num(hw.dram.channels as f64)),
-                ("ranks", Value::Num(hw.dram.ranks as f64)),
-                ("total_pes", Value::Num(hw.total_pes() as f64)),
-                ("int8_tops", Value::Num(hw.peak_tops(Precision::Int8))),
-            ]),
-        ),
+        ("config", Value::obj(config)),
         ("wall_ms", Value::Num(wall_ms)),
         ("tables", Value::Arr(tables.iter().map(|t| t.to_json()).collect())),
     ])
     .pretty()
+}
+
+/// Experiment-specific additions to the `BENCH_<id>.json` config block.
+fn extra_bench_config(id: &str) -> Vec<(&'static str, Value)> {
+    match id {
+        "traffic" => traffic::bench_config(),
+        "prefill" => prefill::bench_config(),
+        _ => Vec::new(),
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +123,25 @@ mod tests {
         assert_eq!(v.get("name").unwrap().as_str().unwrap(), "fig9");
         assert_eq!(v.get("config").unwrap().get("channels").unwrap().as_u32().unwrap(), 8);
         assert!(v.get("wall_ms").unwrap().as_f64().unwrap() > 0.0);
+        // Non-serving experiments carry no scheduler/rate entries.
+        assert!(v.get("config").unwrap().get("schedulers").is_err());
+    }
+
+    #[test]
+    fn serving_bench_json_names_schedulers_and_rates() {
+        use crate::config::json::{self, Value};
+        for id in ["traffic", "prefill"] {
+            let s = super::bench_json(id, &[], 1.0);
+            let v = json::parse(&s).unwrap();
+            let cfg = v.get("config").unwrap();
+            let Value::Arr(scheds) = cfg.get("schedulers").unwrap() else {
+                panic!("{id}: schedulers must be an array")
+            };
+            assert!(!scheds.is_empty(), "{id}");
+            let Value::Arr(rates) = cfg.get("rates_per_s").unwrap() else {
+                panic!("{id}: rates_per_s must be an array")
+            };
+            assert!(rates.iter().all(|r| r.as_f64().unwrap() > 0.0), "{id}");
+        }
     }
 }

@@ -1,0 +1,333 @@
+//! `exp prefill` — chunked vs whole-prompt prefill under a long-prompt
+//! mixed workload: a stream of short interactive requests with occasional
+//! very long prompts, served with and without bounded prefill chunks
+//! ([`ServingPolicy`]) and with EDF deadline preemption on top.
+//!
+//! The comparison isolates the *iteration schedule*: every cell sees the
+//! same seed-deterministic stream, prices identical kernel shapes from the
+//! same channel-partitioned [`MappingService`]s, and differs only in
+//! admission policy and serving policy.  The headline column is the p95
+//! TTFT of the short-request population — the latency whole-prompt prefill
+//! sacrifices whenever a long prompt lands — next to shed/preemption
+//! counts and the decode time stalled behind prefill steps.
+
+use crate::config::json::Value;
+use crate::config::{
+    gpt3_6_7b, racam_paper, ArrivalProcess, LengthDist, LlmSpec, ServingPolicy, TrafficSpec,
+};
+use crate::coordinator::{
+    Coordinator, EdfScheduler, FcfsBatcher, Request, Scheduler, SyntheticEngine,
+};
+use crate::mapping::MappingService;
+use crate::metrics::fmt_ns;
+use crate::report::Table;
+use crate::traffic::{generate, ttft_percentiles_where, SloSummary};
+
+const SHARDS: usize = 2;
+const MAX_BATCH: usize = 4;
+const SEED: u64 = 0xC4_0C_4A_11;
+/// Arrival rates straddling the 2-shard capacity under the long-prompt mix.
+const RATES: &[f64] = &[100.0, 400.0];
+const SHORT_REQUESTS: u64 = 24;
+const LONG_REQUESTS: u64 = 6;
+/// Long prompts span 8 pricing buckets — one of them stalls a whole-prompt
+/// shard for many decode iterations' worth of time.
+const LONG_PROMPT: u64 = 2048;
+/// Prompt-length boundary between the short and long populations.
+const SHORT_MAX_PROMPT: usize = 256;
+const DEADLINE_NS: u64 = 150_000_000; // 150 ms mean e2e SLO
+const CHUNK: u64 = 256;
+/// Admission policies compared, in row order within each rate — the same
+/// roster the `BENCH_prefill.json` config block reports.
+const SCHEDULERS: &[&str] = &["fcfs", "edf"];
+
+/// The serving policies each scheduler is run under, in row order.
+fn policies() -> Vec<ServingPolicy> {
+    vec![
+        ServingPolicy::whole_prefill(),
+        ServingPolicy::chunked(CHUNK),
+        ServingPolicy::chunked(CHUNK).with_preemption(),
+    ]
+}
+
+/// Experiment-specific entries for the `BENCH_prefill.json` config block.
+pub(crate) fn bench_config() -> Vec<(&'static str, Value)> {
+    vec![
+        (
+            "schedulers",
+            Value::Arr(SCHEDULERS.iter().map(|s| Value::Str(s.to_string())).collect()),
+        ),
+        ("rates_per_s", Value::Arr(RATES.iter().map(|r| Value::Num(*r)).collect())),
+        (
+            "policies",
+            Value::Arr(policies().iter().map(|p| Value::Str(p.label())).collect()),
+        ),
+        ("requests", Value::Num((SHORT_REQUESTS + LONG_REQUESTS) as f64)),
+        ("long_prompt_tokens", Value::Num(LONG_PROMPT as f64)),
+        ("deadline_ms", Value::Num(DEADLINE_NS as f64 / 1e6)),
+    ]
+}
+
+/// Merge independently generated streams into one arrival-ordered stream
+/// with sequential ids (the generator numbers each stream 0..n itself).
+fn merge_streams(streams: Vec<Vec<Request>>) -> Vec<Request> {
+    let mut all: Vec<Request> = streams.into_iter().flatten().collect();
+    // Stable sort: ties keep earlier-stream requests first, deterministic.
+    all.sort_by_key(|r| r.arrival_ns);
+    for (i, r) in all.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    all
+}
+
+/// The mixed workload: mostly short prompts at `rate_per_s`, plus long
+/// prompts arriving at a proportional trickle, both under the same mean
+/// e2e deadline.
+fn mixed_stream(rate_per_s: f64, shorts: u64, longs: u64) -> Vec<Request> {
+    let short_spec = TrafficSpec {
+        seed: SEED,
+        requests: shorts,
+        arrival: ArrivalProcess::Poisson { rate_per_s },
+        prompt: LengthDist::Uniform { lo: 16, hi: 96 },
+        output: LengthDist::Uniform { lo: 6, hi: 12 },
+        deadline_ns: Some(DEADLINE_NS),
+    };
+    let long_rate = rate_per_s * longs.max(1) as f64 / shorts.max(1) as f64;
+    let long_spec = TrafficSpec {
+        seed: SEED ^ 0x1046,
+        requests: longs,
+        arrival: ArrivalProcess::Poisson { rate_per_s: long_rate },
+        prompt: LengthDist::Fixed(LONG_PROMPT),
+        output: LengthDist::Uniform { lo: 2, hi: 6 },
+        deadline_ns: Some(DEADLINE_NS),
+    };
+    merge_streams(vec![generate(&short_spec), generate(&long_spec)])
+}
+
+/// One graded cell plus the short-request TTFT tail the table leads with.
+struct Cell {
+    summary: SloSummary,
+    short_ttft_p95: f64,
+}
+
+impl Cell {
+    fn headers() -> Vec<&'static str> {
+        vec![
+            "run",
+            "reqs",
+            "short_ttft_p95",
+            "ttft_p95",
+            "e2e_p99",
+            "goodput_tok/s",
+            "slo_met",
+            "shed",
+            "preempts",
+            "prefill_steps",
+            "decode_stall",
+        ]
+    }
+
+    fn row(&self, label: &str) -> Vec<String> {
+        let s = &self.summary;
+        vec![
+            label.to_string(),
+            s.requests.to_string(),
+            fmt_ns(self.short_ttft_p95),
+            fmt_ns(s.ttft.p95),
+            fmt_ns(s.e2e.p99),
+            format!("{:.0}", s.goodput_tokens_per_s),
+            format!("{:.0}%", 100.0 * s.slo_attainment),
+            s.shed_requests.to_string(),
+            s.preemptions.to_string(),
+            s.prefill_chunks.to_string(),
+            fmt_ns(s.chunk_stall_ns),
+        ]
+    }
+}
+
+/// Serve one (scheduler, policy) cell over `stream` and grade it.
+fn run_cell<S: Scheduler>(
+    services: &[MappingService],
+    model: &LlmSpec,
+    stream: &[Request],
+    policy: ServingPolicy,
+    scheduler_factory: impl FnMut(usize) -> S,
+) -> crate::Result<Cell> {
+    let mut coord = Coordinator::with_shard_services(
+        services.to_vec(),
+        model.clone(),
+        MAX_BATCH,
+        |_| SyntheticEngine::new(64, 256),
+        scheduler_factory,
+    )
+    .with_policy(policy);
+    for req in stream {
+        coord.submit(req.clone());
+    }
+    let report = coord.run_to_completion()?;
+    let short = ttft_percentiles_where(&report, |r| r.prompt_tokens <= SHORT_MAX_PROMPT);
+    Ok(Cell { summary: SloSummary::from_report(&report), short_ttft_p95: short.p95 })
+}
+
+/// The (scheduler × policy) × rate matrix over `services` (one mapping
+/// service per shard, shared across every cell).
+fn matrix(
+    services: &[MappingService],
+    model: &LlmSpec,
+    rates: &[f64],
+    shorts: u64,
+    longs: u64,
+) -> crate::Result<Table> {
+    let mut t = Table::new(
+        &format!(
+            "Prefill — chunked ({CHUNK} tok) vs whole-prompt prefill, {} on {} shard(s) × batch \
+             {MAX_BATCH}; {longs} long ({LONG_PROMPT} tok) per {shorts} short requests, \
+             {}ms e2e SLO",
+            model.name,
+            services.len(),
+            DEADLINE_NS / 1_000_000
+        ),
+        &Cell::headers(),
+    );
+    for &rate in rates {
+        let stream = mixed_stream(rate, shorts, longs);
+        // The SCHEDULERS roster bench_config() reports drives the rows,
+        // so the BENCH json and the table cannot drift apart: a roster
+        // entry without a dispatch arm fails loudly instead of silently
+        // reporting schedulers that have no rows.
+        for &sched in SCHEDULERS {
+            for policy in policies() {
+                let cell = match sched {
+                    "fcfs" => run_cell(services, model, &stream, policy, |_| {
+                        FcfsBatcher::new(MAX_BATCH)
+                    })?,
+                    "edf" => run_cell(services, model, &stream, policy, |_| {
+                        EdfScheduler::new()
+                    })?,
+                    other => anyhow::bail!("no dispatch arm for scheduler '{other}'"),
+                };
+                t.row(cell.row(&format!("{sched}/{}@{rate}/s", policy.label())));
+            }
+        }
+    }
+    Ok(t)
+}
+
+pub fn run() -> crate::Result<Vec<Table>> {
+    let services: Vec<MappingService> =
+        Coordinator::<SyntheticEngine, FcfsBatcher>::partitioned_services(&racam_paper(), SHARDS);
+    Ok(vec![matrix(&services, &gpt3_6_7b(), RATES, SHORT_REQUESTS, LONG_REQUESTS)?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+
+    fn tiny_spec() -> LlmSpec {
+        LlmSpec {
+            name: "tiny".into(),
+            layers: 2,
+            hidden: 256,
+            heads: 4,
+            kv_heads: 4,
+            ffn: 512,
+            gated_ffn: false,
+            vocab: 512,
+            prec: Precision::Int8,
+        }
+    }
+
+    fn one_service() -> Vec<MappingService> {
+        vec![MappingService::for_config(&racam_paper())]
+    }
+
+    #[test]
+    fn chunked_prefill_lowers_short_request_ttft_p95() {
+        // Adversarial stream on one shard: each short request arrives
+        // together with a long prompt that FCFS admits first.  Whole-
+        // prompt prefill parks every short first token behind an entire
+        // long prefill; chunked prefill does not.
+        let mut stream = Vec::new();
+        for i in 0..3u64 {
+            let at = 1 + i * 1_000_000_000; // pairs 1 s apart: no overlap
+            stream.push(Request::new(2 * i, vec![1; LONG_PROMPT as usize], 2).at(at));
+            stream.push(Request::new(2 * i + 1, vec![2; 32], 2).at(at));
+        }
+        let services = one_service();
+        let whole = run_cell(&services, &tiny_spec(), &stream, ServingPolicy::whole_prefill(), |_| {
+            FcfsBatcher::new(MAX_BATCH)
+        })
+        .unwrap();
+        let chunked = run_cell(&services, &tiny_spec(), &stream, ServingPolicy::chunked(CHUNK), |_| {
+            FcfsBatcher::new(MAX_BATCH)
+        })
+        .unwrap();
+        assert!(
+            chunked.short_ttft_p95 < whole.short_ttft_p95 * 0.5,
+            "chunked short p95 TTFT {} must undercut whole-prefill {}",
+            chunked.short_ttft_p95,
+            whole.short_ttft_p95
+        );
+        // Same stream, same completions.
+        assert_eq!(chunked.summary.requests, whole.summary.requests);
+        assert_eq!(chunked.summary.shed_requests, 0);
+    }
+
+    #[test]
+    fn preemption_sheds_expired_deadlines_and_reports_them() {
+        // Deadlines that expire after the first simulated step: EDF with
+        // preemption sheds all three instead of running them out.
+        let stream: Vec<Request> = (0..3u64)
+            .map(|id| Request::new(id, vec![3; 32], 8).with_deadline(1))
+            .collect();
+        let cell = run_cell(
+            &one_service(),
+            &tiny_spec(),
+            &stream,
+            ServingPolicy::chunked(CHUNK).with_preemption(),
+            |_| EdfScheduler::new(),
+        )
+        .unwrap();
+        assert_eq!(cell.summary.shed_requests, 3);
+        assert_eq!(cell.summary.slo_attainment, 0.0);
+        let row = cell.row("edf/preempt");
+        let shed_col = Cell::headers().iter().position(|h| *h == "shed").unwrap();
+        assert_eq!(row[shed_col], "3", "shed count must appear in the SLO report row");
+    }
+
+    #[test]
+    fn matrix_covers_schedulers_and_policies() {
+        let t = matrix(&one_service(), &tiny_spec(), &[800.0], 6, 2).unwrap();
+        assert_eq!(t.num_rows(), 6, "2 schedulers x 3 policies");
+        let rendered = t.render();
+        for label in
+            ["fcfs/whole@800", "fcfs/chunk256@800", "edf/chunk256+preempt@800"]
+        {
+            assert!(rendered.contains(label), "missing row {label} in:\n{rendered}");
+        }
+        assert_eq!(t.headers().len(), Cell::headers().len());
+    }
+
+    #[test]
+    fn mixed_stream_is_deterministic_and_mixed() {
+        let a = mixed_stream(200.0, 8, 2);
+        let b = mixed_stream(200.0, 8, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10);
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        assert_eq!(a.iter().filter(|r| r.prompt.len() == LONG_PROMPT as usize).count(), 2);
+        assert!(a.windows(2).all(|w| w[0].arrival_ns <= w[1].arrival_ns));
+    }
+
+    #[test]
+    fn bench_config_names_schedulers_rates_and_policies() {
+        let pairs = bench_config();
+        let keys: Vec<&str> = pairs.iter().map(|(k, _)| *k).collect();
+        for k in ["schedulers", "rates_per_s", "policies"] {
+            assert!(keys.contains(&k), "missing {k}");
+        }
+    }
+}

@@ -11,6 +11,7 @@
 //! are seed-deterministic: at a given rate, every scheduler sees the same
 //! arrivals, prompts and deadlines.
 
+use crate::config::json::Value;
 use crate::config::{
     gpt3_6_7b, llama3_8b, racam_paper, ArrivalProcess, LengthDist, LlmSpec, TrafficSpec,
 };
@@ -27,6 +28,33 @@ const SHARDS: usize = 2;
 const MAX_BATCH: usize = 4;
 const DEADLINE_NS: u64 = 80_000_000; // 80 ms end-to-end SLO
 const SEED: u64 = 0x5EED_7A_FF1C;
+/// Admission policies compared, in row order within each rate.
+const SCHEDULERS: &[&str] = &["fcfs", "bucketed", "edf"];
+/// Rates straddle the 2-shard service capacity so the tables show the
+/// whole story: queueing-free, near-saturation, and overload.
+const GPT_RATES: &[f64] = &[50.0, 200.0, 800.0];
+const GPT_REQUESTS: u64 = 36;
+const LLAMA_RATES: &[f64] = &[200.0];
+const LLAMA_REQUESTS: u64 = 24;
+
+/// Experiment-specific entries for the `BENCH_traffic.json` config block:
+/// scheduler names and arrival rates, so the perf trajectory is diffable
+/// without parsing table titles.
+pub(crate) fn bench_config() -> Vec<(&'static str, Value)> {
+    vec![
+        (
+            "schedulers",
+            Value::Arr(SCHEDULERS.iter().map(|s| Value::Str(s.to_string())).collect()),
+        ),
+        ("rates_per_s", Value::Arr(GPT_RATES.iter().map(|r| Value::Num(*r)).collect())),
+        (
+            "llama_rates_per_s",
+            Value::Arr(LLAMA_RATES.iter().map(|r| Value::Num(*r)).collect()),
+        ),
+        ("requests", Value::Num(GPT_REQUESTS as f64)),
+        ("deadline_ms", Value::Num(DEADLINE_NS as f64 / 1e6)),
+    ]
+}
 
 fn spec_at(rate_per_s: f64, requests: u64) -> TrafficSpec {
     TrafficSpec {
@@ -87,13 +115,22 @@ pub(crate) fn matrix(
     let mut util_summary = None;
     for &rate in rates {
         let traffic = spec_at(rate, requests);
-        let fcfs = run_cell(&services, model, &traffic, |_| FcfsBatcher::new(MAX_BATCH))?;
-        let bucketed = run_cell(&services, model, &traffic, |_| LengthBucketed::new())?;
-        let edf = run_cell(&services, model, &traffic, |_| EdfScheduler::new())?;
-        t.row(fcfs.table_row(&format!("fcfs@{rate}/s")));
-        t.row(bucketed.table_row(&format!("bucketed@{rate}/s")));
-        t.row(edf.table_row(&format!("edf@{rate}/s")));
-        util_summary = Some(fcfs);
+        // The SCHEDULERS roster bench_config() reports drives the rows,
+        // so the BENCH json and the table cannot drift apart: a roster
+        // entry without a dispatch arm fails loudly instead of silently
+        // reporting schedulers that have no rows.
+        for &sched in SCHEDULERS {
+            let cell = match sched {
+                "fcfs" => run_cell(&services, model, &traffic, |_| FcfsBatcher::new(MAX_BATCH))?,
+                "bucketed" => run_cell(&services, model, &traffic, |_| LengthBucketed::new())?,
+                "edf" => run_cell(&services, model, &traffic, |_| EdfScheduler::new())?,
+                other => anyhow::bail!("no dispatch arm for scheduler '{other}'"),
+            };
+            if sched == "fcfs" {
+                util_summary = Some(cell.clone());
+            }
+            t.row(cell.table_row(&format!("{sched}@{rate}/s")));
+        }
     }
     let util = util_summary
         .expect("at least one rate")
@@ -102,12 +139,10 @@ pub(crate) fn matrix(
 }
 
 pub fn run() -> crate::Result<Vec<Table>> {
-    // Rates straddle the 2-shard service capacity so the tables show the
-    // whole story: queueing-free, near-saturation, and overload.
-    let (gpt, gpt_util) = matrix(&gpt3_6_7b(), &[50.0, 200.0, 800.0], 36)?;
+    let (gpt, gpt_util) = matrix(&gpt3_6_7b(), GPT_RATES, GPT_REQUESTS)?;
     // One mid rate on a Llama preset: GQA + gated FFN change the kernel
     // mix, not the scheduling conclusions.
-    let (llama, _) = matrix(&llama3_8b(), &[200.0], 24)?;
+    let (llama, _) = matrix(&llama3_8b(), LLAMA_RATES, LLAMA_REQUESTS)?;
     Ok(vec![gpt, gpt_util, llama])
 }
 

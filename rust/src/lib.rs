@@ -37,8 +37,8 @@
 //! | [`metrics`] | latency breakdowns, utilization, counters |
 //! | [`report`] | paper-style table renderers + CSV |
 //! | [`runtime`] | artifact discovery; PJRT loader/executor behind the `pjrt` feature |
-//! | [`coordinator`] | serving: per-shard `Server` (simulated clock, async intake, pluggable schedulers), multi-worker `Coordinator` with per-shard DRAM channel partitioning over shared mapping services |
-//! | [`traffic`] | open-loop workload generator (seeded PRNG, Poisson/bursty arrivals, trace replay) + SLO metrics (TTFT/TPOT/e2e tails, goodput, utilization) |
+//! | [`coordinator`] | serving: per-shard `Server` running an event-driven iteration engine (simulated clock, chunked prefill via `config::ServingPolicy`, scheduler preemption, async intake), multi-worker `Coordinator` with per-shard DRAM channel partitioning over shared mapping services |
+//! | [`traffic`] | open-loop workload generator (seeded PRNG, Poisson/bursty arrivals, trace replay) + SLO metrics (TTFT/TPOT/e2e tails, goodput, shed/preemption counts, utilization) |
 //! | [`experiments`] | one entry point per paper table/figure |
 
 pub mod area;

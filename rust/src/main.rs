@@ -58,11 +58,17 @@ fn print_help() {
          \x20 racam serve [--requests N] [--tokens N] [--batch N] [--shards N] [--synthetic]\n\
          \x20             [--mapping-cache FILE] [--sched fcfs|bucket|edf] [--rate R]\n\
          \x20             [--deadline-ms MS] [--traffic SPEC.json | --trace TRACE.json]\n\
+         \x20             [--chunk-tokens N] [--preempt] [--serving POLICY.json]\n\
          \n\
          serve traffic modes: --rate R replays a Poisson stream at R req/s on the\n\
          simulated clock (add --deadline-ms for an e2e SLO); --traffic loads a\n\
          TrafficSpec JSON; --trace replays a recorded trace. All three print SLO\n\
-         tables (TTFT/TPOT tails, goodput)."
+         tables (TTFT/TPOT tails, goodput, shed counts).\n\
+         \n\
+         serving policy: --chunk-tokens N bounds each prefill step to N prompt\n\
+         tokens (chunked prefill; unset = whole-prompt, the paper schedule);\n\
+         --preempt lets deadline-aware schedulers (edf) shed past-deadline work;\n\
+         --serving loads a ServingPolicy JSON instead of the two flags."
     );
 }
 
@@ -173,7 +179,7 @@ fn cmd_config(args: Vec<String>) -> Result<()> {
 }
 
 fn cmd_serve(args: Vec<String>) -> Result<()> {
-    use racam::config::{ArrivalProcess, LengthDist, TrafficSpec};
+    use racam::config::{ArrivalProcess, LengthDist, ServingPolicy, TrafficSpec};
     use racam::coordinator::{
         Coordinator, EdfScheduler, FcfsBatcher, LengthBucketed, Request, Scheduler,
         SyntheticEngine, TokenEngine,
@@ -189,6 +195,25 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     let rate: Option<f64> = flag_value(&args, "--rate").map(|v| v.parse()).transpose()?;
     anyhow::ensure!(shards >= 1, "--shards must be at least 1");
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+
+    // Serving policy: a JSON file, or --chunk-tokens/--preempt flags (the
+    // default is the paper-faithful whole-prompt schedule).
+    let policy = if let Some(path) = flag_value(&args, "--serving") {
+        anyhow::ensure!(
+            flag_value(&args, "--chunk-tokens").is_none() && !args.iter().any(|a| a == "--preempt"),
+            "--serving replaces --chunk-tokens/--preempt; pass one or the other"
+        );
+        ServingPolicy::from_json(&std::fs::read_to_string(&path)?)?
+    } else {
+        let chunk: Option<u64> =
+            flag_value(&args, "--chunk-tokens").map(|v| v.parse()).transpose()?;
+        let p = ServingPolicy {
+            prefill_chunk_tokens: chunk,
+            preempt: args.iter().any(|a| a == "--preempt"),
+        };
+        p.validate().map_err(|e| anyhow::anyhow!("invalid serving policy: {e}"))?;
+        p
+    };
 
     let spec = config::gpt3_6_7b();
     // Each worker shard prices against its honest share of the paper
@@ -242,7 +267,9 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     fn drive<E: TokenEngine + Send, S: Scheduler>(
         mut coord: Coordinator<E, S>,
         requests: Vec<Request>,
+        policy: ServingPolicy,
     ) -> Result<racam::coordinator::ServerReport> {
+        coord.set_policy(policy);
         for req in requests {
             coord.submit(req);
         }
@@ -257,18 +284,21 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                     FcfsBatcher::new(batch)
                 }),
                 requests,
+                policy,
             )?,
             "bucket" => drive(
                 Coordinator::with_shard_services(services.clone(), spec.clone(), batch, engine, |_| {
                     LengthBucketed::new()
                 }),
                 requests,
+                policy,
             )?,
             "edf" => drive(
                 Coordinator::with_shard_services(services.clone(), spec.clone(), batch, engine, |_| {
                     EdfScheduler::new()
                 }),
                 requests,
+                policy,
             )?,
             other => anyhow::bail!("unknown scheduler '{other}' (fcfs|bucket|edf)"),
         }
@@ -292,7 +322,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             let coord = Coordinator::with_shard_services(services.clone(), spec.clone(), batch, |_| {
                 HloDecodeEngine::new(modules.next().expect("one module per shard"), 64, 256)
             }, |_| FcfsBatcher::new(batch));
-            drive(coord, requests)?
+            drive(coord, requests, policy)?
         }
         #[cfg(not(feature = "pjrt"))]
         {
@@ -308,28 +338,37 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     }
 
     println!(
-        "served {} requests, {} tokens total across {shards} shard(s) [{sched}]",
+        "served {} requests, {} tokens total across {shards} shard(s) [{sched}/{}]",
         report.results.len(),
-        report.total_tokens
+        report.total_tokens,
+        policy.label()
     );
     for r in &report.results {
         println!(
-            "  req {}: ttft {} total {}  tokens {:?}…",
+            "  req {}: ttft {} total {}  tokens {:?}…{}",
             r.id,
             fmt_ns(r.ttft_ns()),
             fmt_ns(r.e2e_ns()),
-            &r.tokens[..4.min(r.tokens.len())]
+            &r.tokens[..4.min(r.tokens.len())],
+            if r.shed { "  [shed]" } else { "" }
         );
     }
     for s in &report.shards {
         println!(
-            "  shard {}: {} reqs, {} tokens, {} decode iters, occupancy {:.0}%, busy {:.0}%",
+            "  shard {}: {} reqs, {} tokens, {} decode iters, {} prefill steps, \
+             occupancy {:.0}%, busy {:.0}%{}",
             s.shard,
             s.requests,
             s.tokens,
             s.decode_iterations,
+            s.prefill_chunks,
             s.occupancy * 100.0,
-            s.utilization() * 100.0
+            s.utilization() * 100.0,
+            if s.shed > 0 || s.preemptions > 0 {
+                format!(", {} shed, {} preempted", s.shed, s.preemptions)
+            } else {
+                String::new()
+            }
         );
     }
     if open_loop {

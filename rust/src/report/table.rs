@@ -29,6 +29,11 @@ impl Table {
         self.rows.len()
     }
 
+    /// Column headers (for tests and tooling that index into rows).
+    pub fn headers(&self) -> &[String] {
+        &self.headers
+    }
+
     /// Render as an aligned text table.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();

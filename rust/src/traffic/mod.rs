@@ -23,12 +23,14 @@
 //!   JSON trace) into timed [`Request`]s for
 //!   [`Coordinator::submit`](crate::coordinator::Coordinator::submit) or a
 //!   live [`Intake`](crate::coordinator::Intake).
-//! * [`slo`] — TTFT/TPOT/e2e percentiles, deadline goodput, per-shard
-//!   utilization from a finished
-//!   [`ServerReport`](crate::coordinator::ServerReport).
+//! * [`slo`] — TTFT/TPOT/e2e percentiles, deadline goodput, shed and
+//!   preemption counts, chunk-stall time, and per-shard utilization from a
+//!   finished [`ServerReport`](crate::coordinator::ServerReport).
 //!
 //! The `exp traffic` experiment ties it together: FCFS vs length-bucketed
-//! vs EDF admission at several arrival rates on the paper's model presets.
+//! vs EDF admission at several arrival rates on the paper's model presets;
+//! `exp prefill` compares chunked vs whole-prompt prefill (and deadline
+//! preemption) under a long-prompt mixed workload.
 //!
 //! [`TrafficSpec`]: crate::config::TrafficSpec
 //! [`TrafficSpec::for_scenario`]: crate::config::TrafficSpec::for_scenario
@@ -42,4 +44,4 @@ pub mod slo;
 
 pub use gen::{generate, replay_trace};
 pub use rng::SplitMix64;
-pub use slo::{Percentiles, SloSummary};
+pub use slo::{ttft_percentiles_where, Percentiles, SloSummary};

@@ -1,5 +1,6 @@
 //! SLO-graded serving metrics: tail latency percentiles, deadline goodput,
-//! and per-shard utilization, computed from a [`ServerReport`].
+//! preemption/shed accounting, and per-shard utilization, computed from a
+//! [`ServerReport`].
 //!
 //! Serving-oriented PIM follow-ups (Sangam, MVDRAM) grade systems on
 //! TTFT/TPOT tails under live load, not mean kernel latency; this module
@@ -12,11 +13,23 @@
 //! * **TPOT** — mean inter-token gap after the first token.
 //! * **e2e** — arrival to completion.
 //! * **goodput** — token throughput counting only requests that met their
-//!   deadline (requests without a deadline always count).
+//!   deadline (requests without a deadline always count; shed requests
+//!   never do).
 //! * **utilization** — per shard, the busy fraction of its simulated
 //!   makespan (idle = the clock jumping over arrival gaps).
+//! * **shed / preemptions / chunk stalls** — what the serving policy did:
+//!   requests given up on ([`Preemption::Shed`]), requests re-queued, and
+//!   the simulated time decoders spent stalled behind prefill steps
+//!   ([`ShardStats::chunk_stall_ns`]).
+//!
+//! Latency populations (TTFT/TPOT/e2e) **exclude shed requests** — a shed
+//! request never delivered, so its timestamps grade the shedding decision,
+//! not the serving path.  Shed work shows up in `shed_requests`, in
+//! `slo_attainment` (a shed request always misses), and in goodput.
+//!
+//! [`Preemption::Shed`]: crate::coordinator::Preemption
 
-use crate::coordinator::{ServerReport, ShardStats};
+use crate::coordinator::{RequestResult, ServerReport, ShardStats};
 use crate::metrics::{fmt_ns, percentile_sorted};
 use crate::report::Table;
 
@@ -47,19 +60,31 @@ impl Percentiles {
     }
 }
 
+/// TTFT percentiles over the delivered (non-shed) requests matching a
+/// predicate — e.g. the short-request population of a mixed-length
+/// workload (`|r| r.prompt_tokens <= 256`).
+pub fn ttft_percentiles_where(
+    report: &ServerReport,
+    pred: impl Fn(&RequestResult) -> bool,
+) -> Percentiles {
+    let ttft: Vec<f64> =
+        report.results.iter().filter(|r| !r.shed && pred(r)).map(|r| r.ttft_ns()).collect();
+    Percentiles::from(&ttft)
+}
+
 /// SLO-graded summary of one serving run.
 #[derive(Debug, Clone)]
 pub struct SloSummary {
     pub requests: usize,
     pub total_tokens: usize,
-    /// Arrival → first token (queueing + prefill), ns.
+    /// Arrival → first token (queueing + prefill), ns; delivered requests.
     pub ttft: Percentiles,
     /// Mean inter-token time per request (requests with ≥ 2 tokens), ns.
     pub tpot: Percentiles,
-    /// Arrival → completion, ns.
+    /// Arrival → completion, ns; delivered requests.
     pub e2e: Percentiles,
     /// Fraction of requests that met their deadline (1.0 when none carry
-    /// deadlines).
+    /// deadlines; shed requests always miss).
     pub slo_attainment: f64,
     /// Tokens/s over the simulated makespan, all requests.
     pub throughput_tokens_per_s: f64,
@@ -67,22 +92,29 @@ pub struct SloSummary {
     pub goodput_tokens_per_s: f64,
     /// Simulated makespan of the run (slowest shard's clock), ns.
     pub makespan_ns: f64,
+    /// Requests the serving policy shed instead of completing.
+    pub shed_requests: usize,
+    /// Running requests re-queued by preemption, summed over shards.
+    pub preemptions: usize,
+    /// Prefill steps executed, summed over shards.
+    pub prefill_chunks: usize,
+    /// Simulated time decoders spent stalled behind prefill steps, summed
+    /// over shards, ns.
+    pub chunk_stall_ns: f64,
     /// Per-shard (id, busy-fraction, mean batch occupancy).
     pub shard_utilization: Vec<(usize, f64, f64)>,
 }
 
 impl SloSummary {
     /// Grade a serving report.  Requests without deadlines count as
-    /// meeting their SLO.
+    /// meeting their SLO; shed requests count as missing it and are
+    /// excluded from the latency populations.
     pub fn from_report(report: &ServerReport) -> SloSummary {
-        let ttft: Vec<f64> = report.results.iter().map(|r| r.ttft_ns()).collect();
-        let e2e: Vec<f64> = report.results.iter().map(|r| r.e2e_ns()).collect();
-        let tpot: Vec<f64> = report
-            .results
-            .iter()
-            .filter(|r| r.tokens.len() >= 2)
-            .map(|r| r.tpot_ns())
-            .collect();
+        let delivered: Vec<&RequestResult> = report.results.iter().filter(|r| !r.shed).collect();
+        let ttft: Vec<f64> = delivered.iter().map(|r| r.ttft_ns()).collect();
+        let e2e: Vec<f64> = delivered.iter().map(|r| r.e2e_ns()).collect();
+        let tpot: Vec<f64> =
+            delivered.iter().filter(|r| r.tokens.len() >= 2).map(|r| r.tpot_ns()).collect();
         let met = report.results.iter().filter(|r| r.met_deadline()).count();
         let good_tokens: usize = report
             .results
@@ -110,6 +142,10 @@ impl SloSummary {
             throughput_tokens_per_s: report.total_tokens as f64 / span_s,
             goodput_tokens_per_s: good_tokens as f64 / span_s,
             makespan_ns,
+            shed_requests: report.results.iter().filter(|r| r.shed).count(),
+            preemptions: report.shards.iter().map(|s| s.preemptions).sum(),
+            prefill_chunks: report.shards.iter().map(|s| s.prefill_chunks).sum(),
+            chunk_stall_ns: report.shards.iter().map(|s| s.chunk_stall_ns).sum(),
             shard_utilization: report
                 .shards
                 .iter()
@@ -131,6 +167,7 @@ impl SloSummary {
             fmt_ns(self.e2e.p99),
             format!("{:.0}", self.goodput_tokens_per_s),
             format!("{:.0}%", 100.0 * self.slo_attainment),
+            self.shed_requests.to_string(),
             format!(
                 "{:.0}%",
                 100.0
@@ -147,7 +184,7 @@ impl SloSummary {
     pub fn table_headers() -> Vec<&'static str> {
         vec![
             "run", "reqs", "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99", "e2e_p99",
-            "goodput_tok/s", "slo_met", "util",
+            "goodput_tok/s", "slo_met", "shed", "util",
         ]
     }
 
@@ -174,6 +211,7 @@ mod tests {
         RequestResult {
             id,
             tokens: vec![1; n_tokens],
+            prompt_tokens: 8,
             sim_ttft_ns: first - arrival,
             sim_total_ns: finish - arrival,
             wall_ns: 1.0,
@@ -181,6 +219,7 @@ mod tests {
             sim_first_token_at_ns: first,
             sim_finish_at_ns: finish,
             deadline_ns: None,
+            shed: false,
         }
     }
 
@@ -201,6 +240,10 @@ mod tests {
                 sim_idle_ns: idle_ns,
                 decode_iterations: 4,
                 occupancy: 0.5,
+                prefill_chunks: 2,
+                chunk_stall_ns: 3.0,
+                preemptions: 0,
+                shed: 0,
             }],
         }
     }
@@ -217,6 +260,9 @@ mod tests {
         assert_eq!(s.slo_attainment, 1.0);
         assert!((s.throughput_tokens_per_s - 5.0 / (700.0 / 1e9)).abs() < 1.0);
         assert_eq!(s.throughput_tokens_per_s, s.goodput_tokens_per_s);
+        assert_eq!(s.shed_requests, 0);
+        assert_eq!(s.prefill_chunks, 2);
+        assert_eq!(s.chunk_stall_ns, 3.0);
     }
 
     #[test]
@@ -228,6 +274,43 @@ mod tests {
         let s = SloSummary::from_report(&rep);
         assert_eq!(s.slo_attainment, 0.5);
         assert!((s.goodput_tokens_per_s - s.throughput_tokens_per_s / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shed_requests_leave_latency_populations() {
+        // A shed request with a garbage first-token timestamp must not
+        // pollute TTFT/e2e tails; it counts in shed_requests and misses
+        // its SLO.
+        let mut shed = result(0, 0.0, 0.0, 50.0, 1);
+        shed.shed = true;
+        let ok = result(1, 0.0, 10.0, 40.0, 4);
+        let mut rep = report(vec![shed, ok], 100.0, 0.0);
+        rep.shards[0].shed = 1;
+        rep.shards[0].preemptions = 2;
+        let s = SloSummary::from_report(&rep);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.shed_requests, 1);
+        assert_eq!(s.preemptions, 2);
+        assert_eq!(s.ttft.p99, 10.0, "only the delivered request grades TTFT");
+        assert_eq!(s.e2e.max, 40.0);
+        assert_eq!(s.slo_attainment, 0.5, "a shed request always misses its SLO");
+        // Goodput excludes the shed request's tokens; throughput keeps them.
+        assert!(s.goodput_tokens_per_s < s.throughput_tokens_per_s);
+    }
+
+    #[test]
+    fn filtered_ttft_splits_populations_by_prompt_length() {
+        let mut short = result(0, 0.0, 10.0, 40.0, 2);
+        short.prompt_tokens = 16;
+        let mut long = result(1, 0.0, 500.0, 900.0, 2);
+        long.prompt_tokens = 4096;
+        let rep = report(vec![short, long], 1000.0, 0.0);
+        let s = ttft_percentiles_where(&rep, |r| r.prompt_tokens <= 256);
+        assert_eq!(s.p99, 10.0);
+        let l = ttft_percentiles_where(&rep, |r| r.prompt_tokens > 256);
+        assert_eq!(l.p99, 500.0);
+        let none = ttft_percentiles_where(&rep, |_| false);
+        assert_eq!(none.p99, 0.0);
     }
 
     #[test]
@@ -244,6 +327,7 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.slo_attainment, 1.0);
         assert_eq!(s.ttft.p99, 0.0);
+        assert_eq!(s.shed_requests, 0);
     }
 
     #[test]
@@ -253,6 +337,8 @@ mod tests {
         let row = s.table_row("fcfs@100");
         assert_eq!(row.len(), SloSummary::table_headers().len());
         assert_eq!(row[0], "fcfs@100");
+        let shed_col = SloSummary::table_headers().iter().position(|h| *h == "shed").unwrap();
+        assert_eq!(row[shed_col], "0");
         let t = s.shard_table("util");
         assert_eq!(t.num_rows(), 1);
         assert!(t.render().contains("75%"), "{}", t.render());

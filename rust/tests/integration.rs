@@ -275,8 +275,81 @@ fn open_loop_traffic_serves_under_every_scheduler() {
         assert!(s.e2e.p99 >= s.e2e.p50, "{name}");
         assert!(s.throughput_tokens_per_s > 0.0, "{name}");
         assert!(s.goodput_tokens_per_s <= s.throughput_tokens_per_s + 1e-9, "{name}");
+        assert_eq!(s.shed_requests, 0, "{name}: default policy never sheds");
     }
     // Identical shapes across all three runs: the shared cache means the
     // second and third schedulers searched nothing new.
     assert_eq!(service.misses(), service.cache_len() as u64);
+}
+
+/// The event-driven serving policy end-to-end: a long-prompt mixed stream
+/// served (a) whole-prefill and (b) chunked + deadline-preempting, through
+/// the multi-shard coordinator.  Chunking must cut the short requests'
+/// first-token tail, never change what is generated for completed work,
+/// and preemption must surface shed work in the SLO summary.
+#[test]
+fn chunked_prefill_and_preemption_end_to_end() {
+    use racam::config::ServingPolicy;
+    use racam::coordinator::{EdfScheduler, FcfsBatcher};
+    use racam::traffic::{ttft_percentiles_where, SloSummary};
+
+    let spec = racam::config::gpt3_6_7b();
+    let service = MappingService::for_config(&racam_paper());
+
+    // One shard so every short queues behind the long prompt's prefill.
+    let serve = |policy: ServingPolicy| {
+        let mut coord = Coordinator::with_schedulers(
+            service.clone(),
+            spec.clone(),
+            1,
+            2,
+            |_| SyntheticEngine::new(64, 128),
+            |_| FcfsBatcher::new(2),
+        )
+        .with_policy(policy);
+        // A 2048-token prompt and a short request arriving together, three
+        // times over, well spaced.
+        for i in 0..3u64 {
+            let at = 1 + i * 10_000_000_000;
+            coord.submit(Request::new(2 * i, vec![1; 2048], 2).at(at));
+            coord.submit(Request::new(2 * i + 1, vec![2; 16], 2).at(at));
+        }
+        coord.run_to_completion().unwrap()
+    };
+    let whole = serve(ServingPolicy::whole_prefill());
+    let chunked = serve(ServingPolicy::chunked(256));
+    // Generation is schedule-independent.
+    let tok = |rep: &racam::coordinator::ServerReport| {
+        rep.results.iter().map(|r| (r.id, r.tokens.clone())).collect::<Vec<_>>()
+    };
+    assert_eq!(tok(&whole), tok(&chunked));
+    // Short-request TTFT tail: chunked must undercut whole-prefill.
+    let short = |rep: &racam::coordinator::ServerReport| {
+        ttft_percentiles_where(rep, |r| r.prompt_tokens <= 256).p95
+    };
+    assert!(
+        short(&chunked) < short(&whole),
+        "chunked short p95 {} must beat whole {}",
+        short(&chunked),
+        short(&whole)
+    );
+    assert!(chunked.shards[0].prefill_chunks > whole.shards[0].prefill_chunks);
+
+    // Preemption under EDF: impossible deadlines are shed and reported.
+    let mut coord = Coordinator::with_schedulers(
+        service.clone(),
+        spec,
+        1,
+        2,
+        |_| SyntheticEngine::new(64, 128),
+        |_| EdfScheduler::new(),
+    )
+    .with_policy(ServingPolicy::interactive());
+    coord.submit(Request::new(0, vec![1; 16], 4).with_deadline(u64::MAX));
+    coord.submit(Request::new(1, vec![2; 16], 4).with_deadline(1));
+    let report = coord.run_to_completion().unwrap();
+    let slo = SloSummary::from_report(&report);
+    assert_eq!(slo.shed_requests, 1, "the expired-deadline request must be shed");
+    assert!(report.results.iter().any(|r| r.id == 1 && r.shed));
+    assert!(report.results.iter().any(|r| r.id == 0 && !r.shed && r.tokens.len() == 4));
 }
