@@ -1,8 +1,10 @@
 //! Open-loop serving under live traffic: generate a bursty request
-//! stream, serve it through the multi-shard coordinator under FCFS and
+//! stream, serve it through declaratively built clusters
+//! (`config::ClusterSpec` → `coordinator::ClusterBuilder`) under FCFS and
 //! EDF admission — and under the chunked-prefill + deadline-preemption
-//! serving policy — grading every run with SLO tail metrics, then show
-//! async admission by submitting extra requests *while the run executes*.
+//! serving policy — grading every run with SLO tail metrics, then show a
+//! prefill/decode-disaggregated cluster with KV-transfer accounting and
+//! async admission of requests *while the run executes*.
 //!
 //! No PJRT artifacts needed (synthetic token engine):
 //!
@@ -10,29 +12,28 @@
 //! cargo run --release --example traffic_serving
 //! ```
 
-use racam::config::{gpt3_6_7b, racam_paper, ArrivalProcess, LengthDist, ServingPolicy, TrafficSpec};
-use racam::coordinator::{
-    Coordinator, EdfScheduler, FcfsBatcher, Request, Scheduler, SyntheticEngine,
+use racam::config::{
+    gpt3_6_7b, racam_paper, ArrivalProcess, ClusterSpec, LengthDist, SchedulerKind,
+    ServingPolicy, TrafficSpec,
 };
+use racam::coordinator::{ClusterBuilder, Request, SyntheticEngine};
 use racam::mapping::MappingService;
 use racam::report::Table;
 use racam::traffic::{generate, SloSummary};
 
-fn serve<S: Scheduler>(
+fn serve(
     services: &[MappingService],
     stream: &[Request],
     label: &str,
     policy: ServingPolicy,
-    scheduler_factory: impl FnMut(usize) -> S,
+    scheduler: SchedulerKind,
 ) -> racam::Result<SloSummary> {
-    let mut coord = Coordinator::with_shard_services(
-        services.to_vec(), // one per shard; equal channel shares alias one cache
-        gpt3_6_7b(),
-        4, // max batch per shard
-        |_| SyntheticEngine::new(64, 256),
-        scheduler_factory,
-    )
-    .with_policy(policy);
+    let mut spec = ClusterSpec::unified(services.len(), 4);
+    spec.groups[0].scheduler = scheduler;
+    spec.groups[0].policy = policy;
+    let mut coord =
+        ClusterBuilder::with_spec_and_services(spec, gpt3_6_7b(), services.to_vec())?
+            .build(|_| SyntheticEngine::new(64, 256));
     for req in stream {
         coord.submit(req.clone());
     }
@@ -66,18 +67,19 @@ fn main() -> racam::Result<()> {
     );
 
     // Two shards, each pricing against its honest 4-of-8-channel share of
-    // the paper device; both policies price identical kernels from the
+    // the paper device; every policy prices identical kernels from the
     // same caches.
-    let services =
-        Coordinator::<SyntheticEngine, FcfsBatcher>::partitioned_services(&racam_paper(), 2);
+    let services = ClusterBuilder::new(ClusterSpec::unified(2, 4), &racam_paper(), gpt3_6_7b())?
+        .services()
+        .to_vec();
     let whole = ServingPolicy::whole_prefill();
-    let fcfs = serve(&services, &stream, "fcfs", whole, |_| FcfsBatcher::new(4))?;
-    let edf = serve(&services, &stream, "edf ", whole, |_| EdfScheduler::new())?;
+    let fcfs = serve(&services, &stream, "fcfs", whole, SchedulerKind::Fcfs)?;
+    let edf = serve(&services, &stream, "edf ", whole, SchedulerKind::Edf)?;
     // The interactive policy: 256-token prefill chunks so short requests
     // stop queueing behind long prompts, plus deadline preemption so EDF
     // sheds past-deadline work under overload instead of dragging tails.
     let interactive =
-        serve(&services, &stream, "edf+i", ServingPolicy::interactive(), |_| EdfScheduler::new())?;
+        serve(&services, &stream, "edf+i", ServingPolicy::interactive(), SchedulerKind::Edf)?;
 
     let mut t = Table::new("SLO comparison (same stream, same caches)", &SloSummary::table_headers());
     t.row(fcfs.table_row("fcfs/whole"));
@@ -85,14 +87,33 @@ fn main() -> racam::Result<()> {
     t.row(interactive.table_row("edf/chunk256+preempt"));
     println!("\n{}", t.render());
 
-    // ---- Async admission: requests can arrive while the run executes.
-    let mut coord = Coordinator::with_shard_services(
-        services.clone(),
+    // ---- Disaggregation: one prefill shard feeding one decode shard over
+    // the simulated KV link, declared in four lines of spec.
+    let mut coord = ClusterBuilder::new(
+        ClusterSpec::disaggregated(1, 1, 4),
+        &racam_paper(),
         gpt3_6_7b(),
-        4,
-        |_| SyntheticEngine::new(64, 256),
-        |_| FcfsBatcher::new(4),
+    )?
+    .build(|_| SyntheticEngine::new(64, 256));
+    for req in &stream {
+        coord.submit(req.clone());
+    }
+    let report = coord.run_to_completion()?;
+    let slo = SloSummary::from_report(&report);
+    println!(
+        "disaggregated 1p+1d: {} requests, {} handoffs crossed the KV link",
+        report.results.len(),
+        slo.handoffs,
     );
+    println!("{}", slo.utilization_table("group utilization (disaggregated)", false).render());
+
+    // ---- Async admission: requests can arrive while the run executes.
+    let mut coord = ClusterBuilder::with_spec_and_services(
+        ClusterSpec::unified(2, 4),
+        gpt3_6_7b(),
+        services.clone(),
+    )?
+    .build(|_| SyntheticEngine::new(64, 256));
     for req in &stream[..8] {
         coord.submit(req.clone());
     }

@@ -1,0 +1,507 @@
+//! Declarative serving-cluster specification: named shard *groups*, each
+//! with a count, a [`ShardRole`], an admission [`SchedulerKind`], a
+//! [`ServingPolicy`], and an optional DRAM-channel share — the single
+//! entry point `coordinator::ClusterBuilder` consumes to assemble a
+//! role-aware multi-shard coordinator.
+//!
+//! A [`ClusterSpec`] replaces the old constructor sprawl
+//! (`Coordinator::new` / `with_service` / `with_schedulers` /
+//! `with_shard_services` plus post-hoc `set_policy`) with one JSON-loadable
+//! description:
+//!
+//! ```json
+//! {
+//!   "kv_link_gbps": 64,
+//!   "groups": [
+//!     {"name": "prefill", "count": 2, "role": "prefill", "scheduler": "fcfs",
+//!      "max_batch": 4, "channels": 4,
+//!      "policy": {"prefill_chunk_tokens": 256, "preempt": false}},
+//!     {"name": "decode", "count": 2, "role": "decode", "scheduler": "fcfs",
+//!      "max_batch": 8, "channels": 4, "policy": {}}
+//!   ]
+//! }
+//! ```
+//!
+//! Roles implement prefill/decode **disaggregation** (the Sangam-style
+//! split RACAM's channel-partitioned parallelism makes natural): `Prefill`
+//! shards run prompts only and hand finished requests to `Decode` shards
+//! over a simulated KV-transfer link of `kv_link_gbps` GB/s — one shared
+//! link: transfers serialize FIFO in prefill-finish order, so concurrent
+//! finishes queue rather than multiplying the bandwidth; `Unified`
+//! shards do both (today's behavior — a `Unified`-only spec reproduces the
+//! pre-redesign coordinator bit-for-bit).  Validation is two-stage:
+//! [`ClusterSpec::validate`] checks everything hardware-independent (roles
+//! must be balanced, counts non-zero, policies legal), and the builder
+//! additionally checks channel shares against the concrete device (shares
+//! must sum exactly to the device's channels).
+
+use super::json::{self, JsonError, Value};
+use super::ServingPolicy;
+
+/// Default KV-transfer link bandwidth between prefill and decode shards,
+/// GB/s.  64 GB/s is a CXL-class inter-stack link — the integration point
+/// chiplet DRAM-PIM designs (Sangam) assume; note 1 GB/s ≡ 1 byte/ns, so
+/// transfer nanoseconds are simply `bytes / gbps`.
+pub const DEFAULT_KV_LINK_GBPS: f64 = 64.0;
+
+/// What lifecycle stages a shard group serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardRole {
+    /// Prefill + decode on one shard (the pre-disaggregation behavior).
+    #[default]
+    Unified,
+    /// Prompt processing only: finished prefills are handed to a decode
+    /// shard through the cluster's KV-transfer link.
+    Prefill,
+    /// Token generation only: receives prefilled requests (with their KV
+    /// cache) from prefill shards; never admits a fresh prompt.
+    Decode,
+}
+
+impl ShardRole {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardRole::Unified => "unified",
+            ShardRole::Prefill => "prefill",
+            ShardRole::Decode => "decode",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s {
+            "unified" => Some(ShardRole::Unified),
+            "prefill" => Some(ShardRole::Prefill),
+            "decode" => Some(ShardRole::Decode),
+            _ => None,
+        }
+    }
+
+    /// Whether a shard of this role may be handed a *fresh* prompt by the
+    /// coordinator's dispatch (decode-only shards may not — they receive
+    /// work exclusively through the KV-transfer handoff).
+    pub fn accepts_fresh_prompts(&self) -> bool {
+        !matches!(self, ShardRole::Decode)
+    }
+}
+
+/// The admission-scheduler roster, by name (the same roster `racam serve
+/// --sched` exposes).  `coordinator::ClusterBuilder` turns a kind into a
+/// boxed [`Scheduler`](crate::coordinator::Scheduler) per shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerKind {
+    /// First-come-first-served (the paper setting).
+    #[default]
+    Fcfs,
+    /// Prompt-length-bucketed admission.
+    Bucketed,
+    /// Earliest-deadline-first admission (+ deadline shedding under a
+    /// preemption-enabled policy).
+    Edf,
+}
+
+impl SchedulerKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerKind::Fcfs => "fcfs",
+            SchedulerKind::Bucketed => "bucketed",
+            SchedulerKind::Edf => "edf",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s {
+            "fcfs" => Some(SchedulerKind::Fcfs),
+            "bucket" | "bucketed" => Some(SchedulerKind::Bucketed),
+            "edf" => Some(SchedulerKind::Edf),
+            _ => None,
+        }
+    }
+}
+
+/// One named group of identically configured shards.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardGroup {
+    /// Group label, surfaced in per-group utilization reporting.
+    pub name: String,
+    /// Number of shards in the group (must be ≥ 1).
+    pub count: usize,
+    pub role: ShardRole,
+    pub scheduler: SchedulerKind,
+    /// Max concurrent batch per shard.
+    pub max_batch: usize,
+    /// Serving policy applied to every shard of the group.
+    pub policy: ServingPolicy,
+    /// Optional DRAM-channel share for the whole group (split across its
+    /// `count` shards).  Either every group sets a share (and they must sum
+    /// to the device's channels) or none does (channels are partitioned
+    /// evenly across all shards, the legacy behavior).
+    pub channels: Option<u32>,
+}
+
+impl ShardGroup {
+    /// A unified FCFS group with the default (paper-faithful) policy.
+    pub fn unified(name: &str, count: usize, max_batch: usize) -> Self {
+        ShardGroup {
+            name: name.into(),
+            count,
+            role: ShardRole::Unified,
+            scheduler: SchedulerKind::Fcfs,
+            max_batch,
+            policy: ServingPolicy::default(),
+            channels: None,
+        }
+    }
+
+    /// Builder-style role override.
+    pub fn with_role(mut self, role: ShardRole) -> Self {
+        self.role = role;
+        self
+    }
+
+    /// Builder-style scheduler override.
+    pub fn with_scheduler(mut self, kind: SchedulerKind) -> Self {
+        self.scheduler = kind;
+        self
+    }
+
+    /// Builder-style policy override.
+    pub fn with_policy(mut self, policy: ServingPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Builder-style channel-share override.
+    pub fn with_channels(mut self, channels: u32) -> Self {
+        self.channels = Some(channels);
+        self
+    }
+}
+
+/// A complete serving-cluster description (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub groups: Vec<ShardGroup>,
+    /// KV-transfer link bandwidth between prefill and decode shards, GB/s.
+    pub kv_link_gbps: f64,
+}
+
+impl ClusterSpec {
+    /// The legacy shape: one `Unified` FCFS group of `n_shards` shards with
+    /// the default policy — builds a coordinator identical to what
+    /// `Coordinator::new(hw, spec, n_shards, max_batch, ..)` produced.
+    pub fn unified(n_shards: usize, max_batch: usize) -> Self {
+        ClusterSpec {
+            groups: vec![ShardGroup::unified("unified", n_shards, max_batch)],
+            kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+        }
+    }
+
+    /// A prefill/decode-disaggregated cluster: `prefill` prompt shards
+    /// feeding `decode` generation shards over the default KV link, both
+    /// FCFS with the default policy.  Channel shares are left automatic.
+    pub fn disaggregated(prefill: usize, decode: usize, max_batch: usize) -> Self {
+        ClusterSpec {
+            groups: vec![
+                ShardGroup::unified("prefill", prefill, max_batch).with_role(ShardRole::Prefill),
+                ShardGroup::unified("decode", decode, max_batch).with_role(ShardRole::Decode),
+            ],
+            kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+        }
+    }
+
+    /// Builder-style KV-link override (GB/s).
+    pub fn with_kv_link_gbps(mut self, gbps: f64) -> Self {
+        self.kv_link_gbps = gbps;
+        self
+    }
+
+    /// Total shards across all groups.
+    pub fn total_shards(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// Whether any group is role-split (a `Prefill` or `Decode` group).
+    pub fn is_disaggregated(&self) -> bool {
+        self.groups.iter().any(|g| g.role != ShardRole::Unified)
+    }
+
+    /// Hardware-independent validation (the builder additionally checks
+    /// channel shares against the concrete device).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.groups.is_empty() {
+            return Err("a cluster needs at least one shard group".into());
+        }
+        for g in &self.groups {
+            if g.count == 0 {
+                return Err(format!("group '{}' has zero shards", g.name));
+            }
+            if g.max_batch == 0 {
+                return Err(format!("group '{}': max_batch must be at least 1", g.name));
+            }
+            g.policy.validate().map_err(|e| format!("group '{}': {e}", g.name))?;
+            if let Some(ch) = g.channels {
+                if (ch as usize) < g.count {
+                    return Err(format!(
+                        "group '{}': {ch} channel(s) cannot cover {} shard(s)",
+                        g.name, g.count
+                    ));
+                }
+            }
+        }
+        for (i, g) in self.groups.iter().enumerate() {
+            if self.groups[..i].iter().any(|o| o.name == g.name) {
+                return Err(format!("duplicate group name '{}'", g.name));
+            }
+        }
+        // Roles must be balanced: a prefill group's handoffs need a decode
+        // group to land on, and a decode group starves without a feeder.
+        let prefill = self.groups.iter().any(|g| g.role == ShardRole::Prefill);
+        let decode = self.groups.iter().any(|g| g.role == ShardRole::Decode);
+        match (prefill, decode) {
+            (true, false) => {
+                return Err("unbalanced roles: prefill group(s) without a decode group".into())
+            }
+            (false, true) => {
+                return Err("unbalanced roles: decode group(s) without a prefill group".into())
+            }
+            _ => {}
+        }
+        // Channel shares are all-or-none; the builder checks the sum
+        // against the device.
+        let with = self.groups.iter().filter(|g| g.channels.is_some()).count();
+        if with != 0 && with != self.groups.len() {
+            return Err(
+                "either every group sets a channel share or none does (mixed shares)".into()
+            );
+        }
+        if !(self.kv_link_gbps.is_finite() && self.kv_link_gbps > 0.0) {
+            return Err(format!(
+                "kv_link_gbps must be positive and finite, got {}",
+                self.kv_link_gbps
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn from_json(s: &str) -> crate::Result<Self> {
+        let v = json::parse(s).map_err(anyhow::Error::from)?;
+        let spec = Self::from_value(&v).map_err(anyhow::Error::from)?;
+        spec.validate().map_err(|e| anyhow::anyhow!("invalid cluster spec: {e}"))?;
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_value().pretty()
+    }
+
+    fn group_to_value(g: &ShardGroup) -> Value {
+        let mut pairs = vec![
+            ("name", Value::Str(g.name.clone())),
+            ("count", Value::Num(g.count as f64)),
+            ("role", Value::Str(g.role.label().into())),
+            ("scheduler", Value::Str(g.scheduler.label().into())),
+            ("max_batch", Value::Num(g.max_batch as f64)),
+            ("policy", json::parse(&g.policy.to_json()).expect("policy JSON is valid")),
+        ];
+        if let Some(ch) = g.channels {
+            pairs.push(("channels", Value::Num(ch as f64)));
+        }
+        Value::obj(pairs)
+    }
+
+    fn group_from_value(v: &Value) -> Result<ShardGroup, JsonError> {
+        let role = match v.get("role") {
+            Ok(r) => {
+                let s = r.as_str()?;
+                ShardRole::from_label(s)
+                    .ok_or_else(|| JsonError(format!("unknown shard role '{s}'")))?
+            }
+            Err(_) => ShardRole::Unified,
+        };
+        let scheduler = match v.get("scheduler") {
+            Ok(r) => {
+                let s = r.as_str()?;
+                SchedulerKind::from_label(s)
+                    .ok_or_else(|| JsonError(format!("unknown scheduler '{s}'")))?
+            }
+            Err(_) => SchedulerKind::Fcfs,
+        };
+        let policy = match v.get("policy") {
+            Ok(p) => ServingPolicy::from_json(&p.pretty())
+                .map_err(|e| JsonError(format!("bad policy: {e}")))?,
+            Err(_) => ServingPolicy::default(),
+        };
+        let channels = match v.get("channels") {
+            Ok(c) => Some(c.as_u32()?),
+            Err(_) => None,
+        };
+        Ok(ShardGroup {
+            name: v.get("name")?.as_str()?.to_string(),
+            count: v.get("count")?.as_u32()? as usize,
+            role,
+            scheduler,
+            max_batch: match v.get("max_batch") {
+                Ok(b) => b.as_u32()? as usize,
+                Err(_) => 4,
+            },
+            policy,
+            channels,
+        })
+    }
+
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("kv_link_gbps", Value::Num(self.kv_link_gbps)),
+            ("groups", Value::Arr(self.groups.iter().map(Self::group_to_value).collect())),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<Self, JsonError> {
+        let Value::Arr(groups) = v.get("groups")? else {
+            return Err(JsonError("'groups' must be an array".into()));
+        };
+        Ok(ClusterSpec {
+            groups: groups.iter().map(Self::group_from_value).collect::<Result<_, _>>()?,
+            kv_link_gbps: match v.get("kv_link_gbps") {
+                Ok(g) => g.as_f64()?,
+                Err(_) => DEFAULT_KV_LINK_GBPS,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unified_preset_shape() {
+        let spec = ClusterSpec::unified(3, 2);
+        spec.validate().unwrap();
+        assert_eq!(spec.total_shards(), 3);
+        assert!(!spec.is_disaggregated());
+        assert_eq!(spec.groups[0].scheduler, SchedulerKind::Fcfs);
+        assert_eq!(spec.groups[0].policy, ServingPolicy::default());
+        assert_eq!(spec.kv_link_gbps, DEFAULT_KV_LINK_GBPS);
+    }
+
+    #[test]
+    fn disaggregated_preset_is_balanced() {
+        let spec = ClusterSpec::disaggregated(2, 2, 4);
+        spec.validate().unwrap();
+        assert!(spec.is_disaggregated());
+        assert_eq!(spec.total_shards(), 4);
+        assert!(spec.groups.iter().any(|g| g.role == ShardRole::Prefill));
+        assert!(spec.groups.iter().any(|g| g.role == ShardRole::Decode));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = ClusterSpec {
+            groups: vec![
+                ShardGroup::unified("prefill", 2, 4)
+                    .with_role(ShardRole::Prefill)
+                    .with_scheduler(SchedulerKind::Edf)
+                    .with_policy(ServingPolicy::chunked(256))
+                    .with_channels(4),
+                ShardGroup::unified("decode", 2, 8)
+                    .with_role(ShardRole::Decode)
+                    .with_channels(4),
+            ],
+            kv_link_gbps: 32.0,
+        };
+        let back = ClusterSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn json_defaults_fill_in() {
+        // Role, scheduler, policy, max_batch, channels and the KV link are
+        // all optional.
+        let spec = ClusterSpec::from_json(
+            r#"{"groups": [{"name": "all", "count": 2}]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.groups[0].role, ShardRole::Unified);
+        assert_eq!(spec.groups[0].scheduler, SchedulerKind::Fcfs);
+        assert_eq!(spec.groups[0].policy, ServingPolicy::default());
+        assert_eq!(spec.groups[0].channels, None);
+        assert_eq!(spec.kv_link_gbps, DEFAULT_KV_LINK_GBPS);
+    }
+
+    #[test]
+    fn unbalanced_roles_rejected() {
+        let only_prefill = ClusterSpec {
+            groups: vec![ShardGroup::unified("p", 2, 4).with_role(ShardRole::Prefill)],
+            kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+        };
+        assert!(only_prefill.validate().unwrap_err().contains("unbalanced"));
+        let only_decode = ClusterSpec {
+            groups: vec![ShardGroup::unified("d", 2, 4).with_role(ShardRole::Decode)],
+            kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+        };
+        assert!(only_decode.validate().unwrap_err().contains("unbalanced"));
+        // And the JSON loader enforces the same rule.
+        let json = only_decode.to_json();
+        assert!(ClusterSpec::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn zero_count_group_rejected() {
+        let mut spec = ClusterSpec::unified(2, 4);
+        spec.groups[0].count = 0;
+        assert!(spec.validate().unwrap_err().contains("zero shards"));
+        assert!(ClusterSpec::from_json(
+            r#"{"groups": [{"name": "g", "count": 0}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn mixed_channel_shares_rejected() {
+        let spec = ClusterSpec {
+            groups: vec![
+                ShardGroup::unified("a", 1, 4).with_channels(4),
+                ShardGroup::unified("b", 1, 4),
+            ],
+            kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+        };
+        assert!(spec.validate().unwrap_err().contains("mixed"));
+    }
+
+    #[test]
+    fn channel_share_must_cover_count() {
+        let spec = ClusterSpec {
+            groups: vec![ShardGroup::unified("a", 4, 4).with_channels(2)],
+            kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+        };
+        assert!(spec.validate().unwrap_err().contains("cannot cover"));
+    }
+
+    #[test]
+    fn duplicate_names_and_bad_link_rejected() {
+        let spec = ClusterSpec {
+            groups: vec![ShardGroup::unified("a", 1, 4), ShardGroup::unified("a", 1, 4)],
+            kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+        };
+        assert!(spec.validate().unwrap_err().contains("duplicate"));
+        let bad_link = ClusterSpec::unified(1, 1).with_kv_link_gbps(0.0);
+        assert!(bad_link.validate().unwrap_err().contains("kv_link_gbps"));
+    }
+
+    #[test]
+    fn role_and_scheduler_labels_roundtrip() {
+        for r in [ShardRole::Unified, ShardRole::Prefill, ShardRole::Decode] {
+            assert_eq!(ShardRole::from_label(r.label()), Some(r));
+        }
+        assert!(ShardRole::from_label("gpu").is_none());
+        for k in [SchedulerKind::Fcfs, SchedulerKind::Bucketed, SchedulerKind::Edf] {
+            assert_eq!(SchedulerKind::from_label(k.label()), Some(k));
+        }
+        assert_eq!(SchedulerKind::from_label("bucket"), Some(SchedulerKind::Bucketed));
+        assert!(SchedulerKind::from_label("lifo").is_none());
+        assert!(ShardRole::Unified.accepts_fresh_prompts());
+        assert!(ShardRole::Prefill.accepts_fresh_prompts());
+        assert!(!ShardRole::Decode.accepts_fresh_prompts());
+    }
+}

@@ -5,6 +5,7 @@
 //! (`racam --config cfg.json ...`, via the in-tree [`json`] module) or built
 //! from the presets in [`presets`].
 
+mod cluster;
 mod dram;
 pub mod json;
 mod periph;
@@ -14,6 +15,9 @@ mod timing;
 mod traffic;
 mod workload;
 
+pub use cluster::{
+    ClusterSpec, SchedulerKind, ShardGroup, ShardRole, DEFAULT_KV_LINK_GBPS,
+};
 pub use dram::DramConfig;
 pub use periph::PeriphConfig;
 pub use presets::*;

@@ -144,6 +144,19 @@ impl LlmSpec {
     pub fn weight_bytes(&self) -> u64 {
         self.weight_params() * self.prec.bits() as u64 / 8
     }
+
+    /// KV-cache footprint of one request at `ctx_tokens` of context:
+    /// 2 (K and V) · layers · kv_heads · head_dim · ctx · bits / 8 — the
+    /// payload a prefill shard ships to a decode shard when a cluster is
+    /// disaggregated (`config::ClusterSpec` roles).
+    pub fn kv_cache_bytes(&self, ctx_tokens: u64) -> u64 {
+        2 * self.layers as u64
+            * self.kv_heads as u64
+            * self.head_dim()
+            * ctx_tokens
+            * self.prec.bits() as u64
+            / 8
+    }
 }
 
 /// Inference stage.
@@ -223,6 +236,18 @@ mod tests {
             let rel = (p - nominal).abs() / nominal;
             assert!(rel < tol, "{}: {p:.3e} vs nominal {nominal:.3e} (rel {rel:.2})", spec.name);
         }
+    }
+
+    #[test]
+    fn kv_cache_bytes_scales_with_context_and_gqa() {
+        // GPT-3 6.7B int8: 2 · 32 layers · 32 kv_heads · 128 head_dim per
+        // token = 256 KiB/token.
+        let gpt = gpt3_6_7b();
+        assert_eq!(gpt.kv_cache_bytes(1), 2 * 32 * 4096);
+        assert_eq!(gpt.kv_cache_bytes(1024), 1024 * 2 * 32 * 4096);
+        // GQA shrinks the cache: Llama-3 8B has 8 kv heads to GPT's 32.
+        let llama = llama3_8b();
+        assert_eq!(llama.kv_cache_bytes(1024) * 4, gpt.kv_cache_bytes(1024));
     }
 
     #[test]

@@ -15,6 +15,16 @@
 //! [`EdfScheduler`]), live mid-run request [`Intake`], and a merged
 //! [`ServerReport`] carrying per-shard utilization ([`ShardStats`]).
 //!
+//! Clusters are declared, not hand-wired: a JSON-loadable
+//! [`ClusterSpec`](crate::config::ClusterSpec) names shard *groups* (count,
+//! [`ShardRole`](crate::config::ShardRole), scheduler, policy, channel
+//! share) and [`ClusterBuilder`] assembles the coordinator from it.  Roles
+//! enable prefill/decode **disaggregation**: `Prefill` shards run prompts
+//! only and hand each finished request ([`Handoff`]) to a `Decode` shard
+//! over a simulated KV-transfer link, whose cost lands on the decode
+//! shard's clock as [`ShardStats::kv_transfer_ns`].  The pre-redesign
+//! constructors survive as thin deprecated wrappers over the builder.
+//!
 //! Each shard's serving loop is an event-driven iteration engine governed
 //! by a [`ServingPolicy`](crate::config::ServingPolicy): prefill advances
 //! in bounded chunks that interleave with decode iterations (unset =
@@ -24,15 +34,17 @@
 //! SLO-graded summaries over these reports live in [`crate::traffic`].
 
 mod batcher;
+mod cluster;
 mod engine;
 mod multi;
 mod scheduler;
 mod server;
 
 pub use batcher::{ctx_bucket, Batch, FcfsBatcher, BUCKET_TOKENS};
+pub use cluster::{ClusterBuilder, ClusterCoordinator};
 #[cfg(feature = "pjrt")]
 pub use engine::HloDecodeEngine;
 pub use engine::{SyntheticEngine, TokenEngine};
 pub use multi::{Coordinator, Intake};
 pub use scheduler::{EdfScheduler, LengthBucketed, Preemption, Scheduler};
-pub use server::{Request, RequestResult, Server, ServerReport, ShardStats};
+pub use server::{Handoff, Request, RequestResult, Server, ServerReport, ShardStats};

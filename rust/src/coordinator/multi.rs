@@ -10,17 +10,26 @@
 //! system-wide — the first shard to ask runs the (parallel) search, the
 //! rest wait on the per-shape once-cell and reuse it.
 //!
+//! ## Construction
+//!
+//! Coordinators are assembled by [`ClusterBuilder`] from a declarative
+//! [`ClusterSpec`]; the constructors on this type are thin deprecated
+//! wrappers kept for the transition.  Shards may carry *roles*
+//! ([`crate::config::ShardRole`]): dedicated prefill shards hand finished
+//! prompts to dedicated decode shards over a simulated KV-transfer link
+//! (see [`Coordinator::run_to_completion`]), while unified shards serve
+//! the whole lifecycle exactly as before.
+//!
 //! ## Per-shard DRAM channels
 //!
-//! [`Coordinator::new`] partitions the DRAM channels of the hardware
-//! config across shards ([`crate::config::partition_channels`]): a shard
-//! owning 3 of 8 channels prices its kernels against a 3-channel device,
-//! so per-shard bandwidth is honest and N shards aggregate to exactly the
-//! full system.  Shards with equal channel counts share one mapping
-//! service; distinct counts get their own (a mapping priced for 3 channels
-//! is not valid for 2).  When a partition is impossible (more shards than
-//! channels) or the caller supplies an explicit service
-//! ([`Coordinator::with_service`]), every shard shares the full config —
+//! The builder partitions the DRAM channels of the hardware config across
+//! shards ([`crate::config::partition_channels`]): a shard owning 3 of 8
+//! channels prices its kernels against a 3-channel device, so per-shard
+//! bandwidth is honest and N shards aggregate to exactly the full system.
+//! Shards with equal channel counts share one mapping service; distinct
+//! counts get their own (a mapping priced for 3 channels is not valid for
+//! 2).  When a partition is impossible (more shards than channels) or the
+//! caller supplies explicit services, every shard shares the full config —
 //! the pre-partitioning behavior.
 //!
 //! ## Async admission
@@ -31,13 +40,15 @@
 //! and the run finishes when the handle (and any clones of its senders)
 //! is dropped.
 
+use super::cluster::ClusterBuilder;
 use super::engine::TokenEngine;
 use super::scheduler::Scheduler;
-use super::server::{Request, Server, ServerReport};
+use super::server::{Handoff, Request, Server, ServerReport};
 use super::FcfsBatcher;
-use crate::config::{partition_channels, HwConfig, LlmSpec, ServingPolicy};
+use crate::config::{
+    partition_channels, ClusterSpec, HwConfig, LlmSpec, ServingPolicy, ShardRole,
+};
 use crate::mapping::MappingService;
-use crate::workloads::RacamSystem;
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -49,6 +60,14 @@ pub struct Coordinator<E: TokenEngine, S: Scheduler = FcfsBatcher> {
     /// One mapping-service handle per shard (clones share caches; shards
     /// with different channel partitions hold distinct services).
     services: Vec<MappingService>,
+    /// The LLM whose kernels the shards price (also sizes the KV cache a
+    /// disaggregated handoff ships across the KV link).
+    spec: LlmSpec,
+    /// Per-shard lifecycle roles (all `Unified` outside a
+    /// [`ClusterBuilder`]-built cluster).
+    roles: Vec<ShardRole>,
+    /// KV-transfer link bandwidth between prefill and decode shards, GB/s.
+    kv_link_gbps: f64,
 }
 
 /// Live submission handle for a running coordinator: requests round-robin
@@ -90,6 +109,7 @@ impl<E: TokenEngine + Send> Coordinator<E, FcfsBatcher> {
     /// partitioning (see module docs).  `engine_factory` is called once
     /// per shard (shard index passed in) — token engines hold mutable
     /// generation state, so each worker needs its own.
+    #[deprecated(note = "declare a `config::ClusterSpec` and use `ClusterBuilder` instead")]
     pub fn new(
         hw: &HwConfig,
         spec: LlmSpec,
@@ -98,15 +118,17 @@ impl<E: TokenEngine + Send> Coordinator<E, FcfsBatcher> {
         engine_factory: impl FnMut(usize) -> E,
     ) -> Self {
         assert!(n_shards >= 1, "a coordinator needs at least one shard");
-        let services = Self::partitioned_services(hw, n_shards);
-        Self::with_shard_services(services, spec, max_batch, engine_factory, |_| {
-            FcfsBatcher::new(max_batch)
-        })
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        ClusterBuilder::new(ClusterSpec::unified(n_shards, max_batch), hw, spec)
+            .expect("a unified spec is always valid")
+            .build_with(engine_factory, |_| FcfsBatcher::new(max_batch))
     }
 
     /// Build a coordinator over an existing (possibly pre-warmed, possibly
     /// externally shared) mapping service; every shard prices against the
     /// full config behind it.
+    #[deprecated(note = "declare a `config::ClusterSpec` and use \
+                         `ClusterBuilder::with_spec_and_services` instead")]
     pub fn with_service(
         service: MappingService,
         spec: LlmSpec,
@@ -114,9 +136,15 @@ impl<E: TokenEngine + Send> Coordinator<E, FcfsBatcher> {
         max_batch: usize,
         engine_factory: impl FnMut(usize) -> E,
     ) -> Self {
-        Self::with_schedulers(service, spec, n_shards, max_batch, engine_factory, |_| {
-            FcfsBatcher::new(max_batch)
-        })
+        assert!(n_shards >= 1, "a coordinator needs at least one shard");
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        ClusterBuilder::with_spec_and_services(
+            ClusterSpec::unified(n_shards, max_batch),
+            spec,
+            vec![service; n_shards],
+        )
+        .expect("a unified spec is always valid")
+        .build_with(engine_factory, |_| FcfsBatcher::new(max_batch))
     }
 }
 
@@ -149,6 +177,8 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
     /// Fully general constructor: a shared service plus per-shard
     /// scheduler construction (compare admission policies under identical
     /// pricing).
+    #[deprecated(note = "declare a `config::ClusterSpec` and use \
+                         `ClusterBuilder::with_spec_and_services` + `build_with` instead")]
     pub fn with_schedulers(
         service: MappingService,
         spec: LlmSpec,
@@ -158,41 +188,50 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
         scheduler_factory: impl FnMut(usize) -> S,
     ) -> Self {
         assert!(n_shards >= 1, "a coordinator needs at least one shard");
-        Self::with_shard_services(
-            vec![service; n_shards],
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        ClusterBuilder::with_spec_and_services(
+            ClusterSpec::unified(n_shards, max_batch),
             spec,
-            max_batch,
-            engine_factory,
-            scheduler_factory,
+            vec![service; n_shards],
         )
+        .expect("a unified spec is always valid")
+        .build_with(engine_factory, scheduler_factory)
     }
 
-    /// Most general constructor: one (possibly shared) mapping service per
-    /// shard — the seam for channel partitioning with reusable caches.
+    /// One (possibly shared) mapping service per shard — the old seam for
+    /// channel partitioning with reusable caches.
+    #[deprecated(note = "declare a `config::ClusterSpec` and use \
+                         `ClusterBuilder::with_spec_and_services` + `build_with` instead")]
     pub fn with_shard_services(
         services: Vec<MappingService>,
         spec: LlmSpec,
         max_batch: usize,
-        mut engine_factory: impl FnMut(usize) -> E,
-        mut scheduler_factory: impl FnMut(usize) -> S,
+        engine_factory: impl FnMut(usize) -> E,
+        scheduler_factory: impl FnMut(usize) -> S,
     ) -> Self {
         assert!(!services.is_empty(), "a coordinator needs at least one shard");
-        let shards = services
-            .iter()
-            .enumerate()
-            .map(|(i, svc)| {
-                let mut server = Server::with_scheduler(
-                    engine_factory(i),
-                    RacamSystem::with_service(svc.clone()),
-                    spec.clone(),
-                    max_batch,
-                    scheduler_factory(i),
-                );
-                server.set_shard(i);
-                server
-            })
-            .collect();
-        Coordinator { shards, services }
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        ClusterBuilder::with_spec_and_services(
+            ClusterSpec::unified(services.len(), max_batch),
+            spec,
+            services,
+        )
+        .expect("a unified spec is always valid")
+        .build_with(engine_factory, scheduler_factory)
+    }
+
+    /// Assemble a coordinator from fully configured shards (the
+    /// [`ClusterBuilder`] back end; roles/groups/policies are already set
+    /// on each [`Server`]).
+    pub(crate) fn from_parts(
+        shards: Vec<Server<E, S>>,
+        services: Vec<MappingService>,
+        spec: LlmSpec,
+        kv_link_gbps: f64,
+    ) -> Self {
+        assert!(!shards.is_empty(), "a coordinator needs at least one shard");
+        let roles = shards.iter().map(|s| s.role()).collect();
+        Coordinator { shards, services, spec, roles, kv_link_gbps }
     }
 
     /// Apply one [`ServingPolicy`] (chunked prefill, preemption) to every
@@ -238,41 +277,125 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
         self.shards.iter().map(|s| s.pending()).sum()
     }
 
-    /// Dispatch a request to the least-loaded shard (lowest index wins
-    /// ties), which is deterministic for a given submission order.
+    /// Per-shard lifecycle roles.
+    pub fn roles(&self) -> &[ShardRole] {
+        &self.roles
+    }
+
+    /// Whether this cluster splits prefill and decode across shard groups.
+    pub fn is_disaggregated(&self) -> bool {
+        self.roles.iter().any(|r| matches!(r, ShardRole::Decode))
+    }
+
+    /// Dispatch a request to the least-loaded *fresh-prompt-eligible*
+    /// shard (lowest index wins ties), which is deterministic for a given
+    /// submission order.  Decode-only shards are skipped: they receive
+    /// work exclusively through the prefill→decode KV handoff, never a
+    /// fresh prompt.
     pub fn submit(&mut self, req: Request) {
         let shard = (0..self.shards.len())
+            .filter(|&i| self.roles[i].accepts_fresh_prompts())
             .min_by_key(|&i| self.shards[i].pending())
-            .expect("at least one shard");
+            .expect("a cluster needs at least one prefill-capable shard");
         self.shards[shard].submit(req);
     }
 
-    /// Open live intake channels on every shard and return the combined
-    /// handle.  Call before `run_to_completion`; the run blocks until the
-    /// handle's senders are all dropped.
+    /// Open live intake channels on every fresh-prompt-eligible shard and
+    /// return the combined handle (decode-only shards are skipped — see
+    /// [`Coordinator::submit`]).  Call before `run_to_completion`; the run
+    /// blocks until the handle's senders are all dropped.
     pub fn intake(&mut self) -> Intake {
         Intake {
-            senders: self.shards.iter_mut().map(|s| s.open_intake()).collect(),
+            senders: self
+                .shards
+                .iter_mut()
+                .filter(|s| s.role().accepts_fresh_prompts())
+                .map(|s| s.open_intake())
+                .collect(),
             next: 0,
         }
     }
 
-    /// Run every shard's serving loop to completion on its own thread and
-    /// merge the reports.  Token sequences are engine-deterministic per
-    /// request, so the merged output is independent of thread interleaving.
-    pub fn run_to_completion(&mut self) -> Result<ServerReport> {
-        let wall_start = Instant::now();
-        let mut reports: Vec<Result<ServerReport>> = Vec::with_capacity(self.shards.len());
+    /// Run the shards matching `pred` concurrently, one OS thread each.
+    fn run_shards(
+        shards: &mut [Server<E, S>],
+        pred: impl Fn(ShardRole) -> bool,
+    ) -> Vec<Result<ServerReport>> {
+        let mut reports = Vec::new();
         std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .shards
+            let handles: Vec<_> = shards
                 .iter_mut()
+                .filter(|s| pred(s.role()))
                 .map(|shard| scope.spawn(move || shard.run_to_completion()))
                 .collect();
             for h in handles {
                 reports.push(h.join().expect("worker shard panicked"));
             }
         });
+        reports
+    }
+
+    /// Move every finished prefill to a decode shard, pricing the KV-cache
+    /// transfer over the cluster's link.  Handoffs are dispatched in
+    /// (finish-time, id) order round-robin across decode shards, so the
+    /// assignment is deterministic.
+    ///
+    /// The link is **one shared resource**: transfers serialize FIFO in
+    /// prefill-finish order at `kv_link_gbps`, so a handoff finishing
+    /// while the link is busy queues behind the in-flight transfer — the
+    /// charged `kv_transfer_ns` is queueing + wire time, and concurrent
+    /// finishes cannot extract more than the declared bandwidth.
+    fn dispatch_handoffs(&mut self) {
+        let decode_ids: Vec<usize> = (0..self.shards.len())
+            .filter(|&i| matches!(self.roles[i], ShardRole::Decode))
+            .collect();
+        let mut handoffs: Vec<Handoff> = Vec::new();
+        for shard in &mut self.shards {
+            if matches!(shard.role(), ShardRole::Prefill) {
+                handoffs.extend(shard.take_handoffs());
+            }
+        }
+        handoffs.sort_by(|a, b| {
+            a.prefill_finish_at_ns
+                .total_cmp(&b.prefill_finish_at_ns)
+                .then(a.req.id.cmp(&b.req.id))
+        });
+        let mut link_free_at_ns = 0.0f64;
+        for (n, h) in handoffs.into_iter().enumerate() {
+            let shard = decode_ids[n % decode_ids.len()];
+            let kv_bytes = self.spec.kv_cache_bytes(h.req.prompt.len() as u64);
+            // 1 GB/s ≡ 1 byte/ns, so the wire time is simply bytes / GB/s.
+            let wire_ns = kv_bytes as f64 / self.kv_link_gbps;
+            let start_ns = h.prefill_finish_at_ns.max(link_free_at_ns);
+            link_free_at_ns = start_ns + wire_ns;
+            let transfer_ns = link_free_at_ns - h.prefill_finish_at_ns;
+            self.shards[shard].submit_handoff(h, transfer_ns);
+        }
+    }
+
+    /// Run every shard's serving loop to completion on its own thread and
+    /// merge the reports.  Token sequences are engine-deterministic per
+    /// request, so the merged output is independent of thread interleaving.
+    ///
+    /// A unified cluster runs all shards in one concurrent wave (the
+    /// pre-disaggregation behavior, bit-for-bit).  A disaggregated cluster
+    /// runs in two deterministic waves: prefill (+ any unified) shards
+    /// first, then the finished prompts cross the KV link and the decode
+    /// shards drain them — arrival timestamps carry the pipeline timing,
+    /// so no wall-clock race can change the simulated result.
+    pub fn run_to_completion(&mut self) -> Result<ServerReport> {
+        let wall_start = Instant::now();
+        let reports = if !self.is_disaggregated() {
+            Self::run_shards(&mut self.shards, |_| true)
+        } else {
+            let mut first =
+                Self::run_shards(&mut self.shards, |r| r.accepts_fresh_prompts());
+            self.dispatch_handoffs();
+            first.extend(Self::run_shards(&mut self.shards, |r| {
+                matches!(r, ShardRole::Decode)
+            }));
+            first
+        };
         let mut merged = Vec::with_capacity(reports.len());
         for r in reports {
             merged.push(r?);
@@ -283,6 +406,10 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
 
 #[cfg(test)]
 mod tests {
+    // The deprecated constructors stay under test: they are the
+    // bit-for-bit oracle the ClusterBuilder equivalence tests compare
+    // against, and they must keep working until they are removed.
+    #![allow(deprecated)]
     use super::*;
     use crate::config::{racam_paper, LlmSpec, Precision};
     use crate::coordinator::engine::SyntheticEngine;

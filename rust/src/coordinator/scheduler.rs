@@ -76,6 +76,27 @@ pub trait Scheduler: Send {
     }
 }
 
+/// Boxed schedulers forward, so heterogeneous clusters (per-group policies
+/// chosen at runtime from a [`crate::config::SchedulerKind`]) can share one
+/// `Coordinator<E, Box<dyn Scheduler>>` type.
+impl Scheduler for Box<dyn Scheduler> {
+    fn submit(&mut self, req: Request) {
+        (**self).submit(req)
+    }
+
+    fn pending(&self) -> usize {
+        (**self).pending()
+    }
+
+    fn next_batch(&mut self, slots: usize) -> Vec<Request> {
+        (**self).next_batch(slots)
+    }
+
+    fn should_preempt(&mut self, req: &Request, generated: usize, sim_now_ns: f64) -> Preemption {
+        (**self).should_preempt(req, generated, sim_now_ns)
+    }
+}
+
 /// Length-bucketed admission: pending requests are grouped by the
 /// [`ctx_bucket`] of their prompt length, and each `next_batch` call
 /// drains from the single bucket whose head request is oldest — batches

@@ -49,12 +49,24 @@
 //! would otherwise go idle.  `run_to_completion` returns once all queued
 //! work is done **and** every intake sender has been dropped.
 //!
+//! ## Roles (prefill/decode disaggregation)
+//!
+//! A shard carries a [`ShardRole`].  `Unified` (the default) serves the
+//! whole lifecycle.  On a `Prefill` shard, a prompt that finishes prefill
+//! leaves as a [`Handoff`] (no decode, no result emitted here) for the
+//! coordinator to ship to a decode shard.  A `Decode` shard receives
+//! handoffs via [`Server::submit_handoff`]: the request is released once
+//! the simulated clock reaches *prefill finish + KV transfer*, admission
+//! skips prefill, the prefill shard's intrinsic cost and the original
+//! arrival carry over into the result, and the transfer time lands in
+//! [`ShardStats::kv_transfer_ns`].
+//!
 //! [`MappingService`]: crate::mapping::MappingService
 
 use super::batcher::{ctx_bucket, FcfsBatcher};
 use super::engine::TokenEngine;
 use super::scheduler::{Preemption, Scheduler};
-use crate::config::{LlmSpec, ServingPolicy};
+use crate::config::{LlmSpec, ServingPolicy, ShardRole};
 use crate::metrics::LatencyBreakdown;
 use crate::workloads::{decode_kernels, prefill_kernels, stage_latency, RacamSystem};
 use crate::Result;
@@ -159,11 +171,51 @@ impl RequestResult {
     }
 }
 
+/// A prompt whose prefill completed on a [`ShardRole::Prefill`] shard,
+/// awaiting KV-cache transfer to a decode shard.  The request inside keeps
+/// its *original* arrival time (end-to-end latency spans the whole
+/// pipeline); the coordinator prices the KV link and delivers the handoff
+/// via [`Server::submit_handoff`].
+#[derive(Debug, Clone)]
+pub struct Handoff {
+    /// The original request (arrival/deadline untouched; the prompt rides
+    /// along so the decode engine can rebuild its hidden state).
+    pub req: Request,
+    /// Intrinsic simulated prefill cost charged on the prefill shard, ns.
+    pub sim_prefill_ns: f64,
+    /// Absolute prefill-shard clock time the prompt finished, ns.
+    pub prefill_finish_at_ns: f64,
+    /// Host wall time the prefill shard spent on this request, ns.
+    pub wall_ns: f64,
+}
+
+/// Decode-side bookkeeping for one received [`Handoff`], keyed by request
+/// id until admission (and re-inserted if the scheduler re-queues the
+/// running request — the KV cache stays resident on this shard, so
+/// re-admission must keep skipping prefill).
+#[derive(Debug, Clone, Copy)]
+struct HandoffMeta {
+    sim_prefill_ns: f64,
+    original_arrival_ns: f64,
+    kv_transfer_ns: f64,
+    wall_ns: f64,
+    /// Whether this handoff was already counted into the shard's
+    /// `handoffs`/`kv_transfer_ns` stats (a re-queued handoff is
+    /// re-admitted but crossed the link only once).
+    counted: bool,
+}
+
 /// Per-shard utilization accounting (one entry per worker).
 #[derive(Debug, Clone)]
 pub struct ShardStats {
     pub shard: usize,
-    /// Requests this shard retired (completed or shed).
+    /// Group label this shard belongs to (`"unified"` outside a
+    /// [`crate::config::ClusterSpec`]-built cluster).
+    pub group: String,
+    /// The shard's lifecycle role.
+    pub role: ShardRole,
+    /// Requests this shard retired (completed, shed, or handed off to a
+    /// decode shard).
     pub requests: usize,
     /// Tokens this shard generated.
     pub tokens: usize,
@@ -192,6 +244,13 @@ pub struct ShardStats {
     pub preemptions: usize,
     /// Running requests shed by the scheduler's preemption hook.
     pub shed: usize,
+    /// Handoffs this shard participated in: prompts handed *out* on a
+    /// prefill shard, prefilled requests received on a decode shard (zero
+    /// on unified shards).
+    pub handoffs: usize,
+    /// Simulated KV-cache transfer time charged on this (decode) shard's
+    /// requests, ns — the cost of the prefill→decode link.
+    pub kv_transfer_ns: f64,
 }
 
 impl ShardStats {
@@ -274,6 +333,17 @@ pub struct Server<E: TokenEngine, S: Scheduler = FcfsBatcher> {
     scheduler: S,
     max_batch: usize,
     shard_id: usize,
+    /// Group label for per-group reporting (set by the cluster builder).
+    group: String,
+    /// Lifecycle role: a `Prefill` shard hands finished prompts off
+    /// instead of decoding them; a `Decode` shard admits handoffs straight
+    /// into the decode phase.
+    role: ShardRole,
+    /// Prompts whose prefill finished on this (prefill) shard, awaiting
+    /// pickup by the coordinator ([`Server::take_handoffs`]).
+    handoffs_out: Vec<Handoff>,
+    /// Received handoffs' accounting, keyed by request id until admission.
+    handoff_meta: HashMap<u64, HandoffMeta>,
     /// How the iteration engine schedules prefill and preemption.
     policy: ServingPolicy,
     /// Requests whose simulated arrival time has not been reached yet.
@@ -308,6 +378,11 @@ const MAX_PREFILL_BYPASSES: u32 = 4;
 struct Running {
     req: Request,
     phase: Phase,
+    /// The handoff bookkeeping this member was admitted with (decode
+    /// shards); rides along so a scheduler re-queue can re-install it —
+    /// the KV cache stays resident, so re-admission skips prefill and the
+    /// result keeps the original arrival and prefill cost.
+    handoff: Option<HandoffMeta>,
     /// Admission order across the whole run: the prefill-step tiebreaker,
     /// and the strict prefill order under whole-prompt mode — independent
     /// of slot shuffling in the `running` vector.
@@ -370,6 +445,10 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             scheduler,
             max_batch,
             shard_id: 0,
+            group: "unified".into(),
+            role: ShardRole::Unified,
+            handoffs_out: Vec::new(),
+            handoff_meta: HashMap::new(),
             policy: ServingPolicy::default(),
             future: BinaryHeap::new(),
             intake: None,
@@ -435,6 +514,51 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
     /// Label this worker for per-shard reporting (set by the coordinator).
     pub(crate) fn set_shard(&mut self, id: usize) {
         self.shard_id = id;
+    }
+
+    /// Set the group label used in per-group reporting.
+    pub(crate) fn set_group(&mut self, label: &str) {
+        self.group = label.to_string();
+    }
+
+    /// Set this shard's lifecycle role (default [`ShardRole::Unified`]).
+    pub(crate) fn set_role(&mut self, role: ShardRole) {
+        self.role = role;
+    }
+
+    /// This shard's lifecycle role.
+    pub fn role(&self) -> ShardRole {
+        self.role
+    }
+
+    /// Drain the prompts this (prefill) shard has finished and queued for
+    /// KV transfer.  Called by the coordinator between the prefill and
+    /// decode phases of a disaggregated run.
+    pub fn take_handoffs(&mut self) -> Vec<Handoff> {
+        std::mem::take(&mut self.handoffs_out)
+    }
+
+    /// Deliver a prefilled request to this (decode) shard.  The request is
+    /// released to the scheduler once the simulated clock reaches
+    /// *prefill finish + KV transfer*; on admission it skips prefill, its
+    /// accounting carries the prefill shard's intrinsic cost, and the
+    /// transfer time is charged to [`ShardStats::kv_transfer_ns`].
+    pub fn submit_handoff(&mut self, handoff: Handoff, kv_transfer_ns: f64) {
+        let Handoff { mut req, sim_prefill_ns, prefill_finish_at_ns, wall_ns } = handoff;
+        self.handoff_meta.insert(
+            req.id,
+            HandoffMeta {
+                sim_prefill_ns,
+                original_arrival_ns: req.arrival_ns as f64,
+                kv_transfer_ns,
+                wall_ns,
+                counted: false,
+            },
+        );
+        // The KV cache lands on this shard's clock at prefill finish +
+        // transfer; ceil keeps the release causal (never before the data).
+        req.arrival_ns = (prefill_finish_at_ns + kv_transfer_ns).ceil() as u64;
+        self.submit(req);
     }
 
     /// Simulated prefill cost for a prompt length.  The kernel *shape* is
@@ -599,6 +723,9 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         let mut chunk_stall_ns = 0.0f64;
         let mut preemptions = 0usize;
         let mut shed_count = 0usize;
+        let mut handed_off = 0usize;
+        let mut handoffs_in = 0usize;
+        let mut kv_transfer_ns = 0.0f64;
         let mut admit_seq = 0u64;
         // Consecutive no-progress rounds in which the preemption policy
         // re-queued everything it was handed (see the livelock bail below).
@@ -621,16 +748,34 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                 admitted += 1;
                 let t0 = Instant::now();
                 let hidden = self.engine.embed_prompt(&req.prompt);
+                // A received handoff skips prefill: its prompt was already
+                // prefilled on the prefill shard, whose intrinsic cost (and
+                // original arrival, for end-to-end latency) carries over;
+                // the KV-link transfer is charged to this shard's stats
+                // once, however many times a re-queue re-admits it.
+                let mut meta = self.handoff_meta.remove(&req.id);
+                if let Some(m) = &mut meta {
+                    if !m.counted {
+                        handoffs_in += 1;
+                        kv_transfer_ns += m.kv_transfer_ns;
+                        m.counted = true;
+                    }
+                }
+                let (phase, carried_ns, arrival_ns, carried_wall_ns) = match &meta {
+                    Some(m) => (Phase::Decode, m.sim_prefill_ns, m.original_arrival_ns, m.wall_ns),
+                    None => (Phase::Prefill { done: 0 }, 0.0, req.arrival_ns as f64, 0.0),
+                };
                 running.push(Running {
-                    phase: Phase::Prefill { done: 0 },
+                    phase,
+                    handoff: meta,
                     seq: admit_seq,
                     bypassed: 0,
                     hidden,
                     tokens: Vec::new(),
-                    sim_ns: 0.0,
-                    sim_ttft_ns: 0.0,
-                    wall_ns: t0.elapsed().as_nanos() as f64,
-                    arrival_ns: req.arrival_ns as f64,
+                    sim_ns: carried_ns,
+                    sim_ttft_ns: carried_ns,
+                    wall_ns: carried_wall_ns + t0.elapsed().as_nanos() as f64,
+                    arrival_ns,
                     first_token_at_ns: sim_now_ns,
                     req,
                 });
@@ -652,8 +797,15 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                             preemptions += 1;
                             requeued += 1;
                             // Generation state is dropped: re-admission
-                            // re-prefills (recompute-style preemption).
+                            // re-prefills (recompute-style preemption).  A
+                            // re-queued *handoff* keeps its bookkeeping —
+                            // its KV cache is resident on this shard, so
+                            // re-admission skips prefill and the result
+                            // keeps the original arrival and prefill cost.
                             let r = running.remove(i);
+                            if let Some(m) = r.handoff {
+                                self.handoff_meta.insert(r.req.id, m);
+                            }
                             self.scheduler.submit(r.req);
                         }
                         Preemption::Shed => {
@@ -725,6 +877,19 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                     // Nothing to decode: retire immediately.
                     let r = running.remove(idx);
                     done.push(r.retire(sim_now_ns, false));
+                } else if finished && self.role == ShardRole::Prefill {
+                    // Prefill-only shard: the finished prompt leaves for a
+                    // decode shard instead of decoding here.  The decode
+                    // shard emits the request's (single) result; this shard
+                    // only counts the handoff.
+                    let r = running.remove(idx);
+                    handed_off += 1;
+                    self.handoffs_out.push(Handoff {
+                        sim_prefill_ns: r.sim_ttft_ns,
+                        prefill_finish_at_ns: sim_now_ns,
+                        wall_ns: r.wall_ns,
+                        req: r.req,
+                    });
                 }
                 if chunk_tokens.is_some() {
                     break;
@@ -859,7 +1024,9 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         let wall_ns = wall_start.elapsed().as_nanos() as f64;
         let stats = ShardStats {
             shard: self.shard_id,
-            requests: done.len(),
+            group: self.group.clone(),
+            role: self.role,
+            requests: done.len() + handed_off,
             tokens: total_tokens,
             sim_ns,
             wall_ns,
@@ -875,6 +1042,8 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             chunk_stall_ns,
             preemptions,
             shed: shed_count,
+            handoffs: handed_off + handoffs_in,
+            kv_transfer_ns,
         };
         Ok(ServerReport {
             sim_tokens_per_s: total_tokens as f64 / (sim_now_ns / 1e9).max(f64::MIN_POSITIVE),
@@ -1300,5 +1469,141 @@ mod tests {
     fn policy_accessors_roundtrip() {
         let s = server(1).with_policy(ServingPolicy::interactive());
         assert_eq!(s.policy(), ServingPolicy::interactive());
+    }
+
+    #[test]
+    fn prefill_role_hands_prompts_off_instead_of_decoding() {
+        let mut s = server(2);
+        s.set_role(ShardRole::Prefill);
+        s.set_group("prefill");
+        s.submit(Request::new(0, vec![1; 32], 4));
+        s.submit(Request::new(1, vec![2; 16], 0)); // nothing to decode
+        let rep = s.run_to_completion().unwrap();
+        // The zero-token request completes here; the other leaves as a
+        // handoff and produces no result on this shard.
+        assert_eq!(rep.results.len(), 1);
+        assert_eq!(rep.results[0].id, 1);
+        assert_eq!(rep.total_tokens, 0);
+        assert_eq!(rep.shards[0].requests, 2, "handoffs count as retired work");
+        assert_eq!(rep.shards[0].handoffs, 1);
+        assert_eq!(rep.shards[0].decode_iterations, 0);
+        assert_eq!(rep.shards[0].group, "prefill");
+        assert_eq!(rep.shards[0].role, ShardRole::Prefill);
+        let handoffs = s.take_handoffs();
+        assert_eq!(handoffs.len(), 1);
+        let h = &handoffs[0];
+        assert_eq!(h.req.id, 0);
+        assert_eq!(h.req.max_new_tokens, 4);
+        assert!(h.sim_prefill_ns > 0.0);
+        assert!(h.prefill_finish_at_ns >= h.sim_prefill_ns);
+        // Taking drains the queue.
+        assert!(s.take_handoffs().is_empty());
+    }
+
+    /// Re-queues every running request exactly once, then keeps it.
+    struct RequeueOnceScheduler {
+        inner: FcfsBatcher,
+        requeued: std::collections::HashSet<u64>,
+    }
+
+    impl Scheduler for RequeueOnceScheduler {
+        fn submit(&mut self, req: Request) {
+            self.inner.submit(req);
+        }
+        fn pending(&self) -> usize {
+            Scheduler::pending(&self.inner)
+        }
+        fn next_batch(&mut self, slots: usize) -> Vec<Request> {
+            self.inner.next_batch(slots)
+        }
+        fn should_preempt(&mut self, req: &Request, _gen: usize, _now: f64) -> Preemption {
+            if self.requeued.insert(req.id) {
+                Preemption::Requeue
+            } else {
+                Preemption::Keep
+            }
+        }
+    }
+
+    #[test]
+    fn requeued_handoff_keeps_its_bookkeeping_and_never_reprefills() {
+        // Regression: a scheduler re-queue on a decode shard must not turn
+        // a received handoff back into a fresh prompt — the KV cache is
+        // resident, so re-admission skips prefill, the result keeps the
+        // original arrival and prefill cost, and the link is charged once.
+        let mut pre = server(1);
+        pre.set_role(ShardRole::Prefill);
+        pre.submit(Request::new(0, vec![3; 24], 4));
+        pre.run_to_completion().unwrap();
+        let handoff = pre.take_handoffs().pop().expect("one handoff");
+        let prefill_cost = handoff.sim_prefill_ns;
+
+        let mut dec = Server::with_scheduler(
+            SyntheticEngine::new(64, 128),
+            RacamSystem::new(&racam_paper()),
+            tiny_spec(),
+            1,
+            RequeueOnceScheduler {
+                inner: FcfsBatcher::new(1),
+                requeued: std::collections::HashSet::new(),
+            },
+        );
+        dec.set_role(ShardRole::Decode);
+        dec.set_policy(ServingPolicy::whole_prefill().with_preemption());
+        let kv_ns = 500.0;
+        dec.submit_handoff(handoff, kv_ns);
+        let rep = dec.run_to_completion().unwrap();
+        assert_eq!(rep.results.len(), 1);
+        let r = &rep.results[0];
+        assert!(!r.shed);
+        assert_eq!(r.tokens.len(), 4);
+        assert_eq!(r.arrival_ns, 0.0, "original arrival must survive the re-queue");
+        assert_eq!(r.sim_ttft_ns, prefill_cost, "carried prefill cost must survive");
+        assert_eq!(rep.shards[0].preemptions, 1);
+        assert_eq!(rep.shards[0].prefill_chunks, 0, "decode shard must never re-prefill");
+        assert_eq!(rep.shards[0].handoffs, 1, "one link crossing, counted once");
+        assert_eq!(rep.shards[0].kv_transfer_ns, kv_ns, "transfer charged once");
+    }
+
+    #[test]
+    fn decode_shard_admits_handoffs_without_reprefilling() {
+        // Run the same request (a) unified and (b) prefill shard → decode
+        // shard: the tokens must match, the decode shard must charge no
+        // prefill steps, and the handoff's accounting must carry over.
+        let unified = {
+            let mut s = server(1);
+            s.submit(Request::new(0, vec![3; 24], 5));
+            s.run_to_completion().unwrap()
+        };
+
+        let mut pre = server(1);
+        pre.set_role(ShardRole::Prefill);
+        pre.submit(Request::new(0, vec![3; 24], 5));
+        pre.run_to_completion().unwrap();
+        let handoff = pre.take_handoffs().pop().expect("one handoff");
+        let prefill_cost = handoff.sim_prefill_ns;
+        let finish = handoff.prefill_finish_at_ns;
+
+        let mut dec = server(1);
+        dec.set_role(ShardRole::Decode);
+        let kv_ns = 1_000.0;
+        dec.submit_handoff(handoff, kv_ns);
+        let rep = dec.run_to_completion().unwrap();
+        assert_eq!(rep.results.len(), 1);
+        let r = &rep.results[0];
+        assert_eq!(r.tokens, unified.results[0].tokens, "handoff must not change generation");
+        assert_eq!(rep.shards[0].prefill_chunks, 0, "decode shard never prefills a handoff");
+        assert_eq!(rep.shards[0].handoffs, 1);
+        assert_eq!(rep.shards[0].kv_transfer_ns, kv_ns);
+        // Intrinsic TTFT carries the prefill shard's cost; the decode
+        // clock released the request only after prefill + transfer (the
+        // gap shows up as idle time on the decode shard).
+        assert_eq!(r.sim_ttft_ns, prefill_cost);
+        assert!(r.sim_total_ns > prefill_cost);
+        assert!(r.sim_first_token_at_ns >= finish + kv_ns - 1.0);
+        assert!(rep.shards[0].sim_idle_ns > 0.0);
+        // Original arrival is preserved for end-to-end latency.
+        assert_eq!(r.arrival_ns, 0.0);
+        assert!(r.ttft_ns() >= finish + kv_ns - 1.0);
     }
 }

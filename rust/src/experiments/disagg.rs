@@ -1,0 +1,329 @@
+//! `exp disagg` — unified vs prefill/decode-disaggregated serving under a
+//! long-prompt mixed workload, declared through [`ClusterSpec`] and built
+//! by [`ClusterBuilder`].
+//!
+//! The comparison holds hardware and traffic fixed: every cluster covers
+//! the same 4 shards' worth of the paper device (auto-partitioned, so the
+//! 4-unified and 2-prefill + 2-decode layouts price against identical
+//! 2-channel shards from one shared mapping cache), and every cell replays
+//! the same seed-deterministic stream.  What changes is the *topology*:
+//! unified shards interleave prefill with decode on one clock, while the
+//! disaggregated cluster runs prompts on dedicated prefill shards and
+//! ships each finished KV cache to a decode shard over the cluster's
+//! simulated KV link ([`ShardStats::kv_transfer_ns`]).
+//!
+//! Headline columns: the **p95 TTFT** (whole population and the
+//! short-request slice) and the **decode stall** — the time decoders sat
+//! behind prefill steps, which disaggregation eliminates by construction
+//! and whole-prompt unified serving pays in full — next to the KV-link
+//! cost the disaggregated topology pays instead.
+//!
+//! [`ShardStats::kv_transfer_ns`]: crate::coordinator::ShardStats
+
+use crate::config::json::Value;
+use crate::config::{
+    gpt3_6_7b, racam_paper, ArrivalProcess, ClusterSpec, LengthDist, LlmSpec, ServingPolicy,
+    TrafficSpec,
+};
+use crate::coordinator::{ClusterBuilder, Request, SyntheticEngine};
+use crate::mapping::MappingService;
+use crate::metrics::fmt_ns;
+use crate::report::Table;
+use crate::traffic::{generate, ttft_percentiles_where, SloSummary};
+
+/// Total shards per cluster (channel partition: 4 × 2 of the paper's 8).
+const SHARDS: usize = 4;
+const MAX_BATCH: usize = 4;
+const SEED: u64 = 0xD15A_66;
+/// Rates straddling the 4-shard capacity under the long-prompt mix.
+const RATES: &[f64] = &[150.0, 600.0];
+const SHORT_REQUESTS: u64 = 28;
+const LONG_REQUESTS: u64 = 6;
+const LONG_PROMPT: u64 = 2048;
+/// Prompt-length boundary between the short and long populations.
+const SHORT_MAX_PROMPT: usize = 256;
+const DEADLINE_NS: u64 = 150_000_000; // 150 ms mean e2e SLO
+/// Prefill chunk of the chunked-unified middle point.
+const CHUNK: u64 = 256;
+
+/// The cluster layouts compared, in row order (label, spec).
+fn clusters() -> Vec<(&'static str, ClusterSpec)> {
+    let mut chunked = ClusterSpec::unified(SHARDS, MAX_BATCH);
+    chunked.groups[0].policy = ServingPolicy::chunked(CHUNK);
+    vec![
+        ("unified", ClusterSpec::unified(SHARDS, MAX_BATCH)),
+        ("unified/chunk256", chunked),
+        ("disagg 2p+2d", ClusterSpec::disaggregated(2, 2, MAX_BATCH)),
+    ]
+}
+
+/// Experiment-specific entries for the `BENCH_disagg.json` config block.
+pub(crate) fn bench_config() -> Vec<(&'static str, Value)> {
+    vec![
+        (
+            "clusters",
+            Value::Arr(clusters().iter().map(|(l, _)| Value::Str(l.to_string())).collect()),
+        ),
+        ("schedulers", Value::Arr(vec![Value::Str("fcfs".into())])),
+        ("rates_per_s", Value::Arr(RATES.iter().map(|r| Value::Num(*r)).collect())),
+        ("requests", Value::Num((SHORT_REQUESTS + LONG_REQUESTS) as f64)),
+        ("long_prompt_tokens", Value::Num(LONG_PROMPT as f64)),
+        ("deadline_ms", Value::Num(DEADLINE_NS as f64 / 1e6)),
+        (
+            "kv_link_gbps",
+            Value::Num(ClusterSpec::disaggregated(2, 2, MAX_BATCH).kv_link_gbps),
+        ),
+    ]
+}
+
+/// The mixed workload: mostly short prompts at `rate_per_s`, plus long
+/// prompts at a proportional trickle, merged into one arrival-ordered
+/// stream with sequential ids.
+fn mixed_stream(rate_per_s: f64, shorts: u64, longs: u64) -> Vec<Request> {
+    let short = generate(&TrafficSpec {
+        seed: SEED,
+        requests: shorts,
+        arrival: ArrivalProcess::Poisson { rate_per_s },
+        prompt: LengthDist::Uniform { lo: 16, hi: 96 },
+        output: LengthDist::Uniform { lo: 6, hi: 12 },
+        deadline_ns: Some(DEADLINE_NS),
+    });
+    let long = generate(&TrafficSpec {
+        seed: SEED ^ 0x9e37,
+        requests: longs,
+        arrival: ArrivalProcess::Poisson {
+            rate_per_s: rate_per_s * longs.max(1) as f64 / shorts.max(1) as f64,
+        },
+        prompt: LengthDist::Fixed(LONG_PROMPT),
+        output: LengthDist::Uniform { lo: 2, hi: 6 },
+        deadline_ns: Some(DEADLINE_NS),
+    });
+    let mut all: Vec<Request> = short.into_iter().chain(long).collect();
+    all.sort_by_key(|r| r.arrival_ns);
+    for (i, r) in all.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    all
+}
+
+/// One graded cell plus the headline slices the table leads with.
+struct Cell {
+    summary: SloSummary,
+    ttft_p95: f64,
+    short_ttft_p95: f64,
+}
+
+impl Cell {
+    fn headers() -> Vec<&'static str> {
+        vec![
+            "run",
+            "reqs",
+            "ttft_p95",
+            "short_ttft_p95",
+            "decode_stall",
+            "kv_transfer",
+            "handoffs",
+            "e2e_p99",
+            "goodput_tok/s",
+            "slo_met",
+            "util",
+        ]
+    }
+
+    fn row(&self, label: &str) -> Vec<String> {
+        let s = &self.summary;
+        let busy = if s.shard_utilization.is_empty() {
+            0.0
+        } else {
+            s.shard_utilization.iter().map(|u| u.busy).sum::<f64>()
+                / s.shard_utilization.len() as f64
+        };
+        vec![
+            label.to_string(),
+            s.requests.to_string(),
+            fmt_ns(self.ttft_p95),
+            fmt_ns(self.short_ttft_p95),
+            fmt_ns(s.chunk_stall_ns),
+            fmt_ns(s.kv_transfer_ns),
+            s.handoffs.to_string(),
+            fmt_ns(s.e2e.p99),
+            format!("{:.0}", s.goodput_tokens_per_s),
+            format!("{:.0}%", 100.0 * s.slo_attainment),
+            format!("{:.0}%", 100.0 * busy),
+        ]
+    }
+}
+
+/// Serve one (cluster, rate) cell over `stream` and grade it.
+fn run_cell(
+    services: &[MappingService],
+    model: &LlmSpec,
+    spec: ClusterSpec,
+    stream: &[Request],
+) -> crate::Result<Cell> {
+    let mut coord =
+        ClusterBuilder::with_spec_and_services(spec, model.clone(), services.to_vec())?
+            .build(|_| SyntheticEngine::new(64, 256));
+    for req in stream {
+        coord.submit(req.clone());
+    }
+    let report = coord.run_to_completion()?;
+    let short = ttft_percentiles_where(&report, |r| r.prompt_tokens <= SHORT_MAX_PROMPT);
+    let all = ttft_percentiles_where(&report, |_| true);
+    Ok(Cell {
+        summary: SloSummary::from_report(&report),
+        ttft_p95: all.p95,
+        short_ttft_p95: short.p95,
+    })
+}
+
+/// The cluster × rate matrix, plus the per-group utilization view of the
+/// disaggregated cluster at the highest rate.
+fn matrix(
+    services: &[MappingService],
+    model: &LlmSpec,
+    rates: &[f64],
+    shorts: u64,
+    longs: u64,
+) -> crate::Result<(Table, Table)> {
+    let mut t = Table::new(
+        &format!(
+            "Disaggregation — unified vs prefill/decode split, {} on {SHARDS} shards × batch \
+             {MAX_BATCH}; {longs} long ({LONG_PROMPT} tok) per {shorts} short requests, \
+             {}ms e2e SLO",
+            model.name,
+            DEADLINE_NS / 1_000_000
+        ),
+        &Cell::headers(),
+    );
+    let mut disagg_summary = None;
+    for &rate in rates {
+        let stream = mixed_stream(rate, shorts, longs);
+        for (label, spec) in clusters() {
+            let disaggregated = spec.is_disaggregated();
+            let cell = run_cell(services, model, spec, &stream)?;
+            if disaggregated {
+                disagg_summary = Some(cell.summary.clone());
+            }
+            t.row(cell.row(&format!("{label}@{rate}/s")));
+        }
+    }
+    let util = disagg_summary
+        .expect("the roster contains a disaggregated cluster")
+        .utilization_table(
+            &format!(
+                "Disaggregation — per-group utilization ({}, disaggregated, highest rate)",
+                model.name
+            ),
+            false,
+        );
+    Ok((t, util))
+}
+
+pub fn run() -> crate::Result<Vec<Table>> {
+    // All clusters in the roster total SHARDS shards, so one shared
+    // 2-channel-per-shard partition prices every cell from the same caches.
+    let services = ClusterBuilder::new(
+        ClusterSpec::unified(SHARDS, MAX_BATCH),
+        &racam_paper(),
+        gpt3_6_7b(),
+    )?
+    .services()
+    .to_vec();
+    let (t, util) = matrix(&services, &gpt3_6_7b(), RATES, SHORT_REQUESTS, LONG_REQUESTS)?;
+    Ok(vec![t, util])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Precision, ShardRole};
+
+    fn tiny_spec() -> LlmSpec {
+        LlmSpec {
+            name: "tiny".into(),
+            layers: 2,
+            hidden: 256,
+            heads: 4,
+            kv_heads: 4,
+            ffn: 512,
+            gated_ffn: false,
+            vocab: 512,
+            prec: Precision::Int8,
+        }
+    }
+
+    fn services() -> Vec<MappingService> {
+        vec![MappingService::for_config(&racam_paper()); SHARDS]
+    }
+
+    #[test]
+    fn disaggregated_cell_charges_kv_transfer_and_no_decode_stall() {
+        let stream = mixed_stream(400.0, 10, 2);
+        let cell = run_cell(
+            &services(),
+            &tiny_spec(),
+            ClusterSpec::disaggregated(2, 2, MAX_BATCH),
+            &stream,
+        )
+        .unwrap();
+        assert_eq!(cell.summary.requests, 12);
+        assert!(cell.summary.kv_transfer_ns > 0.0, "decode shards must pay the KV link");
+        assert_eq!(cell.summary.handoffs, 12, "every decoding request crosses the link once");
+        // The KV cost lands specifically on the decode group's shards.
+        let decode_kv: f64 = cell
+            .summary
+            .shard_utilization
+            .iter()
+            .filter(|u| u.role == ShardRole::Decode)
+            .map(|u| u.kv_transfer_ns)
+            .sum();
+        assert_eq!(decode_kv, cell.summary.kv_transfer_ns);
+        assert_eq!(cell.summary.shed_requests, 0);
+    }
+
+    #[test]
+    fn unified_cell_never_touches_the_kv_link() {
+        let stream = mixed_stream(400.0, 6, 1);
+        let cell = run_cell(
+            &services(),
+            &tiny_spec(),
+            ClusterSpec::unified(SHARDS, MAX_BATCH),
+            &stream,
+        )
+        .unwrap();
+        assert_eq!(cell.summary.kv_transfer_ns, 0.0);
+        assert_eq!(cell.summary.handoffs, 0);
+        assert!(cell.summary.requests == 7);
+    }
+
+    #[test]
+    fn matrix_covers_every_cluster_and_rate() {
+        let (t, util) = matrix(&services(), &tiny_spec(), &[800.0], 6, 2).unwrap();
+        assert_eq!(t.num_rows(), clusters().len());
+        let rendered = t.render();
+        for (label, _) in clusters() {
+            assert!(rendered.contains(&format!("{label}@800")), "missing {label}:\n{rendered}");
+        }
+        // The per-group view has one row per group of the disaggregated
+        // cluster (prefill + decode), not one per shard.
+        assert_eq!(util.num_rows(), 2);
+    }
+
+    #[test]
+    fn mixed_stream_is_deterministic() {
+        let a = mixed_stream(200.0, 8, 2);
+        assert_eq!(a, mixed_stream(200.0, 8, 2));
+        assert_eq!(a.len(), 10);
+        assert_eq!(a.iter().filter(|r| r.prompt.len() == LONG_PROMPT as usize).count(), 2);
+        assert!(a.windows(2).all(|w| w[0].arrival_ns <= w[1].arrival_ns));
+    }
+
+    #[test]
+    fn bench_config_names_clusters_and_rates() {
+        let keys: Vec<&str> = bench_config().iter().map(|(k, _)| *k).collect();
+        for k in ["clusters", "rates_per_s", "kv_link_gbps"] {
+            assert!(keys.contains(&k), "missing {k}");
+        }
+    }
+}

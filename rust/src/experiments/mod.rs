@@ -3,6 +3,7 @@
 //! artifact as paper-style text tables + CSV under `results/`.
 
 mod common;
+mod disagg;
 mod extensions;
 mod fig01;
 mod fig09;
@@ -28,6 +29,7 @@ use std::time::Instant;
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
     "tab1", "tab4", "tab5", "ext-energy", "ext-reliability", "ext-trace", "traffic", "prefill",
+    "disagg",
 ];
 
 /// Run one experiment; returns its tables (already saved under `results/`,
@@ -53,6 +55,7 @@ pub fn run(id: &str) -> Result<Vec<Table>> {
         "ext-trace" => extensions::run_trace(),
         "traffic" => traffic::run()?,
         "prefill" => prefill::run()?,
+        "disagg" => disagg::run()?,
         other => anyhow::bail!("unknown experiment '{other}' (known: {ALL_IDS:?})"),
     };
     let wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
@@ -101,6 +104,7 @@ fn extra_bench_config(id: &str) -> Vec<(&'static str, Value)> {
     match id {
         "traffic" => traffic::bench_config(),
         "prefill" => prefill::bench_config(),
+        "disagg" => disagg::bench_config(),
         _ => Vec::new(),
     }
 }
@@ -130,7 +134,7 @@ mod tests {
     #[test]
     fn serving_bench_json_names_schedulers_and_rates() {
         use crate::config::json::{self, Value};
-        for id in ["traffic", "prefill"] {
+        for id in ["traffic", "prefill", "disagg"] {
             let s = super::bench_json(id, &[], 1.0);
             let v = json::parse(&s).unwrap();
             let cfg = v.get("config").unwrap();

@@ -13,11 +13,10 @@
 
 use crate::config::json::Value;
 use crate::config::{
-    gpt3_6_7b, racam_paper, ArrivalProcess, LengthDist, LlmSpec, ServingPolicy, TrafficSpec,
+    gpt3_6_7b, racam_paper, ArrivalProcess, ClusterSpec, LengthDist, LlmSpec, SchedulerKind,
+    ServingPolicy, TrafficSpec,
 };
-use crate::coordinator::{
-    Coordinator, EdfScheduler, FcfsBatcher, Request, Scheduler, SyntheticEngine,
-};
+use crate::coordinator::{ClusterBuilder, Request, SyntheticEngine};
 use crate::mapping::MappingService;
 use crate::metrics::fmt_ns;
 use crate::report::Table;
@@ -146,21 +145,19 @@ impl Cell {
 }
 
 /// Serve one (scheduler, policy) cell over `stream` and grade it.
-fn run_cell<S: Scheduler>(
+fn run_cell(
     services: &[MappingService],
     model: &LlmSpec,
     stream: &[Request],
     policy: ServingPolicy,
-    scheduler_factory: impl FnMut(usize) -> S,
+    scheduler: SchedulerKind,
 ) -> crate::Result<Cell> {
-    let mut coord = Coordinator::with_shard_services(
-        services.to_vec(),
-        model.clone(),
-        MAX_BATCH,
-        |_| SyntheticEngine::new(64, 256),
-        scheduler_factory,
-    )
-    .with_policy(policy);
+    let mut spec = ClusterSpec::unified(services.len(), MAX_BATCH);
+    spec.groups[0].scheduler = scheduler;
+    spec.groups[0].policy = policy;
+    let mut coord =
+        ClusterBuilder::with_spec_and_services(spec, model.clone(), services.to_vec())?
+            .build(|_| SyntheticEngine::new(64, 256));
     for req in stream {
         coord.submit(req.clone());
     }
@@ -193,19 +190,13 @@ fn matrix(
         let stream = mixed_stream(rate, shorts, longs);
         // The SCHEDULERS roster bench_config() reports drives the rows,
         // so the BENCH json and the table cannot drift apart: a roster
-        // entry without a dispatch arm fails loudly instead of silently
-        // reporting schedulers that have no rows.
+        // entry the SchedulerKind registry does not know fails loudly
+        // instead of silently reporting schedulers that have no rows.
         for &sched in SCHEDULERS {
+            let kind = SchedulerKind::from_label(sched)
+                .ok_or_else(|| anyhow::anyhow!("no scheduler kind named '{sched}'"))?;
             for policy in policies() {
-                let cell = match sched {
-                    "fcfs" => run_cell(services, model, &stream, policy, |_| {
-                        FcfsBatcher::new(MAX_BATCH)
-                    })?,
-                    "edf" => run_cell(services, model, &stream, policy, |_| {
-                        EdfScheduler::new()
-                    })?,
-                    other => anyhow::bail!("no dispatch arm for scheduler '{other}'"),
-                };
+                let cell = run_cell(services, model, &stream, policy, kind)?;
                 t.row(cell.row(&format!("{sched}/{}@{rate}/s", policy.label())));
             }
         }
@@ -214,8 +205,13 @@ fn matrix(
 }
 
 pub fn run() -> crate::Result<Vec<Table>> {
-    let services: Vec<MappingService> =
-        Coordinator::<SyntheticEngine, FcfsBatcher>::partitioned_services(&racam_paper(), SHARDS);
+    let services: Vec<MappingService> = ClusterBuilder::new(
+        ClusterSpec::unified(SHARDS, MAX_BATCH),
+        &racam_paper(),
+        gpt3_6_7b(),
+    )?
+    .services()
+    .to_vec();
     Ok(vec![matrix(&services, &gpt3_6_7b(), RATES, SHORT_REQUESTS, LONG_REQUESTS)?])
 }
 
@@ -255,13 +251,21 @@ mod tests {
             stream.push(Request::new(2 * i + 1, vec![2; 32], 2).at(at));
         }
         let services = one_service();
-        let whole = run_cell(&services, &tiny_spec(), &stream, ServingPolicy::whole_prefill(), |_| {
-            FcfsBatcher::new(MAX_BATCH)
-        })
+        let whole = run_cell(
+            &services,
+            &tiny_spec(),
+            &stream,
+            ServingPolicy::whole_prefill(),
+            SchedulerKind::Fcfs,
+        )
         .unwrap();
-        let chunked = run_cell(&services, &tiny_spec(), &stream, ServingPolicy::chunked(CHUNK), |_| {
-            FcfsBatcher::new(MAX_BATCH)
-        })
+        let chunked = run_cell(
+            &services,
+            &tiny_spec(),
+            &stream,
+            ServingPolicy::chunked(CHUNK),
+            SchedulerKind::Fcfs,
+        )
         .unwrap();
         assert!(
             chunked.short_ttft_p95 < whole.short_ttft_p95 * 0.5,
@@ -286,7 +290,7 @@ mod tests {
             &tiny_spec(),
             &stream,
             ServingPolicy::chunked(CHUNK).with_preemption(),
-            |_| EdfScheduler::new(),
+            SchedulerKind::Edf,
         )
         .unwrap();
         assert_eq!(cell.summary.shed_requests, 3);

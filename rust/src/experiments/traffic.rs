@@ -4,8 +4,9 @@
 //! per-shard utilization.
 //!
 //! Shards price against their honest share of the paper device's DRAM
-//! channels ([`Coordinator::partitioned_services`]), and the per-shard
-//! [`MappingService`]s are shared across every cell of the matrix, so the
+//! channels (the [`ClusterBuilder`]'s channel partition), and the
+//! per-shard [`MappingService`]s are shared across every cell of the
+//! matrix, so the
 //! comparison isolates *scheduling* — every policy prices identical kernel
 //! shapes from identical caches on identical hardware shares.  The streams
 //! are seed-deterministic: at a given rate, every scheduler sees the same
@@ -13,11 +14,10 @@
 
 use crate::config::json::Value;
 use crate::config::{
-    gpt3_6_7b, llama3_8b, racam_paper, ArrivalProcess, LengthDist, LlmSpec, TrafficSpec,
+    gpt3_6_7b, llama3_8b, racam_paper, ArrivalProcess, ClusterSpec, LengthDist, LlmSpec,
+    SchedulerKind, TrafficSpec,
 };
-use crate::coordinator::{
-    Coordinator, EdfScheduler, FcfsBatcher, LengthBucketed, Scheduler, SyntheticEngine,
-};
+use crate::coordinator::{ClusterBuilder, SyntheticEngine};
 use crate::mapping::MappingService;
 use crate::report::Table;
 use crate::traffic::{generate, SloSummary};
@@ -72,19 +72,17 @@ fn spec_at(rate_per_s: f64, requests: u64) -> TrafficSpec {
 /// Run one (scheduler, rate) cell and grade it.  `services` is one
 /// (channel-partitioned) mapping service per shard, shared across cells so
 /// pricing amortizes.
-fn run_cell<S: Scheduler>(
+fn run_cell(
     services: &[MappingService],
     model: &LlmSpec,
     traffic: &TrafficSpec,
-    scheduler_factory: impl FnMut(usize) -> S,
+    scheduler: SchedulerKind,
 ) -> crate::Result<SloSummary> {
-    let mut coord = Coordinator::with_shard_services(
-        services.to_vec(),
-        model.clone(),
-        MAX_BATCH,
-        |_| SyntheticEngine::new(64, 256),
-        scheduler_factory,
-    );
+    let mut spec = ClusterSpec::unified(services.len(), MAX_BATCH);
+    spec.groups[0].scheduler = scheduler;
+    let mut coord =
+        ClusterBuilder::with_spec_and_services(spec, model.clone(), services.to_vec())?
+            .build(|_| SyntheticEngine::new(64, 256));
     for req in generate(traffic) {
         coord.submit(req);
     }
@@ -101,8 +99,13 @@ pub(crate) fn matrix(
     // Honest per-shard bandwidth: each shard prices against its own share
     // of the paper device's channels (4 of 8 at SHARDS = 2), reused across
     // every cell of the matrix.
-    let services: Vec<MappingService> =
-        Coordinator::<SyntheticEngine, FcfsBatcher>::partitioned_services(&racam_paper(), SHARDS);
+    let services: Vec<MappingService> = ClusterBuilder::new(
+        ClusterSpec::unified(SHARDS, MAX_BATCH),
+        &racam_paper(),
+        model.clone(),
+    )?
+    .services()
+    .to_vec();
     let headers = SloSummary::table_headers();
     let mut t = Table::new(
         &format!(
@@ -117,16 +120,13 @@ pub(crate) fn matrix(
         let traffic = spec_at(rate, requests);
         // The SCHEDULERS roster bench_config() reports drives the rows,
         // so the BENCH json and the table cannot drift apart: a roster
-        // entry without a dispatch arm fails loudly instead of silently
-        // reporting schedulers that have no rows.
+        // entry the SchedulerKind registry does not know fails loudly
+        // instead of silently reporting schedulers that have no rows.
         for &sched in SCHEDULERS {
-            let cell = match sched {
-                "fcfs" => run_cell(&services, model, &traffic, |_| FcfsBatcher::new(MAX_BATCH))?,
-                "bucketed" => run_cell(&services, model, &traffic, |_| LengthBucketed::new())?,
-                "edf" => run_cell(&services, model, &traffic, |_| EdfScheduler::new())?,
-                other => anyhow::bail!("no dispatch arm for scheduler '{other}'"),
-            };
-            if sched == "fcfs" {
+            let kind = SchedulerKind::from_label(sched)
+                .ok_or_else(|| anyhow::anyhow!("no scheduler kind named '{sched}'"))?;
+            let cell = run_cell(&services, model, &traffic, kind)?;
+            if kind == SchedulerKind::Fcfs {
                 util_summary = Some(cell.clone());
             }
             t.row(cell.table_row(&format!("{sched}@{rate}/s")));

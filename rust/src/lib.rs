@@ -37,7 +37,7 @@
 //! | [`metrics`] | latency breakdowns, utilization, counters |
 //! | [`report`] | paper-style table renderers + CSV |
 //! | [`runtime`] | artifact discovery; PJRT loader/executor behind the `pjrt` feature |
-//! | [`coordinator`] | serving: per-shard `Server` running an event-driven iteration engine (simulated clock, chunked prefill via `config::ServingPolicy`, scheduler preemption, async intake), multi-worker `Coordinator` with per-shard DRAM channel partitioning over shared mapping services |
+//! | [`coordinator`] | serving: per-shard `Server` running an event-driven iteration engine (simulated clock, chunked prefill via `config::ServingPolicy`, scheduler preemption, async intake), and a role-aware multi-worker `Coordinator` assembled by `ClusterBuilder` from a declarative `config::ClusterSpec` (shard groups, per-shard DRAM channel partitioning over shared mapping services, prefill/decode disaggregation with KV-transfer accounting) |
 //! | [`traffic`] | open-loop workload generator (seeded PRNG, Poisson/bursty arrivals, trace replay) + SLO metrics (TTFT/TPOT/e2e tails, goodput, shed/preemption counts, utilization) |
 //! | [`experiments`] | one entry point per paper table/figure |
 

@@ -59,6 +59,7 @@ fn print_help() {
          \x20             [--mapping-cache FILE] [--sched fcfs|bucket|edf] [--rate R]\n\
          \x20             [--deadline-ms MS] [--traffic SPEC.json | --trace TRACE.json]\n\
          \x20             [--chunk-tokens N] [--preempt] [--serving POLICY.json]\n\
+         \x20             [--cluster CLUSTER.json]\n\
          \n\
          serve traffic modes: --rate R replays a Poisson stream at R req/s on the\n\
          simulated clock (add --deadline-ms for an e2e SLO); --traffic loads a\n\
@@ -68,7 +69,13 @@ fn print_help() {
          serving policy: --chunk-tokens N bounds each prefill step to N prompt\n\
          tokens (chunked prefill; unset = whole-prompt, the paper schedule);\n\
          --preempt lets deadline-aware schedulers (edf) shed past-deadline work;\n\
-         --serving loads a ServingPolicy JSON instead of the two flags."
+         --serving loads a ServingPolicy JSON instead of the two flags.\n\
+         \n\
+         cluster: --cluster loads a ClusterSpec JSON declaring shard groups\n\
+         (count, role unified|prefill|decode, scheduler, policy, channel share,\n\
+         kv_link_gbps) and replaces --shards/--batch/--sched/--chunk-tokens/\n\
+         --preempt/--serving. Prefill groups hand finished prompts to decode\n\
+         groups over the simulated KV link (see docs/serving.md)."
     );
 }
 
@@ -179,10 +186,11 @@ fn cmd_config(args: Vec<String>) -> Result<()> {
 }
 
 fn cmd_serve(args: Vec<String>) -> Result<()> {
-    use racam::config::{ArrivalProcess, LengthDist, ServingPolicy, TrafficSpec};
+    use racam::config::{
+        ArrivalProcess, ClusterSpec, LengthDist, SchedulerKind, ServingPolicy, TrafficSpec,
+    };
     use racam::coordinator::{
-        Coordinator, EdfScheduler, FcfsBatcher, LengthBucketed, Request, Scheduler,
-        SyntheticEngine, TokenEngine,
+        ClusterBuilder, ClusterCoordinator, Request, SyntheticEngine, TokenEngine,
     };
     use racam::traffic::{generate, replay_trace, SloSummary};
 
@@ -196,36 +204,59 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     anyhow::ensure!(shards >= 1, "--shards must be at least 1");
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
 
-    // Serving policy: a JSON file, or --chunk-tokens/--preempt flags (the
-    // default is the paper-faithful whole-prompt schedule).
-    let policy = if let Some(path) = flag_value(&args, "--serving") {
+    // The cluster: an explicit JSON ClusterSpec (shard groups with roles,
+    // schedulers, policies, channel shares — the prefill/decode
+    // disaggregation entry point), or a single unified group synthesized
+    // from the legacy flags.
+    let cluster = if let Some(path) = flag_value(&args, "--cluster") {
+        for flag in ["--shards", "--batch", "--sched", "--chunk-tokens", "--serving"] {
+            anyhow::ensure!(
+                flag_value(&args, flag).is_none(),
+                "--cluster replaces {flag}; put the setting in the cluster JSON"
+            );
+        }
         anyhow::ensure!(
-            flag_value(&args, "--chunk-tokens").is_none() && !args.iter().any(|a| a == "--preempt"),
-            "--serving replaces --chunk-tokens/--preempt; pass one or the other"
+            !args.iter().any(|a| a == "--preempt"),
+            "--cluster replaces --preempt; put the policy in the cluster JSON"
         );
-        ServingPolicy::from_json(&std::fs::read_to_string(&path)?)?
+        ClusterSpec::from_json(&std::fs::read_to_string(&path)?)?
     } else {
-        let chunk: Option<u64> =
-            flag_value(&args, "--chunk-tokens").map(|v| v.parse()).transpose()?;
-        let p = ServingPolicy {
-            prefill_chunk_tokens: chunk,
-            preempt: args.iter().any(|a| a == "--preempt"),
+        // Serving policy: a JSON file, or --chunk-tokens/--preempt flags
+        // (the default is the paper-faithful whole-prompt schedule).
+        let policy = if let Some(path) = flag_value(&args, "--serving") {
+            anyhow::ensure!(
+                flag_value(&args, "--chunk-tokens").is_none()
+                    && !args.iter().any(|a| a == "--preempt"),
+                "--serving replaces --chunk-tokens/--preempt; pass one or the other"
+            );
+            ServingPolicy::from_json(&std::fs::read_to_string(&path)?)?
+        } else {
+            let chunk: Option<u64> =
+                flag_value(&args, "--chunk-tokens").map(|v| v.parse()).transpose()?;
+            let p = ServingPolicy {
+                prefill_chunk_tokens: chunk,
+                preempt: args.iter().any(|a| a == "--preempt"),
+            };
+            p.validate().map_err(|e| anyhow::anyhow!("invalid serving policy: {e}"))?;
+            p
         };
-        p.validate().map_err(|e| anyhow::anyhow!("invalid serving policy: {e}"))?;
-        p
+        let kind = SchedulerKind::from_label(&sched)
+            .ok_or_else(|| anyhow::anyhow!("unknown scheduler '{sched}' (fcfs|bucket|edf)"))?;
+        let mut c = ClusterSpec::unified(shards, batch);
+        c.groups[0].scheduler = kind;
+        c.groups[0].policy = policy;
+        c
     };
 
     let spec = config::gpt3_6_7b();
     // Each worker shard prices against its honest share of the paper
-    // device's DRAM channels (equal shares alias one service; with more
-    // shards than channels everyone shares the full config).  A cache
-    // file warm-starts shard 0's service (§7 amortization across
-    // processes) — entries are specific to that per-shard channel count,
-    // so reuse the same --shards value across runs of one cache file.
-    let services = Coordinator::<SyntheticEngine, FcfsBatcher>::partitioned_services(
-        &racam_paper(),
-        shards,
-    );
+    // device's DRAM channels (explicit group shares, or an even split;
+    // equal shares alias one service).  A cache file warm-starts shard 0's
+    // service (§7 amortization across processes) — entries are specific to
+    // that per-shard channel count, so reuse the same cluster shape across
+    // runs of one cache file.
+    let builder = ClusterBuilder::new(cluster.clone(), &racam_paper(), spec.clone())?;
+    let services = builder.services().to_vec();
     let cache_path = flag_value(&args, "--mapping-cache");
     if let Some(path) = &cache_path {
         let p = std::path::PathBuf::from(path);
@@ -264,12 +295,10 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     };
     let open_loop = requests.iter().any(|r| r.arrival_ns > 0);
 
-    fn drive<E: TokenEngine + Send, S: Scheduler>(
-        mut coord: Coordinator<E, S>,
+    fn drive<E: TokenEngine + Send>(
+        mut coord: ClusterCoordinator<E>,
         requests: Vec<Request>,
-        policy: ServingPolicy,
     ) -> Result<racam::coordinator::ServerReport> {
-        coord.set_policy(policy);
         for req in requests {
             coord.submit(req);
         }
@@ -277,52 +306,26 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     }
 
     let report = if synthetic {
-        let engine = |_: usize| SyntheticEngine::new(64, 256);
-        match sched.as_str() {
-            "fcfs" => drive(
-                Coordinator::with_shard_services(services.clone(), spec.clone(), batch, engine, |_| {
-                    FcfsBatcher::new(batch)
-                }),
-                requests,
-                policy,
-            )?,
-            "bucket" => drive(
-                Coordinator::with_shard_services(services.clone(), spec.clone(), batch, engine, |_| {
-                    LengthBucketed::new()
-                }),
-                requests,
-                policy,
-            )?,
-            "edf" => drive(
-                Coordinator::with_shard_services(services.clone(), spec.clone(), batch, engine, |_| {
-                    EdfScheduler::new()
-                }),
-                requests,
-                policy,
-            )?,
-            other => anyhow::bail!("unknown scheduler '{other}' (fcfs|bucket|edf)"),
-        }
+        drive(builder.build(|_| SyntheticEngine::new(64, 256)), requests)?
     } else {
         #[cfg(feature = "pjrt")]
         {
             use racam::coordinator::HloDecodeEngine;
             use racam::runtime::{ArtifactSet, Runtime};
-            anyhow::ensure!(
-                sched == "fcfs",
-                "--sched applies to --synthetic serving; the PJRT path is FCFS"
-            );
             let artifacts = ArtifactSet::discover();
             artifacts.require()?;
             let rt = Runtime::cpu()?;
-            let mut modules = Vec::with_capacity(shards);
-            for _ in 0..shards {
+            let mut modules = Vec::with_capacity(cluster.total_shards());
+            for _ in 0..cluster.total_shards() {
                 modules.push(rt.load_hlo_text(&artifacts.decode_step())?);
             }
             let mut modules = modules.into_iter();
-            let coord = Coordinator::with_shard_services(services.clone(), spec.clone(), batch, |_| {
-                HloDecodeEngine::new(modules.next().expect("one module per shard"), 64, 256)
-            }, |_| FcfsBatcher::new(batch));
-            drive(coord, requests, policy)?
+            drive(
+                builder.build(|_| {
+                    HloDecodeEngine::new(modules.next().expect("one module per shard"), 64, 256)
+                }),
+                requests,
+            )?
         }
         #[cfg(not(feature = "pjrt"))]
         {
@@ -337,11 +340,17 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         println!("saved mapping cache ({} shapes) to {path}", services[0].cache_len());
     }
 
+    let cluster_label = cluster
+        .groups
+        .iter()
+        .map(|g| format!("{}×{}[{}/{}]", g.name, g.count, g.scheduler.label(), g.policy.label()))
+        .collect::<Vec<_>>()
+        .join(" + ");
     println!(
-        "served {} requests, {} tokens total across {shards} shard(s) [{sched}/{}]",
+        "served {} requests, {} tokens total across {} shard(s) [{cluster_label}]",
         report.results.len(),
         report.total_tokens,
-        policy.label()
+        cluster.total_shards(),
     );
     for r in &report.results {
         println!(
@@ -355,15 +364,22 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     }
     for s in &report.shards {
         println!(
-            "  shard {}: {} reqs, {} tokens, {} decode iters, {} prefill steps, \
-             occupancy {:.0}%, busy {:.0}%{}",
+            "  shard {} ({}/{}): {} reqs, {} tokens, {} decode iters, {} prefill steps, \
+             occupancy {:.0}%, busy {:.0}%{}{}",
             s.shard,
+            s.group,
+            s.role.label(),
             s.requests,
             s.tokens,
             s.decode_iterations,
             s.prefill_chunks,
             s.occupancy * 100.0,
             s.utilization() * 100.0,
+            if s.handoffs > 0 {
+                format!(", {} handoffs, kv transfer {}", s.handoffs, fmt_ns(s.kv_transfer_ns))
+            } else {
+                String::new()
+            },
             if s.shed > 0 || s.preemptions > 0 {
                 format!(", {} shed, {} preempted", s.shed, s.preemptions)
             } else {
@@ -371,11 +387,16 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             }
         );
     }
-    if open_loop {
+    if open_loop || cluster.is_disaggregated() {
         let slo = SloSummary::from_report(&report);
         let mut t = racam::report::Table::new("SLO summary", &SloSummary::table_headers());
-        t.row(slo.table_row(&sched));
+        t.row(slo.table_row(&cluster_label));
         println!("{}", t.render());
+        // The readable view of a disaggregated run: one row per shard
+        // group (prefill vs decode), KV-link totals included.
+        if cluster.is_disaggregated() {
+            println!("{}", slo.utilization_table("group utilization", false).render());
+        }
     }
     println!(
         "mapping cache (shard 0): {} unique shapes searched, {} cache-served",

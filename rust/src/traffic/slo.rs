@@ -29,6 +29,7 @@
 //!
 //! [`Preemption::Shed`]: crate::coordinator::Preemption
 
+use crate::config::ShardRole;
 use crate::coordinator::{RequestResult, ServerReport, ShardStats};
 use crate::metrics::{fmt_ns, percentile_sorted};
 use crate::report::Table;
@@ -101,8 +102,31 @@ pub struct SloSummary {
     /// Simulated time decoders spent stalled behind prefill steps, summed
     /// over shards, ns.
     pub chunk_stall_ns: f64,
-    /// Per-shard (id, busy-fraction, mean batch occupancy).
-    pub shard_utilization: Vec<(usize, f64, f64)>,
+    /// Simulated KV-transfer time charged on decode shards (the
+    /// prefill→decode link of a disaggregated cluster), summed, ns.
+    pub kv_transfer_ns: f64,
+    /// Prefill→decode handoffs, summed over the link's *sending* side
+    /// (each transferred request counts once).
+    pub handoffs: usize,
+    /// Per-shard utilization rows, in shard order.
+    pub shard_utilization: Vec<ShardUtilization>,
+}
+
+/// One shard's utilization row (group label and role ride along so
+/// disaggregated runs can be read per group).
+#[derive(Debug, Clone)]
+pub struct ShardUtilization {
+    pub shard: usize,
+    pub group: String,
+    pub role: ShardRole,
+    /// Busy fraction of the shard's simulated makespan.
+    pub busy: f64,
+    /// Mean batch occupancy across decode iterations.
+    pub occupancy: f64,
+    /// Handoffs this shard participated in (sent or received).
+    pub handoffs: usize,
+    /// KV-transfer time charged on this (decode) shard, ns.
+    pub kv_transfer_ns: f64,
 }
 
 impl SloSummary {
@@ -146,10 +170,25 @@ impl SloSummary {
             preemptions: report.shards.iter().map(|s| s.preemptions).sum(),
             prefill_chunks: report.shards.iter().map(|s| s.prefill_chunks).sum(),
             chunk_stall_ns: report.shards.iter().map(|s| s.chunk_stall_ns).sum(),
+            kv_transfer_ns: report.shards.iter().map(|s| s.kv_transfer_ns).sum(),
+            handoffs: report
+                .shards
+                .iter()
+                .filter(|s| s.role != ShardRole::Decode)
+                .map(|s| s.handoffs)
+                .sum(),
             shard_utilization: report
                 .shards
                 .iter()
-                .map(|s| (s.shard, s.utilization(), s.occupancy))
+                .map(|s| ShardUtilization {
+                    shard: s.shard,
+                    group: s.group.clone(),
+                    role: s.role,
+                    busy: s.utilization(),
+                    occupancy: s.occupancy,
+                    handoffs: s.handoffs,
+                    kv_transfer_ns: s.kv_transfer_ns,
+                })
                 .collect(),
         }
     }
@@ -174,7 +213,7 @@ impl SloSummary {
                     * if self.shard_utilization.is_empty() {
                         0.0
                     } else {
-                        self.shard_utilization.iter().map(|(_, u, _)| u).sum::<f64>()
+                        self.shard_utilization.iter().map(|s| s.busy).sum::<f64>()
                             / self.shard_utilization.len() as f64
                     }
             ),
@@ -188,17 +227,66 @@ impl SloSummary {
         ]
     }
 
-    /// Per-shard utilization table for this run.
-    pub fn shard_table(&self, title: &str) -> Table {
-        let mut t = Table::new(title, &["shard", "busy", "occupancy"]);
-        for (shard, util, occ) in &self.shard_utilization {
+    /// Utilization table for this run.  The default (`per_shard = false`)
+    /// aggregates by shard *group* — the readable view of a disaggregated
+    /// run, one row per role — with busy/occupancy averaged and
+    /// handoff/KV-transfer totals summed within each group; `per_shard =
+    /// true` keeps the old one-row-per-shard breakdown (group label
+    /// attached).
+    pub fn utilization_table(&self, title: &str, per_shard: bool) -> Table {
+        if per_shard {
+            let mut t = Table::new(
+                title,
+                &["shard", "group", "role", "busy", "occupancy", "handoffs", "kv_transfer"],
+            );
+            for s in &self.shard_utilization {
+                t.row(vec![
+                    s.shard.to_string(),
+                    s.group.clone(),
+                    s.role.label().into(),
+                    format!("{:.0}%", 100.0 * s.busy),
+                    format!("{:.0}%", 100.0 * s.occupancy),
+                    s.handoffs.to_string(),
+                    fmt_ns(s.kv_transfer_ns),
+                ]);
+            }
+            return t;
+        }
+        let mut t = Table::new(
+            title,
+            &["group", "role", "shards", "busy", "occupancy", "handoffs", "kv_transfer"],
+        );
+        // Group rows in first-appearance (shard) order.
+        let mut seen: Vec<&str> = Vec::new();
+        for s in &self.shard_utilization {
+            if !seen.contains(&s.group.as_str()) {
+                seen.push(&s.group);
+            }
+        }
+        for group in seen {
+            let members: Vec<&ShardUtilization> =
+                self.shard_utilization.iter().filter(|s| s.group == group).collect();
+            let n = members.len() as f64;
             t.row(vec![
-                shard.to_string(),
-                format!("{:.0}%", 100.0 * util),
-                format!("{:.0}%", 100.0 * occ),
+                group.to_string(),
+                members[0].role.label().into(),
+                members.len().to_string(),
+                format!("{:.0}%", 100.0 * members.iter().map(|s| s.busy).sum::<f64>() / n),
+                format!(
+                    "{:.0}%",
+                    100.0 * members.iter().map(|s| s.occupancy).sum::<f64>() / n
+                ),
+                members.iter().map(|s| s.handoffs).sum::<usize>().to_string(),
+                fmt_ns(members.iter().map(|s| s.kv_transfer_ns).sum::<f64>()),
             ]);
         }
         t
+    }
+
+    /// Per-shard utilization table (the pre-disaggregation breakdown;
+    /// equivalent to `utilization_table(title, true)`).
+    pub fn shard_table(&self, title: &str) -> Table {
+        self.utilization_table(title, true)
     }
 }
 
@@ -232,6 +320,8 @@ mod tests {
             results,
             shards: vec![ShardStats {
                 shard: 0,
+                group: "unified".into(),
+                role: ShardRole::Unified,
                 requests: 1,
                 tokens: total_tokens,
                 sim_ns: clock_ns,
@@ -244,6 +334,8 @@ mod tests {
                 chunk_stall_ns: 3.0,
                 preemptions: 0,
                 shed: 0,
+                handoffs: 0,
+                kv_transfer_ns: 0.0,
             }],
         }
     }
@@ -328,6 +420,41 @@ mod tests {
         assert_eq!(s.slo_attainment, 1.0);
         assert_eq!(s.ttft.p99, 0.0);
         assert_eq!(s.shed_requests, 0);
+    }
+
+    #[test]
+    fn group_table_aggregates_disaggregated_shards() {
+        // Two prefill + two decode shards: the default utilization view is
+        // one row per group, with KV-transfer and handoff totals summed.
+        let mut rep = report(vec![result(0, 0.0, 10.0, 50.0, 3)], 100.0, 0.0);
+        let mk = |shard: usize, group: &str, role: ShardRole, busy_idle: f64, kv: f64| {
+            let mut s = rep.shards[0].clone();
+            s.shard = shard;
+            s.group = group.into();
+            s.role = role;
+            s.sim_idle_ns = busy_idle;
+            s.handoffs = 2;
+            s.kv_transfer_ns = kv;
+            s
+        };
+        rep.shards = vec![
+            mk(0, "prefill", ShardRole::Prefill, 0.0, 0.0),
+            mk(1, "prefill", ShardRole::Prefill, 50.0, 0.0),
+            mk(2, "decode", ShardRole::Decode, 0.0, 7.0),
+            mk(3, "decode", ShardRole::Decode, 0.0, 5.0),
+        ];
+        let s = SloSummary::from_report(&rep);
+        assert_eq!(s.kv_transfer_ns, 12.0);
+        assert_eq!(s.handoffs, 4, "handoffs counted once, on the sending side");
+        let grouped = s.utilization_table("by group", false);
+        assert_eq!(grouped.num_rows(), 2, "one row per group");
+        let rendered = grouped.render();
+        assert!(rendered.contains("prefill"), "{rendered}");
+        assert!(rendered.contains("decode"), "{rendered}");
+        // Prefill group busy = mean(100%, 50%) = 75%.
+        assert!(rendered.contains("75%"), "{rendered}");
+        let per_shard = s.utilization_table("by shard", true);
+        assert_eq!(per_shard.num_rows(), 4, "per-shard rows behind the flag");
     }
 
     #[test]

@@ -9,8 +9,8 @@
 //! note) when the artifacts are missing so `cargo test` stays usable on a
 //! fresh checkout.
 
-use racam::config::{racam_paper, racam_tiny, MatmulShape, Precision};
-use racam::coordinator::{Coordinator, Request, SyntheticEngine};
+use racam::config::{racam_paper, racam_tiny, ClusterSpec, MatmulShape, Precision, ShardRole};
+use racam::coordinator::{ClusterBuilder, Request, SyntheticEngine};
 use racam::mapping::{HwModel, MappingEngine, MappingService};
 use racam::pim::{gemm_reference, BlockExecutor};
 
@@ -194,9 +194,13 @@ fn search_on_paper_hw_is_fast_and_consistent() {
 fn multi_shard_coordinator_shares_one_mapping_cache() {
     let spec = racam::config::gpt3_6_7b();
     let service = MappingService::for_config(&racam_paper());
-    let mut coord = Coordinator::with_service(service.clone(), spec, 3, 2, |_| {
-        SyntheticEngine::new(64, 128)
-    });
+    let mut coord = ClusterBuilder::with_spec_and_services(
+        ClusterSpec::unified(3, 2),
+        spec,
+        vec![service.clone(); 3],
+    )
+    .unwrap()
+    .build(|_| SyntheticEngine::new(64, 128));
     for id in 0..6 {
         coord.submit(Request::new(id, vec![1, 2, 3], 4));
     }
@@ -220,8 +224,7 @@ fn multi_shard_coordinator_shares_one_mapping_cache() {
 /// admits extra requests mid-run.
 #[test]
 fn open_loop_traffic_serves_under_every_scheduler() {
-    use racam::config::{ArrivalProcess, LengthDist, TrafficSpec};
-    use racam::coordinator::{EdfScheduler, FcfsBatcher, LengthBucketed, Scheduler};
+    use racam::config::{ArrivalProcess, LengthDist, SchedulerKind, TrafficSpec};
     use racam::traffic::{generate, SloSummary};
 
     let spec = racam::config::gpt3_6_7b();
@@ -236,20 +239,21 @@ fn open_loop_traffic_serves_under_every_scheduler() {
     let stream = generate(&traffic);
     let service = MappingService::for_config(&racam_paper());
 
-    fn serve<S: Scheduler>(
+    fn serve(
         service: &MappingService,
         spec: &racam::config::LlmSpec,
         stream: &[racam::coordinator::Request],
-        factory: impl FnMut(usize) -> S,
+        scheduler: SchedulerKind,
     ) -> SloSummary {
-        let mut coord = Coordinator::with_schedulers(
-            service.clone(),
+        let mut cluster = ClusterSpec::unified(2, 2);
+        cluster.groups[0].scheduler = scheduler;
+        let mut coord = ClusterBuilder::with_spec_and_services(
+            cluster,
             spec.clone(),
-            2,
-            2,
-            |_| SyntheticEngine::new(64, 128),
-            factory,
-        );
+            vec![service.clone(); 2],
+        )
+        .unwrap()
+        .build(|_| SyntheticEngine::new(64, 128));
         for r in stream {
             coord.submit(r.clone());
         }
@@ -266,9 +270,9 @@ fn open_loop_traffic_serves_under_every_scheduler() {
         SloSummary::from_report(&report)
     }
 
-    let fcfs = serve(&service, &spec, &stream, |_| FcfsBatcher::new(2));
-    let bucketed = serve(&service, &spec, &stream, |_| LengthBucketed::new());
-    let edf = serve(&service, &spec, &stream, |_| EdfScheduler::new());
+    let fcfs = serve(&service, &spec, &stream, SchedulerKind::Fcfs);
+    let bucketed = serve(&service, &spec, &stream, SchedulerKind::Bucketed);
+    let edf = serve(&service, &spec, &stream, SchedulerKind::Edf);
     for (name, s) in [("fcfs", &fcfs), ("bucketed", &bucketed), ("edf", &edf)] {
         assert_eq!(s.requests, 9, "{name}");
         assert!(s.ttft.p50 > 0.0, "{name}");
@@ -289,8 +293,7 @@ fn open_loop_traffic_serves_under_every_scheduler() {
 /// and preemption must surface shed work in the SLO summary.
 #[test]
 fn chunked_prefill_and_preemption_end_to_end() {
-    use racam::config::ServingPolicy;
-    use racam::coordinator::{EdfScheduler, FcfsBatcher};
+    use racam::config::{SchedulerKind, ServingPolicy};
     use racam::traffic::{ttft_percentiles_where, SloSummary};
 
     let spec = racam::config::gpt3_6_7b();
@@ -298,15 +301,15 @@ fn chunked_prefill_and_preemption_end_to_end() {
 
     // One shard so every short queues behind the long prompt's prefill.
     let serve = |policy: ServingPolicy| {
-        let mut coord = Coordinator::with_schedulers(
-            service.clone(),
+        let mut cluster = ClusterSpec::unified(1, 2);
+        cluster.groups[0].policy = policy;
+        let mut coord = ClusterBuilder::with_spec_and_services(
+            cluster,
             spec.clone(),
-            1,
-            2,
-            |_| SyntheticEngine::new(64, 128),
-            |_| FcfsBatcher::new(2),
+            vec![service.clone()],
         )
-        .with_policy(policy);
+        .unwrap()
+        .build(|_| SyntheticEngine::new(64, 128));
         // A 2048-token prompt and a short request arriving together, three
         // times over, well spaced.
         for i in 0..3u64 {
@@ -336,15 +339,13 @@ fn chunked_prefill_and_preemption_end_to_end() {
     assert!(chunked.shards[0].prefill_chunks > whole.shards[0].prefill_chunks);
 
     // Preemption under EDF: impossible deadlines are shed and reported.
-    let mut coord = Coordinator::with_schedulers(
-        service.clone(),
-        spec,
-        1,
-        2,
-        |_| SyntheticEngine::new(64, 128),
-        |_| EdfScheduler::new(),
-    )
-    .with_policy(ServingPolicy::interactive());
+    let mut cluster = ClusterSpec::unified(1, 2);
+    cluster.groups[0].scheduler = SchedulerKind::Edf;
+    cluster.groups[0].policy = ServingPolicy::interactive();
+    let mut coord =
+        ClusterBuilder::with_spec_and_services(cluster, spec, vec![service.clone()])
+            .unwrap()
+            .build(|_| SyntheticEngine::new(64, 128));
     coord.submit(Request::new(0, vec![1; 16], 4).with_deadline(u64::MAX));
     coord.submit(Request::new(1, vec![2; 16], 4).with_deadline(1));
     let report = coord.run_to_completion().unwrap();
@@ -352,4 +353,75 @@ fn chunked_prefill_and_preemption_end_to_end() {
     assert_eq!(slo.shed_requests, 1, "the expired-deadline request must be shed");
     assert!(report.results.iter().any(|r| r.id == 1 && r.shed));
     assert!(report.results.iter().any(|r| r.id == 0 && !r.shed && r.tokens.len() == 4));
+}
+
+/// Prefill/decode disaggregation end-to-end, from a JSON cluster spec (the
+/// `racam serve --cluster` path): a role-split cluster with explicit
+/// channel shares serves an open-loop stream, every request completes with
+/// generation identical to a unified cluster, decode shards charge nonzero
+/// KV-transfer time, and the per-group SLO view separates the roles.
+#[test]
+fn disaggregated_cluster_from_json_end_to_end() {
+    use racam::config::{ArrivalProcess, LengthDist, TrafficSpec};
+    use racam::traffic::{generate, SloSummary};
+
+    let spec = racam::config::gpt3_6_7b();
+    let cluster_json = r#"{
+        "kv_link_gbps": 64,
+        "groups": [
+            {"name": "prefill", "count": 2, "role": "prefill", "scheduler": "fcfs",
+             "max_batch": 2, "channels": 4, "policy": {}},
+            {"name": "decode", "count": 2, "role": "decode", "scheduler": "fcfs",
+             "max_batch": 2, "channels": 4, "policy": {}}
+        ]
+    }"#;
+    let cluster = ClusterSpec::from_json(cluster_json).unwrap();
+    assert!(cluster.is_disaggregated());
+
+    let stream = generate(&TrafficSpec {
+        seed: 23,
+        requests: 10,
+        arrival: ArrivalProcess::Poisson { rate_per_s: 300.0 },
+        prompt: LengthDist::Uniform { lo: 8, hi: 48 },
+        output: LengthDist::Uniform { lo: 2, hi: 5 },
+        deadline_ns: None,
+    });
+
+    let serve = |cluster: ClusterSpec| {
+        let mut coord = ClusterBuilder::new(cluster, &racam_paper(), spec.clone())
+            .unwrap()
+            .build(|_| SyntheticEngine::new(64, 128));
+        for r in &stream {
+            coord.submit(r.clone());
+        }
+        coord.run_to_completion().unwrap()
+    };
+    let disagg = serve(cluster);
+    let unified = serve(ClusterSpec::unified(4, 2));
+
+    assert_eq!(disagg.results.len(), stream.len());
+    let tok = |rep: &racam::coordinator::ServerReport| {
+        rep.results.iter().map(|r| (r.id, r.tokens.clone())).collect::<Vec<_>>()
+    };
+    assert_eq!(tok(&disagg), tok(&unified), "topology must not change generation");
+
+    // Decode shards paid the KV link; prefill shards sent every request.
+    let kv: f64 = disagg
+        .shards
+        .iter()
+        .filter(|s| s.role == ShardRole::Decode)
+        .map(|s| s.kv_transfer_ns)
+        .sum();
+    assert!(kv > 0.0, "decode shards must charge KV-transfer time");
+    for s in &disagg.shards {
+        match s.role {
+            ShardRole::Decode => assert_eq!(s.prefill_chunks, 0, "shard {}", s.shard),
+            _ => assert_eq!(s.tokens, 0, "shard {}", s.shard),
+        }
+    }
+    let slo = SloSummary::from_report(&disagg);
+    assert_eq!(slo.handoffs, stream.len());
+    assert!((slo.kv_transfer_ns - kv).abs() < 1e-9);
+    let groups = slo.utilization_table("by group", false);
+    assert_eq!(groups.num_rows(), 2, "one utilization row per role group");
 }

@@ -7,8 +7,8 @@
 //! scalar reference, the traffic generator (seed determinism, shard-count
 //! invariance), ISA encode/decode, and config JSON round-trips.
 
-use racam::config::{racam_paper, racam_tiny, HwConfig, MatmulShape, Precision};
-use racam::coordinator::{Coordinator, FcfsBatcher, Request, Server, SyntheticEngine};
+use racam::config::{racam_paper, racam_tiny, ClusterSpec, HwConfig, MatmulShape, Precision};
+use racam::coordinator::{ClusterBuilder, FcfsBatcher, Request, Server, SyntheticEngine};
 use racam::dram::{decode, encode, DramCommand};
 use racam::mapping::{evaluate, enumerate_mappings, HwModel, MappingEngine, MappingService};
 use racam::pim::{gemm_reference, BlockExecutor};
@@ -251,13 +251,13 @@ fn prop_sharding_conserves_requests_and_generation() {
             })
             .collect();
         let run = |shards: usize| -> Vec<(u64, Vec<u32>)> {
-            let mut coord = Coordinator::new(
+            let mut coord = ClusterBuilder::new(
+                ClusterSpec::unified(shards, 2),
                 &racam_paper(),
                 racam::config::gpt3_6_7b(),
-                shards,
-                2,
-                |_| SyntheticEngine::new(32, 64),
-            );
+            )
+            .unwrap()
+            .build(|_| SyntheticEngine::new(32, 64));
             for r in &reqs {
                 coord.submit(r.clone());
             }
@@ -338,13 +338,13 @@ fn prop_traffic_stream_is_shard_count_invariant() {
         };
         let stream = generate(&spec);
         let run = |shards: usize| -> Vec<(u64, Vec<u32>)> {
-            let mut coord = Coordinator::new(
+            let mut coord = ClusterBuilder::new(
+                ClusterSpec::unified(shards, 2),
                 &racam_paper(),
                 racam::config::gpt3_6_7b(),
-                shards,
-                2,
-                |_| SyntheticEngine::new(32, 64),
-            );
+            )
+            .unwrap()
+            .build(|_| SyntheticEngine::new(32, 64));
             for r in &stream {
                 coord.submit(r.clone());
             }
