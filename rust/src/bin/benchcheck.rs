@@ -1,0 +1,63 @@
+//! `benchcheck` — guard the bench-artifact schema across runs.
+//!
+//! Every `exp` run writes `results/BENCH_<id>.json`; CI uploads them so
+//! the perf trajectory diffs across PRs.  This tool fails CI with a
+//! readable per-experiment diff when any schema field (a JSON key path or
+//! a table column) disappears between runs:
+//!
+//! ```text
+//! benchcheck check <results_dir> <manifest.json>   # CI gate
+//! benchcheck write <results_dir> <manifest.json>   # refresh after an
+//!                                                  # intentional change
+//! ```
+//!
+//! The manifest (`rust/bench_schema.json`) is committed; `write`
+//! regenerates it from freshly produced artifacts.
+
+use racam::config::json;
+use racam::report::schema;
+use std::path::Path;
+
+fn main() {
+    if let Err(e) = run(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: Vec<String>) -> racam::Result<()> {
+    let usage = "usage: benchcheck <check|write> <results_dir> <manifest.json>";
+    let (mode, dir, manifest_path) = match args.as_slice() {
+        [m, d, f] => (m.as_str(), Path::new(d), Path::new(f)),
+        _ => anyhow::bail!("{usage}"),
+    };
+    match mode {
+        "write" => {
+            let manifest = schema::manifest_from_dir(dir)?;
+            std::fs::write(manifest_path, manifest.pretty())?;
+            println!("wrote {} from {}", manifest_path.display(), dir.display());
+            Ok(())
+        }
+        "check" => {
+            let manifest = json::parse(&std::fs::read_to_string(manifest_path)?)
+                .map_err(|e| anyhow::anyhow!("{}: {e:?}", manifest_path.display()))?;
+            let (problems, notes) = schema::check_dir(dir, &manifest)?;
+            for n in &notes {
+                println!("note: {n}");
+            }
+            if problems.is_empty() {
+                println!(
+                    "bench schema OK: every manifest field present in {}",
+                    dir.display()
+                );
+                return Ok(());
+            }
+            eprintln!("bench schema regression ({} problem(s)):", problems.len());
+            for p in &problems {
+                eprintln!("  - {p}");
+            }
+            anyhow::bail!("bench artifact schema fields disappeared; see diff above")
+        }
+        other => anyhow::bail!("unknown mode '{other}'\n{usage}"),
+    }
+}

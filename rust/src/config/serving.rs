@@ -27,6 +27,43 @@ use super::json::{self, JsonError, Value};
 /// new pricing bucket.
 pub const DEFAULT_PREFILL_CHUNK: u64 = 256;
 
+/// Which serving-loop implementation a shard runs.  Both produce
+/// bit-identical simulated results (timestamps, costs, tokens, stats);
+/// they differ only in host wall time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// The event-calendar engine (the default): lockstep-decode stretches
+    /// fast-forward to the next material event — arrival release, batch
+    /// membership change, pricing-bucket edge, preemption horizon —
+    /// instead of paying the full per-iteration scheduling machinery for
+    /// every token.  See `docs/serving.md` ("Engine internals").
+    #[default]
+    Calendar,
+    /// The per-iteration reference engine: every simulated step runs the
+    /// complete admission / preemption / prefill-selection round.  Kept as
+    /// the equivalence oracle for the calendar engine (and for schedulers
+    /// whose hooks are stateful — the calendar engine falls back to
+    /// per-iteration stepping for those automatically).
+    Oracle,
+}
+
+impl EngineKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Calendar => "calendar",
+            EngineKind::Oracle => "oracle",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<EngineKind> {
+        match s {
+            "calendar" => Some(EngineKind::Calendar),
+            "oracle" => Some(EngineKind::Oracle),
+            _ => None,
+        }
+    }
+}
+
 /// How the serving loop schedules prefill work and preemption.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct ServingPolicy {
@@ -39,24 +76,47 @@ pub struct ServingPolicy {
     /// `should_preempt` hook once per iteration for every running request,
     /// and sheds or re-queues the ones the policy gives up on.
     pub preempt: bool,
+    /// Which serving-loop implementation runs the schedule.  Results are
+    /// bit-identical either way; `Oracle` trades speed for the reference
+    /// per-iteration structure (equivalence tests, stateful schedulers).
+    pub engine: EngineKind,
 }
 
 impl ServingPolicy {
     /// The paper-faithful schedule: whole-prompt prefill, no preemption.
     /// Identical to `ServingPolicy::default()`.
     pub const fn whole_prefill() -> Self {
-        ServingPolicy { prefill_chunk_tokens: None, preempt: false }
+        ServingPolicy {
+            prefill_chunk_tokens: None,
+            preempt: false,
+            engine: EngineKind::Calendar,
+        }
     }
 
     /// Bound prefill steps to `tokens` prompt tokens (preemption off).
     pub const fn chunked(tokens: u64) -> Self {
-        ServingPolicy { prefill_chunk_tokens: Some(tokens), preempt: false }
+        ServingPolicy {
+            prefill_chunk_tokens: Some(tokens),
+            preempt: false,
+            engine: EngineKind::Calendar,
+        }
     }
 
     /// Enable the preemption hook on top of this policy.
     pub const fn with_preemption(mut self) -> Self {
         self.preempt = true;
         self
+    }
+
+    /// Run this schedule on the given serving-loop implementation.
+    pub const fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Run this schedule on the per-iteration reference engine.
+    pub const fn oracle(self) -> Self {
+        self.with_engine(EngineKind::Oracle)
     }
 
     /// Latency-oriented preset: bucket-sized prefill chunks so short
@@ -80,6 +140,9 @@ impl ServingPolicy {
         };
         if self.preempt {
             s.push_str("+preempt");
+        }
+        if self.engine == EngineKind::Oracle {
+            s.push_str("+oracle");
         }
         s
     }
@@ -109,6 +172,9 @@ impl ServingPolicy {
             pairs.push(("prefill_chunk_tokens", Value::Num(c as f64)));
         }
         pairs.push(("preempt", Value::Bool(self.preempt)));
+        if self.engine != EngineKind::Calendar {
+            pairs.push(("engine", Value::Str(self.engine.label().into())));
+        }
         Value::obj(pairs)
     }
 
@@ -121,7 +187,15 @@ impl ServingPolicy {
             Ok(b) => b.as_bool()?,
             Err(_) => false,
         };
-        Ok(ServingPolicy { prefill_chunk_tokens, preempt })
+        let engine = match v.get("engine") {
+            Ok(e) => {
+                let s = e.as_str()?;
+                EngineKind::from_label(s)
+                    .ok_or_else(|| JsonError(format!("unknown engine '{s}' (calendar|oracle)")))?
+            }
+            Err(_) => EngineKind::Calendar,
+        };
+        Ok(ServingPolicy { prefill_chunk_tokens, preempt, engine })
     }
 }
 
@@ -171,5 +245,22 @@ mod tests {
         assert!(ServingPolicy::chunked(0).validate().is_err());
         assert!(ServingPolicy::from_json(r#"{"prefill_chunk_tokens": 0}"#).is_err());
         ServingPolicy::chunked(1).validate().unwrap();
+    }
+
+    #[test]
+    fn engine_kind_roundtrips_and_defaults_to_calendar() {
+        assert_eq!(ServingPolicy::default().engine, EngineKind::Calendar);
+        assert_eq!(ServingPolicy::from_json("{}").unwrap().engine, EngineKind::Calendar);
+        let oracle = ServingPolicy::interactive().oracle();
+        assert_eq!(oracle.engine, EngineKind::Oracle);
+        assert_eq!(oracle.label(), "chunk256+preempt+oracle");
+        let back = ServingPolicy::from_json(&oracle.to_json()).unwrap();
+        assert_eq!(back, oracle);
+        // The engine choice does not change what schedule the policy is.
+        assert!(ServingPolicy::whole_prefill().oracle().is_whole_prefill());
+        assert!(ServingPolicy::from_json(r#"{"engine": "warp"}"#).is_err());
+        // Calendar is the implicit default, so default policies serialize
+        // without an engine field (old policy files stay byte-compatible).
+        assert!(!ServingPolicy::whole_prefill().to_json().contains("engine"));
     }
 }

@@ -68,6 +68,12 @@ impl Scheduler for FcfsBatcher {
         let take = slots.min(self.queue.len());
         self.queue.drain(..take).collect()
     }
+
+    fn preempt_horizon(&self, _req: &Request, _generated: usize) -> Option<f64> {
+        // FCFS never preempts (the default `should_preempt` keeps
+        // everything and touches no state), so the verdict never changes.
+        Some(f64::INFINITY)
+    }
 }
 
 #[cfg(test)]

@@ -124,6 +124,37 @@ impl TokenEngine for SyntheticEngine {
     }
 }
 
+/// Zero-cost token engine for scheduler-scale benchmarks: emits token 0
+/// with no hidden state, so a serving run measures the *engine loop*
+/// (admission, calendars, pricing, preemption) rather than toy
+/// hidden-state arithmetic — the mode `exp scale` uses to time the
+/// scheduler step itself, the way vLLM benches its scheduler with
+/// simulated model execution.  Deterministic by construction, so the
+/// oracle/calendar equivalence checks hold under it too.
+pub struct NullEngine;
+
+impl TokenEngine for NullEngine {
+    fn hidden(&self) -> usize {
+        0
+    }
+
+    fn vocab(&self) -> usize {
+        1
+    }
+
+    fn step(&mut self, _hidden: &[f32]) -> Result<(Vec<f32>, u32)> {
+        Ok((Vec::new(), 0))
+    }
+
+    fn embed_prompt(&self, _prompt: &[u32]) -> Vec<f32> {
+        // The default embedding indexes modulo the hidden width; with no
+        // hidden state there is nothing to embed.
+        Vec::new()
+    }
+
+    fn feed_token(&self, _hidden: &mut [f32], _token: u32) {}
+}
+
 /// Greedy sampling.
 pub fn argmax(logits: &[f32]) -> u32 {
     let mut best = 0usize;
@@ -161,6 +192,17 @@ mod tests {
         let e = SyntheticEngine::new(16, 16);
         assert_ne!(e.embed_prompt(&[0, 1]), e.embed_prompt(&[5, 9]));
         assert_eq!(e.embed_prompt(&[3]).len(), 16);
+    }
+
+    #[test]
+    fn null_engine_generates_zero_tokens_without_state() {
+        let mut e = NullEngine;
+        assert_eq!(e.embed_prompt(&[3, 1, 4]), Vec::<f32>::new());
+        let (h, t) = e.step(&[]).unwrap();
+        assert!(h.is_empty());
+        assert_eq!(t, 0);
+        let mut empty: [f32; 0] = [];
+        e.feed_token(&mut empty, 0); // must not index into the (empty) state
     }
 
     #[test]

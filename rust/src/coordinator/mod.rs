@@ -25,13 +25,21 @@
 //! shard's clock as [`ShardStats::kv_transfer_ns`].  The pre-redesign
 //! constructors survive as thin deprecated wrappers over the builder.
 //!
-//! Each shard's serving loop is an event-driven iteration engine governed
-//! by a [`ServingPolicy`](crate::config::ServingPolicy): prefill advances
-//! in bounded chunks that interleave with decode iterations (unset =
+//! Each shard's serving loop is governed by a
+//! [`ServingPolicy`](crate::config::ServingPolicy): prefill advances in
+//! bounded chunks that interleave with decode iterations (unset =
 //! whole-prompt, the paper-faithful schedule), and schedulers may preempt
 //! running requests through [`Scheduler::should_preempt`] ([`Preemption`];
-//! EDF sheds past-deadline work).  Open-loop request streams and
-//! SLO-graded summaries over these reports live in [`crate::traffic`].
+//! EDF sheds past-deadline work).  Two interchangeable loop
+//! implementations run that schedule
+//! ([`EngineKind`](crate::config::EngineKind)): the default
+//! **event-calendar engine** fast-forwards uniform lockstep-decode
+//! stretches to the next material event (arrival release, membership
+//! change, pricing-bucket edge, preemption horizon) with indexed heaps in
+//! place of per-iteration scans, and the **per-iteration oracle** is the
+//! reference it must match bit-for-bit on every simulated quantity (see
+//! `docs/serving.md`).  Open-loop request streams and SLO-graded
+//! summaries over these reports live in [`crate::traffic`].
 
 mod batcher;
 mod cluster;
@@ -44,7 +52,7 @@ pub use batcher::{ctx_bucket, Batch, FcfsBatcher, BUCKET_TOKENS};
 pub use cluster::{ClusterBuilder, ClusterCoordinator};
 #[cfg(feature = "pjrt")]
 pub use engine::HloDecodeEngine;
-pub use engine::{SyntheticEngine, TokenEngine};
+pub use engine::{NullEngine, SyntheticEngine, TokenEngine};
 pub use multi::{Coordinator, Intake};
 pub use scheduler::{EdfScheduler, LengthBucketed, Preemption, Scheduler};
 pub use server::{Handoff, Request, RequestResult, Server, ServerReport, ShardStats};

@@ -64,6 +64,14 @@ pub trait Scheduler: Send {
     /// queue whenever the batch is empty, so a policy that withholds
     /// queued work would stall the clock — the server detects a
     /// withholding scheduler and errors out.
+    ///
+    /// **Contract (fast-forward):** a call that returns an empty batch
+    /// (`slots == 0`, or nothing pending) must not mutate scheduler
+    /// state.  The calendar engine elides such no-op calls inside a
+    /// lockstep-decode stretch; a policy that needs to observe every
+    /// iteration should implement [`Scheduler::should_preempt`] (and
+    /// keep the default `preempt_horizon`), which forces per-iteration
+    /// consultation.
     fn next_batch(&mut self, slots: usize) -> Vec<Request>;
 
     /// Preemption hook: called once per serving-loop iteration for every
@@ -73,6 +81,25 @@ pub trait Scheduler: Send {
     /// policies never preempt).
     fn should_preempt(&mut self, _req: &Request, _generated: usize, _sim_now_ns: f64) -> Preemption {
         Preemption::Keep
+    }
+
+    /// The earliest simulated time at which [`Scheduler::should_preempt`]
+    /// might stop returning [`Preemption::Keep`] for this request — the
+    /// *preemption horizon* the calendar engine fast-forwards to.
+    ///
+    /// Returning `Some(t)` is a promise with two parts: (a) `should_preempt`
+    /// returns `Keep` for this request at every simulated time `<= t`, and
+    /// (b) `should_preempt` is *pure* for this request — it mutates no
+    /// scheduler state, so skipping the per-iteration calls inside a
+    /// lockstep-decode stretch is unobservable.  A policy whose verdict
+    /// never changes returns `Some(f64::INFINITY)`.
+    ///
+    /// The default `None` means "consult me every iteration": the calendar
+    /// engine then steps decode one iteration at a time (exactly like the
+    /// oracle), so stateful policies — e.g. ones keyed on attempt counts —
+    /// stay correct without implementing this hook.
+    fn preempt_horizon(&self, _req: &Request, _generated: usize) -> Option<f64> {
+        None
     }
 }
 
@@ -94,6 +121,10 @@ impl Scheduler for Box<dyn Scheduler> {
 
     fn should_preempt(&mut self, req: &Request, generated: usize, sim_now_ns: f64) -> Preemption {
         (**self).should_preempt(req, generated, sim_now_ns)
+    }
+
+    fn preempt_horizon(&self, req: &Request, generated: usize) -> Option<f64> {
+        (**self).preempt_horizon(req, generated)
     }
 }
 
@@ -131,6 +162,12 @@ impl Scheduler for LengthBucketed {
 
     fn pending(&self) -> usize {
         self.pending
+    }
+
+    fn preempt_horizon(&self, _req: &Request, _generated: usize) -> Option<f64> {
+        // Admission-only policy: the default `should_preempt` keeps
+        // everything forever and touches no state.
+        Some(f64::INFINITY)
     }
 
     fn next_batch(&mut self, slots: usize) -> Vec<Request> {
@@ -226,6 +263,16 @@ impl Scheduler for EdfScheduler {
             _ => Preemption::Keep,
         }
     }
+
+    fn preempt_horizon(&self, req: &Request, generated: usize) -> Option<f64> {
+        // `should_preempt` is pure and keeps the request at every time up
+        // to (and including) its deadline; deadline-free or budget-complete
+        // requests are never shed, so their verdict never changes.
+        match req.deadline_ns {
+            Some(d) if generated < req.max_new_tokens => Some(d as f64),
+            _ => Some(f64::INFINITY),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -313,6 +360,27 @@ mod tests {
         assert_eq!(s.should_preempt(&dead, 4, 500.0), Preemption::Keep);
         // At the deadline instant (not past it), the request still counts.
         assert_eq!(s.should_preempt(&dead, 1, 100.0), Preemption::Keep);
+    }
+
+    #[test]
+    fn preempt_horizons_match_the_verdict_stream() {
+        // EDF: the horizon is the deadline — Keep at every time <= d, and
+        // the verdict may flip only strictly past it.
+        let edf = EdfScheduler::new();
+        let dead = Request::new(0, vec![1], 4).with_deadline(100);
+        assert_eq!(edf.preempt_horizon(&dead, 1), Some(100.0));
+        // Budget-complete or deadline-free requests are never shed.
+        assert_eq!(edf.preempt_horizon(&dead, 4), Some(f64::INFINITY));
+        let free = Request::new(1, vec![1], 4);
+        assert_eq!(edf.preempt_horizon(&free, 0), Some(f64::INFINITY));
+        // Admission-only policies promise an infinite horizon.
+        let fcfs = crate::coordinator::FcfsBatcher::new(2);
+        assert_eq!(fcfs.preempt_horizon(&dead, 0), Some(f64::INFINITY));
+        let lb = LengthBucketed::new();
+        assert_eq!(lb.preempt_horizon(&dead, 0), Some(f64::INFINITY));
+        // Boxed schedulers forward the hook.
+        let boxed: Box<dyn Scheduler> = Box::new(EdfScheduler::new());
+        assert_eq!(boxed.preempt_horizon(&dead, 1), Some(100.0));
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! iteration engine, and persistent per-bucket prefill and decode cost
 //! caches so repeated runs never re-price a bucket.
 //!
-//! ## The event-driven iteration engine
+//! ## The serving engines
 //!
 //! `run_to_completion` drives a sequence of simulated *steps*.  Each step
 //! is one of:
@@ -26,6 +26,22 @@
 //! * **idle jump / intake block** — the clock jumps to the next future
 //!   arrival (accounted as [`ShardStats::sim_idle_ns`]) or the loop blocks
 //!   on the live intake channel.
+//!
+//! Two implementations run that schedule
+//! ([`ServingPolicy::engine`](crate::config::EngineKind)):
+//!
+//! * the **event-calendar engine** (default) — when the batch is in a
+//!   uniform lockstep-decode stretch (every member decoding, no admission
+//!   possible before a membership change), it fast-forwards to the next
+//!   material event — arrival release, token-budget completion, pricing-
+//!   bucket edge, preemption horizon — instead of paying the full
+//!   scheduling round per token; prefill selection pops an SRPT-keyed
+//!   index, and per-member decode pricing is a precomputed bucket
+//!   schedule.  See `docs/serving.md` ("Engine internals").
+//! * the **per-iteration oracle** — the reference loop that runs the
+//!   complete round every simulated step.  Simulated results (timestamps,
+//!   costs, tokens, stats) are bit-identical between the two, which the
+//!   equivalence suite in `tests/engine_equivalence.rs` pins.
 //!
 //! With chunking enabled, a long prompt no longer stalls every running
 //! decode: prefill advances one chunk per iteration and decode iterations
@@ -66,7 +82,7 @@
 use super::batcher::{ctx_bucket, FcfsBatcher};
 use super::engine::TokenEngine;
 use super::scheduler::{Preemption, Scheduler};
-use crate::config::{LlmSpec, ServingPolicy, ShardRole};
+use crate::config::{EngineKind, LlmSpec, ServingPolicy, ShardRole};
 use crate::metrics::LatencyBreakdown;
 use crate::workloads::{decode_kernels, prefill_kernels, stage_latency, RacamSystem};
 use crate::Result;
@@ -276,6 +292,86 @@ pub struct ServerReport {
 }
 
 impl ServerReport {
+    /// Compare every *simulated* (deterministic) quantity of two reports
+    /// bit-for-bit — per-request results, per-shard stats, totals —
+    /// ignoring host wall-clock fields, which differ even between two
+    /// runs of the same engine.  Returns a description of the first
+    /// divergence, or `None` when the reports are simulation-identical.
+    ///
+    /// This is the single comparator behind every engine-equivalence
+    /// gate (the `Server` unit tests, `tests/engine_equivalence.rs`, and
+    /// `exp scale`'s in-run check), so a field added to
+    /// [`RequestResult`] or [`ShardStats`] only needs to be wired here
+    /// once to be covered everywhere.
+    pub fn sim_divergence(&self, other: &ServerReport) -> Option<String> {
+        if self.results.len() != other.results.len() {
+            return Some(format!(
+                "result count {} vs {}",
+                self.results.len(),
+                other.results.len()
+            ));
+        }
+        if self.total_tokens != other.total_tokens {
+            return Some(format!("total tokens {} vs {}", self.total_tokens, other.total_tokens));
+        }
+        for (x, y) in self.results.iter().zip(&other.results) {
+            if x.id != y.id {
+                return Some(format!("result ids {} vs {}", x.id, y.id));
+            }
+            if x.tokens != y.tokens {
+                return Some(format!("req {}: tokens differ", x.id));
+            }
+            if x.prompt_tokens != y.prompt_tokens || x.shed != y.shed {
+                return Some(format!("req {}: prompt_tokens/shed differ", x.id));
+            }
+            if x.deadline_ns.map(f64::to_bits) != y.deadline_ns.map(f64::to_bits) {
+                return Some(format!("req {}: deadline differs", x.id));
+            }
+            for (name, u, v) in [
+                ("sim_ttft_ns", x.sim_ttft_ns, y.sim_ttft_ns),
+                ("sim_total_ns", x.sim_total_ns, y.sim_total_ns),
+                ("arrival_ns", x.arrival_ns, y.arrival_ns),
+                ("sim_first_token_at_ns", x.sim_first_token_at_ns, y.sim_first_token_at_ns),
+                ("sim_finish_at_ns", x.sim_finish_at_ns, y.sim_finish_at_ns),
+            ] {
+                if u.to_bits() != v.to_bits() {
+                    return Some(format!("req {}: {name} {u} vs {v}", x.id));
+                }
+            }
+        }
+        if self.shards.len() != other.shards.len() {
+            return Some(format!("shard count {} vs {}", self.shards.len(), other.shards.len()));
+        }
+        for (s, t) in self.shards.iter().zip(&other.shards) {
+            if s.shard != t.shard || s.group != t.group || s.role != t.role {
+                return Some(format!("shard {}: identity differs", s.shard));
+            }
+            if s.requests != t.requests
+                || s.tokens != t.tokens
+                || s.decode_iterations != t.decode_iterations
+                || s.prefill_chunks != t.prefill_chunks
+                || s.preemptions != t.preemptions
+                || s.shed != t.shed
+                || s.handoffs != t.handoffs
+            {
+                return Some(format!("shard {}: counters differ", s.shard));
+            }
+            for (name, u, v) in [
+                ("sim_ns", s.sim_ns, t.sim_ns),
+                ("sim_clock_ns", s.sim_clock_ns, t.sim_clock_ns),
+                ("sim_idle_ns", s.sim_idle_ns, t.sim_idle_ns),
+                ("occupancy", s.occupancy, t.occupancy),
+                ("chunk_stall_ns", s.chunk_stall_ns, t.chunk_stall_ns),
+                ("kv_transfer_ns", s.kv_transfer_ns, t.kv_transfer_ns),
+            ] {
+                if u.to_bits() != v.to_bits() {
+                    return Some(format!("shard {}: {name} {u} vs {v}", s.shard));
+                }
+            }
+        }
+        None
+    }
+
     /// Merge per-shard reports into one, re-sorting results by request id.
     /// Shards run concurrently, so both clocks use the makespan — the
     /// slowest shard — rather than a sum: `wall_ns` is the
@@ -375,6 +471,39 @@ enum Phase {
 /// being starved indefinitely.
 const MAX_PREFILL_BYPASSES: u32 = 4;
 
+/// The staged member owed priority by the anti-starvation rule: the
+/// oldest (min admission seq) member bypassed [`MAX_PREFILL_BYPASSES`]
+/// or more chunks in a row.  One definition shared by the oracle's
+/// linear selection and the calendar engine's armed bypass path — engine
+/// bit-identity depends on the two never drifting.
+fn bypass_candidate(running: &[Running]) -> Option<usize> {
+    running
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| {
+            matches!(r.phase, Phase::Prefill { .. }) && r.bypassed >= MAX_PREFILL_BYPASSES
+        })
+        .min_by_key(|(_, r)| r.seq)
+        .map(|(i, _)| i)
+}
+
+/// Per-member decode pricing schedule, precomputed at admission and
+/// refreshed only when the context crosses a bucket edge — so the decode
+/// hot loop performs no `ctx_bucket` arithmetic and no cache lookups
+/// (the calendar engine's per-token work is an add and a compare).
+#[derive(Debug, Clone, Copy)]
+struct DecodeSchedule {
+    /// Per-token simulated cost at the member's current context bucket, ns.
+    cost_ns: f64,
+    /// Decode tokens that may still be charged at `cost_ns` before the
+    /// context crosses into the next pricing bucket (0 = must refresh).
+    tokens_to_edge: u64,
+}
+
+impl DecodeSchedule {
+    const STALE: DecodeSchedule = DecodeSchedule { cost_ns: 0.0, tokens_to_edge: 0 };
+}
+
 struct Running {
     req: Request,
     phase: Phase,
@@ -391,6 +520,15 @@ struct Running {
     /// shorter one (chunked mode); at [`MAX_PREFILL_BYPASSES`] it takes
     /// priority.  Reset each time the prompt receives a chunk.
     bypassed: u32,
+    /// [`ctx_bucket`] of the prompt length, fixed at admission so the
+    /// final prefill span never recomputes it.
+    prompt_bucket: u64,
+    /// Cached decode pricing (see [`DecodeSchedule`]).
+    sched: DecodeSchedule,
+    /// The scheduler's preemption horizon for this request (`None` =
+    /// consult `should_preempt` every iteration), captured at admission.
+    /// Only meaningful while the active policy enables preemption.
+    preempt_horizon: Option<f64>,
     hidden: Vec<f32>,
     tokens: Vec<u32>,
     sim_ns: f64,
@@ -415,6 +553,252 @@ impl Running {
             deadline_ns: self.req.deadline_ns.map(|d| d as f64),
             shed,
         }
+    }
+
+    /// Prompt tokens still to prefill (1 floor matches `next_prefill`).
+    fn prefill_remaining(&self) -> u64 {
+        match self.phase {
+            Phase::Prefill { done } => (self.req.prompt.len() as u64).max(1).saturating_sub(done),
+            Phase::Decode => 0,
+        }
+    }
+}
+
+/// Mutable state of one serving run, shared by both engines.  Alongside
+/// the batch and the accounting counters it carries the calendar engine's
+/// *indexes* — the structures that replace the oracle's per-iteration
+/// linear scans:
+///
+/// * `srpt` — staged prompts keyed by (SRPT remaining work, admission
+///   seq); lazily invalidated entries are filtered on pop via `slot_of`.
+/// * `horizon` — running members keyed by their preemption horizon (the
+///   deadline, for EDF), so a decode stretch knows the earliest time the
+///   scheduler's verdict could change without scanning the batch.
+/// * `slot_of` — seq → current index in `running`, maintained across the
+///   ordered removes / swap-removes both engines share.
+/// * `staged` / `decoding` — phase population counters, so "is any prompt
+///   staged" and "how many members decode" are O(1).
+///
+/// (The third index the tentpole names — release time — is the server's
+/// long-standing `future` arrival heap.)
+struct LoopState {
+    running: Vec<Running>,
+    done: Vec<RequestResult>,
+    sim_now_ns: f64,
+    sim_idle_ns: f64,
+    decode_iterations: usize,
+    occupancy_sum: f64,
+    prefill_chunks: usize,
+    chunk_stall_ns: f64,
+    preemptions: usize,
+    shed_count: usize,
+    handed_off: usize,
+    handoffs_in: usize,
+    kv_transfer_ns: f64,
+    admit_seq: u64,
+    stalled_requeue_rounds: usize,
+    /// Whether the active policy consults the preemption hook.
+    preempt_enabled: bool,
+    /// Whether prefill advances in bounded chunks (SRPT keys) or whole
+    /// prompts (admission-order keys).
+    chunked: bool,
+    /// seq → index in `running`.
+    slot_of: HashMap<u64, usize>,
+    /// Staged-prefill index: (remaining-work key, seq), min-heap.
+    srpt: BinaryHeap<Reverse<(u64, u64)>>,
+    /// Preemption-horizon index: (horizon f64 bits, seq), min-heap.
+    /// Non-negative f64 bit patterns order like the floats themselves.
+    horizon: BinaryHeap<Reverse<(u64, u64)>>,
+    /// Running members currently mid-prefill.
+    staged: usize,
+    /// Running members currently decoding.
+    decoding: usize,
+    /// Running members whose scheduler gave no horizon (`None`): while any
+    /// exist under a preempting policy, decode steps one iteration at a
+    /// time so the scheduler is consulted exactly like the oracle.
+    horizon_unknown: usize,
+    /// Set when a bypass-starved staged prompt may exist (armed by the
+    /// bypass accounting, cleared when a scan finds none) — so the common
+    /// prefill path never scans for starvation.
+    bypass_ready: bool,
+}
+
+impl LoopState {
+    fn new(preempt_enabled: bool, chunked: bool) -> LoopState {
+        LoopState {
+            running: Vec::new(),
+            done: Vec::new(),
+            sim_now_ns: 0.0,
+            sim_idle_ns: 0.0,
+            decode_iterations: 0,
+            occupancy_sum: 0.0,
+            prefill_chunks: 0,
+            chunk_stall_ns: 0.0,
+            preemptions: 0,
+            shed_count: 0,
+            handed_off: 0,
+            handoffs_in: 0,
+            kv_transfer_ns: 0.0,
+            admit_seq: 0,
+            stalled_requeue_rounds: 0,
+            preempt_enabled,
+            chunked,
+            slot_of: HashMap::new(),
+            srpt: BinaryHeap::new(),
+            horizon: BinaryHeap::new(),
+            staged: 0,
+            decoding: 0,
+            horizon_unknown: 0,
+            bypass_ready: false,
+        }
+    }
+
+    /// The SRPT key of a staged member: remaining work under chunking,
+    /// admission order alone under whole-prompt prefill (every key 0, so
+    /// the seq tiebreak reproduces the legacy strict admission order).
+    fn srpt_key(&self, r: &Running) -> u64 {
+        if self.chunked {
+            r.prefill_remaining()
+        } else {
+            0
+        }
+    }
+
+    /// Admit a member: appends to `running` and indexes it.
+    fn push_member(&mut self, m: Running) {
+        let idx = self.running.len();
+        self.slot_of.insert(m.seq, idx);
+        match m.phase {
+            Phase::Prefill { .. } => {
+                self.staged += 1;
+                let key = self.srpt_key(&m);
+                self.srpt.push(Reverse((key, m.seq)));
+            }
+            Phase::Decode => self.decoding += 1,
+        }
+        if self.preempt_enabled {
+            match m.preempt_horizon {
+                Some(h) => self.horizon.push(Reverse((h.to_bits(), m.seq))),
+                None => self.horizon_unknown += 1,
+            }
+        }
+        self.running.push(m);
+    }
+
+    fn note_removed(&mut self, m: &Running) {
+        match m.phase {
+            Phase::Prefill { .. } => self.staged -= 1,
+            Phase::Decode => self.decoding -= 1,
+        }
+        if self.preempt_enabled && m.preempt_horizon.is_none() {
+            self.horizon_unknown -= 1;
+        }
+        self.slot_of.remove(&m.seq);
+        // Stale srpt/horizon entries are filtered on pop via `slot_of`.
+    }
+
+    /// Ordered removal (preemption / prefill-retire paths — preserves the
+    /// batch order the oracle's `Vec::remove` produces).
+    fn remove_member(&mut self, idx: usize) -> Running {
+        let m = self.running.remove(idx);
+        self.note_removed(&m);
+        for j in idx..self.running.len() {
+            self.slot_of.insert(self.running[j].seq, j);
+        }
+        m
+    }
+
+    /// Swap removal (the decode-retire path — same order evolution as the
+    /// oracle's `swap_remove`).
+    fn swap_remove_member(&mut self, idx: usize) -> Running {
+        let m = self.running.swap_remove(idx);
+        self.note_removed(&m);
+        if idx < self.running.len() {
+            self.slot_of.insert(self.running[idx].seq, idx);
+        }
+        m
+    }
+
+    /// Transition a member from prefill to decode (keeps the counters and
+    /// the member's slot; its stale srpt entry filters out on pop).
+    fn set_decoding(&mut self, idx: usize) {
+        debug_assert!(matches!(self.running[idx].phase, Phase::Prefill { .. }));
+        self.staged -= 1;
+        self.decoding += 1;
+        self.running[idx].phase = Phase::Decode;
+    }
+
+    /// Pop the staged member the next prefill step should advance: the
+    /// indexed form of `next_prefill`'s SRPT scan (min (remaining, seq)
+    /// chunked; min seq whole-prompt).  Stale entries — members that
+    /// finished prefill, left the batch, or advanced a chunk since they
+    /// were pushed — are discarded as they surface.
+    fn pop_srpt(&mut self) -> Option<usize> {
+        while let Some(Reverse((key, seq))) = self.srpt.peek().copied() {
+            let Some(&idx) = self.slot_of.get(&seq) else {
+                self.srpt.pop();
+                continue;
+            };
+            let valid = matches!(self.running[idx].phase, Phase::Prefill { .. })
+                && self.srpt_key(&self.running[idx]) == key;
+            if valid {
+                return Some(idx);
+            }
+            self.srpt.pop();
+        }
+        None
+    }
+
+    /// Index of the staged member the next prefill step should advance,
+    /// honouring the anti-starvation bypass rule exactly like the oracle's
+    /// scan: a member bypassed [`MAX_PREFILL_BYPASSES`] chunks in a row
+    /// takes priority (oldest first); otherwise SRPT from the heap.
+    fn select_prefill(&mut self) -> Option<usize> {
+        if self.chunked && self.bypass_ready {
+            if let Some(idx) = bypass_candidate(&self.running) {
+                return Some(idx);
+            }
+            self.bypass_ready = false;
+        }
+        self.pop_srpt()
+    }
+
+    /// Retire every decoding member that completed its token budget —
+    /// the end-of-round scan both engines share (ascending-index
+    /// swap-remove walk, so the batch-order evolution is identical).
+    fn retire_finished(&mut self) {
+        let mut i = 0;
+        while i < self.running.len() {
+            if matches!(self.running[i].phase, Phase::Decode)
+                && self.running[i].tokens.len() >= self.running[i].req.max_new_tokens
+            {
+                let finish_at = self.sim_now_ns;
+                let r = self.swap_remove_member(i);
+                self.done.push(r.retire(finish_at, false));
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Smallest preemption horizon over the running batch, from the
+    /// deadline-keyed index.  `None` means a member's scheduler demands
+    /// per-iteration consultation (fast-forward must not skip its calls);
+    /// `Some(f64::INFINITY)` means no verdict can ever change.
+    fn min_horizon(&mut self) -> Option<f64> {
+        if !self.preempt_enabled {
+            return Some(f64::INFINITY);
+        }
+        if self.horizon_unknown > 0 {
+            return None;
+        }
+        while let Some(Reverse((bits, seq))) = self.horizon.peek().copied() {
+            if self.slot_of.contains_key(&seq) {
+                return Some(f64::from_bits(bits));
+            }
+            self.horizon.pop();
+        }
+        Some(f64::INFINITY)
     }
 }
 
@@ -570,7 +954,14 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
     /// never the ~bucket/len inflation of charging the ceiling).
     fn prefill_cost(&mut self, prompt_len: u64) -> Result<LatencyBreakdown> {
         let len = prompt_len.max(1);
-        let bucket = ctx_bucket(len);
+        self.prefill_cost_bucketed(len, ctx_bucket(len))
+    }
+
+    /// [`Server::prefill_cost`] with the bucket id supplied by the caller
+    /// (admission precomputes each request's prompt bucket, so the final
+    /// prefill span never recomputes it).
+    fn prefill_cost_bucketed(&mut self, len: u64, bucket: u64) -> Result<LatencyBreakdown> {
+        debug_assert_eq!(bucket, ctx_bucket(len), "caller-supplied bucket must match");
         let per_bucket = if let Some(c) = self.prefill_cache.get(&bucket) {
             *c
         } else {
@@ -583,11 +974,18 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
 
     /// Simulated cost of prefilling prompt tokens `[from, to)`, as the
     /// difference of the bucket-scaled whole-prefill costs at the two
-    /// boundaries.  A single `[0, len)` span is *exactly* the legacy
-    /// whole-prefill charge (bit-for-bit), and a prompt's chunk spans
-    /// telescope to the same total up to float rounding.
-    fn prefill_span_cost(&mut self, from: u64, to: u64) -> Result<LatencyBreakdown> {
-        let hi = self.prefill_cost(to)?;
+    /// boundaries (`to_bucket` = the bucket of `to`, supplied by the
+    /// caller — the final span reuses the admission-time prompt bucket).
+    /// A single `[0, len)` span is *exactly* the legacy whole-prefill
+    /// charge (bit-for-bit), and a prompt's chunk spans telescope to the
+    /// same total up to float rounding.
+    fn prefill_span_cost_to(
+        &mut self,
+        from: u64,
+        to: u64,
+        to_bucket: u64,
+    ) -> Result<LatencyBreakdown> {
+        let hi = self.prefill_cost_bucketed(to.max(1), to_bucket)?;
         if from == 0 {
             return Ok(hi);
         }
@@ -613,7 +1011,12 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
     /// Simulated per-token decode cost at a context length, priced once
     /// per bucket.
     fn decode_cost(&mut self, ctx: u64) -> Result<LatencyBreakdown> {
-        let bucket = ctx_bucket(ctx);
+        self.decode_cost_bucket(ctx_bucket(ctx))
+    }
+
+    /// [`Server::decode_cost`] keyed directly by the bucket id (the
+    /// calendar engine's refresh path, which already knows the bucket).
+    fn decode_cost_bucket(&mut self, bucket: u64) -> Result<LatencyBreakdown> {
         if let Some(c) = self.decode_cache.get(&bucket) {
             return Ok(*c);
         }
@@ -678,15 +1081,7 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
     /// prompt's prefill but never starve it.
     fn next_prefill(running: &[Running], chunked: bool) -> Option<usize> {
         if chunked {
-            if let Some(idx) = running
-                .iter()
-                .enumerate()
-                .filter(|(_, r)| {
-                    matches!(r.phase, Phase::Prefill { .. }) && r.bypassed >= MAX_PREFILL_BYPASSES
-                })
-                .min_by_key(|(_, r)| r.seq)
-                .map(|(i, _)| i)
-            {
+            if let Some(idx) = bypass_candidate(running) {
                 return Some(idx);
             }
         }
@@ -707,317 +1102,390 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
     /// Drain all submitted requests to completion; with an open intake,
     /// keep serving live submissions until every sender is dropped.
     ///
-    /// This is the event-driven iteration engine (see module docs): each
-    /// trip around the loop admits newly arrived work, runs the preemption
-    /// scan (when enabled), advances prefill by whole prompts or bounded
-    /// chunks, and executes at most one lockstep decode iteration.
+    /// Dispatches on [`ServingPolicy::engine`]: the event-calendar engine
+    /// with decode fast-forward (the default), or the per-iteration
+    /// reference engine.  Both produce bit-identical simulated results —
+    /// timestamps, costs, tokens, per-shard stats; only host wall time
+    /// differs (see module docs and `docs/serving.md`).
     pub fn run_to_completion(&mut self) -> Result<ServerReport> {
-        let mut running: Vec<Running> = Vec::new();
-        let mut done: Vec<RequestResult> = Vec::new();
-        let wall_start = Instant::now();
-        let mut decode_iterations = 0usize;
-        let mut occupancy_sum = 0.0f64;
-        let mut sim_now_ns = 0.0f64;
-        let mut sim_idle_ns = 0.0f64;
-        let mut prefill_chunks = 0usize;
-        let mut chunk_stall_ns = 0.0f64;
-        let mut preemptions = 0usize;
-        let mut shed_count = 0usize;
-        let mut handed_off = 0usize;
-        let mut handoffs_in = 0usize;
-        let mut kv_transfer_ns = 0.0f64;
-        let mut admit_seq = 0u64;
-        // Consecutive no-progress rounds in which the preemption policy
-        // re-queued everything it was handed (see the livelock bail below).
-        let mut stalled_requeue_rounds = 0usize;
-        // Floor at 1: a zero-token chunk would never advance prefill
-        // (`ServingPolicy::validate` rejects it, but don't trust callers
-        // with an infinite loop).
-        let chunk_tokens = self.policy.prefill_chunk_tokens.map(|c| c.max(1));
+        match self.policy.engine {
+            EngineKind::Calendar => self.run_calendar(),
+            EngineKind::Oracle => self.run_oracle(),
+        }
+    }
 
-        loop {
-            self.drain_intake(sim_now_ns);
-            self.release_due(sim_now_ns);
-
-            // Admit new work into free batch slots (continuous batching).
-            // Admission only *stages* the request; its prefill cost is
-            // charged by the prefill steps below.
-            let slots = self.max_batch.saturating_sub(running.len());
-            let mut admitted = 0usize;
-            for req in self.scheduler.next_batch(slots) {
-                admitted += 1;
-                let t0 = Instant::now();
-                let hidden = self.engine.embed_prompt(&req.prompt);
-                // A received handoff skips prefill: its prompt was already
-                // prefilled on the prefill shard, whose intrinsic cost (and
-                // original arrival, for end-to-end latency) carries over;
-                // the KV-link transfer is charged to this shard's stats
-                // once, however many times a re-queue re-admits it.
-                let mut meta = self.handoff_meta.remove(&req.id);
-                if let Some(m) = &mut meta {
-                    if !m.counted {
-                        handoffs_in += 1;
-                        kv_transfer_ns += m.kv_transfer_ns;
-                        m.counted = true;
-                    }
-                }
-                let (phase, carried_ns, arrival_ns, carried_wall_ns) = match &meta {
-                    Some(m) => (Phase::Decode, m.sim_prefill_ns, m.original_arrival_ns, m.wall_ns),
-                    None => (Phase::Prefill { done: 0 }, 0.0, req.arrival_ns as f64, 0.0),
-                };
-                running.push(Running {
-                    phase,
-                    handoff: meta,
-                    seq: admit_seq,
-                    bypassed: 0,
-                    hidden,
-                    tokens: Vec::new(),
-                    sim_ns: carried_ns,
-                    sim_ttft_ns: carried_ns,
-                    wall_ns: carried_wall_ns + t0.elapsed().as_nanos() as f64,
-                    arrival_ns,
-                    first_token_at_ns: sim_now_ns,
-                    req,
-                });
-                admit_seq += 1;
-            }
-
-            // Preemption scan: consult the scheduler about every running
-            // request (newly admitted ones included, so dead-on-arrival
-            // work sheds before paying any prefill).
-            let mut requeued = 0usize;
-            let mut shed_round = 0usize;
-            if self.policy.preempt {
-                let mut i = 0;
-                while i < running.len() {
-                    let r = &running[i];
-                    match self.scheduler.should_preempt(&r.req, r.tokens.len(), sim_now_ns) {
-                        Preemption::Keep => i += 1,
-                        Preemption::Requeue => {
-                            preemptions += 1;
-                            requeued += 1;
-                            // Generation state is dropped: re-admission
-                            // re-prefills (recompute-style preemption).  A
-                            // re-queued *handoff* keeps its bookkeeping —
-                            // its KV cache is resident on this shard, so
-                            // re-admission skips prefill and the result
-                            // keeps the original arrival and prefill cost.
-                            let r = running.remove(i);
-                            if let Some(m) = r.handoff {
-                                self.handoff_meta.insert(r.req.id, m);
-                            }
-                            self.scheduler.submit(r.req);
-                        }
-                        Preemption::Shed => {
-                            shed_count += 1;
-                            shed_round += 1;
-                            let r = running.remove(i);
-                            done.push(r.retire(sim_now_ns, true));
-                        }
-                    }
+    /// Admit new work into free batch slots (continuous batching).
+    /// Admission only *stages* the request; its prefill cost is charged by
+    /// the prefill steps.  Returns how many requests were admitted.
+    fn admit(&mut self, st: &mut LoopState) -> usize {
+        let slots = self.max_batch.saturating_sub(st.running.len());
+        let mut admitted = 0usize;
+        for req in self.scheduler.next_batch(slots) {
+            admitted += 1;
+            let t0 = Instant::now();
+            let hidden = self.engine.embed_prompt(&req.prompt);
+            // A received handoff skips prefill: its prompt was already
+            // prefilled on the prefill shard, whose intrinsic cost (and
+            // original arrival, for end-to-end latency) carries over;
+            // the KV-link transfer is charged to this shard's stats
+            // once, however many times a re-queue re-admits it.
+            let mut meta = self.handoff_meta.remove(&req.id);
+            if let Some(m) = &mut meta {
+                if !m.counted {
+                    st.handoffs_in += 1;
+                    st.kv_transfer_ns += m.kv_transfer_ns;
+                    m.counted = true;
                 }
             }
+            let (phase, carried_ns, arrival_ns, carried_wall_ns) = match &meta {
+                Some(m) => (Phase::Decode, m.sim_prefill_ns, m.original_arrival_ns, m.wall_ns),
+                None => (Phase::Prefill { done: 0 }, 0.0, req.arrival_ns as f64, 0.0),
+            };
+            let preempt_horizon =
+                if self.policy.preempt { self.scheduler.preempt_horizon(&req, 0) } else { None };
+            st.push_member(Running {
+                phase,
+                handoff: meta,
+                seq: st.admit_seq,
+                bypassed: 0,
+                prompt_bucket: ctx_bucket(req.prompt.len() as u64),
+                sched: DecodeSchedule::STALE,
+                preempt_horizon,
+                hidden,
+                tokens: Vec::new(),
+                sim_ns: carried_ns,
+                sim_ttft_ns: carried_ns,
+                wall_ns: carried_wall_ns + t0.elapsed().as_nanos() as f64,
+                arrival_ns,
+                first_token_at_ns: st.sim_now_ns,
+                req,
+            });
+            st.admit_seq += 1;
+        }
+        admitted
+    }
 
-            // Prefill steps.  Whole-prompt mode drains every staged prompt
-            // back-to-back in admission order — the legacy schedule.
-            // Chunked mode advances one bounded chunk of the staged prompt
-            // with the least remaining work, then falls through to a
-            // decode iteration, so running decodes (and short prompts)
-            // interleave with a long prompt instead of stalling behind it.
-            let mut prefill_progressed = false;
-            while let Some(idx) = Self::next_prefill(&running, chunk_tokens.is_some()) {
-                prefill_progressed = true;
-                let decoders_waiting =
-                    running.iter().any(|r| matches!(r.phase, Phase::Decode));
-                let prefilled = match running[idx].phase {
-                    Phase::Prefill { done } => done,
-                    Phase::Decode => unreachable!("next_prefill returned a decoding member"),
-                };
-                // Empty prompts still price one token (prefill_cost floors
-                // at 1), so `total` floors too and every prompt finishes.
-                let total = (running[idx].req.prompt.len() as u64).max(1);
-                let end = match chunk_tokens {
-                    None => total,
-                    Some(c) => (prefilled + c).min(total),
-                };
-                let t0 = Instant::now();
-                let span = self.prefill_span_cost(prefilled, end)?;
-                let step_ns = span.total_ns();
-                sim_now_ns += step_ns;
-                prefill_chunks += 1;
-                if decoders_waiting {
-                    chunk_stall_ns += step_ns;
-                }
-                if chunk_tokens.is_some() {
-                    // Anti-starvation accounting: every other staged
-                    // prompt was passed over for this chunk.
-                    for (i, r) in running.iter_mut().enumerate() {
-                        if i != idx && matches!(r.phase, Phase::Prefill { .. }) {
-                            r.bypassed = r.bypassed.saturating_add(1);
-                        }
-                    }
-                    running[idx].bypassed = 0;
-                }
-                let finished = end >= total;
-                let r = &mut running[idx];
-                r.sim_ns += step_ns;
-                r.sim_ttft_ns += step_ns;
-                r.wall_ns += t0.elapsed().as_nanos() as f64;
-                if finished {
-                    // Prompt fully prefilled: the first token lands at the
-                    // end of the next decode iteration; until then, the
-                    // prefill end stamps first-token time (exact for
-                    // prefill-only requests).
-                    r.first_token_at_ns = sim_now_ns;
-                    r.phase = Phase::Decode;
-                } else {
-                    r.phase = Phase::Prefill { done: end };
-                }
-                if finished && running[idx].req.max_new_tokens == 0 {
-                    // Nothing to decode: retire immediately.
-                    let r = running.remove(idx);
-                    done.push(r.retire(sim_now_ns, false));
-                } else if finished && self.role == ShardRole::Prefill {
-                    // Prefill-only shard: the finished prompt leaves for a
-                    // decode shard instead of decoding here.  The decode
-                    // shard emits the request's (single) result; this shard
-                    // only counts the handoff.
-                    let r = running.remove(idx);
-                    handed_off += 1;
-                    self.handoffs_out.push(Handoff {
-                        sim_prefill_ns: r.sim_ttft_ns,
-                        prefill_finish_at_ns: sim_now_ns,
-                        wall_ns: r.wall_ns,
-                        req: r.req,
-                    });
-                }
-                if chunk_tokens.is_some() {
-                    break;
-                }
-            }
-
-            if running.is_empty() {
-                if self.scheduler.pending() > 0 {
-                    if admitted == 0 && requeued == 0 && shed_round == 0 {
-                        // The scheduler returned nothing while work is
-                        // queued and every batch slot is free: that
-                        // violates the `Scheduler::next_batch` contract
-                        // and would spin this loop forever.  (A round that
-                        // re-queued or shed running work made progress —
-                        // the freed slots refill next round.)
-                        anyhow::bail!(
-                            "scheduler withheld {} queued request(s) with {} free slots",
-                            self.scheduler.pending(),
-                            self.max_batch
-                        );
-                    }
-                    if admitted > 0 && requeued == admitted && shed_round == 0 && !prefill_progressed
-                    {
-                        // Everything admitted this round was immediately
-                        // re-queued before any simulated progress: the
-                        // round ends in exactly the state it started in.
-                        // A stateful policy may legitimately defer a
-                        // request's first few admissions, so tolerate a
-                        // bounded streak of such rounds; a policy that
-                        // keeps it up violates the `should_preempt`
-                        // contract and would spin this loop forever.
-                        stalled_requeue_rounds += 1;
-                        if stalled_requeue_rounds >= 8 {
-                            anyhow::bail!(
-                                "scheduler re-queued all {requeued} admitted request(s) \
-                                 without advancing the clock for \
-                                 {stalled_requeue_rounds} consecutive rounds"
-                            );
-                        }
-                        continue;
-                    }
-                    // Everything admitted this round retired at prefill
-                    // (zero-token requests) or was shed; keep draining.
-                    stalled_requeue_rounds = 0;
-                    continue;
-                }
-                if let Some(r) = self.future.peek() {
-                    // Idle until the next arrival: jump the clock.
-                    let next = r.0.arrival_ns as f64;
-                    if next > sim_now_ns {
-                        sim_idle_ns += next - sim_now_ns;
-                        sim_now_ns = next;
-                    }
-                    continue;
-                }
-                if let Some(rx) = self.intake.take() {
-                    // No simulated work left but the intake is open: block
-                    // on the channel (host wall time, not simulated time).
-                    // A disconnect leaves the intake closed (`None`).
-                    if let Ok(req) = rx.recv() {
-                        self.intake = Some(rx);
-                        self.submit(Self::clamp_arrival(req, sim_now_ns));
-                    }
-                    continue;
-                }
-                break;
-            }
-
-            // Real work happened this round: any requeue stall is over.
-            stalled_requeue_rounds = 0;
-
-            // A chunked policy can leave the whole batch mid-prefill; no
-            // decode iteration runs until at least one prompt completes.
-            let decoding = running.iter().filter(|r| matches!(r.phase, Phase::Decode)).count();
-            if decoding == 0 {
-                continue;
-            }
-
-            // One decode iteration across the fully prefilled batch
-            // members.  They step in lockstep, so the shard clock advances
-            // by the slowest member's per-token cost; each member's own
-            // service-time accounting still charges its own bucket.
-            // Occupancy counts only decoding members: under a chunked
-            // policy, mid-prefill members hold slots but are not decoding
-            // (with whole-prompt prefill the two counts are identical).
-            decode_iterations += 1;
-            occupancy_sum += decoding as f64 / self.max_batch as f64;
-            let mut iteration_ns = 0.0f64;
-            for i in 0..running.len() {
-                if !matches!(running[i].phase, Phase::Decode) {
-                    continue;
-                }
-                let t0 = Instant::now();
-                let (mut next, token) = self.engine.step(&running[i].hidden)?;
-                self.engine.feed_token(&mut next, token);
-                let r = &mut running[i];
-                r.hidden = next;
-                r.tokens.push(token);
-                r.wall_ns += t0.elapsed().as_nanos() as f64;
-
-                let ctx = r.req.prompt.len() as u64 + r.tokens.len() as u64;
-                let cost = self.decode_cost(ctx)?.total_ns();
-                running[i].sim_ns += cost;
-                iteration_ns = iteration_ns.max(cost);
-            }
-            sim_now_ns += iteration_ns;
-            for r in &mut running {
-                if matches!(r.phase, Phase::Decode) && r.tokens.len() == 1 {
-                    // First decoded token lands at the end of this
-                    // iteration on the shard clock.
-                    r.first_token_at_ns = sim_now_ns;
-                }
-            }
-
-            // Retire finished requests.
+    /// Preemption scan: consult the scheduler about every running request
+    /// (newly admitted ones included, so dead-on-arrival work sheds before
+    /// paying any prefill).  Returns (requeued, shed) counts this round.
+    fn preempt_scan(&mut self, st: &mut LoopState) -> (usize, usize) {
+        let mut requeued = 0usize;
+        let mut shed_round = 0usize;
+        if self.policy.preempt {
             let mut i = 0;
-            while i < running.len() {
-                if matches!(running[i].phase, Phase::Decode)
-                    && running[i].tokens.len() >= running[i].req.max_new_tokens
-                {
-                    let r = running.swap_remove(i);
-                    done.push(r.retire(sim_now_ns, false));
-                } else {
-                    i += 1;
+            while i < st.running.len() {
+                let r = &st.running[i];
+                match self.scheduler.should_preempt(&r.req, r.tokens.len(), st.sim_now_ns) {
+                    Preemption::Keep => i += 1,
+                    Preemption::Requeue => {
+                        st.preemptions += 1;
+                        requeued += 1;
+                        // Generation state is dropped: re-admission
+                        // re-prefills (recompute-style preemption).  A
+                        // re-queued *handoff* keeps its bookkeeping —
+                        // its KV cache is resident on this shard, so
+                        // re-admission skips prefill and the result
+                        // keeps the original arrival and prefill cost.
+                        let r = st.remove_member(i);
+                        if let Some(m) = r.handoff {
+                            self.handoff_meta.insert(r.req.id, m);
+                        }
+                        self.scheduler.submit(r.req);
+                    }
+                    Preemption::Shed => {
+                        st.shed_count += 1;
+                        shed_round += 1;
+                        let r = st.remove_member(i);
+                        st.done.push(r.retire(st.sim_now_ns, true));
+                    }
                 }
             }
         }
+        (requeued, shed_round)
+    }
 
+    /// Charge one prefill step (a bounded chunk, or the whole prompt) to
+    /// member `idx`, with the bypass bookkeeping, phase transition, and
+    /// zero-token / prefill-shard retirement both engines share.
+    fn prefill_step_at(
+        &mut self,
+        st: &mut LoopState,
+        idx: usize,
+        chunk_tokens: Option<u64>,
+    ) -> Result<()> {
+        let decoders_waiting = st.decoding > 0;
+        let prefilled = match st.running[idx].phase {
+            Phase::Prefill { done } => done,
+            Phase::Decode => unreachable!("prefill step on a decoding member"),
+        };
+        // Empty prompts still price one token (prefill_cost floors
+        // at 1), so `total` floors too and every prompt finishes.
+        let total = (st.running[idx].req.prompt.len() as u64).max(1);
+        let end = match chunk_tokens {
+            None => total,
+            Some(c) => (prefilled + c).min(total),
+        };
+        let finished = end >= total;
+        // The final span's upper bucket is the admission-time prompt
+        // bucket; intermediate chunk boundaries bucket on the fly.
+        let hi_bucket = if finished { st.running[idx].prompt_bucket } else { ctx_bucket(end) };
+        let t0 = Instant::now();
+        let span = self.prefill_span_cost_to(prefilled, end, hi_bucket)?;
+        let step_ns = span.total_ns();
+        st.sim_now_ns += step_ns;
+        st.prefill_chunks += 1;
+        if decoders_waiting {
+            st.chunk_stall_ns += step_ns;
+        }
+        if chunk_tokens.is_some() {
+            // Anti-starvation accounting: every other staged prompt was
+            // passed over for this chunk.  Arm the bypass path only when
+            // a member actually crossed the threshold, so the common
+            // selection never scans for starvation.
+            let mut armed = false;
+            for (i, r) in st.running.iter_mut().enumerate() {
+                if i != idx && matches!(r.phase, Phase::Prefill { .. }) {
+                    r.bypassed = r.bypassed.saturating_add(1);
+                    armed |= r.bypassed >= MAX_PREFILL_BYPASSES;
+                }
+            }
+            st.running[idx].bypassed = 0;
+            st.bypass_ready = armed;
+        }
+        {
+            let r = &mut st.running[idx];
+            r.sim_ns += step_ns;
+            r.sim_ttft_ns += step_ns;
+            r.wall_ns += t0.elapsed().as_nanos() as f64;
+        }
+        if finished {
+            // Prompt fully prefilled: the first token lands at the
+            // end of the next decode iteration; until then, the
+            // prefill end stamps first-token time (exact for
+            // prefill-only requests).
+            st.running[idx].first_token_at_ns = st.sim_now_ns;
+            st.set_decoding(idx);
+        } else {
+            st.running[idx].phase = Phase::Prefill { done: end };
+            // Re-index the advanced prompt under its new remaining work.
+            let key = st.srpt_key(&st.running[idx]);
+            let seq = st.running[idx].seq;
+            st.srpt.push(Reverse((key, seq)));
+        }
+        if finished && st.running[idx].req.max_new_tokens == 0 {
+            // Nothing to decode: retire immediately.
+            let r = st.remove_member(idx);
+            st.done.push(r.retire(st.sim_now_ns, false));
+        } else if finished && self.role == ShardRole::Prefill {
+            // Prefill-only shard: the finished prompt leaves for a
+            // decode shard instead of decoding here.  The decode
+            // shard emits the request's (single) result; this shard
+            // only counts the handoff.
+            let r = st.remove_member(idx);
+            st.handed_off += 1;
+            self.handoffs_out.push(Handoff {
+                sim_prefill_ns: r.sim_ttft_ns,
+                prefill_finish_at_ns: st.sim_now_ns,
+                wall_ns: r.wall_ns,
+                req: r.req,
+            });
+        }
+        Ok(())
+    }
+
+    /// Handle a round that ends with an empty batch: the withholding /
+    /// requeue-livelock bails, the idle clock jump to the next arrival,
+    /// and the blocking intake wait — shared by both engines verbatim.
+    fn idle_step(
+        &mut self,
+        st: &mut LoopState,
+        admitted: usize,
+        requeued: usize,
+        shed_round: usize,
+        prefill_progressed: bool,
+    ) -> Result<RoundIdle> {
+        if self.scheduler.pending() > 0 {
+            if admitted == 0 && requeued == 0 && shed_round == 0 {
+                // The scheduler returned nothing while work is
+                // queued and every batch slot is free: that
+                // violates the `Scheduler::next_batch` contract
+                // and would spin this loop forever.  (A round that
+                // re-queued or shed running work made progress —
+                // the freed slots refill next round.)
+                anyhow::bail!(
+                    "scheduler withheld {} queued request(s) with {} free slots",
+                    self.scheduler.pending(),
+                    self.max_batch
+                );
+            }
+            if admitted > 0 && requeued == admitted && shed_round == 0 && !prefill_progressed {
+                // Everything admitted this round was immediately
+                // re-queued before any simulated progress: the
+                // round ends in exactly the state it started in.
+                // A stateful policy may legitimately defer a
+                // request's first few admissions, so tolerate a
+                // bounded streak of such rounds; a policy that
+                // keeps it up violates the `should_preempt`
+                // contract and would spin this loop forever.
+                st.stalled_requeue_rounds += 1;
+                if st.stalled_requeue_rounds >= 8 {
+                    anyhow::bail!(
+                        "scheduler re-queued all {requeued} admitted request(s) \
+                         without advancing the clock for \
+                         {} consecutive rounds",
+                        st.stalled_requeue_rounds
+                    );
+                }
+                return Ok(RoundIdle::Continue);
+            }
+            // Everything admitted this round retired at prefill
+            // (zero-token requests) or was shed; keep draining.
+            st.stalled_requeue_rounds = 0;
+            return Ok(RoundIdle::Continue);
+        }
+        if let Some(r) = self.future.peek() {
+            // Idle until the next arrival: jump the clock.
+            let next = r.0.arrival_ns as f64;
+            if next > st.sim_now_ns {
+                st.sim_idle_ns += next - st.sim_now_ns;
+                st.sim_now_ns = next;
+            }
+            return Ok(RoundIdle::Continue);
+        }
+        if let Some(rx) = self.intake.take() {
+            // No simulated work left but the intake is open: block
+            // on the channel (host wall time, not simulated time).
+            // A disconnect leaves the intake closed (`None`).
+            if let Ok(req) = rx.recv() {
+                self.intake = Some(rx);
+                self.submit(Self::clamp_arrival(req, st.sim_now_ns));
+            }
+            return Ok(RoundIdle::Continue);
+        }
+        Ok(RoundIdle::Finished)
+    }
+
+    /// One decode round of the calendar engine: a single lockstep
+    /// iteration (`fast = false` — the oracle-equivalent step over the
+    /// decoding subset of a mixed batch), or a fast-forwarded *stretch*
+    /// (`fast = true` — every member decoding, nothing admissible) that
+    /// jumps iteration by iteration to the nearest calendar event:
+    ///
+    /// * a member completing its token budget (batch-membership change),
+    /// * a pricing-bucket edge (the per-token cost changes),
+    /// * an arrival release crossing the advancing clock,
+    /// * the scheduler's preemption horizon.
+    ///
+    /// Within a stretch the per-token work is the token engine step plus
+    /// two float adds and two compares — no admission call, no preemption
+    /// scan, no prefill selection, no bucket hashing, no retire scan, no
+    /// per-member wall-clock reads.  The clock and every member's service
+    /// time accumulate with the *same sequence of f64 additions* as the
+    /// oracle, so the fast path is bit-identical, not just close.
+    fn decode_round(&mut self, st: &mut LoopState, fast: bool, horizon: Option<f64>) -> Result<()> {
+        // Refresh stale pricing schedules (bucket edge crossed, or member
+        // newly decoding) — the only place decode pricing is looked up.
+        for i in 0..st.running.len() {
+            let r = &st.running[i];
+            if !matches!(r.phase, Phase::Decode) || r.sched.tokens_to_edge > 0 {
+                continue;
+            }
+            let ctx = r.req.prompt.len() as u64 + r.tokens.len() as u64 + 1;
+            let bucket = ctx_bucket(ctx);
+            let cost = self.decode_cost_bucket(bucket)?;
+            st.running[i].sched =
+                DecodeSchedule { cost_ns: cost.total_ns(), tokens_to_edge: bucket + 1 - ctx };
+        }
+
+        // Lockstep: the clock advances by the slowest member's per-token
+        // cost, constant until the next bucket edge.
+        let mut maxc = 0.0f64;
+        for r in &st.running {
+            if matches!(r.phase, Phase::Decode) {
+                maxc = maxc.max(r.sched.cost_ns);
+            }
+        }
+        // The stretch bound: iterations to the nearest deterministic
+        // event.  `horizon = None` (a scheduler without the purity
+        // promise) forces single-stepping so its hooks run per iteration.
+        let mut k = 1u64;
+        if fast && horizon.is_some() {
+            k = u64::MAX;
+            for r in &st.running {
+                let rem = (r.req.max_new_tokens - r.tokens.len()) as u64;
+                k = k.min(rem).min(r.sched.tokens_to_edge);
+            }
+        }
+        let next_arrival = self.future.peek().map(|r| r.0.arrival_ns as f64);
+        let horizon_ns = horizon.unwrap_or(f64::INFINITY);
+        let occ = st.decoding as f64 / self.max_batch as f64;
+
+        let t0 = Instant::now();
+        let mut iters = 0u64;
+        while iters < k {
+            let mut new_first = false;
+            for r in st.running.iter_mut() {
+                if !matches!(r.phase, Phase::Decode) {
+                    continue;
+                }
+                let (mut next, token) = self.engine.step(&r.hidden)?;
+                self.engine.feed_token(&mut next, token);
+                r.hidden = next;
+                r.tokens.push(token);
+                r.sim_ns += r.sched.cost_ns;
+                new_first |= r.tokens.len() == 1;
+            }
+            st.decode_iterations += 1;
+            st.occupancy_sum += occ;
+            st.sim_now_ns += maxc;
+            iters += 1;
+            if new_first {
+                // First decoded token lands at the end of this
+                // iteration on the shard clock.
+                for r in st.running.iter_mut() {
+                    if matches!(r.phase, Phase::Decode) && r.tokens.len() == 1 {
+                        r.first_token_at_ns = st.sim_now_ns;
+                    }
+                }
+            }
+            // Clock-dependent calendar events end the stretch: an arrival
+            // became due, or the preemption horizon was crossed.
+            if next_arrival.is_some_and(|a| a <= st.sim_now_ns) || st.sim_now_ns > horizon_ns {
+                break;
+            }
+        }
+
+        // Host wall time, apportioned evenly across the decoding members
+        // (the oracle reads the clock around every member step; one read
+        // per round keeps the hot loop clean — wall fields are host-side
+        // accounting, not simulated results).
+        let elapsed = t0.elapsed().as_nanos() as f64 / st.decoding.max(1) as f64;
+        for r in st.running.iter_mut() {
+            if matches!(r.phase, Phase::Decode) {
+                r.wall_ns += elapsed;
+                r.sched.tokens_to_edge -= iters;
+            }
+        }
+        Ok(())
+    }
+
+    /// Assemble the final report from a drained loop state.
+    fn finish_report(&self, st: LoopState, wall_start: Instant) -> ServerReport {
+        let LoopState {
+            mut done,
+            sim_now_ns,
+            sim_idle_ns,
+            decode_iterations,
+            occupancy_sum,
+            prefill_chunks,
+            chunk_stall_ns,
+            preemptions,
+            shed_count,
+            handed_off,
+            handoffs_in,
+            kv_transfer_ns,
+            ..
+        } = st;
         done.sort_by_key(|r| r.id);
         let total_tokens: usize = done.iter().map(|r| r.tokens.len()).sum();
         let sim_ns: f64 = done.iter().map(|r| r.sim_total_ns).sum();
@@ -1045,14 +1513,212 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             handoffs: handed_off + handoffs_in,
             kv_transfer_ns,
         };
-        Ok(ServerReport {
+        ServerReport {
             sim_tokens_per_s: total_tokens as f64 / (sim_now_ns / 1e9).max(f64::MIN_POSITIVE),
             wall_tokens_per_s: total_tokens as f64 / (wall_ns / 1e9).max(f64::MIN_POSITIVE),
             total_tokens,
             results: done,
             shards: vec![stats],
-        })
+        }
     }
+
+    /// The per-iteration reference engine: every simulated step runs the
+    /// complete round — intake drain, arrival release, admission call,
+    /// preemption scan, linear prefill selection, one lockstep decode
+    /// iteration with per-member bucket lookups, retire scan.  This is the
+    /// equivalence oracle the calendar engine is pinned against; it also
+    /// serves schedulers whose hooks are stateful.
+    fn run_oracle(&mut self) -> Result<ServerReport> {
+        let wall_start = Instant::now();
+        // Floor at 1: a zero-token chunk would never advance prefill
+        // (`ServingPolicy::validate` rejects it, but don't trust callers
+        // with an infinite loop).
+        let chunk_tokens = self.policy.prefill_chunk_tokens.map(|c| c.max(1));
+        let mut st = LoopState::new(self.policy.preempt, chunk_tokens.is_some());
+
+        loop {
+            self.drain_intake(st.sim_now_ns);
+            self.release_due(st.sim_now_ns);
+            let admitted = self.admit(&mut st);
+            let (requeued, shed_round) = self.preempt_scan(&mut st);
+
+            // Prefill steps.  Whole-prompt mode drains every staged prompt
+            // back-to-back in admission order — the legacy schedule.
+            // Chunked mode advances one bounded chunk of the staged prompt
+            // with the least remaining work, then falls through to a
+            // decode iteration, so running decodes (and short prompts)
+            // interleave with a long prompt instead of stalling behind it.
+            let mut prefill_progressed = false;
+            while let Some(idx) = Self::next_prefill(&st.running, chunk_tokens.is_some()) {
+                prefill_progressed = true;
+                self.prefill_step_at(&mut st, idx, chunk_tokens)?;
+                if chunk_tokens.is_some() {
+                    break;
+                }
+            }
+
+            if st.running.is_empty() {
+                match self.idle_step(&mut st, admitted, requeued, shed_round, prefill_progressed)?
+                {
+                    RoundIdle::Continue => continue,
+                    RoundIdle::Finished => break,
+                }
+            }
+
+            // Real work happened this round: any requeue stall is over.
+            st.stalled_requeue_rounds = 0;
+
+            // A chunked policy can leave the whole batch mid-prefill; no
+            // decode iteration runs until at least one prompt completes.
+            let decoding =
+                st.running.iter().filter(|r| matches!(r.phase, Phase::Decode)).count();
+            if decoding == 0 {
+                continue;
+            }
+
+            // One decode iteration across the fully prefilled batch
+            // members.  They step in lockstep, so the shard clock advances
+            // by the slowest member's per-token cost; each member's own
+            // service-time accounting still charges its own bucket.
+            // Occupancy counts only decoding members: under a chunked
+            // policy, mid-prefill members hold slots but are not decoding
+            // (with whole-prompt prefill the two counts are identical).
+            st.decode_iterations += 1;
+            st.occupancy_sum += decoding as f64 / self.max_batch as f64;
+            let mut iteration_ns = 0.0f64;
+            for i in 0..st.running.len() {
+                if !matches!(st.running[i].phase, Phase::Decode) {
+                    continue;
+                }
+                let t0 = Instant::now();
+                let (mut next, token) = self.engine.step(&st.running[i].hidden)?;
+                self.engine.feed_token(&mut next, token);
+                let r = &mut st.running[i];
+                r.hidden = next;
+                r.tokens.push(token);
+                r.wall_ns += t0.elapsed().as_nanos() as f64;
+
+                let ctx = r.req.prompt.len() as u64 + r.tokens.len() as u64;
+                let cost = self.decode_cost(ctx)?.total_ns();
+                st.running[i].sim_ns += cost;
+                iteration_ns = iteration_ns.max(cost);
+            }
+            st.sim_now_ns += iteration_ns;
+            for r in &mut st.running {
+                if matches!(r.phase, Phase::Decode) && r.tokens.len() == 1 {
+                    // First decoded token lands at the end of this
+                    // iteration on the shard clock.
+                    r.first_token_at_ns = st.sim_now_ns;
+                }
+            }
+
+            // Retire finished requests.
+            st.retire_finished();
+        }
+        Ok(self.finish_report(st, wall_start))
+    }
+
+    /// The event-calendar engine (the default).  The round structure is
+    /// the oracle's, but:
+    ///
+    /// * prefill selection pops the SRPT index instead of scanning the
+    ///   batch (bypass-starved prompts keep their exact priority — the
+    ///   scan only runs while one is armed);
+    /// * a *uniform lockstep-decode stretch* — every member decoding and
+    ///   no admission possible before a membership change — fast-forwards
+    ///   through [`Server::decode_round`] to the next calendar event
+    ///   instead of paying the full round per token;
+    /// * decode pricing comes from each member's precomputed bucket
+    ///   schedule, refreshed only at bucket edges.
+    fn run_calendar(&mut self) -> Result<ServerReport> {
+        let wall_start = Instant::now();
+        // Floor at 1: see `run_oracle`.
+        let chunk_tokens = self.policy.prefill_chunk_tokens.map(|c| c.max(1));
+        let mut st = LoopState::new(self.policy.preempt, chunk_tokens.is_some());
+
+        loop {
+            self.drain_intake(st.sim_now_ns);
+            self.release_due(st.sim_now_ns);
+            let admitted = self.admit(&mut st);
+            let (requeued, shed_round) = self.preempt_scan(&mut st);
+
+            // Prefill steps off the SRPT index (admission order under
+            // whole-prompt mode; least-remaining-first under chunking,
+            // with the oracle's exact anti-starvation bypass rule).
+            let mut prefill_progressed = false;
+            while st.staged > 0 {
+                let idx = match st.select_prefill() {
+                    Some(i) => i,
+                    // The index should always cover the staged set; if it
+                    // ever desyncs, self-heal from the oracle's linear
+                    // scan instead of spinning the outer loop.
+                    None => {
+                        debug_assert!(false, "SRPT index lost a staged member");
+                        match Self::next_prefill(&st.running, chunk_tokens.is_some()) {
+                            Some(i) => {
+                                let key = st.srpt_key(&st.running[i]);
+                                let seq = st.running[i].seq;
+                                st.srpt.push(Reverse((key, seq)));
+                                i
+                            }
+                            None => {
+                                st.staged = 0; // counter was stale: no prompt is staged
+                                break;
+                            }
+                        }
+                    }
+                };
+                prefill_progressed = true;
+                self.prefill_step_at(&mut st, idx, chunk_tokens)?;
+                if chunk_tokens.is_some() {
+                    break;
+                }
+            }
+
+            if st.running.is_empty() {
+                match self.idle_step(&mut st, admitted, requeued, shed_round, prefill_progressed)?
+                {
+                    RoundIdle::Continue => continue,
+                    RoundIdle::Finished => break,
+                }
+            }
+
+            // Real work happened this round: any requeue stall is over.
+            st.stalled_requeue_rounds = 0;
+
+            // A chunked policy can leave the whole batch mid-prefill; no
+            // decode iteration runs until at least one prompt completes.
+            if st.decoding == 0 {
+                continue;
+            }
+
+            // Decode: fast-forward a uniform lockstep stretch when no
+            // admission can change the batch before a membership event —
+            // every member is decoding, and either the batch is full or
+            // nothing is pending.  (A scheduler holding pending work with
+            // free slots is consulted every iteration, exactly like the
+            // oracle, because its `next_batch` may admit at any round.)
+            let fast = st.decoding == st.running.len()
+                && (st.running.len() == self.max_batch || self.scheduler.pending() == 0);
+            let horizon =
+                if self.policy.preempt { st.min_horizon() } else { Some(f64::INFINITY) };
+            self.decode_round(&mut st, fast, horizon)?;
+
+            // Retire finished requests (same swap-remove order as the
+            // oracle's retire scan).
+            st.retire_finished();
+        }
+        Ok(self.finish_report(st, wall_start))
+    }
+}
+
+/// What an empty-batch round decided (see [`Server::idle_step`]).
+enum RoundIdle {
+    /// Keep looping: the clock may have jumped, a blocked intake
+    /// delivered, or the stall bookkeeping says to drain another round.
+    Continue,
+    /// Every source of work is exhausted: the run is complete.
+    Finished,
 }
 
 #[cfg(test)]
@@ -1563,6 +2229,111 @@ mod tests {
         assert_eq!(rep.shards[0].prefill_chunks, 0, "decode shard must never re-prefill");
         assert_eq!(rep.shards[0].handoffs, 1, "one link crossing, counted once");
         assert_eq!(rep.shards[0].kv_transfer_ns, kv_ns, "transfer charged once");
+    }
+
+    /// Assert two reports agree on every *simulated* quantity bit-for-bit
+    /// (host wall-clock fields are nondeterministic by nature and differ
+    /// even between two runs of the same engine).  One comparator —
+    /// [`ServerReport::sim_divergence`] — backs every equivalence gate.
+    fn assert_reports_identical(a: &ServerReport, b: &ServerReport) {
+        if let Some(d) = a.sim_divergence(b) {
+            panic!("reports diverged: {d}");
+        }
+    }
+
+    #[test]
+    fn calendar_matches_oracle_bit_for_bit() {
+        // Mixed workload exercising every fast-forward boundary: timed
+        // arrivals, prompts spanning several pricing buckets, token
+        // budgets that retire members mid-run, and a queue deeper than
+        // the batch.
+        let run = |engine: crate::config::EngineKind| {
+            let mut s = server(3).with_policy(ServingPolicy::whole_prefill().with_engine(engine));
+            s.submit(Request::new(0, vec![1; 300], 40));
+            s.submit(Request::new(1, vec![2; 4], 700)); // crosses decode buckets
+            s.submit(Request::new(2, vec![3; 600], 12).at(1_000));
+            s.submit(Request::new(3, vec![4; 32], 5).at(50_000_000_000));
+            for id in 4..10 {
+                s.submit(Request::new(id, vec![id as u32; 16], 9));
+            }
+            s.run_to_completion().unwrap()
+        };
+        let cal = run(crate::config::EngineKind::Calendar);
+        let ora = run(crate::config::EngineKind::Oracle);
+        assert_reports_identical(&cal, &ora);
+    }
+
+    #[test]
+    fn calendar_matches_oracle_under_chunking_and_preemption() {
+        use crate::coordinator::scheduler::EdfScheduler;
+        let run = |policy: ServingPolicy, deadline: u64| {
+            let mut s = Server::with_scheduler(
+                SyntheticEngine::new(64, 128),
+                RacamSystem::new(&racam_paper()),
+                tiny_spec(),
+                2,
+                EdfScheduler::new(),
+            );
+            s.set_policy(policy);
+            s.submit(Request::new(0, vec![1; 900], 30).with_deadline(u64::MAX));
+            s.submit(Request::new(1, vec![2; 64], 200).with_deadline(deadline));
+            s.submit(Request::new(2, vec![3; 16], 6).at(10_000));
+            s.run_to_completion().unwrap()
+        };
+        // Probe (no preemption) to place request 1's deadline squarely
+        // between its first token and its completion: in the preempting
+        // runs the timeline is identical up to the shed, so the EDF shed
+        // is guaranteed to fire *mid-stretch*, and both engines must fire
+        // it at the same simulated iteration.
+        let probe = run(ServingPolicy::chunked(128), u64::MAX);
+        let r1 = probe.results.iter().find(|r| r.id == 1).unwrap();
+        let mid = ((r1.sim_first_token_at_ns + r1.sim_finish_at_ns) / 2.0) as u64;
+        let base = ServingPolicy::chunked(128).with_preemption();
+        let cal = run(base, mid);
+        let ora = run(base.oracle(), mid);
+        assert_reports_identical(&cal, &ora);
+        assert_eq!(cal.shards[0].shed, 1, "the dead request must be shed mid-stretch");
+        let shed = cal.results.iter().find(|r| r.id == 1).unwrap();
+        assert!(shed.shed);
+        assert!(
+            !shed.tokens.is_empty() && shed.tokens.len() < 200,
+            "shed mid-decode: got {} tokens",
+            shed.tokens.len()
+        );
+    }
+
+    #[test]
+    fn calendar_prices_the_same_buckets_as_the_oracle() {
+        // The precomputed bucket schedule must not change what gets
+        // priced: same decode-cache population, same mapping-service
+        // miss/hit counters.
+        let run = |engine: crate::config::EngineKind| {
+            let mut s = server(2).with_policy(ServingPolicy::whole_prefill().with_engine(engine));
+            s.submit(Request::new(0, vec![1; 100], 400)); // crosses bucket edges
+            s.submit(Request::new(1, vec![2; 300], 8));
+            let rep = s.run_to_completion().unwrap();
+            (rep, s.decode_cache_len(), s.racam().service().misses(), s.racam().service().hits())
+        };
+        let (cal, cal_buckets, cal_misses, cal_hits) = run(crate::config::EngineKind::Calendar);
+        let (ora, ora_buckets, ora_misses, ora_hits) = run(crate::config::EngineKind::Oracle);
+        assert_reports_identical(&cal, &ora);
+        assert_eq!(cal_buckets, ora_buckets, "same decode buckets priced");
+        assert_eq!(cal_misses, ora_misses, "same unique kernel shapes searched");
+        assert_eq!(cal_hits, ora_hits, "same cache-served pricing requests");
+    }
+
+    #[test]
+    fn withholding_scheduler_is_detected_by_the_calendar_engine_too() {
+        let mut s = Server::with_scheduler(
+            SyntheticEngine::new(64, 128),
+            RacamSystem::new(&racam_paper()),
+            tiny_spec(),
+            2,
+            WithholdingScheduler { queue: Vec::new() },
+        );
+        s.submit(Request::new(0, vec![1, 2], 4));
+        let err = s.run_to_completion().unwrap_err().to_string();
+        assert!(err.contains("withheld 1 queued request(s)"), "unexpected error: {err}");
     }
 
     #[test]

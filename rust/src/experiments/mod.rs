@@ -14,6 +14,7 @@ mod fig15;
 mod fig16;
 mod fig17;
 mod prefill;
+mod scale;
 mod tables;
 mod traffic;
 
@@ -29,7 +30,7 @@ use std::time::Instant;
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
     "tab1", "tab4", "tab5", "ext-energy", "ext-reliability", "ext-trace", "traffic", "prefill",
-    "disagg",
+    "disagg", "scale",
 ];
 
 /// Run one experiment; returns its tables (already saved under `results/`,
@@ -56,6 +57,7 @@ pub fn run(id: &str) -> Result<Vec<Table>> {
         "traffic" => traffic::run()?,
         "prefill" => prefill::run()?,
         "disagg" => disagg::run()?,
+        "scale" => scale::run()?,
         other => anyhow::bail!("unknown experiment '{other}' (known: {ALL_IDS:?})"),
     };
     let wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
@@ -105,6 +107,7 @@ fn extra_bench_config(id: &str) -> Vec<(&'static str, Value)> {
         "traffic" => traffic::bench_config(),
         "prefill" => prefill::bench_config(),
         "disagg" => disagg::bench_config(),
+        "scale" => scale::bench_config(),
         _ => Vec::new(),
     }
 }
@@ -132,9 +135,42 @@ mod tests {
     }
 
     #[test]
+    fn bench_schema_manifest_matches_what_bench_json_emits() {
+        // The committed bench_schema.json names the fields `benchcheck`
+        // guards in CI; every non-table field it lists must actually be
+        // produced by `bench_json` for that experiment (tables need a
+        // real run, which CI performs before the check).
+        use crate::config::json::{self, Value};
+        use crate::report::schema::schema_of;
+        use std::collections::BTreeSet;
+        let manifest = json::parse(include_str!("../../bench_schema.json")).unwrap();
+        let Value::Obj(exps) = manifest.get("experiments").unwrap() else {
+            panic!("experiments must be an object")
+        };
+        assert!(!exps.is_empty());
+        for (id, fields) in exps {
+            let Value::Arr(fields) = fields else { panic!("{id}: fields must be an array") };
+            let emitted = super::bench_json(id, &[], 1.0);
+            let actual: BTreeSet<String> =
+                schema_of(&json::parse(&emitted).unwrap()).into_iter().collect();
+            for f in fields {
+                let f = f.as_str().unwrap();
+                if f.starts_with("column:") || f.starts_with("tables") {
+                    continue; // needs real tables; CI checks after a run
+                }
+                assert!(
+                    actual.contains(f),
+                    "{id}: manifest field '{f}' is not produced by bench_json \
+                     (emitted: {actual:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn serving_bench_json_names_schedulers_and_rates() {
         use crate::config::json::{self, Value};
-        for id in ["traffic", "prefill", "disagg"] {
+        for id in ["traffic", "prefill", "disagg", "scale"] {
             let s = super::bench_json(id, &[], 1.0);
             let v = json::parse(&s).unwrap();
             let cfg = v.get("config").unwrap();

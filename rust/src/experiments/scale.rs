@@ -1,0 +1,235 @@
+//! `exp scale` — the serving engine's own hot path under heavy traffic:
+//! 10k- and 100k-request Poisson streams driven through every scheduler on
+//! both serving-loop implementations (the per-iteration oracle and the
+//! event-calendar engine with decode fast-forward), timing **engine wall
+//! time** and **steps/second** — the scheduler-step throughput vLLM-style
+//! continuous-batching engines treat as a first-class metric.
+//!
+//! The token engine is [`NullEngine`] (zero-cost token emission), so the
+//! measurement isolates the serving loop itself: admission, arrival
+//! release, preemption scans, prefill selection, bucket pricing, retire
+//! scans.  Every cell's simulated results are asserted identical between
+//! the two engines before the timing is reported — a cell that diverges
+//! fails the experiment instead of publishing a wrong speedup.
+//!
+//! `results/BENCH_scale.json` starts the engine-wall-time trajectory: the
+//! headline column is the calendar engine's speedup over the oracle on
+//! the 100k-request stream (the acceptance floor is 5x).
+
+use crate::config::json::Value;
+use crate::config::{
+    gpt3_6_7b, racam_paper, ArrivalProcess, EngineKind, LengthDist, SchedulerKind, ServingPolicy,
+    TrafficSpec,
+};
+use crate::coordinator::{
+    EdfScheduler, FcfsBatcher, LengthBucketed, NullEngine, Request, Scheduler, Server,
+    ServerReport,
+};
+use crate::mapping::MappingService;
+use crate::report::Table;
+use crate::traffic::generate;
+use crate::workloads::RacamSystem;
+
+const SEED: u64 = 0x5CA1_AB1E;
+/// Stream sizes; the last one carries the headline speedup.
+const STREAMS: &[u64] = &[10_000, 100_000];
+/// Arrival rate, req/s — far past one shard's service capacity, so the
+/// batch stays saturated and the run measures steady-state stepping.
+const RATE_PER_S: f64 = 20_000.0;
+const MAX_BATCH: usize = 32;
+/// Admission policies compared (the roster `bench_config()` reports).
+const SCHEDULERS: &[&str] = &["fcfs", "bucketed", "edf"];
+/// Loose 2 s end-to-end deadline: EDF has deadlines to order and shed by
+/// without the run degenerating into shedding everything.
+const DEADLINE_NS: u64 = 2_000_000_000;
+
+pub(crate) fn bench_config() -> Vec<(&'static str, Value)> {
+    vec![
+        (
+            "schedulers",
+            Value::Arr(SCHEDULERS.iter().map(|s| Value::Str(s.to_string())).collect()),
+        ),
+        ("rates_per_s", Value::Arr(vec![Value::Num(RATE_PER_S)])),
+        ("requests", Value::Arr(STREAMS.iter().map(|n| Value::Num(*n as f64)).collect())),
+        (
+            "engines",
+            Value::Arr(vec![Value::Str("oracle".into()), Value::Str("calendar".into())]),
+        ),
+        ("max_batch", Value::Num(MAX_BATCH as f64)),
+    ]
+}
+
+fn stream_spec(requests: u64) -> TrafficSpec {
+    TrafficSpec {
+        seed: SEED,
+        requests,
+        arrival: ArrivalProcess::Poisson { rate_per_s: RATE_PER_S },
+        // A few prompt buckets; decode lengths long enough that lockstep
+        // stretches dominate (the hot path the calendar engine attacks).
+        prompt: LengthDist::Uniform { lo: 16, hi: 512 },
+        output: LengthDist::Uniform { lo: 32, hi: 192 },
+        deadline_ns: Some(DEADLINE_NS),
+    }
+}
+
+fn scheduler_for(kind: SchedulerKind) -> Box<dyn Scheduler> {
+    match kind {
+        SchedulerKind::Fcfs => Box::new(FcfsBatcher::new(MAX_BATCH)),
+        SchedulerKind::Bucketed => Box::new(LengthBucketed::new()),
+        SchedulerKind::Edf => Box::new(EdfScheduler::new()),
+    }
+}
+
+fn policy_for(kind: SchedulerKind, engine: EngineKind) -> ServingPolicy {
+    // EDF runs with its deadline-shedding preemption on, which also
+    // exercises the fast-forward preemption-horizon path at scale.
+    let base = match kind {
+        SchedulerKind::Edf => ServingPolicy::whole_prefill().with_preemption(),
+        _ => ServingPolicy::whole_prefill(),
+    };
+    base.with_engine(engine)
+}
+
+/// One (stream, scheduler, engine) cell on a single shard.  A single
+/// shard keeps the wall measurement free of thread-scheduling noise; the
+/// shared service keeps kernel pricing amortized across every cell.
+fn run_cell(
+    service: &MappingService,
+    requests: u64,
+    kind: SchedulerKind,
+    engine: EngineKind,
+) -> crate::Result<ServerReport> {
+    let mut server = Server::with_scheduler(
+        NullEngine,
+        RacamSystem::with_service(service.clone()),
+        gpt3_6_7b(),
+        MAX_BATCH,
+        scheduler_for(kind),
+    );
+    server.set_policy(policy_for(kind, engine));
+    for req in generate(&stream_spec(requests)) {
+        server.submit(req);
+    }
+    server.run_to_completion()
+}
+
+/// Fail loudly if the two engines' simulated results differ anywhere —
+/// the speedup below is only meaningful for bit-identical serving.  The
+/// field coverage is [`ServerReport::sim_divergence`], shared with the
+/// unit and integration equivalence gates.
+fn assert_equivalent(cell: &str, cal: &ServerReport, ora: &ServerReport) -> crate::Result<()> {
+    if let Some(d) = cal.sim_divergence(ora) {
+        anyhow::bail!("{cell}: engines diverged: {d}");
+    }
+    Ok(())
+}
+
+/// Pre-price every prompt/context bucket the streams can touch — prompt
+/// buckets for 16..=512-token prompts, decode buckets up to ctx 512+192 —
+/// so the timed cells measure the engine loop, not the one-time mapping
+/// searches the first cell would otherwise absorb into its wall time
+/// (both engines share the warm `MappingService` equally afterwards).
+fn warm_pricing(service: &MappingService) -> crate::Result<()> {
+    let mut server = Server::with_scheduler(
+        NullEngine,
+        RacamSystem::with_service(service.clone()),
+        gpt3_6_7b(),
+        MAX_BATCH,
+        scheduler_for(SchedulerKind::Fcfs),
+    );
+    server.submit(Request::new(0, vec![1; 16], 240)); // bucket 256, ctx ≤ 256
+    server.submit(Request::new(1, vec![1; 300], 240)); // bucket 512, ctx ≤ 540
+    server.submit(Request::new(2, vec![1; 512], 192)); // bucket 512, ctx ≤ 704
+    server.run_to_completion()?;
+    Ok(())
+}
+
+fn row(label: &str, rep: &ServerReport, speedup: Option<f64>) -> Vec<String> {
+    let s = &rep.shards[0];
+    let steps = s.prefill_chunks + s.decode_iterations;
+    let wall_ms = s.wall_ns / 1e6;
+    let ksteps_per_s = steps as f64 / (s.wall_ns / 1e9).max(f64::MIN_POSITIVE) / 1e3;
+    vec![
+        label.to_string(),
+        rep.results.len().to_string(),
+        rep.total_tokens.to_string(),
+        steps.to_string(),
+        format!("{wall_ms:.1}"),
+        format!("{ksteps_per_s:.0}"),
+        format!("{:.0}", rep.wall_tokens_per_s / 1e3),
+        match speedup {
+            Some(x) => format!("{x:.2}x"),
+            None => "1.00x".into(),
+        },
+    ]
+}
+
+pub fn run() -> crate::Result<Vec<Table>> {
+    let service = MappingService::for_config(&racam_paper());
+    warm_pricing(&service)?;
+    let mut t = Table::new(
+        &format!(
+            "Scale — engine wall time, 1 shard x batch {MAX_BATCH}, Poisson {RATE_PER_S}/s, \
+             null token engine (scheduler-step hot path)"
+        ),
+        &["run", "reqs", "tokens", "steps", "wall_ms", "ksteps/s", "ktok/s_wall", "speedup"],
+    );
+    let mut headline: Option<f64> = None;
+    for &requests in STREAMS {
+        for &sched in SCHEDULERS {
+            let kind = SchedulerKind::from_label(sched)
+                .ok_or_else(|| anyhow::anyhow!("no scheduler kind named '{sched}'"))?;
+            let cell = format!("{sched}@{requests}");
+            let ora = run_cell(&service, requests, kind, EngineKind::Oracle)?;
+            let cal = run_cell(&service, requests, kind, EngineKind::Calendar)?;
+            assert_equivalent(&cell, &cal, &ora)?;
+            let speedup = ora.shards[0].wall_ns / cal.shards[0].wall_ns.max(1.0);
+            t.row(row(&format!("{cell}/oracle"), &ora, None));
+            t.row(row(&format!("{cell}/calendar"), &cal, Some(speedup)));
+            if requests == *STREAMS.last().expect("non-empty") {
+                headline = Some(headline.map_or(speedup, |h: f64| h.min(speedup)));
+            }
+        }
+    }
+    let mut h = Table::new(
+        "Scale — headline: calendar-engine speedup on the 100k-request stream (min over schedulers)",
+        &["metric", "value"],
+    );
+    h.row(vec![
+        "calendar_speedup_100k_min".into(),
+        format!("{:.2}x", headline.unwrap_or(0.0)),
+    ]);
+    Ok(vec![t, h])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_cells_agree_across_engines_and_schedulers() {
+        // A miniature version of every cell: equivalence must hold for
+        // all three schedulers (including EDF's preemption path).
+        let service = MappingService::for_config(&racam_paper());
+        for sched in SCHEDULERS {
+            let kind = SchedulerKind::from_label(sched).unwrap();
+            let ora = run_cell(&service, 120, kind, EngineKind::Oracle).unwrap();
+            let cal = run_cell(&service, 120, kind, EngineKind::Calendar).unwrap();
+            assert_equivalent(sched, &cal, &ora).unwrap();
+            assert_eq!(ora.results.len(), 120);
+            assert!(ora.total_tokens > 0);
+        }
+    }
+
+    #[test]
+    fn table_rows_cover_every_cell() {
+        let rep = {
+            let service = MappingService::for_config(&racam_paper());
+            run_cell(&service, 40, SchedulerKind::Fcfs, EngineKind::Calendar).unwrap()
+        };
+        let r = row("fcfs@40/calendar", &rep, Some(7.5));
+        assert_eq!(r.len(), 8);
+        assert_eq!(r[1], "40");
+        assert_eq!(r[7], "7.50x");
+    }
+}

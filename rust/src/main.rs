@@ -54,12 +54,12 @@ fn print_help() {
          \x20 racam llm <gpt3-6.7b|gpt3-175b|llama3-8b|llama3-70b> [--stage prefill|decode|e2e] [--scenario code|ctx]\n\
          \x20 racam area\n\
          \x20 racam config [--dump FILE | --load FILE]\n\
-         \x20 racam experiments <fig1|fig9|...|ext-trace|traffic|all>\n\
+         \x20 racam experiments <fig1|fig9|...|ext-trace|traffic|prefill|disagg|scale|all>\n\
          \x20 racam serve [--requests N] [--tokens N] [--batch N] [--shards N] [--synthetic]\n\
          \x20             [--mapping-cache FILE] [--sched fcfs|bucket|edf] [--rate R]\n\
          \x20             [--deadline-ms MS] [--traffic SPEC.json | --trace TRACE.json]\n\
          \x20             [--chunk-tokens N] [--preempt] [--serving POLICY.json]\n\
-         \x20             [--cluster CLUSTER.json]\n\
+         \x20             [--engine calendar|oracle] [--cluster CLUSTER.json]\n\
          \n\
          serve traffic modes: --rate R replays a Poisson stream at R req/s on the\n\
          simulated clock (add --deadline-ms for an e2e SLO); --traffic loads a\n\
@@ -69,7 +69,10 @@ fn print_help() {
          serving policy: --chunk-tokens N bounds each prefill step to N prompt\n\
          tokens (chunked prefill; unset = whole-prompt, the paper schedule);\n\
          --preempt lets deadline-aware schedulers (edf) shed past-deadline work;\n\
-         --serving loads a ServingPolicy JSON instead of the two flags.\n\
+         --serving loads a ServingPolicy JSON instead of the two flags;\n\
+         --engine picks the serving-loop implementation (calendar = the\n\
+         fast-forwarding event-calendar engine, the default; oracle = the\n\
+         per-iteration reference — bit-identical simulated results).\n\
          \n\
          cluster: --cluster loads a ClusterSpec JSON declaring shard groups\n\
          (count, role unified|prefill|decode, scheduler, policy, channel share,\n\
@@ -93,8 +96,10 @@ fn cmd_map(args: Vec<String>) -> Result<()> {
     let shape = MatmulShape::new(pos[0], pos[1], pos[2], prec);
 
     let engine = MappingEngine::new(HwModel::new(&racam_paper()));
+    // Exhaustive on purpose: `racam map` reports the whole-space spread,
+    // which the pruned serving search intentionally skips.
     let r = engine
-        .search(&shape)
+        .search_exhaustive(&shape)
         .ok_or_else(|| anyhow::anyhow!("no candidate mapping evaluates for {}", shape.label()))?;
     println!("shape       : {} ({})", shape.label(), prec.label());
     println!("candidates  : {}", r.candidates);
@@ -187,7 +192,8 @@ fn cmd_config(args: Vec<String>) -> Result<()> {
 
 fn cmd_serve(args: Vec<String>) -> Result<()> {
     use racam::config::{
-        ArrivalProcess, ClusterSpec, LengthDist, SchedulerKind, ServingPolicy, TrafficSpec,
+        ArrivalProcess, ClusterSpec, EngineKind, LengthDist, SchedulerKind, ServingPolicy,
+        TrafficSpec,
     };
     use racam::coordinator::{
         ClusterBuilder, ClusterCoordinator, Request, SyntheticEngine, TokenEngine,
@@ -201,6 +207,13 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     let synthetic = args.iter().any(|a| a == "--synthetic");
     let sched = flag_value(&args, "--sched").unwrap_or_else(|| "fcfs".into());
     let rate: Option<f64> = flag_value(&args, "--rate").map(|v| v.parse()).transpose()?;
+    let engine_flag: Option<EngineKind> = match flag_value(&args, "--engine") {
+        Some(e) => Some(
+            EngineKind::from_label(&e)
+                .ok_or_else(|| anyhow::anyhow!("unknown engine '{e}' (calendar|oracle)"))?,
+        ),
+        None => None,
+    };
     anyhow::ensure!(shards >= 1, "--shards must be at least 1");
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
 
@@ -209,7 +222,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     // disaggregation entry point), or a single unified group synthesized
     // from the legacy flags.
     let cluster = if let Some(path) = flag_value(&args, "--cluster") {
-        for flag in ["--shards", "--batch", "--sched", "--chunk-tokens", "--serving"] {
+        for flag in ["--shards", "--batch", "--sched", "--chunk-tokens", "--serving", "--engine"] {
             anyhow::ensure!(
                 flag_value(&args, flag).is_none(),
                 "--cluster replaces {flag}; put the setting in the cluster JSON"
@@ -229,13 +242,18 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                     && !args.iter().any(|a| a == "--preempt"),
                 "--serving replaces --chunk-tokens/--preempt; pass one or the other"
             );
-            ServingPolicy::from_json(&std::fs::read_to_string(&path)?)?
+            let p = ServingPolicy::from_json(&std::fs::read_to_string(&path)?)?;
+            match engine_flag {
+                Some(e) => p.with_engine(e),
+                None => p,
+            }
         } else {
             let chunk: Option<u64> =
                 flag_value(&args, "--chunk-tokens").map(|v| v.parse()).transpose()?;
             let p = ServingPolicy {
                 prefill_chunk_tokens: chunk,
                 preempt: args.iter().any(|a| a == "--preempt"),
+                engine: engine_flag.unwrap_or_default(),
             };
             p.validate().map_err(|e| anyhow::anyhow!("invalid serving policy: {e}"))?;
             p

@@ -19,8 +19,10 @@
 //! software + hardware models (§4.4), and returns the latency-optimal one.
 //!
 //! Search and caching live in [`MappingService`]: a shared, thread-safe
-//! pricing service with a parallelized exhaustive search (bit-identical to
-//! the serial reference) and a concurrent once-per-shape cache, so every
+//! pricing service with a parallelized, *bound-pruned* search (candidates
+//! whose analytic compute-only [`lower_bound`] already reaches the
+//! incumbent are skipped; the winner stays bit-identical to the serial
+//! exhaustive reference) and a concurrent once-per-shape cache, so every
 //! serving shard, baseline comparison and experiment amortizes the same
 //! table.  [`store`] persists that table across runs (§7 warm start).
 
@@ -33,6 +35,6 @@ pub mod store;
 
 pub use engine::MappingEngine;
 pub use model_hw::{HwModel, PassCosts};
-pub use model_sw::{evaluate, Evaluation, LevelUsage};
+pub use model_sw::{evaluate, lower_bound, Evaluation, LevelUsage};
 pub use service::{MappingService, SearchResult};
 pub use space::{enumerate_mappings, BlockMapping, Dim, DimSet, HierMapping, Level, Mapping, LEVELS};

@@ -110,12 +110,26 @@ pub fn evaluate(shape: &MatmulShape, mapping: &Mapping, hw: &HwModel) -> Option<
     best
 }
 
-fn evaluate_with_counts(
+/// The compute side of one mapping at explicit level counts: hierarchical
+/// tiling (§4.1) + the block compute model (§4.2).  Shared by the full
+/// evaluation and the search's pruning lower bound, so the two can never
+/// drift apart.
+struct ComputeSide {
+    tile: (u64, u64, u64),
+    usage: LevelUsage,
+    banks_used: u64,
+    blocks_per_bank_used: u64,
+    block_passes: f64,
+    compute_ns: f64,
+    k_on_cols: bool,
+}
+
+fn compute_side(
     shape: &MatmulShape,
     mapping: &Mapping,
     hw: &HwModel,
     counts: [u64; 5],
-) -> Option<Evaluation> {
+) -> Option<ComputeSide> {
     if shape.m == 0 || shape.k == 0 || shape.n == 0 {
         return None;
     }
@@ -162,21 +176,20 @@ fn evaluate_with_counts(
     let costs = hw.pass_costs(shape.prec);
     let k_on_cols = mapping.block.k_on_cols();
 
-    let (block_passes, block_ns, _col_occupancy) = if k_on_cols {
+    let (block_passes, block_ns) = if k_on_cols {
         // Fused multiply + popcount column reduction: one output tuple per
         // pass, K chunked by the PE width; chunks fold together through
         // pim_add_parallel.
         let chunks = tile_k.div_ceil(w);
         let out_tuples = tile_m * tile_n;
         let passes = out_tuples as f64 * chunks as f64;
-        let occupancy = tile_k as f64 / (chunks * w) as f64;
         if f.popcount_reduction {
             // Successive K-chunks of one output keep accumulating in the
             // reduction unit's register, so the drain + horizontal
             // writeback is paid once per output, not per pass.
             let drain = costs.mulred_ns - costs.mul_ns;
             let ns = passes * costs.mul_ns + out_tuples as f64 * drain;
-            (passes, ns, occupancy)
+            (passes, ns)
         } else {
             // No PR unit: cross-column reduction falls back to log₂(width)
             // SIMDRAM-style shifted bit-serial adds in the array — the
@@ -184,7 +197,7 @@ fn evaluate_with_counts(
             // reduction out of the dedicated unit.
             let tree = (w.min(tile_k).max(2) as f64).log2().ceil();
             let ns = passes * costs.mul_ns + out_tuples as f64 * tree * costs.add_ns;
-            (passes, ns, occupancy)
+            (passes, ns)
         }
     } else {
         // K along rows: per-column accumulation via pim_mul + pim_add; the
@@ -212,11 +225,63 @@ fn evaluate_with_counts(
         let col_chunks = out_cols.div_ceil(w);
         let passes = tile_k as f64 * col_chunks as f64 * row_out as f64;
         let ns = passes * (costs.mul_ns + costs.add_ns);
-        (passes, ns, out_cols as f64 / (col_chunks * w) as f64)
+        (passes, ns)
     };
 
     // Blocks within a bank share its PE array → serialize (§3.3).
     let compute_ns = block_ns * blocks_per_bank_used as f64 + KERNEL_OVERHEAD_NS;
+
+    Some(ComputeSide {
+        tile: (tile_m, tile_k, tile_n),
+        usage,
+        banks_used,
+        blocks_per_bank_used,
+        block_passes,
+        compute_ns,
+        k_on_cols,
+    })
+}
+
+/// A cheap analytic **lower bound** on the total latency any
+/// [`evaluate`] of this mapping can return: the §4.2 block compute cost
+/// at the *full* level counts, with all I/O dropped.
+///
+/// Validity: (a) the total is compute + I/O, and I/O is non-negative;
+/// (b) under the rank-replication sweep of [`evaluate`], growing the rank
+/// count only shrinks tile sizes (`div_ceil` is non-increasing in its
+/// divisor) and shifts work to parallel units, so the compute cost at the
+/// full rank count — which the sweep always includes as its final point —
+/// is the smallest compute cost of any sweep point.  The bound is
+/// therefore `<=` every candidate total, so the search can prune a
+/// candidate whose bound already reaches the incumbent under strict-`<`
+/// tie-breaking without ever changing the winner (pinned by the
+/// `lower_bound_never_exceeds_evaluation` oracle test).
+///
+/// Returns `None` exactly when [`evaluate`] does (degenerate shapes).
+pub fn lower_bound(shape: &MatmulShape, mapping: &Mapping, hw: &HwModel) -> Option<f64> {
+    compute_side(shape, mapping, hw, hw.level_counts()).map(|c| c.compute_ns)
+}
+
+fn evaluate_with_counts(
+    shape: &MatmulShape,
+    mapping: &Mapping,
+    hw: &HwModel,
+    counts: [u64; 5],
+) -> Option<Evaluation> {
+    let ComputeSide {
+        tile: (tile_m, tile_k, tile_n),
+        usage,
+        banks_used,
+        blocks_per_bank_used,
+        block_passes,
+        compute_ns,
+        k_on_cols,
+    } = compute_side(shape, mapping, hw, counts)?;
+    let assign = mapping.hier.assign;
+    let f = hw.features();
+    let used = usage.used;
+    let w = hw.block_width();
+    let costs = hw.pass_costs(shape.prec);
     let total_passes = block_passes * blocks_per_bank_used as f64 * banks_used as f64;
     let row_accesses = total_passes * costs.mul_row_accesses as f64;
 
@@ -442,5 +507,67 @@ mod tests {
         let s = MatmulShape::new(0, 4, 4, Precision::Int8);
         let m = enumerate_mappings(&MatmulShape::new(1, 4, 4, Precision::Int8))[0];
         assert!(evaluate(&s, &m, &hw()).is_none());
+        assert!(lower_bound(&s, &m, &hw()).is_none());
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_evaluation() {
+        // The pruning oracle: for every mapping of a diverse set of shapes
+        // (GEMM, GEMV, odd sizes, dynamic weights, low precision, ablated
+        // hardware), the analytic bound must sit at or below the full
+        // evaluation — otherwise pruning could discard the true winner.
+        let mut shapes = vec![
+            MatmulShape::new(1024, 12288, 12288, Precision::Int8),
+            MatmulShape::new(1, 2048, 2048, Precision::Int8),
+            MatmulShape::new(7, 130, 514, Precision::Int8),
+            MatmulShape::new(256, 1024, 512, Precision::Int4),
+            MatmulShape::new(3, 65, 1, Precision::Int8),
+        ];
+        let mut dynamic = MatmulShape::new(64, 4096, 64, Precision::Int8);
+        dynamic.weight_static = false;
+        shapes.push(dynamic);
+        let hw_full = hw();
+        let hw_nopr =
+            hw_full.with_features(Features { popcount_reduction: false, ..Features::ALL });
+        for hw in [&hw_full, &hw_nopr] {
+            for s in &shapes {
+                for m in enumerate_mappings(s) {
+                    let (Some(bound), Some(eval)) =
+                        (lower_bound(s, &m, hw), evaluate(s, &m, hw))
+                    else {
+                        panic!("{}: bound/eval disagree on evaluability ({})", s.label(), m)
+                    };
+                    // 1e-12 *relative*: three orders of magnitude tighter
+                    // than the search's PRUNE_SLACK margin, so the slack
+                    // provably covers any float wobble this oracle allows.
+                    assert!(
+                        bound <= eval.total_ns() * (1.0 + 1e-12),
+                        "{} {}: bound {bound} exceeds total {}",
+                        s.label(),
+                        m,
+                        eval.total_ns()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lower_bound_is_tight_without_io() {
+        // For a mapping with no rank sweep and no I/O (static weights,
+        // fully reduced in-DRAM), the bound equals the compute share of
+        // the evaluation exactly.
+        let s = MatmulShape::new(512, 4096, 4096, Precision::Int8);
+        let hw = hw();
+        for m in enumerate_mappings(&s) {
+            let bound = lower_bound(&s, &m, &hw).unwrap();
+            let eval = evaluate(&s, &m, &hw).unwrap();
+            assert!(bound <= eval.total_ns() * (1.0 + 1e-12), "{m}");
+            let rank_dim = m.hier.assign[1];
+            if rank_dim != Dim::N && !(rank_dim == Dim::M && !s.weight_static) {
+                // No sweep: the bound is exactly the compute term.
+                assert_eq!(bound.to_bits(), eval.compute_ns.to_bits(), "{m}");
+            }
+        }
     }
 }

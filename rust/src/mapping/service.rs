@@ -6,16 +6,25 @@
 //! all price against the same table, so each kernel shape is searched
 //! exactly once system-wide (the paper's §7 amortization, made global).
 //!
-//! Two search paths are exposed:
+//! The search paths exposed:
 //!
-//! * [`MappingService::search_serial`] — the single-threaded reference
-//!   walk over the enumerated space (first strictly-lower-latency
-//!   candidate wins, i.e. the earliest candidate among latency ties);
-//! * [`MappingService::search`] — a parallelized evaluation that chunks
-//!   the candidate list across worker threads and reduces the per-chunk
-//!   winners **in chunk order with a strict `<`**, which reproduces the
-//!   serial tie-breaking bit-for-bit: the winner is always the
-//!   lowest-enumeration-index candidate of minimal latency.
+//! * [`MappingService::search_serial`] — the single-threaded exhaustive
+//!   reference walk over the enumerated space (first strictly-lower-
+//!   latency candidate wins, i.e. the earliest candidate among latency
+//!   ties);
+//! * [`MappingService::search`] — the parallel **pruned** search (the
+//!   serving default): workers chunk the candidate list, skip candidates
+//!   whose analytic lower bound ([`super::model_sw::lower_bound`] — the
+//!   compute cost with I/O dropped) already reaches their incumbent, and
+//!   reduce the per-chunk winners **in chunk order with a strict `<`**.
+//!   A pruned candidate can never beat the incumbent under strict `<`,
+//!   so the winner is bit-for-bit the serial reference's; the skipped
+//!   count is reported as [`SearchResult::pruned`];
+//! * [`MappingService::search_exhaustive`] — the parallel search without
+//!   pruning (identical `candidates`/`worst_ns` to the serial reference;
+//!   use it when the whole-space spread is the result, as in Fig. 15);
+//! * [`MappingService::search_serial_pruned`] — the single-threaded
+//!   pruned walk, the oracle for the pruned parallel path.
 //!
 //! Concurrent [`MappingService::search_cached`] calls for the same shape
 //! coalesce on a per-shape once-cell: the first caller runs the search,
@@ -24,7 +33,7 @@
 //! exactly 1 no matter how many shards ask.
 
 use super::model_hw::HwModel;
-use super::model_sw::{evaluate, Evaluation};
+use super::model_sw::{evaluate, lower_bound, Evaluation};
 use super::space::enumerate_mappings;
 use crate::config::{HwConfig, MatmulShape};
 use std::collections::hash_map::Entry;
@@ -38,22 +47,47 @@ use std::sync::{Arc, Mutex, OnceLock};
 pub struct SearchResult {
     /// The latency-optimal mapping's evaluation.
     pub best: Evaluation,
-    /// Candidates examined.
+    /// Candidates fully evaluated.
     pub candidates: usize,
-    /// Worst candidate latency (for the Fig. 15 spread).
+    /// Candidates skipped because their analytic lower bound
+    /// ([`super::model_sw::lower_bound`]) already reached the incumbent —
+    /// they could not win under strict-`<` tie-breaking, so the winner is
+    /// unchanged.  Zero for exhaustive searches.
+    pub pruned: usize,
+    /// Worst *evaluated* candidate latency (for the Fig. 15 spread).  A
+    /// pruned search skips exactly the high-latency candidates, so use an
+    /// exhaustive search when the spread itself is the result.
     pub worst_ns: f64,
 }
 
 impl SearchResult {
     /// Max-to-min latency ratio across the space (Fig. 15 reports 510.85×).
+    /// Meaningful on exhaustive results; a pruned search under-reports it.
     pub fn spread(&self) -> f64 {
         self.worst_ns / self.best.total_ns()
+    }
+
+    /// Candidates the search looked at, evaluated or pruned (the full
+    /// enumerated space minus degenerate candidates).
+    pub fn examined(&self) -> usize {
+        self.candidates + self.pruned
     }
 }
 
 /// Minimum candidates per worker before the parallel search pays for the
 /// thread spawns; below this the serial path is used.
 const MIN_CANDIDATES_PER_WORKER: usize = 48;
+
+/// Relative slack applied to the incumbent before pruning on the analytic
+/// lower bound: a candidate is skipped only when `bound >= incumbent *
+/// PRUNE_SLACK`.  The bound's validity argument is real-valued; its float
+/// evaluation runs through a different expression tree than the full
+/// sweep, so the slack absorbs any ulp-level non-monotonicity — the
+/// `lower_bound_never_exceeds_evaluation` oracle pins the bound within
+/// 1e-12 relative, three orders of magnitude inside this margin, so a
+/// candidate that could still beat the incumbent under strict `<` is
+/// never pruned.
+const PRUNE_SLACK: f64 = 1.0 + 1e-9;
 
 /// Searches currently running across all services in the process.  Worker
 /// counts divide by this so N shards cold-searching distinct shapes share
@@ -81,6 +115,18 @@ struct Partial {
     best: Option<Evaluation>,
     worst_ns: f64,
     candidates: usize,
+    pruned: usize,
+}
+
+impl Partial {
+    fn into_result(self) -> Option<SearchResult> {
+        self.best.map(|best| SearchResult {
+            best,
+            candidates: self.candidates,
+            pruned: self.pruned,
+            worst_ns: self.worst_ns,
+        })
+    }
 }
 
 struct Shared {
@@ -138,21 +184,46 @@ impl MappingService {
         self.shared.cache.lock().expect("mapping cache poisoned").len()
     }
 
-    /// Serial reference search: first strictly-lower-latency candidate
-    /// wins.  Returns `None` when no candidate evaluates (degenerate
-    /// shapes with a zero-sized dimension).
+    /// Serial *exhaustive* reference search: first strictly-lower-latency
+    /// candidate wins.  Returns `None` when no candidate evaluates
+    /// (degenerate shapes with a zero-sized dimension).
     pub fn search_serial(&self, shape: &MatmulShape) -> Option<SearchResult> {
         let mappings = enumerate_mappings(shape);
-        let p = Self::scan_chunk(shape, &mappings, &self.shared.hw);
-        p.best.map(|best| SearchResult { best, candidates: p.candidates, worst_ns: p.worst_ns })
+        Self::scan_chunk(shape, &mappings, &self.shared.hw, false).into_result()
     }
 
-    /// Parallel exhaustive search.  The winner, `candidates`, and
-    /// `worst_ns` are bit-for-bit identical to [`Self::search_serial`]:
-    /// candidate chunks preserve enumeration order and the chunk-ordered
-    /// reduction keeps the earliest candidate among exact latency ties
-    /// (the result does not depend on the worker count).
+    /// Serial *pruned* search — the single-threaded oracle for the pruned
+    /// parallel path.  Winner bit-for-bit identical to
+    /// [`Self::search_serial`]; `candidates`/`pruned` report how much of
+    /// the space the bound skipped.
+    pub fn search_serial_pruned(&self, shape: &MatmulShape) -> Option<SearchResult> {
+        let mappings = enumerate_mappings(shape);
+        Self::scan_chunk(shape, &mappings, &self.shared.hw, true).into_result()
+    }
+
+    /// Parallel **pruned** search — the serving default.  Each worker
+    /// walks its enumeration-ordered chunk skipping candidates whose
+    /// analytic lower bound ([`super::model_sw::lower_bound`]) already
+    /// reaches the chunk's incumbent: such a candidate cannot win under
+    /// the strict-`<` rule, so the winner is bit-for-bit identical to the
+    /// serial exhaustive reference (the `candidates`/`worst_ns` counters
+    /// cover only evaluated candidates — see [`SearchResult::pruned`]).
     pub fn search(&self, shape: &MatmulShape) -> Option<SearchResult> {
+        self.search_with(shape, true)
+    }
+
+    /// Parallel **exhaustive** search: every candidate evaluated.  The
+    /// winner, `candidates`, and `worst_ns` are bit-for-bit identical to
+    /// [`Self::search_serial`] — candidate chunks preserve enumeration
+    /// order and the chunk-ordered reduction keeps the earliest candidate
+    /// among exact latency ties (independent of the worker count).  Use
+    /// this when the spread across the whole space is itself the result
+    /// (Fig. 15).
+    pub fn search_exhaustive(&self, shape: &MatmulShape) -> Option<SearchResult> {
+        self.search_with(shape, false)
+    }
+
+    fn search_with(&self, shape: &MatmulShape, prune: bool) -> Option<SearchResult> {
         let mappings = enumerate_mappings(shape);
         let (_slot, active) = SearchSlot::acquire();
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -161,10 +232,7 @@ impl MappingService {
         let fair_cores = (cores as u64 / active.max(1)).max(1) as usize;
         let workers = fair_cores.min(mappings.len() / MIN_CANDIDATES_PER_WORKER);
         if workers <= 1 {
-            let p = Self::scan_chunk(shape, &mappings, &self.shared.hw);
-            return p
-                .best
-                .map(|best| SearchResult { best, candidates: p.candidates, worst_ns: p.worst_ns });
+            return Self::scan_chunk(shape, &mappings, &self.shared.hw, prune).into_result();
         }
 
         let chunk_len = mappings.len().div_ceil(workers);
@@ -173,7 +241,7 @@ impl MappingService {
         std::thread::scope(|s| {
             let handles: Vec<_> = mappings
                 .chunks(chunk_len)
-                .map(|chunk| s.spawn(move || Self::scan_chunk(shape, chunk, hw)))
+                .map(|chunk| s.spawn(move || Self::scan_chunk(shape, chunk, hw, prune)))
                 .collect();
             for h in handles {
                 partials.push(h.join().expect("mapping-search worker panicked"));
@@ -185,8 +253,10 @@ impl MappingService {
         let mut best: Option<Evaluation> = None;
         let mut worst_ns = 0.0f64;
         let mut candidates = 0usize;
+        let mut pruned = 0usize;
         for p in partials {
             candidates += p.candidates;
+            pruned += p.pruned;
             worst_ns = worst_ns.max(p.worst_ns);
             if let Some(e) = p.best {
                 let better = match best.as_ref() {
@@ -198,20 +268,40 @@ impl MappingService {
                 }
             }
         }
-        best.map(|best| SearchResult { best, candidates, worst_ns })
+        best.map(|best| SearchResult { best, candidates, pruned, worst_ns })
     }
 
     /// Evaluate one ordered slice of candidates (shared by the serial path
     /// and every parallel worker, so both sides run the same comparisons).
+    /// With `prune` on, a candidate whose lower bound already reaches the
+    /// incumbent is skipped without a full evaluation — it cannot beat the
+    /// incumbent under strict `<`, so the chunk winner is unchanged.
     fn scan_chunk(
         shape: &MatmulShape,
         chunk: &[super::space::Mapping],
         hw: &HwModel,
+        prune: bool,
     ) -> Partial {
         let mut best: Option<Evaluation> = None;
         let mut worst_ns = 0.0f64;
         let mut candidates = 0usize;
+        let mut pruned = 0usize;
         for mapping in chunk {
+            if prune {
+                if let Some(b) = best.as_ref() {
+                    match lower_bound(shape, mapping, hw) {
+                        Some(bound) if bound >= b.total_ns() * PRUNE_SLACK => {
+                            pruned += 1;
+                            continue;
+                        }
+                        Some(_) => {}
+                        // Degenerate for the bound ⇒ degenerate for the
+                        // full evaluation too; fall through and let it
+                        // return `None` (not counted either way).
+                        None => {}
+                    }
+                }
+            }
             if let Some(eval) = evaluate(shape, mapping, hw) {
                 candidates += 1;
                 let t = eval.total_ns();
@@ -225,7 +315,7 @@ impl MappingService {
                 }
             }
         }
-        Partial { best, worst_ns, candidates }
+        Partial { best, worst_ns, candidates, pruned }
     }
 
     /// Search with shared memoization.  Concurrent calls for the same
@@ -316,41 +406,96 @@ mod tests {
     fn search_finds_a_best_mapping() {
         let s = service();
         let r = s.search(&gemm()).expect("GEMM always evaluates");
-        assert_eq!(r.candidates, 1458);
+        // Pruned search: every candidate is either evaluated or provably
+        // dominated; the split is reported.
+        assert_eq!(r.examined(), 1458);
+        assert!(r.pruned > 0, "the GEMM space must prune something");
+        assert!(r.candidates + r.pruned == 1458);
         assert!(r.best.total_ns() > 0.0);
-        assert!(r.spread() > 1.0);
+        // The whole-space spread needs the exhaustive path.
+        let ex = s.search_exhaustive(&gemm()).unwrap();
+        assert_eq!(ex.candidates, 1458);
+        assert_eq!(ex.pruned, 0);
+        assert!(ex.spread() > 1.0);
     }
 
     #[test]
     fn gemv_search_covers_192_candidates() {
         let s = service();
         let r = s.search(&gemv()).expect("GEMV always evaluates");
-        assert_eq!(r.candidates, 192);
+        assert_eq!(r.examined(), 192);
+        let ex = s.search_exhaustive(&gemv()).unwrap();
+        assert_eq!(ex.candidates, 192);
     }
 
     #[test]
-    fn parallel_matches_serial_on_gemm_space() {
-        // Acceptance: identical best mapping and total_ns on the
-        // 1458-candidate GEMM space — bit-for-bit.
+    fn exhaustive_parallel_matches_serial_on_gemm_space() {
+        // Acceptance: identical best mapping, counters and worst_ns on
+        // the 1458-candidate GEMM space — bit-for-bit.
         let s = service();
-        let par = s.search(&gemm()).unwrap();
+        let par = s.search_exhaustive(&gemm()).unwrap();
         let ser = s.search_serial(&gemm()).unwrap();
         assert_eq!(par.best.mapping, ser.best.mapping);
         assert_eq!(par.best.total_ns().to_bits(), ser.best.total_ns().to_bits());
         assert_eq!(par.candidates, ser.candidates);
+        assert_eq!(par.pruned, 0);
+        assert_eq!(ser.pruned, 0);
         assert_eq!(par.worst_ns.to_bits(), ser.worst_ns.to_bits());
     }
 
     #[test]
-    fn parallel_matches_serial_on_gemv_space() {
+    fn exhaustive_parallel_matches_serial_on_gemv_space() {
         // Acceptance: identical winner on the 192-candidate GEMV space.
         let s = service();
-        let par = s.search(&gemv()).unwrap();
+        let par = s.search_exhaustive(&gemv()).unwrap();
         let ser = s.search_serial(&gemv()).unwrap();
         assert_eq!(par.best.mapping, ser.best.mapping);
         assert_eq!(par.best.total_ns().to_bits(), ser.best.total_ns().to_bits());
         assert_eq!(par.candidates, 192);
         assert_eq!(ser.candidates, 192);
+    }
+
+    #[test]
+    fn pruned_search_keeps_the_exhaustive_winner_bit_for_bit() {
+        // The pruning acceptance: with the bound on (serial and parallel)
+        // or off, the winner is the same candidate with the same bits.
+        let s = service();
+        for shape in [
+            gemm(),
+            gemv(),
+            MatmulShape::new(7, 130, 514, Precision::Int8),
+            MatmulShape::new(256, 1024, 512, Precision::Int4),
+        ] {
+            let reference = s.search_serial(&shape).unwrap();
+            for pruned in [s.search(&shape).unwrap(), s.search_serial_pruned(&shape).unwrap()] {
+                assert_eq!(pruned.best.mapping, reference.best.mapping, "{}", shape.label());
+                assert_eq!(
+                    pruned.best.total_ns().to_bits(),
+                    reference.best.total_ns().to_bits(),
+                    "{}",
+                    shape.label()
+                );
+                assert_eq!(pruned.examined(), reference.candidates, "{}", shape.label());
+            }
+        }
+    }
+
+    #[test]
+    fn serial_pruning_skips_a_real_share_of_the_gemm_space() {
+        // The point of the bound: with the >100x compute spread of the
+        // GEMM space, a substantial share of candidates is provably
+        // dominated before their rank sweep and I/O model ever run.  (The
+        // serial walk carries one incumbent across the whole enumeration,
+        // so it prunes at least as much as any chunk of the parallel
+        // walk.)
+        let s = service();
+        let r = s.search_serial_pruned(&gemm()).unwrap();
+        assert!(
+            r.pruned * 10 > r.examined(),
+            "only {} of {} candidates pruned",
+            r.pruned,
+            r.examined()
+        );
     }
 
     #[test]

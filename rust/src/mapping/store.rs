@@ -84,6 +84,7 @@ pub fn export(service: &MappingService) -> Value {
                 ("shape", shape_to_value(shape)),
                 ("mapping", Value::Str(mapping_to_string(&r.best.mapping))),
                 ("candidates", Value::Num(r.candidates as f64)),
+                ("pruned", Value::Num(r.pruned as f64)),
                 ("worst_ns", Value::Num(r.worst_ns)),
             ])
         })
@@ -109,6 +110,8 @@ pub fn import(service: &MappingService, v: &Value) -> Result<usize> {
         let result = SearchResult {
             best: eval,
             candidates: e.get("candidates")?.as_f64()? as usize,
+            // Absent in tables written before pruning existed.
+            pruned: e.get("pruned").and_then(|p| p.as_f64()).map_or(0, |p| p as usize),
             worst_ns: e.get("worst_ns")?.as_f64()?,
         };
         service.cache_insert(shape, result);
@@ -164,6 +167,12 @@ mod tests {
         let b = service();
         let n = import(&b, &exported).unwrap();
         assert_eq!(n, shapes.len());
+        // Pruning accounting survives the round-trip.
+        for (shape, restored) in b.cache_entries() {
+            let fresh = a.search_cached(&shape).unwrap();
+            assert_eq!(restored.pruned, fresh.pruned, "{}", shape.label());
+            assert_eq!(restored.candidates, fresh.candidates, "{}", shape.label());
+        }
         for s in &shapes {
             let misses_before = b.misses();
             let from_cache = b.search_cached(s).unwrap();
@@ -188,6 +197,23 @@ mod tests {
         let b = service();
         assert_eq!(b.warm_start(&path).unwrap(), 1);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn imports_tables_written_before_pruning_existed() {
+        // A v1 entry without the "pruned" field (pre-pruning exports)
+        // still loads; the count defaults to 0.
+        let text = r#"{"version": 1, "entries": [{
+            "shape": {"m": 1, "k": 2048, "n": 2048, "bits": 8,
+                      "weight_static": true, "input_resident": true},
+            "mapping": "MNKMN|K",
+            "candidates": 192,
+            "worst_ns": 123.0}]}"#;
+        let s = service();
+        assert_eq!(import(&s, &json::parse(text).unwrap()).unwrap(), 1);
+        let (_, r) = s.cache_entries().pop().unwrap();
+        assert_eq!(r.pruned, 0);
+        assert_eq!(r.candidates, 192);
     }
 
     #[test]

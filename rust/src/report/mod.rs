@@ -4,6 +4,7 @@
 //! in this offline environment — see DESIGN.md "Substitutions").
 
 mod bench;
+pub mod schema;
 mod table;
 
 pub use bench::{bench, BenchResult};

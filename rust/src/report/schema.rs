@@ -1,0 +1,257 @@
+//! Bench-artifact schema regression checks.
+//!
+//! Every `exp` run writes a machine-readable `results/BENCH_<id>.json`
+//! that CI uploads so the perf trajectory diffs across PRs.  That
+//! trajectory is only diffable while the artifacts keep their fields: a
+//! refactor that silently drops a config entry or a table column breaks
+//! every downstream comparison without failing a single test.  This
+//! module extracts a *schema signature* from a bench artifact —
+//!
+//! * every JSON key path (`config.rates_per_s[]`, `tables[].rows[][]`,
+//!   ...), with `[]` marking array descent, and
+//! * every table column as `column:<header>` (titles carry run
+//!   parameters and are intentionally excluded),
+//!
+//! — and compares it against a committed manifest
+//! (`rust/bench_schema.json`).  The `benchcheck` binary wraps this for
+//! CI: `check` fails with a readable per-experiment diff when any
+//! manifest field disappears from a fresh artifact; `write` regenerates
+//! the manifest after an intentional schema change.
+
+use crate::config::json::Value;
+use crate::Result;
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// The sorted schema signature of one bench artifact.
+pub fn schema_of(v: &Value) -> Vec<String> {
+    let mut out = BTreeSet::new();
+    walk(v, "", &mut out);
+    if let Ok(Value::Arr(tables)) = v.get("tables") {
+        for t in tables {
+            if let Ok(Value::Arr(headers)) = t.get("headers") {
+                for h in headers {
+                    if let Value::Str(s) = h {
+                        out.insert(format!("column:{s}"));
+                    }
+                }
+            }
+        }
+    }
+    out.into_iter().collect()
+}
+
+fn walk(v: &Value, prefix: &str, out: &mut BTreeSet<String>) {
+    match v {
+        Value::Obj(m) => {
+            for (k, val) in m {
+                let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                walk(val, &p, out);
+            }
+        }
+        Value::Arr(items) => {
+            let p = format!("{prefix}[]");
+            if items.is_empty() {
+                out.insert(p);
+            } else {
+                for it in items {
+                    walk(it, &p, out);
+                }
+            }
+        }
+        _ => {
+            out.insert(prefix.to_string());
+        }
+    }
+}
+
+fn experiment_name(file_name: &str) -> Option<&str> {
+    file_name.strip_prefix("BENCH_")?.strip_suffix(".json")
+}
+
+/// Snapshot the schema of every `BENCH_*.json` in `dir` into a manifest
+/// value (`{"version": 1, "experiments": {<id>: [<field>, ...]}}`).
+pub fn manifest_from_dir(dir: &Path) -> Result<Value> {
+    let mut experiments: Vec<(String, Value)> = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let file_name = entry.file_name();
+        let Some(name) = file_name.to_str().and_then(experiment_name) else { continue };
+        let text = std::fs::read_to_string(entry.path())?;
+        let v = crate::config::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e:?}", entry.path().display()))?;
+        experiments.push((
+            name.to_string(),
+            Value::Arr(schema_of(&v).into_iter().map(Value::Str).collect()),
+        ));
+    }
+    anyhow::ensure!(!experiments.is_empty(), "no BENCH_*.json found in {}", dir.display());
+    Ok(Value::Obj(
+        [
+            ("version".to_string(), Value::Num(1.0)),
+            (
+                "experiments".to_string(),
+                Value::Obj(experiments.into_iter().collect()),
+            ),
+        ]
+        .into_iter()
+        .collect(),
+    ))
+}
+
+/// Check every experiment in `manifest` against the artifacts in `dir`.
+/// Returns the list of human-readable problems — empty means the schema
+/// held.  Fields *added* since the manifest are fine (the trajectory only
+/// breaks when fields disappear); they are reported via `notes` so the
+/// manifest can be refreshed deliberately.
+pub fn check_dir(dir: &Path, manifest: &Value) -> Result<(Vec<String>, Vec<String>)> {
+    anyhow::ensure!(
+        manifest.get("version")?.as_f64()? == 1.0,
+        "unknown bench-schema manifest version"
+    );
+    let Value::Obj(experiments) = manifest.get("experiments")? else {
+        anyhow::bail!("manifest 'experiments' must be an object")
+    };
+    let mut problems = Vec::new();
+    let mut notes = Vec::new();
+    for (name, fields) in experiments {
+        let Value::Arr(fields) = fields else {
+            anyhow::bail!("manifest entry '{name}' must be an array of fields")
+        };
+        let expected: BTreeSet<String> = fields
+            .iter()
+            .filter_map(|f| match f {
+                Value::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        let path = dir.join(format!("BENCH_{name}.json"));
+        if !path.exists() {
+            problems.push(format!(
+                "{name}: artifact {} is missing — every manifest experiment must be \
+                 regenerated before the check runs",
+                path.display()
+            ));
+            continue;
+        }
+        let v = crate::config::json::parse(&std::fs::read_to_string(&path)?)
+            .map_err(|e| anyhow::anyhow!("{}: {e:?}", path.display()))?;
+        let actual: BTreeSet<String> = schema_of(&v).into_iter().collect();
+        for missing in expected.difference(&actual) {
+            problems.push(format!(
+                "{name}: field '{missing}' disappeared from BENCH_{name}.json \
+                 (perf-trajectory consumers depend on it; if the removal is \
+                 intentional, regenerate the manifest with `benchcheck write`)"
+            ));
+        }
+        for added in actual.difference(&expected) {
+            notes.push(format!("{name}: new field '{added}' (not yet in the manifest)"));
+        }
+    }
+    Ok((problems, notes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::parse;
+
+    fn artifact() -> Value {
+        parse(
+            r#"{"name": "demo",
+                "wall_ms": 4.5,
+                "config": {"preset": "racam_paper", "rates_per_s": [1.0, 2.0]},
+                "tables": [{"title": "t — run at 5/s",
+                            "headers": ["run", "ttft_p99"],
+                            "rows": [["a", "1"], ["b", "2"]]}]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn schema_extracts_paths_and_columns() {
+        let s = schema_of(&artifact());
+        for field in [
+            "name",
+            "wall_ms",
+            "config.preset",
+            "config.rates_per_s[]",
+            "tables[].title",
+            "tables[].headers[]",
+            "tables[].rows[][]",
+            "column:run",
+            "column:ttft_p99",
+        ] {
+            assert!(s.iter().any(|f| f == field), "missing '{field}' in {s:?}");
+        }
+        // Table titles are parameterized — only `column:` entries pin them.
+        assert!(!s.iter().any(|f| f.contains("run at 5/s")), "{s:?}");
+    }
+
+    #[test]
+    fn check_flags_disappeared_fields_and_tolerates_new_ones() {
+        let dir = std::env::temp_dir().join("racam_benchcheck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("BENCH_demo.json"), artifact().pretty()).unwrap();
+
+        // Manifest == current schema: clean check.
+        let manifest = manifest_from_dir(&dir).unwrap();
+        let (problems, notes) = check_dir(&dir, &manifest).unwrap();
+        assert!(problems.is_empty(), "{problems:?}");
+        assert!(notes.is_empty(), "{notes:?}");
+
+        // A column disappears from the artifact: readable failure.
+        let mut broken = artifact();
+        if let Value::Obj(m) = &mut broken {
+            if let Some(Value::Arr(tables)) = m.get_mut("tables") {
+                if let Value::Obj(t) = &mut tables[0] {
+                    t.insert(
+                        "headers".into(),
+                        Value::Arr(vec![Value::Str("run".into())]),
+                    );
+                    t.insert("rows".into(), Value::Arr(vec![Value::Arr(vec![Value::Str("a".into())])]));
+                }
+            }
+        }
+        std::fs::write(dir.join("BENCH_demo.json"), broken.pretty()).unwrap();
+        let (problems, _) = check_dir(&dir, &manifest).unwrap();
+        assert!(
+            problems.iter().any(|p| p.contains("column:ttft_p99")),
+            "expected the dropped column in {problems:?}"
+        );
+
+        // A new field appears: note, not failure.
+        let mut extended = artifact();
+        if let Value::Obj(m) = &mut extended {
+            m.insert("extra".into(), Value::Num(1.0));
+        }
+        std::fs::write(dir.join("BENCH_demo.json"), extended.pretty()).unwrap();
+        let (problems, notes) = check_dir(&dir, &manifest).unwrap();
+        assert!(problems.is_empty(), "{problems:?}");
+        assert!(notes.iter().any(|n| n.contains("extra")), "{notes:?}");
+
+        // A manifest experiment whose artifact vanished: failure.
+        std::fs::remove_file(dir.join("BENCH_demo.json")).unwrap();
+        let (problems, _) = check_dir(&dir, &manifest).unwrap();
+        assert!(problems.iter().any(|p| p.contains("missing")), "{problems:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn live_bench_artifacts_satisfy_the_committed_manifest() {
+        // The real guard, run against freshly generated artifacts: build
+        // one cheap experiment's artifact in-process and verify the
+        // committed manifest's entry for it is a subset of its schema.
+        // (CI runs the full `benchcheck check` over every serving bench
+        // after regenerating them in release mode.)
+        let manifest = parse(include_str!("../../bench_schema.json")).unwrap();
+        let Value::Obj(experiments) = manifest.get("experiments").unwrap() else {
+            panic!("experiments must be an object")
+        };
+        // Serving experiments CI regenerates must all be listed.
+        for id in ["traffic", "prefill", "disagg", "scale"] {
+            assert!(experiments.contains_key(id), "manifest must cover '{id}'");
+        }
+    }
+}

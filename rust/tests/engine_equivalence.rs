@@ -1,0 +1,280 @@
+//! The `ServingPolicy`-independent equivalence suite: the event-calendar
+//! engine must produce **bit-identical** simulated results — per-request
+//! `RequestResult`s, per-shard `ShardStats`, and the SLO tables derived
+//! from them — to the per-iteration oracle, across every serving shape the
+//! `exp` presets exercise (open-loop traffic × schedulers, chunked prefill
+//! with preemption, prefill/decode disaggregation) plus adversarial
+//! schedules aimed at the fast-forward boundaries.
+
+use racam::config::{
+    racam_paper, ArrivalProcess, ClusterSpec, EngineKind, LengthDist, LlmSpec, Precision,
+    SchedulerKind, ServingPolicy, TrafficSpec,
+};
+use racam::coordinator::{
+    ClusterBuilder, Request, Server, ServerReport, SyntheticEngine,
+};
+use racam::traffic::{generate, SloSummary};
+use racam::workloads::RacamSystem;
+
+fn tiny_spec() -> LlmSpec {
+    LlmSpec {
+        name: "tiny".into(),
+        layers: 2,
+        hidden: 256,
+        heads: 4,
+        kv_heads: 4,
+        ffn: 512,
+        gated_ffn: false,
+        vocab: 512,
+        prec: Precision::Int8,
+    }
+}
+
+/// Deterministic-field comparison: everything except host wall clocks,
+/// which differ even between two runs of the same engine.  The field
+/// coverage lives in one place — [`ServerReport::sim_divergence`] — so
+/// every equivalence gate (this suite, the `Server` unit tests, and
+/// `exp scale`'s in-run check) sees the same definition of "identical".
+fn assert_identical(label: &str, a: &ServerReport, b: &ServerReport) {
+    if let Some(d) = a.sim_divergence(b) {
+        panic!("{label}: engines diverged: {d}");
+    }
+    // The SLO grading layer sees the same numbers, so every rendered
+    // table cell — the experiments' actual output — matches too.
+    let (sa, sb) = (SloSummary::from_report(a), SloSummary::from_report(b));
+    assert_eq!(sa.table_row(label), sb.table_row(label), "{label}: SLO row");
+    assert_eq!(
+        sa.utilization_table("util", false).render(),
+        sb.utilization_table("util", false).render(),
+        "{label}: group utilization table"
+    );
+    assert_eq!(
+        sa.utilization_table("util", true).render(),
+        sb.utilization_table("util", true).render(),
+        "{label}: per-shard utilization table"
+    );
+}
+
+/// Run one cluster spec on both engines over the same stream and compare.
+fn check_cluster(label: &str, mut spec: ClusterSpec, stream: &TrafficSpec) {
+    let run = |spec: ClusterSpec| {
+        let mut coord = ClusterBuilder::new(spec, &racam_paper(), tiny_spec())
+            .unwrap()
+            .build(|_| SyntheticEngine::new(64, 128));
+        for req in generate(stream) {
+            coord.submit(req);
+        }
+        coord.run_to_completion().unwrap()
+    };
+    let mut oracle_spec = spec.clone();
+    for g in &mut oracle_spec.groups {
+        g.policy = g.policy.with_engine(EngineKind::Oracle);
+    }
+    for g in &mut spec.groups {
+        g.policy = g.policy.with_engine(EngineKind::Calendar);
+    }
+    let cal = run(spec);
+    let ora = run(oracle_spec);
+    assert_identical(label, &cal, &ora);
+}
+
+fn stream(requests: u64, rate_per_s: f64, lo: u64, hi: u64, deadline_ns: Option<u64>) -> TrafficSpec {
+    TrafficSpec {
+        seed: 0xE9_01_44,
+        requests,
+        arrival: ArrivalProcess::Poisson { rate_per_s },
+        prompt: LengthDist::Uniform { lo, hi },
+        output: LengthDist::Uniform { lo: 4, hi: 24 },
+        deadline_ns,
+    }
+}
+
+/// The `exp traffic` shape: 2 unified shards × every scheduler × a rate
+/// straddling capacity, deadlines attached.
+#[test]
+fn traffic_preset_is_engine_invariant() {
+    for kind in [SchedulerKind::Fcfs, SchedulerKind::Bucketed, SchedulerKind::Edf] {
+        let mut spec = ClusterSpec::unified(2, 4);
+        spec.groups[0].scheduler = kind;
+        check_cluster(
+            &format!("traffic/{}", kind.label()),
+            spec,
+            &stream(90, 2_000.0, 64, 768, Some(80_000_000)),
+        );
+    }
+}
+
+/// The `exp prefill` shape: chunked prefill (with and without EDF
+/// preemption) under a long-prompt mix — fast-forward must coexist with
+/// mid-prefill members and SRPT chunk scheduling.
+#[test]
+fn prefill_preset_is_engine_invariant() {
+    for (sched, policy) in [
+        (SchedulerKind::Fcfs, ServingPolicy::whole_prefill()),
+        (SchedulerKind::Fcfs, ServingPolicy::chunked(256)),
+        (SchedulerKind::Edf, ServingPolicy::chunked(256).with_preemption()),
+    ] {
+        let mut spec = ClusterSpec::unified(2, 4);
+        spec.groups[0].scheduler = sched;
+        spec.groups[0].policy = policy;
+        check_cluster(
+            &format!("prefill/{}/{}", sched.label(), policy.label()),
+            spec,
+            &stream(70, 1_000.0, 32, 2048, Some(150_000_000)),
+        );
+    }
+}
+
+/// The `exp disagg` shape: prefill shards handing KV caches to decode
+/// shards over the serialized link — handoff accounting, role dispatch
+/// and the two-wave run must all be engine-invariant.
+#[test]
+fn disagg_preset_is_engine_invariant() {
+    check_cluster(
+        "disagg/2p+2d",
+        ClusterSpec::disaggregated(2, 2, 2),
+        &stream(48, 3_000.0, 64, 1024, None),
+    );
+}
+
+fn single_server(engine: EngineKind) -> Server<SyntheticEngine> {
+    Server::new(
+        SyntheticEngine::new(64, 128),
+        RacamSystem::new(&racam_paper()),
+        tiny_spec(),
+        2,
+    )
+    .with_policy(ServingPolicy::whole_prefill().with_engine(engine))
+}
+
+/// Adversarial: an arrival landing **exactly** on a stretch-iteration
+/// boundary.  A probe run reads real iteration-boundary timestamps off
+/// the simulated clock; the arrivals are then pinned to those exact
+/// values (and ±1 ns around them), where an off-by-one in the
+/// fast-forward break condition would release the request one iteration
+/// early or late and shift every downstream timestamp.
+#[test]
+fn arrival_exactly_on_a_stretch_boundary_is_engine_invariant() {
+    let probe = {
+        let mut s = single_server(EngineKind::Oracle);
+        s.submit(Request::new(0, vec![1; 64], 600));
+        s.run_to_completion().unwrap()
+    };
+    let r0 = &probe.results[0];
+    // Iteration boundaries on the clock: the first-token stamp and a
+    // mid-decode point reconstructed from the uniform early-bucket pace.
+    let first = r0.sim_first_token_at_ns;
+    let pace = (r0.sim_finish_at_ns - r0.sim_first_token_at_ns) / 599.0;
+    for (case, arrival) in [
+        ("exact-first-token", first as u64),
+        ("one-before", (first as u64).saturating_sub(1)),
+        ("one-after", first as u64 + 1),
+        ("mid-stretch", (first + pace * 97.0) as u64),
+    ] {
+        let run = |engine: EngineKind| {
+            let mut s = single_server(engine);
+            s.submit(Request::new(0, vec![1; 64], 600));
+            s.submit(Request::new(1, vec![2; 32], 40).at(arrival));
+            s.run_to_completion().unwrap()
+        };
+        let cal = run(EngineKind::Calendar);
+        let ora = run(EngineKind::Oracle);
+        assert_identical(&format!("boundary/{case}"), &cal, &ora);
+    }
+}
+
+/// Adversarial: EDF preemption firing mid-stretch, with the deadline read
+/// off a probe run so it lands strictly between the victim's first token
+/// and its natural completion.
+#[test]
+fn preemption_mid_stretch_is_engine_invariant() {
+    let probe = {
+        let mut s = single_server(EngineKind::Oracle);
+        s.submit(Request::new(7, vec![3; 48], 300).with_deadline(u64::MAX));
+        s.run_to_completion().unwrap()
+    };
+    let r = &probe.results[0];
+    let mid = ((r.sim_first_token_at_ns + r.sim_finish_at_ns) / 2.0) as u64;
+    let run = |engine: EngineKind| {
+        let mut s = Server::with_scheduler(
+            SyntheticEngine::new(64, 128),
+            RacamSystem::new(&racam_paper()),
+            tiny_spec(),
+            2,
+            racam::coordinator::EdfScheduler::new(),
+        );
+        s.set_policy(ServingPolicy::whole_prefill().with_preemption().with_engine(engine));
+        s.submit(Request::new(7, vec![3; 48], 300).with_deadline(mid));
+        s.submit(Request::new(8, vec![4; 16], 30).with_deadline(u64::MAX));
+        s.run_to_completion().unwrap()
+    };
+    let cal = run(EngineKind::Calendar);
+    let ora = run(EngineKind::Oracle);
+    assert_identical("preempt-mid-stretch", &cal, &ora);
+    assert_eq!(cal.shards[0].shed, 1, "the deadline must fire mid-decode");
+    let victim = cal.results.iter().find(|r| r.id == 7).unwrap();
+    assert!(victim.shed && !victim.tokens.is_empty() && victim.tokens.len() < 300);
+}
+
+/// Adversarial: a withholding scheduler must hit the same contract bail
+/// on both engines (fast-forward must not mask the livelock detection).
+#[test]
+fn withholding_scheduler_bails_identically_on_both_engines() {
+    struct Withholding {
+        queue: Vec<Request>,
+    }
+    impl racam::coordinator::Scheduler for Withholding {
+        fn submit(&mut self, req: Request) {
+            self.queue.push(req);
+        }
+        fn pending(&self) -> usize {
+            self.queue.len()
+        }
+        fn next_batch(&mut self, _slots: usize) -> Vec<Request> {
+            Vec::new()
+        }
+    }
+    let run = |engine: EngineKind| {
+        let mut s = Server::with_scheduler(
+            SyntheticEngine::new(64, 128),
+            RacamSystem::new(&racam_paper()),
+            tiny_spec(),
+            2,
+            Withholding { queue: Vec::new() },
+        );
+        s.set_policy(ServingPolicy::whole_prefill().with_engine(engine));
+        s.submit(Request::new(0, vec![1, 2], 4));
+        s.submit(Request::new(1, vec![3], 4));
+        s.run_to_completion().unwrap_err().to_string()
+    };
+    let cal = run(EngineKind::Calendar);
+    let ora = run(EngineKind::Oracle);
+    assert_eq!(cal, ora, "identical contract-violation diagnostics");
+    assert!(cal.contains("withheld 2 queued request(s)"), "{cal}");
+}
+
+/// The bucket-schedule cache must not change *what* is priced: identical
+/// decode-bucket population and mapping-service hit/miss counters across
+/// engines (the satellite's cache-accounting pin, at the cluster level).
+#[test]
+fn pricing_cache_counters_are_engine_invariant() {
+    let run = |engine: EngineKind| {
+        let mut spec = ClusterSpec::unified(2, 4);
+        spec.groups[0].policy = ServingPolicy::whole_prefill().with_engine(engine);
+        let mut coord = ClusterBuilder::new(spec, &racam_paper(), tiny_spec())
+            .unwrap()
+            .build(|_| SyntheticEngine::new(64, 128));
+        for req in generate(&stream(60, 2_000.0, 64, 768, None)) {
+            coord.submit(req);
+        }
+        let rep = coord.run_to_completion().unwrap();
+        let misses: u64 = coord.services().iter().map(|s| s.misses()).sum();
+        let hits: u64 = coord.services().iter().map(|s| s.hits()).sum();
+        (rep, misses, hits)
+    };
+    let (cal, cal_misses, cal_hits) = run(EngineKind::Calendar);
+    let (ora, ora_misses, ora_hits) = run(EngineKind::Oracle);
+    assert_identical("cache-counters", &cal, &ora);
+    assert_eq!(cal_misses, ora_misses, "same unique shapes searched");
+    assert_eq!(cal_hits, ora_hits, "same cache-served pricing requests");
+}

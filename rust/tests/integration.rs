@@ -177,14 +177,16 @@ fn search_on_paper_hw_is_fast_and_consistent() {
     let t0 = std::time::Instant::now();
     let r = engine.search(&shape).expect("GEMM space evaluates");
     let elapsed = t0.elapsed();
-    assert_eq!(r.candidates, 1458);
+    // The pruned default examines the whole space (evaluated + pruned).
+    assert_eq!(r.examined(), 1458);
     // Paper §7: 2–3 s on 16 cores; we require < 5 s.
     assert!(elapsed.as_secs_f64() < 5.0, "search took {elapsed:?}");
-    assert!(r.best.total_ns() > 0.0 && r.spread() > 1.0);
+    assert!(r.best.total_ns() > 0.0);
 
     let serial = engine.search_serial(&shape).expect("GEMM space evaluates");
     assert_eq!(r.best.mapping, serial.best.mapping);
     assert_eq!(r.best.total_ns().to_bits(), serial.best.total_ns().to_bits());
+    assert!(serial.spread() > 1.0);
 }
 
 /// Multi-shard serving over one shared mapping service: every request

@@ -122,8 +122,10 @@ fn prop_search_best_is_global_minimum() {
 
 #[test]
 fn prop_parallel_search_matches_serial_reference() {
-    // The parallel search must return the exact serial winner — same
-    // mapping, bit-identical latency, same candidate/worst accounting.
+    // The exhaustive parallel search must return the exact serial winner —
+    // same mapping, bit-identical latency, same candidate/worst
+    // accounting — and the pruned paths (parallel and serial) the exact
+    // same winner with the full space accounted for as evaluated+pruned.
     let service = MappingService::for_config(&racam_paper());
     check("parallel==serial", 6, |rng| {
         let shape = MatmulShape::new(
@@ -132,12 +134,19 @@ fn prop_parallel_search_matches_serial_reference() {
             rng.range(1, 4096),
             Precision::Int8,
         );
-        let par = service.search(&shape).expect("evaluates");
         let ser = service.search_serial(&shape).expect("evaluates");
+        let par = service.search_exhaustive(&shape).expect("evaluates");
         assert_eq!(par.best.mapping, ser.best.mapping);
         assert_eq!(par.best.total_ns().to_bits(), ser.best.total_ns().to_bits());
         assert_eq!(par.candidates, ser.candidates);
         assert_eq!(par.worst_ns.to_bits(), ser.worst_ns.to_bits());
+        for pruned in
+            [service.search(&shape).expect("evaluates"), service.search_serial_pruned(&shape).expect("evaluates")]
+        {
+            assert_eq!(pruned.best.mapping, ser.best.mapping);
+            assert_eq!(pruned.best.total_ns().to_bits(), ser.best.total_ns().to_bits());
+            assert_eq!(pruned.examined(), ser.candidates);
+        }
     });
 }
 
