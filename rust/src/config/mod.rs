@@ -21,7 +21,7 @@ pub use cluster::{
 pub use dram::DramConfig;
 pub use periph::PeriphConfig;
 pub use presets::*;
-pub use serving::{EngineKind, ServingPolicy, DEFAULT_PREFILL_CHUNK};
+pub use serving::{EngineKind, HostExecutor, ServingPolicy, DEFAULT_PREFILL_CHUNK};
 pub use timing::TimingParams;
 pub use traffic::{ArrivalProcess, LengthDist, TrafficSpec};
 pub use workload::{LlmSpec, MatmulShape, Precision, Scenario, Stage};

@@ -64,6 +64,41 @@ impl EngineKind {
     }
 }
 
+/// Host-executor configuration: how the coordinator schedules shard
+/// serving loops onto OS threads (see `runtime::executor`).  Purely a
+/// host-side knob — simulated results are bit-identical for every value
+/// (the cross-thread determinism gate in `tests/engine_equivalence.rs`
+/// pins this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostExecutor {
+    /// Worker-pool size.  `None` (the default) resolves to the
+    /// `RACAM_THREADS` environment variable if set, else the host's
+    /// available parallelism.  Explicit values floor at 1.
+    pub threads: Option<usize>,
+    /// Scheduling rounds one shard runs per executor task poll — the
+    /// work-stealing granularity.  Larger batches amortize queue traffic;
+    /// smaller ones rebalance sooner.  Floored at 1.
+    pub batch_rounds: u64,
+}
+
+impl HostExecutor {
+    /// Default rounds per poll: long enough that queue traffic is noise
+    /// next to the simulated work, short enough that a thief can pick up
+    /// a lagging shard mid-run.
+    pub const DEFAULT_BATCH_ROUNDS: u64 = 1024;
+
+    /// An executor pinned to `threads` workers.
+    pub const fn with_threads(threads: usize) -> Self {
+        HostExecutor { threads: Some(threads), batch_rounds: Self::DEFAULT_BATCH_ROUNDS }
+    }
+}
+
+impl Default for HostExecutor {
+    fn default() -> Self {
+        HostExecutor { threads: None, batch_rounds: Self::DEFAULT_BATCH_ROUNDS }
+    }
+}
+
 /// How the serving loop schedules prefill work and preemption.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct ServingPolicy {

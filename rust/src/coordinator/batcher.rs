@@ -65,8 +65,14 @@ impl Scheduler for FcfsBatcher {
     }
 
     fn next_batch(&mut self, slots: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        self.next_batch_into(slots, &mut out);
+        out
+    }
+
+    fn next_batch_into(&mut self, slots: usize, out: &mut Vec<Request>) {
         let take = slots.min(self.queue.len());
-        self.queue.drain(..take).collect()
+        out.extend(self.queue.drain(..take));
     }
 
     fn preempt_horizon(&self, _req: &Request, _generated: usize) -> Option<f64> {

@@ -19,14 +19,38 @@ pub trait TokenEngine {
     fn vocab(&self) -> usize;
     /// One decode step: returns (next_hidden, token_id).
     fn step(&mut self, hidden: &[f32]) -> Result<(Vec<f32>, u32)>;
+
+    /// One decode step *in place*: replace `hidden` with the next hidden
+    /// state (sampled token already fed back) and return the token id.
+    /// The default allocates via [`TokenEngine::step`]; engines on the
+    /// serving hot path override it to reuse the caller's buffer, which
+    /// is what keeps the decode loop allocation-free.  Must generate the
+    /// exact token/state sequence of `step` + [`TokenEngine::feed_token`].
+    fn step_in_place(&mut self, hidden: &mut Vec<f32>) -> Result<u32> {
+        let (mut next, token) = self.step(hidden)?;
+        self.feed_token(&mut next, token);
+        *hidden = next;
+        Ok(token)
+    }
+
     /// Initial hidden state for a prompt (toy embedding of the prompt).
     fn embed_prompt(&self, prompt: &[u32]) -> Vec<f32> {
-        let h = self.hidden();
-        let mut x = vec![0.0f32; h];
-        for (i, &tok) in prompt.iter().enumerate() {
-            x[(tok as usize + i) % h] += 1.0 / (1.0 + i as f32);
-        }
+        let mut x = Vec::new();
+        self.embed_prompt_into(prompt, &mut x);
         x
+    }
+
+    /// [`TokenEngine::embed_prompt`] into a caller-owned buffer (cleared
+    /// and refilled) — the admission path recycles retired members'
+    /// hidden-state buffers through this, so a million-request run
+    /// allocates a bounded pool of them instead of one per request.
+    fn embed_prompt_into(&self, prompt: &[u32], out: &mut Vec<f32>) {
+        let h = self.hidden();
+        out.clear();
+        out.resize(h, 0.0);
+        for (i, &tok) in prompt.iter().enumerate() {
+            out[(tok as usize + i) % h] += 1.0 / (1.0 + i as f32);
+        }
     }
 
     /// Feed the sampled token back into the hidden state (the embedding
@@ -83,11 +107,47 @@ impl TokenEngine for HloDecodeEngine {
 pub struct SyntheticEngine {
     hidden: usize,
     vocab: usize,
+    /// Double buffer for [`TokenEngine::step_in_place`]: the next state is
+    /// computed here and swapped with the caller's buffer, so the decode
+    /// hot loop never allocates.
+    scratch: Vec<f32>,
 }
 
 impl SyntheticEngine {
     pub fn new(hidden: usize, vocab: usize) -> Self {
-        SyntheticEngine { hidden, vocab }
+        SyntheticEngine { hidden, vocab, scratch: Vec::new() }
+    }
+
+    /// The recurrence: fill `next` from `hidden` and return the greedy
+    /// token.  `next[i] = tanh(0.9·x[(i+1) mod h] + 0.1·x[i] + dither)`,
+    /// logits are strided folds of the new state, argmax with
+    /// first-max-wins ties — one definition shared by `step` and
+    /// `step_in_place` so the two are bit-identical by construction.
+    fn advance(&self, hidden: &[f32], next: &mut Vec<f32>) -> u32 {
+        let h = self.hidden;
+        next.clear();
+        next.resize(h, 0.0);
+        for i in 0..h {
+            next[i] = (0.9 * hidden[(i + 1) % h] + 0.1 * hidden[i] + 0.01 * ((i % 7) as f32 - 3.0))
+                .tanh();
+        }
+        // Toy logits folded online (same `>` comparison as `argmax`, so
+        // the first maximum wins here too).
+        let mut best = 0u32;
+        let mut best_s = f32::NEG_INFINITY;
+        for v in 0..self.vocab {
+            let mut s = 0.0;
+            let mut j = v % h;
+            for _ in 0..4 {
+                s += next[j];
+                j = (j + 17) % h;
+            }
+            if s > best_s {
+                best_s = s;
+                best = v as u32;
+            }
+        }
+        best
     }
 }
 
@@ -101,26 +161,18 @@ impl TokenEngine for SyntheticEngine {
     }
 
     fn step(&mut self, hidden: &[f32]) -> Result<(Vec<f32>, u32)> {
-        // next[i] = tanh(0.9·x[(i+1) mod h] + 0.1·x[i] + 0.01·i-dither)
-        let h = self.hidden;
-        let mut next = vec![0.0f32; h];
-        for i in 0..h {
-            next[i] = (0.9 * hidden[(i + 1) % h] + 0.1 * hidden[i] + 0.01 * ((i % 7) as f32 - 3.0))
-                .tanh();
-        }
-        // Toy logits: strided folds of the state.
-        let logits: Vec<f32> = (0..self.vocab)
-            .map(|v| {
-                let mut s = 0.0;
-                let mut j = v % h;
-                for _ in 0..4 {
-                    s += next[j];
-                    j = (j + 17) % h;
-                }
-                s
-            })
-            .collect();
-        Ok((next, argmax(&logits)))
+        let mut next = Vec::new();
+        let token = self.advance(hidden, &mut next);
+        Ok((next, token))
+    }
+
+    fn step_in_place(&mut self, hidden: &mut Vec<f32>) -> Result<u32> {
+        let mut next = std::mem::take(&mut self.scratch);
+        let token = self.advance(hidden, &mut next);
+        self.feed_token(&mut next, token);
+        std::mem::swap(hidden, &mut next);
+        self.scratch = next;
+        Ok(token)
     }
 }
 
@@ -146,10 +198,19 @@ impl TokenEngine for NullEngine {
         Ok((Vec::new(), 0))
     }
 
+    fn step_in_place(&mut self, hidden: &mut Vec<f32>) -> Result<u32> {
+        hidden.clear();
+        Ok(0)
+    }
+
     fn embed_prompt(&self, _prompt: &[u32]) -> Vec<f32> {
         // The default embedding indexes modulo the hidden width; with no
         // hidden state there is nothing to embed.
         Vec::new()
+    }
+
+    fn embed_prompt_into(&self, _prompt: &[u32], out: &mut Vec<f32>) {
+        out.clear();
     }
 
     fn feed_token(&self, _hidden: &mut [f32], _token: u32) {}
@@ -203,6 +264,36 @@ mod tests {
         assert_eq!(t, 0);
         let mut empty: [f32; 0] = [];
         e.feed_token(&mut empty, 0); // must not index into the (empty) state
+    }
+
+    #[test]
+    fn step_in_place_matches_step_plus_feedback() {
+        // The allocation-free path must generate the exact sequence of
+        // the allocating reference path (the serving engines' tokens and
+        // hidden states are part of the bit-equivalence contract).
+        let mut a = SyntheticEngine::new(32, 64);
+        let mut b = SyntheticEngine::new(32, 64);
+        let mut xa = a.embed_prompt(&[1, 2, 3]);
+        let mut xb = b.embed_prompt(&[1, 2, 3]);
+        for _ in 0..50 {
+            let ta = a.step_in_place(&mut xa).unwrap();
+            let (mut next, tb) = b.step(&xb).unwrap();
+            b.feed_token(&mut next, tb);
+            xb = next;
+            assert_eq!(ta, tb);
+            assert_eq!(xa, xb);
+        }
+    }
+
+    #[test]
+    fn embed_prompt_into_reuses_and_matches() {
+        let e = SyntheticEngine::new(16, 16);
+        let mut buf = vec![9.0; 64]; // stale content must be overwritten
+        e.embed_prompt_into(&[3, 1, 4], &mut buf);
+        assert_eq!(buf, e.embed_prompt(&[3, 1, 4]));
+        let n = NullEngine;
+        n.embed_prompt_into(&[1], &mut buf);
+        assert!(buf.is_empty());
     }
 
     #[test]

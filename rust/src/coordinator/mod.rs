@@ -55,4 +55,6 @@ pub use engine::HloDecodeEngine;
 pub use engine::{NullEngine, SyntheticEngine, TokenEngine};
 pub use multi::{Coordinator, Intake};
 pub use scheduler::{EdfScheduler, LengthBucketed, Preemption, Scheduler};
-pub use server::{Handoff, Request, RequestResult, Server, ServerReport, ShardStats};
+pub use server::{
+    BatchPoll, Handoff, Request, RequestResult, Server, ServerReport, ShardRun, ShardStats,
+};

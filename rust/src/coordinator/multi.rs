@@ -4,8 +4,12 @@
 //!
 //! The coordinator is the ROADMAP "sharding" step: requests are dispatched
 //! deterministically to the least-loaded shard, shards run concurrently on
-//! OS threads, and the per-shard reports merge into a single
-//! [`ServerReport`] with per-shard utilization.  Because the mapping cache
+//! a fixed work-stealing worker pool ([`crate::runtime::executor`],
+//! configured by [`HostExecutor`]), and the per-shard reports merge into a
+//! single [`ServerReport`] with per-shard utilization.  Thread count is a
+//! host-side knob only: each shard's simulation is single-threaded between
+//! coordinator barriers and reports merge in shard order, so simulated
+//! results are bit-identical across `--threads` settings.  Because the mapping cache
 //! is shared, a kernel shape that appears on every shard is searched once
 //! system-wide — the first shard to ask runs the (parallel) search, the
 //! rest wait on the per-shape once-cell and reuse it.
@@ -43,12 +47,13 @@
 use super::cluster::ClusterBuilder;
 use super::engine::TokenEngine;
 use super::scheduler::Scheduler;
-use super::server::{Handoff, Request, Server, ServerReport};
+use super::server::{BatchPoll, Handoff, Request, Server, ServerReport, ShardRun};
 use super::FcfsBatcher;
 use crate::config::{
-    partition_channels, ClusterSpec, HwConfig, LlmSpec, ServingPolicy, ShardRole,
+    partition_channels, ClusterSpec, HostExecutor, HwConfig, LlmSpec, ServingPolicy, ShardRole,
 };
 use crate::mapping::MappingService;
+use crate::runtime::executor::{self, Poll};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -68,6 +73,9 @@ pub struct Coordinator<E: TokenEngine, S: Scheduler = FcfsBatcher> {
     roles: Vec<ShardRole>,
     /// KV-transfer link bandwidth between prefill and decode shards, GB/s.
     kv_link_gbps: f64,
+    /// How shard serving loops map onto host worker threads (see
+    /// [`HostExecutor`]); host-side only — never changes simulated results.
+    executor: HostExecutor,
 }
 
 /// Live submission handle for a running coordinator: requests round-robin
@@ -231,7 +239,37 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
     ) -> Self {
         assert!(!shards.is_empty(), "a coordinator needs at least one shard");
         let roles = shards.iter().map(|s| s.role()).collect();
-        Coordinator { shards, services, spec, roles, kv_link_gbps }
+        Coordinator {
+            shards,
+            services,
+            spec,
+            roles,
+            kv_link_gbps,
+            executor: HostExecutor::default(),
+        }
+    }
+
+    /// Configure the host executor (worker-thread count, stealing
+    /// granularity).  Simulated results are identical for every setting;
+    /// only host wall time changes.
+    pub fn set_executor(&mut self, executor: HostExecutor) {
+        self.executor = executor;
+    }
+
+    /// Builder-style [`Coordinator::set_executor`].
+    pub fn with_executor(mut self, executor: HostExecutor) -> Self {
+        self.set_executor(executor);
+        self
+    }
+
+    /// Pin the worker pool to `threads` threads (see [`HostExecutor`]).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.executor.threads = Some(threads);
+    }
+
+    /// The active host-executor configuration.
+    pub fn executor(&self) -> HostExecutor {
+        self.executor
     }
 
     /// Apply one [`ServingPolicy`] (chunked prefill, preemption) to every
@@ -316,23 +354,45 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
         }
     }
 
-    /// Run the shards matching `pred` concurrently, one OS thread each.
+    /// Run the shards matching `pred` on the work-stealing worker pool:
+    /// each shard becomes one resumable [`ShardRun`] task polled in
+    /// batches of `exec.batch_rounds` scheduling rounds, so `threads`
+    /// workers drive any number of shards (idle shards cost nothing, and a
+    /// lagging shard is stolen by whichever worker frees up first).
+    ///
+    /// Reports come back **indexed by shard order**, not completion order
+    /// — merging is deterministic however the workers interleave, and each
+    /// shard's simulation is single-threaded between coordinator barriers,
+    /// so results are bit-identical across every thread count.
     fn run_shards(
+        exec: HostExecutor,
         shards: &mut [Server<E, S>],
         pred: impl Fn(ShardRole) -> bool,
     ) -> Vec<Result<ServerReport>> {
-        let mut reports = Vec::new();
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = shards
-                .iter_mut()
-                .filter(|s| pred(s.role()))
-                .map(|shard| scope.spawn(move || shard.run_to_completion()))
-                .collect();
-            for h in handles {
-                reports.push(h.join().expect("worker shard panicked"));
-            }
-        });
-        reports
+        let batch_rounds = exec.batch_rounds.max(1);
+        let tasks: Vec<executor::Task<'_, Result<ServerReport>>> = shards
+            .iter_mut()
+            .filter(|s| pred(s.role()))
+            .map(|shard| {
+                let mut run = Some(ShardRun::new(shard));
+                Box::new(move || {
+                    let r = run.as_mut().expect("shard task polled after completion");
+                    match r.poll(batch_rounds) {
+                        Ok(BatchPoll::Progressed) => Poll::Pending,
+                        Ok(BatchPoll::WouldBlock) => Poll::Blocked,
+                        Ok(BatchPoll::Finished) => {
+                            Poll::Done(Ok(run.take().expect("run present").finish()))
+                        }
+                        Err(e) => Poll::Done(Err(e)),
+                    }
+                }) as executor::Task<'_, Result<ServerReport>>
+            })
+            .collect();
+        if tasks.is_empty() {
+            return Vec::new();
+        }
+        let threads = executor::resolve_threads(exec.threads).min(tasks.len());
+        executor::run_tasks(threads, tasks)
     }
 
     /// Move every finished prefill to a decode shard, pricing the KV-cache
@@ -373,9 +433,11 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
         }
     }
 
-    /// Run every shard's serving loop to completion on its own thread and
-    /// merge the reports.  Token sequences are engine-deterministic per
-    /// request, so the merged output is independent of thread interleaving.
+    /// Run every shard's serving loop to completion on the work-stealing
+    /// worker pool ([`Coordinator::set_executor`]) and merge the reports.
+    /// Each shard's simulation is single-threaded between the coordinator
+    /// barriers below and reports merge in shard order, so the merged
+    /// output is bit-identical for every thread count and interleaving.
     ///
     /// A unified cluster runs all shards in one concurrent wave (the
     /// pre-disaggregation behavior, bit-for-bit).  A disaggregated cluster
@@ -385,13 +447,14 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
     /// so no wall-clock race can change the simulated result.
     pub fn run_to_completion(&mut self) -> Result<ServerReport> {
         let wall_start = Instant::now();
+        let exec = self.executor;
         let reports = if !self.is_disaggregated() {
-            Self::run_shards(&mut self.shards, |_| true)
+            Self::run_shards(exec, &mut self.shards, |_| true)
         } else {
             let mut first =
-                Self::run_shards(&mut self.shards, |r| r.accepts_fresh_prompts());
+                Self::run_shards(exec, &mut self.shards, |r| r.accepts_fresh_prompts());
             self.dispatch_handoffs();
-            first.extend(Self::run_shards(&mut self.shards, |r| {
+            first.extend(Self::run_shards(exec, &mut self.shards, |r| {
                 matches!(r, ShardRole::Decode)
             }));
             first

@@ -74,6 +74,18 @@ pub trait Scheduler: Send {
     /// consultation.
     fn next_batch(&mut self, slots: usize) -> Vec<Request>;
 
+    /// [`Scheduler::next_batch`] into a caller-owned buffer (appended,
+    /// not cleared).  The serving loop calls this once per round with a
+    /// recycled scratch vector; the default forwards to `next_batch`, so
+    /// external policies keep working unchanged, while the in-tree
+    /// policies override it to make admission allocation-free.  The
+    /// admitted requests and their order must match `next_batch` exactly
+    /// — engine bit-equivalence and the no-withholding contract both
+    /// apply to this entry point too.
+    fn next_batch_into(&mut self, slots: usize, out: &mut Vec<Request>) {
+        out.extend(self.next_batch(slots));
+    }
+
     /// Preemption hook: called once per serving-loop iteration for every
     /// running request — but only when the active serving policy sets
     /// `preempt = true` — with the tokens generated so far and the current
@@ -117,6 +129,10 @@ impl Scheduler for Box<dyn Scheduler> {
 
     fn next_batch(&mut self, slots: usize) -> Vec<Request> {
         (**self).next_batch(slots)
+    }
+
+    fn next_batch_into(&mut self, slots: usize, out: &mut Vec<Request>) {
+        (**self).next_batch_into(slots, out)
     }
 
     fn should_preempt(&mut self, req: &Request, generated: usize, sim_now_ns: f64) -> Preemption {
@@ -171,8 +187,14 @@ impl Scheduler for LengthBucketed {
     }
 
     fn next_batch(&mut self, slots: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        self.next_batch_into(slots, &mut out);
+        out
+    }
+
+    fn next_batch_into(&mut self, slots: usize, out: &mut Vec<Request>) {
         if slots == 0 || self.pending == 0 {
-            return Vec::new();
+            return;
         }
         // The bucket whose head request has waited longest.
         let bucket = self
@@ -184,12 +206,11 @@ impl Scheduler for LengthBucketed {
             .expect("pending > 0 implies a non-empty bucket");
         let queue = self.buckets.get_mut(&bucket).expect("bucket exists");
         let take = slots.min(queue.len());
-        let out: Vec<Request> = queue.drain(..take).map(|(_, r)| r).collect();
+        out.extend(queue.drain(..take).map(|(_, r)| r));
         if queue.is_empty() {
             self.buckets.remove(&bucket);
         }
-        self.pending -= out.len();
-        out
+        self.pending -= take;
     }
 }
 
@@ -249,8 +270,14 @@ impl Scheduler for EdfScheduler {
     }
 
     fn next_batch(&mut self, slots: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        self.next_batch_into(slots, &mut out);
+        out
+    }
+
+    fn next_batch_into(&mut self, slots: usize, out: &mut Vec<Request>) {
         let take = slots.min(self.heap.len());
-        (0..take).map(|_| self.heap.pop().expect("len checked").0.req).collect()
+        out.extend((0..take).map(|_| self.heap.pop().expect("len checked").0.req));
     }
 
     fn should_preempt(&mut self, req: &Request, generated: usize, sim_now_ns: f64) -> Preemption {

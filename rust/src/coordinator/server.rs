@@ -141,7 +141,12 @@ pub struct RequestResult {
     /// Simulated RACAM service time attributed to this request (prefill +
     /// its own per-token decode costs), ns.
     pub sim_total_ns: f64,
-    /// Host wall-clock spent executing this request's share, ns.
+    /// Host wall-clock attributed to this request, ns: the shard's run
+    /// wall time apportioned by the request's share of simulated service
+    /// time.  Wall time is measured once per run (a single timer around
+    /// the serving loop — never inside the hot path), so this is a
+    /// reporting convenience, not a per-request measurement; host-speed
+    /// analyses should use [`ShardStats::wall_ns`].
     pub wall_ns: f64,
     /// Arrival time on the shard's simulated clock, ns.
     pub arrival_ns: f64,
@@ -201,8 +206,6 @@ pub struct Handoff {
     pub sim_prefill_ns: f64,
     /// Absolute prefill-shard clock time the prompt finished, ns.
     pub prefill_finish_at_ns: f64,
-    /// Host wall time the prefill shard spent on this request, ns.
-    pub wall_ns: f64,
 }
 
 /// Decode-side bookkeeping for one received [`Handoff`], keyed by request
@@ -214,7 +217,6 @@ struct HandoffMeta {
     sim_prefill_ns: f64,
     original_arrival_ns: f64,
     kv_transfer_ns: f64,
-    wall_ns: f64,
     /// Whether this handoff was already counted into the shard's
     /// `handoffs`/`kv_transfer_ns` stats (a re-queued handoff is
     /// re-admitted but crossed the link only once).
@@ -444,6 +446,10 @@ pub struct Server<E: TokenEngine, S: Scheduler = FcfsBatcher> {
     policy: ServingPolicy,
     /// Requests whose simulated arrival time has not been reached yet.
     future: BinaryHeap<Reverse<FutureReq>>,
+    /// Scratch buffer the admission path hands to
+    /// [`Scheduler::next_batch_into`] each round (drained after use), so
+    /// admission performs no per-round allocation.
+    admit_scratch: Vec<Request>,
     /// Live intake: requests sent here are admitted mid-run.
     intake: Option<mpsc::Receiver<Request>>,
     /// Simulated per-token decode cost per context bucket, kept across
@@ -533,20 +539,25 @@ struct Running {
     tokens: Vec<u32>,
     sim_ns: f64,
     sim_ttft_ns: f64,
-    wall_ns: f64,
     arrival_ns: f64,
     first_token_at_ns: f64,
 }
 
 impl Running {
-    fn retire(self, sim_finish_at_ns: f64, shed: bool) -> RequestResult {
+    /// Retire into a [`RequestResult`], recycling the hidden-state buffer
+    /// through `pool` (per-request wall time is attributed once at report
+    /// assembly — see [`RequestResult::wall_ns`]).
+    fn retire(mut self, sim_finish_at_ns: f64, shed: bool, pool: &mut Vec<Vec<f32>>) -> RequestResult {
+        let mut hidden = std::mem::take(&mut self.hidden);
+        hidden.clear();
+        pool.push(hidden);
         RequestResult {
             id: self.req.id,
             prompt_tokens: self.req.prompt.len(),
             tokens: self.tokens,
             sim_ttft_ns: self.sim_ttft_ns,
             sim_total_ns: self.sim_ns,
-            wall_ns: self.wall_ns,
+            wall_ns: 0.0,
             arrival_ns: self.arrival_ns,
             sim_first_token_at_ns: self.first_token_at_ns,
             sim_finish_at_ns,
@@ -599,9 +610,16 @@ struct LoopState {
     stalled_requeue_rounds: usize,
     /// Whether the active policy consults the preemption hook.
     preempt_enabled: bool,
+    /// Prefill chunk bound (floored at 1), captured from the policy when
+    /// the run began; `None` = whole-prompt prefill.
+    chunk_tokens: Option<u64>,
     /// Whether prefill advances in bounded chunks (SRPT keys) or whole
     /// prompts (admission-order keys).
     chunked: bool,
+    /// Recycled hidden-state buffers: retired members return theirs here
+    /// and admission reuses them, so steady-state serving allocates a
+    /// bounded pool (≤ max batch) instead of one buffer per request.
+    hidden_pool: Vec<Vec<f32>>,
     /// seq → index in `running`.
     slot_of: HashMap<u64, usize>,
     /// Staged-prefill index: (remaining-work key, seq), min-heap.
@@ -624,7 +642,8 @@ struct LoopState {
 }
 
 impl LoopState {
-    fn new(preempt_enabled: bool, chunked: bool) -> LoopState {
+    fn new(preempt_enabled: bool, chunk_tokens: Option<u64>) -> LoopState {
+        let chunked = chunk_tokens.is_some();
         LoopState {
             running: Vec::new(),
             done: Vec::new(),
@@ -642,7 +661,9 @@ impl LoopState {
             admit_seq: 0,
             stalled_requeue_rounds: 0,
             preempt_enabled,
+            chunk_tokens,
             chunked,
+            hidden_pool: Vec::new(),
             slot_of: HashMap::new(),
             srpt: BinaryHeap::new(),
             horizon: BinaryHeap::new(),
@@ -774,7 +795,8 @@ impl LoopState {
             {
                 let finish_at = self.sim_now_ns;
                 let r = self.swap_remove_member(i);
-                self.done.push(r.retire(finish_at, false));
+                let res = r.retire(finish_at, false, &mut self.hidden_pool);
+                self.done.push(res);
             } else {
                 i += 1;
             }
@@ -835,6 +857,7 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             handoff_meta: HashMap::new(),
             policy: ServingPolicy::default(),
             future: BinaryHeap::new(),
+            admit_scratch: Vec::new(),
             intake: None,
             decode_cache: HashMap::new(),
             prefill_cache: HashMap::new(),
@@ -928,14 +951,13 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
     /// accounting carries the prefill shard's intrinsic cost, and the
     /// transfer time is charged to [`ShardStats::kv_transfer_ns`].
     pub fn submit_handoff(&mut self, handoff: Handoff, kv_transfer_ns: f64) {
-        let Handoff { mut req, sim_prefill_ns, prefill_finish_at_ns, wall_ns } = handoff;
+        let Handoff { mut req, sim_prefill_ns, prefill_finish_at_ns } = handoff;
         self.handoff_meta.insert(
             req.id,
             HandoffMeta {
                 sim_prefill_ns,
                 original_arrival_ns: req.arrival_ns as f64,
                 kv_transfer_ns,
-                wall_ns,
                 counted: false,
             },
         );
@@ -1108,9 +1130,48 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
     /// timestamps, costs, tokens, per-shard stats; only host wall time
     /// differs (see module docs and `docs/serving.md`).
     pub fn run_to_completion(&mut self) -> Result<ServerReport> {
+        let wall_start = Instant::now();
+        let mut st = self.begin_state();
+        loop {
+            match self.round(&mut st, true)? {
+                Round::Continue => {}
+                Round::Finished => break,
+                // Blocking rounds park on the intake inside `idle_step`
+                // instead of reporting back.
+                Round::WouldBlock => unreachable!("blocking round reported WouldBlock"),
+            }
+        }
+        Ok(self.finish_report(st, wall_start.elapsed().as_nanos() as f64))
+    }
+
+    /// Fresh loop state for a run, with every vector that grows with the
+    /// request stream pre-sized from what the run can already see (queued
+    /// + future requests, batch capacity) — the serving loop itself then
+    /// amortizes no growth on the hot path.
+    fn begin_state(&mut self) -> LoopState {
+        // Chunk floor at 1: a zero-token chunk would never advance
+        // prefill (`ServingPolicy::validate` rejects it, but don't trust
+        // callers with an infinite loop).
+        let chunk_tokens = self.policy.prefill_chunk_tokens.map(|c| c.max(1));
+        let mut st = LoopState::new(self.policy.preempt, chunk_tokens);
+        let expected = self.scheduler.pending() + self.future.len();
+        st.running.reserve(self.max_batch.min(expected.max(1)));
+        st.hidden_pool.reserve(self.max_batch);
+        st.slot_of.reserve(self.max_batch);
+        if self.role == ShardRole::Prefill {
+            // Every request leaves as a handoff instead of a result.
+            self.handoffs_out.reserve(expected);
+        } else {
+            st.done.reserve(expected);
+        }
+        st
+    }
+
+    /// One scheduling round of the configured engine (see [`Round`]).
+    fn round(&mut self, st: &mut LoopState, block: bool) -> Result<Round> {
         match self.policy.engine {
-            EngineKind::Calendar => self.run_calendar(),
-            EngineKind::Oracle => self.run_oracle(),
+            EngineKind::Calendar => self.round_calendar(st, block),
+            EngineKind::Oracle => self.round_oracle(st, block),
         }
     }
 
@@ -1119,11 +1180,17 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
     /// the prefill steps.  Returns how many requests were admitted.
     fn admit(&mut self, st: &mut LoopState) -> usize {
         let slots = self.max_batch.saturating_sub(st.running.len());
-        let mut admitted = 0usize;
-        for req in self.scheduler.next_batch(slots) {
-            admitted += 1;
-            let t0 = Instant::now();
-            let hidden = self.engine.embed_prompt(&req.prompt);
+        // Recycled scratch: the scheduler appends into it, the loop
+        // drains it — no per-round `Vec` churn.
+        let mut batch = std::mem::take(&mut self.admit_scratch);
+        debug_assert!(batch.is_empty());
+        self.scheduler.next_batch_into(slots, &mut batch);
+        let admitted = batch.len();
+        for req in batch.drain(..) {
+            // Recycled hidden-state buffer (retired members return theirs
+            // to the pool).
+            let mut hidden = st.hidden_pool.pop().unwrap_or_default();
+            self.engine.embed_prompt_into(&req.prompt, &mut hidden);
             // A received handoff skips prefill: its prompt was already
             // prefilled on the prefill shard, whose intrinsic cost (and
             // original arrival, for end-to-end latency) carries over;
@@ -1137,9 +1204,9 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                     m.counted = true;
                 }
             }
-            let (phase, carried_ns, arrival_ns, carried_wall_ns) = match &meta {
-                Some(m) => (Phase::Decode, m.sim_prefill_ns, m.original_arrival_ns, m.wall_ns),
-                None => (Phase::Prefill { done: 0 }, 0.0, req.arrival_ns as f64, 0.0),
+            let (phase, carried_ns, arrival_ns) = match &meta {
+                Some(m) => (Phase::Decode, m.sim_prefill_ns, m.original_arrival_ns),
+                None => (Phase::Prefill { done: 0 }, 0.0, req.arrival_ns as f64),
             };
             let preempt_horizon =
                 if self.policy.preempt { self.scheduler.preempt_horizon(&req, 0) } else { None };
@@ -1152,16 +1219,17 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                 sched: DecodeSchedule::STALE,
                 preempt_horizon,
                 hidden,
-                tokens: Vec::new(),
+                // Sized once: the token vector never reallocates mid-run.
+                tokens: Vec::with_capacity(req.max_new_tokens),
                 sim_ns: carried_ns,
                 sim_ttft_ns: carried_ns,
-                wall_ns: carried_wall_ns + t0.elapsed().as_nanos() as f64,
                 arrival_ns,
                 first_token_at_ns: st.sim_now_ns,
                 req,
             });
             st.admit_seq += 1;
         }
+        self.admit_scratch = batch;
         admitted
     }
 
@@ -1186,7 +1254,10 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                         // its KV cache is resident on this shard, so
                         // re-admission skips prefill and the result
                         // keeps the original arrival and prefill cost.
-                        let r = st.remove_member(i);
+                        let mut r = st.remove_member(i);
+                        let mut hidden = std::mem::take(&mut r.hidden);
+                        hidden.clear();
+                        st.hidden_pool.push(hidden);
                         if let Some(m) = r.handoff {
                             self.handoff_meta.insert(r.req.id, m);
                         }
@@ -1196,7 +1267,8 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                         st.shed_count += 1;
                         shed_round += 1;
                         let r = st.remove_member(i);
-                        st.done.push(r.retire(st.sim_now_ns, true));
+                        let res = r.retire(st.sim_now_ns, true, &mut st.hidden_pool);
+                        st.done.push(res);
                     }
                 }
             }
@@ -1229,7 +1301,6 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         // The final span's upper bucket is the admission-time prompt
         // bucket; intermediate chunk boundaries bucket on the fly.
         let hi_bucket = if finished { st.running[idx].prompt_bucket } else { ctx_bucket(end) };
-        let t0 = Instant::now();
         let span = self.prefill_span_cost_to(prefilled, end, hi_bucket)?;
         let step_ns = span.total_ns();
         st.sim_now_ns += step_ns;
@@ -1256,7 +1327,6 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             let r = &mut st.running[idx];
             r.sim_ns += step_ns;
             r.sim_ttft_ns += step_ns;
-            r.wall_ns += t0.elapsed().as_nanos() as f64;
         }
         if finished {
             // Prompt fully prefilled: the first token lands at the
@@ -1275,18 +1345,21 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         if finished && st.running[idx].req.max_new_tokens == 0 {
             // Nothing to decode: retire immediately.
             let r = st.remove_member(idx);
-            st.done.push(r.retire(st.sim_now_ns, false));
+            let res = r.retire(st.sim_now_ns, false, &mut st.hidden_pool);
+            st.done.push(res);
         } else if finished && self.role == ShardRole::Prefill {
             // Prefill-only shard: the finished prompt leaves for a
             // decode shard instead of decoding here.  The decode
             // shard emits the request's (single) result; this shard
             // only counts the handoff.
-            let r = st.remove_member(idx);
+            let mut r = st.remove_member(idx);
+            let mut hidden = std::mem::take(&mut r.hidden);
+            hidden.clear();
+            st.hidden_pool.push(hidden);
             st.handed_off += 1;
             self.handoffs_out.push(Handoff {
                 sim_prefill_ns: r.sim_ttft_ns,
                 prefill_finish_at_ns: st.sim_now_ns,
-                wall_ns: r.wall_ns,
                 req: r.req,
             });
         }
@@ -1295,7 +1368,15 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
 
     /// Handle a round that ends with an empty batch: the withholding /
     /// requeue-livelock bails, the idle clock jump to the next arrival,
-    /// and the blocking intake wait — shared by both engines verbatim.
+    /// and the intake wait — shared by both engines verbatim.
+    ///
+    /// `block` selects the intake behavior when no simulated work
+    /// remains: a standalone run parks the thread on `recv` (the
+    /// long-standing behavior), while an executor-driven batch probes
+    /// with `try_recv` and reports [`RoundIdle::WouldBlock`] so the
+    /// worker can run other shards instead of stalling the pool.  The
+    /// two modes admit the same requests at the same simulated times —
+    /// only host-thread scheduling differs.
     fn idle_step(
         &mut self,
         st: &mut LoopState,
@@ -1303,6 +1384,7 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         requeued: usize,
         shed_round: usize,
         prefill_progressed: bool,
+        block: bool,
     ) -> Result<RoundIdle> {
         if self.scheduler.pending() > 0 {
             if admitted == 0 && requeued == 0 && shed_round == 0 {
@@ -1353,14 +1435,33 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             return Ok(RoundIdle::Continue);
         }
         if let Some(rx) = self.intake.take() {
-            // No simulated work left but the intake is open: block
-            // on the channel (host wall time, not simulated time).
-            // A disconnect leaves the intake closed (`None`).
-            if let Ok(req) = rx.recv() {
-                self.intake = Some(rx);
-                self.submit(Self::clamp_arrival(req, st.sim_now_ns));
+            // No simulated work left but the intake is open.  A
+            // disconnect leaves the intake closed (`None`).
+            if block {
+                // Park on the channel (host wall time, not simulated
+                // time).
+                if let Ok(req) = rx.recv() {
+                    self.intake = Some(rx);
+                    self.submit(Self::clamp_arrival(req, st.sim_now_ns));
+                }
+                return Ok(RoundIdle::Continue);
             }
-            return Ok(RoundIdle::Continue);
+            // Executor mode: never park a pooled worker on one shard's
+            // channel.
+            return match rx.try_recv() {
+                Ok(req) => {
+                    self.intake = Some(rx);
+                    self.submit(Self::clamp_arrival(req, st.sim_now_ns));
+                    Ok(RoundIdle::Continue)
+                }
+                Err(mpsc::TryRecvError::Empty) => {
+                    self.intake = Some(rx);
+                    Ok(RoundIdle::WouldBlock)
+                }
+                // Closed: the next round observes everything drained and
+                // finishes.
+                Err(mpsc::TryRecvError::Disconnected) => Ok(RoundIdle::Continue),
+            };
         }
         Ok(RoundIdle::Finished)
     }
@@ -1420,7 +1521,6 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         let horizon_ns = horizon.unwrap_or(f64::INFINITY);
         let occ = st.decoding as f64 / self.max_batch as f64;
 
-        let t0 = Instant::now();
         let mut iters = 0u64;
         while iters < k {
             let mut new_first = false;
@@ -1428,9 +1528,7 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                 if !matches!(r.phase, Phase::Decode) {
                     continue;
                 }
-                let (mut next, token) = self.engine.step(&r.hidden)?;
-                self.engine.feed_token(&mut next, token);
-                r.hidden = next;
+                let token = self.engine.step_in_place(&mut r.hidden)?;
                 r.tokens.push(token);
                 r.sim_ns += r.sched.cost_ns;
                 new_first |= r.tokens.len() == 1;
@@ -1455,22 +1553,25 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             }
         }
 
-        // Host wall time, apportioned evenly across the decoding members
-        // (the oracle reads the clock around every member step; one read
-        // per round keeps the hot loop clean — wall fields are host-side
-        // accounting, not simulated results).
-        let elapsed = t0.elapsed().as_nanos() as f64 / st.decoding.max(1) as f64;
+        // Advance every decoder's pricing schedule by the stretch length.
+        // (No wall-clock read here: the per-stretch `Instant` pair moved
+        // up to the run boundary — see `finish_report` — so the per-token
+        // work is exactly the adds and compares above.)
         for r in st.running.iter_mut() {
             if matches!(r.phase, Phase::Decode) {
-                r.wall_ns += elapsed;
                 r.sched.tokens_to_edge -= iters;
             }
         }
         Ok(())
     }
 
-    /// Assemble the final report from a drained loop state.
-    fn finish_report(&self, st: LoopState, wall_start: Instant) -> ServerReport {
+    /// Assemble the final report from a drained loop state.  `wall_ns` is
+    /// the host wall time spent inside the serving loop — one `Instant`
+    /// pair around the whole run (or accumulated across executor batches),
+    /// the only wall-clock reads a run performs.  Per-request `wall_ns` is
+    /// that total apportioned by each request's share of simulated service
+    /// time (see [`RequestResult::wall_ns`]).
+    fn finish_report(&self, st: LoopState, wall_ns: f64) -> ServerReport {
         let LoopState {
             mut done,
             sim_now_ns,
@@ -1489,7 +1590,18 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         done.sort_by_key(|r| r.id);
         let total_tokens: usize = done.iter().map(|r| r.tokens.len()).sum();
         let sim_ns: f64 = done.iter().map(|r| r.sim_total_ns).sum();
-        let wall_ns = wall_start.elapsed().as_nanos() as f64;
+        if sim_ns > 0.0 {
+            let scale = wall_ns / sim_ns;
+            for r in &mut done {
+                r.wall_ns = r.sim_total_ns * scale;
+            }
+        } else if !done.is_empty() {
+            // Degenerate run (e.g. all zero-cost): equal shares.
+            let share = wall_ns / done.len() as f64;
+            for r in &mut done {
+                r.wall_ns = share;
+            }
+        }
         let stats = ShardStats {
             shard: self.shard_id,
             group: self.group.clone(),
@@ -1522,104 +1634,93 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         }
     }
 
-    /// The per-iteration reference engine: every simulated step runs the
-    /// complete round — intake drain, arrival release, admission call,
+    /// One round of the per-iteration reference engine: the complete
+    /// schedule — intake drain, arrival release, admission call,
     /// preemption scan, linear prefill selection, one lockstep decode
     /// iteration with per-member bucket lookups, retire scan.  This is the
     /// equivalence oracle the calendar engine is pinned against; it also
     /// serves schedulers whose hooks are stateful.
-    fn run_oracle(&mut self) -> Result<ServerReport> {
-        let wall_start = Instant::now();
-        // Floor at 1: a zero-token chunk would never advance prefill
-        // (`ServingPolicy::validate` rejects it, but don't trust callers
-        // with an infinite loop).
-        let chunk_tokens = self.policy.prefill_chunk_tokens.map(|c| c.max(1));
-        let mut st = LoopState::new(self.policy.preempt, chunk_tokens.is_some());
+    fn round_oracle(&mut self, st: &mut LoopState, block: bool) -> Result<Round> {
+        let chunk_tokens = st.chunk_tokens;
+        self.drain_intake(st.sim_now_ns);
+        self.release_due(st.sim_now_ns);
+        let admitted = self.admit(st);
+        let (requeued, shed_round) = self.preempt_scan(st);
 
-        loop {
-            self.drain_intake(st.sim_now_ns);
-            self.release_due(st.sim_now_ns);
-            let admitted = self.admit(&mut st);
-            let (requeued, shed_round) = self.preempt_scan(&mut st);
-
-            // Prefill steps.  Whole-prompt mode drains every staged prompt
-            // back-to-back in admission order — the legacy schedule.
-            // Chunked mode advances one bounded chunk of the staged prompt
-            // with the least remaining work, then falls through to a
-            // decode iteration, so running decodes (and short prompts)
-            // interleave with a long prompt instead of stalling behind it.
-            let mut prefill_progressed = false;
-            while let Some(idx) = Self::next_prefill(&st.running, chunk_tokens.is_some()) {
-                prefill_progressed = true;
-                self.prefill_step_at(&mut st, idx, chunk_tokens)?;
-                if chunk_tokens.is_some() {
-                    break;
-                }
+        // Prefill steps.  Whole-prompt mode drains every staged prompt
+        // back-to-back in admission order — the legacy schedule.
+        // Chunked mode advances one bounded chunk of the staged prompt
+        // with the least remaining work, then falls through to a
+        // decode iteration, so running decodes (and short prompts)
+        // interleave with a long prompt instead of stalling behind it.
+        let mut prefill_progressed = false;
+        while let Some(idx) = Self::next_prefill(&st.running, chunk_tokens.is_some()) {
+            prefill_progressed = true;
+            self.prefill_step_at(st, idx, chunk_tokens)?;
+            if chunk_tokens.is_some() {
+                break;
             }
+        }
 
-            if st.running.is_empty() {
-                match self.idle_step(&mut st, admitted, requeued, shed_round, prefill_progressed)?
-                {
-                    RoundIdle::Continue => continue,
-                    RoundIdle::Finished => break,
-                }
-            }
+        if st.running.is_empty() {
+            return match self
+                .idle_step(st, admitted, requeued, shed_round, prefill_progressed, block)?
+            {
+                RoundIdle::Continue => Ok(Round::Continue),
+                RoundIdle::Finished => Ok(Round::Finished),
+                RoundIdle::WouldBlock => Ok(Round::WouldBlock),
+            };
+        }
 
-            // Real work happened this round: any requeue stall is over.
-            st.stalled_requeue_rounds = 0;
+        // Real work happened this round: any requeue stall is over.
+        st.stalled_requeue_rounds = 0;
 
-            // A chunked policy can leave the whole batch mid-prefill; no
-            // decode iteration runs until at least one prompt completes.
-            let decoding =
-                st.running.iter().filter(|r| matches!(r.phase, Phase::Decode)).count();
-            if decoding == 0 {
+        // A chunked policy can leave the whole batch mid-prefill; no
+        // decode iteration runs until at least one prompt completes.
+        let decoding = st.running.iter().filter(|r| matches!(r.phase, Phase::Decode)).count();
+        if decoding == 0 {
+            return Ok(Round::Continue);
+        }
+
+        // One decode iteration across the fully prefilled batch
+        // members.  They step in lockstep, so the shard clock advances
+        // by the slowest member's per-token cost; each member's own
+        // service-time accounting still charges its own bucket.
+        // Occupancy counts only decoding members: under a chunked
+        // policy, mid-prefill members hold slots but are not decoding
+        // (with whole-prompt prefill the two counts are identical).
+        st.decode_iterations += 1;
+        st.occupancy_sum += decoding as f64 / self.max_batch as f64;
+        let mut iteration_ns = 0.0f64;
+        for i in 0..st.running.len() {
+            if !matches!(st.running[i].phase, Phase::Decode) {
                 continue;
             }
+            let r = &mut st.running[i];
+            let token = self.engine.step_in_place(&mut r.hidden)?;
+            r.tokens.push(token);
 
-            // One decode iteration across the fully prefilled batch
-            // members.  They step in lockstep, so the shard clock advances
-            // by the slowest member's per-token cost; each member's own
-            // service-time accounting still charges its own bucket.
-            // Occupancy counts only decoding members: under a chunked
-            // policy, mid-prefill members hold slots but are not decoding
-            // (with whole-prompt prefill the two counts are identical).
-            st.decode_iterations += 1;
-            st.occupancy_sum += decoding as f64 / self.max_batch as f64;
-            let mut iteration_ns = 0.0f64;
-            for i in 0..st.running.len() {
-                if !matches!(st.running[i].phase, Phase::Decode) {
-                    continue;
-                }
-                let t0 = Instant::now();
-                let (mut next, token) = self.engine.step(&st.running[i].hidden)?;
-                self.engine.feed_token(&mut next, token);
-                let r = &mut st.running[i];
-                r.hidden = next;
-                r.tokens.push(token);
-                r.wall_ns += t0.elapsed().as_nanos() as f64;
-
-                let ctx = r.req.prompt.len() as u64 + r.tokens.len() as u64;
-                let cost = self.decode_cost(ctx)?.total_ns();
-                st.running[i].sim_ns += cost;
-                iteration_ns = iteration_ns.max(cost);
-            }
-            st.sim_now_ns += iteration_ns;
-            for r in &mut st.running {
-                if matches!(r.phase, Phase::Decode) && r.tokens.len() == 1 {
-                    // First decoded token lands at the end of this
-                    // iteration on the shard clock.
-                    r.first_token_at_ns = st.sim_now_ns;
-                }
-            }
-
-            // Retire finished requests.
-            st.retire_finished();
+            let ctx = r.req.prompt.len() as u64 + r.tokens.len() as u64;
+            let cost = self.decode_cost(ctx)?.total_ns();
+            st.running[i].sim_ns += cost;
+            iteration_ns = iteration_ns.max(cost);
         }
-        Ok(self.finish_report(st, wall_start))
+        st.sim_now_ns += iteration_ns;
+        for r in &mut st.running {
+            if matches!(r.phase, Phase::Decode) && r.tokens.len() == 1 {
+                // First decoded token lands at the end of this
+                // iteration on the shard clock.
+                r.first_token_at_ns = st.sim_now_ns;
+            }
+        }
+
+        // Retire finished requests.
+        st.retire_finished();
+        Ok(Round::Continue)
     }
 
-    /// The event-calendar engine (the default).  The round structure is
-    /// the oracle's, but:
+    /// One round of the event-calendar engine (the default).  The round
+    /// structure is the oracle's, but:
     ///
     /// * prefill selection pops the SRPT index instead of scanning the
     ///   batch (bypass-starved prompts keep their exact priority — the
@@ -1630,85 +1731,169 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
     ///   instead of paying the full round per token;
     /// * decode pricing comes from each member's precomputed bucket
     ///   schedule, refreshed only at bucket edges.
-    fn run_calendar(&mut self) -> Result<ServerReport> {
-        let wall_start = Instant::now();
-        // Floor at 1: see `run_oracle`.
-        let chunk_tokens = self.policy.prefill_chunk_tokens.map(|c| c.max(1));
-        let mut st = LoopState::new(self.policy.preempt, chunk_tokens.is_some());
+    fn round_calendar(&mut self, st: &mut LoopState, block: bool) -> Result<Round> {
+        let chunk_tokens = st.chunk_tokens;
+        self.drain_intake(st.sim_now_ns);
+        self.release_due(st.sim_now_ns);
+        let admitted = self.admit(st);
+        let (requeued, shed_round) = self.preempt_scan(st);
 
-        loop {
-            self.drain_intake(st.sim_now_ns);
-            self.release_due(st.sim_now_ns);
-            let admitted = self.admit(&mut st);
-            let (requeued, shed_round) = self.preempt_scan(&mut st);
-
-            // Prefill steps off the SRPT index (admission order under
-            // whole-prompt mode; least-remaining-first under chunking,
-            // with the oracle's exact anti-starvation bypass rule).
-            let mut prefill_progressed = false;
-            while st.staged > 0 {
-                let idx = match st.select_prefill() {
-                    Some(i) => i,
-                    // The index should always cover the staged set; if it
-                    // ever desyncs, self-heal from the oracle's linear
-                    // scan instead of spinning the outer loop.
-                    None => {
-                        debug_assert!(false, "SRPT index lost a staged member");
-                        match Self::next_prefill(&st.running, chunk_tokens.is_some()) {
-                            Some(i) => {
-                                let key = st.srpt_key(&st.running[i]);
-                                let seq = st.running[i].seq;
-                                st.srpt.push(Reverse((key, seq)));
-                                i
-                            }
-                            None => {
-                                st.staged = 0; // counter was stale: no prompt is staged
-                                break;
-                            }
+        // Prefill steps off the SRPT index (admission order under
+        // whole-prompt mode; least-remaining-first under chunking,
+        // with the oracle's exact anti-starvation bypass rule).
+        let mut prefill_progressed = false;
+        while st.staged > 0 {
+            let idx = match st.select_prefill() {
+                Some(i) => i,
+                // The index should always cover the staged set; if it
+                // ever desyncs, self-heal from the oracle's linear
+                // scan instead of spinning the outer loop.
+                None => {
+                    debug_assert!(false, "SRPT index lost a staged member");
+                    match Self::next_prefill(&st.running, chunk_tokens.is_some()) {
+                        Some(i) => {
+                            let key = st.srpt_key(&st.running[i]);
+                            let seq = st.running[i].seq;
+                            st.srpt.push(Reverse((key, seq)));
+                            i
+                        }
+                        None => {
+                            st.staged = 0; // counter was stale: no prompt is staged
+                            break;
                         }
                     }
-                };
-                prefill_progressed = true;
-                self.prefill_step_at(&mut st, idx, chunk_tokens)?;
-                if chunk_tokens.is_some() {
+                }
+            };
+            prefill_progressed = true;
+            self.prefill_step_at(st, idx, chunk_tokens)?;
+            if chunk_tokens.is_some() {
+                break;
+            }
+        }
+
+        if st.running.is_empty() {
+            return match self
+                .idle_step(st, admitted, requeued, shed_round, prefill_progressed, block)?
+            {
+                RoundIdle::Continue => Ok(Round::Continue),
+                RoundIdle::Finished => Ok(Round::Finished),
+                RoundIdle::WouldBlock => Ok(Round::WouldBlock),
+            };
+        }
+
+        // Real work happened this round: any requeue stall is over.
+        st.stalled_requeue_rounds = 0;
+
+        // A chunked policy can leave the whole batch mid-prefill; no
+        // decode iteration runs until at least one prompt completes.
+        if st.decoding == 0 {
+            return Ok(Round::Continue);
+        }
+
+        // Decode: fast-forward a uniform lockstep stretch when no
+        // admission can change the batch before a membership event —
+        // every member is decoding, and either the batch is full or
+        // nothing is pending.  (A scheduler holding pending work with
+        // free slots is consulted every iteration, exactly like the
+        // oracle, because its `next_batch` may admit at any round.)
+        let fast = st.decoding == st.running.len()
+            && (st.running.len() == self.max_batch || self.scheduler.pending() == 0);
+        let horizon = if self.policy.preempt { st.min_horizon() } else { Some(f64::INFINITY) };
+        self.decode_round(st, fast, horizon)?;
+
+        // Retire finished requests (same swap-remove order as the
+        // oracle's retire scan).
+        st.retire_finished();
+        Ok(Round::Continue)
+    }
+}
+
+/// What one scheduling round reported back to its driver (the blocking
+/// [`Server::run_to_completion`] loop or a [`ShardRun`] batch).
+enum Round {
+    /// The round ran (simulated progress, a clock jump, or bounded stall
+    /// bookkeeping) — run another.
+    Continue,
+    /// Every source of work is exhausted: the run is complete.
+    Finished,
+    /// Non-blocking mode only: nothing can progress until the live intake
+    /// delivers a request (see [`RoundIdle::WouldBlock`]).
+    WouldBlock,
+}
+
+/// Progress verdict of one [`ShardRun::poll`] batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPoll {
+    /// The batch ran its full round budget; more work may remain — poll
+    /// again.
+    Progressed,
+    /// The shard cannot progress until its live intake delivers; poll
+    /// again later (executor workers back off instead of spinning).
+    WouldBlock,
+    /// The run is complete: call [`ShardRun::finish`].
+    Finished,
+}
+
+/// A resumable serving run — the work-stealing executor's unit of
+/// scheduling (see [`crate::runtime::executor`]).
+///
+/// [`Server::run_to_completion`] drives the round loop to the end on one
+/// dedicated thread; a `ShardRun` exposes the *same* loop in batches of
+/// rounds so a pooled worker can interleave many shards.  Simulated
+/// results are identical by construction — the rounds run in the same
+/// order over the same state, and nothing in a round observes where the
+/// host-thread boundaries fall.  Host wall time accumulates across `poll`
+/// calls (time parked in the executor's queues is not charged), and the
+/// intake is probed with `try_recv` instead of parking (see
+/// [`Server::idle_step`]).
+pub struct ShardRun<'a, E: TokenEngine, S: Scheduler> {
+    server: &'a mut Server<E, S>,
+    st: Option<LoopState>,
+    wall_ns: f64,
+    finished: bool,
+}
+
+impl<'a, E: TokenEngine, S: Scheduler> ShardRun<'a, E, S> {
+    /// Begin a resumable run on `server` (drains the same work sources as
+    /// [`Server::run_to_completion`]).
+    pub fn new(server: &'a mut Server<E, S>) -> Self {
+        let st = server.begin_state();
+        ShardRun { server, st: Some(st), wall_ns: 0.0, finished: false }
+    }
+
+    /// Run up to `rounds` scheduling rounds (at least one) and report how
+    /// the batch ended.  Polling after `Finished` is a no-op.
+    pub fn poll(&mut self, rounds: u64) -> Result<BatchPoll> {
+        if self.finished {
+            return Ok(BatchPoll::Finished);
+        }
+        let st = self.st.as_mut().expect("poll on a consumed ShardRun");
+        let t0 = Instant::now();
+        let mut verdict = BatchPoll::Progressed;
+        for _ in 0..rounds.max(1) {
+            match self.server.round(st, false)? {
+                Round::Continue => {}
+                Round::Finished => {
+                    verdict = BatchPoll::Finished;
+                    break;
+                }
+                Round::WouldBlock => {
+                    verdict = BatchPoll::WouldBlock;
                     break;
                 }
             }
-
-            if st.running.is_empty() {
-                match self.idle_step(&mut st, admitted, requeued, shed_round, prefill_progressed)?
-                {
-                    RoundIdle::Continue => continue,
-                    RoundIdle::Finished => break,
-                }
-            }
-
-            // Real work happened this round: any requeue stall is over.
-            st.stalled_requeue_rounds = 0;
-
-            // A chunked policy can leave the whole batch mid-prefill; no
-            // decode iteration runs until at least one prompt completes.
-            if st.decoding == 0 {
-                continue;
-            }
-
-            // Decode: fast-forward a uniform lockstep stretch when no
-            // admission can change the batch before a membership event —
-            // every member is decoding, and either the batch is full or
-            // nothing is pending.  (A scheduler holding pending work with
-            // free slots is consulted every iteration, exactly like the
-            // oracle, because its `next_batch` may admit at any round.)
-            let fast = st.decoding == st.running.len()
-                && (st.running.len() == self.max_batch || self.scheduler.pending() == 0);
-            let horizon =
-                if self.policy.preempt { st.min_horizon() } else { Some(f64::INFINITY) };
-            self.decode_round(&mut st, fast, horizon)?;
-
-            // Retire finished requests (same swap-remove order as the
-            // oracle's retire scan).
-            st.retire_finished();
         }
-        Ok(self.finish_report(st, wall_start))
+        self.wall_ns += t0.elapsed().as_nanos() as f64;
+        if verdict == BatchPoll::Finished {
+            self.finished = true;
+        }
+        Ok(verdict)
+    }
+
+    /// Assemble the report once `poll` returned [`BatchPoll::Finished`].
+    pub fn finish(mut self) -> ServerReport {
+        let st = self.st.take().expect("finish on a consumed ShardRun");
+        self.server.finish_report(st, self.wall_ns)
     }
 }
 
@@ -1719,6 +1904,9 @@ enum RoundIdle {
     Continue,
     /// Every source of work is exhausted: the run is complete.
     Finished,
+    /// Non-blocking mode only: the intake is open but empty — the shard
+    /// cannot progress until a live submission arrives.
+    WouldBlock,
 }
 
 #[cfg(test)]

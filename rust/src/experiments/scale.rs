@@ -1,37 +1,51 @@
-//! `exp scale` — the serving engine's own hot path under heavy traffic:
-//! 10k- and 100k-request Poisson streams driven through every scheduler on
-//! both serving-loop implementations (the per-iteration oracle and the
-//! event-calendar engine with decode fast-forward), timing **engine wall
-//! time** and **steps/second** — the scheduler-step throughput vLLM-style
-//! continuous-batching engines treat as a first-class metric.
+//! `exp scale` — the serving engine's own hot path under heavy traffic,
+//! in two parts:
+//!
+//! 1. **Engine cells**: 10k- and 100k-request Poisson streams driven
+//!    through every scheduler on both serving-loop implementations (the
+//!    per-iteration oracle and the event-calendar engine with decode
+//!    fast-forward), timing **engine wall time** and **steps/second** —
+//!    the scheduler-step throughput vLLM-style continuous-batching
+//!    engines treat as a first-class metric.
+//! 2. **Host-executor sweep**: a 1M-request stream over an 8-shard
+//!    unified FCFS cluster on the calendar engine, swept across
+//!    work-stealing worker-pool sizes (1/2/4/max; see
+//!    `runtime::executor`), recording requests/second, speedup over the
+//!    single-thread run, and the process peak RSS.  Every thread count's
+//!    merged report is asserted bit-identical to the single-thread
+//!    baseline before its timing is published.
 //!
 //! The token engine is [`NullEngine`] (zero-cost token emission), so the
 //! measurement isolates the serving loop itself: admission, arrival
 //! release, preemption scans, prefill selection, bucket pricing, retire
-//! scans.  Every cell's simulated results are asserted identical between
-//! the two engines before the timing is reported — a cell that diverges
-//! fails the experiment instead of publishing a wrong speedup.
+//! scans.  Every engine cell's simulated results are asserted identical
+//! between the two engines before the timing is reported — a cell that
+//! diverges fails the experiment instead of publishing a wrong speedup.
 //!
-//! `results/BENCH_scale.json` starts the engine-wall-time trajectory: the
-//! headline column is the calendar engine's speedup over the oracle on
-//! the 100k-request stream (the acceptance floor is 5x).
+//! `results/BENCH_scale.json` carries the engine-wall-time trajectory:
+//! the headline columns are the calendar engine's speedup over the oracle
+//! on the 100k-request stream (acceptance floor 5x) and the max-thread
+//! speedup over one thread on the 1M-request sweep.
 
 use crate::config::json::Value;
 use crate::config::{
-    gpt3_6_7b, racam_paper, ArrivalProcess, EngineKind, LengthDist, SchedulerKind, ServingPolicy,
-    TrafficSpec,
+    gpt3_6_7b, racam_paper, ArrivalProcess, ClusterSpec, EngineKind, LengthDist, SchedulerKind,
+    ServingPolicy, TrafficSpec,
 };
 use crate::coordinator::{
-    EdfScheduler, FcfsBatcher, LengthBucketed, NullEngine, Request, Scheduler, Server,
-    ServerReport,
+    ClusterBuilder, EdfScheduler, FcfsBatcher, LengthBucketed, NullEngine, Request, Scheduler,
+    Server, ServerReport,
 };
 use crate::mapping::MappingService;
 use crate::report::Table;
+use crate::runtime::{executor, peak_rss_bytes};
 use crate::traffic::generate;
 use crate::workloads::RacamSystem;
+use std::time::Instant;
 
 const SEED: u64 = 0x5CA1_AB1E;
-/// Stream sizes; the last one carries the headline speedup.
+/// Stream sizes for the oracle-vs-calendar cells; the last one carries
+/// the engine-speedup headline.
 const STREAMS: &[u64] = &[10_000, 100_000];
 /// Arrival rate, req/s — far past one shard's service capacity, so the
 /// batch stays saturated and the run measures steady-state stepping.
@@ -42,6 +56,16 @@ const SCHEDULERS: &[&str] = &["fcfs", "bucketed", "edf"];
 /// Loose 2 s end-to-end deadline: EDF has deadlines to order and shed by
 /// without the run degenerating into shedding everything.
 const DEADLINE_NS: u64 = 2_000_000_000;
+
+/// Host-executor sweep: stream size, cluster width, and arrival rate.
+/// One million requests over eight shards keeps ~125k requests per shard
+/// — the same order as the largest engine cell — while exercising the
+/// work-stealing pool with real cross-shard imbalance.
+const SWEEP_REQUESTS: u64 = 1_000_000;
+const SWEEP_SHARDS: usize = 8;
+/// Cluster-wide arrival rate: eight shards' worth of the engine-cell
+/// rate, so every shard stays saturated just like the single-shard cells.
+const SWEEP_RATE_PER_S: f64 = 160_000.0;
 
 pub(crate) fn bench_config() -> Vec<(&'static str, Value)> {
     vec![
@@ -56,6 +80,12 @@ pub(crate) fn bench_config() -> Vec<(&'static str, Value)> {
             Value::Arr(vec![Value::Str("oracle".into()), Value::Str("calendar".into())]),
         ),
         ("max_batch", Value::Num(MAX_BATCH as f64)),
+        ("sweep_requests", Value::Num(SWEEP_REQUESTS as f64)),
+        ("sweep_shards", Value::Num(SWEEP_SHARDS as f64)),
+        (
+            "sweep_threads",
+            Value::Arr(sweep_threads().into_iter().map(|t| Value::Num(t as f64)).collect()),
+        ),
     ]
 }
 
@@ -70,6 +100,33 @@ fn stream_spec(requests: u64) -> TrafficSpec {
         output: LengthDist::Uniform { lo: 32, hi: 192 },
         deadline_ns: Some(DEADLINE_NS),
     }
+}
+
+/// The million-request sweep stream.  Lengths are kept short — all
+/// prompts and contexts inside the first 256-token pricing bucket — so
+/// the resident set stays bounded by the request records themselves, not
+/// by token payloads, and the run measures host scheduling rather than
+/// allocator churn.
+fn sweep_spec() -> TrafficSpec {
+    TrafficSpec {
+        seed: SEED,
+        requests: SWEEP_REQUESTS,
+        arrival: ArrivalProcess::Poisson { rate_per_s: SWEEP_RATE_PER_S },
+        prompt: LengthDist::Uniform { lo: 8, hi: 64 },
+        output: LengthDist::Uniform { lo: 4, hi: 32 },
+        deadline_ns: None,
+    }
+}
+
+/// Worker-pool sizes the sweep visits: 1, 2, 4, and the host's available
+/// parallelism, deduplicated and sorted (on a 2-core runner this is
+/// [1, 2, 4]: oversubscribed pools are still valid — and still must be
+/// bit-identical).  Always starts at 1, the speedup baseline.
+fn sweep_threads() -> Vec<usize> {
+    let mut v = vec![1, 2, 4, executor::available_parallelism()];
+    v.sort_unstable();
+    v.dedup();
+    v
 }
 
 fn scheduler_for(kind: SchedulerKind) -> Box<dyn Scheduler> {
@@ -113,6 +170,32 @@ fn run_cell(
     server.run_to_completion()
 }
 
+/// One thread count of the host-executor sweep: the full million-request
+/// stream over a fresh 8-shard unified FCFS cluster, returning the merged
+/// report and the host wall time of the run itself (submission excluded —
+/// the sweep times the executor, not the traffic generator).
+fn run_sweep_cell(
+    service: &MappingService,
+    requests: u64,
+    threads: usize,
+) -> crate::Result<(ServerReport, f64)> {
+    let mut coord = ClusterBuilder::with_spec_and_services(
+        ClusterSpec::unified(SWEEP_SHARDS, MAX_BATCH),
+        gpt3_6_7b(),
+        vec![service.clone(); SWEEP_SHARDS],
+    )?
+    .build_with(|_| NullEngine, |_| FcfsBatcher::new(MAX_BATCH));
+    coord.set_threads(threads);
+    let mut spec = sweep_spec();
+    spec.requests = requests;
+    for req in generate(&spec) {
+        coord.submit(req);
+    }
+    let start = Instant::now();
+    let report = coord.run_to_completion()?;
+    Ok((report, start.elapsed().as_nanos() as f64))
+}
+
 /// Fail loudly if the two engines' simulated results differ anywhere —
 /// the speedup below is only meaningful for bit-identical serving.  The
 /// field coverage is [`ServerReport::sim_divergence`], shared with the
@@ -129,6 +212,8 @@ fn assert_equivalent(cell: &str, cal: &ServerReport, ora: &ServerReport) -> crat
 /// so the timed cells measure the engine loop, not the one-time mapping
 /// searches the first cell would otherwise absorb into its wall time
 /// (both engines share the warm `MappingService` equally afterwards).
+/// The sweep stream's lengths (prompt ≤ 64, ctx ≤ 96) live entirely
+/// inside the first bucket, so this warms it too.
 fn warm_pricing(service: &MappingService) -> crate::Result<()> {
     let mut server = Server::with_scheduler(
         NullEngine,
@@ -164,6 +249,73 @@ fn row(label: &str, rep: &ServerReport, speedup: Option<f64>) -> Vec<String> {
     ]
 }
 
+/// VmHWM in MB at this point of the process, or `-` where procfs is
+/// unavailable.  The high-water mark is monotone across the run, so the
+/// column reads as "peak RSS so far" — the last sweep row is the
+/// process-wide peak the issue asks for.
+fn rss_mb() -> String {
+    match peak_rss_bytes() {
+        Some(b) => format!("{:.0}", b as f64 / (1024.0 * 1024.0)),
+        None => "-".into(),
+    }
+}
+
+fn sweep_row(threads: usize, rep: &ServerReport, wall_ns: f64, base_wall_ns: f64) -> Vec<String> {
+    let wall_s = (wall_ns / 1e9).max(f64::MIN_POSITIVE);
+    vec![
+        format!("sweep@{SWEEP_REQUESTS}/t{threads}"),
+        threads.to_string(),
+        rep.results.len().to_string(),
+        rep.total_tokens.to_string(),
+        format!("{:.0}", wall_ns / 1e6),
+        format!("{:.1}", rep.results.len() as f64 / wall_s / 1e3),
+        format!("{:.2}x", base_wall_ns / wall_ns.max(1.0)),
+        rss_mb(),
+    ]
+}
+
+/// The host-executor sweep table plus the max-thread speedup (for the
+/// headline).  Every thread count replays the identical stream; the
+/// single-thread report is the bit-identity baseline for all the others.
+fn run_sweep(service: &MappingService) -> crate::Result<(Table, f64)> {
+    let mut t = Table::new(
+        &format!(
+            "Scale — host-executor sweep: {SWEEP_REQUESTS} requests, {SWEEP_SHARDS}-shard \
+             unified FCFS cluster x batch {MAX_BATCH}, Poisson {SWEEP_RATE_PER_S}/s, \
+             calendar engine, work-stealing worker pool"
+        ),
+        &[
+            "run",
+            "threads",
+            "reqs",
+            "tokens",
+            "wall_ms",
+            "kreq/s",
+            "speedup_vs_1t",
+            "peak_rss_mb",
+        ],
+    );
+    let threads = sweep_threads();
+    let mut baseline: Option<(ServerReport, f64)> = None;
+    let mut last_speedup = 1.0;
+    for &n in &threads {
+        let (rep, wall_ns) = run_sweep_cell(service, SWEEP_REQUESTS, n)?;
+        let (base_rep, base_wall) = match &baseline {
+            Some((r, w)) => (r, *w),
+            None => (&rep, wall_ns),
+        };
+        if let Some(d) = rep.sim_divergence(base_rep) {
+            anyhow::bail!("sweep t{n}: diverged from single-thread baseline: {d}");
+        }
+        last_speedup = base_wall / wall_ns.max(1.0);
+        t.row(sweep_row(n, &rep, wall_ns, base_wall));
+        if baseline.is_none() {
+            baseline = Some((rep, wall_ns));
+        }
+    }
+    Ok((t, last_speedup))
+}
+
 pub fn run() -> crate::Result<Vec<Table>> {
     let service = MappingService::for_config(&racam_paper());
     warm_pricing(&service)?;
@@ -191,15 +343,21 @@ pub fn run() -> crate::Result<Vec<Table>> {
             }
         }
     }
+    let (sweep, sweep_speedup) = run_sweep(&service)?;
     let mut h = Table::new(
-        "Scale — headline: calendar-engine speedup on the 100k-request stream (min over schedulers)",
+        "Scale — headline: calendar-engine speedup on the 100k-request stream (min over \
+         schedulers) and max-thread speedup on the 1M-request sweep",
         &["metric", "value"],
     );
     h.row(vec![
         "calendar_speedup_100k_min".into(),
         format!("{:.2}x", headline.unwrap_or(0.0)),
     ]);
-    Ok(vec![t, h])
+    h.row(vec![
+        "sweep_speedup_max_threads".into(),
+        format!("{sweep_speedup:.2}x"),
+    ]);
+    Ok(vec![t, sweep, h])
 }
 
 #[cfg(test)]
@@ -231,5 +389,45 @@ mod tests {
         assert_eq!(r.len(), 8);
         assert_eq!(r[1], "40");
         assert_eq!(r[7], "7.50x");
+    }
+
+    #[test]
+    fn sweep_threads_start_at_one_and_are_unique() {
+        let t = sweep_threads();
+        assert_eq!(t[0], 1, "the speedup baseline must come first");
+        let mut sorted = t.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(t, sorted, "must be sorted and deduplicated: {t:?}");
+        assert!(t.contains(&executor::available_parallelism()));
+    }
+
+    #[test]
+    fn small_sweep_is_bit_identical_across_thread_counts() {
+        // A miniature sweep cell: the merged cluster report must not
+        // depend on the worker-pool size, including oversubscribed pools
+        // (more threads than this machine has cores).
+        let service = MappingService::for_config(&racam_paper());
+        let (base, _) = run_sweep_cell(&service, 600, 1).unwrap();
+        assert_eq!(base.results.len(), 600);
+        for threads in [2, executor::available_parallelism(), SWEEP_SHARDS * 2] {
+            let (rep, _) = run_sweep_cell(&service, 600, threads).unwrap();
+            assert!(
+                rep.sim_divergence(&base).is_none(),
+                "t{threads} diverged: {:?}",
+                rep.sim_divergence(&base)
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_rows_have_every_column() {
+        let service = MappingService::for_config(&racam_paper());
+        let (rep, wall_ns) = run_sweep_cell(&service, 100, 2).unwrap();
+        let r = sweep_row(2, &rep, wall_ns, wall_ns * 2.0);
+        assert_eq!(r.len(), 8);
+        assert_eq!(r[1], "2");
+        assert_eq!(r[2], "100");
+        assert_eq!(r[6], "2.00x");
     }
 }

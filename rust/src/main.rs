@@ -60,6 +60,7 @@ fn print_help() {
          \x20             [--deadline-ms MS] [--traffic SPEC.json | --trace TRACE.json]\n\
          \x20             [--chunk-tokens N] [--preempt] [--serving POLICY.json]\n\
          \x20             [--engine calendar|oracle] [--cluster CLUSTER.json]\n\
+         \x20             [--threads N]\n\
          \n\
          serve traffic modes: --rate R replays a Poisson stream at R req/s on the\n\
          simulated clock (add --deadline-ms for an e2e SLO); --traffic loads a\n\
@@ -72,7 +73,10 @@ fn print_help() {
          --serving loads a ServingPolicy JSON instead of the two flags;\n\
          --engine picks the serving-loop implementation (calendar = the\n\
          fast-forwarding event-calendar engine, the default; oracle = the\n\
-         per-iteration reference — bit-identical simulated results).\n\
+         per-iteration reference — bit-identical simulated results);\n\
+         --threads N pins the host worker pool that runs the shard loops\n\
+         (default: the RACAM_THREADS env var, else all cores; simulated\n\
+         results are bit-identical for every value).\n\
          \n\
          cluster: --cluster loads a ClusterSpec JSON declaring shard groups\n\
          (count, role unified|prefill|decode, scheduler, policy, channel share,\n\
@@ -214,8 +218,10 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         ),
         None => None,
     };
+    let threads: Option<usize> = flag_value(&args, "--threads").map(|v| v.parse()).transpose()?;
     anyhow::ensure!(shards >= 1, "--shards must be at least 1");
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+    anyhow::ensure!(threads != Some(0), "--threads must be at least 1");
 
     // The cluster: an explicit JSON ClusterSpec (shard groups with roles,
     // schedulers, policies, channel shares — the prefill/decode
@@ -316,7 +322,11 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     fn drive<E: TokenEngine + Send>(
         mut coord: ClusterCoordinator<E>,
         requests: Vec<Request>,
+        threads: Option<usize>,
     ) -> Result<racam::coordinator::ServerReport> {
+        if let Some(t) = threads {
+            coord.set_threads(t);
+        }
         for req in requests {
             coord.submit(req);
         }
@@ -324,7 +334,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     }
 
     let report = if synthetic {
-        drive(builder.build(|_| SyntheticEngine::new(64, 256)), requests)?
+        drive(builder.build(|_| SyntheticEngine::new(64, 256)), requests, threads)?
     } else {
         #[cfg(feature = "pjrt")]
         {
@@ -343,6 +353,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                     HloDecodeEngine::new(modules.next().expect("one module per shard"), 64, 256)
                 }),
                 requests,
+                threads,
             )?
         }
         #[cfg(not(feature = "pjrt"))]

@@ -1,0 +1,286 @@
+//! Work-stealing executor for shard simulation.
+//!
+//! The coordinator used to pin one OS thread per shard: a 64-shard
+//! cluster on a 4-core host serialized behind the scheduler, and a
+//! 2-shard cluster left most cores idle.  This module runs a fixed pool
+//! of workers (`--threads N`, default = available parallelism) over
+//! *resumable* tasks: each task runs one bounded event batch per poll and
+//! reports whether it has more work ([`Poll::Pending`]), is waiting on
+//! external input ([`Poll::Blocked`] — e.g. an open live-intake channel
+//! with nothing queued), or completed ([`Poll::Done`]).
+//!
+//! ## Scheduling
+//!
+//! Tasks are dealt round-robin across per-worker deques.  A worker pops
+//! its own queue from the front (oldest first, so a single worker
+//! round-robins its shards deterministically) and steals from the *back*
+//! of its peers' queues when empty — the classic owner-LIFO/thief-FIFO
+//! split, here with plain mutex-guarded deques (contention is one lock op
+//! per event *batch*, thousands of simulated rounds, so a lock-free deque
+//! would buy nothing measurable).  A task id lives in exactly one queue
+//! at a time and its task body is taken out of its slot while running, so
+//! no task ever runs on two workers concurrently.
+//!
+//! ## Determinism
+//!
+//! The executor adds no nondeterminism to simulated results: tasks
+//! (shard serving runs) never communicate between coordinator barriers,
+//! each task's own poll sequence is serial whatever worker runs it, and
+//! results land in a slot indexed by task order — never completion
+//! order.  The same task set therefore produces bit-identical outputs
+//! for every thread count, which `tests/proptests.rs` and `exp scale`
+//! pin via `ServerReport::sim_divergence`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What one poll of a resumable task reported.
+pub enum Poll<T> {
+    /// More event batches remain; reschedule the task.
+    Pending,
+    /// No progress possible until external input arrives (an open intake
+    /// with an empty channel).  The task is rescheduled; workers back off
+    /// when every live task is blocked instead of spinning.
+    Blocked,
+    /// The task completed with this result.
+    Done(T),
+}
+
+/// A resumable unit of work: polled repeatedly until it returns
+/// [`Poll::Done`].  Borrows are fine (`'a`): the pool runs under
+/// `std::thread::scope`.
+pub type Task<'a, T> = Box<dyn FnMut() -> Poll<T> + Send + 'a>;
+
+/// The host's available parallelism (1 if it cannot be determined).
+pub fn available_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a requested worker-thread count: an explicit request wins
+/// (floored at 1), otherwise the `RACAM_THREADS` environment variable
+/// (how CI pins the equivalence suite to a 2-thread pool), otherwise the
+/// host's available parallelism.
+pub fn resolve_threads(requested: Option<usize>) -> usize {
+    if let Some(n) = requested {
+        return n.max(1);
+    }
+    if let Ok(v) = std::env::var("RACAM_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    available_parallelism()
+}
+
+struct Shared<'a, T> {
+    /// Task bodies, indexed by task id.  A body is taken out while it
+    /// runs, so the lock never covers a poll.
+    slots: Vec<Mutex<Option<Task<'a, T>>>>,
+    /// Per-worker run queues of task ids.
+    queues: Vec<Mutex<VecDeque<usize>>>,
+    /// Completed results, indexed by task id (never completion order).
+    results: Vec<Mutex<Option<T>>>,
+    /// Tasks not yet [`Poll::Done`]; 0 is the pool shutdown signal.
+    remaining: AtomicUsize,
+}
+
+/// Run `tasks` to completion on `threads` workers and return their
+/// results **in task order**.  `threads` is clamped to `[1, tasks.len()]`
+/// — extra workers would only spin.  With one worker the pool runs
+/// inline on the calling thread (no spawn, honest single-thread wall
+/// times for the `exp scale` sweep baseline).
+///
+/// Panics in a task propagate (the scope join re-raises), matching the
+/// old thread-per-shard behavior under test assertions.
+pub fn run_tasks<'a, T: Send>(threads: usize, tasks: Vec<Task<'a, T>>) -> Vec<T> {
+    let n = tasks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    let shared = Shared {
+        slots: tasks.into_iter().map(|t| Mutex::new(Some(t))).collect(),
+        queues: (0..threads).map(|_| Mutex::new(VecDeque::with_capacity(n))).collect(),
+        results: (0..n).map(|_| Mutex::new(None)).collect(),
+        remaining: AtomicUsize::new(n),
+    };
+    // Deal tasks round-robin: the initial split is even, and ids stay
+    // ascending within each queue.
+    for tid in 0..n {
+        shared.queues[tid % threads].lock().unwrap().push_back(tid);
+    }
+    if threads == 1 {
+        worker(&shared, 0);
+    } else {
+        std::thread::scope(|scope| {
+            for w in 0..threads {
+                let shared = &shared;
+                scope.spawn(move || worker(shared, w));
+            }
+        });
+    }
+    shared
+        .results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("remaining hit 0 with every slot filled"))
+        .collect()
+}
+
+fn worker<T: Send>(shared: &Shared<'_, T>, me: usize) {
+    let nq = shared.queues.len();
+    let mut blocked_streak = 0usize;
+    let mut idle_spins = 0usize;
+    loop {
+        if shared.remaining.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        // Own queue first (front = oldest), then steal from peers' backs.
+        let tid = shared.queues[me].lock().unwrap().pop_front().or_else(|| {
+            (1..nq).find_map(|d| shared.queues[(me + d) % nq].lock().unwrap().pop_back())
+        });
+        let Some(tid) = tid else {
+            // Nothing runnable: the remaining tasks are mid-batch on
+            // other workers.  Yield first, then back off, so the tail of
+            // a run does not burn a core per idle worker.
+            idle_spins += 1;
+            if idle_spins < 64 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+            continue;
+        };
+        idle_spins = 0;
+        let mut task = shared.slots[tid]
+            .lock()
+            .unwrap()
+            .take()
+            .expect("a queued task id always has its body in its slot");
+        match task() {
+            Poll::Done(v) => {
+                *shared.results[tid].lock().unwrap() = Some(v);
+                shared.remaining.fetch_sub(1, Ordering::AcqRel);
+                blocked_streak = 0;
+            }
+            Poll::Pending => {
+                // Restore the body *before* re-queueing the id: an id is
+                // only visible to thieves once its slot is occupied.
+                *shared.slots[tid].lock().unwrap() = Some(task);
+                shared.queues[me].lock().unwrap().push_back(tid);
+                blocked_streak = 0;
+            }
+            Poll::Blocked => {
+                *shared.slots[tid].lock().unwrap() = Some(task);
+                shared.queues[me].lock().unwrap().push_back(tid);
+                // When every live task reports blocked (all shards
+                // waiting on an open intake), sleep instead of spinning
+                // try_recv at full tilt.
+                blocked_streak += 1;
+                if blocked_streak >= shared.remaining.load(Ordering::Acquire).max(1) {
+                    std::thread::sleep(Duration::from_micros(200));
+                    blocked_streak = 0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    /// A task that needs `total` polls, counting them.
+    fn counting(total: usize) -> (std::sync::Arc<AtomicUsize>, Task<'static, usize>) {
+        let polls = std::sync::Arc::new(AtomicUsize::new(0));
+        let p = polls.clone();
+        let mut left = total;
+        let task: Task<'static, usize> = Box::new(move || {
+            p.fetch_add(1, Ordering::Relaxed);
+            left -= 1;
+            if left == 0 {
+                Poll::Done(total)
+            } else {
+                Poll::Pending
+            }
+        });
+        (polls, task)
+    }
+
+    #[test]
+    fn results_come_back_in_task_order() {
+        for threads in [1, 2, 4, 8] {
+            let tasks: Vec<Task<'_, usize>> = (0..16).map(|i| counting(i % 5 + 1).1).collect();
+            let out = run_tasks(threads, tasks);
+            let want: Vec<usize> = (0..16).map(|i| i % 5 + 1).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn every_task_is_polled_exactly_to_completion() {
+        let (polls, task) = counting(7);
+        assert_eq!(run_tasks(4, vec![task]), vec![7]);
+        assert_eq!(polls.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn more_threads_than_tasks_is_fine() {
+        let tasks: Vec<Task<'_, usize>> = (0..2).map(|_| counting(3).1).collect();
+        assert_eq!(run_tasks(64, tasks), vec![3, 3]);
+    }
+
+    #[test]
+    fn tasks_can_borrow_the_callers_data() {
+        let mut cells = [0u64; 8];
+        let tasks: Vec<Task<'_, ()>> = cells
+            .iter_mut()
+            .map(|c| {
+                let mut rounds = 10;
+                Box::new(move || {
+                    *c += 1;
+                    rounds -= 1;
+                    if rounds == 0 {
+                        Poll::Done(())
+                    } else {
+                        Poll::Pending
+                    }
+                }) as Task<'_, ()>
+            })
+            .collect();
+        run_tasks(3, tasks);
+        assert_eq!(cells, [10; 8]);
+    }
+
+    #[test]
+    fn blocked_tasks_are_repolled_until_unblocked() {
+        // Task 0 blocks until task 1 (running on any worker) flips the
+        // flag — exercises the re-queue + backoff path.
+        let flag = AtomicBool::new(false);
+        let mut t1_rounds = 50;
+        let tasks: Vec<Task<'_, u32>> = vec![
+            Box::new(|| if flag.load(Ordering::Acquire) { Poll::Done(1) } else { Poll::Blocked }),
+            Box::new(|| {
+                t1_rounds -= 1;
+                if t1_rounds == 0 {
+                    flag.store(true, Ordering::Release);
+                    Poll::Done(2)
+                } else {
+                    Poll::Pending
+                }
+            }),
+        ];
+        assert_eq!(run_tasks(2, tasks), vec![1, 2]);
+    }
+
+    #[test]
+    fn resolve_threads_prefers_explicit_over_env_over_host() {
+        assert_eq!(resolve_threads(Some(3)), 3);
+        assert_eq!(resolve_threads(Some(0)), 1, "explicit requests floor at 1");
+        assert!(resolve_threads(None) >= 1);
+    }
+}

@@ -1,4 +1,7 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! Host runtime: the work-stealing shard [`executor`], host-process
+//! measurement helpers, and the PJRT artifact path.
+//!
+//! The PJRT side loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
 //! once by `make artifacts` from the JAX/Pallas compile path) and executes
 //! them on the XLA CPU client.  This is the only place Python-authored
 //! compute enters the Rust request path — as compiled HLO, never as Python.
@@ -13,8 +16,20 @@
 //! CLI can report what is (not) present.
 
 mod artifact;
+pub mod executor;
 
 pub use artifact::{artifacts_dir, ArtifactSet};
+
+/// Peak resident set size (`VmHWM`) of this process in bytes, read from
+/// `/proc/self/status` — the high-water mark since process start, so
+/// successive readings are monotone.  `None` where the platform does not
+/// expose it (non-Linux); callers report 0/absent rather than guessing.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
 
 #[cfg(feature = "pjrt")]
 mod pjrt_client {

@@ -253,6 +253,38 @@ fn withholding_scheduler_bails_identically_on_both_engines() {
     assert!(cal.contains("withheld 2 queued request(s)"), "{cal}");
 }
 
+/// Cross-thread gate: the host worker pool (`runtime::executor`) must be
+/// invisible to the simulation.  The same cluster × stream on 1 thread,
+/// 2 threads, every core, and an oversubscribed pool must produce
+/// bit-identical merged reports *and* identical rendered SLO/utilization
+/// tables — on the preset whose schedule is hardest to keep deterministic
+/// (EDF + chunked prefill + preemption, deadlines attached).
+#[test]
+fn worker_pool_size_is_simulation_invariant() {
+    use racam::runtime::executor;
+    let mut spec = ClusterSpec::unified(4, 4);
+    spec.groups[0].scheduler = SchedulerKind::Edf;
+    spec.groups[0].policy = ServingPolicy::chunked(256).with_preemption();
+    let traffic = stream(80, 2_000.0, 64, 768, Some(80_000_000));
+    let run = |threads: usize| {
+        let mut coord = ClusterBuilder::new(spec.clone(), &racam_paper(), tiny_spec())
+            .unwrap()
+            .build(|_| SyntheticEngine::new(64, 128));
+        coord.set_threads(threads);
+        for req in generate(&traffic) {
+            coord.submit(req);
+        }
+        coord.run_to_completion().unwrap()
+    };
+    let base = run(1);
+    let mut pools = vec![2, executor::available_parallelism(), 9];
+    pools.sort_unstable();
+    pools.dedup();
+    for t in pools {
+        assert_identical(&format!("pool-t{t}"), &run(t), &base);
+    }
+}
+
 /// The bucket-schedule cache must not change *what* is priced: identical
 /// decode-bucket population and mapping-service hit/miss counters across
 /// engines (the satellite's cache-accounting pin, at the cluster level).

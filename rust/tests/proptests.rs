@@ -5,9 +5,14 @@
 //! Coverage: coordinator invariants (batching, ordering, state), mapping
 //! framework invariants, the functional bit-serial executor against the
 //! scalar reference, the traffic generator (seed determinism, shard-count
-//! invariance), ISA encode/decode, and config JSON round-trips.
+//! invariance), ISA encode/decode, config JSON round-trips, and host-
+//! executor determinism (randomized cluster spec × scheduler × traffic
+//! seed, replayed across worker-pool sizes — the merged report must be
+//! bit-identical on 1 thread, max threads, and oversubscribed pools).
 
-use racam::config::{racam_paper, racam_tiny, ClusterSpec, HwConfig, MatmulShape, Precision};
+use racam::config::{
+    racam_paper, racam_tiny, ClusterSpec, HwConfig, LlmSpec, MatmulShape, Precision,
+};
 use racam::coordinator::{ClusterBuilder, FcfsBatcher, Request, Server, SyntheticEngine};
 use racam::dram::{decode, encode, DramCommand};
 use racam::mapping::{evaluate, enumerate_mappings, HwModel, MappingEngine, MappingService};
@@ -30,6 +35,21 @@ impl Rng {
     }
     fn signed(&mut self, bound: i64) -> i64 {
         (self.next() % (2 * bound as u64)) as i64 - bound
+    }
+}
+
+/// A 2-layer model small enough that randomized serving cases stay fast.
+fn tiny_llm() -> LlmSpec {
+    LlmSpec {
+        name: "tiny".into(),
+        layers: 2,
+        hidden: 256,
+        heads: 4,
+        kv_heads: 4,
+        ffn: 512,
+        gated_ffn: false,
+        vocab: 512,
+        prec: Precision::Int8,
     }
 }
 
@@ -388,6 +408,199 @@ fn prop_command_encode_decode_roundtrip() {
         };
         assert_eq!(decode(encode(&cmd).unwrap()), Some(cmd));
     });
+}
+
+// ---------------------------------------------------------------------------
+// Host-executor determinism (the work-stealing worker pool)
+// ---------------------------------------------------------------------------
+
+mod host_executor {
+    use super::{check, racam_paper, ClusterBuilder, ClusterSpec, RacamSystem, Rng, Server,
+                SyntheticEngine};
+    use racam::config::{
+        ArrivalProcess, EngineKind, HostExecutor, LengthDist, SchedulerKind, ServingPolicy,
+        TrafficSpec,
+    };
+    use racam::coordinator::{BatchPoll, ServerReport, ShardRun};
+    use racam::runtime::executor;
+    use racam::traffic::generate;
+
+    fn random_scheduler(rng: &mut Rng) -> SchedulerKind {
+        [SchedulerKind::Fcfs, SchedulerKind::Bucketed, SchedulerKind::Edf]
+            [rng.range(0, 2) as usize]
+    }
+
+    fn random_policy(rng: &mut Rng, allow_preempt: bool) -> ServingPolicy {
+        let base = match rng.range(0, 2) {
+            0 => ServingPolicy::whole_prefill(),
+            1 => ServingPolicy::chunked(64 << rng.range(0, 2)),
+            _ if allow_preempt => ServingPolicy::chunked(128).with_preemption(),
+            _ => ServingPolicy::chunked(128),
+        };
+        // A quarter of the shapes run the per-iteration oracle: the pool
+        // must be a no-op for both serving-loop implementations.
+        if rng.range(0, 3) == 0 {
+            base.with_engine(EngineKind::Oracle)
+        } else {
+            base
+        }
+    }
+
+    /// A random serving shape: unified (1–4 shards, any scheduler/policy)
+    /// or prefill/decode-disaggregated (preemption off, like the
+    /// `exp disagg` preset).
+    fn random_cluster(rng: &mut Rng) -> ClusterSpec {
+        let max_batch = rng.range(1, 4) as usize;
+        let disagg = rng.range(0, 2) == 0;
+        let mut spec = if disagg {
+            ClusterSpec::disaggregated(
+                rng.range(1, 2) as usize,
+                rng.range(1, 2) as usize,
+                max_batch,
+            )
+        } else {
+            ClusterSpec::unified(rng.range(1, 4) as usize, max_batch)
+        };
+        for g in &mut spec.groups {
+            g.scheduler = random_scheduler(rng);
+            g.policy = random_policy(rng, !disagg);
+        }
+        spec
+    }
+
+    fn random_stream(rng: &mut Rng) -> TrafficSpec {
+        TrafficSpec {
+            seed: rng.next(),
+            requests: rng.range(20, 60),
+            arrival: ArrivalProcess::Poisson { rate_per_s: rng.range(500, 4_000) as f64 },
+            prompt: LengthDist::Uniform { lo: 8, hi: 8 + (64 << rng.range(0, 2)) },
+            output: LengthDist::Uniform { lo: 4, hi: rng.range(8, 32) },
+            deadline_ns: match rng.range(0, 2) {
+                0 => None,
+                _ => Some(rng.range(20_000_000, 200_000_000)),
+            },
+        }
+    }
+
+    /// Run `spec` over `stream` on the given worker pool; merged report.
+    fn run_cluster(spec: &ClusterSpec, stream: &TrafficSpec, exec: HostExecutor) -> ServerReport {
+        let mut coord = ClusterBuilder::new(spec.clone(), &racam_paper(), super::tiny_llm())
+            .unwrap()
+            .build(|_| SyntheticEngine::new(32, 64));
+        coord.set_executor(exec);
+        for req in generate(stream) {
+            coord.submit(req);
+        }
+        coord.run_to_completion().unwrap()
+    }
+
+    fn assert_identical(label: &str, a: &ServerReport, b: &ServerReport) {
+        if let Some(d) = a.sim_divergence(b) {
+            panic!("{label}: reports diverged: {d}");
+        }
+    }
+
+    /// The tentpole property: for any cluster shape × scheduler × stream,
+    /// the merged report is a pure function of the inputs — the worker-
+    /// pool size (1, 2, max, and an oversubscribed 2×max+1) never leaks
+    /// into any simulated quantity.
+    #[test]
+    fn prop_report_invariant_across_thread_counts() {
+        check("thread invariance", 6, |rng| {
+            let spec = random_cluster(rng);
+            let stream = random_stream(rng);
+            let base = run_cluster(&spec, &stream, HostExecutor::with_threads(1));
+            assert_eq!(base.results.len() as u64, stream.requests);
+            let max = executor::available_parallelism();
+            let mut pools = vec![2, max, 2 * max + 1];
+            pools.sort_unstable();
+            pools.dedup();
+            for t in pools {
+                let rep = run_cluster(&spec, &stream, HostExecutor::with_threads(t));
+                assert_identical(
+                    &format!("{} shard(s) on t{t}", spec.total_shards()),
+                    &rep,
+                    &base,
+                );
+            }
+        });
+    }
+
+    /// Shards ≫ cores: a 24-shard cluster on small pools keeps every
+    /// worker's deque loaded and forces continuous stealing — the regime
+    /// where an unprotected result slot or a double-poll would corrupt a
+    /// report.
+    #[test]
+    fn prop_many_more_shards_than_cores_stay_deterministic() {
+        check("24 shards", 2, |rng| {
+            let mut spec = ClusterSpec::unified(24, 2);
+            spec.groups[0].scheduler = random_scheduler(rng);
+            let mut stream = random_stream(rng);
+            stream.requests = 96;
+            let base = run_cluster(&spec, &stream, HostExecutor::with_threads(1));
+            assert_eq!(base.shards.len(), 24);
+            for t in [2, 3, executor::available_parallelism()] {
+                let rep = run_cluster(&spec, &stream, HostExecutor::with_threads(t));
+                assert_identical(&format!("24 shards on t{t}"), &rep, &base);
+            }
+        });
+    }
+
+    /// The stealing granularity is a pure host-side knob too: pathological
+    /// batch sizes (1 round per poll — maximal task churn) and huge ones
+    /// (the whole run in one poll) produce the same merged report.
+    #[test]
+    fn prop_batch_rounds_granularity_does_not_change_results() {
+        check("batch rounds", 3, |rng| {
+            let spec = random_cluster(rng);
+            let stream = random_stream(rng);
+            let base = run_cluster(&spec, &stream, HostExecutor::with_threads(1));
+            for rounds in [1, 7, u64::MAX] {
+                let exec = HostExecutor { threads: Some(2), batch_rounds: rounds };
+                let rep = run_cluster(&spec, &stream, exec);
+                assert_identical(&format!("batch_rounds {rounds}"), &rep, &base);
+            }
+        });
+    }
+
+    /// The resumable-round seam itself: driving one server through
+    /// [`ShardRun`] in tiny poll batches must equal the same server's
+    /// blocking `run_to_completion` bit-for-bit — the executor path is
+    /// the same loop, only sliced.
+    #[test]
+    fn prop_batched_shard_run_equals_run_to_completion() {
+        check("sliced run", 4, |rng| {
+            let stream = random_stream(rng);
+            let policy = random_policy(rng, false);
+            let build = |stream: &TrafficSpec| {
+                let mut s = Server::new(
+                    SyntheticEngine::new(32, 64),
+                    RacamSystem::new(&racam_paper()),
+                    super::tiny_llm(),
+                    3,
+                )
+                .with_policy(policy);
+                for req in generate(stream) {
+                    s.submit(req);
+                }
+                s
+            };
+            let blocking = build(&stream).run_to_completion().unwrap();
+            let mut server = build(&stream);
+            let mut run = ShardRun::new(&mut server);
+            let batch = rng.range(1, 3);
+            let mut polls = 0u32;
+            let sliced = loop {
+                match run.poll(batch).unwrap() {
+                    BatchPoll::Finished => break run.finish(),
+                    BatchPoll::Progressed => polls += 1,
+                    BatchPoll::WouldBlock => panic!("blocked without an intake"),
+                }
+                assert!(polls < 10_000_000, "sliced run did not terminate");
+            };
+            assert_identical("sliced-vs-blocking", &sliced, &blocking);
+        });
+    }
 }
 
 #[test]
