@@ -1,0 +1,44 @@
+//! `tracecheck` — validate an exported Chrome-trace JSON.
+//!
+//! CI generates a trace artifact from the release bench step
+//! (`racam serve ... --trace-out results/trace.json`) and runs this tool
+//! on it before uploading, so a malformed exporter fails the build
+//! instead of shipping a trace the viewer rejects:
+//!
+//! ```text
+//! tracecheck <trace.json> [more.json ...]
+//! ```
+//!
+//! Checks (see [`racam::telemetry::validate_trace`]): the file parses as
+//! JSON with a `traceEvents` array, every event's `ph` is one the
+//! exporter emits, per-track (`pid`, `tid`) timestamps are monotonically
+//! non-decreasing and finite, and every `B` span open has a matching `E`
+//! close with the same name.
+
+use racam::config::json;
+use racam::telemetry::validate_trace;
+
+fn main() {
+    if let Err(e) = run(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: Vec<String>) -> racam::Result<()> {
+    anyhow::ensure!(!args.is_empty(), "usage: tracecheck <trace.json> [more.json ...]");
+    for path in &args {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let trace =
+            json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: invalid JSON: {e:?}"))?;
+        let check =
+            validate_trace(&trace).map_err(|e| anyhow::anyhow!("{path}: invalid trace: {e:#}"))?;
+        println!(
+            "{path}: valid Chrome trace — {} events on {} tracks ({} spans), \
+             per-track timestamps monotonic",
+            check.events, check.tracks, check.spans
+        );
+    }
+    Ok(())
+}

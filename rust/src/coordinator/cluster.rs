@@ -32,14 +32,17 @@ use super::server::Server;
 use super::FcfsBatcher;
 use crate::config::{partition_channels, ClusterSpec, HwConfig, LlmSpec, SchedulerKind};
 use crate::mapping::MappingService;
+use crate::telemetry::{NopRecorder, Recorder};
 use crate::workloads::RacamSystem;
 use crate::Result;
 use std::collections::HashMap;
 
 /// A coordinator whose shards may each run a different admission policy
 /// (what [`ClusterBuilder::build`] yields — per-group [`SchedulerKind`]s
-/// resolve to boxed schedulers at build time).
-pub type ClusterCoordinator<E> = Coordinator<E, Box<dyn Scheduler>>;
+/// resolve to boxed schedulers at build time).  The second parameter is
+/// the telemetry sink ([`NopRecorder`] unless built with
+/// [`ClusterBuilder::build_recorded`]).
+pub type ClusterCoordinator<E, R = NopRecorder> = Coordinator<E, Box<dyn Scheduler>, R>;
 
 /// Builds a [`Coordinator`] from a [`ClusterSpec`] (see module docs).
 pub struct ClusterBuilder {
@@ -161,12 +164,57 @@ impl ClusterBuilder {
     /// use); the groups' [`SchedulerKind`]s are ignored.
     pub fn build_with<E: TokenEngine + Send, S: Scheduler>(
         self,
+        engine_factory: impl FnMut(usize) -> E,
+        scheduler_factory: impl FnMut(usize) -> S,
+    ) -> Coordinator<E, S> {
+        self.build_core(engine_factory, scheduler_factory, |_| NopRecorder, NopRecorder)
+    }
+
+    /// Like [`ClusterBuilder::build`], but with a telemetry [`Recorder`]
+    /// attached to every shard (`recorder_factory`, called once per shard
+    /// in global shard order) and one more for the KV-link track
+    /// (`link_recorder`, owned by the coordinator).  The recorders are
+    /// pure observers: a recorded run is bit-identical to an unrecorded
+    /// one — the engine-equivalence suite enforces this.
+    pub fn build_recorded<E: TokenEngine + Send, R: Recorder + Send>(
+        self,
+        engine_factory: impl FnMut(usize) -> E,
+        recorder_factory: impl FnMut(usize) -> R,
+        link_recorder: R,
+    ) -> ClusterCoordinator<E, R> {
+        let mk: Vec<(SchedulerKind, usize)> =
+            self.spec.groups.iter().map(|g| (g.scheduler, g.max_batch)).collect();
+        let group_of = self.group_of_shard();
+        self.build_core(
+            engine_factory,
+            move |i| {
+                let (kind, max_batch) = mk[group_of[i]];
+                match kind {
+                    SchedulerKind::Fcfs => {
+                        Box::new(FcfsBatcher::new(max_batch)) as Box<dyn Scheduler>
+                    }
+                    SchedulerKind::Bucketed => Box::new(LengthBucketed::new()),
+                    SchedulerKind::Edf => Box::new(EdfScheduler::new()),
+                }
+            },
+            recorder_factory,
+            link_recorder,
+        )
+    }
+
+    /// The one construction path behind `build` / `build_with` /
+    /// `build_recorded`: resolve services, wire each shard's engine,
+    /// scheduler, and recorder, and hand the lot to the coordinator.
+    fn build_core<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send>(
+        self,
         mut engine_factory: impl FnMut(usize) -> E,
         mut scheduler_factory: impl FnMut(usize) -> S,
-    ) -> Coordinator<E, S> {
+        mut recorder_factory: impl FnMut(usize) -> R,
+        link_recorder: R,
+    ) -> Coordinator<E, S, R> {
         let group_of = self.group_of_shard();
         let ClusterBuilder { spec, model, services } = self;
-        let mut shards: Vec<Server<E, S>> = Vec::with_capacity(services.len());
+        let mut shards: Vec<Server<E, S, R>> = Vec::with_capacity(services.len());
         for (i, svc) in services.iter().enumerate() {
             let group = &spec.groups[group_of[i]];
             let mut server = Server::with_scheduler(
@@ -175,14 +223,15 @@ impl ClusterBuilder {
                 model.clone(),
                 group.max_batch,
                 scheduler_factory(i),
-            );
+            )
+            .with_recorder(recorder_factory(i));
             server.set_shard(i);
             server.set_group(&group.name);
             server.set_role(group.role);
             server.set_policy(group.policy);
             shards.push(server);
         }
-        Coordinator::from_parts(shards, services, model, spec.kv_link_gbps)
+        Coordinator::from_parts(shards, services, model, spec.kv_link_gbps, link_recorder)
     }
 
     /// Group index of each global shard index.

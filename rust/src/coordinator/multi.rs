@@ -53,15 +53,23 @@ use crate::config::{
     partition_channels, ClusterSpec, HostExecutor, HwConfig, LlmSpec, ServingPolicy, ShardRole,
 };
 use crate::mapping::MappingService;
-use crate::runtime::executor::{self, Poll};
+use crate::runtime::executor::{self, Poll, WorkerStats};
+use crate::telemetry::{Event, EventKind, NopRecorder, Recorder};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::Instant;
 
 /// N-shard serving coordinator (see module docs).
-pub struct Coordinator<E: TokenEngine, S: Scheduler = FcfsBatcher> {
-    shards: Vec<Server<E, S>>,
+///
+/// The third parameter is the telemetry sink type shared by every shard
+/// and the KV link ([`NopRecorder`] by default — zero-cost, see
+/// [`crate::telemetry`]).  A recorded cluster is built with
+/// [`ClusterBuilder::build_recorded`]; after a run, per-shard event
+/// streams are read back through [`Coordinator::shard_recorder`] and the
+/// KV-link stream through [`Coordinator::link_recorder`].
+pub struct Coordinator<E: TokenEngine, S: Scheduler = FcfsBatcher, R: Recorder = NopRecorder> {
+    shards: Vec<Server<E, S, R>>,
     /// One mapping-service handle per shard (clones share caches; shards
     /// with different channel partitions hold distinct services).
     services: Vec<MappingService>,
@@ -76,6 +84,13 @@ pub struct Coordinator<E: TokenEngine, S: Scheduler = FcfsBatcher> {
     /// How shard serving loops map onto host worker threads (see
     /// [`HostExecutor`]); host-side only — never changes simulated results.
     executor: HostExecutor,
+    /// Telemetry sink for the shared KV link (the coordinator owns the
+    /// link, so its wire/release events live here, not on a shard).
+    link_recorder: R,
+    /// Per-worker host-side counters of the most recent
+    /// [`Coordinator::run_to_completion`], indexed by pool worker id
+    /// (waves of a disaggregated run accumulate per worker).
+    worker_stats: Vec<WorkerStats>,
 }
 
 /// Live submission handle for a running coordinator: requests round-robin
@@ -156,7 +171,7 @@ impl<E: TokenEngine + Send> Coordinator<E, FcfsBatcher> {
     }
 }
 
-impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
+impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, R> {
     /// One mapping service per shard under channel partitioning: shards
     /// with equal channel counts share a service, so a shape priced on one
     /// is reused by its peers.  Falls back to one full-config service for
@@ -182,6 +197,34 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
         }
     }
 
+    /// Assemble a coordinator from fully configured shards (the
+    /// [`ClusterBuilder`] back end; roles/groups/policies — and, for a
+    /// recorded cluster, the per-shard recorders — are already set on
+    /// each [`Server`]).  `link_recorder` receives the KV-link events of
+    /// [`Coordinator::dispatch_handoffs`].
+    pub(crate) fn from_parts(
+        shards: Vec<Server<E, S, R>>,
+        services: Vec<MappingService>,
+        spec: LlmSpec,
+        kv_link_gbps: f64,
+        link_recorder: R,
+    ) -> Self {
+        assert!(!shards.is_empty(), "a coordinator needs at least one shard");
+        let roles = shards.iter().map(|s| s.role()).collect();
+        Coordinator {
+            shards,
+            services,
+            spec,
+            roles,
+            kv_link_gbps,
+            executor: HostExecutor::default(),
+            link_recorder,
+            worker_stats: Vec::new(),
+        }
+    }
+}
+
+impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
     /// Fully general constructor: a shared service plus per-shard
     /// scheduler construction (compare admission policies under identical
     /// pricing).
@@ -227,28 +270,9 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
         .expect("a unified spec is always valid")
         .build_with(engine_factory, scheduler_factory)
     }
+}
 
-    /// Assemble a coordinator from fully configured shards (the
-    /// [`ClusterBuilder`] back end; roles/groups/policies are already set
-    /// on each [`Server`]).
-    pub(crate) fn from_parts(
-        shards: Vec<Server<E, S>>,
-        services: Vec<MappingService>,
-        spec: LlmSpec,
-        kv_link_gbps: f64,
-    ) -> Self {
-        assert!(!shards.is_empty(), "a coordinator needs at least one shard");
-        let roles = shards.iter().map(|s| s.role()).collect();
-        Coordinator {
-            shards,
-            services,
-            spec,
-            roles,
-            kv_link_gbps,
-            executor: HostExecutor::default(),
-        }
-    }
-
+impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, R> {
     /// Configure the host executor (worker-thread count, stealing
     /// granularity).  Simulated results are identical for every setting;
     /// only host wall time changes.
@@ -366,9 +390,9 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
     /// so results are bit-identical across every thread count.
     fn run_shards(
         exec: HostExecutor,
-        shards: &mut [Server<E, S>],
+        shards: &mut [Server<E, S, R>],
         pred: impl Fn(ShardRole) -> bool,
-    ) -> Vec<Result<ServerReport>> {
+    ) -> (Vec<Result<ServerReport>>, Vec<WorkerStats>) {
         let batch_rounds = exec.batch_rounds.max(1);
         let tasks: Vec<executor::Task<'_, Result<ServerReport>>> = shards
             .iter_mut()
@@ -389,10 +413,10 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
             })
             .collect();
         if tasks.is_empty() {
-            return Vec::new();
+            return (Vec::new(), Vec::new());
         }
         let threads = executor::resolve_threads(exec.threads).min(tasks.len());
-        executor::run_tasks(threads, tasks)
+        executor::run_tasks_with_stats(threads, tasks)
     }
 
     /// Move every finished prefill to a decode shard, pricing the KV-cache
@@ -429,6 +453,23 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
             let start_ns = h.prefill_finish_at_ns.max(link_free_at_ns);
             link_free_at_ns = start_ns + wire_ns;
             let transfer_ns = link_free_at_ns - h.prefill_finish_at_ns;
+            // The link track: wire occupancy, then the release onto the
+            // chosen decode shard.  `start_ns = max(finish, link_free)`
+            // is non-decreasing over the FIFO-sorted handoffs, so the
+            // track's timestamps are monotonic by construction.
+            self.link_recorder.record(Event::span(
+                EventKind::KvWire,
+                start_ns,
+                wire_ns,
+                h.req.id,
+                kv_bytes as f64,
+            ));
+            self.link_recorder.record(Event::instant(
+                EventKind::DecodeRelease,
+                link_free_at_ns,
+                h.req.id,
+                shard as f64,
+            ));
             self.shards[shard].submit_handoff(h, transfer_ns);
         }
     }
@@ -448,15 +489,21 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
     pub fn run_to_completion(&mut self) -> Result<ServerReport> {
         let wall_start = Instant::now();
         let exec = self.executor;
+        self.worker_stats.clear();
         let reports = if !self.is_disaggregated() {
-            Self::run_shards(exec, &mut self.shards, |_| true)
+            let (reports, stats) = Self::run_shards(exec, &mut self.shards, |_| true);
+            self.absorb_worker_stats(&stats);
+            reports
         } else {
-            let mut first =
+            let (mut first, stats) =
                 Self::run_shards(exec, &mut self.shards, |r| r.accepts_fresh_prompts());
+            self.absorb_worker_stats(&stats);
             self.dispatch_handoffs();
-            first.extend(Self::run_shards(exec, &mut self.shards, |r| {
+            let (second, stats) = Self::run_shards(exec, &mut self.shards, |r| {
                 matches!(r, ShardRole::Decode)
-            }));
+            });
+            self.absorb_worker_stats(&stats);
+            first.extend(second);
             first
         };
         let mut merged = Vec::with_capacity(reports.len());
@@ -464,6 +511,36 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
             merged.push(r?);
         }
         Ok(ServerReport::merge(merged, wall_start.elapsed().as_nanos() as f64))
+    }
+
+    /// Fold one wave's per-worker counters into the run's accumulator
+    /// (worker *w* of every wave lands in row *w* — the pool is rebuilt
+    /// per wave, but row `w` always describes "the w-th worker thread").
+    fn absorb_worker_stats(&mut self, stats: &[WorkerStats]) {
+        if self.worker_stats.len() < stats.len() {
+            self.worker_stats.resize(stats.len(), WorkerStats::default());
+        }
+        for (acc, s) in self.worker_stats.iter_mut().zip(stats) {
+            acc.absorb(s);
+        }
+    }
+
+    /// Per-worker host-side counters of the most recent
+    /// [`Coordinator::run_to_completion`] (empty before the first run).
+    pub fn worker_stats(&self) -> &[WorkerStats] {
+        &self.worker_stats
+    }
+
+    /// The KV-link telemetry sink (wire spans + decode releases of a
+    /// disaggregated run; empty events on a unified cluster).
+    pub fn link_recorder(&self) -> &R {
+        &self.link_recorder
+    }
+
+    /// Shard `i`'s telemetry sink (its simulated event stream after a
+    /// recorded run).
+    pub fn shard_recorder(&self, shard: usize) -> &R {
+        self.shards[shard].recorder()
     }
 }
 

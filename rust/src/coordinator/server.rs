@@ -84,6 +84,7 @@ use super::engine::TokenEngine;
 use super::scheduler::{Preemption, Scheduler};
 use crate::config::{EngineKind, LlmSpec, ServingPolicy, ShardRole};
 use crate::metrics::LatencyBreakdown;
+use crate::telemetry::{Event, EventKind, NopRecorder, Recorder, NO_REQ};
 use crate::workloads::{decode_kernels, prefill_kernels, stage_latency, RacamSystem};
 use crate::Result;
 use std::cmp::Reverse;
@@ -424,7 +425,14 @@ impl PartialOrd for FutureReq {
 }
 
 /// One serving worker (see module docs).
-pub struct Server<E: TokenEngine, S: Scheduler = FcfsBatcher> {
+///
+/// The third parameter is the telemetry sink: [`NopRecorder`] by default,
+/// whose empty inline `record` monomorphizes every hook away — the
+/// uninstrumented hot loop, unchanged.  Swap it with
+/// [`Server::with_recorder`] to capture the simulated event stream; a
+/// recorder is a pure observer, so simulated results stay bit-identical
+/// either way (`tests/engine_equivalence.rs` pins this).
+pub struct Server<E: TokenEngine, S: Scheduler = FcfsBatcher, R: Recorder = NopRecorder> {
     engine: E,
     racam: RacamSystem,
     spec: LlmSpec,
@@ -459,6 +467,8 @@ pub struct Server<E: TokenEngine, S: Scheduler = FcfsBatcher> {
     /// as the decode cache), so live traffic with many distinct prompt
     /// lengths prices a bounded number of prefill shapes.
     prefill_cache: HashMap<u64, LatencyBreakdown>,
+    /// Telemetry sink (zero-sized no-op by default).
+    recorder: R,
 }
 
 /// Where one batch member is in its lifecycle.
@@ -861,7 +871,48 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             intake: None,
             decode_cache: HashMap::new(),
             prefill_cache: HashMap::new(),
+            recorder: NopRecorder,
         }
+    }
+}
+
+impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
+    /// Swap the telemetry sink (e.g. a
+    /// [`TraceRecorder`](crate::telemetry::TraceRecorder) for
+    /// `--trace-out`).  Builder-style because it changes the server's
+    /// type: recording is a compile-time property, which is what makes
+    /// the disabled path free.
+    pub fn with_recorder<R2: Recorder>(self, recorder: R2) -> Server<E, S, R2> {
+        Server {
+            engine: self.engine,
+            racam: self.racam,
+            spec: self.spec,
+            scheduler: self.scheduler,
+            max_batch: self.max_batch,
+            shard_id: self.shard_id,
+            group: self.group,
+            role: self.role,
+            handoffs_out: self.handoffs_out,
+            handoff_meta: self.handoff_meta,
+            policy: self.policy,
+            future: self.future,
+            admit_scratch: self.admit_scratch,
+            intake: self.intake,
+            decode_cache: self.decode_cache,
+            prefill_cache: self.prefill_cache,
+            recorder,
+        }
+    }
+
+    /// The telemetry sink (borrow the recorded events after a run).
+    pub fn recorder(&self) -> &R {
+        &self.recorder
+    }
+
+    /// Mutable access to the telemetry sink (e.g. to drain events
+    /// between runs).
+    pub fn recorder_mut(&mut self) -> &mut R {
+        &mut self.recorder
     }
 
     /// Set the serving policy (chunked prefill, preemption).  The default
@@ -1086,6 +1137,12 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
     fn release_due(&mut self, sim_now_ns: f64) {
         while self.future.peek().is_some_and(|r| r.0.arrival_ns as f64 <= sim_now_ns) {
             let Reverse(f) = self.future.pop().expect("peeked entry");
+            self.recorder.record(Event::instant(
+                EventKind::ArrivalRelease,
+                sim_now_ns,
+                f.id,
+                f.arrival_ns as f64,
+            ));
             self.scheduler.submit(f.req);
         }
     }
@@ -1187,6 +1244,12 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         self.scheduler.next_batch_into(slots, &mut batch);
         let admitted = batch.len();
         for req in batch.drain(..) {
+            self.recorder.record(Event::instant(
+                EventKind::Admit,
+                st.sim_now_ns,
+                req.id,
+                self.scheduler.pending() as f64,
+            ));
             // Recycled hidden-state buffer (retired members return theirs
             // to the pool).
             let mut hidden = st.hidden_pool.pop().unwrap_or_default();
@@ -1248,6 +1311,12 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                     Preemption::Requeue => {
                         st.preemptions += 1;
                         requeued += 1;
+                        self.recorder.record(Event::instant(
+                            EventKind::Preempt,
+                            st.sim_now_ns,
+                            st.running[i].req.id,
+                            st.running[i].tokens.len() as f64,
+                        ));
                         // Generation state is dropped: re-admission
                         // re-prefills (recompute-style preemption).  A
                         // re-queued *handoff* keeps its bookkeeping —
@@ -1266,6 +1335,12 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
                     Preemption::Shed => {
                         st.shed_count += 1;
                         shed_round += 1;
+                        self.recorder.record(Event::instant(
+                            EventKind::Shed,
+                            st.sim_now_ns,
+                            st.running[i].req.id,
+                            st.running[i].tokens.len() as f64,
+                        ));
                         let r = st.remove_member(i);
                         let res = r.retire(st.sim_now_ns, true, &mut st.hidden_pool);
                         st.done.push(res);
@@ -1303,6 +1378,13 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         let hi_bucket = if finished { st.running[idx].prompt_bucket } else { ctx_bucket(end) };
         let span = self.prefill_span_cost_to(prefilled, end, hi_bucket)?;
         let step_ns = span.total_ns();
+        self.recorder.record(Event::span(
+            EventKind::PrefillChunk,
+            st.sim_now_ns,
+            step_ns,
+            st.running[idx].req.id,
+            (end - prefilled) as f64,
+        ));
         st.sim_now_ns += step_ns;
         st.prefill_chunks += 1;
         if decoders_waiting {
@@ -1357,6 +1439,12 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             hidden.clear();
             st.hidden_pool.push(hidden);
             st.handed_off += 1;
+            self.recorder.record(Event::instant(
+                EventKind::HandoffDispatch,
+                st.sim_now_ns,
+                r.req.id,
+                r.req.prompt.len() as f64,
+            ));
             self.handoffs_out.push(Handoff {
                 sim_prefill_ns: r.sim_ttft_ns,
                 prefill_finish_at_ns: st.sim_now_ns,
@@ -1429,6 +1517,13 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             // Idle until the next arrival: jump the clock.
             let next = r.0.arrival_ns as f64;
             if next > st.sim_now_ns {
+                self.recorder.record(Event::span(
+                    EventKind::IdleJump,
+                    st.sim_now_ns,
+                    next - st.sim_now_ns,
+                    NO_REQ,
+                    0.0,
+                ));
                 st.sim_idle_ns += next - st.sim_now_ns;
                 st.sim_now_ns = next;
             }
@@ -1493,6 +1588,18 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             }
             let ctx = r.req.prompt.len() as u64 + r.tokens.len() as u64 + 1;
             let bucket = ctx_bucket(ctx);
+            // A member whose *priced* schedule ran out crossed a pricing-
+            // bucket edge; a STALE schedule (cost 0) is a fresh admission,
+            // not an edge.  Calendar-only: the oracle prices per iteration
+            // and never materializes an edge to cross.
+            if r.sched.cost_ns > 0.0 {
+                self.recorder.record(Event::instant(
+                    EventKind::BucketEdge,
+                    st.sim_now_ns,
+                    r.req.id,
+                    bucket as f64,
+                ));
+            }
             let cost = self.decode_cost_bucket(bucket)?;
             st.running[i].sched =
                 DecodeSchedule { cost_ns: cost.total_ns(), tokens_to_edge: bucket + 1 - ctx };
@@ -1520,6 +1627,7 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
         let next_arrival = self.future.peek().map(|r| r.0.arrival_ns as f64);
         let horizon_ns = horizon.unwrap_or(f64::INFINITY);
         let occ = st.decoding as f64 / self.max_batch as f64;
+        let stretch_start_ns = st.sim_now_ns;
 
         let mut iters = 0u64;
         while iters < k {
@@ -1551,6 +1659,20 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             if next_arrival.is_some_and(|a| a <= st.sim_now_ns) || st.sim_now_ns > horizon_ns {
                 break;
             }
+        }
+
+        // One event per stretch, however many iterations it fast-forwarded
+        // (`count` carries the multiplicity — `Metrics::absorb_events`
+        // fans it back out to per-iteration occupancy samples).
+        if iters > 0 {
+            self.recorder.record(Event {
+                kind: EventKind::DecodeStretch,
+                at_ns: stretch_start_ns,
+                dur_ns: st.sim_now_ns - stretch_start_ns,
+                req: NO_REQ,
+                value: st.decoding as f64,
+                count: iters,
+            });
         }
 
         // Advance every decoder's pricing schedule by the stretch length.
@@ -1706,6 +1828,16 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             iteration_ns = iteration_ns.max(cost);
         }
         st.sim_now_ns += iteration_ns;
+        // The oracle emits one single-iteration stretch per decode round
+        // (the calendar engine's fast path coalesces these with `count`).
+        self.recorder.record(Event {
+            kind: EventKind::DecodeStretch,
+            at_ns: st.sim_now_ns - iteration_ns,
+            dur_ns: iteration_ns,
+            req: NO_REQ,
+            value: decoding as f64,
+            count: 1,
+        });
         for r in &mut st.running {
             if matches!(r.phase, Phase::Decode) && r.tokens.len() == 1 {
                 // First decoded token lands at the end of this
@@ -1846,17 +1978,17 @@ pub enum BatchPoll {
 /// calls (time parked in the executor's queues is not charged), and the
 /// intake is probed with `try_recv` instead of parking (see
 /// [`Server::idle_step`]).
-pub struct ShardRun<'a, E: TokenEngine, S: Scheduler> {
-    server: &'a mut Server<E, S>,
+pub struct ShardRun<'a, E: TokenEngine, S: Scheduler, R: Recorder = NopRecorder> {
+    server: &'a mut Server<E, S, R>,
     st: Option<LoopState>,
     wall_ns: f64,
     finished: bool,
 }
 
-impl<'a, E: TokenEngine, S: Scheduler> ShardRun<'a, E, S> {
+impl<'a, E: TokenEngine, S: Scheduler, R: Recorder> ShardRun<'a, E, S, R> {
     /// Begin a resumable run on `server` (drains the same work sources as
     /// [`Server::run_to_completion`]).
-    pub fn new(server: &'a mut Server<E, S>) -> Self {
+    pub fn new(server: &'a mut Server<E, S, R>) -> Self {
         let st = server.begin_state();
         ShardRun { server, st: Some(st), wall_ns: 0.0, finished: false }
     }

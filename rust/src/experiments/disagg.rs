@@ -29,6 +29,7 @@ use crate::coordinator::{ClusterBuilder, Request, SyntheticEngine};
 use crate::mapping::MappingService;
 use crate::metrics::fmt_ns;
 use crate::report::Table;
+use crate::telemetry::Metrics;
 use crate::traffic::{generate, ttft_percentiles_where, SloSummary};
 
 /// Total shards per cluster (channel partition: 4 × 2 of the paper's 8).
@@ -178,14 +179,15 @@ fn run_cell(
 }
 
 /// The cluster × rate matrix, plus the per-group utilization view of the
-/// disaggregated cluster at the highest rate.
+/// disaggregated cluster at the highest rate and the telemetry
+/// [`Metrics`] registry merged over every cell in row order.
 fn matrix(
     services: &[MappingService],
     model: &LlmSpec,
     rates: &[f64],
     shorts: u64,
     longs: u64,
-) -> crate::Result<(Table, Table)> {
+) -> crate::Result<(Table, Table, Metrics)> {
     let mut t = Table::new(
         &format!(
             "Disaggregation — unified vs prefill/decode split, {} on {SHARDS} shards × batch \
@@ -197,11 +199,13 @@ fn matrix(
         &Cell::headers(),
     );
     let mut disagg_summary = None;
+    let mut metrics = Metrics::default();
     for &rate in rates {
         let stream = mixed_stream(rate, shorts, longs);
         for (label, spec) in clusters() {
             let disaggregated = spec.is_disaggregated();
             let cell = run_cell(services, model, spec, &stream)?;
+            metrics.merge(&cell.summary.metrics);
             if disaggregated {
                 disagg_summary = Some(cell.summary.clone());
             }
@@ -217,10 +221,10 @@ fn matrix(
             ),
             false,
         );
-    Ok((t, util))
+    Ok((t, util, metrics))
 }
 
-pub fn run() -> crate::Result<Vec<Table>> {
+pub fn run() -> crate::Result<(Vec<Table>, Metrics)> {
     // All clusters in the roster total SHARDS shards, so one shared
     // 2-channel-per-shard partition prices every cell from the same caches.
     let services = ClusterBuilder::new(
@@ -230,8 +234,9 @@ pub fn run() -> crate::Result<Vec<Table>> {
     )?
     .services()
     .to_vec();
-    let (t, util) = matrix(&services, &gpt3_6_7b(), RATES, SHORT_REQUESTS, LONG_REQUESTS)?;
-    Ok(vec![t, util])
+    let (t, util, metrics) =
+        matrix(&services, &gpt3_6_7b(), RATES, SHORT_REQUESTS, LONG_REQUESTS)?;
+    Ok((vec![t, util], metrics))
 }
 
 #[cfg(test)]
@@ -299,8 +304,10 @@ mod tests {
 
     #[test]
     fn matrix_covers_every_cluster_and_rate() {
-        let (t, util) = matrix(&services(), &tiny_spec(), &[800.0], 6, 2).unwrap();
+        let (t, util, metrics) = matrix(&services(), &tiny_spec(), &[800.0], 6, 2).unwrap();
         assert_eq!(t.num_rows(), clusters().len());
+        assert_eq!(metrics.requests as usize, clusters().len() * 8, "3 cells x 8 requests");
+        assert!(metrics.handoffs > 0, "the disaggregated cell crosses the KV link");
         let rendered = t.render();
         for (label, _) in clusters() {
             assert!(rendered.contains(&format!("{label}@800")), "missing {label}:\n{rendered}");

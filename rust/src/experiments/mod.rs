@@ -23,6 +23,7 @@ pub use common::{racam_stage_latency, stage_speedups, SystemSet};
 use crate::config::json::Value;
 use crate::config::{racam_paper, Precision};
 use crate::report::Table;
+use crate::telemetry::Metrics;
 use crate::Result;
 use std::time::Instant;
 
@@ -35,25 +36,28 @@ pub const ALL_IDS: &[&str] = &[
 
 /// Run one experiment; returns its tables (already saved under `results/`,
 /// alongside a machine-readable `BENCH_<id>.json` for cross-PR tracking).
+/// Serving experiments also fold their telemetry [`Metrics`] registry
+/// into the bench artifact; static experiments carry an (all-zero)
+/// default so the `metrics.*` schema fields are emitted unconditionally.
 pub fn run(id: &str) -> Result<Vec<Table>> {
     let wall_start = Instant::now();
-    let tables = match id {
-        "fig1" => fig01::run(),
-        "fig9" => fig09::run_fig9(),
-        "fig10" => fig09::run_fig10(),
-        "fig11" => fig09::run_fig11(),
-        "fig12" => fig12::run(),
-        "fig13" => fig13::run(),
-        "fig14" => fig14::run(),
-        "fig15" => fig15::run(),
-        "fig16" => fig16::run(),
-        "fig17" => fig17::run(),
-        "tab1" => tables::run_tab1(),
-        "tab4" => tables::run_tab4(),
-        "tab5" => tables::run_tab5(),
-        "ext-energy" => extensions::run_energy(),
-        "ext-reliability" => extensions::run_reliability(),
-        "ext-trace" => extensions::run_trace(),
+    let (tables, metrics) = match id {
+        "fig1" => (fig01::run(), Metrics::default()),
+        "fig9" => (fig09::run_fig9(), Metrics::default()),
+        "fig10" => (fig09::run_fig10(), Metrics::default()),
+        "fig11" => (fig09::run_fig11(), Metrics::default()),
+        "fig12" => (fig12::run(), Metrics::default()),
+        "fig13" => (fig13::run(), Metrics::default()),
+        "fig14" => (fig14::run(), Metrics::default()),
+        "fig15" => (fig15::run(), Metrics::default()),
+        "fig16" => (fig16::run(), Metrics::default()),
+        "fig17" => (fig17::run(), Metrics::default()),
+        "tab1" => (tables::run_tab1(), Metrics::default()),
+        "tab4" => (tables::run_tab4(), Metrics::default()),
+        "tab5" => (tables::run_tab5(), Metrics::default()),
+        "ext-energy" => (extensions::run_energy(), Metrics::default()),
+        "ext-reliability" => (extensions::run_reliability(), Metrics::default()),
+        "ext-trace" => (extensions::run_trace(), Metrics::default()),
         "traffic" => traffic::run()?,
         "prefill" => prefill::run()?,
         "disagg" => disagg::run()?,
@@ -71,7 +75,10 @@ pub fn run(id: &str) -> Result<Vec<Table>> {
     }
     crate::report::save(&format!("{id}.txt"), &text)?;
     crate::report::save(&format!("{id}.csv"), &csv)?;
-    crate::report::save(&format!("BENCH_{id}.json"), &bench_json(id, &tables, wall_ms))?;
+    crate::report::save(
+        &format!("BENCH_{id}.json"),
+        &bench_json(id, &tables, wall_ms, &metrics),
+    )?;
     Ok(tables)
 }
 
@@ -80,9 +87,10 @@ pub fn run(id: &str) -> Result<Vec<Table>> {
 /// fig13 — vary from this preset; their tables carry the swept values),
 /// experiment-specific config (serving experiments add scheduler names and
 /// arrival rates so the perf trajectory is diffable without parsing table
-/// titles), its result tables (the latencies), and the host wall time of
+/// titles), its result tables (the latencies), the telemetry metrics
+/// registry (zeros for static experiments), and the host wall time of
 /// the run — one JSON per experiment so the trajectory diffs across PRs.
-fn bench_json(id: &str, tables: &[Table], wall_ms: f64) -> String {
+fn bench_json(id: &str, tables: &[Table], wall_ms: f64, metrics: &Metrics) -> String {
     let hw = racam_paper();
     let mut config = vec![
         ("preset", Value::Str("racam_paper".into())),
@@ -96,6 +104,7 @@ fn bench_json(id: &str, tables: &[Table], wall_ms: f64) -> String {
         ("name", Value::Str(id.to_string())),
         ("config", Value::obj(config)),
         ("wall_ms", Value::Num(wall_ms)),
+        ("metrics", metrics.to_json()),
         ("tables", Value::Arr(tables.iter().map(|t| t.to_json()).collect())),
     ])
     .pretty()
@@ -125,11 +134,15 @@ mod tests {
         use crate::report::Table;
         let mut t = Table::new("demo", &["a"]);
         t.row(vec!["1".into()]);
-        let s = super::bench_json("fig9", &[t], 12.5);
+        let s = super::bench_json("fig9", &[t], 12.5, &crate::telemetry::Metrics::default());
         let v = json::parse(&s).unwrap();
         assert_eq!(v.get("name").unwrap().as_str().unwrap(), "fig9");
         assert_eq!(v.get("config").unwrap().get("channels").unwrap().as_u32().unwrap(), 8);
         assert!(v.get("wall_ms").unwrap().as_f64().unwrap() > 0.0);
+        // The metrics registry is present even for static experiments.
+        let m = v.get("metrics").unwrap();
+        assert_eq!(m.get("requests").unwrap().as_u32().unwrap(), 0);
+        assert_eq!(m.get("ttft_ns").unwrap().get("total").unwrap().as_u32().unwrap(), 0);
         // Non-serving experiments carry no scheduler/rate entries.
         assert!(v.get("config").unwrap().get("schedulers").is_err());
     }
@@ -150,7 +163,7 @@ mod tests {
         assert!(!exps.is_empty());
         for (id, fields) in exps {
             let Value::Arr(fields) = fields else { panic!("{id}: fields must be an array") };
-            let emitted = super::bench_json(id, &[], 1.0);
+            let emitted = super::bench_json(id, &[], 1.0, &crate::telemetry::Metrics::default());
             let actual: BTreeSet<String> =
                 schema_of(&json::parse(&emitted).unwrap()).into_iter().collect();
             for f in fields {
@@ -171,7 +184,7 @@ mod tests {
     fn serving_bench_json_names_schedulers_and_rates() {
         use crate::config::json::{self, Value};
         for id in ["traffic", "prefill", "disagg", "scale"] {
-            let s = super::bench_json(id, &[], 1.0);
+            let s = super::bench_json(id, &[], 1.0, &crate::telemetry::Metrics::default());
             let v = json::parse(&s).unwrap();
             let cfg = v.get("config").unwrap();
             let Value::Arr(scheds) = cfg.get("schedulers").unwrap() else {

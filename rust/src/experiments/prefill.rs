@@ -20,6 +20,7 @@ use crate::coordinator::{ClusterBuilder, Request, SyntheticEngine};
 use crate::mapping::MappingService;
 use crate::metrics::fmt_ns;
 use crate::report::Table;
+use crate::telemetry::Metrics;
 use crate::traffic::{generate, ttft_percentiles_where, SloSummary};
 
 const SHARDS: usize = 2;
@@ -167,14 +168,15 @@ fn run_cell(
 }
 
 /// The (scheduler × policy) × rate matrix over `services` (one mapping
-/// service per shard, shared across every cell).
+/// service per shard, shared across every cell), plus the telemetry
+/// [`Metrics`] registry merged over every cell in row order.
 fn matrix(
     services: &[MappingService],
     model: &LlmSpec,
     rates: &[f64],
     shorts: u64,
     longs: u64,
-) -> crate::Result<Table> {
+) -> crate::Result<(Table, Metrics)> {
     let mut t = Table::new(
         &format!(
             "Prefill — chunked ({CHUNK} tok) vs whole-prompt prefill, {} on {} shard(s) × batch \
@@ -186,6 +188,7 @@ fn matrix(
         ),
         &Cell::headers(),
     );
+    let mut metrics = Metrics::default();
     for &rate in rates {
         let stream = mixed_stream(rate, shorts, longs);
         // The SCHEDULERS roster bench_config() reports drives the rows,
@@ -197,14 +200,15 @@ fn matrix(
                 .ok_or_else(|| anyhow::anyhow!("no scheduler kind named '{sched}'"))?;
             for policy in policies() {
                 let cell = run_cell(services, model, &stream, policy, kind)?;
+                metrics.merge(&cell.summary.metrics);
                 t.row(cell.row(&format!("{sched}/{}@{rate}/s", policy.label())));
             }
         }
     }
-    Ok(t)
+    Ok((t, metrics))
 }
 
-pub fn run() -> crate::Result<Vec<Table>> {
+pub fn run() -> crate::Result<(Vec<Table>, Metrics)> {
     let services: Vec<MappingService> = ClusterBuilder::new(
         ClusterSpec::unified(SHARDS, MAX_BATCH),
         &racam_paper(),
@@ -212,7 +216,8 @@ pub fn run() -> crate::Result<Vec<Table>> {
     )?
     .services()
     .to_vec();
-    Ok(vec![matrix(&services, &gpt3_6_7b(), RATES, SHORT_REQUESTS, LONG_REQUESTS)?])
+    let (t, metrics) = matrix(&services, &gpt3_6_7b(), RATES, SHORT_REQUESTS, LONG_REQUESTS)?;
+    Ok((vec![t], metrics))
 }
 
 #[cfg(test)]
@@ -302,8 +307,10 @@ mod tests {
 
     #[test]
     fn matrix_covers_schedulers_and_policies() {
-        let t = matrix(&one_service(), &tiny_spec(), &[800.0], 6, 2).unwrap();
+        let (t, metrics) = matrix(&one_service(), &tiny_spec(), &[800.0], 6, 2).unwrap();
         assert_eq!(t.num_rows(), 6, "2 schedulers x 3 policies");
+        assert_eq!(metrics.requests, 6 * 8, "6 cells x 8 requests");
+        assert!(metrics.prefill_chunks > 0);
         let rendered = t.render();
         for label in
             ["fcfs/whole@800", "fcfs/chunk256@800", "edf/chunk256+preempt@800"]

@@ -38,7 +38,9 @@ use crate::coordinator::{
 };
 use crate::mapping::MappingService;
 use crate::report::Table;
-use crate::runtime::{executor, peak_rss_bytes};
+use crate::runtime::executor::{self, WorkerStats};
+use crate::runtime::peak_rss_bytes;
+use crate::telemetry::Metrics;
 use crate::traffic::generate;
 use crate::workloads::RacamSystem;
 use std::time::Instant;
@@ -172,13 +174,14 @@ fn run_cell(
 
 /// One thread count of the host-executor sweep: the full million-request
 /// stream over a fresh 8-shard unified FCFS cluster, returning the merged
-/// report and the host wall time of the run itself (submission excluded —
-/// the sweep times the executor, not the traffic generator).
+/// report, the host wall time of the run itself (submission excluded —
+/// the sweep times the executor, not the traffic generator), and the
+/// per-worker host-side counters of the pool that ran it.
 fn run_sweep_cell(
     service: &MappingService,
     requests: u64,
     threads: usize,
-) -> crate::Result<(ServerReport, f64)> {
+) -> crate::Result<(ServerReport, f64, Vec<WorkerStats>)> {
     let mut coord = ClusterBuilder::with_spec_and_services(
         ClusterSpec::unified(SWEEP_SHARDS, MAX_BATCH),
         gpt3_6_7b(),
@@ -193,7 +196,8 @@ fn run_sweep_cell(
     }
     let start = Instant::now();
     let report = coord.run_to_completion()?;
-    Ok((report, start.elapsed().as_nanos() as f64))
+    let wall_ns = start.elapsed().as_nanos() as f64;
+    Ok((report, wall_ns, coord.worker_stats().to_vec()))
 }
 
 /// Fail loudly if the two engines' simulated results differ anywhere —
@@ -260,8 +264,20 @@ fn rss_mb() -> String {
     }
 }
 
-fn sweep_row(threads: usize, rep: &ServerReport, wall_ns: f64, base_wall_ns: f64) -> Vec<String> {
+fn sweep_row(
+    threads: usize,
+    rep: &ServerReport,
+    wall_ns: f64,
+    base_wall_ns: f64,
+    stats: &[WorkerStats],
+) -> Vec<String> {
     let wall_s = (wall_ns / 1e9).max(f64::MIN_POSITIVE);
+    // Pool-wide executor counters: totals across workers, idle ratio over
+    // the pooled poll/sleep counts.
+    let mut pool = WorkerStats::default();
+    for s in stats {
+        pool.absorb(s);
+    }
     vec![
         format!("sweep@{SWEEP_REQUESTS}/t{threads}"),
         threads.to_string(),
@@ -271,13 +287,18 @@ fn sweep_row(threads: usize, rep: &ServerReport, wall_ns: f64, base_wall_ns: f64
         format!("{:.1}", rep.results.len() as f64 / wall_s / 1e3),
         format!("{:.2}x", base_wall_ns / wall_ns.max(1.0)),
         rss_mb(),
+        pool.polls.to_string(),
+        pool.steals.to_string(),
+        format!("{:.2}", pool.idle_ratio()),
     ]
 }
 
 /// The host-executor sweep table plus the max-thread speedup (for the
-/// headline).  Every thread count replays the identical stream; the
-/// single-thread report is the bit-identity baseline for all the others.
-fn run_sweep(service: &MappingService) -> crate::Result<(Table, f64)> {
+/// headline) and the telemetry registry of the single-thread baseline
+/// (every other thread count is bit-identical to it by the assertion
+/// below, so one report's metrics represent them all).  Every thread
+/// count replays the identical stream.
+fn run_sweep(service: &MappingService) -> crate::Result<(Table, f64, Metrics)> {
     let mut t = Table::new(
         &format!(
             "Scale — host-executor sweep: {SWEEP_REQUESTS} requests, {SWEEP_SHARDS}-shard \
@@ -293,13 +314,17 @@ fn run_sweep(service: &MappingService) -> crate::Result<(Table, f64)> {
             "kreq/s",
             "speedup_vs_1t",
             "peak_rss_mb",
+            "polls",
+            "steals",
+            "idle_ratio",
         ],
     );
     let threads = sweep_threads();
     let mut baseline: Option<(ServerReport, f64)> = None;
     let mut last_speedup = 1.0;
+    let mut metrics = Metrics::default();
     for &n in &threads {
-        let (rep, wall_ns) = run_sweep_cell(service, SWEEP_REQUESTS, n)?;
+        let (rep, wall_ns, stats) = run_sweep_cell(service, SWEEP_REQUESTS, n)?;
         let (base_rep, base_wall) = match &baseline {
             Some((r, w)) => (r, *w),
             None => (&rep, wall_ns),
@@ -308,15 +333,16 @@ fn run_sweep(service: &MappingService) -> crate::Result<(Table, f64)> {
             anyhow::bail!("sweep t{n}: diverged from single-thread baseline: {d}");
         }
         last_speedup = base_wall / wall_ns.max(1.0);
-        t.row(sweep_row(n, &rep, wall_ns, base_wall));
+        t.row(sweep_row(n, &rep, wall_ns, base_wall, &stats));
         if baseline.is_none() {
+            metrics = Metrics::from_report(&rep);
             baseline = Some((rep, wall_ns));
         }
     }
-    Ok((t, last_speedup))
+    Ok((t, last_speedup, metrics))
 }
 
-pub fn run() -> crate::Result<Vec<Table>> {
+pub fn run() -> crate::Result<(Vec<Table>, Metrics)> {
     let service = MappingService::for_config(&racam_paper());
     warm_pricing(&service)?;
     let mut t = Table::new(
@@ -327,6 +353,7 @@ pub fn run() -> crate::Result<Vec<Table>> {
         &["run", "reqs", "tokens", "steps", "wall_ms", "ksteps/s", "ktok/s_wall", "speedup"],
     );
     let mut headline: Option<f64> = None;
+    let mut metrics = Metrics::default();
     for &requests in STREAMS {
         for &sched in SCHEDULERS {
             let kind = SchedulerKind::from_label(sched)
@@ -335,6 +362,9 @@ pub fn run() -> crate::Result<Vec<Table>> {
             let ora = run_cell(&service, requests, kind, EngineKind::Oracle)?;
             let cal = run_cell(&service, requests, kind, EngineKind::Calendar)?;
             assert_equivalent(&cell, &cal, &ora)?;
+            // Engines are bit-identical (checked above); count each cell
+            // once, from the calendar report.
+            metrics.merge(&Metrics::from_report(&cal));
             let speedup = ora.shards[0].wall_ns / cal.shards[0].wall_ns.max(1.0);
             t.row(row(&format!("{cell}/oracle"), &ora, None));
             t.row(row(&format!("{cell}/calendar"), &cal, Some(speedup)));
@@ -343,7 +373,8 @@ pub fn run() -> crate::Result<Vec<Table>> {
             }
         }
     }
-    let (sweep, sweep_speedup) = run_sweep(&service)?;
+    let (sweep, sweep_speedup, sweep_metrics) = run_sweep(&service)?;
+    metrics.merge(&sweep_metrics);
     let mut h = Table::new(
         "Scale — headline: calendar-engine speedup on the 100k-request stream (min over \
          schedulers) and max-thread speedup on the 1M-request sweep",
@@ -357,7 +388,7 @@ pub fn run() -> crate::Result<Vec<Table>> {
         "sweep_speedup_max_threads".into(),
         format!("{sweep_speedup:.2}x"),
     ]);
-    Ok(vec![t, sweep, h])
+    Ok((vec![t, sweep, h], metrics))
 }
 
 #[cfg(test)]
@@ -408,10 +439,12 @@ mod tests {
         // depend on the worker-pool size, including oversubscribed pools
         // (more threads than this machine has cores).
         let service = MappingService::for_config(&racam_paper());
-        let (base, _) = run_sweep_cell(&service, 600, 1).unwrap();
+        let (base, _, base_stats) = run_sweep_cell(&service, 600, 1).unwrap();
         assert_eq!(base.results.len(), 600);
+        assert!(!base_stats.is_empty(), "the pool must report worker stats");
+        assert!(base_stats.iter().map(|s| s.polls).sum::<u64>() > 0);
         for threads in [2, executor::available_parallelism(), SWEEP_SHARDS * 2] {
-            let (rep, _) = run_sweep_cell(&service, 600, threads).unwrap();
+            let (rep, _, _) = run_sweep_cell(&service, 600, threads).unwrap();
             assert!(
                 rep.sim_divergence(&base).is_none(),
                 "t{threads} diverged: {:?}",
@@ -423,11 +456,14 @@ mod tests {
     #[test]
     fn sweep_rows_have_every_column() {
         let service = MappingService::for_config(&racam_paper());
-        let (rep, wall_ns) = run_sweep_cell(&service, 100, 2).unwrap();
-        let r = sweep_row(2, &rep, wall_ns, wall_ns * 2.0);
-        assert_eq!(r.len(), 8);
+        let (rep, wall_ns, stats) = run_sweep_cell(&service, 100, 2).unwrap();
+        let r = sweep_row(2, &rep, wall_ns, wall_ns * 2.0, &stats);
+        assert_eq!(r.len(), 11);
         assert_eq!(r[1], "2");
         assert_eq!(r[2], "100");
         assert_eq!(r[6], "2.00x");
+        let total_polls: u64 = stats.iter().map(|s| s.polls).sum();
+        assert_eq!(r[8], total_polls.to_string(), "polls column is the pool total");
+        assert!(r[10].parse::<f64>().unwrap() >= 0.0, "idle_ratio parses: {}", r[10]);
     }
 }

@@ -20,6 +20,7 @@ use crate::config::{
 use crate::coordinator::{ClusterBuilder, SyntheticEngine};
 use crate::mapping::MappingService;
 use crate::report::Table;
+use crate::telemetry::Metrics;
 use crate::traffic::{generate, SloSummary};
 
 /// Shards per run (2 keeps the per-shard utilization table meaningful
@@ -90,12 +91,14 @@ fn run_cell(
     Ok(SloSummary::from_report(&report))
 }
 
-/// The scheduler × rate matrix for one model.
+/// The scheduler × rate matrix for one model, plus the telemetry
+/// [`Metrics`] registry merged over every cell in row order (so the
+/// bench artifact's counters are deterministic across thread counts).
 pub(crate) fn matrix(
     model: &LlmSpec,
     rates: &[f64],
     requests: u64,
-) -> crate::Result<(Table, Table)> {
+) -> crate::Result<(Table, Table, Metrics)> {
     // Honest per-shard bandwidth: each shard prices against its own share
     // of the paper device's channels (4 of 8 at SHARDS = 2), reused across
     // every cell of the matrix.
@@ -116,6 +119,7 @@ pub(crate) fn matrix(
         &headers,
     );
     let mut util_summary = None;
+    let mut metrics = Metrics::default();
     for &rate in rates {
         let traffic = spec_at(rate, requests);
         // The SCHEDULERS roster bench_config() reports drives the rows,
@@ -126,6 +130,7 @@ pub(crate) fn matrix(
             let kind = SchedulerKind::from_label(sched)
                 .ok_or_else(|| anyhow::anyhow!("no scheduler kind named '{sched}'"))?;
             let cell = run_cell(&services, model, &traffic, kind)?;
+            metrics.merge(&cell.metrics);
             if kind == SchedulerKind::Fcfs {
                 util_summary = Some(cell.clone());
             }
@@ -135,15 +140,16 @@ pub(crate) fn matrix(
     let util = util_summary
         .expect("at least one rate")
         .shard_table(&format!("Traffic — per-shard utilization ({}, FCFS, highest rate)", model.name));
-    Ok((t, util))
+    Ok((t, util, metrics))
 }
 
-pub fn run() -> crate::Result<Vec<Table>> {
-    let (gpt, gpt_util) = matrix(&gpt3_6_7b(), GPT_RATES, GPT_REQUESTS)?;
+pub fn run() -> crate::Result<(Vec<Table>, Metrics)> {
+    let (gpt, gpt_util, mut metrics) = matrix(&gpt3_6_7b(), GPT_RATES, GPT_REQUESTS)?;
     // One mid rate on a Llama preset: GQA + gated FFN change the kernel
     // mix, not the scheduling conclusions.
-    let (llama, _) = matrix(&llama3_8b(), LLAMA_RATES, LLAMA_REQUESTS)?;
-    Ok(vec![gpt, gpt_util, llama])
+    let (llama, _, llama_metrics) = matrix(&llama3_8b(), LLAMA_RATES, LLAMA_REQUESTS)?;
+    metrics.merge(&llama_metrics);
+    Ok((vec![gpt, gpt_util, llama], metrics))
 }
 
 #[cfg(test)]
@@ -167,13 +173,15 @@ mod tests {
 
     #[test]
     fn matrix_compares_all_three_schedulers() {
-        let (t, util) = matrix(&tiny_spec(), &[1000.0], 6).unwrap();
+        let (t, util, metrics) = matrix(&tiny_spec(), &[1000.0], 6).unwrap();
         assert_eq!(t.num_rows(), 3, "fcfs + bucketed + edf");
         let rendered = t.render();
         assert!(rendered.contains("fcfs@1000"), "{rendered}");
         assert!(rendered.contains("bucketed@1000"), "{rendered}");
         assert!(rendered.contains("edf@1000"), "{rendered}");
         assert_eq!(util.num_rows(), SHARDS);
+        assert_eq!(metrics.requests, 3 * 6, "3 cells x 6 requests merge into the registry");
+        assert!(metrics.ttft_ns.len() > 0);
     }
 
     #[test]

@@ -38,6 +38,7 @@
 //! | [`report`] | paper-style table renderers + CSV |
 //! | [`runtime`] | artifact discovery; PJRT loader/executor behind the `pjrt` feature |
 //! | [`coordinator`] | serving: per-shard `Server` running an event-driven iteration engine (simulated clock, chunked prefill via `config::ServingPolicy`, scheduler preemption, async intake), and a role-aware multi-worker `Coordinator` assembled by `ClusterBuilder` from a declarative `config::ClusterSpec` (shard groups, per-shard DRAM channel partitioning over shared mapping services, prefill/decode disaggregation with KV-transfer accounting) |
+//! | [`telemetry`] | zero-cost observability: `Recorder` trait with a monomorphized no-op default, simulated-time event stream, deterministic log-bucketed metrics registry, Chrome-trace exporter + validator |
 //! | [`traffic`] | open-loop workload generator (seeded PRNG, Poisson/bursty arrivals, trace replay) + SLO metrics (TTFT/TPOT/e2e tails, goodput, shed/preemption counts, utilization) |
 //! | [`experiments`] | one entry point per paper table/figure |
 
@@ -53,6 +54,7 @@ pub mod metrics;
 pub mod pim;
 pub mod report;
 pub mod runtime;
+pub mod telemetry;
 pub mod traffic;
 pub mod workloads;
 

@@ -60,7 +60,7 @@ fn print_help() {
          \x20             [--deadline-ms MS] [--traffic SPEC.json | --trace TRACE.json]\n\
          \x20             [--chunk-tokens N] [--preempt] [--serving POLICY.json]\n\
          \x20             [--engine calendar|oracle] [--cluster CLUSTER.json]\n\
-         \x20             [--threads N]\n\
+         \x20             [--threads N] [--trace-out TRACE.json] [--metrics]\n\
          \n\
          serve traffic modes: --rate R replays a Poisson stream at R req/s on the\n\
          simulated clock (add --deadline-ms for an e2e SLO); --traffic loads a\n\
@@ -82,7 +82,14 @@ fn print_help() {
          (count, role unified|prefill|decode, scheduler, policy, channel share,\n\
          kv_link_gbps) and replaces --shards/--batch/--sched/--chunk-tokens/\n\
          --preempt/--serving. Prefill groups hand finished prompts to decode\n\
-         groups over the simulated KV link (see docs/serving.md)."
+         groups over the simulated KV link (see docs/serving.md).\n\
+         \n\
+         telemetry: --trace-out writes a Chrome-trace/Perfetto JSON of the run\n\
+         (tracks: one per shard + the KV link on the simulated-ns timeline,\n\
+         plus host-executor workers on wall ns); --metrics prints the\n\
+         deterministic counters + log-bucketed histograms (TTFT/TPOT/queue\n\
+         depth/batch occupancy). Recording never perturbs the simulation —\n\
+         results stay bit-identical (see docs/observability.md)."
     );
 }
 
@@ -202,6 +209,8 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     use racam::coordinator::{
         ClusterBuilder, ClusterCoordinator, Request, SyntheticEngine, TokenEngine,
     };
+    use racam::runtime::executor::WorkerStats;
+    use racam::telemetry::{chrome_trace, Event, Recorder, TraceRecorder};
     use racam::traffic::{generate, replay_trace, SloSummary};
 
     let n_req: u64 = flag_value(&args, "--requests").map(|v| v.parse()).transpose()?.unwrap_or(4);
@@ -219,6 +228,11 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         None => None,
     };
     let threads: Option<usize> = flag_value(&args, "--threads").map(|v| v.parse()).transpose()?;
+    let trace_out = flag_value(&args, "--trace-out");
+    let show_metrics = args.iter().any(|a| a == "--metrics");
+    // Recording is zero-cost when off: the recorded build is only taken
+    // when a telemetry flag asks for it.
+    let record = trace_out.is_some() || show_metrics;
     anyhow::ensure!(shards >= 1, "--shards must be at least 1");
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
     anyhow::ensure!(threads != Some(0), "--threads must be at least 1");
@@ -319,8 +333,8 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     };
     let open_loop = requests.iter().any(|r| r.arrival_ns > 0);
 
-    fn drive<E: TokenEngine + Send>(
-        mut coord: ClusterCoordinator<E>,
+    fn drive<E: TokenEngine + Send, R: Recorder + Send>(
+        coord: &mut ClusterCoordinator<E, R>,
         requests: Vec<Request>,
         threads: Option<usize>,
     ) -> Result<racam::coordinator::ServerReport> {
@@ -333,8 +347,48 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         coord.run_to_completion()
     }
 
-    let report = if synthetic {
-        drive(builder.build(|_| SyntheticEngine::new(64, 256)), requests, threads)?
+    /// Pull the simulated-event tracks (one per shard + the KV link) and
+    /// the host-executor worker counters out of a recorded coordinator.
+    fn collect<E: TokenEngine + Send>(
+        coord: &ClusterCoordinator<E, TraceRecorder>,
+    ) -> (Vec<(String, Vec<Event>)>, Vec<WorkerStats>) {
+        let mut tracks = Vec::with_capacity(coord.num_shards() + 1);
+        for i in 0..coord.num_shards() {
+            tracks.push((format!("shard {i}"), coord.shard_recorder(i).events.clone()));
+        }
+        tracks.push(("kv link".to_string(), coord.link_recorder().events.clone()));
+        (tracks, coord.worker_stats().to_vec())
+    }
+
+    /// Build, drive, and (when recording) collect telemetry — one path
+    /// for every engine kind.
+    fn drive_built<E: TokenEngine + Send>(
+        builder: ClusterBuilder,
+        engine_factory: impl FnMut(usize) -> E,
+        requests: Vec<Request>,
+        threads: Option<usize>,
+        record: bool,
+    ) -> Result<(
+        racam::coordinator::ServerReport,
+        Option<(Vec<(String, Vec<Event>)>, Vec<WorkerStats>)>,
+    )> {
+        if record {
+            let mut coord = builder.build_recorded(
+                engine_factory,
+                |_| TraceRecorder::new(),
+                TraceRecorder::new(),
+            );
+            let report = drive(&mut coord, requests, threads)?;
+            let telemetry = collect(&coord);
+            Ok((report, Some(telemetry)))
+        } else {
+            let mut coord = builder.build(engine_factory);
+            Ok((drive(&mut coord, requests, threads)?, None))
+        }
+    }
+
+    let (report, telemetry) = if synthetic {
+        drive_built(builder, |_| SyntheticEngine::new(64, 256), requests, threads, record)?
     } else {
         #[cfg(feature = "pjrt")]
         {
@@ -348,12 +402,14 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                 modules.push(rt.load_hlo_text(&artifacts.decode_step())?);
             }
             let mut modules = modules.into_iter();
-            drive(
-                builder.build(|_| {
+            drive_built(
+                builder,
+                |_| {
                     HloDecodeEngine::new(modules.next().expect("one module per shard"), 64, 256)
-                }),
+                },
                 requests,
                 threads,
+                record,
             )?
         }
         #[cfg(not(feature = "pjrt"))]
@@ -425,6 +481,28 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         // group (prefill vs decode), KV-link totals included.
         if cluster.is_disaggregated() {
             println!("{}", slo.utilization_table("group utilization", false).render());
+        }
+    }
+    if let Some((tracks, workers)) = &telemetry {
+        if let Some(path) = &trace_out {
+            let trace = chrome_trace(tracks, workers);
+            let check = racam::telemetry::validate_trace(&trace)?;
+            std::fs::write(path, trace.pretty())?;
+            println!(
+                "wrote Chrome trace to {path}: {} events on {} tracks ({} spans); \
+                 open in chrome://tracing or ui.perfetto.dev",
+                check.events, check.tracks, check.spans
+            );
+        }
+        if show_metrics {
+            // Report-derived counters/latency histograms, then the
+            // event-derived samples (queue depth at admission, batch
+            // occupancy per decode iteration) from the recorded streams.
+            let mut m = SloSummary::from_report(&report).metrics;
+            for (_, events) in tracks {
+                m.absorb_events(events);
+            }
+            println!("{}", m.table("telemetry metrics").render());
         }
     }
     println!(

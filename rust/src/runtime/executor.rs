@@ -76,6 +76,52 @@ pub fn resolve_threads(requested: Option<usize>) -> usize {
     available_parallelism()
 }
 
+/// Host-side counters for one pool worker, measured on the wall clock
+/// (unlike everything in a [`crate::coordinator::ServerReport`], these
+/// are *not* deterministic — they describe the host run, not the
+/// simulation, and feed `exp scale`, the Chrome-trace worker tracks, and
+/// nothing that gates an equivalence check).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Task polls this worker executed (one per event batch).
+    pub polls: u64,
+    /// Polls whose task id was stolen from a peer's queue.
+    pub steals: u64,
+    /// Backoff sleeps taken because every live task reported
+    /// [`Poll::Blocked`] (shards waiting on an open intake).
+    pub blocked_streaks: u64,
+    /// Backoff sleeps taken with nothing runnable (remaining tasks were
+    /// mid-batch on other workers).
+    pub idle_sleeps: u64,
+    /// Wall time this worker spent in the pool, ns.
+    pub wall_ns: u64,
+}
+
+impl WorkerStats {
+    /// Accumulate another worker's counters (how the coordinator folds
+    /// the per-wave stats of a disaggregated run into one row per
+    /// worker).
+    pub fn absorb(&mut self, other: &WorkerStats) {
+        self.polls += other.polls;
+        self.steals += other.steals;
+        self.blocked_streaks += other.blocked_streaks;
+        self.idle_sleeps += other.idle_sleeps;
+        self.wall_ns += other.wall_ns;
+    }
+
+    /// Fraction of this worker's scheduling decisions that ended in an
+    /// idle backoff sleep — the `exp scale` sweep's headline imbalance
+    /// signal (0.0 when the worker never slept).
+    pub fn idle_ratio(&self) -> f64 {
+        let denom = self.polls + self.idle_sleeps;
+        if denom == 0 {
+            0.0
+        } else {
+            self.idle_sleeps as f64 / denom as f64
+        }
+    }
+}
+
 struct Shared<'a, T> {
     /// Task bodies, indexed by task id.  A body is taken out while it
     /// runs, so the lock never covers a poll.
@@ -97,9 +143,21 @@ struct Shared<'a, T> {
 /// Panics in a task propagate (the scope join re-raises), matching the
 /// old thread-per-shard behavior under test assertions.
 pub fn run_tasks<'a, T: Send>(threads: usize, tasks: Vec<Task<'a, T>>) -> Vec<T> {
+    run_tasks_with_stats(threads, tasks).0
+}
+
+/// [`run_tasks`], also returning one [`WorkerStats`] per pool worker
+/// (index = worker id).  The counters are observational only — they are
+/// gathered in worker-local registers and written out once at pool
+/// shutdown, so the instrumented pool schedules exactly like the
+/// uninstrumented one did.
+pub fn run_tasks_with_stats<'a, T: Send>(
+    threads: usize,
+    tasks: Vec<Task<'a, T>>,
+) -> (Vec<T>, Vec<WorkerStats>) {
     let n = tasks.len();
     if n == 0 {
-        return Vec::new();
+        return (Vec::new(), Vec::new());
     }
     let threads = threads.clamp(1, n);
     let shared = Shared {
@@ -113,34 +171,47 @@ pub fn run_tasks<'a, T: Send>(threads: usize, tasks: Vec<Task<'a, T>>) -> Vec<T>
     for tid in 0..n {
         shared.queues[tid % threads].lock().unwrap().push_back(tid);
     }
-    if threads == 1 {
-        worker(&shared, 0);
+    let stats = if threads == 1 {
+        vec![worker(&shared, 0)]
     } else {
         std::thread::scope(|scope| {
-            for w in 0..threads {
-                let shared = &shared;
-                scope.spawn(move || worker(shared, w));
-            }
-        });
-    }
-    shared
+            let handles: Vec<_> = (0..threads)
+                .map(|w| {
+                    let shared = &shared;
+                    scope.spawn(move || worker(shared, w))
+                })
+                .collect();
+            // Joining inside the scope hands back each worker's stats;
+            // a worker panic re-raises here, preserving the propagation
+            // the tests rely on.
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    };
+    let results = shared
         .results
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("remaining hit 0 with every slot filled"))
-        .collect()
+        .collect();
+    (results, stats)
 }
 
-fn worker<T: Send>(shared: &Shared<'_, T>, me: usize) {
+fn worker<T: Send>(shared: &Shared<'_, T>, me: usize) -> WorkerStats {
+    let started = std::time::Instant::now();
+    let mut stats = WorkerStats::default();
     let nq = shared.queues.len();
     let mut blocked_streak = 0usize;
     let mut idle_spins = 0usize;
     loop {
         if shared.remaining.load(Ordering::Acquire) == 0 {
-            return;
+            stats.wall_ns = started.elapsed().as_nanos() as u64;
+            return stats;
         }
         // Own queue first (front = oldest), then steal from peers' backs.
+        let mut stolen = false;
         let tid = shared.queues[me].lock().unwrap().pop_front().or_else(|| {
-            (1..nq).find_map(|d| shared.queues[(me + d) % nq].lock().unwrap().pop_back())
+            let t = (1..nq).find_map(|d| shared.queues[(me + d) % nq].lock().unwrap().pop_back());
+            stolen = t.is_some();
+            t
         });
         let Some(tid) = tid else {
             // Nothing runnable: the remaining tasks are mid-batch on
@@ -150,11 +221,16 @@ fn worker<T: Send>(shared: &Shared<'_, T>, me: usize) {
             if idle_spins < 64 {
                 std::thread::yield_now();
             } else {
+                stats.idle_sleeps += 1;
                 std::thread::sleep(Duration::from_micros(100));
             }
             continue;
         };
         idle_spins = 0;
+        stats.polls += 1;
+        if stolen {
+            stats.steals += 1;
+        }
         let mut task = shared.slots[tid]
             .lock()
             .unwrap()
@@ -181,6 +257,7 @@ fn worker<T: Send>(shared: &Shared<'_, T>, me: usize) {
                 // try_recv at full tilt.
                 blocked_streak += 1;
                 if blocked_streak >= shared.remaining.load(Ordering::Acquire).max(1) {
+                    stats.blocked_streaks += 1;
                     std::thread::sleep(Duration::from_micros(200));
                     blocked_streak = 0;
                 }
@@ -275,6 +352,42 @@ mod tests {
             }),
         ];
         assert_eq!(run_tasks(2, tasks), vec![1, 2]);
+    }
+
+    #[test]
+    fn worker_stats_count_every_poll_and_no_steals_single_threaded() {
+        let tasks: Vec<Task<'_, usize>> = (0..4).map(|_| counting(5).1).collect();
+        let (out, stats) = run_tasks_with_stats(1, tasks);
+        assert_eq!(out, vec![5; 4]);
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].polls, 20, "one poll per event batch");
+        assert_eq!(stats[0].steals, 0, "a lone worker has no one to steal from");
+        assert!(stats[0].wall_ns > 0);
+    }
+
+    #[test]
+    fn worker_stats_polls_sum_across_the_pool() {
+        for threads in [2, 4] {
+            let tasks: Vec<Task<'_, usize>> = (0..8).map(|_| counting(9).1).collect();
+            let (out, stats) = run_tasks_with_stats(threads, tasks);
+            assert_eq!(out, vec![9; 8]);
+            assert_eq!(stats.len(), threads);
+            let polls: u64 = stats.iter().map(|s| s.polls).sum();
+            assert_eq!(polls, 72, "threads={threads}: every poll lands in exactly one worker");
+        }
+    }
+
+    #[test]
+    fn worker_stats_absorb_and_idle_ratio() {
+        let mut a = WorkerStats { polls: 6, steals: 1, blocked_streaks: 0, idle_sleeps: 2, wall_ns: 10 };
+        let b = WorkerStats { polls: 4, steals: 2, blocked_streaks: 3, idle_sleeps: 0, wall_ns: 5 };
+        a.absorb(&b);
+        assert_eq!(
+            a,
+            WorkerStats { polls: 10, steals: 3, blocked_streaks: 3, idle_sleeps: 2, wall_ns: 15 }
+        );
+        assert!((a.idle_ratio() - 2.0 / 12.0).abs() < 1e-12);
+        assert_eq!(WorkerStats::default().idle_ratio(), 0.0, "empty stats divide safely");
     }
 
     #[test]

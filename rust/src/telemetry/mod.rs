@@ -1,0 +1,875 @@
+//! Zero-cost telemetry: simulated-time event tracing, a deterministic
+//! metrics registry, and a Chrome-trace exporter.
+//!
+//! The serving engines ([`Server::run_to_completion`] and the coordinator
+//! above it) are instrumented with a [`Recorder`] — a sink for structured
+//! [`Event`]s stamped on the *simulated* clock.  The default sink is
+//! [`NopRecorder`], a zero-sized type whose `record` is an empty inline
+//! function: the hooks monomorphize away entirely, so the allocation-free
+//! hot loop is untouched and a recorder-enabled run is **bit-identical**
+//! to a disabled one (hooks are pure observers — they never feed back
+//! into a scheduling or pricing decision; `tests/engine_equivalence.rs`
+//! pins this with [`ServerReport::sim_divergence`]).
+//!
+//! On top of the events sits a deterministic metrics registry
+//! ([`Metrics`]): counters plus fixed-memory log-bucketed [`Histogram`]s
+//! (TTFT, TPOT, queue depth, batch occupancy).  Histograms quantize to
+//! integer nanoseconds and merge with pure integer arithmetic, so merging
+//! is *exactly associative* and per-shard metrics merged in shard order
+//! report identically however many worker threads ran the shards
+//! (`tests/proptests.rs` pins both properties).
+//!
+//! [`chrome_trace`] exports recorded events as Chrome-trace/Perfetto JSON
+//! (`racam serve --trace-out trace.json`): one track per shard, one for
+//! the KV link, one per executor worker.  See `docs/observability.md` for
+//! the event taxonomy and a trace-viewer walkthrough.
+//!
+//! [`Server::run_to_completion`]: crate::coordinator::Server::run_to_completion
+//! [`ServerReport::sim_divergence`]: crate::coordinator::ServerReport::sim_divergence
+
+use crate::config::json::Value;
+use crate::config::ShardRole;
+use crate::coordinator::ServerReport;
+use crate::metrics::fmt_ns;
+use crate::report::Table;
+use crate::runtime::executor::WorkerStats;
+
+/// `Event::req` value for events not tied to a request (idle jumps,
+/// decode stretches).
+pub const NO_REQ: u64 = u64::MAX;
+
+/// What happened (see `docs/observability.md` for the full taxonomy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A future arrival crossed the simulated clock and was released to
+    /// the scheduler (`value` = the request's arrival timestamp, ns —
+    /// release minus arrival is time spent invisible in the future heap).
+    ArrivalRelease,
+    /// The scheduler admitted a request into a batch slot (`value` =
+    /// requests still pending after this round's admissions).
+    Admit,
+    /// One prefill step — a bounded chunk or a whole prompt (span;
+    /// `value` = prompt tokens consumed by this step).
+    PrefillChunk,
+    /// A lockstep decode stretch (span; `value` = decoding members,
+    /// `count` = iterations fast-forwarded — 1 per event on the oracle).
+    DecodeStretch,
+    /// A member's context crossed a pricing-bucket edge and its decode
+    /// schedule was refreshed (`value` = the new bucket).  Calendar
+    /// engine only: the oracle prices per iteration and never
+    /// materializes an edge.
+    BucketEdge,
+    /// A running request was preempted back to the queue (`value` =
+    /// tokens it had generated).
+    Preempt,
+    /// A running request was shed (`value` = tokens it had generated).
+    Shed,
+    /// A finished prefill left its shard for the KV link (`value` =
+    /// prompt tokens).
+    HandoffDispatch,
+    /// A KV cache crossed the serialized link (span, on the link track;
+    /// `value` = KV bytes).
+    KvWire,
+    /// A transferred KV cache landed on its decode shard (`value` = the
+    /// destination shard index).
+    DecodeRelease,
+    /// The idle clock jump to the next future arrival (span).
+    IdleJump,
+}
+
+impl EventKind {
+    /// Stable lowercase label (trace-event name).
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::ArrivalRelease => "arrival_release",
+            EventKind::Admit => "admit",
+            EventKind::PrefillChunk => "prefill_chunk",
+            EventKind::DecodeStretch => "decode_stretch",
+            EventKind::BucketEdge => "bucket_edge",
+            EventKind::Preempt => "preempt",
+            EventKind::Shed => "shed",
+            EventKind::HandoffDispatch => "handoff_dispatch",
+            EventKind::KvWire => "kv_wire",
+            EventKind::DecodeRelease => "decode_release",
+            EventKind::IdleJump => "idle_jump",
+        }
+    }
+
+    /// Whether this kind spans simulated time (exported as a B/E pair)
+    /// or marks an instant.
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            EventKind::PrefillChunk
+                | EventKind::DecodeStretch
+                | EventKind::KvWire
+                | EventKind::IdleJump
+        )
+    }
+}
+
+/// One telemetry event on the simulated clock.  `Copy` and
+/// allocation-free by design: constructing one in a hot loop costs a few
+/// register moves, and under [`NopRecorder`] the construction is dead
+/// code the optimizer removes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Simulated start time, ns.
+    pub at_ns: f64,
+    /// Simulated duration, ns (0 for instants).
+    pub dur_ns: f64,
+    /// Request id, or [`NO_REQ`].
+    pub req: u64,
+    /// Kind-specific scalar (see [`EventKind`]).
+    pub value: f64,
+    /// Kind-specific multiplicity (decode iterations in a stretch; 1
+    /// otherwise).
+    pub count: u64,
+}
+
+impl Event {
+    /// An instantaneous event.
+    pub fn instant(kind: EventKind, at_ns: f64, req: u64, value: f64) -> Event {
+        Event { kind, at_ns, dur_ns: 0.0, req, value, count: 1 }
+    }
+
+    /// An event spanning `[at_ns, at_ns + dur_ns]`.
+    pub fn span(kind: EventKind, at_ns: f64, dur_ns: f64, req: u64, value: f64) -> Event {
+        Event { kind, at_ns, dur_ns, req, value, count: 1 }
+    }
+
+    /// Simulated end time, ns.
+    pub fn end_ns(&self) -> f64 {
+        self.at_ns + self.dur_ns
+    }
+}
+
+/// A telemetry sink threaded through the serving engines.
+///
+/// Implementations must be **pure observers**: a recorder sees every
+/// event but must never influence scheduling, pricing, or the simulated
+/// clock — the engine-equivalence suite asserts that a recorder-enabled
+/// run is bit-identical to a disabled one.
+pub trait Recorder {
+    /// Record one event.  Called from the serving hot loop: keep it
+    /// cheap, and never panic.
+    fn record(&mut self, ev: Event);
+}
+
+/// The default sink: a zero-sized recorder whose `record` compiles to
+/// nothing, so the instrumented hot loop is exactly the uninstrumented
+/// one after monomorphization.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NopRecorder;
+
+impl Recorder for NopRecorder {
+    #[inline(always)]
+    fn record(&mut self, _ev: Event) {}
+}
+
+/// A recorder that collects every event in order (the `--trace-out`
+/// sink).  Memory grows with the event count; use it for runs you intend
+/// to inspect, not for the million-request `exp scale` sweep.
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    /// Recorded events, in emission order (per shard this is
+    /// non-decreasing in simulated time).
+    pub events: Vec<Event>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> TraceRecorder {
+        TraceRecorder::default()
+    }
+}
+
+impl Recorder for TraceRecorder {
+    #[inline]
+    fn record(&mut self, ev: Event) {
+        self.events.push(ev);
+    }
+}
+
+/// Number of log2 buckets in a [`Histogram`] (covers the whole `u64`
+/// range: bucket *b* holds values in `[2^b, 2^(b+1))`, bucket 0 holds
+/// `{0, 1}`).
+pub const HISTOGRAM_BUCKETS: usize = 64;
+
+/// Fixed-memory log2-bucketed histogram over `u64` samples.
+///
+/// Everything is integer arithmetic — counts, total, sum, min, max — so
+/// [`Histogram::merge`] is *exactly associative and commutative*:
+/// per-shard histograms merged in shard order produce bit-identical
+/// registries regardless of how many worker threads ran the shards.
+/// Simulated times quantize to integer nanoseconds via
+/// [`Histogram::record_ns`] (sub-nanosecond rounding is far below the
+/// resolution any percentile here reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; HISTOGRAM_BUCKETS],
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            counts: [0; HISTOGRAM_BUCKETS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+/// Quantize a simulated duration to integer nanoseconds (negative,
+/// NaN, and infinite inputs clamp to 0 / `u64::MAX` saturation).
+pub fn quantize_ns(ns: f64) -> u64 {
+    if ns.is_nan() || ns <= 0.0 {
+        0
+    } else {
+        ns.round() as u64 // saturates at u64::MAX
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bucket index of a sample: the position of its highest set bit
+    /// (`v | 1` folds 0 into bucket 0).
+    pub fn bucket_of(v: u64) -> usize {
+        63 - (v | 1).leading_zeros() as usize
+    }
+
+    /// Inclusive upper bound of a bucket's value range.
+    fn bucket_hi(b: usize) -> u64 {
+        if b >= 63 {
+            u64::MAX
+        } else {
+            (2u64 << b) - 1
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` identical samples in O(1) — how the calendar engine's
+    /// fast-forwarded stretches match the oracle's per-iteration samples
+    /// without replaying the stretch.
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.counts[Self::bucket_of(v)] += n;
+        self.total += n;
+        self.sum += v as u128 * n as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a simulated duration (see [`quantize_ns`]).
+    pub fn record_ns(&mut self, ns: f64) {
+        self.record(quantize_ns(ns));
+    }
+
+    /// Merge another histogram in (exactly associative — integer adds
+    /// and min/max only).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Samples recorded.
+    pub fn len(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Smallest sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Per-bucket counts (bucket *b* holds `[2^b, 2^(b+1))`).
+    pub fn counts(&self) -> &[u64; HISTOGRAM_BUCKETS] {
+        &self.counts
+    }
+
+    /// Upper bound of the bucket containing the q-th quantile sample
+    /// (`q` in `[0, 1]`; 0 when empty).  Log2 buckets bound the relative
+    /// error at 2× — coarse, but deterministic and fixed-memory, which
+    /// is the point: exact percentiles live in [`SloSummary`].
+    ///
+    /// [`SloSummary`]: crate::traffic::SloSummary
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_hi(b).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Summary JSON: `{total, mean, min, max, p50, p99}` (the counts
+    /// array stays out of `BENCH_*.json` — the trajectory diff wants
+    /// stable summary fields, not 64 mostly-zero buckets).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("total", Value::Num(self.total as f64)),
+            ("mean", Value::Num(self.mean())),
+            ("min", Value::Num(self.min() as f64)),
+            ("max", Value::Num(self.max() as f64)),
+            ("p50", Value::Num(self.quantile(0.50) as f64)),
+            ("p99", Value::Num(self.quantile(0.99) as f64)),
+        ])
+    }
+}
+
+/// Deterministic metrics registry for one serving run: counters plus the
+/// four tentpole histograms.  Per-shard registries [`Metrics::merge`] in
+/// shard order; every operation is commutative-associative integer
+/// arithmetic, so the merged registry is identical for every worker
+/// interleaving.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Metrics {
+    pub requests: u64,
+    /// Requests that delivered tokens (not shed).
+    pub delivered: u64,
+    pub shed: u64,
+    pub preemptions: u64,
+    pub prefill_chunks: u64,
+    pub decode_iterations: u64,
+    /// Prefill→decode handoffs (sending side, once per transfer).
+    pub handoffs: u64,
+    pub total_tokens: u64,
+    /// Arrival → first token, ns (delivered requests).
+    pub ttft_ns: Histogram,
+    /// Mean inter-token gap, ns (delivered requests with ≥ 2 tokens).
+    pub tpot_ns: Histogram,
+    /// Requests still pending after each admission round (recorder-fed:
+    /// populated from [`EventKind::Admit`] events, empty otherwise).
+    pub queue_depth: Histogram,
+    /// Decoding batch members per decode iteration (recorder-fed:
+    /// populated from [`EventKind::DecodeStretch`] events).
+    pub batch_occupancy: Histogram,
+}
+
+impl Metrics {
+    /// Build the report-derived portion (request counters and the
+    /// TTFT/TPOT histograms) from a merged [`ServerReport`].  Integer
+    /// accumulation only, so the result is independent of result order.
+    pub fn from_report(report: &ServerReport) -> Metrics {
+        let mut m = Metrics { requests: report.results.len() as u64, ..Metrics::default() };
+        for r in &report.results {
+            m.total_tokens += r.tokens.len() as u64;
+            if r.shed {
+                m.shed += 1;
+                continue;
+            }
+            m.delivered += 1;
+            m.ttft_ns.record_ns(r.ttft_ns());
+            if r.tokens.len() >= 2 {
+                m.tpot_ns.record_ns(r.tpot_ns());
+            }
+        }
+        for s in &report.shards {
+            m.preemptions += s.preemptions as u64;
+            m.prefill_chunks += s.prefill_chunks as u64;
+            m.decode_iterations += s.decode_iterations as u64;
+            if s.role != ShardRole::Decode {
+                m.handoffs += s.handoffs as u64;
+            }
+        }
+        m
+    }
+
+    /// Fold recorded events into the event-fed histograms (queue depth
+    /// from admissions, batch occupancy from decode stretches).  Feed
+    /// shard event streams in shard order for a canonical registry —
+    /// though the fold is order-independent by construction.
+    pub fn absorb_events(&mut self, events: &[Event]) {
+        for ev in events {
+            match ev.kind {
+                EventKind::Admit => self.queue_depth.record(ev.value as u64),
+                EventKind::DecodeStretch => {
+                    self.batch_occupancy.record_n(ev.value as u64, ev.count)
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Merge another registry in (exactly associative).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.delivered += other.delivered;
+        self.shed += other.shed;
+        self.preemptions += other.preemptions;
+        self.prefill_chunks += other.prefill_chunks;
+        self.decode_iterations += other.decode_iterations;
+        self.handoffs += other.handoffs;
+        self.total_tokens += other.total_tokens;
+        self.ttft_ns.merge(&other.ttft_ns);
+        self.tpot_ns.merge(&other.tpot_ns);
+        self.queue_depth.merge(&other.queue_depth);
+        self.batch_occupancy.merge(&other.batch_occupancy);
+    }
+
+    /// Fold registries in iteration (shard) order.
+    pub fn merged<'a>(items: impl IntoIterator<Item = &'a Metrics>) -> Metrics {
+        let mut out = Metrics::default();
+        for m in items {
+            out.merge(m);
+        }
+        out
+    }
+
+    /// The `metrics` block of `BENCH_*.json` (benchcheck-gated fields —
+    /// see `rust/bench_schema.json`).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("requests", Value::Num(self.requests as f64)),
+            ("delivered", Value::Num(self.delivered as f64)),
+            ("shed", Value::Num(self.shed as f64)),
+            ("preemptions", Value::Num(self.preemptions as f64)),
+            ("prefill_chunks", Value::Num(self.prefill_chunks as f64)),
+            ("decode_iterations", Value::Num(self.decode_iterations as f64)),
+            ("handoffs", Value::Num(self.handoffs as f64)),
+            ("total_tokens", Value::Num(self.total_tokens as f64)),
+            ("ttft_ns", self.ttft_ns.to_json()),
+            ("tpot_ns", self.tpot_ns.to_json()),
+            ("queue_depth", self.queue_depth.to_json()),
+            ("batch_occupancy", self.batch_occupancy.to_json()),
+        ])
+    }
+
+    /// The `racam serve --metrics` table: one row per histogram, one per
+    /// counter.
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["metric", "count", "mean", "p50", "p99", "max"]);
+        let ns_row = |name: &str, h: &Histogram| {
+            vec![
+                name.to_string(),
+                h.len().to_string(),
+                fmt_ns(h.mean()),
+                fmt_ns(h.quantile(0.50) as f64),
+                fmt_ns(h.quantile(0.99) as f64),
+                fmt_ns(h.max() as f64),
+            ]
+        };
+        let n_row = |name: &str, h: &Histogram| {
+            vec![
+                name.to_string(),
+                h.len().to_string(),
+                format!("{:.2}", h.mean()),
+                h.quantile(0.50).to_string(),
+                h.quantile(0.99).to_string(),
+                h.max().to_string(),
+            ]
+        };
+        let counter = |name: &str, v: u64| {
+            vec![name.to_string(), v.to_string(), "-".into(), "-".into(), "-".into(), "-".into()]
+        };
+        t.row(ns_row("ttft_ns", &self.ttft_ns));
+        t.row(ns_row("tpot_ns", &self.tpot_ns));
+        t.row(n_row("queue_depth", &self.queue_depth));
+        t.row(n_row("batch_occupancy", &self.batch_occupancy));
+        t.row(counter("requests", self.requests));
+        t.row(counter("delivered", self.delivered));
+        t.row(counter("shed", self.shed));
+        t.row(counter("preemptions", self.preemptions));
+        t.row(counter("prefill_chunks", self.prefill_chunks));
+        t.row(counter("decode_iterations", self.decode_iterations));
+        t.row(counter("handoffs", self.handoffs));
+        t.row(counter("total_tokens", self.total_tokens));
+        t
+    }
+}
+
+/// Export recorded event streams as Chrome-trace JSON ("JSON Array
+/// Format" with metadata, loadable in `chrome://tracing` and Perfetto).
+///
+/// * `sim_tracks` — one `(name, events)` per simulated track, in track
+///   order: the shards, then the KV link.  `ts` on these tracks is
+///   **simulated nanoseconds** (the viewer labels the axis µs; read it
+///   as ns — simulated time has no wall unit).
+/// * `workers` — per-worker host-side counters; each worker becomes one
+///   span on a `pid 1` track whose `ts` is **host wall nanoseconds**,
+///   with the counters attached as args.
+///
+/// Spans export as balanced `B`/`E` pairs, instants as `i`; each track's
+/// entries are sorted by timestamp, so per-track `ts` is monotonic — the
+/// two invariants `tracecheck` enforces in CI.
+pub fn chrome_trace(sim_tracks: &[(String, Vec<Event>)], workers: &[WorkerStats]) -> Value {
+    let mut out: Vec<Value> = Vec::new();
+    let meta = |name: &str, pid: f64, tid: f64, label: &str| {
+        Value::obj(vec![
+            ("name", Value::Str(name.into())),
+            ("ph", Value::Str("M".into())),
+            ("pid", Value::Num(pid)),
+            ("tid", Value::Num(tid)),
+            ("args", Value::obj(vec![("name", Value::Str(label.into()))])),
+        ])
+    };
+    out.push(meta("process_name", 0.0, 0.0, "racam simulation (ts = simulated ns)"));
+    if !workers.is_empty() {
+        out.push(meta("process_name", 1.0, 0.0, "host executor (ts = wall ns)"));
+    }
+    for (tid, (name, events)) in sim_tracks.iter().enumerate() {
+        let tid = tid as f64;
+        out.push(meta("thread_name", 0.0, tid, name));
+        // (ts, payload): spans emit a B and an E entry, instants one i.
+        // Per-track stable sort by ts keeps timestamps monotonic even if
+        // a hook ever records marginally out of order; generation order
+        // breaks ties, so a B always precedes its own E.
+        let mut entries: Vec<(f64, Value)> = Vec::with_capacity(events.len() * 2);
+        for ev in events {
+            let mut args = vec![("value", Value::Num(ev.value))];
+            if ev.req != NO_REQ {
+                args.push(("req", Value::Num(ev.req as f64)));
+            }
+            if ev.count != 1 {
+                args.push(("count", Value::Num(ev.count as f64)));
+            }
+            let base = |ph: &str, ts: f64| {
+                vec![
+                    ("name", Value::Str(ev.kind.label().into())),
+                    ("cat", Value::Str("sim".into())),
+                    ("ph", Value::Str(ph.into())),
+                    ("pid", Value::Num(0.0)),
+                    ("tid", Value::Num(tid)),
+                    ("ts", Value::Num(ts)),
+                ]
+            };
+            if ev.kind.is_span() {
+                let mut b = base("B", ev.at_ns);
+                b.push(("args", Value::obj(args)));
+                entries.push((ev.at_ns, Value::obj(b)));
+                entries.push((ev.end_ns(), Value::obj(base("E", ev.end_ns()))));
+            } else {
+                let mut i = base("i", ev.at_ns);
+                i.push(("s", Value::Str("t".into())));
+                i.push(("args", Value::obj(args)));
+                entries.push((ev.at_ns, Value::obj(i)));
+            }
+        }
+        entries.sort_by(|a, b| a.0.total_cmp(&b.0));
+        out.extend(entries.into_iter().map(|(_, v)| v));
+    }
+    for (w, stats) in workers.iter().enumerate() {
+        let tid = w as f64;
+        out.push(meta("thread_name", 1.0, tid, &format!("worker {w}")));
+        let args = Value::obj(vec![
+            ("polls", Value::Num(stats.polls as f64)),
+            ("steals", Value::Num(stats.steals as f64)),
+            ("blocked_streaks", Value::Num(stats.blocked_streaks as f64)),
+            ("idle_sleeps", Value::Num(stats.idle_sleeps as f64)),
+        ]);
+        out.push(Value::obj(vec![
+            ("name", Value::Str("worker".into())),
+            ("cat", Value::Str("host".into())),
+            ("ph", Value::Str("B".into())),
+            ("pid", Value::Num(1.0)),
+            ("tid", Value::Num(tid)),
+            ("ts", Value::Num(0.0)),
+            ("args", args),
+        ]));
+        out.push(Value::obj(vec![
+            ("name", Value::Str("worker".into())),
+            ("cat", Value::Str("host".into())),
+            ("ph", Value::Str("E".into())),
+            ("pid", Value::Num(1.0)),
+            ("tid", Value::Num(tid)),
+            ("ts", Value::Num(stats.wall_ns as f64)),
+        ]));
+    }
+    Value::obj(vec![
+        ("traceEvents", Value::Arr(out)),
+        ("displayTimeUnit", Value::Str("ns".into())),
+    ])
+}
+
+/// What [`validate_trace`] counted on a well-formed trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCheck {
+    /// Non-metadata events.
+    pub events: usize,
+    /// Distinct (pid, tid) tracks with at least one event.
+    pub tracks: usize,
+    /// Balanced B/E span pairs.
+    pub spans: usize,
+}
+
+/// Validate a parsed Chrome trace: `traceEvents` present, every entry
+/// carries `ph`/`pid`/`tid` (+ `ts` for non-metadata), per-track
+/// timestamps are monotonic in array order, and every `B` has a matching
+/// same-name `E` (fully balanced at end of input).  The `tracecheck`
+/// binary runs this in CI against the bench trace artifact.
+pub fn validate_trace(trace: &Value) -> crate::Result<TraceCheck> {
+    use std::collections::HashMap;
+    let Ok(Value::Arr(events)) = trace.get("traceEvents") else {
+        anyhow::bail!("trace has no traceEvents array");
+    };
+    // Track key → (last ts, open span-name stack).
+    let mut tracks: HashMap<(u64, u64), (f64, Vec<String>)> = HashMap::new();
+    let mut counted = 0usize;
+    let mut spans = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .ok()
+            .and_then(|v| v.as_str().ok())
+            .ok_or_else(|| anyhow::anyhow!("event {i}: missing ph"))?
+            .to_string();
+        if ph == "M" {
+            continue; // metadata carries no timestamp
+        }
+        let num = |key: &str| -> crate::Result<f64> {
+            ev.get(key)
+                .ok()
+                .and_then(|v| v.as_f64().ok())
+                .ok_or_else(|| anyhow::anyhow!("event {i}: missing numeric '{key}'"))
+        };
+        let pid = num("pid")? as u64;
+        let tid = num("tid")? as u64;
+        let ts = num("ts")?;
+        if !ts.is_finite() {
+            anyhow::bail!("event {i}: non-finite ts");
+        }
+        let name = ev
+            .get("name")
+            .ok()
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or_default()
+            .to_string();
+        let entry = tracks.entry((pid, tid)).or_insert((f64::NEG_INFINITY, Vec::new()));
+        if ts < entry.0 {
+            anyhow::bail!(
+                "event {i} ('{name}'): ts {ts} goes backwards on track ({pid}, {tid}) \
+                 (last {})",
+                entry.0
+            );
+        }
+        entry.0 = ts;
+        counted += 1;
+        match ph.as_str() {
+            "B" => entry.1.push(name),
+            "E" => {
+                let open = entry.1.pop().ok_or_else(|| {
+                    anyhow::anyhow!("event {i} ('{name}'): E with no open span on ({pid}, {tid})")
+                })?;
+                if !name.is_empty() && open != name {
+                    anyhow::bail!(
+                        "event {i}: E('{name}') closes B('{open}') on track ({pid}, {tid})"
+                    );
+                }
+                spans += 1;
+            }
+            "i" | "I" => {}
+            other => anyhow::bail!("event {i}: unsupported ph '{other}'"),
+        }
+    }
+    for ((pid, tid), (_, stack)) in &tracks {
+        if !stack.is_empty() {
+            anyhow::bail!(
+                "track ({pid}, {tid}) ends with {} unclosed span(s): {stack:?}",
+                stack.len()
+            );
+        }
+    }
+    Ok(TraceCheck { events: counted, tracks: tracks.len(), spans })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_powers_of_two() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        assert_eq!(Histogram::bucket_of(1023), 9);
+        assert_eq!(Histogram::bucket_of(1024), 10);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn histogram_records_and_summarizes() {
+        let mut h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        for v in [1u64, 2, 3, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.len(), 5);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 1000);
+        assert_eq!(h.mean(), (1.0 + 2.0 + 3.0 + 100.0 + 1000.0) / 5.0);
+        // p50 = 3rd sample (value 3) → bucket [2,4) upper bound 3.
+        assert_eq!(h.quantile(0.5), 3);
+        // p99 lands in the last occupied bucket, clamped to max.
+        assert_eq!(h.quantile(0.99), 1000);
+    }
+
+    #[test]
+    fn record_n_matches_repeated_record() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record_n(37, 1000);
+        for _ in 0..1000 {
+            b.record(37);
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quantize_handles_degenerate_inputs() {
+        assert_eq!(quantize_ns(-5.0), 0);
+        assert_eq!(quantize_ns(f64::NAN), 0);
+        assert_eq!(quantize_ns(f64::INFINITY), u64::MAX);
+        assert_eq!(quantize_ns(1.4), 1);
+        assert_eq!(quantize_ns(1.6), 2);
+    }
+
+    #[test]
+    fn merge_is_exact_and_handles_empty() {
+        let mut a = Histogram::new();
+        a.record(5);
+        let empty = Histogram::new();
+        let mut merged = a;
+        merged.merge(&empty);
+        assert_eq!(merged, a, "merging an empty histogram is the identity");
+        let mut e2 = empty;
+        e2.merge(&a);
+        assert_eq!(e2, a);
+    }
+
+    #[test]
+    fn metrics_absorbs_admit_and_stretch_events() {
+        let mut m = Metrics::default();
+        m.absorb_events(&[
+            Event::instant(EventKind::Admit, 0.0, 1, 7.0),
+            Event { kind: EventKind::DecodeStretch, at_ns: 0.0, dur_ns: 10.0, req: NO_REQ, value: 4.0, count: 25 },
+            Event::instant(EventKind::Shed, 5.0, 2, 0.0), // ignored
+        ]);
+        assert_eq!(m.queue_depth.len(), 1);
+        assert_eq!(m.queue_depth.max(), 7);
+        assert_eq!(m.batch_occupancy.len(), 25, "a stretch fans out to per-iteration samples");
+        assert_eq!(m.batch_occupancy.max(), 4);
+    }
+
+    #[test]
+    fn metrics_table_and_json_cover_every_registry_entry() {
+        let mut m = Metrics::default();
+        m.requests = 3;
+        m.ttft_ns.record(1_000_000);
+        let t = m.table("metrics");
+        assert_eq!(t.num_rows(), 12);
+        let v = m.to_json();
+        assert_eq!(v.get("requests").unwrap().as_u32().unwrap(), 3);
+        assert_eq!(v.get("ttft_ns").unwrap().get("total").unwrap().as_u32().unwrap(), 1);
+        // The summary JSON round-trips through the strict parser.
+        let parsed = crate::config::json::parse(&v.pretty()).unwrap();
+        assert_eq!(parsed.get("shed").unwrap().as_u32().unwrap(), 0);
+    }
+
+    #[test]
+    fn chrome_trace_exports_balanced_monotonic_tracks() {
+        let shard0 = vec![
+            Event::span(EventKind::PrefillChunk, 0.0, 10.0, 1, 64.0),
+            Event { kind: EventKind::DecodeStretch, at_ns: 10.0, dur_ns: 40.0, req: NO_REQ, value: 2.0, count: 8 },
+            Event::instant(EventKind::Admit, 50.0, 2, 1.0),
+        ];
+        let link = vec![
+            Event::span(EventKind::KvWire, 12.0, 6.0, 1, 4096.0),
+            Event::instant(EventKind::DecodeRelease, 18.0, 1, 1.0),
+        ];
+        let workers = vec![WorkerStats { polls: 10, steals: 2, blocked_streaks: 0, idle_sleeps: 1, wall_ns: 5_000 }];
+        let trace = chrome_trace(
+            &[("shard 0".to_string(), shard0), ("kv link".to_string(), link)],
+            &workers,
+        );
+        let check = validate_trace(&trace).unwrap();
+        assert_eq!(check.tracks, 3, "two sim tracks + one worker track");
+        assert_eq!(check.spans, 4, "prefill + stretch + wire + worker");
+        // And the emitted JSON survives the strict parser.
+        let reparsed = crate::config::json::parse(&trace.pretty()).unwrap();
+        assert!(validate_trace(&reparsed).is_ok());
+    }
+
+    #[test]
+    fn validate_trace_rejects_malformed_traces() {
+        use crate::config::json::parse;
+        // Not a trace at all.
+        assert!(validate_trace(&parse("{\"a\": 1}").unwrap()).is_err());
+        // Backwards timestamps on one track.
+        let bad_ts = r#"{"traceEvents": [
+            {"name": "x", "ph": "i", "pid": 0, "tid": 0, "ts": 10.0, "s": "t"},
+            {"name": "y", "ph": "i", "pid": 0, "tid": 0, "ts": 5.0, "s": "t"}
+        ]}"#;
+        assert!(validate_trace(&parse(bad_ts).unwrap()).is_err());
+        // Same timestamps on *different* tracks are fine.
+        let two_tracks = r#"{"traceEvents": [
+            {"name": "x", "ph": "i", "pid": 0, "tid": 0, "ts": 10.0, "s": "t"},
+            {"name": "y", "ph": "i", "pid": 0, "tid": 1, "ts": 5.0, "s": "t"}
+        ]}"#;
+        assert!(validate_trace(&parse(two_tracks).unwrap()).is_ok());
+        // Unbalanced span.
+        let unbalanced = r#"{"traceEvents": [
+            {"name": "x", "ph": "B", "pid": 0, "tid": 0, "ts": 1.0}
+        ]}"#;
+        assert!(validate_trace(&parse(unbalanced).unwrap()).is_err());
+        // E closing the wrong span name.
+        let crossed = r#"{"traceEvents": [
+            {"name": "x", "ph": "B", "pid": 0, "tid": 0, "ts": 1.0},
+            {"name": "y", "ph": "E", "pid": 0, "tid": 0, "ts": 2.0}
+        ]}"#;
+        assert!(validate_trace(&parse(crossed).unwrap()).is_err());
+    }
+
+    #[test]
+    fn nop_recorder_is_zero_sized() {
+        assert_eq!(std::mem::size_of::<NopRecorder>(), 0);
+    }
+}

@@ -33,6 +33,7 @@ use crate::config::ShardRole;
 use crate::coordinator::{RequestResult, ServerReport, ShardStats};
 use crate::metrics::{fmt_ns, percentile_sorted};
 use crate::report::Table;
+use crate::telemetry::Metrics;
 
 /// Tail summary of one latency population.
 #[derive(Debug, Clone, Copy, Default)]
@@ -110,6 +111,10 @@ pub struct SloSummary {
     pub handoffs: usize,
     /// Per-shard utilization rows, in shard order.
     pub shard_utilization: Vec<ShardUtilization>,
+    /// Deterministic telemetry registry derived from the same report:
+    /// event counters plus log-bucketed TTFT/TPOT histograms, merged in
+    /// shard order so multi-threaded runs report identically.
+    pub metrics: Metrics,
 }
 
 /// One shard's utilization row (group label and role ride along so
@@ -190,6 +195,7 @@ impl SloSummary {
                     kv_transfer_ns: s.kv_transfer_ns,
                 })
                 .collect(),
+            metrics: Metrics::from_report(report),
         }
     }
 
@@ -455,6 +461,18 @@ mod tests {
         assert!(rendered.contains("75%"), "{rendered}");
         let per_shard = s.utilization_table("by shard", true);
         assert_eq!(per_shard.num_rows(), 4, "per-shard rows behind the flag");
+    }
+
+    #[test]
+    fn summary_carries_the_metrics_registry() {
+        let rep = report(vec![result(0, 100.0, 300.0, 700.0, 5)], 700.0, 0.0);
+        let s = SloSummary::from_report(&rep);
+        assert_eq!(s.metrics.requests, 1);
+        assert_eq!(s.metrics.total_tokens, 5);
+        assert_eq!(s.metrics.ttft_ns.len(), 1);
+        // TTFT 200 ns lands in the log2 bucket covering [128, 255].
+        assert!(s.metrics.ttft_ns.max() >= 200);
+        assert_eq!(s.metrics.tpot_ns.len(), 1, "5 tokens ⇒ one TPOT sample");
     }
 
     #[test]

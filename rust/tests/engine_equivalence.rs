@@ -285,6 +285,108 @@ fn worker_pool_size_is_simulation_invariant() {
     }
 }
 
+/// The telemetry tentpole's zero-cost contract: attaching a
+/// `TraceRecorder` to every shard (and the KV link) must be invisible to
+/// the simulation — bit-identical reports to the unrecorded build, on
+/// both engines, across cluster shapes (unified FCFS, unified EDF +
+/// chunked prefill + preemption, disaggregated) and worker-pool sizes —
+/// while actually capturing a non-empty event stream.
+#[test]
+fn recording_is_simulation_invariant_across_engines_and_pools() {
+    use racam::runtime::executor;
+    use racam::telemetry::TraceRecorder;
+    let shapes: Vec<(&str, ClusterSpec)> = {
+        let mut edf = ClusterSpec::unified(2, 4);
+        edf.groups[0].scheduler = SchedulerKind::Edf;
+        edf.groups[0].policy = ServingPolicy::chunked(256).with_preemption();
+        vec![
+            ("unified/fcfs", ClusterSpec::unified(2, 4)),
+            ("unified/edf+chunk+preempt", edf),
+            ("disagg/1p+1d", ClusterSpec::disaggregated(1, 1, 4)),
+        ]
+    };
+    let traffic = stream(60, 2_000.0, 64, 768, Some(80_000_000));
+    let mut pools = vec![1, 2, executor::available_parallelism()];
+    pools.sort_unstable();
+    pools.dedup();
+    for engine in [EngineKind::Calendar, EngineKind::Oracle] {
+        for (label, shape) in &shapes {
+            let mut spec = shape.clone();
+            for g in &mut spec.groups {
+                g.policy = g.policy.with_engine(engine);
+            }
+            let plain = {
+                let mut coord = ClusterBuilder::new(spec.clone(), &racam_paper(), tiny_spec())
+                    .unwrap()
+                    .build(|_| SyntheticEngine::new(64, 128));
+                for req in generate(&traffic) {
+                    coord.submit(req);
+                }
+                coord.run_to_completion().unwrap()
+            };
+            for &threads in &pools {
+                let mut coord = ClusterBuilder::new(spec.clone(), &racam_paper(), tiny_spec())
+                    .unwrap()
+                    .build_recorded(
+                        |_| SyntheticEngine::new(64, 128),
+                        |_| TraceRecorder::new(),
+                        TraceRecorder::new(),
+                    );
+                coord.set_threads(threads);
+                for req in generate(&traffic) {
+                    coord.submit(req);
+                }
+                let rep = coord.run_to_completion().unwrap();
+                let tag = format!("{label}/{}/recorded-t{threads}", engine.label());
+                assert_identical(&tag, &rep, &plain);
+                let events: usize = (0..coord.num_shards())
+                    .map(|i| coord.shard_recorder(i).events.len())
+                    .sum();
+                assert!(events > 0, "{tag}: a recorded run must capture events");
+                if spec.is_disaggregated() {
+                    assert!(
+                        !coord.link_recorder().events.is_empty(),
+                        "{tag}: handoffs must land on the KV-link track"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The exported trace of a recorded run is valid Chrome-trace JSON:
+/// `validate_trace` (the same check `tracecheck` runs in CI) accepts it,
+/// per-track timestamps are monotonic, spans balance, and the JSON
+/// round-trips through the in-tree parser.
+#[test]
+fn recorded_run_exports_a_valid_chrome_trace() {
+    use racam::telemetry::{chrome_trace, validate_trace, TraceRecorder};
+    let mut coord =
+        ClusterBuilder::new(ClusterSpec::disaggregated(1, 1, 4), &racam_paper(), tiny_spec())
+            .unwrap()
+            .build_recorded(
+                |_| SyntheticEngine::new(64, 128),
+                |_| TraceRecorder::new(),
+                TraceRecorder::new(),
+            );
+    for req in generate(&stream(40, 3_000.0, 64, 1024, None)) {
+        coord.submit(req);
+    }
+    coord.run_to_completion().unwrap();
+    let mut tracks = Vec::new();
+    for i in 0..coord.num_shards() {
+        tracks.push((format!("shard {i}"), coord.shard_recorder(i).events.clone()));
+    }
+    tracks.push(("kv link".to_string(), coord.link_recorder().events.clone()));
+    let trace = chrome_trace(&tracks, coord.worker_stats());
+    let check = validate_trace(&trace).expect("exported trace must validate");
+    assert!(check.events > 0);
+    assert!(check.spans > 0, "prefill/decode/KV-wire spans must be present");
+    assert!(check.tracks >= tracks.len(), "every simulated track plus workers");
+    let reparsed = racam::config::json::parse(&trace.pretty()).expect("round-trips");
+    validate_trace(&reparsed).expect("still valid after a JSON round-trip");
+}
+
 /// The bucket-schedule cache must not change *what* is priced: identical
 /// decode-bucket population and mapping-service hit/miss counters across
 /// engines (the satellite's cache-accounting pin, at the cluster level).

@@ -617,3 +617,141 @@ fn prop_config_json_roundtrip_with_mutations() {
         assert_eq!(hw, back);
     });
 }
+
+/// Properties of the telemetry registry ([`racam::telemetry`]): the
+/// multi-threaded determinism story rests entirely on histogram and
+/// metrics merges being *exactly* associative and commutative, so shard
+/// results folded in shard order are bit-identical no matter which
+/// worker produced them or how the fold is grouped.
+mod telemetry_registry {
+    use super::{check, Rng};
+    use racam::telemetry::{quantize_ns, Histogram, Metrics};
+
+    /// Random `(value, multiplicity)` samples spanning the full bucket
+    /// range — shifting a raw 53-bit draw by a random amount lands
+    /// values in every log2 bucket, exercising the bucket-edge math.
+    fn samples(rng: &mut Rng) -> Vec<(u64, u64)> {
+        (0..rng.range(0, 24)).map(|_| (rng.next() >> rng.range(0, 52), rng.range(1, 3))).collect()
+    }
+
+    fn hist_of(samples: &[(u64, u64)]) -> Histogram {
+        let mut h = Histogram::new();
+        for &(v, n) in samples {
+            h.record_n(v, n);
+        }
+        h
+    }
+
+    /// Histogram merge commutes, associates, has the empty histogram as
+    /// identity, and equals recording every sample into one histogram —
+    /// integer counts/sum/min/max only, so equality is exact.
+    #[test]
+    fn prop_histogram_merge_is_associative_and_commutative() {
+        check("hist merge", 60, |rng| {
+            let (sa, sb, sc) = (samples(rng), samples(rng), samples(rng));
+            let (a, b, c) = (hist_of(&sa), hist_of(&sb), hist_of(&sc));
+
+            let mut ab = a;
+            ab.merge(&b);
+            let mut ba = b;
+            ba.merge(&a);
+            assert_eq!(ab, ba, "merge must commute");
+
+            let mut ab_c = ab;
+            ab_c.merge(&c);
+            let mut bc = b;
+            bc.merge(&c);
+            let mut a_bc = a;
+            a_bc.merge(&bc);
+            assert_eq!(ab_c, a_bc, "merge must associate");
+
+            let mut flat = sa.clone();
+            flat.extend(&sb);
+            flat.extend(&sc);
+            assert_eq!(ab_c, hist_of(&flat), "merge must equal one-pass recording");
+
+            let mut a_id = a;
+            a_id.merge(&Histogram::new());
+            assert_eq!(a_id, a, "empty histogram must be the merge identity");
+        });
+    }
+
+    /// `quantize_ns` is total over anything the simulated clock can
+    /// produce (NaN and negatives fold to 0) and preserves ordering, so
+    /// bucketing simulated durations never panics or inverts.
+    #[test]
+    fn prop_quantize_ns_is_total_and_monotone() {
+        check("quantize", 60, |rng| {
+            let x = rng.range(0, 1_000_000_000) as f64 / 7.0;
+            let y = x + rng.range(1, 1_000_000) as f64;
+            assert!(quantize_ns(x) <= quantize_ns(y), "quantize must be monotone");
+            assert_eq!(quantize_ns(-x - 1.0), 0);
+            assert_eq!(quantize_ns(f64::NAN), 0);
+            let mut h = Histogram::new();
+            h.record_ns(x);
+            assert_eq!(h.len(), 1);
+            assert_eq!(h.min(), quantize_ns(x));
+            assert_eq!(h.max(), quantize_ns(x));
+        });
+    }
+
+    fn random_metrics(rng: &mut Rng) -> Metrics {
+        let mut m = Metrics {
+            requests: rng.range(0, 40),
+            delivered: rng.range(0, 40),
+            shed: rng.range(0, 5),
+            preemptions: rng.range(0, 5),
+            prefill_chunks: rng.range(0, 100),
+            decode_iterations: rng.range(0, 1000),
+            handoffs: rng.range(0, 40),
+            total_tokens: rng.range(0, 10_000),
+            ..Metrics::default()
+        };
+        for (v, n) in samples(rng) {
+            m.ttft_ns.record_n(v, n);
+        }
+        for (v, n) in samples(rng) {
+            m.tpot_ns.record_n(v, n);
+        }
+        for (v, n) in samples(rng) {
+            m.queue_depth.record_n(v % 64, n);
+        }
+        for (v, n) in samples(rng) {
+            m.batch_occupancy.record_n(v % 32, n);
+        }
+        m
+    }
+
+    /// Folding per-shard registries in shard order is deterministic:
+    /// [`Metrics::merged`] (a left fold) equals a pairwise tree
+    /// reduction over the same slice, and repeating the fold reproduces
+    /// itself bit-for-bit.
+    #[test]
+    fn prop_metrics_merge_in_shard_order_is_deterministic() {
+        check("metrics merge", 40, |rng| {
+            let shards: Vec<Metrics> = (0..rng.range(1, 9)).map(|_| random_metrics(rng)).collect();
+
+            let left_fold = Metrics::merged(&shards);
+            assert_eq!(left_fold, Metrics::merged(&shards), "fold must be reproducible");
+
+            let mut layer = shards.clone();
+            while layer.len() > 1 {
+                layer = layer
+                    .chunks(2)
+                    .map(|pair| {
+                        let mut m = pair[0];
+                        if let Some(right) = pair.get(1) {
+                            m.merge(right);
+                        }
+                        m
+                    })
+                    .collect();
+            }
+            assert_eq!(layer[0], left_fold, "tree reduction must equal the left fold");
+
+            let mut with_identity = Metrics::default();
+            with_identity.merge(&left_fold);
+            assert_eq!(with_identity, left_fold, "default metrics must be the merge identity");
+        });
+    }
+}
