@@ -120,10 +120,32 @@ pub fn import(service: &MappingService, v: &Value) -> Result<usize> {
     Ok(imported)
 }
 
-/// Save the service's cache to a file.
-pub fn save_file(service: &MappingService, path: &std::path::Path) -> Result<()> {
-    std::fs::write(path, export(service).pretty())?;
+/// Write `text` to `path` atomically: write a same-directory temp file,
+/// then rename it over the target.  A crash mid-write leaves the old
+/// table intact (the rename is atomic on POSIX filesystems); the temp
+/// name carries the pid so concurrent processes never collide on it.
+pub(crate) fn write_atomic(path: &std::path::Path, text: &str) -> Result<()> {
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| anyhow::anyhow!("store path has no file name: {}", path.display()))?;
+    let tmp_name = format!(".{name}.tmp.{}", std::process::id());
+    let tmp = match path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        Some(dir) => dir.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    std::fs::write(&tmp, text)?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e.into());
+    }
     Ok(())
+}
+
+/// Save the service's cache to a file (atomic: temp file + rename, so a
+/// concurrent reader never observes a half-written table).
+pub fn save_file(service: &MappingService, path: &std::path::Path) -> Result<()> {
+    write_atomic(path, &export(service).pretty())
 }
 
 /// Load a cache file into the service.
@@ -197,6 +219,32 @@ mod tests {
         let b = service();
         assert_eq!(b.warm_start(&path).unwrap(), 1);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn failed_mid_write_leaves_old_table_readable() {
+        let a = service();
+        a.search_cached(&MatmulShape::new(1, 2048, 2048, Precision::Int8));
+        let dir = std::env::temp_dir();
+        let path = dir.join("racam_store_atomic_test.json");
+        save_file(&a, &path).unwrap();
+
+        // Simulate a crashed writer: a temp-style file holding a
+        // truncated table sits next to the target, never renamed.
+        let tmp = dir.join(format!(".racam_store_atomic_test.json.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, r#"{"version": 1, "entr"#).unwrap();
+
+        // The published table is untouched and still loads.
+        let b = service();
+        assert_eq!(load_file(&b, &path).unwrap(), 1);
+
+        // A subsequent save overwrites the stale temp and the final file
+        // still parses.
+        save_file(&a, &path).unwrap();
+        let c = service();
+        assert_eq!(load_file(&c, &path).unwrap(), 1);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&tmp).ok();
     }
 
     #[test]
