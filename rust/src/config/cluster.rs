@@ -12,6 +12,7 @@
 //! ```json
 //! {
 //!   "kv_link_gbps": 64,
+//!   "mapping_store": "results/mapping_store.json",
 //!   "groups": [
 //!     {"name": "prefill", "count": 2, "role": "prefill", "scheduler": "fcfs",
 //!      "max_batch": 4, "channels": 4,
@@ -183,6 +184,13 @@ pub struct ClusterSpec {
     pub groups: Vec<ShardGroup>,
     /// KV-transfer link bandwidth between prefill and decode shards, GB/s.
     pub kv_link_gbps: f64,
+    /// Optional persistent mapping-table path (the warm store): every
+    /// mapping service the builder creates loads it at construction and
+    /// merges its cache back on drop, so repeated runs — and concurrent
+    /// processes sharing the file — never re-search a kernel shape.
+    /// Entries are keyed by shape + channel count, so one file safely
+    /// serves heterogeneous channel partitions.
+    pub mapping_store: Option<String>,
 }
 
 impl ClusterSpec {
@@ -193,6 +201,7 @@ impl ClusterSpec {
         ClusterSpec {
             groups: vec![ShardGroup::unified("unified", n_shards, max_batch)],
             kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+            mapping_store: None,
         }
     }
 
@@ -206,12 +215,19 @@ impl ClusterSpec {
                 ShardGroup::unified("decode", decode, max_batch).with_role(ShardRole::Decode),
             ],
             kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+            mapping_store: None,
         }
     }
 
     /// Builder-style KV-link override (GB/s).
     pub fn with_kv_link_gbps(mut self, gbps: f64) -> Self {
         self.kv_link_gbps = gbps;
+        self
+    }
+
+    /// Builder-style warm-store override (see [`ClusterSpec::mapping_store`]).
+    pub fn with_mapping_store(mut self, path: &str) -> Self {
+        self.mapping_store = Some(path.to_string());
         self
     }
 
@@ -350,10 +366,14 @@ impl ClusterSpec {
     }
 
     fn to_value(&self) -> Value {
-        Value::obj(vec![
+        let mut pairs = vec![
             ("kv_link_gbps", Value::Num(self.kv_link_gbps)),
             ("groups", Value::Arr(self.groups.iter().map(Self::group_to_value).collect())),
-        ])
+        ];
+        if let Some(path) = &self.mapping_store {
+            pairs.push(("mapping_store", Value::Str(path.clone())));
+        }
+        Value::obj(pairs)
     }
 
     fn from_value(v: &Value) -> Result<Self, JsonError> {
@@ -365,6 +385,10 @@ impl ClusterSpec {
             kv_link_gbps: match v.get("kv_link_gbps") {
                 Ok(g) => g.as_f64()?,
                 Err(_) => DEFAULT_KV_LINK_GBPS,
+            },
+            mapping_store: match v.get("mapping_store") {
+                Ok(m) => Some(m.as_str()?.to_string()),
+                Err(_) => None,
             },
         })
     }
@@ -409,9 +433,13 @@ mod tests {
                     .with_channels(4),
             ],
             kv_link_gbps: 32.0,
+            mapping_store: Some("results/mapping_store.json".into()),
         };
         let back = ClusterSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(spec, back);
+        // Absent mapping_store stays None through the round trip.
+        let plain = ClusterSpec::unified(2, 4);
+        assert_eq!(ClusterSpec::from_json(&plain.to_json()).unwrap().mapping_store, None);
     }
 
     #[test]
@@ -434,11 +462,13 @@ mod tests {
         let only_prefill = ClusterSpec {
             groups: vec![ShardGroup::unified("p", 2, 4).with_role(ShardRole::Prefill)],
             kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+            mapping_store: None,
         };
         assert!(only_prefill.validate().unwrap_err().contains("unbalanced"));
         let only_decode = ClusterSpec {
             groups: vec![ShardGroup::unified("d", 2, 4).with_role(ShardRole::Decode)],
             kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+            mapping_store: None,
         };
         assert!(only_decode.validate().unwrap_err().contains("unbalanced"));
         // And the JSON loader enforces the same rule.
@@ -465,6 +495,7 @@ mod tests {
                 ShardGroup::unified("b", 1, 4),
             ],
             kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+            mapping_store: None,
         };
         assert!(spec.validate().unwrap_err().contains("mixed"));
     }
@@ -474,6 +505,7 @@ mod tests {
         let spec = ClusterSpec {
             groups: vec![ShardGroup::unified("a", 4, 4).with_channels(2)],
             kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+            mapping_store: None,
         };
         assert!(spec.validate().unwrap_err().contains("cannot cover"));
     }
@@ -483,6 +515,7 @@ mod tests {
         let spec = ClusterSpec {
             groups: vec![ShardGroup::unified("a", 1, 4), ShardGroup::unified("a", 1, 4)],
             kv_link_gbps: DEFAULT_KV_LINK_GBPS,
+            mapping_store: None,
         };
         assert!(spec.validate().unwrap_err().contains("duplicate"));
         let bad_link = ClusterSpec::unified(1, 1).with_kv_link_gbps(0.0);

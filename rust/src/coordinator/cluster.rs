@@ -23,7 +23,12 @@
 //! disaggregated cluster still aggregates to the paper device the way the
 //! flat partition did.  Shards with equal channel counts share one mapping
 //! service across the whole cluster (a mapping priced for 4 channels is
-//! valid on every 4-channel shard, whichever group owns it).
+//! valid on every 4-channel shard, whichever group owns it).  When the
+//! spec names a [`mapping_store`](ClusterSpec::mapping_store), the builder
+//! threads that warm table through every distinct service: each loads the
+//! file at construction and merges its cache back on drop, so repeated
+//! runs (and concurrent processes) skip the mapping search entirely for
+//! shapes any of them has already priced — see `docs/mapping.md`.
 
 use super::engine::TokenEngine;
 use super::multi::Coordinator;
@@ -61,7 +66,28 @@ impl ClusterBuilder {
     pub fn new(spec: ClusterSpec, hw: &HwConfig, model: LlmSpec) -> Result<Self> {
         spec.validate().map_err(|e| anyhow::anyhow!("invalid cluster spec: {e}"))?;
         let services = Self::partition(&spec, hw)?;
+        Self::attach_warm_store(&spec, &services)?;
         Ok(ClusterBuilder { spec, model, services })
+    }
+
+    /// Thread the spec's warm mapping store (if any) through every
+    /// *distinct* mapping service: equal-channel shards alias one service,
+    /// so the table loads once per channel count and each distinct service
+    /// merges its cache back into the same file on drop.  Caller-supplied
+    /// services ([`ClusterBuilder::with_spec_and_services`]) are left
+    /// untouched — they are the caller's to warm.
+    fn attach_warm_store(spec: &ClusterSpec, services: &[MappingService]) -> Result<()> {
+        let Some(path) = &spec.mapping_store else { return Ok(()) };
+        let mut seen: Vec<&MappingService> = Vec::new();
+        for svc in services {
+            if seen.iter().any(|s| s.shares_cache_with(svc)) {
+                continue;
+            }
+            svc.set_warm_path(std::path::Path::new(path))
+                .map_err(|e| anyhow::anyhow!("mapping store '{path}': {e}"))?;
+            seen.push(svc);
+        }
+        Ok(())
     }
 
     /// Build over caller-supplied per-shard mapping services (pre-warmed
@@ -324,6 +350,43 @@ mod tests {
     }
 
     #[test]
+    fn warm_store_threads_through_every_service_and_survives_rebuilds() {
+        use crate::config::{MatmulShape, Precision};
+        let path = std::env::temp_dir()
+            .join(format!("racam_cluster_warm_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let spec =
+            || ClusterSpec::unified(3, 2).with_mapping_store(path.to_str().unwrap());
+        let shape = MatmulShape::new(64, 256, 256, Precision::Int8);
+        {
+            let b = ClusterBuilder::new(spec(), &racam_paper(), tiny_spec()).unwrap();
+            // Every service carries the warm path (3-3-2 partition: two
+            // distinct services behind three shards).
+            for s in b.services() {
+                assert_eq!(s.warm_path().as_deref(), Some(path.as_path()));
+                assert_eq!(s.warm_loads(), 0, "nothing to load on a cold store");
+            }
+            assert!(b.services()[0].shares_cache_with(&b.services()[1]));
+            assert!(!b.services()[0].shares_cache_with(&b.services()[2]));
+            // Price one shape on each distinct service, then drop: both
+            // merge into the same file.
+            b.services()[0].search_cached(&shape).unwrap();
+            b.services()[2].search_cached(&shape).unwrap();
+        }
+        assert!(path.exists(), "services must persist their caches on drop");
+        let b = ClusterBuilder::new(spec(), &racam_paper(), tiny_spec()).unwrap();
+        // The 3-channel service loads the 3-channel entry, the 2-channel
+        // service the 2-channel one — channel keying keeps them apart.
+        assert_eq!(b.services()[0].warm_loads(), 1);
+        assert_eq!(b.services()[2].warm_loads(), 1);
+        b.services()[0].search_cached(&shape).unwrap();
+        b.services()[2].search_cached(&shape).unwrap();
+        assert_eq!(b.services()[0].misses() + b.services()[2].misses(), 0);
+        assert_eq!(b.services()[0].hits() + b.services()[2].hits(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn explicit_group_shares_partition_within_groups() {
         let spec = ClusterSpec {
             groups: vec![
@@ -335,6 +398,7 @@ mod tests {
                     .with_channels(2),
             ],
             kv_link_gbps: 64.0,
+            mapping_store: None,
         };
         let b = ClusterBuilder::new(spec, &racam_paper(), tiny_spec()).unwrap();
         let ch: Vec<u32> = b.services().iter().map(|s| s.hw().hw.dram.channels).collect();
@@ -353,6 +417,7 @@ mod tests {
                 ShardGroup::unified("d", 2, 4).with_role(ShardRole::Decode).with_channels(4),
             ],
             kv_link_gbps: 64.0,
+            mapping_store: None,
         };
         let err = ClusterBuilder::new(spec, &racam_paper(), tiny_spec())
             .err()
@@ -366,6 +431,7 @@ mod tests {
         let spec = ClusterSpec {
             groups: vec![ShardGroup::unified("d", 2, 4).with_role(ShardRole::Decode)],
             kv_link_gbps: 64.0,
+            mapping_store: None,
         };
         assert!(ClusterBuilder::new(spec, &racam_paper(), tiny_spec()).is_err());
     }
@@ -395,6 +461,7 @@ mod tests {
                 ShardGroup::unified("decode", 1, 4).with_role(ShardRole::Decode),
             ],
             kv_link_gbps: 64.0,
+            mapping_store: None,
         };
         let c = build(spec);
         assert_eq!(

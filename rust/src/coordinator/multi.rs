@@ -329,6 +329,22 @@ impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, 
         &self.services
     }
 
+    /// Cluster-wide mapping-cache counters `(hits, misses, warm_loads)`,
+    /// counting every *distinct* service once (equal-channel shards alias
+    /// one service; naive per-shard summation would multiply its counters
+    /// by the alias count).
+    pub fn mapping_counters(&self) -> (u64, u64, u64) {
+        let mut distinct: Vec<&MappingService> = Vec::new();
+        for svc in &self.services {
+            if !distinct.iter().any(|d| d.shares_cache_with(svc)) {
+                distinct.push(svc);
+            }
+        }
+        distinct.iter().fold((0, 0, 0), |(h, m, w), s| {
+            (h + s.hits(), m + s.misses(), w + s.warm_loads())
+        })
+    }
+
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }

@@ -7,7 +7,13 @@
 //! every other shard — see [`super::Coordinator`]), a pluggable admission
 //! [`Scheduler`] (FCFS by default), a [`ServingPolicy`] governing the
 //! iteration engine, and persistent per-bucket prefill and decode cost
-//! caches so repeated runs never re-price a bucket.
+//! caches so repeated runs never re-price a bucket.  Pricing a bucket
+//! runs the kernel shapes through the mapping service's cached
+//! best-first search — when the service has a warm store attached
+//! ([`ClusterSpec::mapping_store`](crate::config::ClusterSpec), see
+//! `docs/mapping.md`), a context-bucket crossing whose shapes were
+//! searched by *any* earlier run answers from the loaded table instead
+//! of searching.
 //!
 //! ## The serving engines
 //!

@@ -17,6 +17,22 @@ pub const PREFILL_TOKENS: u64 = 1024;
 /// Context length at which standalone decode throughput is sampled.
 pub const DECODE_CTX: u64 = 1024;
 
+/// Cluster-wide mapping-cache counters `(hits, misses, warm_loads)` over
+/// a shard service list, counting every distinct service once (shards
+/// with equal channel counts alias one service) — the triple the serving
+/// experiments feed to [`crate::telemetry::Metrics::absorb_mapping`].
+pub(crate) fn mapping_counters(services: &[crate::mapping::MappingService]) -> (u64, u64, u64) {
+    let mut distinct: Vec<&crate::mapping::MappingService> = Vec::new();
+    for svc in services {
+        if !distinct.iter().any(|d| d.shares_cache_with(svc)) {
+            distinct.push(svc);
+        }
+    }
+    distinct.iter().fold((0, 0, 0), |(h, m, w), s| {
+        (h + s.hits(), m + s.misses(), w + s.warm_loads())
+    })
+}
+
 /// The three evaluated systems for one LLM.
 pub struct SystemSet {
     pub h100: H100Model,

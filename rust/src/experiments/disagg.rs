@@ -221,6 +221,7 @@ fn matrix(
             ),
             false,
         );
+    metrics.absorb_mapping(super::common::mapping_counters(services));
     Ok((t, util, metrics))
 }
 

@@ -13,6 +13,7 @@ mod fig14;
 mod fig15;
 mod fig16;
 mod fig17;
+mod map;
 mod prefill;
 mod scale;
 mod tables;
@@ -31,7 +32,7 @@ use std::time::Instant;
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
     "tab1", "tab4", "tab5", "ext-energy", "ext-reliability", "ext-trace", "traffic", "prefill",
-    "disagg", "scale",
+    "disagg", "scale", "map",
 ];
 
 /// Run one experiment; returns its tables (already saved under `results/`,
@@ -62,6 +63,7 @@ pub fn run(id: &str) -> Result<Vec<Table>> {
         "prefill" => prefill::run()?,
         "disagg" => disagg::run()?,
         "scale" => scale::run()?,
+        "map" => map::run()?,
         other => anyhow::bail!("unknown experiment '{other}' (known: {ALL_IDS:?})"),
     };
     let wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
@@ -117,6 +119,7 @@ fn extra_bench_config(id: &str) -> Vec<(&'static str, Value)> {
         "prefill" => prefill::bench_config(),
         "disagg" => disagg::bench_config(),
         "scale" => scale::bench_config(),
+        "map" => map::bench_config(),
         _ => Vec::new(),
     }
 }

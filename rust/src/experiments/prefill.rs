@@ -205,6 +205,7 @@ fn matrix(
             }
         }
     }
+    metrics.absorb_mapping(super::common::mapping_counters(services));
     Ok((t, metrics))
 }
 

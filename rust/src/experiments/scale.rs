@@ -388,6 +388,7 @@ pub fn run() -> crate::Result<(Vec<Table>, Metrics)> {
         "sweep_speedup_max_threads".into(),
         format!("{sweep_speedup:.2}x"),
     ]);
+    metrics.absorb_mapping((service.hits(), service.misses(), service.warm_loads()));
     Ok((vec![t, sweep, h], metrics))
 }
 

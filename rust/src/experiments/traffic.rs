@@ -140,6 +140,7 @@ pub(crate) fn matrix(
     let util = util_summary
         .expect("at least one rate")
         .shard_table(&format!("Traffic — per-shard utilization ({}, FCFS, highest rate)", model.name));
+    metrics.absorb_mapping(super::common::mapping_counters(&services));
     Ok((t, util, metrics))
 }
 

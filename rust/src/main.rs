@@ -13,7 +13,7 @@
 use racam::area::AreaModel;
 use racam::config::{self, racam_paper, HwConfig, MatmulShape, Precision, Scenario};
 use racam::experiments;
-use racam::mapping::{HwModel, MappingEngine};
+use racam::mapping::MappingService;
 use racam::metrics::fmt_ns;
 use racam::workloads::{self, RacamSystem};
 use racam::Result;
@@ -50,13 +50,14 @@ fn print_help() {
         "racam — reuse-aware in-DRAM PIM simulator + automated mapping\n\
          \n\
          usage:\n\
-         \x20 racam map <M> <K> <N> [--prec BITS] [--all]\n\
+         \x20 racam map <M> <K> <N> [--prec BITS] [--all] [--store FILE]\n\
          \x20 racam llm <gpt3-6.7b|gpt3-175b|llama3-8b|llama3-70b> [--stage prefill|decode|e2e] [--scenario code|ctx]\n\
          \x20 racam area\n\
          \x20 racam config [--dump FILE | --load FILE]\n\
          \x20 racam experiments <fig1|fig9|...|ext-trace|traffic|prefill|disagg|scale|all>\n\
          \x20 racam serve [--requests N] [--tokens N] [--batch N] [--shards N] [--synthetic]\n\
-         \x20             [--mapping-cache FILE] [--sched fcfs|bucket|edf] [--rate R]\n\
+         \x20             [--mapping-cache FILE] [--warm-store FILE]\n\
+         \x20             [--sched fcfs|bucket|edf] [--rate R]\n\
          \x20             [--deadline-ms MS] [--traffic SPEC.json | --trace TRACE.json]\n\
          \x20             [--chunk-tokens N] [--preempt] [--serving POLICY.json]\n\
          \x20             [--engine calendar|oracle] [--cluster CLUSTER.json]\n\
@@ -78,6 +79,12 @@ fn print_help() {
          (default: the RACAM_THREADS env var, else all cores; simulated\n\
          results are bit-identical for every value).\n\
          \n\
+         mapping warm store: --warm-store attaches a persistent shared mapping\n\
+         table (docs/mapping.md): every shard service loads it at startup and\n\
+         merges its searches back atomically on exit, so concurrent and\n\
+         repeated runs fold one table; --mapping-cache is the legacy\n\
+         shard-0-only load/save pair.\n\
+         \n\
          cluster: --cluster loads a ClusterSpec JSON declaring shard groups\n\
          (count, role unified|prefill|decode, scheduler, policy, channel share,\n\
          kv_link_gbps) and replaces --shards/--batch/--sched/--chunk-tokens/\n\
@@ -97,6 +104,20 @@ fn flag_value(args: &[String], flag: &str) -> Option<String> {
     args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Aggregate (hits, misses, warm_loads) across shard services, counting
+/// each shared cache once (equal-channel shards alias one service).
+fn mapping_counters(services: &[MappingService]) -> (u64, u64, u64) {
+    let mut distinct: Vec<&MappingService> = Vec::new();
+    for svc in services {
+        if !distinct.iter().any(|d| d.shares_cache_with(svc)) {
+            distinct.push(svc);
+        }
+    }
+    distinct
+        .iter()
+        .fold((0, 0, 0), |(h, m, w), s| (h + s.hits(), m + s.misses(), w + s.warm_loads()))
+}
+
 fn cmd_map(args: Vec<String>) -> Result<()> {
     let pos: Vec<u64> =
         args.iter().take_while(|a| !a.starts_with("--")).filter_map(|a| a.parse().ok()).collect();
@@ -106,10 +127,16 @@ fn cmd_map(args: Vec<String>) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unsupported precision {bits} (2/4/8/16)"))?;
     let shape = MatmulShape::new(pos[0], pos[1], pos[2], prec);
 
-    let engine = MappingEngine::new(HwModel::new(&racam_paper()));
+    let service = MappingService::for_config(&racam_paper());
+    if let Some(path) = flag_value(&args, "--store") {
+        // Attach the shared warm store: known shapes answer from the
+        // table, and this search merges back into it on exit.
+        let n = service.set_warm_path(std::path::Path::new(&path))?;
+        println!("warm store  : {path} ({n} entries loaded)");
+    }
     // Exhaustive on purpose: `racam map` reports the whole-space spread,
     // which the pruned serving search intentionally skips.
-    let r = engine
+    let r = service
         .search_exhaustive(&shape)
         .ok_or_else(|| anyhow::anyhow!("no candidate mapping evaluates for {}", shape.label()))?;
     println!("shape       : {} ({})", shape.label(), prec.label());
@@ -124,8 +151,18 @@ fn cmd_map(args: Vec<String>) -> Result<()> {
     );
     println!("pe util     : {:.1}%", r.best.pe_util * 100.0);
     println!("spread      : {:.1}x worst/best", r.spread());
+    // The serving-path search on the same shape (cached, so a --store run
+    // persists the entry): same winner by the bit-identity contract, a
+    // fraction of the evaluations.
+    let bf = service
+        .search_cached(&shape)
+        .ok_or_else(|| anyhow::anyhow!("best-first search failed for {}", shape.label()))?;
+    println!(
+        "best-first  : {} evaluated + {} pruned ({} bound calls, frontier peak {})",
+        bf.candidates, bf.pruned, bf.bound_calls, bf.frontier_peak
+    );
     if args.iter().any(|a| a == "--all") {
-        for e in engine.evaluate_all(&shape) {
+        for e in service.evaluate_all(&shape) {
             println!("{:>14.0}ns  util={:<6.3} {}", e.total_ns(), e.pe_util, e.mapping);
         }
     }
@@ -284,6 +321,14 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         c.groups[0].scheduler = kind;
         c.groups[0].policy = policy;
         c
+    };
+    // The shared cross-process warm store (see docs/mapping.md): every
+    // equal-channel mapping service loads the table at construction and
+    // merges its cache back on exit.  A cluster JSON can set the path
+    // itself (`mapping_store`); the flag overrides it.
+    let cluster = match flag_value(&args, "--warm-store") {
+        Some(path) => cluster.with_mapping_store(&path),
+        None => cluster,
     };
 
     let spec = config::gpt3_6_7b();
@@ -497,11 +542,13 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         if show_metrics {
             // Report-derived counters/latency histograms, then the
             // event-derived samples (queue depth at admission, batch
-            // occupancy per decode iteration) from the recorded streams.
+            // occupancy per decode iteration) from the recorded streams,
+            // then the mapping-cache counters from the shard services.
             let mut m = SloSummary::from_report(&report).metrics;
             for (_, events) in tracks {
                 m.absorb_events(events);
             }
+            m.absorb_mapping(mapping_counters(&services));
             println!("{}", m.table("telemetry metrics").render());
         }
     }
@@ -510,6 +557,13 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         services[0].misses(),
         services[0].hits()
     );
+    if cluster.mapping_store.is_some() {
+        let (hits, misses, warm) = mapping_counters(&services);
+        println!(
+            "warm store: {warm} entries loaded, {misses} searched fresh, {hits} cache-served; \
+             merged back on exit"
+        );
+    }
     println!(
         "simulated {:.0} tok/s on RACAM ({}); {:.0} tok/s host wall",
         report.sim_tokens_per_s, spec.name, report.wall_tokens_per_s

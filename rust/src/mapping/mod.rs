@@ -19,12 +19,19 @@
 //! software + hardware models (§4.4), and returns the latency-optimal one.
 //!
 //! Search and caching live in [`MappingService`]: a shared, thread-safe
-//! pricing service with a parallelized, *bound-pruned* search (candidates
-//! whose analytic compute-only [`lower_bound`] already reaches the
-//! incumbent are skipped; the winner stays bit-identical to the serial
-//! exhaustive reference) and a concurrent once-per-shape cache, so every
-//! serving shard, baseline comparison and experiment amortizes the same
-//! table.  [`store`] persists that table across runs (§7 warm start).
+//! pricing service with a **best-first** search — candidates stream from
+//! the lazy generator ([`lazy_mappings`]), enter a min-heap keyed by the
+//! analytic compute-only [`lower_bound`], and full evaluations pop in
+//! bound order, so the incumbent tightens maximally fast and the frontier
+//! is cut the moment the cheapest remaining bound reaches it.  The winner
+//! stays bit-identical to the serial exhaustive reference (the strict-`<`
+//! tie-breaking contract; invariants, bound derivation and the warm-store
+//! lifecycle are written up in `docs/mapping.md`).  A concurrent
+//! once-per-shape cache lets every serving shard, baseline comparison and
+//! experiment amortize the same table, and [`store`] persists that table
+//! across runs and *processes* (§7 warm start): atomic writes plus a
+//! commutative best-entry-per-key merge, attached to a service via
+//! [`MappingService::set_warm_path`].
 
 mod engine;
 mod model_hw;
@@ -37,4 +44,7 @@ pub use engine::MappingEngine;
 pub use model_hw::{HwModel, PassCosts};
 pub use model_sw::{evaluate, lower_bound, Evaluation, LevelUsage};
 pub use service::{MappingService, SearchResult};
-pub use space::{enumerate_mappings, BlockMapping, Dim, DimSet, HierMapping, Level, Mapping, LEVELS};
+pub use space::{
+    enumerate_mappings, lazy_mappings, BlockMapping, Dim, DimSet, HierMapping, Level, Mapping,
+    MappingCandidates, LEVELS,
+};

@@ -255,7 +255,10 @@ fn compute_side(
 /// therefore `<=` every candidate total, so the search can prune a
 /// candidate whose bound already reaches the incumbent under strict-`<`
 /// tie-breaking without ever changing the winner (pinned by the
-/// `lower_bound_never_exceeds_evaluation` oracle test).
+/// `lower_bound_never_exceeds_evaluation` oracle test).  The best-first
+/// search additionally uses it as the frontier's priority key: popping
+/// candidates in bound order is what makes the incumbent tighten
+/// maximally fast (see `docs/mapping.md` for the derivation).
 ///
 /// Returns `None` exactly when [`evaluate`] does (degenerate shapes).
 pub fn lower_bound(shape: &MatmulShape, mapping: &Mapping, hw: &HwModel) -> Option<f64> {

@@ -12,33 +12,54 @@
 //!   reference walk over the enumerated space (first strictly-lower-
 //!   latency candidate wins, i.e. the earliest candidate among latency
 //!   ties);
-//! * [`MappingService::search`] — the parallel **pruned** search (the
-//!   serving default): workers chunk the candidate list, skip candidates
-//!   whose analytic lower bound ([`super::model_sw::lower_bound`] — the
-//!   compute cost with I/O dropped) already reaches their incumbent, and
-//!   reduce the per-chunk winners **in chunk order with a strict `<`**.
-//!   A pruned candidate can never beat the incumbent under strict `<`,
-//!   so the winner is bit-for-bit the serial reference's; the skipped
-//!   count is reported as [`SearchResult::pruned`];
+//! * [`MappingService::search`] / [`MappingService::search_best_first`]
+//!   — the **best-first** search (the serving default): candidates
+//!   stream from the lazy generator ([`super::space::lazy_mappings`]),
+//!   each is admitted to a min-heap keyed by its analytic lower bound
+//!   ([`super::model_sw::lower_bound`] — the compute cost with I/O
+//!   dropped), and full evaluations pop in *bound order* so the
+//!   incumbent tightens maximally fast; the moment the cheapest
+//!   remaining bound reaches the incumbent, the whole frontier is
+//!   pruned in one cut.  The winner is the minimum by `(total_ns,
+//!   enumeration index)` — bit-for-bit the serial exhaustive winner
+//!   (tie-breaking contract in `docs/mapping.md`);
+//! * [`MappingService::search_enumeration_pruned`] — the prior parallel
+//!   bound-pruned scan in enumeration order, kept as the `exp map`
+//!   comparison baseline: workers chunk the candidate list, skip
+//!   candidates whose bound already reaches their chunk's incumbent,
+//!   and reduce the per-chunk winners **in chunk order with a strict
+//!   `<`**, so its winner is also the serial reference's;
 //! * [`MappingService::search_exhaustive`] — the parallel search without
 //!   pruning (identical `candidates`/`worst_ns` to the serial reference;
 //!   use it when the whole-space spread is the result, as in Fig. 15);
 //! * [`MappingService::search_serial_pruned`] — the single-threaded
-//!   pruned walk, the oracle for the pruned parallel path.
+//!   enumeration-order pruned walk, the oracle for the chunked path.
 //!
 //! Concurrent [`MappingService::search_cached`] calls for the same shape
 //! coalesce on a per-shape once-cell: the first caller runs the search,
 //! later callers (including ones racing on other threads) block on the
 //! cell and reuse the result, so the miss counter for a repeated shape is
 //! exactly 1 no matter how many shards ask.
+//!
+//! ## Warm store
+//!
+//! [`MappingService::set_warm_path`] attaches a persistent mapping table
+//! (see [`super::store`]): existing entries load into the cache
+//! immediately (counted by [`MappingService::warm_loads`]), and when the
+//! last clone of the service drops, the cache is **merged** back into
+//! the file — atomic temp-file + rename, best entry per
+//! (shape, channels) key — so concurrent processes fold their tables
+//! instead of clobbering each other and a repeated run never re-searches
+//! a shape.
 
 use super::model_hw::HwModel;
 use super::model_sw::{evaluate, lower_bound, Evaluation};
-use super::space::enumerate_mappings;
+use super::space::{enumerate_mappings, lazy_mappings, Mapping};
 use crate::config::{HwConfig, MatmulShape};
+use std::cmp::Reverse;
 use std::collections::hash_map::Entry;
-use std::collections::HashMap;
-use std::path::Path;
+use std::collections::{BinaryHeap, HashMap};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -54,6 +75,15 @@ pub struct SearchResult {
     /// they could not win under strict-`<` tie-breaking, so the winner is
     /// unchanged.  Zero for exhaustive searches.
     pub pruned: usize,
+    /// [`super::model_sw::lower_bound`] invocations the search performed
+    /// (one per candidate admitted or pruned on the best-first path; one
+    /// per incumbent check on the enumeration-order pruned paths).  Zero
+    /// for exhaustive searches.
+    pub bound_calls: usize,
+    /// High-water mark of the best-first frontier heap — how much of the
+    /// space was simultaneously admitted but not yet evaluated.  Zero for
+    /// the scan-based paths.
+    pub frontier_peak: usize,
     /// Worst *evaluated* candidate latency (for the Fig. 15 spread).  A
     /// pruned search skips exactly the high-latency candidates, so use an
     /// exhaustive search when the spread itself is the result.
@@ -116,6 +146,7 @@ struct Partial {
     worst_ns: f64,
     candidates: usize,
     pruned: usize,
+    bound_calls: usize,
 }
 
 impl Partial {
@@ -124,8 +155,39 @@ impl Partial {
             best,
             candidates: self.candidates,
             pruned: self.pruned,
+            bound_calls: self.bound_calls,
+            frontier_peak: 0,
             worst_ns: self.worst_ns,
         })
+    }
+}
+
+/// One admitted best-first candidate: min-heap key is the analytic lower
+/// bound, ties broken toward the earlier enumeration index so equal-bound
+/// candidates evaluate in enumeration order (deterministic pop order).
+struct FrontierEntry {
+    bound: f64,
+    seq: usize,
+    mapping: Mapping,
+}
+
+impl PartialEq for FrontierEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for FrontierEntry {}
+
+impl PartialOrd for FrontierEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for FrontierEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.bound.total_cmp(&other.bound).then(self.seq.cmp(&other.seq))
     }
 }
 
@@ -138,6 +200,34 @@ struct Shared {
     cache: Mutex<HashMap<MatmulShape, Arc<OnceLock<Option<SearchResult>>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Entries imported from the warm store (see
+    /// [`MappingService::set_warm_path`]).
+    warm_loads: AtomicU64,
+    /// Attached warm-store file: the cache merges back into it when the
+    /// last clone drops.
+    warm_path: Mutex<Option<PathBuf>>,
+}
+
+impl Drop for Shared {
+    fn drop(&mut self) {
+        // Last clone gone: merge the cache into the warm store, if one is
+        // attached.  `get_mut` needs no locking (we hold `&mut self`) and
+        // the merge is atomic on disk; errors are swallowed — a drop path
+        // must never panic, and losing a warm table only costs re-search.
+        let Some(path) = self.warm_path.get_mut().ok().and_then(|p| p.take()) else {
+            return;
+        };
+        let Ok(cache) = self.cache.get_mut() else { return };
+        let entries: Vec<(MatmulShape, SearchResult)> = cache
+            .iter()
+            .filter_map(|(shape, cell)| cell.get().and_then(|o| o.clone()).map(|r| (*shape, r)))
+            .collect();
+        if entries.is_empty() {
+            return;
+        }
+        let channels = self.hw.hw.dram.channels;
+        let _ = super::store::merge_entries_into_file(&path, channels, &entries);
+    }
 }
 
 /// Shared concurrent mapping service.  `Clone` is cheap and shares the
@@ -155,6 +245,8 @@ impl MappingService {
                 cache: Mutex::new(HashMap::new()),
                 hits: AtomicU64::new(0),
                 misses: AtomicU64::new(0),
+                warm_loads: AtomicU64::new(0),
+                warm_path: Mutex::new(None),
             }),
         }
     }
@@ -201,15 +293,114 @@ impl MappingService {
         Self::scan_chunk(shape, &mappings, &self.shared.hw, true).into_result()
     }
 
-    /// Parallel **pruned** search — the serving default.  Each worker
+    /// **Best-first** search — the serving default; see
+    /// [`Self::search_best_first`].
+    pub fn search(&self, shape: &MatmulShape) -> Option<SearchResult> {
+        self.search_best_first(shape)
+    }
+
+    /// Best-first branch-and-bound over the lazily enumerated space.
+    ///
+    /// Two phases:
+    ///
+    /// 1. **Admission** — candidates stream from
+    ///    [`super::space::lazy_mappings`] in enumeration order.  The first
+    ///    evaluable candidate is evaluated immediately and seeds the
+    ///    incumbent (the same seed the serial pruned walk uses); every
+    ///    later candidate gets one [`lower_bound`] call and is either
+    ///    pruned on the spot (bound already reaches the incumbent) or
+    ///    pushed onto a min-heap keyed by `(bound, enumeration index)`.
+    /// 2. **Pop** — entries pop in bound order and are fully evaluated,
+    ///    tightening the incumbent as fast as the bound ordering allows.
+    ///    Because the heap is a min-heap on the bound, the first popped
+    ///    entry whose bound reaches the incumbent proves *every* remaining
+    ///    entry dominated: the whole frontier is pruned in one cut.
+    ///
+    /// The incumbent is replaced only when a candidate's total is strictly
+    /// lower, or exactly equal with an earlier enumeration index — i.e.
+    /// the winner is the minimum by `(total_ns, enumeration index)`, which
+    /// is precisely the candidate [`Self::search_serial`]'s first-strict-
+    /// improvement walk keeps.  A pruned candidate's true total strictly
+    /// exceeds the incumbent (the bound sits within 1e-12 relative of
+    /// truth, [`PRUNE_SLACK`] allows 1e-9), so it can neither win nor tie:
+    /// the winner is bit-for-bit the serial exhaustive reference's, in
+    /// whatever order the heap evaluates.
+    pub fn search_best_first(&self, shape: &MatmulShape) -> Option<SearchResult> {
+        let hw = &self.shared.hw;
+        let mut heap: BinaryHeap<Reverse<FrontierEntry>> = BinaryHeap::new();
+        let mut best: Option<(Evaluation, usize)> = None;
+        let mut candidates = 0usize;
+        let mut pruned = 0usize;
+        let mut bound_calls = 0usize;
+        let mut frontier_peak = 0usize;
+        let mut worst_ns = 0.0f64;
+
+        for (seq, mapping) in lazy_mappings(shape).enumerate() {
+            bound_calls += 1;
+            let Some(bound) = lower_bound(shape, &mapping, hw) else {
+                // Degenerate for the bound ⇔ degenerate for the full
+                // evaluation (same `compute_side` gate) — not a candidate.
+                continue;
+            };
+            let Some((incumbent, _)) = best.as_ref() else {
+                // Seed the incumbent with the first evaluable candidate so
+                // admission pruning starts immediately.
+                if let Some(eval) = evaluate(shape, &mapping, hw) {
+                    candidates += 1;
+                    worst_ns = worst_ns.max(eval.total_ns());
+                    best = Some((eval, seq));
+                }
+                continue;
+            };
+            if bound >= incumbent.total_ns() * PRUNE_SLACK {
+                pruned += 1;
+                continue;
+            }
+            heap.push(Reverse(FrontierEntry { bound, seq, mapping }));
+            frontier_peak = frontier_peak.max(heap.len());
+        }
+
+        while let Some(Reverse(entry)) = heap.pop() {
+            let (incumbent, _) = best.as_ref().expect("heap admission requires an incumbent");
+            if entry.bound >= incumbent.total_ns() * PRUNE_SLACK {
+                // Min-heap: every remaining bound is at least this one.
+                pruned += 1 + heap.len();
+                break;
+            }
+            if let Some(eval) = evaluate(shape, &entry.mapping, hw) {
+                candidates += 1;
+                let t = eval.total_ns();
+                worst_ns = worst_ns.max(t);
+                let (bt, bseq) = {
+                    let (b, s) = best.as_ref().expect("incumbent set above");
+                    (b.total_ns(), *s)
+                };
+                if t < bt || (t == bt && entry.seq < bseq) {
+                    best = Some((eval, entry.seq));
+                }
+            }
+        }
+
+        best.map(|(best, _)| SearchResult {
+            best,
+            candidates,
+            pruned,
+            bound_calls,
+            frontier_peak,
+            worst_ns,
+        })
+    }
+
+    /// Parallel enumeration-order **pruned** scan — the pre-best-first
+    /// algorithm, kept as the `exp map` comparison baseline.  Each worker
     /// walks its enumeration-ordered chunk skipping candidates whose
     /// analytic lower bound ([`super::model_sw::lower_bound`]) already
     /// reaches the chunk's incumbent: such a candidate cannot win under
     /// the strict-`<` rule, so the winner is bit-for-bit identical to the
     /// serial exhaustive reference (the `candidates`/`worst_ns` counters
     /// cover only evaluated candidates — see [`SearchResult::pruned`]).
-    pub fn search(&self, shape: &MatmulShape) -> Option<SearchResult> {
-        self.search_with(shape, true)
+    pub fn search_enumeration_pruned(&self, shape: &MatmulShape) -> Option<SearchResult> {
+        self.scan_parallel(shape, true)
     }
 
     /// Parallel **exhaustive** search: every candidate evaluated.  The
@@ -220,10 +411,10 @@ impl MappingService {
     /// this when the spread across the whole space is itself the result
     /// (Fig. 15).
     pub fn search_exhaustive(&self, shape: &MatmulShape) -> Option<SearchResult> {
-        self.search_with(shape, false)
+        self.scan_parallel(shape, false)
     }
 
-    fn search_with(&self, shape: &MatmulShape, prune: bool) -> Option<SearchResult> {
+    fn scan_parallel(&self, shape: &MatmulShape, prune: bool) -> Option<SearchResult> {
         let mappings = enumerate_mappings(shape);
         let (_slot, active) = SearchSlot::acquire();
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -254,9 +445,11 @@ impl MappingService {
         let mut worst_ns = 0.0f64;
         let mut candidates = 0usize;
         let mut pruned = 0usize;
+        let mut bound_calls = 0usize;
         for p in partials {
             candidates += p.candidates;
             pruned += p.pruned;
+            bound_calls += p.bound_calls;
             worst_ns = worst_ns.max(p.worst_ns);
             if let Some(e) = p.best {
                 let better = match best.as_ref() {
@@ -268,7 +461,14 @@ impl MappingService {
                 }
             }
         }
-        best.map(|best| SearchResult { best, candidates, pruned, worst_ns })
+        best.map(|best| SearchResult {
+            best,
+            candidates,
+            pruned,
+            bound_calls,
+            frontier_peak: 0,
+            worst_ns,
+        })
     }
 
     /// Evaluate one ordered slice of candidates (shared by the serial path
@@ -286,9 +486,11 @@ impl MappingService {
         let mut worst_ns = 0.0f64;
         let mut candidates = 0usize;
         let mut pruned = 0usize;
+        let mut bound_calls = 0usize;
         for mapping in chunk {
             if prune {
                 if let Some(b) = best.as_ref() {
+                    bound_calls += 1;
                     match lower_bound(shape, mapping, hw) {
                         Some(bound) if bound >= b.total_ns() * PRUNE_SLACK => {
                             pruned += 1;
@@ -315,7 +517,7 @@ impl MappingService {
                 }
             }
         }
-        Partial { best, worst_ns, candidates, pruned }
+        Partial { best, worst_ns, candidates, pruned, bound_calls }
     }
 
     /// Search with shared memoization.  Concurrent calls for the same
@@ -382,6 +584,43 @@ impl MappingService {
     /// precomputed or cached at runtime").
     pub fn persist(&self, path: &Path) -> crate::Result<()> {
         super::store::save_file(self, path)
+    }
+
+    /// Attach a persistent warm store: load whatever table already exists
+    /// at `path` into the cache now (a missing file is an empty table,
+    /// not an error), and *merge* the cache back into the file when the
+    /// last clone of this service drops.  Returns the number of entries
+    /// loaded (also folded into [`Self::warm_loads`]).
+    pub fn set_warm_path(&self, path: &Path) -> crate::Result<usize> {
+        let loaded = if path.exists() { super::store::load_file(self, path)? } else { 0 };
+        self.shared.warm_loads.fetch_add(loaded as u64, Ordering::Relaxed);
+        *self.shared.warm_path.lock().expect("warm path poisoned") = Some(path.to_path_buf());
+        Ok(loaded)
+    }
+
+    /// Build a service with a warm store attached ([`Self::set_warm_path`]).
+    pub fn with_warm_path(hw: HwModel, path: &Path) -> crate::Result<Self> {
+        let service = MappingService::new(hw);
+        service.set_warm_path(path)?;
+        Ok(service)
+    }
+
+    /// Entries imported from the warm store (0 when none is attached or
+    /// the file was empty/new).
+    pub fn warm_loads(&self) -> u64 {
+        self.shared.warm_loads.load(Ordering::Relaxed)
+    }
+
+    /// The attached warm-store path, if any.
+    pub fn warm_path(&self) -> Option<PathBuf> {
+        self.shared.warm_path.lock().expect("warm path poisoned").clone()
+    }
+
+    /// True iff `other` is a clone of this service (same cache, counters,
+    /// and warm store).  Lets aggregators deduplicate per-shard handles
+    /// before summing counters.
+    pub fn shares_cache_with(&self, other: &MappingService) -> bool {
+        Arc::ptr_eq(&self.shared, &other.shared)
     }
 }
 
@@ -467,7 +706,11 @@ mod tests {
             MatmulShape::new(256, 1024, 512, Precision::Int4),
         ] {
             let reference = s.search_serial(&shape).unwrap();
-            for pruned in [s.search(&shape).unwrap(), s.search_serial_pruned(&shape).unwrap()] {
+            for pruned in [
+                s.search(&shape).unwrap(),
+                s.search_serial_pruned(&shape).unwrap(),
+                s.search_enumeration_pruned(&shape).unwrap(),
+            ] {
                 assert_eq!(pruned.best.mapping, reference.best.mapping, "{}", shape.label());
                 assert_eq!(
                     pruned.best.total_ns().to_bits(),
@@ -569,5 +812,75 @@ mod tests {
         assert_eq!(s.misses(), 1);
         assert_eq!(t.hits(), 1);
         assert_eq!(s.cache_len(), 1);
+    }
+
+    #[test]
+    fn best_first_evaluates_fewer_candidates_than_enumeration_pruning() {
+        // The point of bound ordering: evaluating in bound order tightens
+        // the incumbent faster than enumeration order, so strictly fewer
+        // full evaluations run on the GEMM space (the PR acceptance
+        // headline; `exp map` reports the ratio).
+        let s = service();
+        let bf = s.search_best_first(&gemm()).unwrap();
+        let ep = s.search_serial_pruned(&gemm()).unwrap();
+        assert!(
+            bf.candidates < ep.candidates,
+            "best-first evaluated {} vs enumeration-order {}",
+            bf.candidates,
+            ep.candidates
+        );
+        // Accounting invariants: one bound per candidate, every candidate
+        // either evaluated or pruned, and the frontier really existed.
+        assert_eq!(bf.bound_calls, 1458);
+        assert_eq!(bf.examined(), 1458);
+        assert!(bf.frontier_peak > 0);
+        assert!(bf.frontier_peak <= 1458);
+        // The scan paths never build a frontier.
+        assert_eq!(ep.frontier_peak, 0);
+        assert!(ep.bound_calls > 0);
+        // Exhaustive paths call no bounds at all.
+        let ex = s.search_exhaustive(&gemm()).unwrap();
+        assert_eq!((ex.bound_calls, ex.frontier_peak), (0, 0));
+    }
+
+    #[test]
+    fn warm_path_persists_on_drop_and_reloads() {
+        let path = std::env::temp_dir().join("racam_warm_path_drop_test.json");
+        std::fs::remove_file(&path).ok();
+        let shapes = [gemm(), gemv()];
+        {
+            let s = service();
+            assert_eq!(s.set_warm_path(&path).unwrap(), 0, "no table yet");
+            assert_eq!(s.warm_loads(), 0);
+            assert_eq!(s.warm_path().as_deref(), Some(path.as_path()));
+            let clone = s.clone();
+            for shape in &shapes {
+                s.search_cached(shape);
+            }
+            drop(s);
+            // A surviving clone keeps the store alive — nothing written yet.
+            assert!(!path.exists(), "persist must wait for the last clone");
+            drop(clone);
+        }
+        assert!(path.exists(), "last clone dropped: table must be persisted");
+
+        let warm = service();
+        assert_eq!(warm.set_warm_path(&path).unwrap(), 2);
+        assert_eq!(warm.warm_loads(), 2);
+        for shape in &shapes {
+            warm.search_cached(shape).unwrap();
+        }
+        assert_eq!(warm.misses(), 0, "warm store must pre-warm every shape");
+        assert_eq!(warm.hits(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shares_cache_with_distinguishes_clones_from_siblings() {
+        let s = service();
+        let clone = s.clone();
+        let sibling = service();
+        assert!(s.shares_cache_with(&clone));
+        assert!(!s.shares_cache_with(&sibling));
     }
 }

@@ -177,30 +177,81 @@ impl fmt::Display for Mapping {
     }
 }
 
-/// Enumerate the full mapping space for a shape.
+/// Lazy candidate generator: yields exactly the sequence
+/// [`enumerate_mappings`] materializes, in the same order, without
+/// allocating the whole space.  The hierarchical assignment is an
+/// odometer over the five levels (level 0 — Channel — is the slowest
+/// digit) and the block mapping is the fastest digit, matching the
+/// recursive enumeration the serial reference search was specified
+/// against; the position in this sequence is the candidate's canonical
+/// *enumeration index*, the tie-breaking key of every search path.
+pub struct MappingCandidates {
+    dims: &'static [Dim],
+    /// Odometer digits: index into `dims` per hierarchy level.
+    digits: [usize; 5],
+    /// Next block-mapping bitmask, 1..=6 ([`BlockMapping::all`] order).
+    block_bits: u8,
+    remaining: usize,
+}
+
+/// Lazily enumerate the mapping space for a shape, in canonical order.
 ///
 /// GEMV shapes (`m == 1`) exclude M from the hierarchical assignment —
 /// there is nothing to tile — giving 2⁵ × 6 = 192 candidates; full GEMMs
 /// give 3⁵ × 6 = 1458.
-pub fn enumerate_mappings(shape: &MatmulShape) -> Vec<Mapping> {
-    let dims: &[Dim] = if shape.m == 1 { &[Dim::N, Dim::K] } else { &Dim::ALL };
-    let blocks = BlockMapping::all();
-    let mut out = Vec::with_capacity(dims.len().pow(5) * blocks.len());
-    let mut assign = [Dim::M; 5];
-    fn rec(dims: &[Dim], assign: &mut [Dim; 5], i: usize, blocks: &[BlockMapping], out: &mut Vec<Mapping>) {
-        if i == 5 {
-            for b in blocks {
-                out.push(Mapping { hier: HierMapping { assign: *assign }, block: *b });
-            }
-            return;
-        }
-        for d in dims {
-            assign[i] = *d;
-            rec(dims, assign, i + 1, blocks, out);
-        }
+pub fn lazy_mappings(shape: &MatmulShape) -> MappingCandidates {
+    let dims: &'static [Dim] = if shape.m == 1 { &[Dim::N, Dim::K] } else { &Dim::ALL };
+    MappingCandidates {
+        dims,
+        digits: [0; 5],
+        block_bits: 1,
+        remaining: dims.len().pow(5) * 6,
     }
-    rec(dims, &mut assign, 0, &blocks, &mut out);
-    out
+}
+
+impl Iterator for MappingCandidates {
+    type Item = Mapping;
+
+    fn next(&mut self) -> Option<Mapping> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let mut assign = [Dim::M; 5];
+        for (a, &digit) in assign.iter_mut().zip(self.digits.iter()) {
+            *a = self.dims[digit];
+        }
+        let out = Mapping {
+            hier: HierMapping { assign },
+            block: BlockMapping { col_dims: DimSet(self.block_bits) },
+        };
+        // Advance: block mask first, then levels innermost to outermost.
+        if self.block_bits < 6 {
+            self.block_bits += 1;
+        } else {
+            self.block_bits = 1;
+            for digit in self.digits.iter_mut().rev() {
+                if *digit + 1 < self.dims.len() {
+                    *digit += 1;
+                    break;
+                }
+                *digit = 0;
+            }
+        }
+        Some(out)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for MappingCandidates {}
+
+/// Enumerate the full mapping space for a shape (the materialized form of
+/// [`lazy_mappings`]; same candidates, same order).
+pub fn enumerate_mappings(shape: &MatmulShape) -> Vec<Mapping> {
+    lazy_mappings(shape).collect()
 }
 
 #[cfg(test)]
@@ -219,6 +270,53 @@ mod tests {
         // Paper §7: "192 for GEMV".
         let s = MatmulShape::new(1, 2048, 2048, Precision::Int8);
         assert_eq!(enumerate_mappings(&s).len(), 192); // 2^5 × 6
+    }
+
+    #[test]
+    fn lazy_generator_matches_recursive_enumeration_order() {
+        // The enumeration index is the tie-breaking key of every search
+        // path, so the lazy odometer must reproduce the recursive
+        // reference enumeration *in order*, not just as a set.
+        fn recursive(shape: &MatmulShape) -> Vec<Mapping> {
+            let dims: &[Dim] = if shape.m == 1 { &[Dim::N, Dim::K] } else { &Dim::ALL };
+            let blocks = BlockMapping::all();
+            let mut out = Vec::new();
+            let mut assign = [Dim::M; 5];
+            fn rec(dims: &[Dim], assign: &mut [Dim; 5], i: usize, blocks: &[BlockMapping], out: &mut Vec<Mapping>) {
+                if i == 5 {
+                    for b in blocks {
+                        out.push(Mapping { hier: HierMapping { assign: *assign }, block: *b });
+                    }
+                    return;
+                }
+                for d in dims {
+                    assign[i] = *d;
+                    rec(dims, assign, i + 1, blocks, out);
+                }
+            }
+            rec(dims, &mut assign, 0, &blocks, &mut out);
+            out
+        }
+        for shape in [
+            MatmulShape::new(1024, 4096, 4096, Precision::Int8),
+            MatmulShape::new(1, 2048, 2048, Precision::Int8),
+        ] {
+            let lazy: Vec<Mapping> = lazy_mappings(&shape).collect();
+            assert_eq!(lazy, recursive(&shape));
+            assert_eq!(enumerate_mappings(&shape), lazy);
+        }
+    }
+
+    #[test]
+    fn lazy_generator_reports_exact_length() {
+        let gemm = MatmulShape::new(64, 64, 64, Precision::Int8);
+        let mut it = lazy_mappings(&gemm);
+        assert_eq!(it.len(), 1458);
+        it.next();
+        assert_eq!(it.len(), 1457);
+        assert_eq!(it.count(), 1457);
+        let gemv = MatmulShape::new(1, 64, 64, Precision::Int8);
+        assert_eq!(lazy_mappings(&gemv).len(), 192);
     }
 
     #[test]

@@ -10,6 +10,20 @@
 //! baseline comparison that shares the service
 //! ([`MappingService::warm_start`] / [`MappingService::persist`] are thin
 //! wrappers over [`load_file`] / [`save_file`]).
+//!
+//! ## Shared cross-process warm store
+//!
+//! Entries are keyed by **shape + DRAM channel count**: a mapping searched
+//! on a 3-channel shard is not a valid answer for an 8-channel one, so
+//! [`import`] skips entries whose channel count disagrees with the
+//! service's hardware (legacy tables without the field are accepted on any
+//! hardware, the pre-keying behavior).  Tables serialize in a canonical
+//! order (sorted by key), writes are atomic (temp file + rename), and
+//! [`merge`] folds two tables by keeping the best entry per key — a
+//! commutative, idempotent fold, so any number of processes can persist
+//! into one file in any order without clobbering each other.  That is the
+//! [`MappingService::set_warm_path`] lifecycle: load at construction,
+//! merge-back on the last drop.
 
 use super::model_sw::evaluate;
 use super::service::{MappingService, SearchResult};
@@ -17,6 +31,7 @@ use super::space::{BlockMapping, Dim, DimSet, HierMapping, Mapping};
 use crate::config::json::{self, Value};
 use crate::config::{MatmulShape, Precision};
 use crate::Result;
+use std::collections::BTreeMap;
 
 fn dim_from_letter(c: char) -> Option<Dim> {
     match c {
@@ -74,50 +89,215 @@ fn shape_from_value(v: &Value) -> Result<MatmulShape> {
     })
 }
 
-/// Export a service's cached search results.
-pub fn export(service: &MappingService) -> Value {
-    let entries: Vec<Value> = service
-        .cache_entries()
-        .iter()
-        .map(|(shape, r)| {
-            Value::obj(vec![
-                ("shape", shape_to_value(shape)),
-                ("mapping", Value::Str(mapping_to_string(&r.best.mapping))),
-                ("candidates", Value::Num(r.candidates as f64)),
-                ("pruned", Value::Num(r.pruned as f64)),
-                ("worst_ns", Value::Num(r.worst_ns)),
-            ])
-        })
-        .collect();
-    Value::obj(vec![("version", Value::Num(1.0)), ("entries", Value::Arr(entries))])
+/// One parsed store entry.  `channels` is the DRAM channel count of the
+/// hardware the entry was searched on (`None` in legacy tables written
+/// before the key existed — accepted on any hardware).
+#[derive(Debug, Clone)]
+pub struct StoreEntry {
+    pub shape: MatmulShape,
+    pub channels: Option<u32>,
+    pub mapping: String,
+    /// Best total latency on the hardware the entry was searched on
+    /// (`INFINITY` in legacy tables — merge then prefers fresh entries;
+    /// import re-evaluates on the importing hardware either way).
+    pub total_ns: f64,
+    pub candidates: usize,
+    pub pruned: usize,
+    pub bound_calls: usize,
+    pub frontier_peak: usize,
+    pub worst_ns: f64,
 }
 
-/// Import previously exported results into the service's shared cache,
-/// re-evaluating each stored mapping on the service's hardware model.
-/// Returns the number of entries imported.
-pub fn import(service: &MappingService, v: &Value) -> Result<usize> {
+impl StoreEntry {
+    fn from_cached(shape: &MatmulShape, r: &SearchResult, channels: u32) -> StoreEntry {
+        StoreEntry {
+            shape: *shape,
+            channels: Some(channels),
+            mapping: mapping_to_string(&r.best.mapping),
+            total_ns: r.best.total_ns(),
+            candidates: r.candidates,
+            pruned: r.pruned,
+            bound_calls: r.bound_calls,
+            frontier_peak: r.frontier_peak,
+            worst_ns: r.worst_ns,
+        }
+    }
+
+    /// Canonical table key: shape fields + channel count (`None` sorts
+    /// first).  One entry per key survives a [`merge`].
+    #[allow(clippy::type_complexity)]
+    fn key(&self) -> (u64, u64, u64, u32, bool, bool, Option<u32>) {
+        let s = &self.shape;
+        (s.m, s.k, s.n, s.prec.bits(), s.weight_static, s.input_resident, self.channels)
+    }
+
+    /// Deterministic total order used to pick the surviving entry among
+    /// key duplicates: lower latency first, then every remaining field
+    /// lexicographically, so the choice is independent of merge order.
+    fn cmp_quality(&self, other: &StoreEntry) -> std::cmp::Ordering {
+        self.total_ns
+            .total_cmp(&other.total_ns)
+            .then(self.candidates.cmp(&other.candidates))
+            .then(self.pruned.cmp(&other.pruned))
+            .then(self.bound_calls.cmp(&other.bound_calls))
+            .then(self.frontier_peak.cmp(&other.frontier_peak))
+            .then(self.worst_ns.total_cmp(&other.worst_ns))
+            .then_with(|| self.mapping.cmp(&other.mapping))
+    }
+}
+
+fn entry_to_value(e: &StoreEntry) -> Value {
+    let mut fields = vec![
+        ("shape", shape_to_value(&e.shape)),
+        ("mapping", Value::Str(e.mapping.clone())),
+        ("total_ns", Value::Num(e.total_ns)),
+        ("candidates", Value::Num(e.candidates as f64)),
+        ("pruned", Value::Num(e.pruned as f64)),
+        ("bound_calls", Value::Num(e.bound_calls as f64)),
+        ("frontier_peak", Value::Num(e.frontier_peak as f64)),
+        ("worst_ns", Value::Num(e.worst_ns)),
+    ];
+    if let Some(c) = e.channels {
+        fields.insert(1, ("channels", Value::Num(c as f64)));
+    }
+    Value::obj(fields)
+}
+
+fn entry_from_value(e: &Value) -> Result<StoreEntry> {
+    Ok(StoreEntry {
+        shape: shape_from_value(e.get("shape")?)?,
+        // Absent in tables written before the channel key existed.
+        channels: e.get("channels").and_then(|c| c.as_u32()).ok(),
+        mapping: {
+            let m = e.get("mapping")?.as_str()?.to_string();
+            mapping_from_string(&m)?; // validate eagerly
+            m
+        },
+        total_ns: e.get("total_ns").and_then(|t| t.as_f64()).unwrap_or(f64::INFINITY),
+        candidates: e.get("candidates")?.as_f64()? as usize,
+        // Absent in tables written before pruning existed.
+        pruned: e.get("pruned").and_then(|p| p.as_f64()).map_or(0, |p| p as usize),
+        bound_calls: e.get("bound_calls").and_then(|b| b.as_f64()).map_or(0, |b| b as usize),
+        frontier_peak: e.get("frontier_peak").and_then(|f| f.as_f64()).map_or(0, |f| f as usize),
+        worst_ns: e.get("worst_ns")?.as_f64()?,
+    })
+}
+
+/// Serialize entries as a v1 table in **canonical order** (sorted by
+/// key): byte-identical tables for equal entry sets, which is what makes
+/// [`merge`] idempotent down to the serialized text.
+fn entries_to_value(mut entries: Vec<StoreEntry>) -> Value {
+    entries.sort_by(|a, b| a.key().cmp(&b.key()).then_with(|| a.cmp_quality(b)));
+    Value::obj(vec![
+        ("version", Value::Num(1.0)),
+        ("entries", Value::Arr(entries.iter().map(entry_to_value).collect())),
+    ])
+}
+
+fn parse_entries(v: &Value) -> Result<Vec<StoreEntry>> {
     anyhow::ensure!(v.get("version")?.as_f64()? == 1.0, "unknown mapping-store version");
     let Value::Arr(entries) = v.get("entries")? else {
         anyhow::bail!("entries must be an array")
     };
+    entries.iter().map(entry_from_value).collect()
+}
+
+/// Export a service's cached search results (canonically ordered, keyed
+/// by shape + the service's channel count).
+pub fn export(service: &MappingService) -> Value {
+    let channels = service.hw().hw.dram.channels;
+    let entries = service
+        .cache_entries()
+        .iter()
+        .map(|(shape, r)| StoreEntry::from_cached(shape, r, channels))
+        .collect();
+    entries_to_value(entries)
+}
+
+/// Import previously exported results into the service's shared cache,
+/// re-evaluating each stored mapping on the service's hardware model.
+/// Entries searched on a different channel count are skipped — their
+/// winner is not this hardware's winner.  Returns the number of entries
+/// imported.
+pub fn import(service: &MappingService, v: &Value) -> Result<usize> {
+    let channels = service.hw().hw.dram.channels;
     let mut imported = 0;
-    for e in entries {
-        let shape = shape_from_value(e.get("shape")?)?;
-        let mapping = mapping_from_string(e.get("mapping")?.as_str()?)?;
-        let Some(eval) = evaluate(&shape, &mapping, service.hw()) else {
+    for e in parse_entries(v)? {
+        if e.channels.is_some_and(|c| c != channels) {
+            continue;
+        }
+        let mapping = mapping_from_string(&e.mapping)?;
+        let Some(eval) = evaluate(&e.shape, &mapping, service.hw()) else {
             continue;
         };
         let result = SearchResult {
             best: eval,
-            candidates: e.get("candidates")?.as_f64()? as usize,
-            // Absent in tables written before pruning existed.
-            pruned: e.get("pruned").and_then(|p| p.as_f64()).map_or(0, |p| p as usize),
-            worst_ns: e.get("worst_ns")?.as_f64()?,
+            candidates: e.candidates,
+            pruned: e.pruned,
+            bound_calls: e.bound_calls,
+            frontier_peak: e.frontier_peak,
+            worst_ns: e.worst_ns,
         };
-        service.cache_insert(shape, result);
+        service.cache_insert(e.shape, result);
         imported += 1;
     }
     Ok(imported)
+}
+
+/// Fold duplicate-key entries down to the best entry per key.
+fn merge_entries(entries: Vec<StoreEntry>) -> Vec<StoreEntry> {
+    let mut by_key: BTreeMap<_, StoreEntry> = BTreeMap::new();
+    for e in entries {
+        match by_key.entry(e.key()) {
+            std::collections::btree_map::Entry::Vacant(slot) => {
+                slot.insert(e);
+            }
+            std::collections::btree_map::Entry::Occupied(mut slot) => {
+                if e.cmp_quality(slot.get()) == std::cmp::Ordering::Less {
+                    slot.insert(e);
+                }
+            }
+        }
+    }
+    by_key.into_values().collect()
+}
+
+/// Merge two mapping tables: the union of their keys, keeping the best
+/// entry per (shape, channels) key.  Commutative and idempotent (the
+/// survivor is the minimum of a deterministic total order and the output
+/// is canonically sorted), so concurrent processes can fold tables in any
+/// order and arrive at the same bytes.
+pub fn merge(a: &Value, b: &Value) -> Result<Value> {
+    let mut entries = parse_entries(a)?;
+    entries.extend(parse_entries(b)?);
+    Ok(entries_to_value(merge_entries(entries)))
+}
+
+/// Merge a service's cached results into the table at `path` (read-merge-
+/// write with an atomic replace): the on-disk union of what this process
+/// searched and what any other process persisted since we loaded.  An
+/// unreadable or corrupt existing table is treated as empty rather than
+/// blocking the persist.  Returns the number of entries written.
+pub(crate) fn merge_entries_into_file(
+    path: &std::path::Path,
+    channels: u32,
+    cached: &[(MatmulShape, SearchResult)],
+) -> Result<usize> {
+    let mut entries: Vec<StoreEntry> = cached
+        .iter()
+        .map(|(shape, r)| StoreEntry::from_cached(shape, r, channels))
+        .collect();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(v) = json::parse(&text) {
+            if let Ok(existing) = parse_entries(&v) {
+                entries.extend(existing);
+            }
+        }
+    }
+    let merged = merge_entries(entries);
+    let n = merged.len();
+    write_atomic(path, &entries_to_value(merged).pretty())?;
+    Ok(n)
 }
 
 /// Write `text` to `path` atomically: write a same-directory temp file,
@@ -262,6 +442,69 @@ mod tests {
         let (_, r) = s.cache_entries().pop().unwrap();
         assert_eq!(r.pruned, 0);
         assert_eq!(r.candidates, 192);
+    }
+
+    #[test]
+    fn merge_is_commutative_and_idempotent() {
+        let a = service();
+        a.search_cached(&MatmulShape::new(1, 2048, 2048, Precision::Int8));
+        a.search_cached(&MatmulShape::new(256, 1024, 512, Precision::Int8));
+        let b = service();
+        b.search_cached(&MatmulShape::new(1, 2048, 2048, Precision::Int8)); // overlaps a
+        b.search_cached(&MatmulShape::new(64, 64, 64, Precision::Int4));
+        let (ea, eb) = (export(&a), export(&b));
+
+        let ab = merge(&ea, &eb).unwrap();
+        let ba = merge(&eb, &ea).unwrap();
+        assert_eq!(ab.pretty(), ba.pretty(), "merge must be commutative");
+        assert_eq!(merge(&ea, &ea).unwrap().pretty(), ea.pretty(), "merge must be idempotent");
+        assert_eq!(merge(&ab, &eb).unwrap().pretty(), ab.pretty(), "absorbing a merged input");
+
+        // The union imports all three distinct shapes.
+        let c = service();
+        assert_eq!(import(&c, &ab).unwrap(), 3);
+    }
+
+    #[test]
+    fn import_skips_entries_from_a_different_channel_count() {
+        let a = service();
+        a.search_cached(&MatmulShape::new(1, 2048, 2048, Precision::Int8));
+        let mut exported = export(&a);
+        // Rewrite the entry's channel key to a count this service's
+        // hardware does not have: the winner was searched on different
+        // hardware, so import must not poison the cache with it.
+        let Value::Obj(top) = &mut exported else { panic!("export must be an object") };
+        let Value::Arr(list) = top.get_mut("entries").unwrap() else {
+            panic!("entries must be an array")
+        };
+        let Value::Obj(entry) = &mut list[0] else { panic!("entry must be an object") };
+        entry.insert("channels".into(), Value::Num(3.0));
+        let b = service();
+        assert_eq!(import(&b, &exported).unwrap(), 0);
+        assert_eq!(b.cache_len(), 0);
+    }
+
+    #[test]
+    fn merge_keeps_distinct_channel_entries_side_by_side() {
+        // The same shape searched on 8 and on 3 channels are different
+        // answers; a merged table carries both.
+        let shape = MatmulShape::new(1, 2048, 2048, Precision::Int8);
+        let a = service();
+        a.search_cached(&shape);
+        let mut three_ch = racam_paper();
+        three_ch.dram.channels = 3;
+        let b = MappingService::for_config(&three_ch);
+        b.search_cached(&shape);
+        let merged = merge(&export(&a), &export(&b)).unwrap();
+        let Value::Arr(ref list) = *merged.get("entries").unwrap() else {
+            panic!("entries must be an array")
+        };
+        assert_eq!(list.len(), 2);
+        // Each side re-imports exactly its own entry.
+        let a2 = service();
+        assert_eq!(import(&a2, &merged).unwrap(), 1);
+        let b2 = MappingService::for_config(&three_ch);
+        assert_eq!(import(&b2, &merged).unwrap(), 1);
     }
 
     #[test]

@@ -250,7 +250,7 @@ mod tests {
             panic!("experiments must be an object")
         };
         // Serving experiments CI regenerates must all be listed.
-        for id in ["traffic", "prefill", "disagg", "scale"] {
+        for id in ["traffic", "prefill", "disagg", "scale", "map"] {
             assert!(experiments.contains_key(id), "manifest must cover '{id}'");
         }
     }

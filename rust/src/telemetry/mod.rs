@@ -380,6 +380,16 @@ pub struct Metrics {
     /// Prefill→decode handoffs (sending side, once per transfer).
     pub handoffs: u64,
     pub total_tokens: u64,
+    /// Mapping-service cache hits across the cluster's distinct services
+    /// (fed from `Coordinator::mapping_counters` via
+    /// [`Metrics::absorb_mapping`], zero otherwise).
+    pub map_cache_hits: u64,
+    /// Mapping-service cache misses — each one is a full best-first
+    /// search some shard had to run.
+    pub map_cache_misses: u64,
+    /// Cache entries pre-seeded from a warm mapping store
+    /// (`ClusterSpec::mapping_store`) at construction.
+    pub map_warm_loads: u64,
     /// Arrival → first token, ns (delivered requests).
     pub ttft_ns: Histogram,
     /// Mean inter-token gap, ns (delivered requests with ≥ 2 tokens).
@@ -437,6 +447,16 @@ impl Metrics {
         }
     }
 
+    /// Fold in cluster-wide mapping-cache counters (the deduplicated
+    /// `(hits, misses, warm_loads)` triple from
+    /// `Coordinator::mapping_counters`).
+    pub fn absorb_mapping(&mut self, counters: (u64, u64, u64)) {
+        let (hits, misses, warm_loads) = counters;
+        self.map_cache_hits += hits;
+        self.map_cache_misses += misses;
+        self.map_warm_loads += warm_loads;
+    }
+
     /// Merge another registry in (exactly associative).
     pub fn merge(&mut self, other: &Metrics) {
         self.requests += other.requests;
@@ -447,6 +467,9 @@ impl Metrics {
         self.decode_iterations += other.decode_iterations;
         self.handoffs += other.handoffs;
         self.total_tokens += other.total_tokens;
+        self.map_cache_hits += other.map_cache_hits;
+        self.map_cache_misses += other.map_cache_misses;
+        self.map_warm_loads += other.map_warm_loads;
         self.ttft_ns.merge(&other.ttft_ns);
         self.tpot_ns.merge(&other.tpot_ns);
         self.queue_depth.merge(&other.queue_depth);
@@ -474,6 +497,9 @@ impl Metrics {
             ("decode_iterations", Value::Num(self.decode_iterations as f64)),
             ("handoffs", Value::Num(self.handoffs as f64)),
             ("total_tokens", Value::Num(self.total_tokens as f64)),
+            ("map_cache_hits", Value::Num(self.map_cache_hits as f64)),
+            ("map_cache_misses", Value::Num(self.map_cache_misses as f64)),
+            ("map_warm_loads", Value::Num(self.map_warm_loads as f64)),
             ("ttft_ns", self.ttft_ns.to_json()),
             ("tpot_ns", self.tpot_ns.to_json()),
             ("queue_depth", self.queue_depth.to_json()),
@@ -520,6 +546,9 @@ impl Metrics {
         t.row(counter("decode_iterations", self.decode_iterations));
         t.row(counter("handoffs", self.handoffs));
         t.row(counter("total_tokens", self.total_tokens));
+        t.row(counter("map_cache_hits", self.map_cache_hits));
+        t.row(counter("map_cache_misses", self.map_cache_misses));
+        t.row(counter("map_warm_loads", self.map_warm_loads));
         t
     }
 }
@@ -804,10 +833,14 @@ mod tests {
         let mut m = Metrics::default();
         m.requests = 3;
         m.ttft_ns.record(1_000_000);
+        m.absorb_mapping((5, 2, 1));
         let t = m.table("metrics");
-        assert_eq!(t.num_rows(), 12);
+        assert_eq!(t.num_rows(), 15);
         let v = m.to_json();
         assert_eq!(v.get("requests").unwrap().as_u32().unwrap(), 3);
+        assert_eq!(v.get("map_cache_hits").unwrap().as_u32().unwrap(), 5);
+        assert_eq!(v.get("map_cache_misses").unwrap().as_u32().unwrap(), 2);
+        assert_eq!(v.get("map_warm_loads").unwrap().as_u32().unwrap(), 1);
         assert_eq!(v.get("ttft_ns").unwrap().get("total").unwrap().as_u32().unwrap(), 1);
         // The summary JSON round-trips through the strict parser.
         let parsed = crate::config::json::parse(&v.pretty()).unwrap();

@@ -171,6 +171,120 @@ fn prop_parallel_search_matches_serial_reference() {
 }
 
 #[test]
+fn prop_search_paths_agree_across_feature_ablations() {
+    // The bit-identity contract must hold on *every* hardware model, not
+    // just the paper preset: for random shapes × random feature ablations
+    // (locality buffer, popcount reduction, broadcast unit), the
+    // best-first search, the serial pruned walk, and the parallel
+    // enumeration-order pruned scan must all return the serial exhaustive
+    // winner bit-for-bit, with the full space accounted for as
+    // evaluated + pruned.
+    check("search ablations", 8, |rng| {
+        let mut hw = racam_paper();
+        hw.features.locality_buffer = rng.range(0, 1) == 1;
+        hw.features.popcount_reduction = rng.range(0, 1) == 1;
+        hw.features.broadcast_unit = rng.range(0, 1) == 1;
+        let service = MappingService::for_config(&hw);
+        let shape = MatmulShape::new(
+            rng.range(1, 64),
+            rng.range(1, 4096),
+            rng.range(1, 4096),
+            Precision::Int8,
+        );
+        let ser = service.search_serial(&shape).expect("evaluates");
+        for r in [
+            service.search_best_first(&shape).expect("evaluates"),
+            service.search_serial_pruned(&shape).expect("evaluates"),
+            service.search_enumeration_pruned(&shape).expect("evaluates"),
+        ] {
+            assert_eq!(r.best.mapping, ser.best.mapping);
+            assert_eq!(r.best.total_ns().to_bits(), ser.best.total_ns().to_bits());
+            assert_eq!(r.examined(), ser.candidates);
+        }
+    });
+}
+
+#[test]
+fn prop_store_merge_is_commutative_and_idempotent() {
+    // Concurrent processes fold their mapping tables through
+    // `store::merge` in whatever order their drops race — the result must
+    // not depend on that order, and re-merging anything already folded in
+    // must be a byte-level no-op (canonical sort + deterministic
+    // best-entry-per-key total order).
+    use racam::mapping::store;
+    check("store merge", 4, |rng| {
+        let searched = |rng: &mut Rng| {
+            let s = MappingService::for_config(&racam_paper());
+            for _ in 0..rng.range(1, 4) {
+                let shape = MatmulShape::new(
+                    rng.range(1, 8),
+                    rng.range(1, 2048),
+                    rng.range(1, 2048),
+                    Precision::Int8,
+                );
+                s.search_cached(&shape);
+            }
+            s
+        };
+        let a = store::export(&searched(rng));
+        let b = store::export(&searched(rng));
+        let ab = store::merge(&a, &b).unwrap();
+        let ba = store::merge(&b, &a).unwrap();
+        assert_eq!(ab.pretty(), ba.pretty(), "merge must commute to the byte");
+        let again = store::merge(&ab, &b).unwrap();
+        assert_eq!(again.pretty(), ab.pretty(), "re-merging a constituent must be a no-op");
+        let twice = store::merge(&ab, &ab).unwrap();
+        assert_eq!(twice.pretty(), ab.pretty(), "self-merge must be idempotent");
+    });
+}
+
+#[test]
+fn prop_merged_store_warm_starts_with_zero_additional_misses() {
+    // Two services each search half the shapes and persist into the same
+    // warm store on drop; a fresh service attached to the merged table
+    // must answer every shape from the loaded entries — zero additional
+    // searches.
+    check("merged warm start", 3, |rng| {
+        let dir = std::env::temp_dir().join("racam_proptest_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("store_{}_{}.json", std::process::id(), rng.next()));
+        std::fs::remove_file(&path).ok();
+        let mut shapes: Vec<MatmulShape> = Vec::new();
+        let target = rng.range(2, 5) as usize;
+        while shapes.len() < target {
+            let s = MatmulShape::new(
+                rng.range(1, 16),
+                rng.range(1, 2048),
+                rng.range(1, 2048),
+                Precision::Int8,
+            );
+            if !shapes.contains(&s) {
+                shapes.push(s);
+            }
+        }
+        let mid = shapes.len() / 2;
+        for half in [&shapes[..mid], &shapes[mid..]] {
+            let s = MappingService::for_config(&racam_paper());
+            s.set_warm_path(&path).unwrap();
+            for shape in half {
+                s.search_cached(shape);
+            }
+            drop(s); // last clone: merges the cache into the store
+        }
+        let warm = MappingService::for_config(&racam_paper());
+        let loaded = warm.set_warm_path(&path).unwrap();
+        assert_eq!(loaded, shapes.len(), "the merged table must hold both halves");
+        for shape in &shapes {
+            warm.search_cached(shape);
+        }
+        assert_eq!(warm.misses(), 0, "a merged table must answer every shape");
+        assert_eq!(warm.hits(), shapes.len() as u64);
+        drop(warm);
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
 fn prop_more_compute_never_faster_kernels() {
     // Monotonicity: growing any single GEMM dimension must not reduce the
     // best-mapping latency.
