@@ -317,7 +317,7 @@ impl ClusterSpec {
             ("role", Value::Str(g.role.label().into())),
             ("scheduler", Value::Str(g.scheduler.label().into())),
             ("max_batch", Value::Num(g.max_batch as f64)),
-            ("policy", json::parse(&g.policy.to_json()).expect("policy JSON is valid")),
+            ("policy", g.policy.to_value()),
         ];
         if let Some(ch) = g.channels {
             pairs.push(("channels", Value::Num(ch as f64)));

@@ -201,7 +201,10 @@ impl ServingPolicy {
         self.to_value().pretty()
     }
 
-    fn to_value(&self) -> Value {
+    /// The JSON value behind [`ServingPolicy::to_json`] (shared with
+    /// `ClusterSpec` serialization, which embeds policies directly
+    /// instead of round-tripping through a string).
+    pub(crate) fn to_value(&self) -> Value {
         let mut pairs = Vec::new();
         if let Some(c) = self.prefill_chunk_tokens {
             pairs.push(("prefill_chunk_tokens", Value::Num(c as f64)));

@@ -140,12 +140,21 @@ impl ClusterBuilder {
             );
             let mut services = Vec::with_capacity(spec.total_shards());
             for g in &spec.groups {
-                let share = g.channels.expect("validate: all-or-none shares");
+                // `ClusterSpec::validate` enforces all-or-none shares and
+                // share >= count, but propagate instead of panicking in
+                // case a caller skips validation.
+                let Some(share) = g.channels else {
+                    anyhow::bail!("group '{}' lacks a channel share (all-or-none)", g.name);
+                };
                 let mut group_hw = hw.clone();
                 group_hw.dram.channels = share;
-                let parts = partition_channels(&group_hw, g.count).expect(
-                    "validate: a group's channel share covers its shard count",
-                );
+                let Some(parts) = partition_channels(&group_hw, g.count) else {
+                    anyhow::bail!(
+                        "group '{}': channel share {share} cannot cover {} shard(s)",
+                        g.name,
+                        g.count
+                    );
+                };
                 services.extend(parts.iter().map(&mut service_for));
             }
             Ok(services)
@@ -537,6 +546,7 @@ mod tests {
             1,
             "intake must only cover fresh-prompt-eligible shards"
         );
+        #[allow(clippy::disallowed_methods)] // test harness thread
         let submitter = std::thread::spawn(move || {
             assert!(intake.submit(Request::new(100, vec![4, 4], 3)));
         });

@@ -143,7 +143,7 @@ impl<E: TokenEngine + Send> Coordinator<E, FcfsBatcher> {
         assert!(n_shards >= 1, "a coordinator needs at least one shard");
         assert!(max_batch >= 1, "max_batch must be at least 1");
         ClusterBuilder::new(ClusterSpec::unified(n_shards, max_batch), hw, spec)
-            .expect("a unified spec is always valid")
+            .expect("a unified spec is always valid") // detcheck: allow(panic-hygiene) -- deprecated compatibility shim: a unified spec built from validated scalars cannot fail validation
             .build_with(engine_factory, |_| FcfsBatcher::new(max_batch))
     }
 
@@ -166,7 +166,7 @@ impl<E: TokenEngine + Send> Coordinator<E, FcfsBatcher> {
             spec,
             vec![service; n_shards],
         )
-        .expect("a unified spec is always valid")
+        .expect("a unified spec is always valid") // detcheck: allow(panic-hygiene) -- deprecated compatibility shim: a unified spec built from validated scalars cannot fail validation
         .build_with(engine_factory, |_| FcfsBatcher::new(max_batch))
     }
 }
@@ -245,7 +245,7 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
             spec,
             vec![service; n_shards],
         )
-        .expect("a unified spec is always valid")
+        .expect("a unified spec is always valid") // detcheck: allow(panic-hygiene) -- deprecated compatibility shim: a unified spec built from validated scalars cannot fail validation
         .build_with(engine_factory, scheduler_factory)
     }
 
@@ -267,7 +267,7 @@ impl<E: TokenEngine + Send, S: Scheduler> Coordinator<E, S> {
             spec,
             services,
         )
-        .expect("a unified spec is always valid")
+        .expect("a unified spec is always valid") // detcheck: allow(panic-hygiene) -- deprecated compatibility shim: a unified spec built from validated scalars cannot fail validation
         .build_with(engine_factory, scheduler_factory)
     }
 }
@@ -374,7 +374,7 @@ impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, 
         let shard = (0..self.shards.len())
             .filter(|&i| self.roles[i].accepts_fresh_prompts())
             .min_by_key(|&i| self.shards[i].pending())
-            .expect("a cluster needs at least one prefill-capable shard");
+            .expect("a cluster needs at least one prefill-capable shard"); // detcheck: allow(panic-hygiene) -- ClusterSpec::validate rejects clusters with no prefill-capable shard, and submit has no error channel
         self.shards[shard].submit(req);
     }
 
@@ -416,13 +416,23 @@ impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, 
             .map(|shard| {
                 let mut run = Some(ShardRun::new(shard));
                 Box::new(move || {
-                    let r = run.as_mut().expect("shard task polled after completion");
+                    // The executor retires a task at its first `Done`, so
+                    // `run` is present on every poll; report a caller bug
+                    // as a task error instead of panicking on a worker.
+                    let Some(r) = run.as_mut() else {
+                        return Poll::Done(Err(anyhow::anyhow!(
+                            "shard task polled after completion"
+                        )));
+                    };
                     match r.poll(batch_rounds) {
                         Ok(BatchPoll::Progressed) => Poll::Pending,
                         Ok(BatchPoll::WouldBlock) => Poll::Blocked,
-                        Ok(BatchPoll::Finished) => {
-                            Poll::Done(Ok(run.take().expect("run present").finish()))
-                        }
+                        Ok(BatchPoll::Finished) => match run.take() {
+                            Some(done) => Poll::Done(Ok(done.finish())),
+                            None => Poll::Done(Err(anyhow::anyhow!(
+                                "shard run consumed before finish"
+                            ))),
+                        },
                         Err(e) => Poll::Done(Err(e)),
                     }
                 }) as executor::Task<'_, Result<ServerReport>>
@@ -503,7 +513,8 @@ impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, 
     /// shards drain them — arrival timestamps carry the pipeline timing,
     /// so no wall-clock race can change the simulated result.
     pub fn run_to_completion(&mut self) -> Result<ServerReport> {
-        let wall_start = Instant::now();
+        #[allow(clippy::disallowed_methods)]
+        let wall_start = Instant::now(); // detcheck: allow(wall-clock) -- the single per-run wall timer of a cluster run; feeds wall_ns only, never simulated results
         let exec = self.executor;
         self.worker_stats.clear();
         let reports = if !self.is_disaggregated() {
@@ -721,6 +732,7 @@ mod tests {
         let mut c = coordinator(2, 2);
         submit_all(&mut c, 4, 6);
         let mut intake = c.intake();
+        #[allow(clippy::disallowed_methods)] // test harness thread
         let submitter = std::thread::spawn(move || {
             std::thread::sleep(std::time::Duration::from_millis(25));
             assert!(intake.submit(Request::new(100, vec![5, 4, 3], 6)));

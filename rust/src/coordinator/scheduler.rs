@@ -196,15 +196,23 @@ impl Scheduler for LengthBucketed {
         if slots == 0 || self.pending == 0 {
             return;
         }
-        // The bucket whose head request has waited longest.
-        let bucket = self
-            .buckets
-            .iter()
-            .filter(|(_, q)| !q.is_empty())
-            .min_by_key(|(_, q)| q.front().expect("non-empty").0)
-            .map(|(b, _)| *b)
-            .expect("pending > 0 implies a non-empty bucket");
-        let queue = self.buckets.get_mut(&bucket).expect("bucket exists");
+        // The bucket whose head request has waited longest (lowest head
+        // sequence); an explicit scan keeps the non-empty invariant out
+        // of any panicking call.
+        let mut best: Option<(u64, u64)> = None;
+        for (b, q) in &self.buckets {
+            if let Some((seq, _)) = q.front() {
+                let lower = match best {
+                    Some((s, _)) => *seq < s,
+                    None => true,
+                };
+                if lower {
+                    best = Some((*seq, *b));
+                }
+            }
+        }
+        let Some((_, bucket)) = best else { return };
+        let Some(queue) = self.buckets.get_mut(&bucket) else { return };
         let take = slots.min(queue.len());
         out.extend(queue.drain(..take).map(|(_, r)| r));
         if queue.is_empty() {
@@ -277,7 +285,10 @@ impl Scheduler for EdfScheduler {
 
     fn next_batch_into(&mut self, slots: usize, out: &mut Vec<Request>) {
         let take = slots.min(self.heap.len());
-        out.extend((0..take).map(|_| self.heap.pop().expect("len checked").0.req));
+        for _ in 0..take {
+            let Some(entry) = self.heap.pop() else { break };
+            out.push(entry.0.req);
+        }
     }
 
     fn should_preempt(&mut self, req: &Request, generated: usize, sim_now_ns: f64) -> Preemption {

@@ -1142,7 +1142,7 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
     /// Move future requests whose arrival time has come into the scheduler.
     fn release_due(&mut self, sim_now_ns: f64) {
         while self.future.peek().is_some_and(|r| r.0.arrival_ns as f64 <= sim_now_ns) {
-            let Reverse(f) = self.future.pop().expect("peeked entry");
+            let Some(Reverse(f)) = self.future.pop() else { break };
             self.recorder.record(Event::instant(
                 EventKind::ArrivalRelease,
                 sim_now_ns,
@@ -1193,7 +1193,10 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
     /// timestamps, costs, tokens, per-shard stats; only host wall time
     /// differs (see module docs and `docs/serving.md`).
     pub fn run_to_completion(&mut self) -> Result<ServerReport> {
-        let wall_start = Instant::now();
+        // The one wall timer of a single-shard run ("one timer per poll
+        // batch", PR 6): everything else on this path is simulated time.
+        #[allow(clippy::disallowed_methods)]
+        let wall_start = Instant::now(); // detcheck: allow(wall-clock) -- the single per-run wall timer; feeds ServerReport::wall_ns only, never simulated results
         let mut st = self.begin_state();
         loop {
             match self.round(&mut st, true)? {
@@ -2005,8 +2008,13 @@ impl<'a, E: TokenEngine, S: Scheduler, R: Recorder> ShardRun<'a, E, S, R> {
         if self.finished {
             return Ok(BatchPoll::Finished);
         }
-        let st = self.st.as_mut().expect("poll on a consumed ShardRun");
-        let t0 = Instant::now();
+        // `st` is seeded by `new` and only taken by `finish`, which
+        // consumes `self`; a bare `None` here means a caller bug.
+        let Some(st) = self.st.as_mut() else {
+            anyhow::bail!("poll on a consumed ShardRun");
+        };
+        #[allow(clippy::disallowed_methods)]
+        let t0 = Instant::now(); // detcheck: allow(wall-clock) -- per-poll-batch wall timer ("one timer per poll batch", PR 6); feeds wall_ns only
         let mut verdict = BatchPoll::Progressed;
         for _ in 0..rounds.max(1) {
             match self.server.round(st, false)? {
@@ -2030,7 +2038,12 @@ impl<'a, E: TokenEngine, S: Scheduler, R: Recorder> ShardRun<'a, E, S, R> {
 
     /// Assemble the report once `poll` returned [`BatchPoll::Finished`].
     pub fn finish(mut self) -> ServerReport {
-        let st = self.st.take().expect("finish on a consumed ShardRun");
+        let st = match self.st.take() {
+            Some(st) => st,
+            // `new` always seeds `st` and only this method takes it,
+            // consuming `self`: the arm cannot execute.
+            None => unreachable!("finish on a consumed ShardRun"),
+        };
         self.server.finish_report(st, self.wall_ns)
     }
 }
@@ -2206,6 +2219,7 @@ mod tests {
         let mut s = server(2);
         s.submit(Request::new(0, vec![1, 2], 3));
         let tx = s.open_intake();
+        #[allow(clippy::disallowed_methods)] // test harness thread
         let worker = std::thread::spawn(move || {
             std::thread::sleep(std::time::Duration::from_millis(20));
             tx.send(Request::new(7, vec![9, 9], 3)).unwrap();

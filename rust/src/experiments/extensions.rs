@@ -85,7 +85,8 @@ pub fn run_trace() -> Vec<Table> {
         &["precision", "analytical_row_acts", "traced_row_acts", "analytical_ns", "trace_ns", "error"],
     );
     for prec in [Precision::Int2, Precision::Int4, Precision::Int8] {
-        let (a_acts, t_acts, a_ns, t_ns) = validate_against_analytical(prec, 128, &t_params);
+        let (a_acts, t_acts, a_ns, t_ns) =
+            validate_against_analytical(prec, 128, &t_params).expect("trace replay");
         t.row(vec![
             prec.label().into(),
             a_acts.to_string(),

@@ -4,7 +4,7 @@
 //! the total kernel latency — the objective the mapping engine minimizes.
 
 use super::model_hw::HwModel;
-use super::space::{Dim, Level, Mapping, LEVELS};
+use super::space::{Dim, Level, Mapping};
 use crate::config::MatmulShape;
 
 /// Per-level parallel-unit usage (for the Fig. 16 utilization report).
@@ -18,7 +18,7 @@ pub struct LevelUsage {
 
 impl LevelUsage {
     pub fn fraction(&self, level: Level) -> f64 {
-        let i = LEVELS.iter().position(|l| *l == level).unwrap();
+        let i = level.index();
         self.used[i] as f64 / self.avail[i] as f64
     }
 

@@ -35,6 +35,19 @@ pub enum Level {
 }
 
 impl Level {
+    /// Position of this level in [`LEVELS`] order (C, R, D, B, A) — an
+    /// exhaustive match, so it can neither drift from the const nor
+    /// panic the way a `position(..).unwrap()` scan could.
+    pub fn index(self) -> usize {
+        match self {
+            Level::Channel => 0,
+            Level::Rank => 1,
+            Level::Device => 2,
+            Level::Bank => 3,
+            Level::Array => 4,
+        }
+    }
+
     pub fn letter(&self) -> char {
         match self {
             Level::Channel => 'C',
@@ -97,7 +110,7 @@ pub struct HierMapping {
 
 impl HierMapping {
     pub fn dim_of(&self, level: Level) -> Dim {
-        self.assign[LEVELS.iter().position(|l| *l == level).unwrap()]
+        self.assign[level.index()]
     }
 
     /// Levels assigned to `d`, in canonical order.

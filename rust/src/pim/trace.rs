@@ -88,16 +88,16 @@ pub fn validate_against_analytical(
     prec: Precision,
     subarrays: u32,
     t: &TimingParams,
-) -> (u64, u64, f64, f64) {
+) -> crate::Result<(u64, u64, f64, f64)> {
     let cmd = DramCommand::PimMul { r_dst: 0, r_src1: 1, r_src2: 2, prec: prec.bits() as u8 };
-    let trace = trace_instruction(&cmd, subarrays, t).expect("trace");
+    let trace = trace_instruction(&cmd, subarrays, t)?;
     let salp = SalpScheduler::new(*t, subarrays);
     let analytical =
         super::isa::instr_latency(super::isa::InstrClass::Mul, prec, t, &salp, &Features::ALL);
     // Overlap the traced stream the way SALP does: rows pipeline at one
     // beat each behind the PE pipeline.
     let overlapped = trace.pe_ns.max(trace.row_accesses as f64 * t.t_cas_ns);
-    (analytical.row_accesses, trace.row_accesses, analytical.total_ns(), overlapped)
+    Ok((analytical.row_accesses, trace.row_accesses, analytical.total_ns(), overlapped))
 }
 
 #[cfg(test)]
@@ -109,7 +109,7 @@ mod tests {
     fn traced_row_accesses_match_analytical_exactly() {
         let t = ddr5_5200_timing();
         for prec in [Precision::Int2, Precision::Int4, Precision::Int8] {
-            let (analytical, traced, _, _) = validate_against_analytical(prec, 128, &t);
+            let (analytical, traced, _, _) = validate_against_analytical(prec, 128, &t).unwrap();
             assert_eq!(analytical, traced, "{prec:?}");
             assert_eq!(traced, 4 * prec.bits() as u64);
         }
@@ -119,7 +119,7 @@ mod tests {
     fn overlapped_trace_latency_matches_analytical_model() {
         let t = ddr5_5200_timing();
         for prec in [Precision::Int4, Precision::Int8] {
-            let (_, _, analytical_ns, overlapped_ns) = validate_against_analytical(prec, 128, &t);
+            let (_, _, analytical_ns, overlapped_ns) = validate_against_analytical(prec, 128, &t).unwrap();
             let rel = (analytical_ns - overlapped_ns).abs() / analytical_ns;
             assert!(rel < 0.05, "{prec:?}: analytical {analytical_ns} vs trace {overlapped_ns}");
         }
