@@ -62,6 +62,7 @@ fn main() -> racam::Result<()> {
         server.submit(Request::new(id as u64, prompt.clone(), new_tokens));
     }
 
+    #[allow(clippy::disallowed_methods)] // example wall timing, display only
     let t0 = std::time::Instant::now();
     let report = server.run_to_completion()?;
     let wall = t0.elapsed();

@@ -22,6 +22,7 @@ fn main() {
     let shape = MatmulShape::new(m, k, n, Precision::Int8);
     let engine = MappingEngine::new(HwModel::new(&racam_paper()));
 
+    #[allow(clippy::disallowed_methods)] // example wall timing, display only
     let t0 = std::time::Instant::now();
     let evals = engine.evaluate_all(&shape);
     let search_time = t0.elapsed();

@@ -118,6 +118,7 @@ fn main() -> racam::Result<()> {
         coord.submit(req.clone());
     }
     let mut intake = coord.intake();
+    #[allow(clippy::disallowed_methods)] // example demonstrates async intake
     let submitter = std::thread::spawn(move || {
         std::thread::sleep(std::time::Duration::from_millis(10));
         for id in 0..4u64 {

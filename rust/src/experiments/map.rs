@@ -129,6 +129,7 @@ fn run_store_pass(
     let service = MappingService::for_config(&racam_paper());
     let loaded = service.set_warm_path(store)?;
     let mut evaluated = 0usize;
+    #[allow(clippy::disallowed_methods)] // experiment wall timing (detcheck allowlist)
     let start = Instant::now();
     for (label, shape) in shapes {
         let before = service.misses();
@@ -199,6 +200,7 @@ pub fn run() -> crate::Result<(Vec<Table>, Metrics)> {
     for (label, shape) in &shapes {
         let mut winners: Vec<u64> = Vec::with_capacity(STRATEGIES.len());
         for (si, &strat) in STRATEGIES.iter().enumerate() {
+            #[allow(clippy::disallowed_methods)] // experiment wall timing (detcheck allowlist)
             let start = Instant::now();
             let r = search(&service, strat, shape)
                 .ok_or_else(|| anyhow::anyhow!("no valid mapping for kernel '{label}'"))?;

@@ -41,6 +41,7 @@ pub const ALL_IDS: &[&str] = &[
 /// into the bench artifact; static experiments carry an (all-zero)
 /// default so the `metrics.*` schema fields are emitted unconditionally.
 pub fn run(id: &str) -> Result<Vec<Table>> {
+    #[allow(clippy::disallowed_methods)] // experiment wall timing (detcheck allowlist)
     let wall_start = Instant::now();
     let (tables, metrics) = match id {
         "fig1" => (fig01::run(), Metrics::default()),

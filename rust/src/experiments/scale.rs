@@ -194,6 +194,7 @@ fn run_sweep_cell(
     for req in generate(&spec) {
         coord.submit(req);
     }
+    #[allow(clippy::disallowed_methods)] // experiment wall timing (detcheck allowlist)
     let start = Instant::now();
     let report = coord.run_to_completion()?;
     let wall_ns = start.elapsed().as_nanos() as f64;

@@ -38,6 +38,7 @@ pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> BenchResu
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
+        #[allow(clippy::disallowed_methods)] // bench harness owns wall timing (detcheck allowlist)
         let t0 = Instant::now();
         std::hint::black_box(f());
         samples.push(t0.elapsed().as_nanos() as f64);

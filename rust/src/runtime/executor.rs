@@ -196,6 +196,7 @@ pub fn run_tasks_with_stats<'a, T: Send>(
 }
 
 fn worker<T: Send>(shared: &Shared<'_, T>, me: usize) -> WorkerStats {
+    #[allow(clippy::disallowed_methods)] // executor-owned host timing (detcheck allowlist)
     let started = std::time::Instant::now();
     let mut stats = WorkerStats::default();
     let nq = shared.queues.len();

@@ -673,12 +673,14 @@ pub struct TraceCheck {
 /// same-name `E` (fully balanced at end of input).  The `tracecheck`
 /// binary runs this in CI against the bench trace artifact.
 pub fn validate_trace(trace: &Value) -> crate::Result<TraceCheck> {
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
     let Ok(Value::Arr(events)) = trace.get("traceEvents") else {
         anyhow::bail!("trace has no traceEvents array");
     };
-    // Track key → (last ts, open span-name stack).
-    let mut tracks: HashMap<(u64, u64), (f64, Vec<String>)> = HashMap::new();
+    // Track key → (last ts, open span-name stack).  A BTreeMap so the
+    // end-of-trace unclosed-span scan below reports in a deterministic
+    // track order (detcheck's map-iteration rule).
+    let mut tracks: BTreeMap<(u64, u64), (f64, Vec<String>)> = BTreeMap::new();
     let mut counted = 0usize;
     let mut spans = 0usize;
     for (i, ev) in events.iter().enumerate() {

@@ -35,6 +35,13 @@ use crate::metrics::{fmt_ns, percentile_sorted};
 use crate::report::Table;
 use crate::telemetry::Metrics;
 
+/// Sequential left-to-right sum — the documented reduction order for
+/// every `f64` aggregate in the SLO tables, so reassociation can never
+/// perturb a reported number (see docs/analysis.md, float-reduce).
+fn seq_sum(values: impl Iterator<Item = f64>) -> f64 {
+    values.fold(0.0, |acc, x| acc + x)
+}
+
 /// Tail summary of one latency population.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Percentiles {
@@ -56,8 +63,8 @@ impl Percentiles {
             p50: percentile_sorted(&sorted, 50.0),
             p95: percentile_sorted(&sorted, 95.0),
             p99: percentile_sorted(&sorted, 99.0),
-            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
-            max: *sorted.last().expect("non-empty"),
+            mean: seq_sum(sorted.iter().copied()) / sorted.len() as f64,
+            max: sorted.last().copied().unwrap_or_default(),
         }
     }
 }
@@ -219,7 +226,7 @@ impl SloSummary {
                     * if self.shard_utilization.is_empty() {
                         0.0
                     } else {
-                        self.shard_utilization.iter().map(|s| s.busy).sum::<f64>()
+                        seq_sum(self.shard_utilization.iter().map(|s| s.busy))
                             / self.shard_utilization.len() as f64
                     }
             ),
@@ -277,13 +284,13 @@ impl SloSummary {
                 group.to_string(),
                 members[0].role.label().into(),
                 members.len().to_string(),
-                format!("{:.0}%", 100.0 * members.iter().map(|s| s.busy).sum::<f64>() / n),
+                format!("{:.0}%", 100.0 * seq_sum(members.iter().map(|s| s.busy)) / n),
                 format!(
                     "{:.0}%",
-                    100.0 * members.iter().map(|s| s.occupancy).sum::<f64>() / n
+                    100.0 * seq_sum(members.iter().map(|s| s.occupancy)) / n
                 ),
                 members.iter().map(|s| s.handoffs).sum::<usize>().to_string(),
-                fmt_ns(members.iter().map(|s| s.kv_transfer_ns).sum::<f64>()),
+                fmt_ns(seq_sum(members.iter().map(|s| s.kv_transfer_ns))),
             ]);
         }
         t

@@ -174,6 +174,7 @@ fn analytical_row_accesses_match_functional_counts() {
 fn search_on_paper_hw_is_fast_and_consistent() {
     let engine = MappingEngine::new(HwModel::new(&racam_paper()));
     let shape = MatmulShape::new(1024, 12288, 12288, Precision::Int8);
+    #[allow(clippy::disallowed_methods)] // test-only timing assertion
     let t0 = std::time::Instant::now();
     let r = engine.search(&shape).expect("GEMM space evaluates");
     let elapsed = t0.elapsed();
@@ -261,6 +262,7 @@ fn open_loop_traffic_serves_under_every_scheduler() {
         }
         // Async admission: one request shows up only after the run starts.
         let mut intake = coord.intake();
+        #[allow(clippy::disallowed_methods)] // test harness thread
         let late = std::thread::spawn(move || {
             std::thread::sleep(std::time::Duration::from_millis(5));
             assert!(intake.submit(Request::new(500, vec![1, 2], 2)));
