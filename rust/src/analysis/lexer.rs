@@ -1,0 +1,469 @@
+//! A minimal, dependency-free Rust lexer for the detcheck rules.
+//!
+//! This is deliberately *not* a real parser: the rules in
+//! [`super::rules`] are token-pattern checks, so all the lexer has to do
+//! is (a) scrub everything that is not code — line comments, nested
+//! block comments, string literals (plain, raw, byte), char literals —
+//! while preserving line numbers, (b) tokenize what remains, and
+//! (c) recover just enough structure for the rules to scope themselves:
+//! `#[cfg(test)]`/`#[test]` regions, `fn` body spans, and `impl` block
+//! spans.
+//!
+//! Waiver comments (of the form `detcheck: allow(<rule>) -- <reason>`)
+//! are harvested during scrubbing.  A waiver directive must sit at the
+//! *start* of its comment (after the `//` and optional doc-comment
+//! markers); mentions of the syntax mid-sentence — like the one in the
+//! paragraph above — are ignored, so documentation cannot accidentally
+//! waive anything.
+
+/// One token of scrubbed source.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub line: u32,
+}
+
+/// A `detcheck: allow(...)` comment found during scrubbing.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    /// Line the comment itself sits on.
+    pub line: u32,
+    /// Code line the waiver applies to: its own line if that line has
+    /// code, otherwise the next line that does (standalone comments
+    /// waive the statement below them).
+    pub covers: u32,
+    /// The rule name inside `allow(...)`.
+    pub rule: String,
+    /// The mandatory `-- <reason>` text; `None` means the waiver is
+    /// malformed and is itself reported as a finding.
+    pub reason: Option<String>,
+}
+
+/// A function body, as a half-open token range over [`Lexed::toks`].
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// Token index of the opening `{`.
+    pub start: usize,
+    /// Token index one past the matching `}`.
+    pub end: usize,
+}
+
+/// An `impl` block: header tokens plus the body token range.
+#[derive(Debug, Clone)]
+pub struct ImplSpan {
+    /// Every token between `impl` and the body `{`, in order (e.g.
+    /// `["<", "R", ">", "Recorder", "for", "Wrap", "<", "R", ">"]`), so
+    /// rules can extract the trait and self type.
+    pub header: Vec<String>,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Fully lexed file: tokens plus the structure the rules need.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub waivers: Vec<Waiver>,
+    /// Per-token flag: true when the token sits inside a
+    /// `#[cfg(test)]`/`#[test]` region.
+    pub test_mask: Vec<bool>,
+    pub fns: Vec<FnSpan>,
+    pub impls: Vec<ImplSpan>,
+    /// Raw source lines, for finding snippets (1-indexed via `line - 1`).
+    pub lines: Vec<String>,
+}
+
+impl Lexed {
+    /// The trimmed raw source line, for human-readable findings.
+    pub fn snippet(&self, line: u32) -> String {
+        self.lines
+            .get(line.saturating_sub(1) as usize)
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default()
+    }
+}
+
+/// Lex one file.
+pub fn lex(src: &str) -> Lexed {
+    let (scrubbed, mut waivers) = scrub(src);
+    let toks = tokenize(&scrubbed);
+    // Resolve which code line each waiver covers: its own line when that
+    // line has tokens (trailing comment), else the next line that does.
+    for w in &mut waivers {
+        let own = toks.iter().any(|t| t.line == w.line);
+        w.covers = if own {
+            w.line
+        } else {
+            toks.iter().map(|t| t.line).filter(|&l| l > w.line).min().unwrap_or(w.line)
+        };
+    }
+    let (test_mask, fns, impls) = structure(&toks);
+    let lines = src.lines().map(|l| l.to_string()).collect();
+    Lexed { toks, waivers, test_mask, fns, impls, lines }
+}
+
+/// Blank out comments, strings, and char literals, preserving newlines
+/// so token line numbers stay aligned with the raw source.  Returns the
+/// scrubbed text and any waiver comments encountered.
+fn scrub(src: &str) -> (String, Vec<Waiver>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Vec::with_capacity(n);
+    let mut waivers = Vec::new();
+    let mut line: u32 = 1;
+    let mut i = 0;
+    // Push a scrubbed span verbatim for its newlines only.
+    fn blank(out: &mut Vec<u8>, line: &mut u32, seg: &[u8]) {
+        for &c in seg {
+            if c == b'\n' {
+                out.push(b'\n');
+                *line += 1;
+            } else {
+                out.push(b' ');
+            }
+        }
+    }
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            out.push(b'\n');
+            line += 1;
+            i += 1;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let j = src[i..].find('\n').map(|k| i + k).unwrap_or(n);
+            if let Some(w) = parse_waiver(&src[i..j], line) {
+                waivers.push(w);
+            }
+            blank(&mut out, &mut line, &b[i..j]);
+            i = j;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            // Nested block comment.
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, &mut line, &b[i..j]);
+            i = j;
+        } else if is_string_start(b, i) {
+            // Optional `b`, optional `r` + hashes, then `"`.
+            let mut j = i;
+            if b[j] == b'b' {
+                j += 1;
+            }
+            let raw = b[j] == b'r';
+            if raw {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while raw && j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            debug_assert_eq!(b[j], b'"');
+            j += 1;
+            let end = if raw {
+                // Raw string: ends at `"` followed by `hashes` hashes.
+                let closer = format!("\"{}", "#".repeat(hashes));
+                src[j..].find(&closer).map(|k| j + k + closer.len()).unwrap_or(n)
+            } else {
+                let mut k = j;
+                loop {
+                    if k >= n {
+                        break n;
+                    }
+                    match b[k] {
+                        b'\\' => k += 2,
+                        b'"' => break k + 1,
+                        _ => k += 1,
+                    }
+                }
+            };
+            blank(&mut out, &mut line, &b[i..end]);
+            i = end;
+        } else if c == b'\'' || (c == b'b' && i + 1 < n && b[i + 1] == b'\'' && !ident_tail(b, i)) {
+            let q = if c == b'b' { i + 1 } else { i };
+            // Distinguish a char literal from a lifetime: a literal is
+            // `'\...'` or `'x'` (one char then a closing quote).
+            let is_char = q + 1 < n
+                && (b[q + 1] == b'\\' || {
+                    // `'x'` — any single byte followed by `'` (covers
+                    // `'_'`; a lifetime `'_` has no closing quote).
+                    q + 2 < n && b[q + 1] != b'\'' && b[q + 2] == b'\''
+                });
+            if is_char {
+                let end = if b[q + 1] == b'\\' {
+                    // Escaped char (possibly `'\u{..}'`): scan to the
+                    // closing quote.
+                    let mut k = q + 2;
+                    while k < n && b[k] != b'\'' {
+                        k += 1;
+                    }
+                    (k + 1).min(n)
+                } else {
+                    q + 3
+                };
+                blank(&mut out, &mut line, &b[i..end]);
+                i = end;
+            } else {
+                // Lifetime tick: keep it (harmless single-char token).
+                out.push(b'\'');
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    (String::from_utf8_lossy(&out).into_owned(), waivers)
+}
+
+/// Is `b[i]` the start of a string literal (`"`, `r"`, `r#"`, `b"`,
+/// `br"`, ...), and not the tail of a longer identifier like `var"`?
+fn is_string_start(b: &[u8], i: usize) -> bool {
+    if b[i] == b'"' {
+        return true;
+    }
+    if ident_tail(b, i) {
+        return false;
+    }
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+        if j >= b.len() {
+            return false;
+        }
+    }
+    if b.get(j) == Some(&b'"') {
+        return b[i] == b'b';
+    }
+    if b.get(j) != Some(&b'r') {
+        return false;
+    }
+    j += 1;
+    while b.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    b.get(j) == Some(&b'"')
+}
+
+/// True when the byte before `i` is part of an identifier, meaning the
+/// `r`/`b` at `i` is an identifier tail, not a literal prefix.
+fn ident_tail(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_')
+}
+
+/// Parse a waiver directive from a line comment.  The directive must
+/// lead the comment (after slashes, `!`, and whitespace); the reason
+/// after `--` is mandatory and its absence is recorded as `None` so the
+/// rule engine can report the malformed waiver.
+fn parse_waiver(comment: &str, line: u32) -> Option<Waiver> {
+    let body = comment.trim_start_matches('/').trim_start_matches('!').trim_start();
+    let rest = body.strip_prefix("detcheck:")?.trim_start();
+    let rest = rest.strip_prefix("allow")?.trim_start();
+    let rest = rest.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let tail = rest[close + 1..].trim();
+    let reason = tail
+        .strip_prefix("--")
+        .map(|r| r.trim())
+        .filter(|r| !r.is_empty())
+        .map(|r| r.to_string());
+    Some(Waiver { line, covers: line, rule, reason })
+}
+
+/// Tokenize scrubbed source: identifiers, numbers, `::`, and single
+/// punctuation characters, each tagged with its 1-based line.
+fn tokenize(scrubbed: &str) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    for (ln0, text) in scrubbed.lines().enumerate() {
+        let line = (ln0 + 1) as u32;
+        let b = text.as_bytes();
+        let mut i = 0;
+        while i < b.len() {
+            let c = b[i];
+            if c.is_ascii_whitespace() {
+                i += 1;
+            } else if c.is_ascii_alphabetic() || c == b'_' {
+                let s = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                toks.push(Tok { text: text[s..i].to_string(), line });
+            } else if c.is_ascii_digit() {
+                let s = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                // Float part — consume `.` only when a digit follows, so
+                // ranges like `0..n` stay three tokens.
+                if i + 1 < b.len() && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                    while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                        i += 1;
+                    }
+                }
+                toks.push(Tok { text: text[s..i].to_string(), line });
+            } else if c == b':' && i + 1 < b.len() && b[i + 1] == b':' {
+                toks.push(Tok { text: "::".to_string(), line });
+                i += 2;
+            } else if c.is_ascii() {
+                toks.push(Tok { text: (c as char).to_string(), line });
+                i += 1;
+            } else {
+                // Non-ASCII outside comments/strings: skip the byte.
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+/// Structural pass: test regions, fn spans, impl spans.
+fn structure(toks: &[Tok]) -> (Vec<bool>, Vec<FnSpan>, Vec<ImplSpan>) {
+    let n = toks.len();
+    let mut test_mask = vec![false; n];
+    let mut fns = Vec::new();
+    let mut impls = Vec::new();
+    let mut i = 0;
+    let mut pending_test = false;
+    let mut group_depth = 0i32;
+    while i < n {
+        let t = toks[i].text.as_str();
+        match t {
+            "(" | "[" => group_depth += 1,
+            ")" | "]" => group_depth -= 1,
+            _ => {}
+        }
+        if t == "#" && i + 1 < n && (toks[i + 1].text == "[" || toks[i + 1].text == "!") {
+            // Attribute: `#[...]` or inner `#![...]`.
+            let mut j = i + 1;
+            if toks[j].text == "!" {
+                j += 1;
+            }
+            if j < n && toks[j].text == "[" {
+                let mut depth = 1usize;
+                let mut idents = Vec::new();
+                j += 1;
+                while j < n && depth > 0 {
+                    match toks[j].text.as_str() {
+                        "[" => depth += 1,
+                        "]" => depth -= 1,
+                        s => {
+                            if s.starts_with(|c: char| c.is_ascii_alphabetic() || c == '_') {
+                                idents.push(s.to_string());
+                            }
+                        }
+                    }
+                    j += 1;
+                }
+                // `#[test]` or any `cfg(...)` mentioning `test` — except
+                // `cfg(not(test))`, which marks *non*-test code.
+                let is_test_attr = idents.first().map(String::as_str) == Some("test")
+                    || (idents.first().map(String::as_str) == Some("cfg")
+                        && idents.iter().any(|s| s == "test")
+                        && !idents.iter().any(|s| s == "not"));
+                if is_test_attr {
+                    pending_test = true;
+                }
+                i = j;
+                continue;
+            }
+        }
+        if pending_test {
+            // The attribute governs the next item: a braced item puts
+            // its whole `{...}` block in the test region; a `;`-item
+            // (e.g. `#[cfg(test)] use ...;`) consumes the flag with no
+            // region.  Brackets/parens are tracked so `;` inside
+            // `[u8; N]` or params does not end the item early.
+            match t {
+                "{" if group_depth == 0 => {
+                    let end = match_brace(toks, i);
+                    for m in test_mask.iter_mut().take(end + 1).skip(i) {
+                        *m = true;
+                    }
+                    pending_test = false;
+                    // Fall through: the region's tokens still get fn /
+                    // impl spans recorded (rules decide what test code
+                    // may do).
+                }
+                ";" if group_depth == 0 => pending_test = false,
+                _ => {}
+            }
+        }
+        match t {
+            "fn" if i + 1 < n => {
+                let name = toks[i + 1].text.clone();
+                if name.starts_with(|c: char| c.is_ascii_alphabetic() || c == '_') {
+                    if let Some(body) = find_body(toks, i + 2) {
+                        let end = match_brace(toks, body);
+                        fns.push(FnSpan { name, start: body, end });
+                    }
+                }
+                i += 1;
+            }
+            // Item-position `impl` blocks only: argument-position
+            // `impl Trait` sits inside parens (group_depth > 0), and
+            // return-position `-> impl Trait` is preceded by the `>` of
+            // the arrow (`->` lexes as two tokens).  Neither opens an
+            // impl block.
+            "impl" if group_depth == 0 && (i == 0 || toks[i - 1].text != ">") => {
+                if let Some(body) = find_body(toks, i + 1) {
+                    let header = toks[i + 1..body].iter().map(|t| t.text.clone()).collect();
+                    let end = match_brace(toks, body);
+                    impls.push(ImplSpan { header, start: body, end });
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    (test_mask, fns, impls)
+}
+
+/// From `start`, find the opening `{` of the item's body, skipping the
+/// signature (params, return type, where clause).  Returns `None` when a
+/// `;` ends the item first (trait method declaration, `impl Trait for T;`
+/// never — but harmless).  Parens and square brackets are depth-tracked
+/// so `;` inside `[u8; 4]` or `(a, b)` doesn't terminate the scan.
+fn find_body(toks: &[Tok], start: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (k, t) in toks.iter().enumerate().skip(start) {
+        match t.text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            "{" if depth == 0 => return Some(k),
+            ";" if depth == 0 => return None,
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Token index one past the `}` matching the `{` at `open`.
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return k + 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len()
+}

@@ -1,0 +1,333 @@
+//! `detcheck`: a determinism & purity static-analysis pass.
+//!
+//! The repo's headline results all rest on bit-identity contracts — the
+//! calendar engine matches the per-iteration oracle, any worker-pool
+//! size merges to the 1-thread report, the best-first mapping winner
+//! equals the serial exhaustive reference, and recording a trace changes
+//! nothing.  The dynamic gates (`tests/engine_equivalence.rs`, the
+//! proptests) catch a violation after it is written; this module catches
+//! the *source patterns* that cause them — wall-clock reads in simulated
+//! paths, `HashMap` iteration order leaking into results, ad-hoc `f64`
+//! reductions, stray threads — before they run.
+//!
+//! The pass is offline and dependency-free: [`lexer`] scrubs and
+//! tokenizes each file, [`rules`] runs token-pattern checks scoped by
+//! module path, and this module applies inline waivers and renders the
+//! report.  Deliberate exceptions carry a comment of the form
+//! `detcheck: allow(<rule>) -- <reason>` (the directive must lead the
+//! comment; the reason is mandatory); a waiver that matches nothing is
+//! itself a finding, so stale exceptions cannot accumulate.
+//!
+//! Run it as `cargo run --bin detcheck` (or `racam detcheck`) from the
+//! `rust/` directory; see `docs/analysis.md` for the rule catalog.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::json::Value;
+
+/// One file handed to [`analyze`]: a (possibly virtual) path plus its
+/// source text.  The path drives rule scoping, so test fixtures can
+/// impersonate any module.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub src: String,
+}
+
+/// What kind of target a file belongs to, derived from its path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileKind {
+    /// Library code under `src/` — the strictest tier.
+    Lib,
+    /// `src/bin/*` and `src/main.rs`.
+    Bin,
+    /// Integration tests under `tests/`.
+    Test,
+    /// `benches/`.
+    Bench,
+    /// `examples/`.
+    Example,
+}
+
+/// A lexed file plus its rule-scoping identity.
+pub struct FileCtx {
+    pub path: String,
+    /// Module path under `src/` (`coordinator::server`); empty for
+    /// `lib.rs` and non-library targets.
+    pub module: String,
+    pub kind: FileKind,
+    pub lex: lexer::Lexed,
+}
+
+/// One reported problem.  `waived` carries the reason from a matching
+/// inline waiver; unwaived findings fail the run.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// A rule name from [`rules::RULES`], or `"waiver"` for waiver
+    /// hygiene problems (malformed, unknown rule, unused).
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub snippet: String,
+    pub hint: String,
+    pub waived: Option<String>,
+}
+
+/// The result of one analysis pass.
+pub struct Report {
+    /// Files scanned.
+    pub files: usize,
+    /// All findings, waived and not, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn unwaived_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.waived.is_none()).count()
+    }
+
+    pub fn waived_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.waived.is_some()).count()
+    }
+
+    /// Human-readable report: unwaived findings with hints, then the
+    /// accepted waivers, then a one-line summary.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for f in self.findings.iter().filter(|f| f.waived.is_none()) {
+            s.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.snippet));
+            s.push_str(&format!("    hint: {}\n", f.hint));
+        }
+        let waived: Vec<&Finding> = self.findings.iter().filter(|f| f.waived.is_some()).collect();
+        if !waived.is_empty() {
+            s.push_str("waived:\n");
+            for f in &waived {
+                let reason = f.waived.as_deref().unwrap_or("");
+                s.push_str(&format!("  {}:{}: [{}] {} -- {}\n", f.file, f.line, f.rule, f.snippet, reason));
+            }
+        }
+        s.push_str(&format!(
+            "detcheck: {} unwaived finding(s), {} waived, {} file(s) scanned\n",
+            self.unwaived_count(),
+            self.waived_count(),
+            self.files,
+        ));
+        s
+    }
+
+    /// Machine-readable report (written to `detcheck.json` in CI).
+    pub fn to_json(&self) -> Value {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Value::obj(vec![
+                    ("file", Value::Str(f.file.clone())),
+                    ("line", Value::Num(f.line as f64)),
+                    ("rule", Value::Str(f.rule.to_string())),
+                    ("snippet", Value::Str(f.snippet.clone())),
+                    ("hint", Value::Str(f.hint.clone())),
+                    ("waived", Value::Bool(f.waived.is_some())),
+                    ("reason", Value::Str(f.waived.clone().unwrap_or_default())),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("files", Value::Num(self.files as f64)),
+            ("unwaived", Value::Num(self.unwaived_count() as f64)),
+            ("waived", Value::Num(self.waived_count() as f64)),
+            ("findings", Value::Arr(findings)),
+        ])
+    }
+}
+
+/// Derive (module path, file kind) from a path like
+/// `src/coordinator/server.rs` or `tests/detcheck.rs`.
+fn classify(path: &str) -> (String, FileKind) {
+    let norm = path.replace('\\', "/");
+    let comps: Vec<&str> = norm.split('/').filter(|c| !c.is_empty() && *c != ".").collect();
+    if let Some(si) = comps.iter().position(|c| *c == "src") {
+        let rest = &comps[si + 1..];
+        if rest.first().copied() == Some("bin") || rest == ["main.rs"] {
+            return ("bin".to_string(), FileKind::Bin);
+        }
+        let mut parts: Vec<String> = rest
+            .iter()
+            .map(|c| c.trim_end_matches(".rs").to_string())
+            .filter(|c| !c.is_empty())
+            .collect();
+        if parts.last().map(String::as_str) == Some("mod") {
+            parts.pop();
+        }
+        if parts.last().map(String::as_str) == Some("lib") {
+            parts.pop();
+        }
+        return (parts.join("::"), FileKind::Lib);
+    }
+    if comps.contains(&"tests") {
+        return (String::new(), FileKind::Test);
+    }
+    if comps.contains(&"benches") {
+        return (String::new(), FileKind::Bench);
+    }
+    if comps.contains(&"examples") {
+        return (String::new(), FileKind::Example);
+    }
+    (String::new(), FileKind::Lib)
+}
+
+/// Analyze a set of (path, source) pairs: lex, run every rule, apply
+/// inline waivers, and report waiver-hygiene problems.
+pub fn analyze(files: &[SourceFile]) -> Report {
+    let ctxs: Vec<FileCtx> = files
+        .iter()
+        .map(|s| {
+            let (module, kind) = classify(&s.path);
+            FileCtx { path: s.path.clone(), module, kind, lex: lexer::lex(&s.src) }
+        })
+        .collect();
+    let raw = rules::run_all(&ctxs);
+
+    let index: BTreeMap<&str, usize> =
+        ctxs.iter().enumerate().map(|(i, c)| (c.path.as_str(), i)).collect();
+    let mut used: Vec<Vec<bool>> = ctxs.iter().map(|c| vec![false; c.lex.waivers.len()]).collect();
+    let mut findings: Vec<Finding> = Vec::new();
+
+    for rf in raw {
+        let mut waived = None;
+        if let Some(&ci) = index.get(rf.file.as_str()) {
+            for (wi, w) in ctxs[ci].lex.waivers.iter().enumerate() {
+                if w.rule == rf.rule && w.covers == rf.line {
+                    if let Some(reason) = &w.reason {
+                        waived = Some(reason.clone());
+                        used[ci][wi] = true;
+                        break;
+                    }
+                }
+            }
+        }
+        findings.push(Finding {
+            rule: rf.rule,
+            file: rf.file,
+            line: rf.line,
+            snippet: rf.snippet,
+            hint: rf.hint,
+            waived,
+        });
+    }
+
+    // Waiver hygiene: malformed, unknown-rule, and unused waivers are
+    // findings themselves (and can never be waived).
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        for (wi, w) in ctx.lex.waivers.iter().enumerate() {
+            let problem = if !rules::RULES.contains(&w.rule.as_str()) {
+                Some(format!("waiver names unknown rule '{}'", w.rule))
+            } else if w.reason.is_none() {
+                Some(format!(
+                    "malformed waiver for '{}': a `-- <reason>` is mandatory",
+                    w.rule
+                ))
+            } else if !used[ci][wi] {
+                Some(format!(
+                    "unused waiver for '{}': nothing on line {} triggers the rule",
+                    w.rule, w.covers
+                ))
+            } else {
+                None
+            };
+            if let Some(p) = problem {
+                findings.push(Finding {
+                    rule: "waiver",
+                    file: ctx.path.clone(),
+                    line: w.line,
+                    snippet: ctx.lex.snippet(w.line),
+                    hint: p,
+                    waived: None,
+                });
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.hint.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.hint.as_str()))
+    });
+    Report { files: ctxs.len(), findings }
+}
+
+/// Shared CLI driver for the `detcheck` bin and the `racam detcheck`
+/// subcommand: `detcheck [DIR|FILE ...] [--json PATH]`.  With no
+/// explicit paths it scans `src` and `tests` under the current
+/// directory (run it from `rust/`).
+pub fn run_cli(args: &[String]) -> Result<Report> {
+    let mut paths: Vec<String> = Vec::new();
+    let mut json_out: Option<String> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => {
+                json_out = Some(it.next().context("--json needs a path")?.clone());
+            }
+            other => paths.push(other.to_string()),
+        }
+    }
+    if paths.is_empty() {
+        for d in ["src", "tests"] {
+            if Path::new(d).is_dir() {
+                paths.push(d.to_string());
+            }
+        }
+    }
+    if paths.is_empty() {
+        bail!("no source directories found: run from rust/ or pass directories explicitly");
+    }
+    let mut sources = Vec::new();
+    for p in &paths {
+        collect_sources(Path::new(p), &mut sources)?;
+    }
+    sources.sort_by(|a, b| a.path.cmp(&b.path));
+    let report = analyze(&sources);
+    if let Some(p) = json_out {
+        if let Some(dir) = Path::new(&p).parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        }
+        std::fs::write(&p, report.to_json().pretty())
+            .with_context(|| format!("writing {p}"))?;
+    }
+    Ok(report)
+}
+
+/// Recursively gather `.rs` files.  Skips build output (`target`),
+/// vendored dependencies (`vendor`), and the analyzer's own
+/// deliberately-violating test corpus (`detcheck_fixtures`).
+fn collect_sources(path: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+    if path.is_dir() {
+        let name = path.file_name().map(|n| n.to_string_lossy().to_string()).unwrap_or_default();
+        if matches!(name.as_str(), "target" | "vendor" | "detcheck_fixtures") {
+            return Ok(());
+        }
+        let mut entries: Vec<_> = std::fs::read_dir(path)
+            .with_context(|| format!("reading {}", path.display()))?
+            .collect::<std::io::Result<Vec<_>>>()
+            .with_context(|| format!("reading {}", path.display()))?
+            .into_iter()
+            .map(|e| e.path())
+            .collect();
+        entries.sort();
+        for e in entries {
+            collect_sources(&e, out)?;
+        }
+    } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let p = path.to_string_lossy().replace('\\', "/");
+        out.push(SourceFile { path: p, src });
+    }
+    Ok(())
+}

@@ -1,0 +1,685 @@
+//! The detcheck rules.
+//!
+//! Each rule is a token-pattern check over [`super::lexer::Lexed`] files,
+//! scoped by module path and file kind.  The rules encode this repo's
+//! determinism and purity contracts — see `docs/analysis.md` for the
+//! catalog, the *why* behind each contract, and the waiver etiquette.
+//!
+//! Rules come in two shapes: per-file (wall-clock, map-iteration,
+//! thread-spawn, float-reduce, panic-hygiene, recorder-purity) and
+//! corpus-wide (deprecated-internal collects `#[deprecated]` associated
+//! fns anywhere and flags qualified calls everywhere else;
+//! engine-parity cross-references `EventKind` variants against the
+//! calendar/oracle call graphs).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::Tok;
+use super::{FileCtx, FileKind};
+
+/// Every rule name, as accepted inside a waiver's `allow(...)`.
+pub const RULES: [&str; 8] = [
+    "wall-clock",
+    "map-iteration",
+    "thread-spawn",
+    "float-reduce",
+    "panic-hygiene",
+    "deprecated-internal",
+    "recorder-purity",
+    "engine-parity",
+];
+
+/// A rule hit before waivers are applied.
+#[derive(Debug, Clone)]
+pub struct RawFinding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub snippet: String,
+    pub hint: String,
+}
+
+/// Run every rule over the corpus.
+pub fn run_all(files: &[FileCtx]) -> Vec<RawFinding> {
+    let mut out = Vec::new();
+    for f in files {
+        wall_clock(f, &mut out);
+        map_iteration(f, &mut out);
+        thread_spawn(f, &mut out);
+        float_reduce(f, &mut out);
+        panic_hygiene(f, &mut out);
+        recorder_purity(f, &mut out);
+    }
+    deprecated_internal(files, &mut out);
+    engine_parity(files, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------
+// Scoping helpers
+// ---------------------------------------------------------------------
+
+/// Does `module` match an allowlist entry?  Entries are exact module
+/// paths, or prefixes when suffixed with `*` (`experiments*` covers
+/// `experiments` and every `experiments::` submodule).
+fn allowed(module: &str, allow: &[&str]) -> bool {
+    allow.iter().any(|a| match a.strip_suffix('*') {
+        Some(prefix) => module.starts_with(prefix),
+        None => module == *a,
+    })
+}
+
+fn is_ident(t: &str) -> bool {
+    t.starts_with(|c: char| c.is_ascii_alphabetic() || c == '_')
+}
+
+fn is_upper_ident(t: &str) -> bool {
+    t.starts_with(|c: char| c.is_ascii_uppercase())
+}
+
+/// Emit one finding per occurrence of any token pattern, outside
+/// `#[cfg(test)]` regions.
+fn flag_patterns(
+    f: &FileCtx,
+    rule: &'static str,
+    pats: &[&[&str]],
+    hint: &str,
+    out: &mut Vec<RawFinding>,
+) {
+    flag_patterns_in(f, rule, pats, hint, 0, f.lex.toks.len(), out);
+}
+
+/// Same, restricted to the token range `[start, end)`.
+fn flag_patterns_in(
+    f: &FileCtx,
+    rule: &'static str,
+    pats: &[&[&str]],
+    hint: &str,
+    start: usize,
+    end: usize,
+    out: &mut Vec<RawFinding>,
+) {
+    let toks = &f.lex.toks;
+    let end = end.min(toks.len());
+    for pat in pats {
+        if pat.is_empty() || end < pat.len() {
+            continue;
+        }
+        for i in start..=(end - pat.len()) {
+            if f.lex.test_mask[i] {
+                continue;
+            }
+            if pat.iter().enumerate().all(|(k, p)| toks[i + k].text == *p) {
+                out.push(RawFinding {
+                    rule,
+                    file: f.path.clone(),
+                    line: toks[i].line,
+                    snippet: f.lex.snippet(toks[i].line),
+                    hint: hint.to_string(),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// wall-clock
+// ---------------------------------------------------------------------
+
+const WALL_CLOCK_ALLOW: &[&str] = &["runtime::executor", "report::bench", "experiments*"];
+const WALL_CLOCK_PATS: &[&[&str]] = &[
+    &["Instant", "::", "now"],
+    &["SystemTime", "::", "now"],
+    &["SystemTime", "::", "UNIX_EPOCH"],
+];
+
+fn wall_clock(f: &FileCtx, out: &mut Vec<RawFinding>) {
+    if matches!(f.kind, FileKind::Test | FileKind::Bench | FileKind::Example)
+        || allowed(&f.module, WALL_CLOCK_ALLOW)
+    {
+        return;
+    }
+    flag_patterns(
+        f,
+        "wall-clock",
+        WALL_CLOCK_PATS,
+        "simulated results must come from the event clock; host timing belongs in \
+         runtime::executor / report::bench, or at a single per-run timer site with a waiver",
+        out,
+    );
+}
+
+// ---------------------------------------------------------------------
+// map-iteration
+// ---------------------------------------------------------------------
+
+const MAP_ITER_SCOPE: &[&str] = &["coordinator*", "traffic::slo", "telemetry*", "mapping::service"];
+const MAP_ITER_ALLOW: &[&str] = &["mapping::service"];
+const MAP_ITER_METHODS: &[&str] =
+    &["iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "retain"];
+
+/// Collect local names declared (or bound) with a `HashMap`/`HashSet`
+/// type, by walking back from each type mention to `name:` / `name =`.
+/// Purely name-based — the documented approximation detcheck makes.
+fn map_names(toks: &[Tok]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for i in 0..toks.len() {
+        if toks[i].text != "HashMap" && toks[i].text != "HashSet" {
+            continue;
+        }
+        // Walk back over a `std::collections::` qualifier ...
+        let mut k = i;
+        while k >= 2 && toks[k - 1].text == "::" && is_ident(&toks[k - 2].text) {
+            k -= 2;
+        }
+        // ... and over reference/mutability sigils.
+        while k >= 1 && (toks[k - 1].text == "&" || toks[k - 1].text == "mut") {
+            k -= 1;
+        }
+        if k >= 2 && toks[k - 1].text == ":" && is_ident(&toks[k - 2].text) {
+            names.insert(toks[k - 2].text.clone());
+        } else if k >= 2 && toks[k - 1].text == "=" && is_ident(&toks[k - 2].text) {
+            names.insert(toks[k - 2].text.clone());
+        }
+    }
+    names
+}
+
+fn map_iteration(f: &FileCtx, out: &mut Vec<RawFinding>) {
+    if !allowed(&f.module, MAP_ITER_SCOPE) || allowed(&f.module, MAP_ITER_ALLOW) {
+        return;
+    }
+    let names = map_names(&f.lex.toks);
+    if names.is_empty() {
+        return;
+    }
+    let hint = "HashMap/HashSet order is nondeterministic and leaks into results: look up \
+                by key, or collect and sort the keys before draining";
+    flag_map_iteration_in(f, &names, hint, 0, f.lex.toks.len(), out);
+}
+
+fn flag_map_iteration_in(
+    f: &FileCtx,
+    names: &BTreeSet<String>,
+    hint: &str,
+    start: usize,
+    end: usize,
+    out: &mut Vec<RawFinding>,
+) {
+    let toks = &f.lex.toks;
+    let end = end.min(toks.len());
+    for i in start..end {
+        if f.lex.test_mask[i] {
+            continue;
+        }
+        // `map.iter()` and friends.
+        if toks[i].text == "."
+            && i + 2 < end
+            && MAP_ITER_METHODS.contains(&toks[i + 1].text.as_str())
+            && toks[i + 2].text == "("
+            && i > 0
+            && names.contains(&toks[i - 1].text)
+        {
+            out.push(RawFinding {
+                rule: "map-iteration",
+                file: f.path.clone(),
+                line: toks[i].line,
+                snippet: f.lex.snippet(toks[i].line),
+                hint: hint.to_string(),
+            });
+        }
+        // `for pat in [&][mut] map { ... }`.
+        if toks[i].text == "in" {
+            let mut j = i + 1;
+            while j < end && (toks[j].text == "&" || toks[j].text == "mut") {
+                j += 1;
+            }
+            if j < end
+                && names.contains(&toks[j].text)
+                && toks.get(j + 1).map(|t| t.text.as_str()) != Some(".")
+                && preceded_by_for(toks, i)
+            {
+                out.push(RawFinding {
+                    rule: "map-iteration",
+                    file: f.path.clone(),
+                    line: toks[i].line,
+                    snippet: f.lex.snippet(toks[i].line),
+                    hint: hint.to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Is the `in` at `idx` part of a `for ... in` loop?  Scan back to the
+/// nearest statement boundary looking for the `for` keyword.
+fn preceded_by_for(toks: &[Tok], idx: usize) -> bool {
+    let mut k = idx;
+    let mut steps = 0;
+    while k > 0 && steps < 64 {
+        k -= 1;
+        steps += 1;
+        match toks[k].text.as_str() {
+            "for" => return true,
+            ";" | "{" | "}" => return false,
+            _ => {}
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// thread-spawn
+// ---------------------------------------------------------------------
+
+const THREAD_ALLOW: &[&str] = &["runtime::executor", "mapping::service"];
+const THREAD_PATS: &[&[&str]] =
+    &[&["thread", "::", "spawn"], &["thread", "::", "scope"], &["thread", "::", "Builder"]];
+
+fn thread_spawn(f: &FileCtx, out: &mut Vec<RawFinding>) {
+    if matches!(f.kind, FileKind::Test | FileKind::Bench | FileKind::Example)
+        || allowed(&f.module, THREAD_ALLOW)
+    {
+        return;
+    }
+    flag_patterns(
+        f,
+        "thread-spawn",
+        THREAD_PATS,
+        "all parallelism funnels through runtime::executor's deterministic-merge pool (or \
+         mapping::service's audited scoped section)",
+        out,
+    );
+}
+
+// ---------------------------------------------------------------------
+// float-reduce
+// ---------------------------------------------------------------------
+
+const FLOAT_SCOPE: &[&str] = &["coordinator*", "traffic::slo"];
+const FLOAT_PATS: &[&[&str]] =
+    &[&["sum", "::", "<", "f64", ">"], &["product", "::", "<", "f64", ">"]];
+
+fn float_reduce(f: &FileCtx, out: &mut Vec<RawFinding>) {
+    if !allowed(&f.module, FLOAT_SCOPE) {
+        return;
+    }
+    flag_patterns(
+        f,
+        "float-reduce",
+        FLOAT_PATS,
+        "float addition is non-associative: reduce with an explicit sequential fold \
+         (`.fold(0.0, |acc, x| acc + x)`) so the order is pinned in the source",
+        out,
+    );
+}
+
+// ---------------------------------------------------------------------
+// panic-hygiene
+// ---------------------------------------------------------------------
+
+const PANIC_ALLOW: &[&str] = &["runtime::executor", "mapping::service", "experiments*"];
+
+fn panic_hygiene(f: &FileCtx, out: &mut Vec<RawFinding>) {
+    if f.kind != FileKind::Lib || allowed(&f.module, PANIC_ALLOW) {
+        return;
+    }
+    let toks = &f.lex.toks;
+    let hint = "library code returns errors instead of panicking: propagate with `?` / \
+                `anyhow::bail!`, or restructure so the invariant needs no panicking call";
+    for i in 0..toks.len() {
+        if f.lex.test_mask[i] {
+            continue;
+        }
+        // `.unwrap()` / `.expect(...)`.
+        let method_panic = toks[i].text == "."
+            && i + 2 < toks.len()
+            && (toks[i + 1].text == "unwrap" || toks[i + 1].text == "expect")
+            && toks[i + 2].text == "(";
+        // `panic!` / `todo!` / `unimplemented!` (`unreachable!` and the
+        // assert family are allowed — see docs/analysis.md).
+        let macro_panic = matches!(toks[i].text.as_str(), "panic" | "todo" | "unimplemented")
+            && toks.get(i + 1).map(|t| t.text.as_str()) == Some("!");
+        if method_panic || macro_panic {
+            out.push(RawFinding {
+                rule: "panic-hygiene",
+                file: f.path.clone(),
+                line: toks[i].line,
+                snippet: f.lex.snippet(toks[i].line),
+                hint: hint.to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// recorder-purity
+// ---------------------------------------------------------------------
+
+fn recorder_purity(f: &FileCtx, out: &mut Vec<RawFinding>) {
+    let hint = "telemetry::Recorder impls and Scheduler::preempt_horizon are documented pure \
+                observers: no clocks, no threads, no order-dependent iteration or reduction";
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    for im in &f.lex.impls {
+        if trait_of_impl(&im.header).as_deref() == Some("Recorder") {
+            spans.push((im.start, im.end));
+        }
+    }
+    for fnsp in &f.lex.fns {
+        if fnsp.name == "preempt_horizon" {
+            spans.push((fnsp.start, fnsp.end));
+        }
+    }
+    if spans.is_empty() {
+        return;
+    }
+    let names = map_names(&f.lex.toks);
+    for (start, end) in spans {
+        if f.lex.test_mask.get(start).copied().unwrap_or(false) {
+            continue; // test doubles get a pass
+        }
+        flag_patterns_in(f, "recorder-purity", WALL_CLOCK_PATS, hint, start, end, out);
+        flag_patterns_in(f, "recorder-purity", THREAD_PATS, hint, start, end, out);
+        flag_patterns_in(f, "recorder-purity", FLOAT_PATS, hint, start, end, out);
+        if !names.is_empty() {
+            flag_map_iteration_in(f, &names, hint, start, end, out);
+        }
+    }
+}
+
+/// The trait name of an `impl Trait for Type` header (the identifier
+/// just before `for`, skipping a trailing generic list); `None` for
+/// inherent impls.
+fn trait_of_impl(header: &[String]) -> Option<String> {
+    let p = header.iter().position(|t| t == "for")?;
+    let mut depth = 0i32;
+    let mut k = p;
+    while k > 0 {
+        k -= 1;
+        match header[k].as_str() {
+            ">" => depth += 1,
+            "<" => depth -= 1,
+            t if depth == 0 && is_ident(t) => return Some(t.to_string()),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// The self type of an `impl` header: after `for` when present,
+/// otherwise the first identifier past the leading generic list.
+fn self_type_of_impl(header: &[String]) -> Option<String> {
+    if let Some(p) = header.iter().position(|t| t == "for") {
+        return header[p + 1..].iter().find(|t| is_ident(t)).cloned();
+    }
+    let mut i = 0;
+    if header.first().map(String::as_str) == Some("<") {
+        let mut depth = 0i32;
+        while i < header.len() {
+            match header[i].as_str() {
+                "<" => depth += 1,
+                ">" => depth -= 1,
+                _ => {}
+            }
+            i += 1;
+            if depth == 0 {
+                break;
+            }
+        }
+    }
+    header[i..].iter().find(|t| is_ident(t)).cloned()
+}
+
+// ---------------------------------------------------------------------
+// deprecated-internal
+// ---------------------------------------------------------------------
+
+fn deprecated_internal(files: &[FileCtx], out: &mut Vec<RawFinding>) {
+    // Phase A: collect `#[deprecated]` associated fns corpus-wide, as
+    // (self type, fn name, defining module).
+    let mut shims: Vec<(String, String, String)> = Vec::new();
+    for f in files {
+        let toks = &f.lex.toks;
+        for i in 0..toks.len() {
+            if toks[i].text != "#"
+                || toks.get(i + 1).map(|t| t.text.as_str()) != Some("[")
+                || toks.get(i + 2).map(|t| t.text.as_str()) != Some("deprecated")
+            {
+                continue;
+            }
+            // Scan forward for the `fn` this attribute decorates.
+            let mut j = i + 3;
+            let mut fn_name = None;
+            while j + 1 < toks.len() {
+                match toks[j].text.as_str() {
+                    "fn" => {
+                        fn_name = Some((toks[j + 1].text.clone(), j));
+                        break;
+                    }
+                    "struct" | "enum" | "mod" | "trait" | "{" | ";" => break,
+                    _ => j += 1,
+                }
+            }
+            let Some((name, at)) = fn_name else { continue };
+            // Innermost enclosing impl gives the self type.
+            let ty = f
+                .lex
+                .impls
+                .iter()
+                .filter(|im| im.start < at && at < im.end)
+                .max_by_key(|im| im.start)
+                .and_then(|im| self_type_of_impl(&im.header));
+            if let Some(ty) = ty {
+                shims.push((ty, name, f.module.clone()));
+            }
+        }
+    }
+    if shims.is_empty() {
+        return;
+    }
+    // Phase B: flag qualified calls outside the defining module.
+    for f in files {
+        for (ty, name, defmod) in &shims {
+            if &f.module == defmod {
+                continue;
+            }
+            let pat: &[&str] = &[ty, "::", name];
+            flag_patterns_in(
+                f,
+                "deprecated-internal",
+                &[pat],
+                "construct through ClusterBuilder; the deprecated constructors exist only as \
+                 compatibility shims",
+                0,
+                f.lex.toks.len(),
+                out,
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// engine-parity
+// ---------------------------------------------------------------------
+
+/// Variants the calendar engine may emit without an oracle counterpart:
+/// the oracle prices per iteration and never materializes a bucket edge.
+const CALENDAR_ONLY: &[&str] = &["BucketEdge"];
+
+#[derive(Default)]
+struct FnInfo {
+    mentions: BTreeSet<String>,
+    calls: BTreeSet<String>,
+}
+
+fn engine_parity(files: &[FileCtx], out: &mut Vec<RawFinding>) {
+    // 1. The EventKind enum and its variants.
+    let mut variants: Vec<(String, String, u32)> = Vec::new();
+    'files: for f in files {
+        let toks = &f.lex.toks;
+        for i in 0..toks.len().saturating_sub(1) {
+            if toks[i].text != "enum" || toks[i + 1].text != "EventKind" {
+                continue;
+            }
+            let mut open = i + 2;
+            while open < toks.len() && toks[open].text != "{" {
+                open += 1;
+            }
+            if open >= toks.len() {
+                continue;
+            }
+            let end = brace_end(toks, open);
+            let mut depth = 1i32;
+            let mut prev = "{".to_string();
+            for tok in toks.iter().take(end.saturating_sub(1)).skip(open + 1) {
+                let t = tok.text.as_str();
+                if t == "{" {
+                    depth += 1;
+                } else if t == "}" {
+                    depth -= 1;
+                }
+                if depth == 1 {
+                    if is_upper_ident(t) && matches!(prev.as_str(), "{" | "," | "]") {
+                        variants.push((t.to_string(), f.path.clone(), tok.line));
+                    }
+                    prev = t.to_string();
+                }
+            }
+            break 'files;
+        }
+    }
+    if variants.is_empty() {
+        return;
+    }
+    let variant_set: BTreeSet<&str> = variants.iter().map(|(v, _, _)| v.as_str()).collect();
+
+    // 2. The engine file: the one defining the calendar round.
+    let engine = files.iter().find(|f| {
+        f.lex.fns.iter().any(|s| s.name == "round_calendar" || s.name == "run_calendar")
+    });
+    let Some(engine) = engine else { return };
+
+    // 3. Per-fn emissions and local calls (test fns excluded).
+    let mut fns: BTreeMap<String, FnInfo> = BTreeMap::new();
+    for span in &engine.lex.fns {
+        if engine.lex.test_mask.get(span.start).copied().unwrap_or(false) {
+            continue;
+        }
+        let info = fns.entry(span.name.clone()).or_default();
+        let toks = &engine.lex.toks;
+        let end = span.end.min(toks.len());
+        for k in span.start..end {
+            if toks[k].text == "EventKind"
+                && k + 2 < end
+                && toks[k + 1].text == "::"
+                && variant_set.contains(toks[k + 2].text.as_str())
+            {
+                info.mentions.insert(toks[k + 2].text.clone());
+            }
+            if is_ident(&toks[k].text)
+                && toks.get(k + 1).map(|t| t.text.as_str()) == Some("(")
+            {
+                info.calls.insert(toks[k].text.clone());
+            }
+        }
+    }
+
+    // 4. Transitive emissions from each engine root.
+    let root = |a: &str, b: &str| if fns.contains_key(a) { a.to_string() } else { b.to_string() };
+    let reach_cal = reach(&fns, &root("round_calendar", "run_calendar"));
+    let reach_ora = reach(&fns, &root("round_oracle", "run_oracle"));
+    let engine_mentions: BTreeSet<String> =
+        fns.values().flat_map(|i| i.mentions.iter().cloned()).collect();
+
+    // 5. Variants emitted by the dispatch layer (other coordinator files).
+    let mut other_mentions: BTreeSet<String> = BTreeSet::new();
+    for f in files {
+        if f.path == engine.path || !f.module.starts_with("coordinator") {
+            continue;
+        }
+        let toks = &f.lex.toks;
+        for k in 0..toks.len().saturating_sub(2) {
+            if f.lex.test_mask[k] {
+                continue;
+            }
+            if toks[k].text == "EventKind"
+                && toks[k + 1].text == "::"
+                && variant_set.contains(toks[k + 2].text.as_str())
+            {
+                other_mentions.insert(toks[k + 2].text.clone());
+            }
+        }
+    }
+
+    // 6. Verdicts, anchored at each variant's declaration.
+    let hint = "every EventKind must be emitted by both engine paths (round_calendar and \
+                round_oracle) or by the dispatch layer; BucketEdge is the documented \
+                calendar-only exception — see docs/analysis.md";
+    for (v, file, line) in &variants {
+        let snippet = format!("EventKind::{v}");
+        let push = |out: &mut Vec<RawFinding>, what: String| {
+            out.push(RawFinding {
+                rule: "engine-parity",
+                file: file.clone(),
+                line: *line,
+                snippet: snippet.clone(),
+                hint: format!("{what}; {hint}"),
+            });
+        };
+        if engine_mentions.contains(v) {
+            if CALENDAR_ONLY.contains(&v.as_str()) {
+                if !reach_cal.contains(v) {
+                    push(out, format!("calendar-only variant {v} is not reachable from the calendar engine"));
+                }
+            } else {
+                match (reach_cal.contains(v), reach_ora.contains(v)) {
+                    (true, true) => {}
+                    (true, false) => push(out, format!("{v} reaches only the calendar engine; the oracle never emits it")),
+                    (false, true) => push(out, format!("{v} reaches only the oracle engine; the calendar never emits it")),
+                    (false, false) => push(out, format!("{v} is emitted outside both engine round paths")),
+                }
+            }
+        } else if !other_mentions.contains(v) {
+            push(out, format!("{v} has no emission site in coordinator code"));
+        }
+    }
+}
+
+/// Variants transitively mentioned from `root` through same-file calls.
+fn reach(fns: &BTreeMap<String, FnInfo>, root: &str) -> BTreeSet<String> {
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut stack = vec![root.to_string()];
+    let mut vars = BTreeSet::new();
+    while let Some(name) = stack.pop() {
+        if !seen.insert(name.clone()) {
+            continue;
+        }
+        if let Some(info) = fns.get(&name) {
+            vars.extend(info.mentions.iter().cloned());
+            for c in &info.calls {
+                if !seen.contains(c) {
+                    stack.push(c.clone());
+                }
+            }
+        }
+    }
+    vars
+}
+
+/// Token index one past the `}` matching the `{` at `open`.
+fn brace_end(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return k + 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len()
+}

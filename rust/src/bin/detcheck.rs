@@ -1,0 +1,33 @@
+//! `detcheck` — the determinism & purity static-analysis gate.
+//!
+//! Scans Rust sources for patterns that break the repo's bit-identity
+//! contracts (wall-clock reads in simulated paths, `HashMap` iteration
+//! order leaking into results, stray threads, ad-hoc float reductions,
+//! panicking library code, engine-parity gaps) and exits nonzero on any
+//! unwaived finding.  See `docs/analysis.md` for the rule catalog and
+//! waiver etiquette.
+//!
+//! Usage (from `rust/`):
+//!
+//! ```text
+//! cargo run --bin detcheck                  # scan src/ and tests/
+//! cargo run --bin detcheck -- src tests --json results/detcheck.json
+//! ```
+
+use racam::analysis;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match analysis::run_cli(&args) {
+        Ok(report) => {
+            print!("{}", report.render());
+            if report.unwaived_count() > 0 {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -42,6 +42,7 @@
 //! | [`traffic`] | open-loop workload generator (seeded PRNG, Poisson/bursty arrivals, trace replay) + SLO metrics (TTFT/TPOT/e2e tails, goodput, shed/preemption counts, utilization) |
 //! | [`experiments`] | one entry point per paper table/figure |
 
+pub mod analysis;
 pub mod area;
 pub mod baselines;
 pub mod config;

@@ -34,6 +34,7 @@ fn run(args: Vec<String>) -> Result<()> {
         Some("config") => cmd_config(it.collect()),
         Some("experiments") => cmd_experiments(it.collect()),
         Some("serve") => cmd_serve(it.collect()),
+        Some("detcheck") => cmd_detcheck(it.collect()),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -55,6 +56,7 @@ fn print_help() {
          \x20 racam area\n\
          \x20 racam config [--dump FILE | --load FILE]\n\
          \x20 racam experiments <fig1|fig9|...|ext-trace|traffic|prefill|disagg|scale|all>\n\
+         \x20 racam detcheck [DIR ...] [--json FILE]\n\
          \x20 racam serve [--requests N] [--tokens N] [--batch N] [--shards N] [--synthetic]\n\
          \x20             [--mapping-cache FILE] [--warm-store FILE]\n\
          \x20             [--sched fcfs|bucket|edf] [--rate R]\n\
@@ -91,6 +93,12 @@ fn print_help() {
          --preempt/--serving. Prefill groups hand finished prompts to decode\n\
          groups over the simulated KV link (see docs/serving.md).\n\
          \n\
+         detcheck: static determinism & purity gate (docs/analysis.md) — scans\n\
+         src/ and tests/ (or the given dirs) for wall-clock reads, HashMap\n\
+         iteration, stray threads, ad-hoc f64 reductions, panicking library\n\
+         code, deprecated-constructor calls, and engine-parity gaps; fails on\n\
+         any unwaived finding; --json writes the machine-readable report.\n\
+         \n\
          telemetry: --trace-out writes a Chrome-trace/Perfetto JSON of the run\n\
          (tracks: one per shard + the KV link on the simulated-ns timeline,\n\
          plus host-executor workers on wall ns); --metrics prints the\n\
@@ -102,6 +110,19 @@ fn print_help() {
 
 fn flag_value(args: &[String], flag: &str) -> Option<String> {
     args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// `racam detcheck [DIR ...] [--json FILE]` — the same pass as the
+/// standalone `detcheck` bin, registered here for discoverability.
+fn cmd_detcheck(args: Vec<String>) -> Result<()> {
+    let report = racam::analysis::run_cli(&args)?;
+    print!("{}", report.render());
+    anyhow::ensure!(
+        report.unwaived_count() == 0,
+        "detcheck: {} unwaived finding(s)",
+        report.unwaived_count()
+    );
+    Ok(())
 }
 
 /// Aggregate (hits, misses, warm_loads) across shard services, counting

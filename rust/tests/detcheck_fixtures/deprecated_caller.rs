@@ -1,0 +1,9 @@
+// Fixture: calling a deprecated constructor from another module.
+pub fn make() {
+    #[allow(deprecated)]
+    let _w = crate::widgets::Widget::legacy(2);
+}
+
+pub fn make_fresh() {
+    let _w = crate::widgets::Widget::fresh();
+}

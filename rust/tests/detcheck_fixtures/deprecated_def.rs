@@ -1,0 +1,20 @@
+// Fixture: a deprecated associated constructor and its builder
+// replacement.  Calls inside the defining module are exempt.
+pub struct Widget;
+
+impl Widget {
+    #[deprecated(note = "construct through WidgetBuilder")]
+    pub fn legacy(n: u32) -> Widget {
+        let _ = n;
+        Widget
+    }
+
+    pub fn fresh() -> Widget {
+        Widget
+    }
+}
+
+pub fn local_caller() -> Widget {
+    #[allow(deprecated)]
+    Widget::legacy(1)
+}

@@ -1,0 +1,7 @@
+// Fixture: the dispatch layer emitting a variant both engines share
+// through a common downstream path.
+use super::engine::{emit, EventKind};
+
+pub fn dispatch_handoffs() {
+    emit(EventKind::HandoffDispatch);
+}

@@ -1,0 +1,17 @@
+// Fixture: DecodeStretch's oracle-side emission site was removed, so
+// the variant now reaches only the calendar engine.
+pub enum EventKind {
+    Admit,
+    DecodeStretch,
+}
+
+pub fn emit(_k: EventKind) {}
+
+pub fn round_calendar() {
+    emit(EventKind::Admit);
+    emit(EventKind::DecodeStretch);
+}
+
+pub fn round_oracle() {
+    emit(EventKind::Admit);
+}

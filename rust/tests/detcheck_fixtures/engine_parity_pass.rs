@@ -1,0 +1,27 @@
+// Fixture: a miniature dual engine where every variant reaches both
+// round paths — directly or through a helper — except the documented
+// calendar-only BucketEdge, and HandoffDispatch which is emitted by
+// the dispatch layer (see engine_parity_dispatch.rs).
+pub enum EventKind {
+    Admit,
+    DecodeStretch,
+    BucketEdge,
+    HandoffDispatch,
+}
+
+pub fn emit(_k: EventKind) {}
+
+fn decode_round() {
+    emit(EventKind::DecodeStretch);
+    emit(EventKind::BucketEdge);
+}
+
+pub fn round_calendar() {
+    emit(EventKind::Admit);
+    decode_round();
+}
+
+pub fn round_oracle() {
+    emit(EventKind::Admit);
+    emit(EventKind::DecodeStretch);
+}

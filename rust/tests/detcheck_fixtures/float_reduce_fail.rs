@@ -1,0 +1,5 @@
+// Fixture: unordered float reduction in an SLO aggregation path.
+pub fn mean(xs: &[f64]) -> f64 {
+    let total = xs.iter().copied().sum::<f64>();
+    total / xs.len() as f64
+}

@@ -1,0 +1,5 @@
+// Fixture: the pinned-order version — an explicit sequential fold.
+pub fn mean(xs: &[f64]) -> f64 {
+    let total = xs.iter().copied().fold(0.0, |acc, x| acc + x);
+    total / xs.len() as f64
+}

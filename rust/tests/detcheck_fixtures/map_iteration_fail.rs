@@ -1,0 +1,14 @@
+// Fixture: iterating a HashMap in result-facing coordinator code.
+use std::collections::HashMap;
+
+pub fn tally(xs: &[(u64, u64)]) -> u64 {
+    let mut counts: HashMap<u64, u64> = HashMap::new();
+    for (k, v) in xs {
+        *counts.entry(*k).or_insert(0) += v;
+    }
+    let mut total = 0;
+    for (_k, v) in &counts {
+        total += v;
+    }
+    total
+}

@@ -1,0 +1,14 @@
+// Fixture: the deterministic version — a BTreeMap iterates in key order.
+use std::collections::BTreeMap;
+
+pub fn tally(xs: &[(u64, u64)]) -> u64 {
+    let mut counts: BTreeMap<u64, u64> = BTreeMap::new();
+    for (k, v) in xs {
+        *counts.entry(*k).or_insert(0) += v;
+    }
+    let mut total = 0;
+    for (_k, v) in &counts {
+        total += v;
+    }
+    total
+}

@@ -1,0 +1,8 @@
+// Fixture: panicking calls in library code.
+pub fn parse(s: &str) -> u64 {
+    let v: u64 = s.parse().unwrap();
+    if v == 0 {
+        panic!("zero is not a valid id");
+    }
+    v
+}

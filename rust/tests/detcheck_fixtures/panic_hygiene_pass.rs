@@ -1,0 +1,19 @@
+// Fixture: the allowed forms — asserts, unreachable!, and test-only
+// unwraps are all fine under panic-hygiene.
+pub fn parity(v: u32) -> u32 {
+    assert!(v < 1_000_000, "id out of range");
+    match v % 2 {
+        0 => 0,
+        1 => 1,
+        _ => unreachable!("v % 2 is always 0 or 1"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_are_fine_in_tests() {
+        let v: u64 = "7".parse().unwrap();
+        assert_eq!(v, 7);
+    }
+}

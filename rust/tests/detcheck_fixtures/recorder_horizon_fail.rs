@@ -1,0 +1,12 @@
+// Fixture: a preempt_horizon hook with an unordered float reduction.
+// The module is outside the float-reduce scope, so the finding comes
+// from recorder-purity alone.
+pub struct Lag {
+    pub samples: Vec<f64>,
+}
+
+impl Lag {
+    pub fn preempt_horizon(&self) -> f64 {
+        self.samples.iter().copied().sum::<f64>()
+    }
+}

@@ -1,0 +1,18 @@
+// Fixture: a Recorder impl that reads the host clock.  The module is
+// exempt from wall-clock (experiments*), so the finding below comes
+// from recorder-purity alone.
+use std::time::Instant;
+
+pub trait Recorder {
+    fn begin(&mut self);
+}
+
+pub struct WallRecorder {
+    pub t0: Option<Instant>,
+}
+
+impl Recorder for WallRecorder {
+    fn begin(&mut self) {
+        self.t0 = Some(Instant::now());
+    }
+}

@@ -1,0 +1,14 @@
+// Fixture: a pure Recorder — counters only, no clocks or reductions.
+pub trait Recorder {
+    fn begin(&mut self);
+}
+
+pub struct CountRecorder {
+    pub events: u64,
+}
+
+impl Recorder for CountRecorder {
+    fn begin(&mut self) {
+        self.events += 1;
+    }
+}

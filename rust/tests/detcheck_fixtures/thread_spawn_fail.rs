@@ -1,0 +1,7 @@
+// Fixture: ad-hoc thread outside the deterministic executor.
+use std::thread;
+
+pub fn fan_out() {
+    let handle = thread::spawn(|| {});
+    handle.join().ok();
+}

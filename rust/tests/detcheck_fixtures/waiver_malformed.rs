@@ -1,0 +1,8 @@
+// Fixture: a waiver without a `-- reason` is malformed and never waives.
+use std::time::Instant;
+
+pub fn stamp() -> u64 {
+    // detcheck: allow(wall-clock)
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos() as u64
+}

@@ -1,0 +1,5 @@
+// Fixture: a waiver naming a rule that does not exist.
+pub fn clean() -> u64 {
+    // detcheck: allow(flux-capacitor) -- fixture: no such rule
+    42
+}

@@ -1,0 +1,5 @@
+// Fixture: a waiver with nothing to waive is itself a finding.
+pub fn clean() -> u64 {
+    // detcheck: allow(wall-clock) -- fixture: nothing here needs this
+    42
+}

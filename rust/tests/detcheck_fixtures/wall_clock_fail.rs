@@ -1,0 +1,7 @@
+// Fixture: host-clock read in simulation-facing library code.
+use std::time::Instant;
+
+pub fn stamp() -> u64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos() as u64
+}

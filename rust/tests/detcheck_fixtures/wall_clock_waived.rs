@@ -1,0 +1,8 @@
+// Fixture: the same clock read, carrying a reasoned inline waiver.
+use std::time::Instant;
+
+pub fn stamp() -> u64 {
+    // detcheck: allow(wall-clock) -- fixture: the single per-run wall timer
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos() as u64
+}
