@@ -1,0 +1,442 @@
+//! Declarative fault schedules for the serving cluster (`docs/robustness.md`).
+//!
+//! A [`FaultSpec`] is a *seeded schedule of simulated-time events*: every
+//! fault fires at a declared nanosecond on the simulated clock, never from
+//! wall-clock randomness, so an identical spec + seed reproduces the exact
+//! same degraded run bit-for-bit across engines and worker-pool sizes.
+//! The taxonomy mirrors the failure modes of a channel-partitioned,
+//! disaggregated deployment:
+//!
+//! * [`FaultEvent::ShardCrash`] — a shard dies permanently; its in-flight
+//!   requests are evacuated and re-queued by the coordinator.
+//! * [`FaultEvent::Brownout`] — a shard's compute slows by a factor over a
+//!   window (thermal throttling, refresh storms).
+//! * [`FaultEvent::LinkOutage`] / [`FaultEvent::LinkDegrade`] — the shared
+//!   prefill→decode KV link drops or loses bandwidth over a window.
+//! * [`FaultEvent::ChannelLoss`] — a shard group permanently loses DRAM
+//!   channels; kernels are re-priced through the mapping service at the
+//!   reduced channel count.
+//!
+//! [`RecoveryPolicy`] tunes how the coordinator reacts: the per-request
+//! retry budget before a request is counted `failed`, the deterministic
+//! exponential backoff for interrupted KV transfers, and the surviving-
+//! capacity ceiling below which admission is shed outright.
+
+use super::json::{self, Value};
+
+/// Default per-request retry budget after a crash evacuation.
+pub const DEFAULT_RETRY_BUDGET: u32 = 2;
+/// Default base of the KV re-transfer exponential backoff (1 ms).
+pub const DEFAULT_BACKOFF_BASE_NS: f64 = 1e6;
+/// Default cap of the KV re-transfer exponential backoff (16 ms).
+pub const DEFAULT_BACKOFF_CAP_NS: f64 = 16e6;
+
+/// One scheduled fault on the simulated clock.  Times are f64 nanoseconds
+/// (the serving clock's unit); windows are half-open `[start_ns, end_ns)`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// Shard `shard` dies permanently at `at_ns`: everything running,
+    /// queued, or scheduled to arrive there is evacuated to the
+    /// coordinator for re-dispatch.
+    ShardCrash { shard: usize, at_ns: f64 },
+    /// Shard `shard` runs `slowdown`× slower (≥ 1) while the simulated
+    /// clock is inside the window.
+    Brownout { shard: usize, start_ns: f64, end_ns: f64, slowdown: f64 },
+    /// The KV link carries nothing inside the window; interrupted
+    /// transfers re-send with capped exponential backoff.
+    LinkOutage { start_ns: f64, end_ns: f64 },
+    /// The KV link runs at `factor` (0 < factor ≤ 1) of its declared
+    /// bandwidth inside the window.
+    LinkDegrade { start_ns: f64, end_ns: f64, factor: f64 },
+    /// Shard group `group` permanently loses `channels_lost` DRAM
+    /// channels at `at_ns`; kernels re-price at the reduced count.
+    ChannelLoss { group: String, at_ns: f64, channels_lost: u32 },
+}
+
+impl FaultEvent {
+    /// Stable lowercase discriminator (the JSON `kind` field).
+    pub fn kind_label(&self) -> &'static str {
+        match self {
+            FaultEvent::ShardCrash { .. } => "shard_crash",
+            FaultEvent::Brownout { .. } => "brownout",
+            FaultEvent::LinkOutage { .. } => "link_outage",
+            FaultEvent::LinkDegrade { .. } => "link_degrade",
+            FaultEvent::ChannelLoss { .. } => "channel_loss",
+        }
+    }
+
+    /// The simulated time at which the fault first takes effect.
+    pub fn onset_ns(&self) -> f64 {
+        match *self {
+            FaultEvent::ShardCrash { at_ns, .. } => at_ns,
+            FaultEvent::Brownout { start_ns, .. } => start_ns,
+            FaultEvent::LinkOutage { start_ns, .. } => start_ns,
+            FaultEvent::LinkDegrade { start_ns, .. } => start_ns,
+            FaultEvent::ChannelLoss { at_ns, .. } => at_ns,
+        }
+    }
+}
+
+/// How the coordinator reacts to faults (see `docs/robustness.md`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Re-dispatch attempts per evacuated request before it is counted
+    /// `failed` (0 ⇒ every evacuated request fails immediately).
+    pub retry_budget: u32,
+    /// Base of the deterministic exponential backoff charged in simulated
+    /// time when a KV transfer is interrupted by a link outage: attempt
+    /// *k* (1-based) waits `min(base · 2^(k-1), cap)` past the outage end.
+    pub backoff_base_ns: f64,
+    /// Backoff cap (see [`RecoveryPolicy::backoff_base_ns`]).
+    pub backoff_cap_ns: f64,
+    /// Degradation controller: when the fraction of fresh-prompt-eligible
+    /// shards still alive drops *below* this ceiling, evacuated requests
+    /// are shed at re-dispatch instead of retried (0.0 disables shedding).
+    pub utilization_ceiling: f64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            retry_budget: DEFAULT_RETRY_BUDGET,
+            backoff_base_ns: DEFAULT_BACKOFF_BASE_NS,
+            backoff_cap_ns: DEFAULT_BACKOFF_CAP_NS,
+            utilization_ceiling: 0.0,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    /// The backoff charged after interrupted-transfer attempt `attempt`
+    /// (1-based): `min(base · 2^(attempt-1), cap)`.
+    pub fn backoff_ns(&self, attempt: u32) -> f64 {
+        let exp = attempt.saturating_sub(1).min(63);
+        (self.backoff_base_ns * (1u64 << exp) as f64).min(self.backoff_cap_ns)
+    }
+}
+
+/// A complete fault schedule + recovery policy, loadable from JSON
+/// (`racam serve --faults FAULTS.json`).  The default spec is empty and
+/// reproduces a fault-free run bit-for-bit.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Schedule seed: not consumed by injection itself (every event is
+    /// explicit), but stamped into reports/benches so synthesized
+    /// schedules (e.g. `exp faults`) are reproducible from their seed.
+    pub seed: u64,
+    /// The scheduled faults, in any order (injection sorts internally).
+    pub events: Vec<FaultEvent>,
+    /// How the coordinator recovers.
+    pub recovery: RecoveryPolicy,
+}
+
+impl FaultSpec {
+    /// True when the schedule injects nothing (the fault-free identity).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Validate the schedule; errors list every problem found.
+    pub fn validate(&self) -> crate::Result<()> {
+        let mut errs: Vec<String> = Vec::new();
+        let mut crashed: Vec<usize> = Vec::new();
+        let mut lost_groups: Vec<&str> = Vec::new();
+        for (i, ev) in self.events.iter().enumerate() {
+            let window = |errs: &mut Vec<String>, start: f64, end: f64| {
+                if !(start >= 0.0 && end.is_finite() && start < end) {
+                    errs.push(format!(
+                        "event {i} ({}): window [{start}, {end}) must satisfy 0 <= start < end",
+                        ev.kind_label()
+                    ));
+                }
+            };
+            match *ev {
+                FaultEvent::ShardCrash { shard, at_ns } => {
+                    if !(at_ns >= 0.0 && at_ns.is_finite()) {
+                        errs.push(format!("event {i} (shard_crash): at_ns {at_ns} must be finite and >= 0"));
+                    }
+                    if crashed.contains(&shard) {
+                        errs.push(format!("event {i}: shard {shard} crashes more than once"));
+                    }
+                    crashed.push(shard);
+                }
+                FaultEvent::Brownout { start_ns, end_ns, slowdown, .. } => {
+                    window(&mut errs, start_ns, end_ns);
+                    if !(slowdown >= 1.0 && slowdown.is_finite()) {
+                        errs.push(format!("event {i} (brownout): slowdown {slowdown} must be >= 1"));
+                    }
+                }
+                FaultEvent::LinkOutage { start_ns, end_ns } => window(&mut errs, start_ns, end_ns),
+                FaultEvent::LinkDegrade { start_ns, end_ns, factor } => {
+                    window(&mut errs, start_ns, end_ns);
+                    if !(factor > 0.0 && factor <= 1.0) {
+                        errs.push(format!("event {i} (link_degrade): factor {factor} must be in (0, 1]"));
+                    }
+                }
+                FaultEvent::ChannelLoss { ref group, at_ns, channels_lost } => {
+                    if !(at_ns >= 0.0 && at_ns.is_finite()) {
+                        errs.push(format!("event {i} (channel_loss): at_ns {at_ns} must be finite and >= 0"));
+                    }
+                    if channels_lost == 0 {
+                        errs.push(format!("event {i} (channel_loss): channels_lost must be >= 1"));
+                    }
+                    if lost_groups.contains(&group.as_str()) {
+                        errs.push(format!("event {i}: group '{group}' loses channels more than once"));
+                    }
+                    lost_groups.push(group);
+                }
+            }
+        }
+        let r = &self.recovery;
+        if !(r.backoff_base_ns > 0.0 && r.backoff_base_ns.is_finite()) {
+            errs.push(format!("recovery.backoff_base_ns {} must be finite and > 0", r.backoff_base_ns));
+        }
+        if !(r.backoff_cap_ns >= r.backoff_base_ns && r.backoff_cap_ns.is_finite()) {
+            errs.push(format!(
+                "recovery.backoff_cap_ns {} must be finite and >= backoff_base_ns",
+                r.backoff_cap_ns
+            ));
+        }
+        if !(0.0..=1.0).contains(&r.utilization_ceiling) {
+            errs.push(format!(
+                "recovery.utilization_ceiling {} must be in [0, 1]",
+                r.utilization_ceiling
+            ));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("invalid fault spec:\n  {}", errs.join("\n  "))
+        }
+    }
+
+    pub fn from_json(s: &str) -> crate::Result<Self> {
+        let v = json::parse(s).map_err(anyhow::Error::from)?;
+        let spec = Self::from_value(&v).map_err(anyhow::Error::from)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_value().pretty()
+    }
+
+    pub fn to_value(&self) -> Value {
+        let events: Vec<Value> = self
+            .events
+            .iter()
+            .map(|ev| {
+                let mut fields = vec![("kind", Value::Str(ev.kind_label().into()))];
+                match *ev {
+                    FaultEvent::ShardCrash { shard, at_ns } => {
+                        fields.push(("shard", Value::Num(shard as f64)));
+                        fields.push(("at_ns", Value::Num(at_ns)));
+                    }
+                    FaultEvent::Brownout { shard, start_ns, end_ns, slowdown } => {
+                        fields.push(("shard", Value::Num(shard as f64)));
+                        fields.push(("start_ns", Value::Num(start_ns)));
+                        fields.push(("end_ns", Value::Num(end_ns)));
+                        fields.push(("slowdown", Value::Num(slowdown)));
+                    }
+                    FaultEvent::LinkOutage { start_ns, end_ns } => {
+                        fields.push(("start_ns", Value::Num(start_ns)));
+                        fields.push(("end_ns", Value::Num(end_ns)));
+                    }
+                    FaultEvent::LinkDegrade { start_ns, end_ns, factor } => {
+                        fields.push(("start_ns", Value::Num(start_ns)));
+                        fields.push(("end_ns", Value::Num(end_ns)));
+                        fields.push(("factor", Value::Num(factor)));
+                    }
+                    FaultEvent::ChannelLoss { ref group, at_ns, channels_lost } => {
+                        fields.push(("group", Value::Str(group.clone())));
+                        fields.push(("at_ns", Value::Num(at_ns)));
+                        fields.push(("channels_lost", Value::Num(channels_lost as f64)));
+                    }
+                }
+                Value::obj(fields)
+            })
+            .collect();
+        Value::obj(vec![
+            ("seed", Value::Num(self.seed as f64)),
+            ("events", Value::Arr(events)),
+            (
+                "recovery",
+                Value::obj(vec![
+                    ("retry_budget", Value::Num(self.recovery.retry_budget as f64)),
+                    ("backoff_base_ns", Value::Num(self.recovery.backoff_base_ns)),
+                    ("backoff_cap_ns", Value::Num(self.recovery.backoff_cap_ns)),
+                    ("utilization_ceiling", Value::Num(self.recovery.utilization_ceiling)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self, json::JsonError> {
+        let seed = match v.get("seed") {
+            Ok(s) => s.as_f64()? as u64,
+            Err(_) => 0,
+        };
+        let mut events = Vec::new();
+        if let Ok(Value::Arr(evs)) = v.get("events") {
+            for ev in evs {
+                let kind = ev.get("kind")?.as_str()?;
+                events.push(match kind {
+                    "shard_crash" => FaultEvent::ShardCrash {
+                        shard: ev.get("shard")?.as_u32()? as usize,
+                        at_ns: ev.get("at_ns")?.as_f64()?,
+                    },
+                    "brownout" => FaultEvent::Brownout {
+                        shard: ev.get("shard")?.as_u32()? as usize,
+                        start_ns: ev.get("start_ns")?.as_f64()?,
+                        end_ns: ev.get("end_ns")?.as_f64()?,
+                        slowdown: ev.get("slowdown")?.as_f64()?,
+                    },
+                    "link_outage" => FaultEvent::LinkOutage {
+                        start_ns: ev.get("start_ns")?.as_f64()?,
+                        end_ns: ev.get("end_ns")?.as_f64()?,
+                    },
+                    "link_degrade" => FaultEvent::LinkDegrade {
+                        start_ns: ev.get("start_ns")?.as_f64()?,
+                        end_ns: ev.get("end_ns")?.as_f64()?,
+                        factor: ev.get("factor")?.as_f64()?,
+                    },
+                    "channel_loss" => FaultEvent::ChannelLoss {
+                        group: ev.get("group")?.as_str()?.to_string(),
+                        at_ns: ev.get("at_ns")?.as_f64()?,
+                        channels_lost: ev.get("channels_lost")?.as_u32()?,
+                    },
+                    other => {
+                        return Err(json::JsonError(format!(
+                            "unknown fault kind '{other}' (known: shard_crash, brownout, \
+                             link_outage, link_degrade, channel_loss)"
+                        )))
+                    }
+                });
+            }
+        }
+        let recovery = match v.get("recovery") {
+            Ok(r) => RecoveryPolicy {
+                retry_budget: match r.get("retry_budget") {
+                    Ok(b) => b.as_u32()?,
+                    Err(_) => DEFAULT_RETRY_BUDGET,
+                },
+                backoff_base_ns: match r.get("backoff_base_ns") {
+                    Ok(b) => b.as_f64()?,
+                    Err(_) => DEFAULT_BACKOFF_BASE_NS,
+                },
+                backoff_cap_ns: match r.get("backoff_cap_ns") {
+                    Ok(b) => b.as_f64()?,
+                    Err(_) => DEFAULT_BACKOFF_CAP_NS,
+                },
+                utilization_ceiling: match r.get("utilization_ceiling") {
+                    Ok(c) => c.as_f64()?,
+                    Err(_) => 0.0,
+                },
+            },
+            Err(_) => RecoveryPolicy::default(),
+        };
+        Ok(FaultSpec { seed, events, recovery })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FaultSpec {
+        FaultSpec {
+            seed: 42,
+            events: vec![
+                FaultEvent::ShardCrash { shard: 1, at_ns: 5e6 },
+                FaultEvent::Brownout { shard: 0, start_ns: 1e6, end_ns: 3e6, slowdown: 2.0 },
+                FaultEvent::LinkOutage { start_ns: 2e6, end_ns: 4e6 },
+                FaultEvent::LinkDegrade { start_ns: 6e6, end_ns: 9e6, factor: 0.5 },
+                FaultEvent::ChannelLoss { group: "decode".into(), at_ns: 7e6, channels_lost: 1 },
+            ],
+            recovery: RecoveryPolicy { retry_budget: 3, ..RecoveryPolicy::default() },
+        }
+    }
+
+    #[test]
+    fn default_spec_is_empty_and_valid() {
+        let spec = FaultSpec::default();
+        assert!(spec.is_empty());
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = sample();
+        spec.validate().unwrap();
+        let back = FaultSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let spec = FaultSpec::from_json("{}").unwrap();
+        assert_eq!(spec, FaultSpec::default());
+        let spec = FaultSpec::from_json(r#"{"recovery": {"retry_budget": 5}}"#).unwrap();
+        assert_eq!(spec.recovery.retry_budget, 5);
+        assert_eq!(spec.recovery.backoff_base_ns, DEFAULT_BACKOFF_BASE_NS);
+    }
+
+    #[test]
+    fn validation_rejects_bad_windows_and_factors() {
+        let bad = |ev: FaultEvent| {
+            FaultSpec { events: vec![ev], ..FaultSpec::default() }.validate().is_err()
+        };
+        assert!(bad(FaultEvent::Brownout { shard: 0, start_ns: 3.0, end_ns: 1.0, slowdown: 2.0 }));
+        assert!(bad(FaultEvent::Brownout { shard: 0, start_ns: 0.0, end_ns: 1.0, slowdown: 0.5 }));
+        assert!(bad(FaultEvent::LinkOutage { start_ns: -1.0, end_ns: 1.0 }));
+        assert!(bad(FaultEvent::LinkDegrade { start_ns: 0.0, end_ns: 1.0, factor: 0.0 }));
+        assert!(bad(FaultEvent::LinkDegrade { start_ns: 0.0, end_ns: 1.0, factor: 1.5 }));
+        assert!(bad(FaultEvent::ChannelLoss { group: "g".into(), at_ns: 0.0, channels_lost: 0 }));
+    }
+
+    #[test]
+    fn validation_rejects_duplicate_crashes_and_losses() {
+        let spec = FaultSpec {
+            events: vec![
+                FaultEvent::ShardCrash { shard: 1, at_ns: 1.0 },
+                FaultEvent::ShardCrash { shard: 1, at_ns: 2.0 },
+            ],
+            ..FaultSpec::default()
+        };
+        assert!(spec.validate().is_err());
+        let spec = FaultSpec {
+            events: vec![
+                FaultEvent::ChannelLoss { group: "g".into(), at_ns: 1.0, channels_lost: 1 },
+                FaultEvent::ChannelLoss { group: "g".into(), at_ns: 2.0, channels_lost: 1 },
+            ],
+            ..FaultSpec::default()
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_recovery() {
+        let mut spec = FaultSpec::default();
+        spec.recovery.backoff_cap_ns = 0.0;
+        assert!(spec.validate().is_err());
+        spec = FaultSpec::default();
+        spec.recovery.utilization_ceiling = 1.5;
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let r = RecoveryPolicy::default();
+        assert_eq!(r.backoff_ns(1), DEFAULT_BACKOFF_BASE_NS);
+        assert_eq!(r.backoff_ns(2), 2.0 * DEFAULT_BACKOFF_BASE_NS);
+        assert_eq!(r.backoff_ns(3), 4.0 * DEFAULT_BACKOFF_BASE_NS);
+        assert_eq!(r.backoff_ns(10), DEFAULT_BACKOFF_CAP_NS);
+        // No overflow at absurd attempt counts.
+        assert_eq!(r.backoff_ns(u32::MAX), DEFAULT_BACKOFF_CAP_NS);
+    }
+
+    #[test]
+    fn unknown_kind_errors() {
+        assert!(FaultSpec::from_json(r#"{"events": [{"kind": "meteor"}]}"#).is_err());
+    }
+}

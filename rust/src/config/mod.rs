@@ -7,6 +7,7 @@
 
 mod cluster;
 mod dram;
+mod faults;
 pub mod json;
 mod periph;
 mod presets;
@@ -19,6 +20,10 @@ pub use cluster::{
     ClusterSpec, SchedulerKind, ShardGroup, ShardRole, DEFAULT_KV_LINK_GBPS,
 };
 pub use dram::DramConfig;
+pub use faults::{
+    FaultEvent, FaultSpec, RecoveryPolicy, DEFAULT_BACKOFF_BASE_NS, DEFAULT_BACKOFF_CAP_NS,
+    DEFAULT_RETRY_BUDGET,
+};
 pub use periph::PeriphConfig;
 pub use presets::*;
 pub use serving::{EngineKind, HostExecutor, ServingPolicy, DEFAULT_PREFILL_CHUNK};

@@ -35,11 +35,19 @@
 //! ([`EngineKind`](crate::config::EngineKind)): the default
 //! **event-calendar engine** fast-forwards uniform lockstep-decode
 //! stretches to the next material event (arrival release, membership
-//! change, pricing-bucket edge, preemption horizon) with indexed heaps in
-//! place of per-iteration scans, and the **per-iteration oracle** is the
-//! reference it must match bit-for-bit on every simulated quantity (see
-//! `docs/serving.md`).  Open-loop request streams and SLO-graded
-//! summaries over these reports live in [`crate::traffic`].
+//! change, pricing-bucket edge, preemption horizon, fault onset) with
+//! indexed heaps in place of per-iteration scans, and the
+//! **per-iteration oracle** is the reference it must match bit-for-bit on
+//! every simulated quantity (see `docs/serving.md`).  Open-loop request
+//! streams and SLO-graded summaries over these reports live in
+//! [`crate::traffic`].
+//!
+//! Clusters can also be run under a **deterministic fault schedule**
+//! ([`FaultSpec`](crate::config::FaultSpec), installed with
+//! [`Coordinator::set_faults`]): shard crashes with role-aware failover,
+//! brownouts, KV-link outages/degradation, and per-group DRAM channel
+//! loss, with the recovery accounting reported in [`FaultTally`] — see
+//! `docs/robustness.md`.
 
 mod batcher;
 mod cluster;
@@ -56,5 +64,6 @@ pub use engine::{NullEngine, SyntheticEngine, TokenEngine};
 pub use multi::{Coordinator, Intake};
 pub use scheduler::{EdfScheduler, LengthBucketed, Preemption, Scheduler};
 pub use server::{
-    BatchPoll, Handoff, Request, RequestResult, Server, ServerReport, ShardRun, ShardStats,
+    BatchPoll, FaultTally, Handoff, Request, RequestResult, Server, ServerReport, ShardRun,
+    ShardStats,
 };

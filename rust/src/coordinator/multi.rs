@@ -47,16 +47,20 @@
 use super::cluster::ClusterBuilder;
 use super::engine::TokenEngine;
 use super::scheduler::Scheduler;
-use super::server::{BatchPoll, Handoff, Request, Server, ServerReport, ShardRun};
+use super::server::{
+    BatchPoll, FaultTally, Handoff, Request, RequestResult, Server, ServerReport, ShardRun,
+};
 use super::FcfsBatcher;
 use crate::config::{
-    partition_channels, ClusterSpec, HostExecutor, HwConfig, LlmSpec, ServingPolicy, ShardRole,
+    partition_channels, ClusterSpec, FaultEvent, FaultSpec, HostExecutor, HwConfig, LlmSpec,
+    RecoveryPolicy, ServingPolicy, ShardRole,
 };
 use crate::mapping::MappingService;
 use crate::runtime::executor::{self, Poll, WorkerStats};
 use crate::telemetry::{Event, EventKind, NopRecorder, Recorder};
+use crate::workloads::RacamSystem;
 use crate::Result;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -91,6 +95,26 @@ pub struct Coordinator<E: TokenEngine, S: Scheduler = FcfsBatcher, R: Recorder =
     /// [`Coordinator::run_to_completion`], indexed by pool worker id
     /// (waves of a disaggregated run accumulate per worker).
     worker_stats: Vec<WorkerStats>,
+    /// True once a non-empty [`FaultSpec`] is installed — gates the
+    /// recovery loop so a fault-free run takes today's exact code path.
+    faults_armed: bool,
+    /// Recovery policy of the installed fault spec (retry budget, KV
+    /// re-transfer backoff, degradation-controller ceiling).
+    recovery: RecoveryPolicy,
+    /// Declared KV-link outage windows `(start_ns, end_ns)`.
+    link_outages: Vec<(f64, f64)>,
+    /// Declared KV-link bandwidth-degradation windows
+    /// `(start_ns, end_ns, factor)`, factor in `(0, 1]`.
+    link_degrades: Vec<(f64, f64, f64)>,
+    /// When the shared KV link next frees up, ns.  Persists across the
+    /// waves of one run (recovery re-dispatch reuses the same link) and
+    /// resets at the start of each run.
+    link_free_at_ns: f64,
+    /// Fault/recovery accounting of the current run.
+    tally: FaultTally,
+    /// Prefilled requests stranded by a dead decode tier `(request,
+    /// stranded-at ns)`, awaiting the recovery loop.
+    orphans: Vec<(Request, f64)>,
 }
 
 /// Live submission handle for a running coordinator: requests round-robin
@@ -220,6 +244,13 @@ impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, 
             executor: HostExecutor::default(),
             link_recorder,
             worker_stats: Vec::new(),
+            faults_armed: false,
+            recovery: RecoveryPolicy::default(),
+            link_outages: Vec::new(),
+            link_degrades: Vec::new(),
+            link_free_at_ns: 0.0,
+            tally: FaultTally::default(),
+            orphans: Vec::new(),
         }
     }
 }
@@ -365,6 +396,89 @@ impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, 
         self.roles.iter().any(|r| matches!(r, ShardRole::Decode))
     }
 
+    /// Install a fault schedule (see `docs/robustness.md`): validates the
+    /// spec, arms each shard event on its shard, builds the reduced-channel
+    /// pricing runtimes for channel-loss groups, and keeps the link windows
+    /// and recovery policy for the coordinator's own recovery loop.  An
+    /// empty spec leaves the coordinator on the fault-free path,
+    /// bit-for-bit.
+    pub fn set_faults(&mut self, spec: &FaultSpec) -> Result<()> {
+        spec.validate()?;
+        if spec.is_empty() {
+            return Ok(());
+        }
+        self.faults_armed = true;
+        self.recovery = spec.recovery;
+        for ev in &spec.events {
+            match ev {
+                FaultEvent::ShardCrash { shard, at_ns } => {
+                    self.fault_shard(*shard)?.fault_crash_at(*at_ns);
+                }
+                FaultEvent::Brownout { shard, start_ns, end_ns, slowdown } => {
+                    self.fault_shard(*shard)?.fault_brownout(*start_ns, *end_ns, *slowdown);
+                }
+                FaultEvent::LinkOutage { start_ns, end_ns } => {
+                    self.link_outages.push((*start_ns, *end_ns));
+                }
+                FaultEvent::LinkDegrade { start_ns, end_ns, factor } => {
+                    self.link_degrades.push((*start_ns, *end_ns, *factor));
+                }
+                FaultEvent::ChannelLoss { group, at_ns, channels_lost } => {
+                    self.install_channel_loss(group, *at_ns, *channels_lost)?;
+                }
+            }
+        }
+        self.link_outages.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        Ok(())
+    }
+
+    /// Bounds-checked shard lookup for fault distribution.
+    fn fault_shard(&mut self, shard: usize) -> Result<&mut Server<E, S, R>> {
+        let n = self.shards.len();
+        match self.shards.get_mut(shard) {
+            Some(s) => Ok(s),
+            None => anyhow::bail!("fault spec names shard {shard}, but the cluster has {n} shards"),
+        }
+    }
+
+    /// Arm a channel-loss fault on every shard of `group`: each member's
+    /// hardware loses `lost` DRAM channels at `at_ns` and re-prices its
+    /// kernels through a [`MappingService`] built for the reduced device.
+    /// Members with equal surviving channel counts share one derated
+    /// service (the same aliasing rule as channel partitioning).
+    fn install_channel_loss(&mut self, group: &str, at_ns: f64, lost: u32) -> Result<()> {
+        let members: Vec<usize> = (0..self.shards.len())
+            .filter(|&i| self.shards[i].group_label() == group)
+            .collect();
+        if members.is_empty() {
+            anyhow::bail!("channel-loss fault names unknown shard group '{group}'");
+        }
+        let mut derated: Vec<(u32, MappingService)> = Vec::new();
+        for i in members {
+            let hw = self.services[i].hw().hw.clone();
+            if hw.dram.channels <= lost {
+                anyhow::bail!(
+                    "channel-loss of {lost} channels would leave shard {i} (group '{group}') \
+                     with none of its {} channels",
+                    hw.dram.channels
+                );
+            }
+            let left = hw.dram.channels - lost;
+            let svc = match derated.iter().find(|(c, _)| *c == left) {
+                Some((_, svc)) => svc.clone(),
+                None => {
+                    let mut reduced = hw;
+                    reduced.dram.channels = left;
+                    let svc = MappingService::for_config(&reduced);
+                    derated.push((left, svc.clone()));
+                    svc
+                }
+            };
+            self.shards[i].fault_derate(at_ns, RacamSystem::with_service(svc), left);
+        }
+        Ok(())
+    }
+
     /// Dispatch a request to the least-loaded *fresh-prompt-eligible*
     /// shard (lowest index wins ties), which is deterministic for a given
     /// submission order.  Decode-only shards are skipped: they receive
@@ -455,9 +569,17 @@ impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, 
     /// while the link is busy queues behind the in-flight transfer — the
     /// charged `kv_transfer_ns` is queueing + wire time, and concurrent
     /// finishes cannot extract more than the declared bandwidth.
+    ///
+    /// Under a fault schedule, crashed decode shards drop out of the
+    /// round-robin, outage windows delay or interrupt transfers (see
+    /// [`Coordinator::price_link_transfer`]), and degradation windows
+    /// stretch the wire time.  If no decode shard survives, the prefilled
+    /// requests are stranded as orphans for the recovery loop.
     fn dispatch_handoffs(&mut self) {
         let decode_ids: Vec<usize> = (0..self.shards.len())
-            .filter(|&i| matches!(self.roles[i], ShardRole::Decode))
+            .filter(|&i| {
+                matches!(self.roles[i], ShardRole::Decode) && !self.shards[i].fault_crashed()
+            })
             .collect();
         let mut handoffs: Vec<Handoff> = Vec::new();
         for shard in &mut self.shards {
@@ -470,15 +592,22 @@ impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, 
                 .total_cmp(&b.prefill_finish_at_ns)
                 .then(a.req.id.cmp(&b.req.id))
         });
-        let mut link_free_at_ns = 0.0f64;
         for (n, h) in handoffs.into_iter().enumerate() {
+            if decode_ids.is_empty() {
+                // No surviving decode shard: the prefilled request joins
+                // the recovery queue, stranded at its prefill finish.
+                let at = h.prefill_finish_at_ns;
+                self.orphans.push((h.req, at));
+                continue;
+            }
             let shard = decode_ids[n % decode_ids.len()];
             let kv_bytes = self.spec.kv_cache_bytes(h.req.prompt.len() as u64);
             // 1 GB/s ≡ 1 byte/ns, so the wire time is simply bytes / GB/s.
-            let wire_ns = kv_bytes as f64 / self.kv_link_gbps;
-            let start_ns = h.prefill_finish_at_ns.max(link_free_at_ns);
-            link_free_at_ns = start_ns + wire_ns;
-            let transfer_ns = link_free_at_ns - h.prefill_finish_at_ns;
+            let wire_base_ns = kv_bytes as f64 / self.kv_link_gbps;
+            let (start_ns, wire_ns) =
+                self.price_link_transfer(h.prefill_finish_at_ns, wire_base_ns, h.req.id);
+            self.link_free_at_ns = start_ns + wire_ns;
+            let transfer_ns = self.link_free_at_ns - h.prefill_finish_at_ns;
             // The link track: wire occupancy, then the release onto the
             // chosen decode shard.  `start_ns = max(finish, link_free)`
             // is non-decreasing over the FIFO-sorted handoffs, so the
@@ -492,12 +621,88 @@ impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, 
             ));
             self.link_recorder.record(Event::instant(
                 EventKind::DecodeRelease,
-                link_free_at_ns,
+                self.link_free_at_ns,
                 h.req.id,
                 shard as f64,
             ));
             self.shards[shard].submit_handoff(h, transfer_ns);
         }
+    }
+
+    /// Price one KV transfer over the (possibly faulted) link: queue
+    /// behind the in-flight transfer, wait out any outage in progress
+    /// (pure queueing), stretch the wire time by the active degradation
+    /// factor, and — when an outage opens mid-flight — lose the attempt
+    /// and re-send after the outage with capped deterministic exponential
+    /// backoff in simulated time ([`RecoveryPolicy::backoff_ns`]).
+    /// Returns `(start_ns, wire_ns)` of the successful attempt.  With no
+    /// link faults declared this reduces to exactly the fault-free
+    /// arithmetic: `start = max(ready, link_free)`, `wire = base`.
+    fn price_link_transfer(&mut self, ready_ns: f64, wire_base_ns: f64, req_id: u64) -> (f64, f64) {
+        let mut start = ready_ns.max(self.link_free_at_ns);
+        let mut attempt = 0u32;
+        loop {
+            // An outage already in progress delays the start; windows may
+            // chain, so re-scan until the start settles.
+            loop {
+                let mut moved = false;
+                for &(o_start, o_end) in &self.link_outages {
+                    if o_start <= start && start < o_end {
+                        start = o_end;
+                        moved = true;
+                    }
+                }
+                if !moved {
+                    break;
+                }
+            }
+            let mut wire = wire_base_ns;
+            let factor = self.link_degrade_factor(start);
+            if factor != 1.0 {
+                wire /= factor;
+            }
+            // The earliest outage opening strictly inside the transfer
+            // interrupts it.
+            let mut cut: Option<(f64, f64)> = None;
+            for &(o_start, o_end) in &self.link_outages {
+                if o_start > start && o_start < start + wire {
+                    let earlier = match cut {
+                        Some((c, _)) => o_start < c,
+                        None => true,
+                    };
+                    if earlier {
+                        cut = Some((o_start, o_end));
+                    }
+                }
+            }
+            let Some((cut_at, cut_end)) = cut else {
+                return (start, wire);
+            };
+            attempt += 1;
+            self.tally.kv_retries += 1;
+            self.link_recorder.record(Event::instant(
+                EventKind::KvRetry,
+                cut_at,
+                req_id,
+                attempt as f64,
+            ));
+            // Each retry strictly passes one more outage window, so the
+            // loop terminates after at most `link_outages.len()` retries.
+            start = cut_end + self.recovery.backoff_ns(attempt);
+        }
+    }
+
+    /// Combined bandwidth-degradation factor at `at_ns` (1.0 = full
+    /// bandwidth; overlapping windows compose multiplicatively in
+    /// declaration order, each factor in `(0, 1]`).
+    fn link_degrade_factor(&self, at_ns: f64) -> f64 {
+        let mut f = 1.0f64;
+        for &(d_start, d_end, factor) in &self.link_degrades {
+            if d_start <= at_ns && at_ns < d_end {
+                f *= factor;
+            }
+        }
+        f
     }
 
     /// Run every shard's serving loop to completion on the work-stealing
@@ -512,32 +717,200 @@ impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, 
     /// first, then the finished prompts cross the KV link and the decode
     /// shards drain them — arrival timestamps carry the pipeline timing,
     /// so no wall-clock race can change the simulated result.
+    /// Under a fault schedule ([`Coordinator::set_faults`]) the waves
+    /// repeat as a **recovery loop**: after each full wave, requests
+    /// evacuated from crashed shards are re-dispatched onto surviving
+    /// fresh-prompt-eligible shards (bounded by the policy's retry
+    /// budget), shed by the degradation controller when surviving
+    /// capacity falls below the utilization ceiling, or terminated
+    /// `failed`; surviving shards then resume from their own clocks.
+    /// Everything is driven by simulated time, so the merged report stays
+    /// bit-identical across engines and worker-pool sizes.
     pub fn run_to_completion(&mut self) -> Result<ServerReport> {
         #[allow(clippy::disallowed_methods)]
         let wall_start = Instant::now(); // detcheck: allow(wall-clock) -- the single per-run wall timer of a cluster run; feeds wall_ns only, never simulated results
         let exec = self.executor;
         self.worker_stats.clear();
-        let reports = if !self.is_disaggregated() {
-            let (reports, stats) = Self::run_shards(exec, &mut self.shards, |_| true);
-            self.absorb_worker_stats(&stats);
-            reports
+        self.link_free_at_ns = 0.0;
+        self.tally = FaultTally::default();
+        let mut acc: Vec<Option<ServerReport>> = Vec::new();
+        acc.resize_with(self.shards.len(), || None);
+        self.run_wave(exec, &mut acc)?;
+        let (extra, retry_ledger) = if self.faults_armed {
+            self.recovery_rounds(exec, &mut acc)?
         } else {
-            let (mut first, stats) =
-                Self::run_shards(exec, &mut self.shards, |r| r.accepts_fresh_prompts());
-            self.absorb_worker_stats(&stats);
-            self.dispatch_handoffs();
-            let (second, stats) = Self::run_shards(exec, &mut self.shards, |r| {
-                matches!(r, ShardRole::Decode)
-            });
-            self.absorb_worker_stats(&stats);
-            first.extend(second);
-            first
+            (Vec::new(), BTreeMap::new())
         };
-        let mut merged = Vec::with_capacity(reports.len());
-        for r in reports {
-            merged.push(r?);
+        let merged: Vec<ServerReport> = acc.into_iter().flatten().collect();
+        let mut report = ServerReport::merge(merged, wall_start.elapsed().as_nanos() as f64);
+        if self.faults_armed {
+            // Terminal (failed / degrade-shed) results join the merged
+            // population, and retried requests report their original
+            // arrival — end-to-end latency spans the crash they survived.
+            report.results.extend(extra);
+            report.results.sort_by_key(|r| r.id);
+            for r in &mut report.results {
+                if let Some(&(_, original_arrival_ns)) = retry_ledger.get(&r.id) {
+                    r.arrival_ns = original_arrival_ns;
+                }
+            }
+            report.faults = std::mem::take(&mut self.tally);
         }
-        Ok(ServerReport::merge(merged, wall_start.elapsed().as_nanos() as f64))
+        Ok(report)
+    }
+
+    /// One full scheduling wave over the cluster: a unified cluster runs
+    /// every shard once; a disaggregated cluster runs the fresh-prompt
+    /// wave, crosses the KV link, then drains the decode wave.  Reports
+    /// fold into `acc` per shard index (a recovery continuation wave
+    /// re-runs shards, so a shard may accumulate several partial reports).
+    fn run_wave(&mut self, exec: HostExecutor, acc: &mut [Option<ServerReport>]) -> Result<()> {
+        if !self.is_disaggregated() {
+            self.run_wave_into(exec, acc, |_| true)
+        } else {
+            self.run_wave_into(exec, acc, |r| r.accepts_fresh_prompts())?;
+            self.dispatch_handoffs();
+            self.run_wave_into(exec, acc, |r| matches!(r, ShardRole::Decode))
+        }
+    }
+
+    /// Run the shards matching `pred` and fold their reports into `acc`.
+    /// `run_shards` returns reports in shard order of the filtered set, so
+    /// the k-th report belongs to the k-th shard satisfying `pred`.
+    fn run_wave_into(
+        &mut self,
+        exec: HostExecutor,
+        acc: &mut [Option<ServerReport>],
+        pred: impl Fn(ShardRole) -> bool,
+    ) -> Result<()> {
+        let ids: Vec<usize> = (0..self.shards.len()).filter(|&i| pred(self.roles[i])).collect();
+        let (reports, stats) = Self::run_shards(exec, &mut self.shards, pred);
+        self.absorb_worker_stats(&stats);
+        for (&i, r) in ids.iter().zip(reports) {
+            let r = r?;
+            match &mut acc[i] {
+                Some(prev) => absorb_report(prev, r),
+                None => acc[i] = Some(r),
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain crash evacuations until the cluster settles: collect the
+    /// evacuees of newly crashed shards (plus any orphaned handoffs),
+    /// re-dispatch / degrade-shed / fail each one, and run continuation
+    /// waves for whatever was re-dispatched.  Returns the synthesized
+    /// terminal results and the per-request retry ledger
+    /// `id → (evacuations, original arrival ns)`.
+    fn recovery_rounds(
+        &mut self,
+        exec: HostExecutor,
+        acc: &mut [Option<ServerReport>],
+    ) -> Result<(Vec<RequestResult>, BTreeMap<u64, (u32, f64)>)> {
+        let n = self.shards.len();
+        let mut extra: Vec<RequestResult> = Vec::new();
+        let mut ledger: BTreeMap<u64, (u32, f64)> = BTreeMap::new();
+        let mut counted = vec![false; n];
+        let mut rr = 0usize;
+        loop {
+            // Evacuees in (orphans, shard index) order, id-sorted within a
+            // shard — a deterministic re-dispatch order.
+            let mut evac: Vec<(Request, f64)> = std::mem::take(&mut self.orphans);
+            for i in 0..n {
+                if !self.shards[i].fault_crashed() {
+                    continue;
+                }
+                let detect = self.shards[i].crash_detected_at();
+                if !counted[i] {
+                    counted[i] = true;
+                    self.tally.crashed_shards += 1;
+                    let surviving = (0..n)
+                        .filter(|&j| {
+                            self.roles[j].accepts_fresh_prompts()
+                                && !self.shards[j].fault_crashed()
+                        })
+                        .count();
+                    self.tally.capacity_timeline.push((
+                        detect,
+                        self.shards[i].group_label().to_string(),
+                        surviving,
+                    ));
+                }
+                let mut reqs = self.shards[i].take_evacuated();
+                reqs.sort_by_key(|r| r.id);
+                evac.extend(reqs.into_iter().map(|r| (r, detect)));
+            }
+            if evac.is_empty() {
+                return Ok((extra, ledger));
+            }
+            let eligible: Vec<usize> = (0..n)
+                .filter(|&i| {
+                    self.roles[i].accepts_fresh_prompts() && !self.shards[i].fault_crashed()
+                })
+                .collect();
+            let total_fresh = (0..n).filter(|&i| self.roles[i].accepts_fresh_prompts()).count();
+            let surviving_fraction = if total_fresh == 0 {
+                0.0
+            } else {
+                eligible.len() as f64 / total_fresh as f64
+            };
+            let capacity_ok = surviving_fraction >= self.recovery.utilization_ceiling;
+            let mut resubmitted = false;
+            for (req, detect) in evac {
+                let entry = ledger.entry(req.id).or_insert((0, req.arrival_ns as f64));
+                entry.0 += 1;
+                let (attempt, original_arrival_ns) = *entry;
+                if eligible.is_empty() || attempt > self.recovery.retry_budget {
+                    self.tally.failed += 1;
+                    self.link_recorder.record(Event::instant(
+                        EventKind::RequestFailed,
+                        detect,
+                        req.id,
+                        attempt as f64,
+                    ));
+                    extra.push(terminal_result(&req, original_arrival_ns, detect, true));
+                } else if !capacity_ok {
+                    self.tally.degrade_shed += 1;
+                    self.link_recorder.record(Event::instant(
+                        EventKind::DegradeShed,
+                        detect,
+                        req.id,
+                        surviving_fraction,
+                    ));
+                    extra.push(terminal_result(&req, original_arrival_ns, detect, false));
+                } else {
+                    let shard = eligible[rr % eligible.len()];
+                    rr += 1;
+                    self.tally.retries += 1;
+                    self.link_recorder.record(Event::instant(
+                        EventKind::FaultRequeue,
+                        detect,
+                        req.id,
+                        attempt as f64,
+                    ));
+                    let mut r = req;
+                    // The re-dispatch lands no earlier than the crash was
+                    // detected (`ceil` keeps the release causal on the
+                    // survivor's integer arrival clock).
+                    r.arrival_ns = (r.arrival_ns as f64).max(detect).ceil() as u64;
+                    self.shards[shard].submit(r);
+                    resubmitted = true;
+                }
+            }
+            if !resubmitted {
+                return Ok((extra, ledger));
+            }
+            // Continuation wave: every shard resumes from its previous
+            // makespan so its simulated clock never runs backwards.
+            for i in 0..n {
+                let floor = acc[i]
+                    .as_ref()
+                    .and_then(|r| r.shards.first())
+                    .map_or(0.0, |s| s.sim_clock_ns);
+                self.shards[i].set_clock_floor(floor);
+            }
+            self.run_wave(exec, acc)?;
+        }
     }
 
     /// Fold one wave's per-worker counters into the run's accumulator
@@ -568,6 +941,59 @@ impl<E: TokenEngine + Send, S: Scheduler, R: Recorder + Send> Coordinator<E, S, 
     /// recorded run).
     pub fn shard_recorder(&self, shard: usize) -> &R {
         self.shards[shard].recorder()
+    }
+}
+
+/// Fold a continuation-wave report into a shard's accumulated report:
+/// results concatenate, counters add, the simulated clock advances to the
+/// newer makespan, and occupancy re-weights by decode iterations.
+/// Throughput-style derived fields re-derive at the final
+/// [`ServerReport::merge`].
+fn absorb_report(acc: &mut ServerReport, next: ServerReport) {
+    let ServerReport { results, total_tokens, shards, .. } = next;
+    acc.results.extend(results);
+    acc.total_tokens += total_tokens;
+    let (Some(a), Some(b)) = (acc.shards.first_mut(), shards.first()) else {
+        return;
+    };
+    if b.decode_iterations > 0 {
+        let it_a = a.decode_iterations as f64;
+        let it_b = b.decode_iterations as f64;
+        a.occupancy = (a.occupancy * it_a + b.occupancy * it_b) / (it_a + it_b);
+    }
+    a.requests += b.requests;
+    a.tokens += b.tokens;
+    a.sim_ns += b.sim_ns;
+    a.wall_ns += b.wall_ns;
+    a.sim_clock_ns = a.sim_clock_ns.max(b.sim_clock_ns);
+    a.sim_idle_ns += b.sim_idle_ns;
+    a.decode_iterations += b.decode_iterations;
+    a.prefill_chunks += b.prefill_chunks;
+    a.chunk_stall_ns += b.chunk_stall_ns;
+    a.preemptions += b.preemptions;
+    a.shed += b.shed;
+    a.handoffs += b.handoffs;
+    a.kv_transfer_ns += b.kv_transfer_ns;
+}
+
+/// Synthesize the terminal result of a request the recovery loop could
+/// not re-dispatch: `failed` (retry budget exhausted / no survivor) or
+/// degradation-controller `shed`.  The request generated no tokens; its
+/// timeline collapses onto the moment it was stranded.
+fn terminal_result(req: &Request, original_arrival_ns: f64, at_ns: f64, failed: bool) -> RequestResult {
+    RequestResult {
+        id: req.id,
+        tokens: Vec::new(),
+        prompt_tokens: req.prompt.len(),
+        sim_ttft_ns: 0.0,
+        sim_total_ns: 0.0,
+        wall_ns: 0.0,
+        arrival_ns: original_arrival_ns,
+        sim_first_token_at_ns: at_ns,
+        sim_finish_at_ns: at_ns,
+        deadline_ns: req.deadline_ns.map(|d| d as f64),
+        shed: !failed,
+        failed,
     }
 }
 
@@ -813,6 +1239,228 @@ mod tests {
         let shed_total: usize = report.shards.iter().map(|s| s.shed).sum();
         assert_eq!(shed_total, 2);
         assert_eq!(report.results.iter().filter(|r| r.shed).count(), 2);
+    }
+
+    #[test]
+    fn empty_fault_spec_keeps_the_fault_free_path_bit_identical() {
+        let run = |faulted: bool| {
+            let mut c = coordinator(2, 2);
+            if faulted {
+                c.set_faults(&FaultSpec::default()).unwrap();
+            }
+            submit_all(&mut c, 6, 5);
+            c.run_to_completion().unwrap()
+        };
+        let baseline = run(false);
+        let empty = run(true);
+        assert_eq!(baseline.sim_divergence(&empty), None);
+        assert!(empty.faults.is_empty());
+    }
+
+    #[test]
+    fn shard_crash_requeues_inflight_requests_onto_survivors() {
+        let mut c = coordinator(2, 2);
+        let spec = FaultSpec {
+            events: vec![FaultEvent::ShardCrash { shard: 0, at_ns: 0.0 }],
+            ..FaultSpec::default()
+        };
+        c.set_faults(&spec).unwrap();
+        submit_all(&mut c, 6, 5);
+        let report = c.run_to_completion().unwrap();
+        // Every request lands exactly once, none lost to the crash.
+        assert_eq!(report.results.len(), 6);
+        assert!(report.results.iter().all(|r| !r.shed && !r.failed));
+        assert_eq!(report.total_tokens, 30);
+        assert_eq!(report.faults.crashed_shards, 1);
+        assert!(report.faults.retries > 0);
+        assert_eq!(report.faults.failed, 0);
+        // The capacity timeline records the crash: 1 of 2 shards left.
+        assert_eq!(report.faults.capacity_timeline.len(), 1);
+        assert_eq!(report.faults.capacity_timeline[0].2, 1);
+        // Retried requests keep their original (zero) arrival.
+        assert!(report.results.iter().all(|r| r.arrival_ns == 0.0));
+    }
+
+    #[test]
+    fn crash_with_no_survivors_fails_requests() {
+        let mut c = coordinator(1, 2);
+        let spec = FaultSpec {
+            events: vec![FaultEvent::ShardCrash { shard: 0, at_ns: 0.0 }],
+            ..FaultSpec::default()
+        };
+        c.set_faults(&spec).unwrap();
+        submit_all(&mut c, 4, 5);
+        let report = c.run_to_completion().unwrap();
+        assert_eq!(report.results.len(), 4);
+        assert!(report.results.iter().all(|r| r.failed && !r.shed));
+        assert!(report.results.iter().all(|r| r.tokens.is_empty() && !r.met_deadline()));
+        assert_eq!(report.faults.failed, 4);
+        assert_eq!(report.faults.capacity_timeline[0].2, 0);
+    }
+
+    #[test]
+    fn degradation_controller_sheds_when_capacity_falls_below_ceiling() {
+        let mut c = coordinator(2, 2);
+        let spec = FaultSpec {
+            events: vec![FaultEvent::ShardCrash { shard: 0, at_ns: 0.0 }],
+            recovery: crate::config::RecoveryPolicy {
+                utilization_ceiling: 1.0,
+                ..Default::default()
+            },
+            ..FaultSpec::default()
+        };
+        c.set_faults(&spec).unwrap();
+        submit_all(&mut c, 6, 5);
+        let report = c.run_to_completion().unwrap();
+        assert_eq!(report.results.len(), 6);
+        // Half the capacity survived < ceiling 1.0: evacuees are shed, not
+        // retried; the other shard's requests complete untouched.
+        assert_eq!(report.faults.degrade_shed, 3);
+        assert_eq!(report.faults.retries, 0);
+        assert_eq!(report.results.iter().filter(|r| r.shed).count(), 3);
+        assert_eq!(report.results.iter().filter(|r| !r.shed && !r.failed).count(), 3);
+    }
+
+    #[test]
+    fn brownout_stretches_the_makespan_but_serves_everything() {
+        let run = |spec: Option<FaultSpec>| {
+            let mut c = coordinator(1, 2);
+            if let Some(s) = spec {
+                c.set_faults(&s).unwrap();
+            }
+            submit_all(&mut c, 4, 6);
+            c.run_to_completion().unwrap()
+        };
+        let baseline = run(None);
+        let slowed = run(Some(FaultSpec {
+            events: vec![FaultEvent::Brownout {
+                shard: 0,
+                start_ns: 0.0,
+                end_ns: 1e15,
+                slowdown: 2.0,
+            }],
+            ..FaultSpec::default()
+        }));
+        let tok = |rep: &ServerReport| {
+            rep.results.iter().map(|r| (r.id, r.tokens.clone())).collect::<Vec<_>>()
+        };
+        assert_eq!(tok(&baseline), tok(&slowed));
+        let clock = |rep: &ServerReport| rep.shards[0].sim_clock_ns;
+        assert!(
+            clock(&slowed) > clock(&baseline),
+            "brownout must stretch the makespan: {} vs {}",
+            clock(&slowed),
+            clock(&baseline)
+        );
+    }
+
+    #[test]
+    fn link_outage_delays_kv_transfers_monotonically() {
+        let disagg = |spec: Option<FaultSpec>| {
+            let mut c =
+                ClusterBuilder::new(ClusterSpec::disaggregated(1, 1, 2), &racam_paper(), tiny_spec())
+                    .unwrap()
+                    .build(|_| SyntheticEngine::new(64, 128));
+            if let Some(s) = spec {
+                c.set_faults(&s).unwrap();
+            }
+            for id in 0..4 {
+                c.submit(Request::new(id, vec![id as u32 % 7, 3, 9], 4));
+            }
+            c.run_to_completion().unwrap()
+        };
+        let baseline = disagg(None);
+        let outaged = disagg(Some(FaultSpec {
+            events: vec![FaultEvent::LinkOutage { start_ns: 0.0, end_ns: 1e12 }],
+            ..FaultSpec::default()
+        }));
+        assert_eq!(baseline.results.len(), 4);
+        assert_eq!(outaged.results.len(), 4);
+        assert!(outaged.results.iter().all(|r| !r.failed));
+        let kv = |rep: &ServerReport| {
+            rep.shards.iter().map(|s| s.kv_transfer_ns).fold(0.0, f64::max)
+        };
+        assert!(
+            kv(&outaged) > kv(&baseline),
+            "an outage window must delay KV transfers: {} vs {}",
+            kv(&outaged),
+            kv(&baseline)
+        );
+    }
+
+    #[test]
+    fn channel_loss_reprices_the_group_and_slows_it_down() {
+        let run = |spec: Option<FaultSpec>| {
+            let mut c = coordinator(1, 2);
+            if let Some(s) = spec {
+                c.set_faults(&s).unwrap();
+            }
+            submit_all(&mut c, 4, 6);
+            c.run_to_completion().unwrap()
+        };
+        let baseline = run(None);
+        let derated = run(Some(FaultSpec {
+            events: vec![FaultEvent::ChannelLoss {
+                group: "unified".into(),
+                at_ns: 0.0,
+                channels_lost: 6,
+            }],
+            ..FaultSpec::default()
+        }));
+        let tok = |rep: &ServerReport| {
+            rep.results.iter().map(|r| (r.id, r.tokens.clone())).collect::<Vec<_>>()
+        };
+        assert_eq!(tok(&baseline), tok(&derated));
+        // 2 of 8 channels left: the same work cannot get cheaper.
+        assert!(derated.shards[0].sim_clock_ns >= baseline.shards[0].sim_clock_ns);
+    }
+
+    #[test]
+    fn fault_spec_rejects_unknown_shards_and_groups() {
+        let mut c = coordinator(2, 2);
+        let bad_shard = FaultSpec {
+            events: vec![FaultEvent::ShardCrash { shard: 9, at_ns: 0.0 }],
+            ..FaultSpec::default()
+        };
+        assert!(c.set_faults(&bad_shard).is_err());
+        let bad_group = FaultSpec {
+            events: vec![FaultEvent::ChannelLoss {
+                group: "nope".into(),
+                at_ns: 0.0,
+                channels_lost: 1,
+            }],
+            ..FaultSpec::default()
+        };
+        assert!(c.set_faults(&bad_group).is_err());
+    }
+
+    #[test]
+    fn faulted_runs_are_deterministic_across_thread_counts() {
+        let run = |threads: usize| {
+            let mut c = coordinator(3, 2);
+            c.set_threads(threads);
+            c.set_faults(&FaultSpec {
+                events: vec![
+                    FaultEvent::ShardCrash { shard: 1, at_ns: 0.0 },
+                    FaultEvent::Brownout {
+                        shard: 0,
+                        start_ns: 0.0,
+                        end_ns: 1e15,
+                        slowdown: 1.5,
+                    },
+                ],
+                ..FaultSpec::default()
+            })
+            .unwrap();
+            submit_all(&mut c, 9, 4);
+            c.run_to_completion().unwrap()
+        };
+        let one = run(1);
+        let two = run(2);
+        let four = run(4);
+        assert_eq!(one.sim_divergence(&two), None);
+        assert_eq!(one.sim_divergence(&four), None);
+        assert_eq!(one.faults.crashed_shards, 1);
     }
 
     #[test]

@@ -113,6 +113,23 @@ pub trait Scheduler: Send {
     fn preempt_horizon(&self, _req: &Request, _generated: usize) -> Option<f64> {
         None
     }
+
+    /// Drain every pending request into `out`, in policy order — the
+    /// crash-evacuation path (see `docs/robustness.md`).  The default
+    /// drains through repeated [`Scheduler::next_batch_into`] calls,
+    /// which is lossless for any policy honouring the no-withholding
+    /// contract; the loop stops early (rather than spinning) if a policy
+    /// violates it.
+    fn drain_pending_into(&mut self, out: &mut Vec<Request>) {
+        while self.pending() > 0 {
+            let before = out.len();
+            let slots = self.pending();
+            self.next_batch_into(slots, out);
+            if out.len() == before {
+                break;
+            }
+        }
+    }
 }
 
 /// Boxed schedulers forward, so heterogeneous clusters (per-group policies
@@ -141,6 +158,10 @@ impl Scheduler for Box<dyn Scheduler> {
 
     fn preempt_horizon(&self, req: &Request, generated: usize) -> Option<f64> {
         (**self).preempt_horizon(req, generated)
+    }
+
+    fn drain_pending_into(&mut self, out: &mut Vec<Request>) {
+        (**self).drain_pending_into(out)
     }
 }
 
@@ -419,6 +440,40 @@ mod tests {
         // Boxed schedulers forward the hook.
         let boxed: Box<dyn Scheduler> = Box::new(EdfScheduler::new());
         assert_eq!(boxed.preempt_horizon(&dead, 1), Some(100.0));
+    }
+
+    #[test]
+    fn drain_pending_into_is_lossless_for_every_policy() {
+        // Crash evacuation drains through next_batch_into: every pending
+        // request must come back exactly once, whatever the policy.
+        let mut edf = EdfScheduler::new();
+        for id in 0..5 {
+            edf.submit(Request::new(id, vec![1], 1).with_deadline(1000 - id));
+        }
+        let mut out = Vec::new();
+        edf.drain_pending_into(&mut out);
+        assert_eq!(edf.pending(), 0);
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+
+        let mut lb = LengthBucketed::new();
+        lb.submit(req(0, 4));
+        lb.submit(req(1, 400));
+        lb.submit(req(2, 8));
+        let mut out = Vec::new();
+        lb.drain_pending_into(&mut out);
+        assert_eq!(lb.pending(), 0);
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2]);
+
+        let mut boxed: Box<dyn Scheduler> = Box::new(crate::coordinator::FcfsBatcher::new(2));
+        boxed.submit(req(7, 4));
+        let mut out = Vec::new();
+        boxed.drain_pending_into(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(boxed.pending(), 0);
     }
 
     #[test]

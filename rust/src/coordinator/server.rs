@@ -171,6 +171,12 @@ pub struct RequestResult {
     /// generated before the shed, and the request counts as missing its
     /// deadline.
     pub shed: bool,
+    /// True when the request terminated as *failed*: it was evacuated
+    /// from a crashed shard and never completed — its retry budget ran
+    /// out, or no eligible shard survived (see `docs/robustness.md`).
+    /// Distinct from `shed` (a scheduling decision): `tokens` is empty
+    /// and the request counts as missing its deadline.
+    pub failed: bool,
 }
 
 impl RequestResult {
@@ -193,9 +199,11 @@ impl RequestResult {
     }
 
     /// Whether this request met its deadline (no deadline counts as met;
-    /// a shed request never does — it was given up on).
+    /// a shed or failed request never does — it was given up on).
     pub fn met_deadline(&self) -> bool {
-        !self.shed && self.deadline_ns.map_or(true, |d| self.sim_finish_at_ns <= d)
+        !self.shed
+            && !self.failed
+            && self.deadline_ns.map_or(true, |d| self.sim_finish_at_ns <= d)
     }
 }
 
@@ -288,6 +296,75 @@ impl ShardStats {
     }
 }
 
+/// Fault/recovery accounting of one serving run (all zero on a
+/// fault-free run).  Populated by the coordinator's recovery loop; a
+/// plain [`Server`] run always reports the default.  Everything here is
+/// simulated-deterministic and compared by
+/// [`ServerReport::sim_divergence`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultTally {
+    /// Shards that crashed during the run.
+    pub crashed_shards: usize,
+    /// Crash-evacuation re-dispatches (every `FaultRequeue`).
+    pub retries: usize,
+    /// Requests that terminated `failed`.
+    pub failed: usize,
+    /// Evacuated requests shed by the degradation controller.
+    pub degrade_shed: usize,
+    /// KV transfers re-sent after a link-outage interruption.
+    pub kv_retries: usize,
+    /// Per-group surviving-capacity timeline: one `(detection time ns,
+    /// group label, fresh-prompt-capable shards still alive cluster-wide)`
+    /// entry per shard crash, in detection order.
+    pub capacity_timeline: Vec<(f64, String, usize)>,
+}
+
+impl FaultTally {
+    /// True when no fault or recovery action was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.crashed_shards == 0
+            && self.retries == 0
+            && self.failed == 0
+            && self.degrade_shed == 0
+            && self.kv_retries == 0
+            && self.capacity_timeline.is_empty()
+    }
+
+    fn merge(&mut self, other: &FaultTally) {
+        self.crashed_shards += other.crashed_shards;
+        self.retries += other.retries;
+        self.failed += other.failed;
+        self.degrade_shed += other.degrade_shed;
+        self.kv_retries += other.kv_retries;
+        self.capacity_timeline.extend(other.capacity_timeline.iter().cloned());
+    }
+
+    /// First simulated divergence against another tally, if any (f64
+    /// timestamps compare bit-for-bit — same contract as
+    /// [`ServerReport::sim_divergence`]).
+    fn divergence(&self, other: &FaultTally) -> Option<String> {
+        if self.crashed_shards != other.crashed_shards
+            || self.retries != other.retries
+            || self.failed != other.failed
+            || self.degrade_shed != other.degrade_shed
+            || self.kv_retries != other.kv_retries
+        {
+            return Some("fault tally counters differ".into());
+        }
+        if self.capacity_timeline.len() != other.capacity_timeline.len() {
+            return Some("capacity timeline length differs".into());
+        }
+        for ((ta, ga, ca), (tb, gb, cb)) in
+            self.capacity_timeline.iter().zip(&other.capacity_timeline)
+        {
+            if ta.to_bits() != tb.to_bits() || ga != gb || ca != cb {
+                return Some(format!("capacity timeline entry differs ({ga} vs {gb})"));
+            }
+        }
+        None
+    }
+}
+
 /// Aggregate serving report (single shard or merged across shards).
 #[derive(Debug, Clone)]
 pub struct ServerReport {
@@ -298,6 +375,8 @@ pub struct ServerReport {
     /// Per-shard utilization; one entry for a plain [`Server`] run, one per
     /// worker for a [`super::Coordinator`] run.
     pub shards: Vec<ShardStats>,
+    /// Fault/recovery accounting (default on a fault-free run).
+    pub faults: FaultTally,
 }
 
 impl ServerReport {
@@ -330,8 +409,8 @@ impl ServerReport {
             if x.tokens != y.tokens {
                 return Some(format!("req {}: tokens differ", x.id));
             }
-            if x.prompt_tokens != y.prompt_tokens || x.shed != y.shed {
-                return Some(format!("req {}: prompt_tokens/shed differ", x.id));
+            if x.prompt_tokens != y.prompt_tokens || x.shed != y.shed || x.failed != y.failed {
+                return Some(format!("req {}: prompt_tokens/shed/failed differ", x.id));
             }
             if x.deadline_ns.map(f64::to_bits) != y.deadline_ns.map(f64::to_bits) {
                 return Some(format!("req {}: deadline differs", x.id));
@@ -378,6 +457,9 @@ impl ServerReport {
                 }
             }
         }
+        if let Some(d) = self.faults.divergence(&other.faults) {
+            return Some(d);
+        }
         None
     }
 
@@ -389,9 +471,11 @@ impl ServerReport {
     pub fn merge(reports: Vec<ServerReport>, wall_ns: f64) -> ServerReport {
         let mut results: Vec<RequestResult> = Vec::new();
         let mut shards: Vec<ShardStats> = Vec::new();
+        let mut faults = FaultTally::default();
         for r in reports {
             results.extend(r.results);
             shards.extend(r.shards);
+            faults.merge(&r.faults);
         }
         results.sort_by_key(|r| r.id);
         shards.sort_by_key(|s| s.shard);
@@ -406,6 +490,7 @@ impl ServerReport {
             total_tokens,
             results,
             shards,
+            faults,
         }
     }
 }
@@ -473,8 +558,68 @@ pub struct Server<E: TokenEngine, S: Scheduler = FcfsBatcher, R: Recorder = NopR
     /// as the decode cache), so live traffic with many distinct prompt
     /// lengths prices a bounded number of prefill shapes.
     prefill_cache: HashMap<u64, LatencyBreakdown>,
+    /// Per-shard fault schedule and runtime state (inactive by default —
+    /// see `docs/robustness.md`).
+    faults: ShardFaults,
+    /// Reduced-channel pricing runtime, installed by
+    /// [`Server::fault_derate`] and consulted once the channel-loss
+    /// event fires.
+    derate: Option<Box<DerateRuntime>>,
+    /// Floor for the simulated clock at the start of a run (0 normally;
+    /// the coordinator's recovery loop sets a continuation wave's floor
+    /// to the shard's previous clock so time never runs backwards).
+    clock_floor_ns: f64,
     /// Telemetry sink (zero-sized no-op by default).
     recorder: R,
+}
+
+/// One declared brownout window on this shard's simulated clock (see
+/// [`crate::config::FaultEvent::Brownout`]).
+#[derive(Debug, Clone, Copy)]
+struct BrownoutWindow {
+    start_ns: f64,
+    end_ns: f64,
+    slowdown: f64,
+    /// Whether the window's onset was already announced to telemetry.
+    announced: bool,
+}
+
+/// Per-shard fault schedule plus runtime state.  Inactive (`!armed`) by
+/// default: the serving loop then never touches it, so a fault-free run
+/// is instruction-for-instruction today's path.
+#[derive(Debug, Default)]
+struct ShardFaults {
+    /// Fast guard for the per-round fault step.
+    armed: bool,
+    /// Pending permanent crash (consumed when it fires).
+    crash_at_ns: Option<f64>,
+    /// Declared brownout windows, in declaration order.
+    brownouts: Vec<BrownoutWindow>,
+    /// Pending channel-loss activation (consumed when it fires).
+    derate_at_ns: Option<f64>,
+    /// The crash fired: the shard accepts no more work.
+    crashed: bool,
+    /// Simulated clock at which the crash was detected — the round edge
+    /// at or after `crash_at_ns` (faults are observed at round
+    /// granularity in *both* engines; the calendar engine's decode
+    /// stretches break at the next fault edge to keep that identical).
+    detected_at_ns: f64,
+    /// Channel-loss repricing is active.
+    derated: bool,
+    /// Requests evacuated by the crash, awaiting coordinator
+    /// re-dispatch ([`Server::take_evacuated`]).
+    evacuated: Vec<Request>,
+}
+
+/// Channel-loss pricing runtime: a [`RacamSystem`] backed by a reduced-
+/// channel mapping service, with its own cost caches — the full-channel
+/// caches stay intact so costs charged before the loss keep their exact
+/// values.
+struct DerateRuntime {
+    racam: RacamSystem,
+    channels_left: u32,
+    decode_cache: HashMap<u64, LatencyBreakdown>,
+    prefill_cache: HashMap<u64, LatencyBreakdown>,
 }
 
 /// Where one batch member is in its lifecycle.
@@ -579,6 +724,7 @@ impl Running {
             sim_finish_at_ns,
             deadline_ns: self.req.deadline_ns.map(|d| d as f64),
             shed,
+            failed: false,
         }
     }
 
@@ -877,6 +1023,9 @@ impl<E: TokenEngine, S: Scheduler> Server<E, S> {
             intake: None,
             decode_cache: HashMap::new(),
             prefill_cache: HashMap::new(),
+            faults: ShardFaults::default(),
+            derate: None,
+            clock_floor_ns: 0.0,
             recorder: NopRecorder,
         }
     }
@@ -906,6 +1055,9 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
             intake: self.intake,
             decode_cache: self.decode_cache,
             prefill_cache: self.prefill_cache,
+            faults: self.faults,
+            derate: self.derate,
+            clock_floor_ns: self.clock_floor_ns,
             recorder,
         }
     }
@@ -1002,6 +1154,174 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
         std::mem::take(&mut self.handoffs_out)
     }
 
+    /// This shard's group label (per-group fault distribution).
+    pub(crate) fn group_label(&self) -> &str {
+        &self.group
+    }
+
+    /// Schedule a permanent crash at a simulated time (coordinator
+    /// fault distribution — see [`super::Coordinator::set_faults`]).
+    pub(crate) fn fault_crash_at(&mut self, at_ns: f64) {
+        self.faults.crash_at_ns = Some(at_ns);
+        self.faults.armed = true;
+    }
+
+    /// Schedule a brownout window: every simulated cost charged while
+    /// the clock is inside `[start_ns, end_ns)` is multiplied by
+    /// `slowdown` (≥ 1).  Overlapping windows compose multiplicatively.
+    pub(crate) fn fault_brownout(&mut self, start_ns: f64, end_ns: f64, slowdown: f64) {
+        self.faults.brownouts.push(BrownoutWindow {
+            start_ns,
+            end_ns,
+            slowdown,
+            announced: false,
+        });
+        self.faults.armed = true;
+    }
+
+    /// Schedule a DRAM channel-loss at a simulated time: from the first
+    /// round edge at or past `at_ns`, bucket pricing switches to
+    /// `racam` (a [`RacamSystem`] over the reduced-channel mapping
+    /// service) with fresh cost caches.
+    pub(crate) fn fault_derate(&mut self, at_ns: f64, racam: RacamSystem, channels_left: u32) {
+        self.derate = Some(Box::new(DerateRuntime {
+            racam,
+            channels_left,
+            decode_cache: HashMap::new(),
+            prefill_cache: HashMap::new(),
+        }));
+        self.faults.derate_at_ns = Some(at_ns);
+        self.faults.armed = true;
+    }
+
+    /// Whether this shard's crash has fired.
+    pub(crate) fn fault_crashed(&self) -> bool {
+        self.faults.crashed
+    }
+
+    /// Simulated clock at which the crash was detected (meaningful only
+    /// when [`Server::fault_crashed`]).
+    pub(crate) fn crash_detected_at(&self) -> f64 {
+        self.faults.detected_at_ns
+    }
+
+    /// Drain the requests evacuated by a crash, for re-dispatch.
+    pub(crate) fn take_evacuated(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.faults.evacuated)
+    }
+
+    /// Floor the next run's starting clock (recovery continuation waves
+    /// resume from the shard's previous makespan instead of 0).
+    pub(crate) fn set_clock_floor(&mut self, ns: f64) {
+        self.clock_floor_ns = ns;
+    }
+
+    /// Combined brownout slowdown factor at a simulated time (1.0 =
+    /// full speed).  Windows compose multiplicatively in declaration
+    /// order; both engines sample this at identical timestamps, so the
+    /// composition order never differs.
+    fn fault_factor(&self, at_ns: f64) -> f64 {
+        let mut f = 1.0f64;
+        for b in &self.faults.brownouts {
+            if b.start_ns <= at_ns && at_ns < b.end_ns {
+                f *= b.slowdown;
+            }
+        }
+        f
+    }
+
+    /// Apply due fault events at a round edge — the only place fault
+    /// state transitions.  Called at the top of both `round_calendar`
+    /// and `round_oracle` before any scheduling, so the two engines
+    /// observe every fault at the same simulated clock (the calendar
+    /// engine's decode stretches break at the next crash/derate edge to
+    /// keep the round boundaries aligned).
+    fn fault_step(&mut self, st: &mut LoopState) {
+        let now = st.sim_now_ns;
+        for b in &mut self.faults.brownouts {
+            if !b.announced && b.start_ns <= now {
+                b.announced = true;
+                self.recorder.record(Event::instant(EventKind::Brownout, now, NO_REQ, b.slowdown));
+            }
+        }
+        if self.faults.derate_at_ns.is_some_and(|at| now >= at) {
+            self.faults.derate_at_ns = None;
+            self.faults.derated = true;
+            // Every decode schedule was priced at the full channel
+            // count: force a re-price from the derated runtime.  (A
+            // STALE schedule refreshes without a BucketEdge event — a
+            // repricing is not a context-bucket crossing.)
+            for r in st.running.iter_mut() {
+                if matches!(r.phase, Phase::Decode) {
+                    r.sched = DecodeSchedule::STALE;
+                }
+            }
+            let left = self.derate.as_ref().map_or(0.0, |d| d.channels_left as f64);
+            self.recorder.record(Event::instant(EventKind::ChannelLoss, now, NO_REQ, left));
+        }
+        if self.faults.crash_at_ns.is_some_and(|at| now >= at) {
+            self.faults.crash_at_ns = None;
+            self.faults.crashed = true;
+            self.faults.detected_at_ns = now;
+            // Evacuate the running batch in slot order.  Generation
+            // state and resident KV die with the shard, so requests go
+            // back whole — the same recompute semantics as
+            // `Preemption::Requeue`, but across shards.
+            while !st.running.is_empty() {
+                let mut r = st.remove_member(0);
+                let mut hidden = std::mem::take(&mut r.hidden);
+                hidden.clear();
+                st.hidden_pool.push(hidden);
+                if let Some(m) = r.handoff {
+                    // The evacuated request keeps its original arrival
+                    // so end-to-end latency spans the whole pipeline.
+                    r.req.arrival_ns = m.original_arrival_ns as u64;
+                }
+                self.faults.evacuated.push(r.req);
+            }
+            self.evacuate_queues();
+            self.recorder.record(Event::instant(
+                EventKind::ShardCrash,
+                now,
+                NO_REQ,
+                self.faults.evacuated.len() as f64,
+            ));
+        }
+    }
+
+    /// Move everything queued on this (crashed) shard into the
+    /// evacuation buffer: scheduler backlog, future arrivals, and
+    /// not-yet-collected outbound handoffs.
+    fn evacuate_queues(&mut self) {
+        self.scheduler.drain_pending_into(&mut self.faults.evacuated);
+        while let Some(Reverse(f)) = self.future.pop() {
+            self.faults.evacuated.push(f.req);
+        }
+        for h in self.handoffs_out.drain(..) {
+            self.faults.evacuated.push(h.req);
+        }
+        // Undelivered handoffs lose their KV with the shard; restore
+        // the original arrival the link-transfer release had rewritten.
+        for req in &mut self.faults.evacuated {
+            if let Some(m) = self.handoff_meta.remove(&req.id) {
+                req.arrival_ns = m.original_arrival_ns as u64;
+            }
+        }
+        self.handoff_meta.clear();
+    }
+
+    /// A round on a crashed shard: no scheduling — late arrivals are
+    /// evacuated for the coordinator and the loop idles to completion.
+    fn crashed_round(&mut self, st: &mut LoopState, block: bool) -> Result<Round> {
+        self.drain_intake(st.sim_now_ns);
+        self.evacuate_queues();
+        match self.idle_step(st, 0, 0, 0, false, block)? {
+            RoundIdle::Continue => Ok(Round::Continue),
+            RoundIdle::Finished => Ok(Round::Finished),
+            RoundIdle::WouldBlock => Ok(Round::WouldBlock),
+        }
+    }
+
     /// Deliver a prefilled request to this (decode) shard.  The request is
     /// released to the scheduler once the simulated clock reaches
     /// *prefill finish + KV transfer*; on admission it skips prefill, its
@@ -1041,7 +1361,18 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
     /// prefill span never recomputes it).
     fn prefill_cost_bucketed(&mut self, len: u64, bucket: u64) -> Result<LatencyBreakdown> {
         debug_assert_eq!(bucket, ctx_bucket(len), "caller-supplied bucket must match");
-        let per_bucket = if let Some(c) = self.prefill_cache.get(&bucket) {
+        let per_bucket = if self.faults.derated {
+            let Some(d) = self.derate.as_mut() else {
+                anyhow::bail!("channel-loss fault active without a derated runtime");
+            };
+            if let Some(c) = d.prefill_cache.get(&bucket) {
+                *c
+            } else {
+                let cost = stage_latency(&d.racam, &prefill_kernels(&self.spec, bucket))?;
+                d.prefill_cache.insert(bucket, cost);
+                cost
+            }
+        } else if let Some(c) = self.prefill_cache.get(&bucket) {
             *c
         } else {
             let cost = stage_latency(&self.racam, &prefill_kernels(&self.spec, bucket))?;
@@ -1096,6 +1427,17 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
     /// [`Server::decode_cost`] keyed directly by the bucket id (the
     /// calendar engine's refresh path, which already knows the bucket).
     fn decode_cost_bucket(&mut self, bucket: u64) -> Result<LatencyBreakdown> {
+        if self.faults.derated {
+            let Some(d) = self.derate.as_mut() else {
+                anyhow::bail!("channel-loss fault active without a derated runtime");
+            };
+            if let Some(c) = d.decode_cache.get(&bucket) {
+                return Ok(*c);
+            }
+            let cost = stage_latency(&d.racam, &decode_kernels(&self.spec, bucket))?;
+            d.decode_cache.insert(bucket, cost);
+            return Ok(cost);
+        }
         if let Some(c) = self.decode_cache.get(&bucket) {
             return Ok(*c);
         }
@@ -1220,6 +1562,9 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
         // callers with an infinite loop).
         let chunk_tokens = self.policy.prefill_chunk_tokens.map(|c| c.max(1));
         let mut st = LoopState::new(self.policy.preempt, chunk_tokens);
+        // Recovery continuation waves resume from the shard's previous
+        // makespan (0.0 — a no-op — outside the recovery loop).
+        st.sim_now_ns = self.clock_floor_ns;
         let expected = self.scheduler.pending() + self.future.len();
         st.running.reserve(self.max_batch.min(expected.max(1)));
         st.hidden_pool.reserve(self.max_batch);
@@ -1386,7 +1731,16 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
         // bucket; intermediate chunk boundaries bucket on the fly.
         let hi_bucket = if finished { st.running[idx].prompt_bucket } else { ctx_bucket(end) };
         let span = self.prefill_span_cost_to(prefilled, end, hi_bucket)?;
-        let step_ns = span.total_ns();
+        let mut step_ns = span.total_ns();
+        if !self.faults.brownouts.is_empty() {
+            // Brownout: the chunk's charge stretches by the slowdown at
+            // the time the step starts.  The `!= 1.0` guard keeps the
+            // fault-free float sequence bit-identical.
+            let f = self.fault_factor(st.sim_now_ns);
+            if f != 1.0 {
+                step_ns *= f;
+            }
+        }
         self.recorder.record(Event::span(
             EventKind::PrefillChunk,
             st.sim_now_ns,
@@ -1637,9 +1991,21 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
         let horizon_ns = horizon.unwrap_or(f64::INFINITY);
         let occ = st.decoding as f64 / self.max_batch as f64;
         let stretch_start_ns = st.sim_now_ns;
+        // Fault calendar entries: a pending crash or channel-loss must
+        // end the stretch at the first iteration edge at or past its
+        // onset — the oracle observes faults at its per-iteration round
+        // edges, and the next shared `fault_step` has to run at the same
+        // clock.  Brownout windows need no break: the factor below is
+        // sampled per iteration, exactly like the oracle's rounds.
+        let fault_edge = match (self.faults.crash_at_ns, self.faults.derate_at_ns) {
+            (None, None) => f64::INFINITY,
+            (a, b) => a.unwrap_or(f64::INFINITY).min(b.unwrap_or(f64::INFINITY)),
+        };
+        let slowed = !self.faults.brownouts.is_empty();
 
         let mut iters = 0u64;
         while iters < k {
+            let factor = if slowed { self.fault_factor(st.sim_now_ns) } else { 1.0 };
             let mut new_first = false;
             for r in st.running.iter_mut() {
                 if !matches!(r.phase, Phase::Decode) {
@@ -1647,12 +2013,18 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
                 }
                 let token = self.engine.step_in_place(&mut r.hidden)?;
                 r.tokens.push(token);
-                r.sim_ns += r.sched.cost_ns;
+                // `== 1.0` guard: the fault-free (and out-of-window)
+                // float sequence stays bit-identical to the unfaulted
+                // engine; inside a window, max(cᵢ·f) = max(cᵢ)·f for a
+                // shared positive factor, so the clock advance below
+                // matches the oracle's per-member max bit-for-bit.
+                r.sim_ns +=
+                    if factor == 1.0 { r.sched.cost_ns } else { r.sched.cost_ns * factor };
                 new_first |= r.tokens.len() == 1;
             }
             st.decode_iterations += 1;
             st.occupancy_sum += occ;
-            st.sim_now_ns += maxc;
+            st.sim_now_ns += if factor == 1.0 { maxc } else { maxc * factor };
             iters += 1;
             if new_first {
                 // First decoded token lands at the end of this
@@ -1664,8 +2036,12 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
                 }
             }
             // Clock-dependent calendar events end the stretch: an arrival
-            // became due, or the preemption horizon was crossed.
-            if next_arrival.is_some_and(|a| a <= st.sim_now_ns) || st.sim_now_ns > horizon_ns {
+            // became due, the preemption horizon was crossed, or a
+            // pending fault's onset was reached.
+            if next_arrival.is_some_and(|a| a <= st.sim_now_ns)
+                || st.sim_now_ns > horizon_ns
+                || st.sim_now_ns >= fault_edge
+            {
                 break;
             }
         }
@@ -1762,6 +2138,7 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
             total_tokens,
             results: done,
             shards: vec![stats],
+            faults: FaultTally::default(),
         }
     }
 
@@ -1773,6 +2150,12 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
     /// serves schedulers whose hooks are stateful.
     fn round_oracle(&mut self, st: &mut LoopState, block: bool) -> Result<Round> {
         let chunk_tokens = st.chunk_tokens;
+        if self.faults.armed {
+            self.fault_step(st);
+            if self.faults.crashed {
+                return self.crashed_round(st, block);
+            }
+        }
         self.drain_intake(st.sim_now_ns);
         self.release_due(st.sim_now_ns);
         let admitted = self.admit(st);
@@ -1822,6 +2205,15 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
         // (with whole-prompt prefill the two counts are identical).
         st.decode_iterations += 1;
         st.occupancy_sum += decoding as f64 / self.max_batch as f64;
+        // Brownout slowdown sampled at the iteration start — the same
+        // timestamp the calendar stretch samples, so the two engines
+        // multiply identical factors.  The `!= 1.0` guards keep the
+        // fault-free float sequence bit-identical.
+        let factor = if self.faults.brownouts.is_empty() {
+            1.0
+        } else {
+            self.fault_factor(st.sim_now_ns)
+        };
         let mut iteration_ns = 0.0f64;
         for i in 0..st.running.len() {
             if !matches!(st.running[i].phase, Phase::Decode) {
@@ -1832,7 +2224,10 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
             r.tokens.push(token);
 
             let ctx = r.req.prompt.len() as u64 + r.tokens.len() as u64;
-            let cost = self.decode_cost(ctx)?.total_ns();
+            let mut cost = self.decode_cost(ctx)?.total_ns();
+            if factor != 1.0 {
+                cost *= factor;
+            }
             st.running[i].sim_ns += cost;
             iteration_ns = iteration_ns.max(cost);
         }
@@ -1874,6 +2269,12 @@ impl<E: TokenEngine, S: Scheduler, R: Recorder> Server<E, S, R> {
     ///   schedule, refreshed only at bucket edges.
     fn round_calendar(&mut self, st: &mut LoopState, block: bool) -> Result<Round> {
         let chunk_tokens = st.chunk_tokens;
+        if self.faults.armed {
+            self.fault_step(st);
+            if self.faults.crashed {
+                return self.crashed_round(st, block);
+            }
+        }
         self.drain_intake(st.sim_now_ns);
         self.release_due(st.sim_now_ns);
         let admitted = self.admit(st);
@@ -2716,5 +3117,112 @@ mod tests {
         // Original arrival is preserved for end-to-end latency.
         assert_eq!(r.arrival_ns, 0.0);
         assert!(r.ttft_ns() >= finish + kv_ns - 1.0);
+    }
+
+    #[test]
+    fn crash_at_zero_evacuates_everything_untouched() {
+        let mut s = server(2);
+        s.fault_crash_at(0.0);
+        for id in 0..3 {
+            s.submit(Request::new(id, vec![id as u32, 7], 6).at(id * 10));
+        }
+        let rep = s.run_to_completion().unwrap();
+        assert!(rep.results.is_empty(), "a shard dead at t=0 serves nothing");
+        assert!(s.fault_crashed());
+        assert_eq!(s.crash_detected_at(), 0.0);
+        let mut evac = s.take_evacuated();
+        evac.sort_by_key(|r| r.id);
+        let got: Vec<(u64, u64)> = evac.iter().map(|r| (r.id, r.arrival_ns)).collect();
+        // Queued and future requests come back whole with their original
+        // arrivals — nothing is lost or rewritten by the evacuation.
+        assert_eq!(got, vec![(0, 0), (1, 10), (2, 20)]);
+        // The buffer drains exactly once.
+        assert!(s.take_evacuated().is_empty());
+    }
+
+    #[test]
+    fn mid_run_crash_is_engine_identical() {
+        use crate::config::EngineKind;
+        let run = |engine: EngineKind, crash_at: Option<f64>| {
+            let mut s = server(2).with_policy(ServingPolicy::whole_prefill().with_engine(engine));
+            if let Some(at) = crash_at {
+                s.fault_crash_at(at);
+            }
+            for id in 0..6 {
+                s.submit(Request::new(id, vec![id as u32, 7], 6));
+            }
+            let rep = s.run_to_completion().unwrap();
+            let mut evac = s.take_evacuated();
+            evac.sort_by_key(|r| r.id);
+            let detect = if s.fault_crashed() { s.crash_detected_at() } else { -1.0 };
+            (rep, evac.iter().map(|r| r.id).collect::<Vec<_>>(), detect)
+        };
+        // Crash halfway through the fault-free makespan: some requests
+        // complete, the rest evacuate — detection time, evacuee set, and
+        // completed results must match across engines bit-for-bit.
+        let (base, _, _) = run(EngineKind::Calendar, None);
+        let at = base.shards[0].sim_clock_ns / 2.0;
+        let (cal, cal_evac, cal_detect) = run(EngineKind::Calendar, Some(at));
+        let (ora, ora_evac, ora_detect) = run(EngineKind::Oracle, Some(at));
+        assert!(!cal_evac.is_empty(), "the crash must catch some requests in flight");
+        assert!(cal.results.len() < 6);
+        assert_eq!(cal_evac, ora_evac);
+        assert_eq!(cal_detect.to_bits(), ora_detect.to_bits());
+        assert_eq!(cal.sim_divergence(&ora), None);
+    }
+
+    #[test]
+    fn brownout_slows_both_engines_identically() {
+        use crate::config::EngineKind;
+        let run = |engine: EngineKind, slow: bool| {
+            let mut s = server(2).with_policy(ServingPolicy::whole_prefill().with_engine(engine));
+            if slow {
+                s.fault_brownout(0.0, 1e15, 3.0);
+            }
+            for id in 0..4 {
+                s.submit(Request::new(id, vec![id as u32, 7], 6));
+            }
+            s.run_to_completion().unwrap()
+        };
+        let cal = run(EngineKind::Calendar, true);
+        let ora = run(EngineKind::Oracle, true);
+        assert_eq!(cal.sim_divergence(&ora), None);
+        let base = run(EngineKind::Calendar, false);
+        assert!(
+            cal.shards[0].sim_clock_ns > base.shards[0].sim_clock_ns,
+            "a 3x brownout over the whole run must stretch the makespan"
+        );
+        // Tokens are untouched: a brownout reprices, it never regenerates.
+        let tok = |rep: &ServerReport| {
+            rep.results.iter().map(|r| (r.id, r.tokens.clone())).collect::<Vec<_>>()
+        };
+        assert_eq!(tok(&cal), tok(&base));
+    }
+
+    #[test]
+    fn bounded_brownout_window_only_charges_inside_it() {
+        use crate::config::EngineKind;
+        // A brownout that ends before the run starts moving changes
+        // nothing; parity must hold with a window edge mid-run too.
+        let run = |engine: EngineKind, window: (f64, f64)| {
+            let mut s = server(2).with_policy(ServingPolicy::whole_prefill().with_engine(engine));
+            s.fault_brownout(window.0, window.1, 2.0);
+            for id in 0..4 {
+                s.submit(Request::new(id, vec![id as u32, 7], 6));
+            }
+            s.run_to_completion().unwrap()
+        };
+        let base = {
+            let mut s = server(2);
+            for id in 0..4 {
+                s.submit(Request::new(id, vec![id as u32, 7], 6));
+            }
+            s.run_to_completion().unwrap()
+        };
+        let mid = base.shards[0].sim_clock_ns / 2.0;
+        let cal = run(EngineKind::Calendar, (mid, 1e15));
+        let ora = run(EngineKind::Oracle, (mid, 1e15));
+        assert_eq!(cal.sim_divergence(&ora), None);
+        assert!(cal.shards[0].sim_clock_ns > base.shards[0].sim_clock_ns);
     }
 }

@@ -1,0 +1,370 @@
+//! `exp faults` — goodput under deterministic partial failure on the
+//! disaggregated cluster.
+//!
+//! Every cell replays the same seed-deterministic request stream on the
+//! same 2-prefill + 2-decode cluster; what changes is the injected
+//! [`FaultSpec`] (a seeded schedule of simulated-time fault events) and
+//! the [`RecoveryPolicy`] the coordinator recovers with.  The fault-free
+//! baseline row anchors the sweep, then each fault *intensity* — a
+//! brownout/crash mix escalating to a two-shard crash with a KV-link
+//! outage and DRAM channel loss — is graded under each recovery policy:
+//! `balanced` (the default bounded retry budget), `failfast` (zero
+//! retries: evacuated requests fail immediately), and `guarded` (a
+//! degradation controller that sheds evacuees once surviving
+//! fresh-prompt capacity drops below a utilization ceiling).
+//!
+//! Headline columns: **availability** (delivered / submitted), the
+//! **failed / shed / retry** tallies from [`FaultTally`], and the
+//! fault-free metrics they trade against — **p95 TTFT** and **goodput**.
+//! The second table is the per-crash surviving-capacity timeline of the
+//! heaviest cell under the balanced policy.
+//!
+//! [`FaultTally`]: crate::coordinator::FaultTally
+
+use crate::config::json::Value;
+use crate::config::{
+    gpt3_6_7b, racam_paper, ArrivalProcess, ClusterSpec, FaultEvent, FaultSpec, LengthDist,
+    LlmSpec, RecoveryPolicy, TrafficSpec,
+};
+use crate::coordinator::{ClusterBuilder, Request, SyntheticEngine};
+use crate::mapping::MappingService;
+use crate::metrics::fmt_ns;
+use crate::report::Table;
+use crate::telemetry::Metrics;
+use crate::traffic::{generate, ttft_percentiles_where, SloSummary};
+
+/// 2 prefill + 2 decode shards (channel partition: 4 × 2 of the paper's 8).
+const PREFILL: usize = 2;
+const DECODE: usize = 2;
+const SHARDS: usize = PREFILL + DECODE;
+const MAX_BATCH: usize = 4;
+/// Schedule seed stamped into every [`FaultSpec`] and the bench config.
+const SEED: u64 = 0xFA_017;
+const REQUESTS: u64 = 32;
+const RATE: f64 = 300.0;
+const DEADLINE_NS: u64 = 150_000_000; // 150 ms mean e2e SLO
+/// `guarded` policy ceiling: with 2 prefill shards, one crash leaves a
+/// surviving fraction of 0.5 < 0.75, so evacuees are degrade-shed.
+const CEILING: f64 = 0.75;
+
+/// The fault intensities swept, in row order (label, events).  The
+/// baseline (empty) schedule is prepended by [`matrix`].
+fn intensities() -> Vec<(&'static str, Vec<FaultEvent>)> {
+    vec![
+        (
+            "crash1+brownout",
+            vec![
+                // Prefill shard 0 dies at t=0: its whole admission share
+                // is evacuated for re-dispatch onto prefill shard 1.
+                FaultEvent::ShardCrash { shard: 0, at_ns: 0.0 },
+                // The surviving prefill shard runs 1.5x slower throughout.
+                FaultEvent::Brownout {
+                    shard: 1,
+                    start_ns: 0.0,
+                    end_ns: 1e15,
+                    slowdown: 1.5,
+                },
+            ],
+        ),
+        (
+            "crash2+outage+chloss",
+            vec![
+                FaultEvent::ShardCrash { shard: 0, at_ns: 0.0 },
+                // One decode shard dies too; handoffs route around it.
+                FaultEvent::ShardCrash { shard: PREFILL + 1, at_ns: 0.0 },
+                // The KV link is down for the first 5 ms; interrupted
+                // transfers back off deterministically and retry.
+                FaultEvent::LinkOutage { start_ns: 0.0, end_ns: 5e6 },
+                // The decode group loses one of its 2 DRAM channels at
+                // t=0 and is re-priced at the surviving channel count.
+                FaultEvent::ChannelLoss {
+                    group: "decode".into(),
+                    at_ns: 0.0,
+                    channels_lost: 1,
+                },
+            ],
+        ),
+    ]
+}
+
+/// The recovery policies each intensity is graded under.
+fn policies() -> Vec<(&'static str, RecoveryPolicy)> {
+    vec![
+        ("balanced", RecoveryPolicy::default()),
+        ("failfast", RecoveryPolicy { retry_budget: 0, ..RecoveryPolicy::default() }),
+        ("guarded", RecoveryPolicy { utilization_ceiling: CEILING, ..RecoveryPolicy::default() }),
+    ]
+}
+
+/// Experiment-specific entries for the `BENCH_faults.json` config block.
+pub(crate) fn bench_config() -> Vec<(&'static str, Value)> {
+    let policies = policies();
+    vec![
+        (
+            "intensities",
+            Value::Arr(intensities().iter().map(|(l, _)| Value::Str(l.to_string())).collect()),
+        ),
+        (
+            "policies",
+            Value::Arr(policies.iter().map(|(l, _)| Value::Str(l.to_string())).collect()),
+        ),
+        ("schedulers", Value::Arr(vec![Value::Str("fcfs".into())])),
+        ("rates_per_s", Value::Arr(vec![Value::Num(RATE)])),
+        ("requests", Value::Num(REQUESTS as f64)),
+        ("fault_seed", Value::Num(SEED as f64)),
+        ("retry_budget", Value::Num(RecoveryPolicy::default().retry_budget as f64)),
+        ("utilization_ceiling", Value::Num(CEILING)),
+        ("deadline_ms", Value::Num(DEADLINE_NS as f64 / 1e6)),
+        (
+            "kv_link_gbps",
+            Value::Num(ClusterSpec::disaggregated(PREFILL, DECODE, MAX_BATCH).kv_link_gbps),
+        ),
+    ]
+}
+
+/// The seed-deterministic open-loop stream every cell replays.
+fn stream(rate_per_s: f64, requests: u64) -> Vec<Request> {
+    generate(&TrafficSpec {
+        seed: SEED,
+        requests,
+        arrival: ArrivalProcess::Poisson { rate_per_s },
+        prompt: LengthDist::Uniform { lo: 16, hi: 96 },
+        output: LengthDist::Uniform { lo: 6, hi: 12 },
+        deadline_ns: Some(DEADLINE_NS),
+    })
+}
+
+/// One graded cell plus the headline TTFT slice.
+struct Cell {
+    summary: SloSummary,
+    ttft_p95: f64,
+}
+
+impl Cell {
+    fn headers() -> Vec<&'static str> {
+        vec![
+            "run",
+            "reqs",
+            "delivered",
+            "failed",
+            "shed",
+            "retries",
+            "kv_retries",
+            "availability",
+            "ttft_p95",
+            "goodput_tok/s",
+        ]
+    }
+
+    fn row(&self, label: &str) -> Vec<String> {
+        let s = &self.summary;
+        vec![
+            label.to_string(),
+            s.requests.to_string(),
+            (s.requests - s.shed_requests - s.failed_requests).to_string(),
+            s.failed_requests.to_string(),
+            s.shed_requests.to_string(),
+            s.retries.to_string(),
+            s.kv_retries.to_string(),
+            format!("{:.1}%", 100.0 * s.availability),
+            fmt_ns(self.ttft_p95),
+            format!("{:.0}", s.goodput_tokens_per_s),
+        ]
+    }
+}
+
+/// Serve one `(events, policy)` cell over `stream` and grade it.
+fn run_cell(
+    services: &[MappingService],
+    model: &LlmSpec,
+    events: &[FaultEvent],
+    policy: RecoveryPolicy,
+    stream: &[Request],
+) -> crate::Result<Cell> {
+    let spec = ClusterSpec::disaggregated(PREFILL, DECODE, MAX_BATCH);
+    let mut coord =
+        ClusterBuilder::with_spec_and_services(spec, model.clone(), services.to_vec())?
+            .build(|_| SyntheticEngine::new(64, 256));
+    coord.set_faults(&FaultSpec { seed: SEED, events: events.to_vec(), recovery: policy })?;
+    for req in stream {
+        coord.submit(req.clone());
+    }
+    let report = coord.run_to_completion()?;
+    Ok(Cell {
+        summary: SloSummary::from_report(&report),
+        ttft_p95: ttft_percentiles_where(&report, |_| true).p95,
+    })
+}
+
+/// The fault-free baseline plus the intensity × policy matrix, the
+/// surviving-capacity timeline of the heaviest balanced cell, and the
+/// telemetry [`Metrics`] registry merged over every cell in row order.
+fn matrix(
+    services: &[MappingService],
+    model: &LlmSpec,
+    rate_per_s: f64,
+    requests: u64,
+) -> crate::Result<(Table, Table, Metrics)> {
+    let mut t = Table::new(
+        &format!(
+            "Fault injection — {} on {PREFILL}p+{DECODE}d shards × batch {MAX_BATCH}, \
+             {requests} requests @ {rate_per_s}/s, {}ms e2e SLO; availability and goodput \
+             per fault intensity × recovery policy (seed {SEED:#x})",
+            model.name,
+            DEADLINE_NS / 1_000_000
+        ),
+        &Cell::headers(),
+    );
+    let stream = stream(rate_per_s, requests);
+    let mut metrics = Metrics::default();
+    let baseline = run_cell(services, model, &[], RecoveryPolicy::default(), &stream)?;
+    metrics.merge(&baseline.summary.metrics);
+    t.row(baseline.row("baseline"));
+    let mut heaviest_balanced = None;
+    for (intensity, events) in intensities() {
+        for (policy, recovery) in policies() {
+            let cell = run_cell(services, model, &events, recovery, &stream)?;
+            metrics.merge(&cell.summary.metrics);
+            if policy == "balanced" {
+                heaviest_balanced = Some(cell.summary.clone());
+            }
+            t.row(cell.row(&format!("{intensity}/{policy}")));
+        }
+    }
+    let avail = heaviest_balanced
+        .ok_or_else(|| anyhow::anyhow!("the intensity roster is empty"))?
+        .availability_table(&format!(
+            "Fault injection — availability detail (heaviest intensity, balanced policy, {})",
+            model.name
+        ));
+    metrics.absorb_mapping(super::common::mapping_counters(services));
+    Ok((t, avail, metrics))
+}
+
+pub fn run() -> crate::Result<(Vec<Table>, Metrics)> {
+    // One shared 2-channel-per-shard partition prices every cell from the
+    // same caches; the channel-loss event derates from these per shard.
+    let services = ClusterBuilder::new(
+        ClusterSpec::disaggregated(PREFILL, DECODE, MAX_BATCH),
+        &racam_paper(),
+        gpt3_6_7b(),
+    )?
+    .services()
+    .to_vec();
+    let (t, avail, metrics) = matrix(&services, &gpt3_6_7b(), RATE, REQUESTS)?;
+    Ok((vec![t, avail], metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+
+    fn tiny_spec() -> LlmSpec {
+        LlmSpec {
+            name: "tiny".into(),
+            layers: 2,
+            hidden: 256,
+            heads: 4,
+            kv_heads: 4,
+            ffn: 512,
+            gated_ffn: false,
+            vocab: 512,
+            prec: Precision::Int8,
+        }
+    }
+
+    fn services() -> Vec<MappingService> {
+        vec![MappingService::for_config(&racam_paper()); SHARDS]
+    }
+
+    #[test]
+    fn balanced_policy_survives_a_prefill_crash_with_full_availability() {
+        let stream = stream(400.0, 12);
+        let (_, events) = intensities().remove(0);
+        let cell =
+            run_cell(&services(), &tiny_spec(), &events, RecoveryPolicy::default(), &stream)
+                .unwrap();
+        let s = &cell.summary;
+        assert_eq!(s.requests, 12);
+        assert_eq!(s.failed_requests, 0);
+        assert_eq!(s.shed_requests, 0);
+        assert!(s.retries > 0, "the crashed prefill shard's share is requeued");
+        assert_eq!(s.availability, 1.0);
+    }
+
+    #[test]
+    fn failfast_policy_fails_the_evacuated_requests() {
+        let stream = stream(400.0, 12);
+        let (_, events) = intensities().remove(0);
+        let policy = RecoveryPolicy { retry_budget: 0, ..RecoveryPolicy::default() };
+        let cell = run_cell(&services(), &tiny_spec(), &events, policy, &stream).unwrap();
+        let s = &cell.summary;
+        assert!(s.failed_requests > 0, "zero retry budget fails every evacuee");
+        assert_eq!(s.retries, 0);
+        assert!(s.availability < 1.0);
+        assert_eq!(s.requests, 12, "failed requests still appear in the report exactly once");
+    }
+
+    #[test]
+    fn guarded_policy_degrade_sheds_below_the_ceiling() {
+        let stream = stream(400.0, 12);
+        let (_, events) = intensities().remove(0);
+        let policy = RecoveryPolicy { utilization_ceiling: CEILING, ..RecoveryPolicy::default() };
+        let cell = run_cell(&services(), &tiny_spec(), &events, policy, &stream).unwrap();
+        let s = &cell.summary;
+        assert!(s.degrade_shed > 0, "0.5 surviving fraction is below the 0.75 ceiling");
+        assert_eq!(s.retries, 0, "the controller sheds instead of retrying");
+        assert!(s.shed_requests > 0);
+        assert!(s.availability < 1.0);
+    }
+
+    #[test]
+    fn matrix_covers_baseline_and_every_intensity_policy_pair() {
+        let (t, avail, metrics) = matrix(&services(), &tiny_spec(), 400.0, 8).unwrap();
+        assert_eq!(t.num_rows(), 1 + intensities().len() * policies().len());
+        let rendered = t.render();
+        assert!(rendered.contains("baseline"), "{rendered}");
+        for (intensity, _) in intensities() {
+            for (policy, _) in policies() {
+                assert!(
+                    rendered.contains(&format!("{intensity}/{policy}")),
+                    "missing {intensity}/{policy}:\n{rendered}"
+                );
+            }
+        }
+        // The detail table reports the heaviest intensity's two crashes.
+        assert!(avail.render().contains("capacity["), "{}", avail.render());
+        assert!(metrics.requests > 0);
+        assert!(metrics.retries > 0 || metrics.failed > 0);
+    }
+
+    #[test]
+    fn cells_are_deterministic_across_reruns() {
+        let stream = stream(400.0, 10);
+        let (_, events) = intensities().remove(1);
+        let a = run_cell(&services(), &tiny_spec(), &events, RecoveryPolicy::default(), &stream)
+            .unwrap();
+        let b = run_cell(&services(), &tiny_spec(), &events, RecoveryPolicy::default(), &stream)
+            .unwrap();
+        assert_eq!(a.summary.requests, b.summary.requests);
+        assert_eq!(a.summary.failed_requests, b.summary.failed_requests);
+        assert_eq!(a.summary.retries, b.summary.retries);
+        assert_eq!(a.summary.kv_retries, b.summary.kv_retries);
+        assert_eq!(a.ttft_p95.to_bits(), b.ttft_p95.to_bits());
+        assert_eq!(
+            a.summary.goodput_tokens_per_s.to_bits(),
+            b.summary.goodput_tokens_per_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn bench_config_names_the_sweep_axes() {
+        let keys: Vec<&str> = bench_config().iter().map(|(k, _)| *k).collect();
+        for k in
+            ["intensities", "policies", "schedulers", "rates_per_s", "fault_seed", "retry_budget"]
+        {
+            assert!(keys.contains(&k), "missing {k}");
+        }
+    }
+}

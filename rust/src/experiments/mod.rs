@@ -5,6 +5,7 @@
 mod common;
 mod disagg;
 mod extensions;
+mod faults;
 mod fig01;
 mod fig09;
 mod fig12;
@@ -32,7 +33,7 @@ use std::time::Instant;
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
     "tab1", "tab4", "tab5", "ext-energy", "ext-reliability", "ext-trace", "traffic", "prefill",
-    "disagg", "scale", "map",
+    "disagg", "faults", "scale", "map",
 ];
 
 /// Run one experiment; returns its tables (already saved under `results/`,
@@ -63,6 +64,7 @@ pub fn run(id: &str) -> Result<Vec<Table>> {
         "traffic" => traffic::run()?,
         "prefill" => prefill::run()?,
         "disagg" => disagg::run()?,
+        "faults" => faults::run()?,
         "scale" => scale::run()?,
         "map" => map::run()?,
         other => anyhow::bail!("unknown experiment '{other}' (known: {ALL_IDS:?})"),
@@ -119,6 +121,7 @@ fn extra_bench_config(id: &str) -> Vec<(&'static str, Value)> {
         "traffic" => traffic::bench_config(),
         "prefill" => prefill::bench_config(),
         "disagg" => disagg::bench_config(),
+        "faults" => faults::bench_config(),
         "scale" => scale::bench_config(),
         "map" => map::bench_config(),
         _ => Vec::new(),
@@ -187,7 +190,7 @@ mod tests {
     #[test]
     fn serving_bench_json_names_schedulers_and_rates() {
         use crate::config::json::{self, Value};
-        for id in ["traffic", "prefill", "disagg", "scale"] {
+        for id in ["traffic", "prefill", "disagg", "faults", "scale"] {
             let s = super::bench_json(id, &[], 1.0, &crate::telemetry::Metrics::default());
             let v = json::parse(&s).unwrap();
             let cfg = v.get("config").unwrap();

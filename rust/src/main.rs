@@ -63,7 +63,8 @@ fn print_help() {
          \x20             [--deadline-ms MS] [--traffic SPEC.json | --trace TRACE.json]\n\
          \x20             [--chunk-tokens N] [--preempt] [--serving POLICY.json]\n\
          \x20             [--engine calendar|oracle] [--cluster CLUSTER.json]\n\
-         \x20             [--threads N] [--trace-out TRACE.json] [--metrics]\n\
+         \x20             [--faults FAULTS.json] [--threads N]\n\
+         \x20             [--trace-out TRACE.json] [--metrics]\n\
          \n\
          serve traffic modes: --rate R replays a Poisson stream at R req/s on the\n\
          simulated clock (add --deadline-ms for an e2e SLO); --traffic loads a\n\
@@ -92,6 +93,14 @@ fn print_help() {
          kv_link_gbps) and replaces --shards/--batch/--sched/--chunk-tokens/\n\
          --preempt/--serving. Prefill groups hand finished prompts to decode\n\
          groups over the simulated KV link (see docs/serving.md).\n\
+         \n\
+         faults: --faults loads a FaultSpec JSON — a seeded schedule of\n\
+         simulated-time fault events (shard crashes, brownouts, KV-link\n\
+         outages/degradation, DRAM channel loss) plus a recovery policy\n\
+         (retry budget, backoff, utilization ceiling). The run prints an\n\
+         availability table and, with --trace-out, exports the injections\n\
+         on a dedicated 'faults' track. Same spec + seed = bit-identical\n\
+         reports across engines and thread counts (docs/robustness.md).\n\
          \n\
          detcheck: static determinism & purity gate (docs/analysis.md) — scans\n\
          src/ and tests/ (or the given dirs) for wall-clock reads, HashMap\n\
@@ -261,8 +270,8 @@ fn cmd_config(args: Vec<String>) -> Result<()> {
 
 fn cmd_serve(args: Vec<String>) -> Result<()> {
     use racam::config::{
-        ArrivalProcess, ClusterSpec, EngineKind, LengthDist, SchedulerKind, ServingPolicy,
-        TrafficSpec,
+        ArrivalProcess, ClusterSpec, EngineKind, FaultSpec, LengthDist, SchedulerKind,
+        ServingPolicy, TrafficSpec,
     };
     use racam::coordinator::{
         ClusterBuilder, ClusterCoordinator, Request, SyntheticEngine, TokenEngine,
@@ -288,6 +297,13 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     let threads: Option<usize> = flag_value(&args, "--threads").map(|v| v.parse()).transpose()?;
     let trace_out = flag_value(&args, "--trace-out");
     let show_metrics = args.iter().any(|a| a == "--metrics");
+    // A deterministic fault schedule (docs/robustness.md): simulated-time
+    // crashes, brownouts, link outages, and channel loss, validated here
+    // and installed on the coordinator before the run starts.
+    let faults: Option<FaultSpec> = match flag_value(&args, "--faults") {
+        Some(path) => Some(FaultSpec::from_json(&std::fs::read_to_string(&path)?)?),
+        None => None,
+    };
     // Recording is zero-cost when off: the recorded build is only taken
     // when a telemetry flag asks for it.
     let record = trace_out.is_some() || show_metrics;
@@ -403,9 +419,13 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         coord: &mut ClusterCoordinator<E, R>,
         requests: Vec<Request>,
         threads: Option<usize>,
+        faults: Option<&FaultSpec>,
     ) -> Result<racam::coordinator::ServerReport> {
         if let Some(t) = threads {
             coord.set_threads(t);
+        }
+        if let Some(spec) = faults {
+            coord.set_faults(spec)?;
         }
         for req in requests {
             coord.submit(req);
@@ -415,14 +435,25 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
 
     /// Pull the simulated-event tracks (one per shard + the KV link) and
     /// the host-executor worker counters out of a recorded coordinator.
+    /// Fault/recovery instants additionally land on a dedicated `faults`
+    /// track (merged across shards and the link, time-ordered) so a
+    /// chaos run's injection schedule reads as one timeline.
     fn collect<E: TokenEngine + Send>(
         coord: &ClusterCoordinator<E, TraceRecorder>,
     ) -> (Vec<(String, Vec<Event>)>, Vec<WorkerStats>) {
-        let mut tracks = Vec::with_capacity(coord.num_shards() + 1);
+        let mut tracks = Vec::with_capacity(coord.num_shards() + 2);
         for i in 0..coord.num_shards() {
             tracks.push((format!("shard {i}"), coord.shard_recorder(i).events.clone()));
         }
         tracks.push(("kv link".to_string(), coord.link_recorder().events.clone()));
+        let mut fault_events: Vec<Event> = tracks
+            .iter()
+            .flat_map(|(_, events)| events.iter().filter(|e| e.kind.is_fault()).cloned())
+            .collect();
+        fault_events.sort_by(|a, b| a.at_ns.total_cmp(&b.at_ns));
+        if !fault_events.is_empty() {
+            tracks.push(("faults".to_string(), fault_events));
+        }
         (tracks, coord.worker_stats().to_vec())
     }
 
@@ -434,6 +465,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         requests: Vec<Request>,
         threads: Option<usize>,
         record: bool,
+        faults: Option<&FaultSpec>,
     ) -> Result<(
         racam::coordinator::ServerReport,
         Option<(Vec<(String, Vec<Event>)>, Vec<WorkerStats>)>,
@@ -444,17 +476,24 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                 |_| TraceRecorder::new(),
                 TraceRecorder::new(),
             );
-            let report = drive(&mut coord, requests, threads)?;
+            let report = drive(&mut coord, requests, threads, faults)?;
             let telemetry = collect(&coord);
             Ok((report, Some(telemetry)))
         } else {
             let mut coord = builder.build(engine_factory);
-            Ok((drive(&mut coord, requests, threads)?, None))
+            Ok((drive(&mut coord, requests, threads, faults)?, None))
         }
     }
 
     let (report, telemetry) = if synthetic {
-        drive_built(builder, |_| SyntheticEngine::new(64, 256), requests, threads, record)?
+        drive_built(
+            builder,
+            |_| SyntheticEngine::new(64, 256),
+            requests,
+            threads,
+            record,
+            faults.as_ref(),
+        )?
     } else {
         #[cfg(feature = "pjrt")]
         {
@@ -476,6 +515,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                 requests,
                 threads,
                 record,
+                faults.as_ref(),
             )?
         }
         #[cfg(not(feature = "pjrt"))]
@@ -510,7 +550,13 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             fmt_ns(r.ttft_ns()),
             fmt_ns(r.e2e_ns()),
             &r.tokens[..4.min(r.tokens.len())],
-            if r.shed { "  [shed]" } else { "" }
+            if r.failed {
+                "  [failed]"
+            } else if r.shed {
+                "  [shed]"
+            } else {
+                ""
+            }
         );
     }
     for s in &report.shards {
@@ -548,6 +594,10 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         if cluster.is_disaggregated() {
             println!("{}", slo.utilization_table("group utilization", false).render());
         }
+    }
+    if faults.is_some() {
+        let slo = SloSummary::from_report(&report);
+        println!("{}", slo.availability_table("availability under faults").render());
     }
     if let Some((tracks, workers)) = &telemetry {
         if let Some(path) = &trace_out {

@@ -276,8 +276,11 @@ pub fn merge(a: &Value, b: &Value) -> Result<Value> {
 /// Merge a service's cached results into the table at `path` (read-merge-
 /// write with an atomic replace): the on-disk union of what this process
 /// searched and what any other process persisted since we loaded.  An
-/// unreadable or corrupt existing table is treated as empty rather than
-/// blocking the persist.  Returns the number of entries written.
+/// unreadable existing table is treated as empty; a *corrupt* one (reads
+/// fine, fails to parse) is quarantined to `<path>.corrupt` with a
+/// once-per-process warning, then the persist proceeds with the cached
+/// entries alone — corruption never blocks the persist and never
+/// silently shadows good data.  Returns the number of entries written.
 pub(crate) fn merge_entries_into_file(
     path: &std::path::Path,
     channels: u32,
@@ -288,16 +291,43 @@ pub(crate) fn merge_entries_into_file(
         .map(|(shape, r)| StoreEntry::from_cached(shape, r, channels))
         .collect();
     if let Ok(text) = std::fs::read_to_string(path) {
-        if let Ok(v) = json::parse(&text) {
-            if let Ok(existing) = parse_entries(&v) {
-                entries.extend(existing);
-            }
+        match json::parse(&text).map_err(anyhow::Error::from).and_then(|v| parse_entries(&v)) {
+            Ok(existing) => entries.extend(existing),
+            Err(e) => quarantine(path, &e.to_string()),
         }
     }
     let merged = merge_entries(entries);
     let n = merged.len();
     write_atomic(path, &entries_to_value(merged).pretty())?;
     Ok(n)
+}
+
+/// Move a corrupt table aside as `<path>.corrupt` (best effort — if the
+/// rename fails the file stays put and keeps being treated as empty) and
+/// warn once per process.  Quarantining instead of deleting keeps the
+/// bytes around for a post-mortem; quarantining instead of erroring keeps
+/// a half-written table left by a crashed writer from wedging every
+/// subsequent run — the store simply starts cold.
+fn quarantine(path: &std::path::Path, why: &str) {
+    let mut target = path.as_os_str().to_owned();
+    target.push(".corrupt");
+    let renamed = std::fs::rename(path, std::path::Path::new(&target)).is_ok();
+    warn_once(&format!(
+        "racam: mapping store {} is corrupt ({why}); {}, starting cold",
+        path.display(),
+        if renamed { "quarantined to *.corrupt" } else { "leaving it in place" },
+    ));
+}
+
+/// Print the first corruption warning of the process to stderr and drop
+/// the rest — a sweep over many shards sharing one bad table should not
+/// repeat the identical line N times.
+fn warn_once(msg: &str) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!("{msg}");
+    }
 }
 
 /// Write `text` to `path` atomically: write a same-directory temp file,
@@ -328,11 +358,24 @@ pub fn save_file(service: &MappingService, path: &std::path::Path) -> Result<()>
     write_atomic(path, &export(service).pretty())
 }
 
-/// Load a cache file into the service.
+/// Load a cache file into the service.  A missing or unreadable file is
+/// still an error (the caller asked for *this* file); a file that reads
+/// but is **corrupt** — truncated write, bad JSON, wrong schema —
+/// degrades gracefully instead: it is quarantined to `<path>.corrupt`
+/// with a once-per-process warning and the load reports 0 entries, so
+/// the service starts cold rather than failing the run.
 pub fn load_file(service: &MappingService, path: &std::path::Path) -> Result<usize> {
     let text = std::fs::read_to_string(path)?;
-    let v = json::parse(&text).map_err(anyhow::Error::from)?;
-    import(service, &v)
+    let loaded = json::parse(&text)
+        .map_err(anyhow::Error::from)
+        .and_then(|v| import(service, &v));
+    match loaded {
+        Ok(n) => Ok(n),
+        Err(e) => {
+            quarantine(path, &e.to_string());
+            Ok(0)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -513,5 +556,65 @@ mod tests {
         assert!(mapping_from_string("MMMMM|").is_err());
         assert!(mapping_from_string("MMMM|K").is_err());
         assert!(mapping_from_string("MMMMM|MNK").is_err()); // rows empty
+    }
+
+    #[test]
+    fn truncated_table_quarantines_and_loads_cold() {
+        // A writer that died mid-write (without the atomic rename — e.g. a
+        // copy from another machine) leaves truncated JSON at the real
+        // path.  Loading must not fail the run: the file is quarantined to
+        // `<path>.corrupt` and the service starts cold.
+        let dir = std::env::temp_dir();
+        let path = dir.join("racam_store_truncated_test.json");
+        let corrupt = dir.join("racam_store_truncated_test.json.corrupt");
+        std::fs::remove_file(&corrupt).ok();
+        std::fs::write(&path, r#"{"version": 1, "entries": [{"shape": {"m": 1"#).unwrap();
+        let s = service();
+        assert_eq!(load_file(&s, &path).unwrap(), 0, "corrupt table loads as empty");
+        assert_eq!(s.cache_len(), 0);
+        assert!(corrupt.exists(), "the corrupt bytes are kept for post-mortem");
+        assert!(!path.exists(), "the bad file is moved aside, not left to re-trip");
+        // A missing file is still a real error — the caller asked for it.
+        assert!(load_file(&s, &path).is_err());
+        std::fs::remove_file(&corrupt).ok();
+    }
+
+    #[test]
+    fn wrong_schema_quarantines_too() {
+        // Parses as JSON but is not a v1 table (a crashed writer of some
+        // other tool, say): same graceful degradation as truncated bytes.
+        let dir = std::env::temp_dir();
+        let path = dir.join("racam_store_schema_test.json");
+        let corrupt = dir.join("racam_store_schema_test.json.corrupt");
+        std::fs::remove_file(&corrupt).ok();
+        std::fs::write(&path, r#"{"version": 99, "entries": []}"#).unwrap();
+        let s = service();
+        assert_eq!(load_file(&s, &path).unwrap(), 0);
+        assert!(corrupt.exists());
+        std::fs::remove_file(&corrupt).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn merge_into_corrupt_target_persists_cache_and_quarantines() {
+        // Persisting over a corrupt table must neither fail nor fold the
+        // garbage in: the cached entries are written whole and the corrupt
+        // bytes are moved aside.
+        let dir = std::env::temp_dir();
+        let path = dir.join("racam_store_merge_corrupt_test.json");
+        let corrupt = dir.join("racam_store_merge_corrupt_test.json.corrupt");
+        std::fs::remove_file(&corrupt).ok();
+        std::fs::write(&path, "not json at all").unwrap();
+        let a = service();
+        a.search_cached(&MatmulShape::new(1, 2048, 2048, Precision::Int8));
+        let entries = a.cache_entries();
+        let n = merge_entries_into_file(&path, racam_paper().dram.channels, &entries).unwrap();
+        assert_eq!(n, 1, "the cache persists despite the corrupt target");
+        assert!(corrupt.exists(), "the corrupt target is quarantined");
+        // The rewritten table is valid and round-trips.
+        let b = service();
+        assert_eq!(load_file(&b, &path).unwrap(), 1);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&corrupt).ok();
     }
 }

@@ -75,6 +75,27 @@ pub enum EventKind {
     DecodeRelease,
     /// The idle clock jump to the next future arrival (span).
     IdleJump,
+    /// A shard died permanently (`value` = requests evacuated with it).
+    ShardCrash,
+    /// A brownout window opened on a shard (`value` = the slowdown
+    /// factor applied while the window is active).
+    Brownout,
+    /// A shard group's DRAM-channel loss took effect on this shard
+    /// (`value` = channels remaining after the loss).
+    ChannelLoss,
+    /// A KV transfer was interrupted by a link outage and is re-sent
+    /// after deterministic backoff (`value` = the attempt number).
+    KvRetry,
+    /// An evacuated request was re-dispatched to a surviving shard
+    /// (`value` = the re-dispatch attempt number).
+    FaultRequeue,
+    /// An evacuated request exhausted its retry budget (or no eligible
+    /// shard survived) and terminated as `failed` (`value` = attempts).
+    RequestFailed,
+    /// The degradation controller shed an evacuated request because
+    /// surviving capacity fell below the utilization ceiling (`value` =
+    /// the surviving-capacity fraction).
+    DegradeShed,
 }
 
 impl EventKind {
@@ -92,6 +113,13 @@ impl EventKind {
             EventKind::KvWire => "kv_wire",
             EventKind::DecodeRelease => "decode_release",
             EventKind::IdleJump => "idle_jump",
+            EventKind::ShardCrash => "shard_crash",
+            EventKind::Brownout => "brownout",
+            EventKind::ChannelLoss => "channel_loss",
+            EventKind::KvRetry => "kv_retry",
+            EventKind::FaultRequeue => "fault_requeue",
+            EventKind::RequestFailed => "request_failed",
+            EventKind::DegradeShed => "degrade_shed",
         }
     }
 
@@ -104,6 +132,22 @@ impl EventKind {
                 | EventKind::DecodeStretch
                 | EventKind::KvWire
                 | EventKind::IdleJump
+        )
+    }
+
+    /// Whether this kind belongs to the fault/recovery family — exported
+    /// on the dedicated `faults` trace track instead of its shard's (all
+    /// instants, so the merged track needs no span nesting).
+    pub fn is_fault(self) -> bool {
+        matches!(
+            self,
+            EventKind::ShardCrash
+                | EventKind::Brownout
+                | EventKind::ChannelLoss
+                | EventKind::KvRetry
+                | EventKind::FaultRequeue
+                | EventKind::RequestFailed
+                | EventKind::DegradeShed
         )
     }
 }
@@ -371,9 +415,18 @@ impl Histogram {
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Metrics {
     pub requests: u64,
-    /// Requests that delivered tokens (not shed).
+    /// Requests that delivered tokens (not shed, not failed).
     pub delivered: u64,
     pub shed: u64,
+    /// Requests terminated as `failed`: evacuated from a crashed shard
+    /// and never completed (retry budget exhausted or no survivor).
+    pub failed: u64,
+    /// Crash-evacuation re-dispatches across the cluster.
+    pub retries: u64,
+    /// KV transfers re-sent after a link-outage interruption.
+    pub kv_retries: u64,
+    /// Evacuated requests shed by the degradation controller.
+    pub degrade_shed: u64,
     pub preemptions: u64,
     pub prefill_chunks: u64,
     pub decode_iterations: u64,
@@ -410,6 +463,10 @@ impl Metrics {
         let mut m = Metrics { requests: report.results.len() as u64, ..Metrics::default() };
         for r in &report.results {
             m.total_tokens += r.tokens.len() as u64;
+            if r.failed {
+                m.failed += 1;
+                continue;
+            }
             if r.shed {
                 m.shed += 1;
                 continue;
@@ -428,6 +485,9 @@ impl Metrics {
                 m.handoffs += s.handoffs as u64;
             }
         }
+        m.retries += report.faults.retries as u64;
+        m.kv_retries += report.faults.kv_retries as u64;
+        m.degrade_shed += report.faults.degrade_shed as u64;
         m
     }
 
@@ -462,6 +522,10 @@ impl Metrics {
         self.requests += other.requests;
         self.delivered += other.delivered;
         self.shed += other.shed;
+        self.failed += other.failed;
+        self.retries += other.retries;
+        self.kv_retries += other.kv_retries;
+        self.degrade_shed += other.degrade_shed;
         self.preemptions += other.preemptions;
         self.prefill_chunks += other.prefill_chunks;
         self.decode_iterations += other.decode_iterations;
@@ -492,6 +556,10 @@ impl Metrics {
             ("requests", Value::Num(self.requests as f64)),
             ("delivered", Value::Num(self.delivered as f64)),
             ("shed", Value::Num(self.shed as f64)),
+            ("failed", Value::Num(self.failed as f64)),
+            ("retries", Value::Num(self.retries as f64)),
+            ("kv_retries", Value::Num(self.kv_retries as f64)),
+            ("degrade_shed", Value::Num(self.degrade_shed as f64)),
             ("preemptions", Value::Num(self.preemptions as f64)),
             ("prefill_chunks", Value::Num(self.prefill_chunks as f64)),
             ("decode_iterations", Value::Num(self.decode_iterations as f64)),
@@ -541,6 +609,10 @@ impl Metrics {
         t.row(counter("requests", self.requests));
         t.row(counter("delivered", self.delivered));
         t.row(counter("shed", self.shed));
+        t.row(counter("failed", self.failed));
+        t.row(counter("retries", self.retries));
+        t.row(counter("kv_retries", self.kv_retries));
+        t.row(counter("degrade_shed", self.degrade_shed));
         t.row(counter("preemptions", self.preemptions));
         t.row(counter("prefill_chunks", self.prefill_chunks));
         t.row(counter("decode_iterations", self.decode_iterations));
@@ -837,7 +909,7 @@ mod tests {
         m.ttft_ns.record(1_000_000);
         m.absorb_mapping((5, 2, 1));
         let t = m.table("metrics");
-        assert_eq!(t.num_rows(), 15);
+        assert_eq!(t.num_rows(), 19);
         let v = m.to_json();
         assert_eq!(v.get("requests").unwrap().as_u32().unwrap(), 3);
         assert_eq!(v.get("map_cache_hits").unwrap().as_u32().unwrap(), 5);

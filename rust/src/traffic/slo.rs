@@ -22,10 +22,17 @@
 //!   the simulated time decoders spent stalled behind prefill steps
 //!   ([`ShardStats::chunk_stall_ns`]).
 //!
-//! Latency populations (TTFT/TPOT/e2e) **exclude shed requests** — a shed
-//! request never delivered, so its timestamps grade the shedding decision,
-//! not the serving path.  Shed work shows up in `shed_requests`, in
-//! `slo_attainment` (a shed request always misses), and in goodput.
+//! * **availability** — under a fault schedule
+//!   ([`crate::config::FaultSpec`]), the delivered fraction of all
+//!   requests, with the recovery activity (retries, KV re-transfers,
+//!   degradation sheds) and the per-group surviving-capacity timeline
+//!   reported alongside (see `docs/robustness.md`).
+//!
+//! Latency populations (TTFT/TPOT/e2e) **exclude shed and failed
+//! requests** — neither delivered, so their timestamps grade the
+//! shedding/failover decision, not the serving path.  Shed work shows up
+//! in `shed_requests`, failed work in `failed_requests`; both always miss
+//! their SLO and are excluded from goodput.
 //!
 //! [`Preemption::Shed`]: crate::coordinator::Preemption
 
@@ -69,15 +76,19 @@ impl Percentiles {
     }
 }
 
-/// TTFT percentiles over the delivered (non-shed) requests matching a
-/// predicate — e.g. the short-request population of a mixed-length
-/// workload (`|r| r.prompt_tokens <= 256`).
+/// TTFT percentiles over the delivered (non-shed, non-failed) requests
+/// matching a predicate — e.g. the short-request population of a
+/// mixed-length workload (`|r| r.prompt_tokens <= 256`).
 pub fn ttft_percentiles_where(
     report: &ServerReport,
     pred: impl Fn(&RequestResult) -> bool,
 ) -> Percentiles {
-    let ttft: Vec<f64> =
-        report.results.iter().filter(|r| !r.shed && pred(r)).map(|r| r.ttft_ns()).collect();
+    let ttft: Vec<f64> = report
+        .results
+        .iter()
+        .filter(|r| !r.shed && !r.failed && pred(r))
+        .map(|r| r.ttft_ns())
+        .collect();
     Percentiles::from(&ttft)
 }
 
@@ -116,6 +127,23 @@ pub struct SloSummary {
     /// Prefill→decode handoffs, summed over the link's *sending* side
     /// (each transferred request counts once).
     pub handoffs: usize,
+    /// Requests that terminated `failed` under a fault schedule: crash
+    /// evacuees whose retry budget ran out or that found no surviving
+    /// shard (always 0 on a fault-free run).
+    pub failed_requests: usize,
+    /// Crash-evacuation re-dispatches onto surviving shards.
+    pub retries: usize,
+    /// KV transfers re-sent after a link-outage interruption.
+    pub kv_retries: usize,
+    /// Evacuated requests shed by the degradation controller instead of
+    /// being retried.
+    pub degrade_shed: usize,
+    /// Delivered fraction of all requests — goodput-style availability
+    /// under faults (1.0 when nothing was shed or failed).
+    pub availability: f64,
+    /// Per-group surviving-capacity timeline: one `(detection ns, group,
+    /// surviving fresh-capable shards)` entry per shard crash.
+    pub capacity_timeline: Vec<(f64, String, usize)>,
     /// Per-shard utilization rows, in shard order.
     pub shard_utilization: Vec<ShardUtilization>,
     /// Deterministic telemetry registry derived from the same report:
@@ -143,10 +171,11 @@ pub struct ShardUtilization {
 
 impl SloSummary {
     /// Grade a serving report.  Requests without deadlines count as
-    /// meeting their SLO; shed requests count as missing it and are
-    /// excluded from the latency populations.
+    /// meeting their SLO; shed and failed requests count as missing it
+    /// and are excluded from the latency populations.
     pub fn from_report(report: &ServerReport) -> SloSummary {
-        let delivered: Vec<&RequestResult> = report.results.iter().filter(|r| !r.shed).collect();
+        let delivered: Vec<&RequestResult> =
+            report.results.iter().filter(|r| !r.shed && !r.failed).collect();
         let ttft: Vec<f64> = delivered.iter().map(|r| r.ttft_ns()).collect();
         let e2e: Vec<f64> = delivered.iter().map(|r| r.e2e_ns()).collect();
         let tpot: Vec<f64> =
@@ -189,6 +218,16 @@ impl SloSummary {
                 .filter(|s| s.role != ShardRole::Decode)
                 .map(|s| s.handoffs)
                 .sum(),
+            failed_requests: report.results.iter().filter(|r| r.failed).count(),
+            retries: report.faults.retries,
+            kv_retries: report.faults.kv_retries,
+            degrade_shed: report.faults.degrade_shed,
+            availability: if report.results.is_empty() {
+                1.0
+            } else {
+                delivered.len() as f64 / report.results.len() as f64
+            },
+            capacity_timeline: report.faults.capacity_timeline.clone(),
             shard_utilization: report
                 .shards
                 .iter()
@@ -301,6 +340,29 @@ impl SloSummary {
     pub fn shard_table(&self, title: &str) -> Table {
         self.utilization_table(title, true)
     }
+
+    /// Availability section of a fault run: delivered/failed/shed
+    /// counters, recovery activity, and the per-group surviving-capacity
+    /// timeline (one row per shard crash).  Renders all-zero on a
+    /// fault-free run, so callers can emit it unconditionally.
+    pub fn availability_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["metric", "value"]);
+        t.row(vec!["availability".into(), format!("{:.1}%", 100.0 * self.availability)]);
+        let delivered = self.requests - self.shed_requests - self.failed_requests;
+        t.row(vec!["delivered".into(), delivered.to_string()]);
+        t.row(vec!["failed".into(), self.failed_requests.to_string()]);
+        t.row(vec!["shed".into(), self.shed_requests.to_string()]);
+        t.row(vec!["retries".into(), self.retries.to_string()]);
+        t.row(vec!["kv_retries".into(), self.kv_retries.to_string()]);
+        t.row(vec!["degrade_shed".into(), self.degrade_shed.to_string()]);
+        for (at_ns, group, surviving) in &self.capacity_timeline {
+            t.row(vec![
+                format!("capacity[{group}] @ {}", fmt_ns(*at_ns)),
+                format!("{surviving} fresh-capable shards"),
+            ]);
+        }
+        t
+    }
 }
 
 #[cfg(test)]
@@ -321,6 +383,7 @@ mod tests {
             sim_finish_at_ns: finish,
             deadline_ns: None,
             shed: false,
+            failed: false,
         }
     }
 
@@ -350,6 +413,7 @@ mod tests {
                 handoffs: 0,
                 kv_transfer_ns: 0.0,
             }],
+            faults: Default::default(),
         }
     }
 
@@ -468,6 +532,44 @@ mod tests {
         assert!(rendered.contains("75%"), "{rendered}");
         let per_shard = s.utilization_table("by shard", true);
         assert_eq!(per_shard.num_rows(), 4, "per-shard rows behind the flag");
+    }
+
+    #[test]
+    fn failed_requests_grade_availability_not_latency() {
+        // A failed request (crash evacuee whose retries ran out) has a
+        // degenerate timeline — it must leave the latency populations,
+        // miss its SLO, and show up in the availability accounting.
+        let mut failed = result(0, 0.0, 777.0, 777.0, 0);
+        failed.failed = true;
+        let ok = result(1, 0.0, 10.0, 40.0, 4);
+        let mut rep = report(vec![failed, ok], 100.0, 0.0);
+        rep.faults.failed = 1;
+        rep.faults.retries = 2;
+        rep.faults.crashed_shards = 1;
+        rep.faults.capacity_timeline.push((50.0, "unified".into(), 1));
+        let s = SloSummary::from_report(&rep);
+        assert_eq!(s.failed_requests, 1);
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.availability, 0.5);
+        assert_eq!(s.ttft.p99, 10.0, "failed requests leave the latency populations");
+        assert_eq!(s.slo_attainment, 0.5, "a failed request always misses its SLO");
+        assert!(s.goodput_tokens_per_s < s.throughput_tokens_per_s);
+        let rendered = s.availability_table("availability").render();
+        assert!(rendered.contains("50.0%"), "{rendered}");
+        assert!(rendered.contains("capacity[unified]"), "{rendered}");
+        assert!(rendered.contains("1 fresh-capable shards"), "{rendered}");
+    }
+
+    #[test]
+    fn fault_free_summary_reports_full_availability() {
+        let rep = report(vec![result(0, 100.0, 300.0, 700.0, 5)], 700.0, 0.0);
+        let s = SloSummary::from_report(&rep);
+        assert_eq!(s.availability, 1.0);
+        assert_eq!(s.failed_requests, 0);
+        assert_eq!(s.retries + s.kv_retries + s.degrade_shed, 0);
+        assert!(s.capacity_timeline.is_empty());
+        // The section renders unconditionally.
+        assert!(s.availability_table("availability").render().contains("100.0%"));
     }
 
     #[test]

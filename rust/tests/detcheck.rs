@@ -40,6 +40,8 @@ const RECORDER_PASS: &str = include_str!("detcheck_fixtures/recorder_purity_pass
 const ENGINE_PASS: &str = include_str!("detcheck_fixtures/engine_parity_pass.rs");
 const ENGINE_DISPATCH: &str = include_str!("detcheck_fixtures/engine_parity_dispatch.rs");
 const ENGINE_FAIL: &str = include_str!("detcheck_fixtures/engine_parity_fail.rs");
+const ENGINE_FAULT_PASS: &str = include_str!("detcheck_fixtures/engine_parity_fault_pass.rs");
+const ENGINE_FAULT_FAIL: &str = include_str!("detcheck_fixtures/engine_parity_fault_fail.rs");
 
 // ------------------------------------------------------------------
 // wall-clock
@@ -282,6 +284,29 @@ fn variant_with_no_emission_site_fails_parity() {
     assert_eq!(f.len(), 1, "{}", report.render());
     assert_eq!(f[0].rule, "engine-parity");
     assert!(f[0].hint.contains("no emission site"), "hint: {}", f[0].hint);
+}
+
+#[test]
+fn fault_kinds_emitted_via_shared_fault_step_pass_parity() {
+    // The docs/robustness.md contract: fault EventKinds are injected by
+    // a fault_step helper both round paths call, so the rule sees them
+    // reach both engines transitively.
+    let report = run(&[("src/coordinator/engine.rs", ENGINE_FAULT_PASS)]);
+    assert_eq!(report.unwaived_count(), 0, "{}", report.render());
+}
+
+#[test]
+fn fault_kind_injected_outside_fault_step_fails_parity() {
+    let report = run(&[("src/coordinator/engine.rs", ENGINE_FAULT_FAIL)]);
+    let f = unwaived(&report);
+    assert_eq!(f.len(), 1, "{}", report.render());
+    assert_eq!(f[0].rule, "engine-parity");
+    assert!(f[0].snippet.contains("ShardCrash"), "snippet: {}", f[0].snippet);
+    assert!(
+        f[0].hint.contains("only the calendar engine"),
+        "hint: {}",
+        f[0].hint
+    );
 }
 
 // ------------------------------------------------------------------

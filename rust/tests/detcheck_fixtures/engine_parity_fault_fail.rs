@@ -1,0 +1,18 @@
+// Fixture: a fault variant injected outside the shared fault_step
+// helper — ShardCrash is emitted straight from the calendar round, so
+// the oracle engine would never observe the crash.
+pub enum EventKind {
+    Admit,
+    ShardCrash,
+}
+
+pub fn emit(_k: EventKind) {}
+
+pub fn round_calendar() {
+    emit(EventKind::Admit);
+    emit(EventKind::ShardCrash);
+}
+
+pub fn round_oracle() {
+    emit(EventKind::Admit);
+}

@@ -1,0 +1,25 @@
+// Fixture: the fault EventKinds of docs/robustness.md emitted the
+// compliant way — inside a shared fault_step helper that both round
+// paths call, so every fault variant reaches both engines.
+pub enum EventKind {
+    Admit,
+    ShardCrash,
+    Brownout,
+}
+
+pub fn emit(_k: EventKind) {}
+
+fn fault_step() {
+    emit(EventKind::ShardCrash);
+    emit(EventKind::Brownout);
+}
+
+pub fn round_calendar() {
+    emit(EventKind::Admit);
+    fault_step();
+}
+
+pub fn round_oracle() {
+    emit(EventKind::Admit);
+    fault_step();
+}

@@ -412,3 +412,109 @@ fn pricing_cache_counters_are_engine_invariant() {
     assert_eq!(cal_misses, ora_misses, "same unique shapes searched");
     assert_eq!(cal_hits, ora_hits, "same cache-served pricing requests");
 }
+
+/// The fault-free identity gate: installing a default (empty)
+/// `FaultSpec` must reproduce every serving shape bit-for-bit — the
+/// fault plumbing (calendar fault edges, the recovery loop, the
+/// per-shard report accumulator) may not perturb a single simulated
+/// quantity when no fault is scheduled.  Checked across engines ×
+/// worker-pool sizes 1/2/max on the same shapes the recording gate uses.
+#[test]
+fn empty_fault_spec_is_bit_identical_to_the_fault_free_path() {
+    use racam::config::FaultSpec;
+    use racam::runtime::executor;
+    let shapes: Vec<(&str, ClusterSpec)> = {
+        let mut edf = ClusterSpec::unified(2, 4);
+        edf.groups[0].scheduler = SchedulerKind::Edf;
+        edf.groups[0].policy = ServingPolicy::chunked(256).with_preemption();
+        vec![
+            ("unified/fcfs", ClusterSpec::unified(2, 4)),
+            ("unified/edf+chunk+preempt", edf),
+            ("disagg/2p+2d", ClusterSpec::disaggregated(2, 2, 4)),
+        ]
+    };
+    let traffic = stream(60, 2_000.0, 64, 768, Some(80_000_000));
+    let mut pools = vec![1, 2, executor::available_parallelism()];
+    pools.sort_unstable();
+    pools.dedup();
+    for engine in [EngineKind::Calendar, EngineKind::Oracle] {
+        for (label, shape) in &shapes {
+            let mut spec = shape.clone();
+            for g in &mut spec.groups {
+                g.policy = g.policy.with_engine(engine);
+            }
+            let run = |threads: usize, faults: Option<FaultSpec>| {
+                let mut coord = ClusterBuilder::new(spec.clone(), &racam_paper(), tiny_spec())
+                    .unwrap()
+                    .build(|_| SyntheticEngine::new(64, 128));
+                coord.set_threads(threads);
+                if let Some(f) = faults {
+                    coord.set_faults(&f).unwrap();
+                }
+                for req in generate(&traffic) {
+                    coord.submit(req);
+                }
+                coord.run_to_completion().unwrap()
+            };
+            let plain = run(1, None);
+            for &threads in &pools {
+                assert_identical(
+                    &format!("{label}/{}/empty-faults-t{threads}", engine.label()),
+                    &run(threads, Some(FaultSpec::default())),
+                    &plain,
+                );
+            }
+        }
+    }
+}
+
+/// Determinism under chaos: one non-trivial fault schedule (a prefill
+/// crash, a brownout, a KV-link outage) on the disaggregated cluster
+/// must produce bit-identical merged reports — recovery accounting
+/// included, via `sim_divergence`'s `FaultTally` coverage — across
+/// calendar/oracle engines and worker-pool sizes 1/2/max.
+#[test]
+fn faulted_schedule_is_engine_and_pool_invariant() {
+    use racam::config::{FaultEvent, FaultSpec};
+    use racam::runtime::executor;
+    let spec_for = |engine: EngineKind| {
+        let mut spec = ClusterSpec::disaggregated(2, 2, 4);
+        for g in &mut spec.groups {
+            g.policy = g.policy.with_engine(engine);
+        }
+        spec
+    };
+    let faults = FaultSpec {
+        seed: 11,
+        events: vec![
+            FaultEvent::ShardCrash { shard: 0, at_ns: 0.0 },
+            FaultEvent::Brownout { shard: 1, start_ns: 0.0, end_ns: 1e15, slowdown: 1.5 },
+            FaultEvent::LinkOutage { start_ns: 0.0, end_ns: 1e7 },
+        ],
+        ..FaultSpec::default()
+    };
+    let traffic = stream(40, 3_000.0, 64, 512, None);
+    let run = |engine: EngineKind, threads: usize| {
+        let mut coord = ClusterBuilder::new(spec_for(engine), &racam_paper(), tiny_spec())
+            .unwrap()
+            .build(|_| SyntheticEngine::new(64, 128));
+        coord.set_threads(threads);
+        coord.set_faults(&faults).unwrap();
+        for req in generate(&traffic) {
+            coord.submit(req);
+        }
+        coord.run_to_completion().unwrap()
+    };
+    let base = run(EngineKind::Calendar, 1);
+    let slo = SloSummary::from_report(&base);
+    assert!(slo.retries > 0, "the crashed prefill shard's share must be requeued");
+    assert_eq!(slo.capacity_timeline.len(), 1, "one crash on the capacity timeline");
+    let mut pools = vec![1, 2, executor::available_parallelism()];
+    pools.sort_unstable();
+    pools.dedup();
+    for engine in [EngineKind::Calendar, EngineKind::Oracle] {
+        for &threads in &pools {
+            assert_identical(&format!("chaos/{}/t{threads}", engine.label()), &run(engine, threads), &base);
+        }
+    }
+}

@@ -717,6 +717,216 @@ mod host_executor {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Deterministic chaos (randomized fault schedules, docs/robustness.md)
+// ---------------------------------------------------------------------------
+
+mod chaos {
+    use super::{check, racam_paper, ClusterBuilder, ClusterSpec, Rng, SyntheticEngine};
+    use racam::config::{
+        ArrivalProcess, EngineKind, FaultEvent, FaultSpec, LengthDist, RecoveryPolicy,
+        TrafficSpec,
+    };
+    use racam::coordinator::ServerReport;
+    use racam::traffic::generate;
+
+    /// A random schedule of crashes, brownouts, link outages, and link
+    /// degradation over a cluster of `shards` shards (onsets within the
+    /// first ~50 simulated ms, where these streams actually serve), with
+    /// a random bounded-retry recovery policy.
+    fn random_faults(rng: &mut Rng, shards: usize) -> FaultSpec {
+        let mut events = Vec::new();
+        let mut crashed: Vec<usize> = Vec::new();
+        for _ in 0..rng.range(1, 3) {
+            let at_ns = rng.range(0, 50_000_000) as f64;
+            match rng.range(0, 3) {
+                0 => {
+                    let shard = rng.range(0, shards as u64 - 1) as usize;
+                    if !crashed.contains(&shard) {
+                        crashed.push(shard);
+                        events.push(FaultEvent::ShardCrash { shard, at_ns });
+                    }
+                }
+                1 => events.push(FaultEvent::Brownout {
+                    shard: rng.range(0, shards as u64 - 1) as usize,
+                    start_ns: at_ns,
+                    end_ns: at_ns + rng.range(1_000_000, 40_000_000) as f64,
+                    slowdown: 1.0 + rng.range(0, 20) as f64 / 10.0,
+                }),
+                2 => events.push(FaultEvent::LinkOutage {
+                    start_ns: at_ns,
+                    end_ns: at_ns + rng.range(100_000, 10_000_000) as f64,
+                }),
+                _ => events.push(FaultEvent::LinkDegrade {
+                    start_ns: at_ns,
+                    end_ns: at_ns + rng.range(1_000_000, 40_000_000) as f64,
+                    factor: rng.range(1, 10) as f64 / 10.0,
+                }),
+            }
+        }
+        FaultSpec {
+            seed: rng.next(),
+            events,
+            recovery: RecoveryPolicy {
+                retry_budget: rng.range(0, 3) as u32,
+                utilization_ceiling: rng.range(0, 2) as f64 / 2.0,
+                ..RecoveryPolicy::default()
+            },
+        }
+    }
+
+    fn random_stream(rng: &mut Rng, deadlines: bool) -> TrafficSpec {
+        TrafficSpec {
+            seed: rng.next(),
+            requests: rng.range(16, 40),
+            arrival: ArrivalProcess::Poisson { rate_per_s: rng.range(500, 4_000) as f64 },
+            prompt: LengthDist::Uniform { lo: 8, hi: 8 + (64 << rng.range(0, 2)) },
+            output: LengthDist::Uniform { lo: 4, hi: rng.range(8, 24) },
+            deadline_ns: if deadlines && rng.range(0, 1) == 1 {
+                Some(rng.range(20_000_000, 200_000_000))
+            } else {
+                None
+            },
+        }
+    }
+
+    fn run_faulted(
+        spec: &ClusterSpec,
+        stream: &TrafficSpec,
+        faults: &FaultSpec,
+        engine: EngineKind,
+    ) -> ServerReport {
+        let mut spec = spec.clone();
+        for g in &mut spec.groups {
+            g.policy = g.policy.with_engine(engine);
+        }
+        let mut coord = ClusterBuilder::new(spec, &racam_paper(), super::tiny_llm())
+            .unwrap()
+            .build(|_| SyntheticEngine::new(32, 64));
+        coord.set_faults(faults).unwrap();
+        for req in generate(stream) {
+            coord.submit(req);
+        }
+        coord.run_to_completion().unwrap()
+    }
+
+    /// Conservation under chaos: for any cluster shape × fault schedule ×
+    /// stream, every submitted request appears in the merged report
+    /// exactly once, in exactly one terminal state (delivered, shed, or
+    /// failed) — and the whole report is engine-invariant, recovery
+    /// accounting included.
+    #[test]
+    fn prop_faulted_runs_conserve_every_request() {
+        check("chaos conservation", 6, |rng| {
+            let spec = if rng.range(0, 1) == 0 {
+                ClusterSpec::unified(rng.range(1, 4) as usize, rng.range(1, 4) as usize)
+            } else {
+                ClusterSpec::disaggregated(
+                    rng.range(1, 2) as usize,
+                    rng.range(1, 2) as usize,
+                    rng.range(1, 4) as usize,
+                )
+            };
+            let stream = random_stream(rng, true);
+            let faults = random_faults(rng, spec.total_shards());
+            let rep = run_faulted(&spec, &stream, &faults, EngineKind::Calendar);
+            assert_eq!(
+                rep.results.len() as u64,
+                stream.requests,
+                "every request must reach a terminal state exactly once"
+            );
+            for (i, r) in rep.results.iter().enumerate() {
+                assert_eq!(r.id, i as u64, "merged results are id-sorted and duplicate-free");
+                assert!(!(r.shed && r.failed), "req {}: shed and failed are exclusive", r.id);
+                if r.failed {
+                    assert!(r.tokens.is_empty(), "req {}: failed requests deliver nothing", r.id);
+                }
+            }
+            let delivered =
+                rep.results.iter().filter(|r| !r.shed && !r.failed).count();
+            let shed = rep.results.iter().filter(|r| r.shed).count();
+            let failed = rep.results.iter().filter(|r| r.failed).count();
+            assert_eq!(delivered + shed + failed, rep.results.len());
+            let oracle = run_faulted(&spec, &stream, &faults, EngineKind::Oracle);
+            if let Some(d) = rep.sim_divergence(&oracle) {
+                panic!("chaos engines diverged: {d}");
+            }
+        });
+    }
+
+    /// Link faults never duplicate work: under outage/degradation-only
+    /// schedules (no crashes) on a disaggregated cluster, every request
+    /// still crosses the KV link exactly once — retries re-send the same
+    /// transfer, they do not re-hand-off — and the run is reproducible
+    /// bit-for-bit.
+    #[test]
+    fn prop_link_faults_never_duplicate_handoffs() {
+        check("no duplicate handoffs", 6, |rng| {
+            let spec = ClusterSpec::disaggregated(
+                rng.range(1, 2) as usize,
+                rng.range(1, 2) as usize,
+                rng.range(1, 4) as usize,
+            );
+            let mut faults = random_faults(rng, spec.total_shards());
+            faults.events.retain(|e| {
+                matches!(e, FaultEvent::LinkOutage { .. } | FaultEvent::LinkDegrade { .. })
+            });
+            faults.events.push(FaultEvent::LinkOutage {
+                start_ns: 0.0,
+                end_ns: rng.range(100_000, 5_000_000) as f64,
+            });
+            let stream = random_stream(rng, false);
+            let rep = run_faulted(&spec, &stream, &faults, EngineKind::Calendar);
+            let handoffs: usize = rep.shards.iter().map(|s| s.handoffs).sum();
+            assert_eq!(
+                handoffs as u64, stream.requests,
+                "each request crosses the link exactly once"
+            );
+            assert!(rep.results.iter().all(|r| !r.shed && !r.failed));
+            let again = run_faulted(&spec, &stream, &faults, EngineKind::Calendar);
+            if let Some(d) = rep.sim_divergence(&again) {
+                panic!("faulted rerun diverged: {d}");
+            }
+        });
+    }
+
+    /// KV-link cost is monotone in the outage schedule: adding one more
+    /// outage window to an outage-only schedule can only delay transfers
+    /// (queueing + backoff are non-negative, wire time is unchanged), so
+    /// the cluster-total `kv_transfer_ns` never decreases.
+    #[test]
+    fn prop_kv_transfer_is_monotone_under_added_outages() {
+        check("kv outage monotone", 6, |rng| {
+            let spec = ClusterSpec::disaggregated(
+                rng.range(1, 2) as usize,
+                rng.range(1, 2) as usize,
+                rng.range(1, 4) as usize,
+            );
+            let mut base = random_faults(rng, spec.total_shards());
+            base.events.retain(|e| matches!(e, FaultEvent::LinkOutage { .. }));
+            let stream = random_stream(rng, false);
+            let kv_total = |faults: &FaultSpec| -> f64 {
+                let rep = run_faulted(&spec, &stream, faults, EngineKind::Calendar);
+                rep.shards.iter().map(|s| s.kv_transfer_ns).fold(0.0, f64::max)
+                    + rep.shards.iter().map(|s| s.kv_transfer_ns).sum::<f64>()
+            };
+            // `base` may be outage-free: set_faults rejects nothing here
+            // either way, and the comparison below still applies.
+            let without = kv_total(&base);
+            let start_ns = rng.range(0, 20_000_000) as f64;
+            base.events.push(FaultEvent::LinkOutage {
+                start_ns,
+                end_ns: start_ns + rng.range(500_000, 10_000_000) as f64,
+            });
+            let with = kv_total(&base);
+            assert!(
+                with >= without,
+                "adding an outage window reduced total kv transfer: {with} < {without}"
+            );
+        });
+    }
+}
+
 #[test]
 fn prop_config_json_roundtrip_with_mutations() {
     check("config json", 30, |rng| {
